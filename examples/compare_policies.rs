@@ -1,0 +1,75 @@
+//! Engine-mode wall-clock A/B: run the *real* PJRT stack under every engine
+//! policy across a sweep of emulated link bandwidths, and watch the
+//! crossover — at low bandwidth (transfer-bound, the paper's regime) KVPR
+//! wins; as the link speeds up the policies converge, exactly the
+//! bandwidth sensitivity Fig 6/7 imply.
+//!
+//! Every run also cross-checks exactness: all policies must emit the same
+//! tokens.
+//!
+//! ```bash
+//! cargo run --release --example compare_policies
+//! ```
+
+use kvpr::engine::{Engine, EngineConfig, EnginePolicy};
+use kvpr::model::ByteTokenizer;
+use kvpr::transfer::LinkConfig;
+use kvpr::util::table::Table;
+use std::path::Path;
+
+const GEN_LEN: usize = 40;
+
+fn main() -> anyhow::Result<()> {
+    let tok = ByteTokenizer::new();
+    let prompts = vec![
+        tok.encode("the pcie bus is the bottleneck for offloaded kv caches", 32),
+        tok.encode("recompute part of the cache while the rest streams in", 32),
+        tok.encode("a linear program picks the split point adaptively", 32),
+        tok.encode("exact attention, no approximation, faster decode", 32),
+    ];
+
+    let policies = [
+        EnginePolicy::FullTransferSync,
+        EnginePolicy::FullTransferOverlap,
+        EnginePolicy::KvprFused,
+        EnginePolicy::Kvpr,
+    ];
+
+    let mut t = Table::new(
+        &format!("compare_policies — real-engine decode seconds ({GEN_LEN} tokens, batch 4)"),
+        &["link MB/s", "full-sync", "full-overlap", "kvpr-fused", "kvpr", "kvpr vs overlap"],
+    );
+
+    for mbps in [15.0f64, 30.0, 60.0, 120.0] {
+        let mut row = vec![format!("{mbps:.0}")];
+        let mut times = Vec::new();
+        let mut reference_tokens: Option<Vec<Vec<i32>>> = None;
+        for policy in policies {
+            let mut cfg = EngineConfig::new(policy);
+            cfg.link = LinkConfig::with_bandwidth(mbps * 1e6);
+            cfg.seed = 7;
+            let engine = Engine::new(Path::new("artifacts"), cfg)?;
+            let r = engine.generate(&prompts, GEN_LEN)?;
+            match &reference_tokens {
+                None => reference_tokens = Some(r.tokens.clone()),
+                Some(want) => assert_eq!(
+                    want, &r.tokens,
+                    "exactness violation under {policy:?} at {mbps} MB/s"
+                ),
+            }
+            times.push(r.metrics.decode_s);
+            row.push(format!("{:.2}", r.metrics.decode_s));
+        }
+        let overlap = times[1];
+        let kvpr = times[3];
+        row.push(format!("{:+.1}%", (kvpr / overlap - 1.0) * 100.0));
+        t.row(&row);
+        // progress feedback (each cell is a full engine construction + run)
+        eprintln!("  finished {mbps} MB/s sweep");
+    }
+
+    std::fs::create_dir_all("reports").ok();
+    t.emit("compare_policies");
+    println!("✓ all policies produced identical tokens at every bandwidth");
+    Ok(())
+}

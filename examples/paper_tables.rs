@@ -1,0 +1,32 @@
+//! Regenerate every table and figure of the paper's evaluation in one run
+//! and write them to `reports/` (same outputs as `cargo bench`, bundled).
+//!
+//! ```bash
+//! cargo run --release --example paper_tables
+//! ```
+
+fn main() {
+    std::fs::create_dir_all("reports").ok();
+    let t0 = std::time::Instant::now();
+
+    kvpr::paper::table1().emit("table1_pcie_vs_compute");
+    kvpr::paper::fig6_seq_sweep().emit("fig6_seq_sweep");
+    kvpr::paper::fig6_batch_sweep().emit("fig6_batch_sweep");
+    kvpr::paper::fig7_latency().emit("fig7_latency");
+    let (summary, timeline) = kvpr::paper::fig8_utilization();
+    summary.emit("fig8_utilization");
+    timeline.emit("fig8_timeline");
+    kvpr::paper::fig9_compression().emit("fig9_compression");
+    kvpr::paper::fig10_breakdown().emit("fig10_breakdown");
+    kvpr::paper::table2_hiding().emit("table2_hiding_ablation");
+    kvpr::paper::fig12_splits().emit("fig12_split_points");
+    kvpr::paper::table34_detailed().emit("table34_detailed");
+    kvpr::paper::table5_lowend().emit("table5_lowend");
+    kvpr::paper::fig13_llama().emit("fig13_llama");
+    kvpr::paper::fig14_multigpu().emit("fig14_multigpu");
+
+    println!(
+        "regenerated 14 tables/figures into reports/ in {:.1}s",
+        t0.elapsed().as_secs_f64()
+    );
+}

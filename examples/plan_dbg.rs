@@ -1,0 +1,56 @@
+// perf probe: per-artifact call times at b=4 (used by the §Perf pass)
+use kvpr::model::ModelWeights;
+use kvpr::runtime::{ArgValue, Runtime};
+use std::time::Instant;
+
+fn time_calls<F: FnMut()>(n: usize, mut f: F) -> f64 {
+    f(); // warmup
+    let t0 = Instant::now();
+    for _ in 0..n { f(); }
+    t0.elapsed().as_secs_f64() / n as f64
+}
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load(std::path::Path::new("artifacts"))?;
+    let m = rt.manifest().clone();
+    let h = m.model.hidden;
+    let w = ModelWeights::generate(&m.model, 1);
+    let b = 4;
+    let wargs = |layer: usize| -> Vec<ArgValue> {
+        w.layer(layer).iter().map(|(_, d, _)| ArgValue::F32(d.as_slice())).collect()
+    };
+
+    let x = vec![0.1f32; b * h];
+    let kc = vec![0.1f32; b * 128 * h];
+    let vc = vec![0.1f32; b * 128 * h];
+    let full = rt.artifact(&m.decode_full_name(b))?;
+    let mut args: Vec<ArgValue> = vec![ArgValue::F32(&x), ArgValue::F32(&kc), ArgValue::F32(&vc), ArgValue::I32(100)];
+    args.extend(wargs(0));
+    let t = time_calls(20, || { full.call(&args).unwrap(); });
+    println!("decode_full_b4      {:.2} ms/call", t * 1e3);
+
+    for l in [32usize, 64, 96] {
+        let x_pre = vec![0.1f32; b * l * h];
+        let rec = rt.artifact(&m.recompute_name(b, l))?;
+        let lw = w.layer(0);
+        let rargs = vec![ArgValue::F32(&x_pre), ArgValue::F32(lw.get("ln1_g")), ArgValue::F32(lw.get("ln1_b")),
+            ArgValue::F32(lw.get("wk")), ArgValue::F32(lw.get("bk")), ArgValue::F32(lw.get("wv")), ArgValue::F32(lw.get("bv"))];
+        let t = time_calls(20, || { rec.call(&rargs).unwrap(); });
+        println!("recompute_b4_l{l:<3}   {:.2} ms/call", t * 1e3);
+
+        let k_re = vec![0.1f32; b * l * h];
+        let k_rest = vec![0.1f32; b * (128 - l) * h];
+        let merge = rt.artifact(&m.decode_merge_name(b, l))?;
+        let mut margs: Vec<ArgValue> = vec![ArgValue::F32(&x), ArgValue::F32(&k_re), ArgValue::F32(&k_re),
+            ArgValue::F32(&k_rest), ArgValue::F32(&k_rest), ArgValue::I32(100)];
+        margs.extend(wargs(0));
+        let t = time_calls(20, || { merge.call(&margs).unwrap(); });
+        println!("decode_merge_b4_l{l:<2} {:.2} ms/call", t * 1e3);
+    }
+
+    let head = rt.artifact(&m.lm_head_name(b))?;
+    let hargs = vec![ArgValue::F32(&x), ArgValue::F32(&w.tok_table), ArgValue::F32(&w.lnf_g), ArgValue::F32(&w.lnf_b)];
+    let t = time_calls(50, || { head.call(&hargs).unwrap(); });
+    println!("lm_head_b4          {:.2} ms/call", t * 1e3);
+    Ok(())
+}

@@ -1,0 +1,199 @@
+"""AOT pipeline: lower every model step function × shape bucket to HLO text.
+
+Emits ``artifacts/<name>.hlo.txt`` plus ``artifacts/manifest.json`` which the
+Rust runtime (`rust/src/runtime/artifacts.rs`) parses to know each
+executable's input/output signature.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published ``xla`` 0.1.6 crate binds) rejects
+(``proto.id() <= INT_MAX``).  The text parser reassigns ids, so text
+round-trips cleanly.  See /opt/xla-example/README.md.
+
+Run via ``make artifacts`` (no-op when inputs are unchanged).
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+# ---------------------------------------------------------------------------
+# shape buckets (DESIGN.md §4) — kept in sync with rust/src/config/model.rs
+# ---------------------------------------------------------------------------
+
+BATCH_BUCKETS = (1, 4)
+SEQ_CAP = 128           # padded KV capacity S of every decode artifact
+L_BUCKETS = (32, 64, 96)  # static split-point grid for decode_partial
+PROMPT_BUCKETS = (16, 32)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _sig(names, specs):
+    return [
+        {"name": n, "shape": list(s.shape), "dtype": str(s.dtype)}
+        for n, s in zip(names, specs)
+    ]
+
+
+def _layer_weight_specs(cfg):
+    shapes = M.layer_weight_shapes(cfg)
+    return [_spec(shapes[n]) for n in M.LAYER_WEIGHT_NAMES]
+
+
+def build_artifact_plan(cfg: M.ModelConfig):
+    """Every (function, bucket) pair we AOT-compile, with full signatures."""
+    h, v, p = cfg.hidden, cfg.vocab, cfg.max_pos
+    lw_names = list(M.LAYER_WEIGHT_NAMES)
+    lw_specs = _layer_weight_specs(cfg)
+    plan = []
+
+    for b in BATCH_BUCKETS:
+        # --- embed_decode ---------------------------------------------------
+        names = ["ids", "pos", "tok_table", "pos_table"]
+        specs = [_spec((b,), jnp.int32), _spec((), jnp.int32),
+                 _spec((v, h)), _spec((p, h))]
+        plan.append(dict(
+            name=f"embed_decode_b{b}", fn="embed_decode", b=b, s=0, l=0, sp=0,
+            fun=M.embed_decode, in_names=names, in_specs=specs,
+            out_names=["x"],
+        ))
+
+        # --- lm_head ---------------------------------------------------------
+        names = ["x", "tok_table", "lnf_g", "lnf_b"]
+        specs = [_spec((b, 1, h)), _spec((v, h)), _spec((h,)), _spec((h,))]
+        plan.append(dict(
+            name=f"lm_head_b{b}", fn="lm_head", b=b, s=0, l=0, sp=0,
+            fun=M.lm_head, in_names=names, in_specs=specs,
+            out_names=["logits"],
+        ))
+
+        # --- decode_full ------------------------------------------------------
+        s = SEQ_CAP
+        names = ["x", "k_cache", "v_cache", "kv_len"] + lw_names
+        specs = [_spec((b, 1, h)), _spec((b, s, h)), _spec((b, s, h)),
+                 _spec((), jnp.int32)] + lw_specs
+        plan.append(dict(
+            name=f"decode_full_b{b}_s{s}", fn="decode_full", b=b, s=s, l=0, sp=0,
+            fun=functools.partial(M.decode_layer_full, cfg=cfg),
+            in_names=names, in_specs=specs,
+            out_names=["y", "k_new", "v_new"],
+        ))
+
+        # --- decode_partial (fused) + split pair per L bucket -----------------
+        for l in L_BUCKETS:
+            names = ["x", "x_pre", "k_rest", "v_rest", "kv_len"] + lw_names
+            specs = [_spec((b, 1, h)), _spec((b, l, h)),
+                     _spec((b, s - l, h)), _spec((b, s - l, h)),
+                     _spec((), jnp.int32)] + lw_specs
+            plan.append(dict(
+                name=f"decode_partial_b{b}_s{s}_l{l}", fn="decode_partial",
+                b=b, s=s, l=l, sp=0,
+                fun=functools.partial(M.decode_layer_partial, cfg=cfg),
+                in_names=names, in_specs=specs,
+                out_names=["y", "k_new", "v_new"],
+            ))
+            # split schedule: recompute runs while KV[L:] is still in flight
+            plan.append(dict(
+                name=f"recompute_b{b}_l{l}", fn="recompute",
+                b=b, s=0, l=l, sp=0,
+                fun=M.recompute_kv,
+                in_names=["x_pre", "ln1_g", "ln1_b", "wk", "bk", "wv", "bv"],
+                in_specs=[_spec((b, l, h)), _spec((h,)), _spec((h,)),
+                          _spec((h, h)), _spec((h,)),
+                          _spec((h, h)), _spec((h,))],
+                out_names=["k_re", "v_re"],
+            ))
+            names = ["x", "k_re", "v_re", "k_rest", "v_rest", "kv_len"] + lw_names
+            specs = [_spec((b, 1, h)), _spec((b, l, h)), _spec((b, l, h)),
+                     _spec((b, s - l, h)), _spec((b, s - l, h)),
+                     _spec((), jnp.int32)] + lw_specs
+            plan.append(dict(
+                name=f"decode_merge_b{b}_s{s}_l{l}", fn="decode_merge",
+                b=b, s=s, l=l, sp=0,
+                fun=functools.partial(M.decode_layer_merge, cfg=cfg),
+                in_names=names, in_specs=specs,
+                out_names=["y", "k_new", "v_new"],
+            ))
+
+        # --- prefill per prompt bucket ----------------------------------------
+        for sp in PROMPT_BUCKETS:
+            names = (["ids"] + list(M.MODEL_WEIGHT_NAMES)
+                     + [f"L{i}.{n}" for i in range(cfg.n_layers) for n in lw_names])
+            specs = ([_spec((b, sp), jnp.int32),
+                      _spec((v, h)), _spec((p, h)), _spec((h,)), _spec((h,))]
+                     + lw_specs * cfg.n_layers)
+            plan.append(dict(
+                name=f"prefill_b{b}_p{sp}", fn="prefill", b=b, s=0, l=0, sp=sp,
+                fun=functools.partial(M.prefill_model, cfg=cfg),
+                in_names=names, in_specs=specs,
+                out_names=["logits", "k_stack", "v_stack", "x_stack"],
+            ))
+    return plan
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    cfg = M.TINY
+    plan = build_artifact_plan(cfg)
+    manifest = {
+        "model": {
+            "name": cfg.name, "hidden": cfg.hidden, "n_heads": cfg.n_heads,
+            "n_layers": cfg.n_layers, "ffn": cfg.ffn, "vocab": cfg.vocab,
+            "max_pos": cfg.max_pos,
+        },
+        "buckets": {
+            "batch": list(BATCH_BUCKETS), "seq_cap": SEQ_CAP,
+            "l": list(L_BUCKETS), "prompt": list(PROMPT_BUCKETS),
+        },
+        "layer_weight_names": list(M.LAYER_WEIGHT_NAMES),
+        "model_weight_names": list(M.MODEL_WEIGHT_NAMES),
+        "artifacts": [],
+    }
+
+    for entry in plan:
+        fname = f"{entry['name']}.hlo.txt"
+        lowered = jax.jit(entry["fun"]).lower(*entry["in_specs"])
+        text = to_hlo_text(lowered)
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        out_shapes = lowered.out_info
+        out_leaves = jax.tree_util.tree_leaves(out_shapes)
+        manifest["artifacts"].append({
+            "name": entry["name"], "file": fname, "fn": entry["fn"],
+            "b": entry["b"], "s": entry["s"], "l": entry["l"], "sp": entry["sp"],
+            "inputs": _sig(entry["in_names"], entry["in_specs"]),
+            "outputs": _sig(entry["out_names"], out_leaves),
+        })
+        print(f"  lowered {entry['name']:34s} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(plan)} artifacts + manifest.json to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

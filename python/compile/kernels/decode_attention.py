@@ -1,0 +1,129 @@
+"""L1 Pallas kernel: single-query (decode-step) attention over a merged,
+length-masked KV cache.
+
+KVPR's decode step attends over three physically-contiguous segments —
+the GPU-recomputed prefix ``KV[0:l]``, the link-transferred remainder
+``KV[l:s']`` and the freshly projected token — concatenated into one padded
+buffer of capacity ``S``.  Only the first ``kv_len`` positions are valid;
+the kernel masks the padding with an explicit length scalar so *one static
+artifact serves a whole sequence-length bucket* (DESIGN.md §4).
+
+Hardware adaptation: Flash-Decoding on the A100 splits KV into chunks per
+threadblock with a second-pass combine.  The TPU analogue here is a
+single-sweep online softmax: the grid walks KV blocks resident in VMEM,
+carrying the running max / normaliser / weighted accumulator in the output
+refs, so HBM reads each K/V element exactly once.
+
+Lowered with ``interpret=True`` (see kv_recompute.py for why) and pinned
+against ``ref.decode_attention_ref`` by ``python/tests/test_attention.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLK_S = 128
+NEG_INF = -1e30
+
+
+def _decode_attn_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, d_ref, *, blk_s, scale):
+    """One grid step: fold one (BLK_S, d) KV block into the online softmax.
+
+    Grid layout: (batch, kv_block) — all heads of a batch element ride in
+    one grid step (§Perf iter 2).  The kv_block axis is the innermost
+    (fastest-varying) so the (m, d, o) carry in the output refs refers to
+    the same batch element across consecutive steps.
+    """
+    s_blk = pl.program_id(1)
+    n_blk = pl.num_programs(1)
+
+    @pl.when(s_blk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        d_ref[...] = jnp.zeros_like(d_ref)
+
+    q = q_ref[0, :, 0]       # (nh, d) — all heads of the single decode query
+    k = k_ref[0]             # (nh, blk_s, d)
+    v = v_ref[0]             # (nh, blk_s, d)
+    kv_len = len_ref[0]
+
+    # scores over this block for every head, masked to the valid prefix
+    s = jnp.einsum("hd,hsd->hs", q, k,
+                   preferred_element_type=jnp.float32) * scale  # (nh, blk_s)
+    pos = s_blk * blk_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < kv_len, s, NEG_INF)
+
+    m_prev = m_ref[0, :, 0]  # (nh,)
+    d_prev = d_ref[0, :, 0]  # (nh,)
+    o_prev = o_ref[0, :, 0]  # (nh, d)
+
+    m_cur = jnp.max(s, axis=-1)                  # (nh,)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)              # rescale factor for carry
+    p = jnp.exp(s - m_new[:, None])              # (nh, blk_s)
+    d_new = d_prev * alpha + jnp.sum(p, axis=-1)
+    o_new = o_prev * alpha[:, None] + jnp.einsum(
+        "hs,hsd->hd", p, v, preferred_element_type=jnp.float32)
+
+    m_ref[0, :, 0] = m_new
+    d_ref[0, :, 0] = d_new
+    o_ref[0, :, 0] = o_new
+
+    # Final block: normalise the accumulator into the true attention output.
+    @pl.when(s_blk == n_blk - 1)
+    def _finalize():
+        o_ref[0, :, 0] = o_ref[0, :, 0] / d_ref[0, :, 0][:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("blk_s",))
+def decode_attention(q, k, v, kv_len, *, blk_s: int = DEFAULT_BLK_S):
+    """Single-token attention with length masking.
+
+    Args:
+      q: f32[b, nh, 1, d] — the decode-step query.
+      k: f32[b, nh, S, d] — padded key cache (merged segments).
+      v: f32[b, nh, S, d] — padded value cache.
+      kv_len: i32[] or i32[1] — number of valid positions (≤ S).
+      blk_s: KV block size walked by the grid.
+
+    Returns:
+      f32[b, nh, 1, d] attention output.
+    """
+    b, nh, _, d = q.shape
+    s = k.shape[2]
+    blk = min(blk_s, s)
+    if s % blk != 0:
+        raise ValueError(f"S={s} must be a multiple of blk_s={blk}")
+    # all heads ride in one grid step (they share the mask and the carry
+    # structure), so the grid is only (batch, kv blocks) — §Perf iter 2
+    grid = (b, s // blk)
+    scale = 1.0 / (d ** 0.5)
+    kv_len = jnp.asarray(kv_len, jnp.int32).reshape((1,))
+
+    out, _m, _d = pl.pallas_call(
+        functools.partial(_decode_attn_kernel, blk_s=blk, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, sb: (0,)),                   # kv_len
+            pl.BlockSpec((1, nh, 1, d), lambda i, sb: (i, 0, 0, 0)),  # q
+            pl.BlockSpec((1, nh, blk, d), lambda i, sb: (i, 0, sb, 0)),
+            pl.BlockSpec((1, nh, blk, d), lambda i, sb: (i, 0, sb, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, nh, 1, d), lambda i, sb: (i, 0, 0, 0)),  # o
+            pl.BlockSpec((1, nh, 1), lambda i, sb: (i, 0, 0)),        # m carry
+            pl.BlockSpec((1, nh, 1), lambda i, sb: (i, 0, 0)),        # denom carry
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nh, 1, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, nh, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, nh, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(kv_len, q, k, v)
+    return out

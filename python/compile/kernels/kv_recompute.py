@@ -1,0 +1,110 @@
+"""L1 Pallas kernel: fused LayerNorm + K/V recomputation from transferred
+activations.
+
+This is the compute hot-spot of KVPR (paper Eq. (7)):
+
+    K[0:l] = LN(X[0:l]) @ W_K + b_K
+    V[0:l] = LN(X[0:l]) @ W_V + b_V
+
+The CPU sends the *layer-input activations* ``X[0:l]`` (half the bytes of
+the KV pair they regenerate) and the GPU recomputes both projections while
+the rest of the KV cache streams over the link.  The paper's Eq. (7) writes
+the projection without the pre-attention LayerNorm; in a real pre-LN
+decoder the cached K/V are projections of the *normalised* input, so the
+kernel fuses the LayerNorm in — one more reason the recompute path is
+HBM-friendly (X is read once, normalised in VMEM, and hits the MXU twice).
+
+Hardware adaptation (DESIGN.md §3): the paper performs these GEMMs with
+cuBLAS on an A100.  On TPU-style Pallas we fuse the two projections into a
+single kernel so the ``X`` tile is read from HBM once and both GEMMs hit the
+MXU back-to-back.  ``BlockSpec``s tile ``(l, h) @ (h, h)`` into
+``(BLK_L, h) x (h, BLK_H)`` VMEM tiles; the VMEM working set plays the role
+the paper's SMEM staging plays (see DESIGN.md §8 for the footprint math).
+
+The kernel is lowered with ``interpret=True`` — the CPU PJRT plugin cannot
+execute Mosaic custom-calls; interpret mode lowers to plain HLO so the same
+artifact runs everywhere.  Correctness is pinned against ``ref.py`` by
+``python/tests/test_kv_recompute.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block size along the token (l) axis.  64 divides every L bucket the AOT
+# pipeline emits (32 is the smallest bucket; handled by the min() below).
+DEFAULT_BLK_L = 128
+
+
+LN_EPS = 1e-5
+
+
+def _kv_recompute_kernel(x_ref, g_ref, b_ref, wk_ref, bk_ref, wv_ref, bv_ref,
+                         k_ref, v_ref):
+    """One grid step: LayerNorm a (BLK_L, h) tile of X, project into K and V.
+
+    Both GEMMs share the single normalised X tile — the fusion that makes
+    the recompute path HBM-read-once.
+    """
+    x = x_ref[0]  # (BLK_L, h) — batch dim is blocked at 1
+    # row-wise layernorm entirely in VMEM
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    ln = (x - mu) * jax.lax.rsqrt(var + LN_EPS) * g_ref[...] + b_ref[...]
+    # MXU-targeted matmuls; f32 accumulation is explicit so the kernel is
+    # numerically identical under interpret mode and on real hardware.
+    k = jnp.dot(ln, wk_ref[...], preferred_element_type=jnp.float32)
+    v = jnp.dot(ln, wv_ref[...], preferred_element_type=jnp.float32)
+    k_ref[0] = k + bk_ref[...]
+    v_ref[0] = v + bv_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("blk_l",))
+def kv_recompute(x, ln_g, ln_b, wk, bk, wv, bv, *, blk_l: int = DEFAULT_BLK_L):
+    """Recompute K and V for the layer-input activation prefix ``x``.
+
+    Args:
+      x:    f32[b, l, h] — transferred input activations X[0:l] (pre-LN).
+      ln_g: f32[h], ln_b: f32[h] — pre-attention LayerNorm parameters.
+      wk:   f32[h, h], bk: f32[h] — key projection.
+      wv:   f32[h, h], bv: f32[h] — value projection.
+      blk_l: tile size along the token axis.
+
+    Returns:
+      (K, V): each f32[b, l, h].
+    """
+    b, l, h = x.shape
+    # largest tile ≤ blk_l that evenly divides l (L buckets are multiples of
+    # 32, so this lands on 64 or 32 in practice)
+    blk = min(blk_l, l)
+    while l % blk != 0:
+        blk -= 1
+    grid = (b, l // blk)
+
+    kernel = pl.pallas_call(
+        _kv_recompute_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, blk, h), lambda i, j: (i, j, 0)),  # x tile
+            pl.BlockSpec((h,), lambda i, j: (0,)),              # ln gamma
+            pl.BlockSpec((h,), lambda i, j: (0,)),              # ln beta
+            pl.BlockSpec((h, h), lambda i, j: (0, 0)),          # W_K resident
+            pl.BlockSpec((h,), lambda i, j: (0,)),              # b_K
+            pl.BlockSpec((h, h), lambda i, j: (0, 0)),          # W_V resident
+            pl.BlockSpec((h,), lambda i, j: (0,)),              # b_V
+        ],
+        out_specs=[
+            pl.BlockSpec((1, blk, h), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, blk, h), lambda i, j: (i, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, l, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, l, h), jnp.float32),
+        ],
+        interpret=True,
+    )
+    return tuple(kernel(x, ln_g, ln_b, wk, bk, wv, bv))

@@ -1,0 +1,135 @@
+"""Pure-jnp oracles for the Pallas kernels and the decoder-layer math.
+
+Everything the kernels (and the Rust reference implementation mirrored in
+``rust/src/model/reference.rs``) compute is restated here in the most naive
+possible jnp so the tests have an unambiguous ground truth.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def kv_recompute_ref(x, ln_g, ln_b, wk, bk, wv, bv):
+    """K = LN(X) @ W_K + b_K, V = LN(X) @ W_V + b_V — paper Eq. (7) with the
+    pre-attention LayerNorm made explicit (the cached K/V of a pre-LN
+    decoder are projections of the normalised layer input)."""
+    ln = layernorm_ref(x, ln_g, ln_b)
+    k = jnp.einsum("blh,hd->bld", ln, wk) + bk
+    v = jnp.einsum("blh,hd->bld", ln, wv) + bv
+    return k, v
+
+
+def decode_attention_ref(q, k, v, kv_len):
+    """Masked single-query attention, materialised softmax."""
+    b, nh, _, d = q.shape
+    s = k.shape[2]
+    scale = 1.0 / (d ** 0.5)
+    scores = jnp.einsum("bhqd,bhsd->bhqs", q, k) * scale
+    mask = jnp.arange(s)[None, None, None, :] < jnp.asarray(kv_len, jnp.int32)
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqs,bhsd->bhqd", probs, v)
+
+
+def layernorm_ref(x, g, b, eps=1e-5):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def split_heads(x, n_heads):
+    """[b, t, h] -> [b, nh, t, d]"""
+    b, t, h = x.shape
+    d = h // n_heads
+    return x.reshape(b, t, n_heads, d).transpose(0, 2, 1, 3)
+
+
+def merge_heads(x):
+    """[b, nh, t, d] -> [b, t, h]"""
+    b, nh, t, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, t, nh * d)
+
+
+def decoder_layer_full_ref(x, k_cache, v_cache, kv_len, w, n_heads):
+    """One pre-LN decoder layer on a single decode token, full-KV path.
+
+    ``k_cache``/``v_cache`` are padded [b, S, h] with ``kv_len`` valid rows.
+    Returns (y, k_new, v_new) exactly like the AOT artifact.
+    """
+    ln1 = layernorm_ref(x, w["ln1_g"], w["ln1_b"])
+    q = ln1 @ w["wq"] + w["bq"]
+    k_new = ln1 @ w["wk"] + w["bk"]
+    v_new = ln1 @ w["wv"] + w["bv"]
+
+    # merged, padded cache: valid rows [0, kv_len) + the new token appended
+    # at physical position S (attention is permutation-invariant under the
+    # mask, so physical placement does not matter).
+    k_all = jnp.concatenate([k_cache, k_new], axis=1)  # [b, S+1, h]
+    v_all = jnp.concatenate([v_cache, v_new], axis=1)
+
+    s = k_cache.shape[1]
+    valid = jnp.concatenate(
+        [jnp.arange(s) < jnp.asarray(kv_len, jnp.int32), jnp.ones((1,), bool)]
+    )
+
+    qh = split_heads(q, n_heads)
+    kh = split_heads(k_all, n_heads)
+    vh = split_heads(v_all, n_heads)
+    d = qh.shape[-1]
+    scores = jnp.einsum("bhqd,bhsd->bhqs", qh, kh) / (d ** 0.5)
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    attn = merge_heads(jnp.einsum("bhqs,bhsd->bhqd", probs, vh))
+
+    x = x + attn @ w["wo"] + w["bo"]
+    ln2 = layernorm_ref(x, w["ln2_g"], w["ln2_b"])
+    ffn = jnp.maximum(ln2 @ w["w1"] + w["b1"], 0.0) @ w["w2"] + w["b2"]
+    y = x + ffn
+    return y, k_new, v_new
+
+
+def decoder_layer_partial_ref(x, x_pre, k_rest, v_rest, kv_len, w, n_heads):
+    """KVPR path: recompute KV[0:l] from activations, merge with the
+    transferred remainder, attend.  Must match the full path bit-for-bit
+    given consistent inputs (the paper's exactness claim).
+
+    ``x_pre``:   [b, L, h]   activation prefix (L = static split bucket)
+    ``k_rest``:  [b, S-L, h] transferred keys for positions [L, kv_len)
+    """
+    k_re, v_re = kv_recompute_ref(
+        x_pre, w["ln1_g"], w["ln1_b"], w["wk"], w["bk"], w["wv"], w["bv"])
+    k_cache = jnp.concatenate([k_re, k_rest], axis=1)  # [b, S, h]
+    v_cache = jnp.concatenate([v_re, v_rest], axis=1)
+    y, k_new, v_new = decoder_layer_full_ref(x, k_cache, v_cache, kv_len, w, n_heads)
+    return y, k_new, v_new, k_re, v_re
+
+
+def prefill_layer_ref(x, w, n_heads):
+    """One pre-LN decoder layer over a full prompt with causal masking.
+
+    Returns (y, K, V) where K/V are the cache rows for every position.
+    """
+    b, t, h = x.shape
+    ln1 = layernorm_ref(x, w["ln1_g"], w["ln1_b"])
+    q = ln1 @ w["wq"] + w["bq"]
+    k = ln1 @ w["wk"] + w["bk"]
+    v = ln1 @ w["wv"] + w["bv"]
+
+    qh, kh, vh = (split_heads(t_, n_heads) for t_ in (q, k, v))
+    d = qh.shape[-1]
+    scores = jnp.einsum("bhqd,bhsd->bhqs", qh, kh) / (d ** 0.5)
+    causal = jnp.tril(jnp.ones((t, t), bool))
+    scores = jnp.where(causal[None, None, :, :], scores, NEG_INF)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    attn = merge_heads(jnp.einsum("bhqs,bhsd->bhqd", probs, vh))
+
+    x = x + attn @ w["wo"] + w["bo"]
+    ln2 = layernorm_ref(x, w["ln2_g"], w["ln2_b"])
+    ffn = jnp.maximum(ln2 @ w["w1"] + w["b1"], 0.0) @ w["w2"] + w["b2"]
+    return x + ffn, k, v

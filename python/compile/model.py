@@ -1,0 +1,279 @@
+"""L2: OPT-style decoder model step functions, calling the L1 Pallas kernels.
+
+These are the functions `aot.py` lowers to HLO text, one artifact per shape
+bucket (DESIGN.md §4).  The Rust engine (`rust/src/engine/`) drives them
+layer-by-layer so it can interleave KV-cache / activation / weight transfers
+with compute exactly as the paper's runtime module does.
+
+Canonical weight ordering — the Rust side passes weights positionally, so
+both languages pin this list:
+
+    LAYER_WEIGHT_NAMES  (16 per decoder layer)
+    MODEL_WEIGHT_NAMES  (embedding tables + final layernorm)
+
+Two decode-step variants exist:
+
+* ``decode_layer_full``    — baseline: the whole padded KV cache is an input
+  (it was transferred over the link).
+* ``decode_layer_partial`` — KVPR: the activation prefix X[0:L] is an input;
+  KV[0:L] is *recomputed on device* by the fused Pallas kernel while only
+  KV[L:] was transferred.  Exact same attention output as the full path.
+
+The new token's K/V is written into the padded cache at position ``kv_len``
+with ``dynamic_update_slice`` so the valid region stays a contiguous prefix
+(length ``kv_len+1``) — that is what lets one static artifact serve a whole
+sequence-length bucket via the kernel's length mask.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.decode_attention import decode_attention
+from compile.kernels.kv_recompute import kv_recompute
+
+# ---------------------------------------------------------------------------
+# configuration
+# ---------------------------------------------------------------------------
+
+LAYER_WEIGHT_NAMES: Tuple[str, ...] = (
+    "ln1_g", "ln1_b",
+    "wq", "bq", "wk", "bk", "wv", "bv", "wo", "bo",
+    "ln2_g", "ln2_b",
+    "w1", "b1", "w2", "b2",
+)
+
+MODEL_WEIGHT_NAMES: Tuple[str, ...] = ("tok_table", "pos_table", "lnf_g", "lnf_b")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Geometry of the model. Mirrors `rust/src/config/model.rs`."""
+
+    name: str = "kvpr-tiny"
+    hidden: int = 256
+    n_heads: int = 4
+    n_layers: int = 4
+    ffn: int = 1024
+    vocab: int = 512
+    max_pos: int = 512
+
+    @property
+    def head_dim(self) -> int:
+        return self.hidden // self.n_heads
+
+
+TINY = ModelConfig()
+
+
+def layer_weight_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, ...]]:
+    h, f = cfg.hidden, cfg.ffn
+    return {
+        "ln1_g": (h,), "ln1_b": (h,),
+        "wq": (h, h), "bq": (h,),
+        "wk": (h, h), "bk": (h,),
+        "wv": (h, h), "bv": (h,),
+        "wo": (h, h), "bo": (h,),
+        "ln2_g": (h,), "ln2_b": (h,),
+        "w1": (h, f), "b1": (f,),
+        "w2": (f, h), "b2": (h,),
+    }
+
+
+def model_weight_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, ...]]:
+    return {
+        "tok_table": (cfg.vocab, cfg.hidden),
+        "pos_table": (cfg.max_pos, cfg.hidden),
+        "lnf_g": (cfg.hidden,),
+        "lnf_b": (cfg.hidden,),
+    }
+
+
+def _wdict(weights: Sequence[jax.Array]) -> Dict[str, jax.Array]:
+    assert len(weights) == len(LAYER_WEIGHT_NAMES), len(weights)
+    return dict(zip(LAYER_WEIGHT_NAMES, weights))
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _mha_decode(x, k_cache, v_cache, kv_len, w, cfg: ModelConfig, use_pallas: bool):
+    """Decode-step MHA over a padded cache with contiguous valid prefix.
+
+    Writes the new token's K/V at position ``kv_len`` and attends over the
+    (kv_len+1)-long valid prefix via the length-masked Pallas kernel.
+    """
+    ln1 = _layernorm(x, w["ln1_g"], w["ln1_b"])
+    q = ln1 @ w["wq"] + w["bq"]                       # [b, 1, h]
+    k_new = ln1 @ w["wk"] + w["bk"]
+    v_new = ln1 @ w["wv"] + w["bv"]
+
+    kv_len = jnp.asarray(kv_len, jnp.int32).reshape(())
+    k_all = jax.lax.dynamic_update_slice(k_cache, k_new, (0, kv_len, 0))
+    v_all = jax.lax.dynamic_update_slice(v_cache, v_new, (0, kv_len, 0))
+
+    qh = ref.split_heads(q, cfg.n_heads)
+    kh = ref.split_heads(k_all, cfg.n_heads)
+    vh = ref.split_heads(v_all, cfg.n_heads)
+    if use_pallas:
+        attn = decode_attention(qh, kh, vh, kv_len + 1)
+    else:
+        attn = ref.decode_attention_ref(qh, kh, vh, kv_len + 1)
+    attn = ref.merge_heads(attn)
+
+    x = x + attn @ w["wo"] + w["bo"]
+    return x, k_new, v_new
+
+
+def _ffn(x, w):
+    ln2 = _layernorm(x, w["ln2_g"], w["ln2_b"])
+    return x + jnp.maximum(ln2 @ w["w1"] + w["b1"], 0.0) @ w["w2"] + w["b2"]
+
+
+# ---------------------------------------------------------------------------
+# AOT-exported step functions
+# ---------------------------------------------------------------------------
+
+def embed_decode(ids, pos, tok_table, pos_table):
+    """ids: i32[b] token ids, pos: i32[] position → x f32[b, 1, h]."""
+    tok = jnp.take(tok_table, ids, axis=0)                      # [b, h]
+    pe = jax.lax.dynamic_slice_in_dim(pos_table, pos, 1, 0)     # [1, h]
+    return (tok + pe)[:, None, :]
+
+
+def decode_layer_full(x, k_cache, v_cache, kv_len, *weights,
+                      cfg: ModelConfig = TINY, use_pallas: bool = True):
+    """Baseline decode step for one layer: the full KV cache was transferred.
+
+    x: f32[b,1,h]; k_cache/v_cache: f32[b,S,h] padded, kv_len valid rows
+    (kv_len < S).  Returns (y, k_new, v_new).
+    """
+    w = _wdict(weights)
+    x, k_new, v_new = _mha_decode(x, k_cache, v_cache, kv_len, w, cfg, use_pallas)
+    return _ffn(x, w), k_new, v_new
+
+
+def decode_layer_partial(x, x_pre, k_rest, v_rest, kv_len, *weights,
+                         cfg: ModelConfig = TINY, use_pallas: bool = True):
+    """KVPR decode step for one layer (paper §3.2, Fig 3b).
+
+    x:      f32[b,1,h]   current token's activation
+    x_pre:  f32[b,L,h]   transferred activation prefix — KV[0:L] is
+                         recomputed from it on device (Pallas kernel)
+    k_rest: f32[b,S-L,h] transferred keys for positions [L, kv_len)
+    v_rest: f32[b,S-L,h] transferred values
+    kv_len: i32[]        valid cache length (L ≤ kv_len < S)
+
+    Returns (y, k_new, v_new) — identical to decode_layer_full on
+    consistent inputs: recomputation is exact, not an approximation.
+    """
+    w = _wdict(weights)
+    if use_pallas:
+        k_re, v_re = kv_recompute(
+            x_pre, w["ln1_g"], w["ln1_b"], w["wk"], w["bk"], w["wv"], w["bv"])
+    else:
+        k_re, v_re = ref.kv_recompute_ref(
+            x_pre, w["ln1_g"], w["ln1_b"], w["wk"], w["bk"], w["wv"], w["bv"])
+    k_cache = jnp.concatenate([k_re, k_rest], axis=1)
+    v_cache = jnp.concatenate([v_re, v_rest], axis=1)
+    x, k_new, v_new = _mha_decode(x, k_cache, v_cache, kv_len, w, cfg, use_pallas)
+    return _ffn(x, w), k_new, v_new
+
+
+def recompute_kv(x_pre, ln_g, ln_b, wk, bk, wv, bv):
+    """Standalone KV recomputation artifact (Pallas kernel only).
+
+    The engine's *split* schedule executes this as soon as the activation
+    prefix lands on device, **while** KV[L:] is still in flight on the link
+    — that is the paper's compute/transfer overlap made real.  The merged
+    attention then runs as ``decode_layer_merge``.
+    """
+    return kv_recompute(x_pre, ln_g, ln_b, wk, bk, wv, bv)
+
+
+def decode_layer_merge(x, k_re, v_re, k_rest, v_rest, kv_len, *weights,
+                       cfg: ModelConfig = TINY, use_pallas: bool = True):
+    """Second half of the split KVPR step: attention over the merged cache
+    (recomputed prefix ‖ transferred remainder) + FFN.
+
+    Semantically ``decode_layer_partial`` = ``recompute_kv`` ∘ this.
+    """
+    w = _wdict(weights)
+    k_cache = jnp.concatenate([k_re, k_rest], axis=1)
+    v_cache = jnp.concatenate([v_re, v_rest], axis=1)
+    x, k_new, v_new = _mha_decode(x, k_cache, v_cache, kv_len, w, cfg, use_pallas)
+    return _ffn(x, w), k_new, v_new
+
+
+def lm_head(x, tok_table, lnf_g, lnf_b):
+    """Final layernorm + tied-embedding projection. x: f32[b,1,h] → f32[b,V]."""
+    ln = _layernorm(x, lnf_g, lnf_b)
+    return jnp.einsum("bih,vh->biv", ln, tok_table)[:, 0, :]
+
+
+def prefill_model(ids, tok_table, pos_table, lnf_g, lnf_b, *layer_weights,
+                  cfg: ModelConfig = TINY):
+    """Whole-model prefill over a padded prompt (pure jnp — the paper's
+    technique only touches decoding; prefill is compute-bound already).
+
+    ids: i32[b, s_p].  Returns (logits f32[b,V] for the first generated
+    token, K f32[n_layers,b,s_p,h], V likewise, X f32[n_layers,b,s_p,h]).
+
+    ``X[i]`` is the *input activation* of layer i — exactly the tensor KVPR
+    keeps on the host so the GPU can recompute KV[0:l] later (paper Eq. 7).
+    """
+    n = cfg.n_layers
+    assert len(layer_weights) == n * len(LAYER_WEIGHT_NAMES)
+    b, s_p = ids.shape
+    x = jnp.take(tok_table, ids.reshape(-1), axis=0).reshape(b, s_p, cfg.hidden)
+    x = x + pos_table[:s_p][None, :, :]
+
+    ks, vs, xs = [], [], []
+    for i in range(n):
+        xs.append(x)
+        w = _wdict(layer_weights[i * 16:(i + 1) * 16])
+        x, k, v = ref.prefill_layer_ref(x, w, cfg.n_heads)
+        ks.append(k)
+        vs.append(v)
+    logits = lm_head(x[:, -1:, :], tok_table, lnf_g, lnf_b)
+    return logits, jnp.stack(ks), jnp.stack(vs), jnp.stack(xs)
+
+
+# ---------------------------------------------------------------------------
+# deterministic weight init (tests only — Rust generates its own weights and
+# feeds them through the artifacts as runtime inputs)
+# ---------------------------------------------------------------------------
+
+def init_weights(cfg: ModelConfig, seed: int = 0):
+    """Small-magnitude deterministic weights keeping activations O(1)."""
+    key = jax.random.PRNGKey(seed)
+    out_model, out_layers = {}, []
+    for name, shape in model_weight_shapes(cfg).items():
+        key, sub = jax.random.split(key)
+        base = jnp.ones(shape) if name.endswith("_g") else jnp.zeros(shape)
+        out_model[name] = base + 0.02 * jax.random.normal(sub, shape)
+    for _ in range(cfg.n_layers):
+        lw = {}
+        for name, shape in layer_weight_shapes(cfg).items():
+            key, sub = jax.random.split(key)
+            if name.endswith("_g"):
+                lw[name] = jnp.ones(shape) + 0.02 * jax.random.normal(sub, shape)
+            elif len(shape) == 1:
+                lw[name] = 0.02 * jax.random.normal(sub, shape)
+            else:
+                scale = (2.0 / (shape[0] + shape[1])) ** 0.5
+                lw[name] = scale * jax.random.normal(sub, shape)
+        out_layers.append(lw)
+    return out_model, out_layers

@@ -1,0 +1,104 @@
+"""AOT pipeline sanity: the artifact plan and the emitted manifest.
+
+These tests exercise `aot.build_artifact_plan` without re-lowering all 16
+artifacts (that is `make artifacts`' job); when `artifacts/` already exists
+they additionally validate the emitted files against the plan.
+"""
+
+import json
+import os
+
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import model as M
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def plan():
+    return aot.build_artifact_plan(M.TINY)
+
+
+class TestPlan:
+    def test_bucket_coverage(self, plan):
+        names = {e["name"] for e in plan}
+        for b in aot.BATCH_BUCKETS:
+            assert f"embed_decode_b{b}" in names
+            assert f"lm_head_b{b}" in names
+            assert f"decode_full_b{b}_s{aot.SEQ_CAP}" in names
+            for l in aot.L_BUCKETS:
+                assert f"decode_partial_b{b}_s{aot.SEQ_CAP}_l{l}" in names
+            for sp in aot.PROMPT_BUCKETS:
+                assert f"prefill_b{b}_p{sp}" in names
+
+    def test_unique_names(self, plan):
+        names = [e["name"] for e in plan]
+        assert len(names) == len(set(names))
+
+    def test_l_buckets_fit_capacity(self):
+        assert all(0 < l < aot.SEQ_CAP for l in aot.L_BUCKETS)
+        # contiguous-prefix trick requires room for the new token
+        assert all(sp < aot.SEQ_CAP for sp in aot.PROMPT_BUCKETS)
+
+    def test_decode_partial_signature(self, plan):
+        e = next(x for x in plan if x["name"] == "decode_partial_b1_s128_l64")
+        byname = {i: s for i, s in zip(e["in_names"], e["in_specs"])}
+        assert tuple(byname["x_pre"].shape) == (1, 64, M.TINY.hidden)
+        assert tuple(byname["k_rest"].shape) == (1, 64, M.TINY.hidden)
+        assert byname["kv_len"].dtype == jnp.int32
+        # weights follow the canonical order
+        assert e["in_names"][5:] == list(M.LAYER_WEIGHT_NAMES)
+
+    def test_prefill_signature(self, plan):
+        e = next(x for x in plan if x["name"] == "prefill_b4_p32")
+        assert len(e["in_specs"]) == 1 + 4 + M.TINY.n_layers * 16
+        assert tuple(e["in_specs"][0].shape) == (4, 32)
+
+    def test_rest_plus_l_equals_capacity(self, plan):
+        for e in plan:
+            if e["fn"] == "decode_partial":
+                byname = dict(zip(e["in_names"], e["in_specs"]))
+                assert byname["x_pre"].shape[1] + byname["k_rest"].shape[1] == e["s"]
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART_DIR, "manifest.json")),
+                    reason="artifacts not built (run `make artifacts`)")
+class TestEmittedManifest:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ART_DIR, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_all_files_exist(self, manifest):
+        for a in manifest["artifacts"]:
+            path = os.path.join(ART_DIR, a["file"])
+            assert os.path.exists(path), a["file"]
+            with open(path) as f:
+                head = f.read(200)
+            assert "HloModule" in head
+
+    def test_manifest_matches_plan(self, manifest, plan):
+        assert {a["name"] for a in manifest["artifacts"]} == {e["name"] for e in plan}
+
+    def test_model_geometry(self, manifest):
+        m = manifest["model"]
+        assert m["hidden"] == M.TINY.hidden
+        assert m["n_layers"] == M.TINY.n_layers
+        assert manifest["layer_weight_names"] == list(M.LAYER_WEIGHT_NAMES)
+
+    def test_io_signatures_complete(self, manifest):
+        for a in manifest["artifacts"]:
+            assert a["inputs"] and a["outputs"]
+            for io in a["inputs"] + a["outputs"]:
+                assert io["dtype"] in ("float32", "int32")
+                assert all(d > 0 for d in io["shape"]) or io["shape"] == []
+
+    def test_decode_outputs(self, manifest):
+        for a in manifest["artifacts"]:
+            if a["fn"] in ("decode_full", "decode_partial"):
+                assert [o["name"] for o in a["outputs"]] == ["y", "k_new", "v_new"]
+                h = manifest["model"]["hidden"]
+                assert a["outputs"][0]["shape"] == [a["b"], 1, h]

@@ -1,0 +1,113 @@
+"""L1 correctness: length-masked single-query decode attention kernel.
+
+The online-softmax accumulation must agree with the materialised-softmax
+oracle for every valid cache length, including boundaries (kv_len = 1,
+block edges, full capacity) — these are exactly the states the Rust engine
+drives the artifact through during generation.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.decode_attention import decode_attention
+from compile.kernels import ref
+
+
+def _inputs(b, nh, s, d, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(b, nh, 1, d)), jnp.float32) * scale
+    k = jnp.asarray(rng.normal(size=(b, nh, s, d)), jnp.float32) * scale
+    v = jnp.asarray(rng.normal(size=(b, nh, s, d)), jnp.float32) * scale
+    return q, k, v
+
+
+class TestDecodeAttentionBasic:
+    @pytest.mark.parametrize("kv_len", [1, 2, 37, 63, 64, 65, 100, 127, 128])
+    def test_matches_ref_across_lengths(self, kv_len):
+        q, k, v = _inputs(2, 4, 128, 32)
+        got = decode_attention(q, k, v, kv_len)
+        want = ref.decode_attention_ref(q, k, v, kv_len)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_single_position_is_value_row(self):
+        """kv_len=1 → softmax over one score → output = V[:, :, 0]."""
+        q, k, v = _inputs(1, 2, 64, 16, seed=7)
+        got = decode_attention(q, k, v, 1)
+        np.testing.assert_allclose(got[:, :, 0, :], v[:, :, 0, :], rtol=1e-6)
+
+    def test_padding_is_ignored(self):
+        """Garbage beyond kv_len must not leak into the output."""
+        q, k, v = _inputs(1, 2, 128, 16, seed=8)
+        kv_len = 50
+        k_poison = k.at[:, :, kv_len:, :].set(1e4)
+        v_poison = v.at[:, :, kv_len:, :].set(-1e4)
+        a = decode_attention(q, k, v, kv_len)
+        b = decode_attention(q, k_poison, v_poison, kv_len)
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+
+    def test_uniform_keys_average_values(self):
+        """Identical keys → uniform probs → output = mean of valid V rows."""
+        b, nh, s, d, kv_len = 1, 1, 64, 8, 40
+        q = jnp.ones((b, nh, 1, d), jnp.float32)
+        k = jnp.ones((b, nh, s, d), jnp.float32)
+        rng = np.random.default_rng(9)
+        v = jnp.asarray(rng.normal(size=(b, nh, s, d)), jnp.float32)
+        got = decode_attention(q, k, v, kv_len)
+        want = v[:, :, :kv_len, :].mean(axis=2, keepdims=True)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_block_size_invariance(self):
+        q, k, v = _inputs(2, 2, 128, 16, seed=10)
+        a = decode_attention(q, k, v, 97, blk_s=32)
+        b = decode_attention(q, k, v, 97, blk_s=64)
+        c = decode_attention(q, k, v, 97, blk_s=128)
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(a, c, rtol=1e-6, atol=1e-6)
+
+    def test_large_magnitude_scores_stable(self):
+        """Online softmax must not overflow where naive exp would."""
+        q, k, v = _inputs(1, 1, 64, 16, seed=11, scale=30.0)
+        got = decode_attention(q, k, v, 64)
+        want = ref.decode_attention_ref(q, k, v, 64)
+        assert np.isfinite(np.asarray(got)).all()
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_softmax_output_in_value_hull(self):
+        """Attention output is a convex combination of valid value rows."""
+        q, k, v = _inputs(1, 2, 64, 8, seed=12)
+        kv_len = 33
+        got = np.asarray(decode_attention(q, k, v, kv_len))
+        vv = np.asarray(v)[:, :, :kv_len, :]
+        assert (got <= vv.max(axis=2, keepdims=True) + 1e-5).all()
+        assert (got >= vv.min(axis=2, keepdims=True) - 1e-5).all()
+
+
+class TestDecodeAttentionProperty:
+    @settings(max_examples=12, deadline=None)
+    @given(
+        b=st.integers(1, 3),
+        nh=st.sampled_from([1, 2, 4]),
+        s=st.sampled_from([64, 128]),
+        d=st.sampled_from([8, 16, 32]),
+        frac=st.floats(0.01, 1.0),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref_random(self, b, nh, s, d, frac, seed):
+        kv_len = max(1, int(s * frac))
+        q, k, v = _inputs(b, nh, s, d, seed=seed)
+        got = decode_attention(q, k, v, kv_len)
+        want = ref.decode_attention_ref(q, k, v, kv_len)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2**16), kv_len=st.integers(1, 128))
+    def test_extending_padding_is_noop(self, seed, kv_len):
+        """Attention over S=128 padded cache == attention over a smaller
+        padded cache holding the same valid prefix (when it fits)."""
+        q, k, v = _inputs(1, 2, 128, 16, seed=seed)
+        big = decode_attention(q, k, v, kv_len)
+        if kv_len <= 64:
+            small = decode_attention(q, k[:, :, :64, :], v[:, :, :64, :], kv_len)
+            np.testing.assert_allclose(big, small, rtol=1e-5, atol=1e-5)

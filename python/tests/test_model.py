@@ -1,0 +1,218 @@
+"""L2 correctness: the decoder step functions the AOT pipeline exports.
+
+The heart of the paper's exactness claim lives here: the *partial
+recomputation* decode step must produce bit-identical attention to the
+*full transfer* decode step whenever the activation prefix and the
+transferred KV remainder are mutually consistent.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile.kernels import ref
+
+CFG = M.TINY
+H = CFG.hidden
+
+
+@pytest.fixture(scope="module")
+def weights():
+    return M.init_weights(CFG, seed=0)
+
+
+def _layer_tuple(lw):
+    return tuple(lw[n] for n in M.LAYER_WEIGHT_NAMES)
+
+
+def _consistent_state(w, b, s_cap, l, kv_len, seed=0):
+    """Random decode state where KV[0:l] really is the projection of x_pre."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(b, 1, H)), jnp.float32) * 0.1
+    x_pre = jnp.asarray(rng.normal(size=(b, l, H)), jnp.float32) * 0.1
+    k_re, v_re = ref.kv_recompute_ref(
+        x_pre, w["ln1_g"], w["ln1_b"], w["wk"], w["bk"], w["wv"], w["bv"])
+    k_rest = jnp.asarray(rng.normal(size=(b, s_cap - l, H)), jnp.float32) * 0.1
+    v_rest = jnp.asarray(rng.normal(size=(b, s_cap - l, H)), jnp.float32) * 0.1
+    k_cache = jnp.concatenate([k_re, k_rest], axis=1)
+    v_cache = jnp.concatenate([v_re, v_rest], axis=1)
+    return x, x_pre, k_rest, v_rest, k_cache, v_cache, kv_len
+
+
+class TestExactness:
+    """Partial recomputation == full transfer (paper §3: 'exact attention')."""
+
+    @pytest.mark.parametrize("l", [32, 64, 96])
+    def test_partial_equals_full(self, weights, l):
+        _, lws = weights
+        w = lws[0]
+        wt = _layer_tuple(w)
+        x, x_pre, k_rest, v_rest, k_cache, v_cache, kv_len = _consistent_state(
+            w, b=2, s_cap=128, l=l, kv_len=max(l, 100))
+        yf, kf, vf = M.decode_layer_full(x, k_cache, v_cache, kv_len, *wt)
+        yp, kp, vp = M.decode_layer_partial(x, x_pre, k_rest, v_rest, kv_len, *wt)
+        np.testing.assert_allclose(yf, yp, rtol=1e-5, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(kf), np.asarray(kp))
+        np.testing.assert_array_equal(np.asarray(vf), np.asarray(vp))
+
+    def test_partial_l_equals_kvlen(self, weights):
+        """Recompute *everything* (l == kv_len): rest segment is all padding."""
+        _, lws = weights
+        w = lws[0]
+        wt = _layer_tuple(w)
+        x, x_pre, k_rest, v_rest, k_cache, v_cache, _ = _consistent_state(
+            w, b=1, s_cap=128, l=96, kv_len=96)
+        yf, _, _ = M.decode_layer_full(x, k_cache, v_cache, 96, *wt)
+        yp, _, _ = M.decode_layer_partial(x, x_pre, k_rest, v_rest, 96, *wt)
+        np.testing.assert_allclose(yf, yp, rtol=1e-5, atol=1e-6)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**16),
+           l=st.sampled_from([32, 64, 96]),
+           extra=st.integers(0, 31))
+    def test_partial_equals_full_random(self, weights, seed, l, extra):
+        _, lws = weights
+        w = lws[1]
+        wt = _layer_tuple(w)
+        kv_len = min(l + extra, 127)
+        x, x_pre, k_rest, v_rest, k_cache, v_cache, _ = _consistent_state(
+            w, b=1, s_cap=128, l=l, kv_len=kv_len, seed=seed)
+        yf, _, _ = M.decode_layer_full(x, k_cache, v_cache, kv_len, *wt)
+        yp, _, _ = M.decode_layer_partial(x, x_pre, k_rest, v_rest, kv_len, *wt)
+        np.testing.assert_allclose(yf, yp, rtol=1e-4, atol=1e-5)
+
+
+class TestPallasVsPure:
+    def test_decode_full_pallas_matches_pure(self, weights):
+        _, lws = weights
+        wt = _layer_tuple(lws[0])
+        rng = np.random.default_rng(2)
+        x = jnp.asarray(rng.normal(size=(2, 1, H)), jnp.float32) * 0.1
+        kc = jnp.asarray(rng.normal(size=(2, 128, H)), jnp.float32) * 0.1
+        vc = jnp.asarray(rng.normal(size=(2, 128, H)), jnp.float32) * 0.1
+        y1, k1, v1 = M.decode_layer_full(x, kc, vc, 77, *wt, use_pallas=True)
+        y2, k2, v2 = M.decode_layer_full(x, kc, vc, 77, *wt, use_pallas=False)
+        np.testing.assert_allclose(y1, y2, rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(k1), np.asarray(k2))
+
+    def test_decode_partial_pallas_matches_pure(self, weights):
+        _, lws = weights
+        w = lws[0]
+        wt = _layer_tuple(w)
+        x, x_pre, k_rest, v_rest, _, _, kv_len = _consistent_state(
+            w, b=1, s_cap=128, l=64, kv_len=90, seed=3)
+        y1, _, _ = M.decode_layer_partial(x, x_pre, k_rest, v_rest, kv_len, *wt,
+                                          use_pallas=True)
+        y2, _, _ = M.decode_layer_partial(x, x_pre, k_rest, v_rest, kv_len, *wt,
+                                          use_pallas=False)
+        np.testing.assert_allclose(y1, y2, rtol=1e-5, atol=1e-5)
+
+
+class TestDecodeSemantics:
+    def test_new_token_kv_matches_projection(self, weights):
+        """k_new/v_new outputs are exactly the projections of LN(x)."""
+        _, lws = weights
+        w = lws[0]
+        wt = _layer_tuple(w)
+        rng = np.random.default_rng(4)
+        x = jnp.asarray(rng.normal(size=(1, 1, H)), jnp.float32) * 0.1
+        kc = jnp.zeros((1, 128, H), jnp.float32)
+        vc = jnp.zeros((1, 128, H), jnp.float32)
+        _, k_new, v_new = M.decode_layer_full(x, kc, vc, 5, *wt)
+        ln1 = ref.layernorm_ref(x, w["ln1_g"], w["ln1_b"])
+        np.testing.assert_allclose(k_new, ln1 @ w["wk"] + w["bk"], rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(v_new, ln1 @ w["wv"] + w["bv"], rtol=1e-5, atol=1e-6)
+
+    def test_cache_rows_beyond_kvlen_dont_matter(self, weights):
+        _, lws = weights
+        wt = _layer_tuple(lws[0])
+        rng = np.random.default_rng(5)
+        x = jnp.asarray(rng.normal(size=(1, 1, H)), jnp.float32) * 0.1
+        kc = jnp.asarray(rng.normal(size=(1, 128, H)), jnp.float32)
+        vc = jnp.asarray(rng.normal(size=(1, 128, H)), jnp.float32)
+        kv_len = 60
+        y1, _, _ = M.decode_layer_full(x, kc, vc, kv_len, *wt)
+        kc2 = kc.at[:, kv_len + 1:, :].set(99.0)  # poison padding (kv_len row
+        vc2 = vc.at[:, kv_len + 1:, :].set(-99.0)  # is overwritten by new kv)
+        y2, _, _ = M.decode_layer_full(x, kc2, vc2, kv_len, *wt)
+        np.testing.assert_allclose(y1, y2, rtol=1e-6, atol=1e-6)
+
+    def test_matches_ref_layer(self, weights):
+        """Step fn == the standalone oracle decoder layer."""
+        _, lws = weights
+        w = lws[2]
+        wt = _layer_tuple(w)
+        rng = np.random.default_rng(6)
+        x = jnp.asarray(rng.normal(size=(2, 1, H)), jnp.float32) * 0.1
+        kc = jnp.asarray(rng.normal(size=(2, 128, H)), jnp.float32) * 0.1
+        vc = jnp.asarray(rng.normal(size=(2, 128, H)), jnp.float32) * 0.1
+        y, kn, vn = M.decode_layer_full(x, kc, vc, 50, *wt)
+        yr, knr, vnr = ref.decoder_layer_full_ref(x, kc, vc, 50, w, CFG.n_heads)
+        np.testing.assert_allclose(y, yr, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(kn, knr, rtol=1e-5, atol=1e-6)
+
+
+class TestPrefillDecodeChain:
+    def test_prefill_then_decode_consistent(self, weights):
+        """Generate token t via (a) prefill(s) + decode and (b) prefill(s+1);
+        the KV rows written by decode must equal prefill's rows."""
+        mw, lws = weights
+        flat = tuple(w[n] for w in lws for n in M.LAYER_WEIGHT_NAMES)
+        rng = np.random.default_rng(7)
+        b, sp = 1, 16
+        ids = jnp.asarray(rng.integers(0, CFG.vocab, size=(b, sp + 1)), jnp.int32)
+
+        logits_a, k_a, v_a, _x_a = M.prefill_model(
+            ids[:, :sp], mw["tok_table"], mw["pos_table"], mw["lnf_g"], mw["lnf_b"], *flat)
+        # decode one step with the true next token
+        x = M.embed_decode(ids[:, sp], jnp.int32(sp), mw["tok_table"], mw["pos_table"])
+        s_cap = 128
+        kv_len = sp
+        for i, w in enumerate(lws):
+            wt = _layer_tuple(w)
+            kc = jnp.zeros((b, s_cap, H), jnp.float32).at[:, :sp, :].set(k_a[i])
+            vc = jnp.zeros((b, s_cap, H), jnp.float32).at[:, :sp, :].set(v_a[i])
+            x, k_new, v_new = M.decode_layer_full(x, kc, vc, kv_len, *wt)
+            # compare against prefill over sp+1 tokens
+            _, k_b, v_b, _xb = M.prefill_model(
+                ids[:, :sp + 1], mw["tok_table"], mw["pos_table"],
+                mw["lnf_g"], mw["lnf_b"], *flat)
+            np.testing.assert_allclose(k_new[:, 0, :], k_b[i][:, sp, :],
+                                       rtol=1e-4, atol=1e-5)
+
+    def test_prefill_causality(self, weights):
+        """Changing a later prompt token must not change earlier KV rows."""
+        mw, lws = weights
+        flat = tuple(w[n] for w in lws for n in M.LAYER_WEIGHT_NAMES)
+        rng = np.random.default_rng(8)
+        ids = jnp.asarray(rng.integers(0, CFG.vocab, size=(1, 16)), jnp.int32)
+        ids2 = ids.at[0, -1].set((ids[0, -1] + 1) % CFG.vocab)
+        _, k1, _, _ = M.prefill_model(ids, mw["tok_table"], mw["pos_table"],
+                                   mw["lnf_g"], mw["lnf_b"], *flat)
+        _, k2, _, _ = M.prefill_model(ids2, mw["tok_table"], mw["pos_table"],
+                                   mw["lnf_g"], mw["lnf_b"], *flat)
+        np.testing.assert_allclose(k1[:, :, :15, :], k2[:, :, :15, :],
+                                   rtol=1e-6, atol=1e-6)
+        assert not np.allclose(k1[:, :, 15, :], k2[:, :, 15, :])
+
+
+class TestHeadsAndEmbed:
+    def test_embed_decode_shape_and_content(self, weights):
+        mw, _ = weights
+        ids = jnp.asarray([3, 7], jnp.int32)
+        x = M.embed_decode(ids, jnp.int32(5), mw["tok_table"], mw["pos_table"])
+        assert x.shape == (2, 1, H)
+        want = mw["tok_table"][3] + mw["pos_table"][5]
+        np.testing.assert_allclose(x[0, 0], want, rtol=1e-6)
+
+    def test_lm_head_tied_embedding(self, weights):
+        mw, _ = weights
+        rng = np.random.default_rng(9)
+        x = jnp.asarray(rng.normal(size=(2, 1, H)), jnp.float32)
+        logits = M.lm_head(x, mw["tok_table"], mw["lnf_g"], mw["lnf_b"])
+        assert logits.shape == (2, CFG.vocab)
+        ln = ref.layernorm_ref(x, mw["lnf_g"], mw["lnf_b"])
+        np.testing.assert_allclose(logits, (ln @ mw["tok_table"].T)[:, 0, :],
+                                   rtol=1e-5, atol=1e-5)

@@ -1,0 +1,9 @@
+//! Paper Fig 10: runtime breakdown of an MHA block, KVPR vs FlexGen.
+//!
+//! `cargo bench --bench fig10_breakdown` — prints the paper-shaped rows and writes
+//! `reports/fig10_breakdown.txt` (see DESIGN.md §6 for the experiment index).
+
+fn main() {
+    std::fs::create_dir_all("reports").ok();
+    kvpr::paper::fig10_breakdown().emit("fig10_breakdown");
+}

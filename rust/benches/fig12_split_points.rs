@@ -1,0 +1,9 @@
+//! Paper Fig 12: optimal KV split point l* over the generation process.
+//!
+//! `cargo bench --bench fig12_split_points` — prints the paper-shaped rows and writes
+//! `reports/fig12_split_points.txt` (see DESIGN.md §6 for the experiment index).
+
+fn main() {
+    std::fs::create_dir_all("reports").ok();
+    kvpr::paper::fig12_splits().emit("fig12_split_points");
+}

@@ -1,0 +1,9 @@
+//! Paper Fig 13: LLaMa2-7B/13B throughput vs baselines.
+//!
+//! `cargo bench --bench fig13_llama` — prints the paper-shaped rows and writes
+//! `reports/fig13_llama.txt` (see DESIGN.md §6 for the experiment index).
+
+fn main() {
+    std::fs::create_dir_all("reports").ok();
+    kvpr::paper::fig13_llama().emit("fig13_llama");
+}

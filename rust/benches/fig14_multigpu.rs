@@ -1,0 +1,9 @@
+//! Paper Fig 14: multi-GPU scaling vs FastDecode (shared-CPU bottleneck).
+//!
+//! `cargo bench --bench fig14_multigpu` — prints the paper-shaped rows and writes
+//! `reports/fig14_multigpu.txt` (see DESIGN.md §6 for the experiment index).
+
+fn main() {
+    std::fs::create_dir_all("reports").ok();
+    kvpr::paper::fig14_multigpu().emit("fig14_multigpu");
+}

@@ -1,0 +1,10 @@
+//! Paper Fig 6: decode throughput, KVPR vs FlexGen (seq sweep + batch sweep).
+//!
+//! `cargo bench --bench fig6_throughput` — prints the paper-shaped rows and writes
+//! `reports/fig6_throughput.txt` (see DESIGN.md §6 for the experiment index).
+
+fn main() {
+    std::fs::create_dir_all("reports").ok();
+    kvpr::paper::fig6_seq_sweep().emit("fig6_seq_sweep");
+    kvpr::paper::fig6_batch_sweep().emit("fig6_batch_sweep");
+}

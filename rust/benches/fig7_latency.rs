@@ -1,0 +1,9 @@
+//! Paper Fig 7: decode latency, single batch of 64, vs Accelerate/DeepSpeed.
+//!
+//! `cargo bench --bench fig7_latency` — prints the paper-shaped rows and writes
+//! `reports/fig7_latency.txt` (see DESIGN.md §6 for the experiment index).
+
+fn main() {
+    std::fs::create_dir_all("reports").ok();
+    kvpr::paper::fig7_latency().emit("fig7_latency");
+}

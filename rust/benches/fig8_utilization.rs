@@ -1,0 +1,11 @@
+//! Paper Fig 8: GPU utilization and memory during decode, KVPR vs FlexGen.
+//!
+//! `cargo bench --bench fig8_utilization` — prints the paper-shaped rows and writes
+//! `reports/fig8_utilization.txt` (see DESIGN.md §6 for the experiment index).
+
+fn main() {
+    std::fs::create_dir_all("reports").ok();
+    let (summary, timeline) = kvpr::paper::fig8_utilization();
+    summary.emit("fig8_utilization");
+    timeline.emit("fig8_timeline");
+}

@@ -1,0 +1,9 @@
+//! Paper Fig 9: throughput with group-wise 4-bit KV quantization (OPT-13B).
+//!
+//! `cargo bench --bench fig9_compression` — prints the paper-shaped rows and writes
+//! `reports/fig9_compression.txt` (see DESIGN.md §6 for the experiment index).
+
+fn main() {
+    std::fs::create_dir_all("reports").ok();
+    kvpr::paper::fig9_compression().emit("fig9_compression");
+}

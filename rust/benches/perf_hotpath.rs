@@ -1,0 +1,138 @@
+//! Hot-path microbenchmarks for the §Perf pass (EXPERIMENTS.md §Perf).
+//!
+//! Timed loops (no criterion in the vendored crate set) over the pieces
+//! that sit on the decode request path:
+//!   * LP solve (must be sub-µs — it runs per step per batch)
+//!   * bucket quantisation
+//!   * staging transpose (host rows → artifact layout)
+//!   * int4 quant/dequant of a KV block
+//!   * mini-JSON manifest parse (startup path)
+//!   * simulator step throughput (bench harness speed itself)
+
+use std::time::Instant;
+
+use kvpr::config::{HardwareConfig, ModelConfig, WorkloadConfig};
+use kvpr::kvcache::quant;
+use kvpr::scheduler::{CostModel, SchedulePolicy, SplitSolver};
+use kvpr::sim::{simulate_decode, Policy, RunConfig};
+use kvpr::util::table::Table;
+
+fn time_per_iter<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    // warmup
+    for _ in 0..iters / 10 + 1 {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+fn main() {
+    std::fs::create_dir_all("reports").ok();
+    let mut t = Table::new(
+        "perf_hotpath — request-path microbenchmarks",
+        &["op", "iters", "time/iter", "notes"],
+    );
+
+    // LP solve
+    let cost = CostModel::from_hardware(&HardwareConfig::a100_x16(), &ModelConfig::opt_6_7b(), 32);
+    let solver = SplitSolver::new(cost.clone(), SchedulePolicy::RowByRow);
+    let dt = time_per_iter(1_000_000, || {
+        std::hint::black_box(solver.solve(std::hint::black_box(1024), 1024));
+    });
+    t.row(&[
+        "LP solve (closed form)".into(),
+        "1M".into(),
+        kvpr::util::fmt_secs(dt),
+        "per decode step".into(),
+    ]);
+
+    // exhaustive oracle for comparison
+    let dt = time_per_iter(2_000, || {
+        std::hint::black_box(solver.solve_exhaustive(std::hint::black_box(1024), 1024));
+    });
+    t.row(&[
+        "LP solve (exhaustive)".into(),
+        "2k".into(),
+        kvpr::util::fmt_secs(dt),
+        "oracle, not on hot path".into(),
+    ]);
+
+    // bucket quantisation
+    let buckets = [32usize, 64, 96];
+    let dt = time_per_iter(1_000_000, || {
+        std::hint::black_box(solver.quantize_to_buckets(std::hint::black_box(120), &buckets, 120));
+    });
+    t.row(&[
+        "bucket quantisation".into(),
+        "1M".into(),
+        kvpr::util::fmt_secs(dt),
+        "per decode step/layer".into(),
+    ]);
+
+    // staging transpose: tiny-model-shaped (b=4, 100 rows, h=256, cap 128)
+    let rows = vec![0.5f32; 100 * 4 * 256];
+    let mut out = Vec::with_capacity(4 * 128 * 256);
+    let dt = time_per_iter(5_000, || {
+        kvpr::engine_stage_padded_bench(&rows, 100, 4, 256, 128, &mut out);
+        std::hint::black_box(&out);
+    });
+    t.row(&[
+        "staging transpose".into(),
+        "5k".into(),
+        kvpr::util::fmt_secs(dt),
+        "per layer per step (b=4)".into(),
+    ]);
+
+    // int4 quant + dequant of one layer's transferred KV (tiny model)
+    let data = vec![0.25f32; 2 * 100 * 4 * 256];
+    let mut deq = Vec::new();
+    let dt = time_per_iter(500, || {
+        let b = quant::quantize(&data, quant::DEFAULT_GROUP).unwrap();
+        quant::dequantize(&b, &mut deq);
+        std::hint::black_box(&deq);
+    });
+    t.row(&[
+        "int4 quant+dequant".into(),
+        "500".into(),
+        kvpr::util::fmt_secs(dt),
+        format!("{} elems", data.len()),
+    ]);
+
+    // manifest JSON parse (startup)
+    if let Ok(text) = std::fs::read_to_string("artifacts/manifest.json") {
+        let dt = time_per_iter(2_000, || {
+            std::hint::black_box(kvpr::util::json::Json::parse(&text).unwrap());
+        });
+        t.row(&[
+            "manifest parse".into(),
+            "2k".into(),
+            kvpr::util::fmt_secs(dt),
+            format!("{} bytes", text.len()),
+        ]);
+    }
+
+    // simulator throughput (bench harness speed)
+    let cfg = RunConfig::new(
+        ModelConfig::opt_6_7b(),
+        HardwareConfig::a100_x16(),
+        WorkloadConfig::throughput_oriented(512, 8),
+        Policy::Kvpr,
+    );
+    let mut tasks = 0usize;
+    let dt = time_per_iter(20, || {
+        let r = simulate_decode(&cfg);
+        tasks = r.n_tasks;
+        std::hint::black_box(r);
+    });
+    t.row(&[
+        "sim decode (opt-6.7b, 8 steps, 32x8)".into(),
+        "20".into(),
+        kvpr::util::fmt_secs(dt),
+        format!("{tasks} tasks"),
+    ]);
+
+    t.emit("perf_hotpath");
+}

@@ -1,0 +1,10 @@
+//! Paper Table 1: KV-cache size, PCIe latency vs KV computation latency.
+//!
+//! `cargo bench --bench table1_pcie_vs_compute` — prints the paper-shaped rows and writes
+//! `reports/table1_pcie_vs_compute.txt` (see DESIGN.md §6 for the experiment index).
+
+fn main() {
+    std::fs::create_dir_all("reports").ok();
+    let t = kvpr::paper::table1();
+    t.emit("table1_pcie_vs_compute");
+}

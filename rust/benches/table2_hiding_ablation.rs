@@ -1,0 +1,9 @@
+//! Paper Table 2: hiding KV recomputation under weight loading (ablation).
+//!
+//! `cargo bench --bench table2_hiding_ablation` — prints the paper-shaped rows and writes
+//! `reports/table2_hiding_ablation.txt` (see DESIGN.md §6 for the experiment index).
+
+fn main() {
+    std::fs::create_dir_all("reports").ok();
+    kvpr::paper::table2_hiding().emit("table2_hiding_ablation");
+}

@@ -1,0 +1,9 @@
+//! Paper Tables 3-4: detailed latency-oriented results.
+//!
+//! `cargo bench --bench table34_detailed` — prints the paper-shaped rows and writes
+//! `reports/table34_detailed.txt` (see DESIGN.md §6 for the experiment index).
+
+fn main() {
+    std::fs::create_dir_all("reports").ok();
+    kvpr::paper::table34_detailed().emit("table34_detailed");
+}

@@ -1,0 +1,9 @@
+//! Paper Table 5: low-end system (RTX 5000, PCIe 4.0 x8).
+//!
+//! `cargo bench --bench table5_lowend` — prints the paper-shaped rows and writes
+//! `reports/table5_lowend.txt` (see DESIGN.md §6 for the experiment index).
+
+fn main() {
+    std::fs::create_dir_all("reports").ok();
+    kvpr::paper::table5_lowend().emit("table5_lowend");
+}

@@ -1,0 +1,13 @@
+//! Configuration: model geometries, hardware descriptions and workloads.
+//!
+//! The paper's evaluation is fully characterised by a triple
+//! (ModelConfig, HardwareConfig, WorkloadConfig); every bench harness and
+//! the simulator take exactly these.
+
+mod hardware;
+mod model;
+mod workload;
+
+pub use hardware::HardwareConfig;
+pub use model::{ArchKind, ModelConfig};
+pub use workload::{Objective, WorkloadConfig};

@@ -1,0 +1,260 @@
+//! Model geometries — the paper's OPT family (§4), the LLaMa2 pair from
+//! Appendix A.6, and the tiny model the real PJRT path executes.
+
+/// Attention/FFN flavour. OPT uses plain MHA + 2-layer ReLU FFN; LLaMa2 uses
+/// MHA (no GQA at 7B/13B) + SwiGLU (three FFN matrices).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArchKind {
+    Opt,
+    Llama,
+}
+
+/// Transformer geometry + element size. All byte/flop formulas the paper
+/// relies on (Eq. 6 and 8) live here so scheduler, simulator and benches
+/// agree on them by construction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub arch: ArchKind,
+    pub hidden: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub ffn: usize,
+    pub vocab: usize,
+    pub max_pos: usize,
+    /// bytes per element (2 = fp16 at paper scale, 4 = f32 on the CPU path)
+    pub dtype_bytes: usize,
+}
+
+impl ModelConfig {
+    fn new(
+        name: &str,
+        arch: ArchKind,
+        hidden: usize,
+        n_heads: usize,
+        n_layers: usize,
+        ffn: usize,
+        dtype_bytes: usize,
+    ) -> Self {
+        ModelConfig {
+            name: name.to_string(),
+            arch,
+            hidden,
+            n_heads,
+            n_layers,
+            ffn,
+            vocab: 50272,
+            max_pos: 2048,
+            dtype_bytes,
+        }
+    }
+
+    // -- paper model zoo ------------------------------------------------------
+
+    /// OPT-6.7B: h=4096, 32 layers, 32 heads (paper Table 1: hidden dim 4096).
+    pub fn opt_6_7b() -> Self {
+        Self::new("opt-6.7b", ArchKind::Opt, 4096, 32, 32, 16384, 2)
+    }
+
+    /// OPT-13B: h=5120, 40 layers (paper Table 1: hidden dim 5120).
+    pub fn opt_13b() -> Self {
+        Self::new("opt-13b", ArchKind::Opt, 5120, 40, 40, 20480, 2)
+    }
+
+    /// OPT-30B: h=7168, 48 layers (paper Table 1: hidden dim 7168).
+    pub fn opt_30b() -> Self {
+        Self::new("opt-30b", ArchKind::Opt, 7168, 56, 48, 28672, 2)
+    }
+
+    /// LLaMa2-7B (Appendix A.6): h=4096, 32 layers, SwiGLU ffn 11008.
+    pub fn llama2_7b() -> Self {
+        let mut m = Self::new("llama2-7b", ArchKind::Llama, 4096, 32, 32, 11008, 2);
+        m.vocab = 32000;
+        m.max_pos = 4096;
+        m
+    }
+
+    /// LLaMa2-13B (Appendix A.6): h=5120, 40 layers, SwiGLU ffn 13824.
+    pub fn llama2_13b() -> Self {
+        let mut m = Self::new("llama2-13b", ArchKind::Llama, 5120, 40, 40, 13824, 2);
+        m.vocab = 32000;
+        m.max_pos = 4096;
+        m
+    }
+
+    /// The tiny model the real PJRT path executes (matches
+    /// `python/compile/model.py::TINY` and the artifact manifest).
+    pub fn tiny() -> Self {
+        let mut m = Self::new("kvpr-tiny", ArchKind::Opt, 256, 4, 4, 1024, 4);
+        m.vocab = 512;
+        m.max_pos = 512;
+        m
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "opt-6.7b" => Some(Self::opt_6_7b()),
+            "opt-13b" => Some(Self::opt_13b()),
+            "opt-30b" => Some(Self::opt_30b()),
+            "llama2-7b" => Some(Self::llama2_7b()),
+            "llama2-13b" => Some(Self::llama2_13b()),
+            "kvpr-tiny" | "tiny" => Some(Self::tiny()),
+            _ => None,
+        }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.n_heads
+    }
+
+    // -- byte/flop formulas (paper Eq. 6 & 8) ---------------------------------
+
+    /// KV-cache bytes for one layer: 2 · b · s · h · p  (Eq. 6, M_KV).
+    pub fn kv_bytes_per_layer(&self, batch: usize, seq: usize) -> u64 {
+        2 * (batch * seq * self.hidden * self.dtype_bytes) as u64
+    }
+
+    /// KV-cache bytes across all layers.
+    pub fn kv_bytes_total(&self, batch: usize, seq: usize) -> u64 {
+        self.kv_bytes_per_layer(batch, seq) * self.n_layers as u64
+    }
+
+    /// Activation bytes for an l-token prefix of one layer: b · l · h · p
+    /// (Eq. 6, M_X) — half the KV bytes for the same tokens.
+    pub fn act_bytes_per_layer(&self, batch: usize, l: usize) -> u64 {
+        (batch * l * self.hidden * self.dtype_bytes) as u64
+    }
+
+    /// FLOPs to recompute KV for an l-token prefix of one layer:
+    /// 4 · b · l · h²  (Eq. 8, N_KV).
+    pub fn recompute_flops(&self, batch: usize, l: usize) -> f64 {
+        4.0 * batch as f64 * l as f64 * (self.hidden as f64) * (self.hidden as f64)
+    }
+
+    /// MHA weight bytes for one layer (W_Q, W_K, W_V, W_O): 4 h² p.
+    pub fn mha_weight_bytes_per_layer(&self) -> u64 {
+        4 * (self.hidden * self.hidden * self.dtype_bytes) as u64
+    }
+
+    /// W_K + W_V only — what the fine-grained pipeline front-loads.
+    pub fn kv_proj_weight_bytes(&self) -> u64 {
+        2 * (self.hidden * self.hidden * self.dtype_bytes) as u64
+    }
+
+    /// FFN weight bytes for one layer (2 mats for OPT, 3 for SwiGLU).
+    pub fn ffn_weight_bytes_per_layer(&self) -> u64 {
+        let mats = match self.arch {
+            ArchKind::Opt => 2,
+            ArchKind::Llama => 3,
+        };
+        (mats * self.hidden * self.ffn * self.dtype_bytes) as u64
+    }
+
+    /// Total per-layer weight bytes (MHA + FFN; norms are negligible).
+    pub fn weight_bytes_per_layer(&self) -> u64 {
+        self.mha_weight_bytes_per_layer() + self.ffn_weight_bytes_per_layer()
+    }
+
+    /// Decode-step FLOPs for one layer at batch b over a kv_len-long cache:
+    /// projections (8bh² incl. output proj) + attention (4·b·kv·h) + FFN.
+    pub fn decode_flops_per_layer(&self, batch: usize, kv_len: usize) -> f64 {
+        let b = batch as f64;
+        let h = self.hidden as f64;
+        let f = self.ffn as f64;
+        let ffn_mats = match self.arch {
+            ArchKind::Opt => 2.0,
+            ArchKind::Llama => 3.0,
+        };
+        let proj = 8.0 * b * h * h;
+        let attn = 4.0 * b * kv_len as f64 * h;
+        let ffn = 2.0 * ffn_mats * b * h * f;
+        proj + attn + ffn
+    }
+
+    /// Rough total parameter count (for display).
+    pub fn approx_params(&self) -> u64 {
+        let per_layer = self.mha_weight_bytes_per_layer() / self.dtype_bytes as u64
+            + self.ffn_weight_bytes_per_layer() / self.dtype_bytes as u64;
+        per_layer * self.n_layers as u64
+            + (self.vocab * self.hidden + self.max_pos * self.hidden) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_table1_kv_sizes() {
+        // Table 1: FP16, batch 32, seq 1024 → 512 MB / 640 MB / 896 MB per
+        // layer (the paper counts MB as 2^20)
+        let mib = |b: u64| b / (1 << 20);
+        assert_eq!(mib(ModelConfig::opt_6_7b().kv_bytes_per_layer(32, 1024)), 512);
+        assert_eq!(mib(ModelConfig::opt_13b().kv_bytes_per_layer(32, 1024)), 640);
+        assert_eq!(mib(ModelConfig::opt_30b().kv_bytes_per_layer(32, 1024)), 896);
+    }
+
+    #[test]
+    fn activations_are_half_the_kv_bytes() {
+        let m = ModelConfig::opt_13b();
+        assert_eq!(
+            2 * m.act_bytes_per_layer(8, 300),
+            m.kv_bytes_per_layer(8, 300)
+        );
+    }
+
+    #[test]
+    fn recompute_flops_formula() {
+        let m = ModelConfig::opt_6_7b();
+        // 4 · b · l · h²
+        assert_eq!(m.recompute_flops(2, 10), 4.0 * 2.0 * 10.0 * 4096.0 * 4096.0);
+    }
+
+    #[test]
+    fn table2_mha_weight_bytes() {
+        // Table 2 caption: OPT-6.7B MHA block (W_Q,W_K,W_V,W_O) = 128 MB
+        let m = ModelConfig::opt_6_7b();
+        assert_eq!(m.mha_weight_bytes_per_layer() >> 20, 128);
+        assert_eq!(m.kv_proj_weight_bytes() >> 20, 64);
+    }
+
+    #[test]
+    fn zoo_lookup() {
+        for name in ["opt-6.7b", "opt-13b", "opt-30b", "llama2-7b", "llama2-13b", "tiny"] {
+            assert!(ModelConfig::by_name(name).is_some(), "{name}");
+        }
+        assert!(ModelConfig::by_name("gpt-5").is_none());
+    }
+
+    #[test]
+    fn llama_ffn_has_three_mats() {
+        let l = ModelConfig::llama2_7b();
+        assert_eq!(
+            l.ffn_weight_bytes_per_layer(),
+            (3 * l.hidden * l.ffn * l.dtype_bytes) as u64
+        );
+    }
+
+    #[test]
+    fn head_dim_divides() {
+        for m in [
+            ModelConfig::opt_6_7b(),
+            ModelConfig::opt_13b(),
+            ModelConfig::opt_30b(),
+            ModelConfig::llama2_7b(),
+            ModelConfig::tiny(),
+        ] {
+            assert_eq!(m.head_dim() * m.n_heads, m.hidden, "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn param_counts_in_right_ballpark() {
+        let p67 = ModelConfig::opt_6_7b().approx_params() as f64 / 1e9;
+        assert!((6.0..7.5).contains(&p67), "{p67}");
+        let p13 = ModelConfig::opt_13b().approx_params() as f64 / 1e9;
+        assert!((12.0..14.0).contains(&p13), "{p13}");
+        let p30 = ModelConfig::opt_30b().approx_params() as f64 / 1e9;
+        assert!((28.0..33.0).contains(&p30), "{p30}");
+    }
+}

@@ -1,0 +1,113 @@
+//! Dynamic batcher: groups queued requests into artifact batch buckets.
+//!
+//! Policy: wait up to `max_wait` for the queue to reach `max_batch`
+//! requests, then flush whatever is there.  Within a flush, requests are
+//! grouped so a batch shares one decode length (the max of its members —
+//! shorter requests are truncated on return), mirroring the padded-batch
+//! serving style of the paper's workloads.
+
+use std::time::{Duration, Instant};
+
+use super::request::Pending;
+
+/// Batching policy knobs.
+#[derive(Debug, Clone)]
+pub struct Batcher {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize, max_wait: Duration) -> Self {
+        Batcher { max_batch, max_wait }
+    }
+
+    /// Drain the channel into a batch according to the policy.  Returns
+    /// `None` when the channel is closed and empty (shutdown).
+    pub(crate) fn next_batch(
+        &self,
+        rx: &std::sync::mpsc::Receiver<Pending>,
+    ) -> Option<Vec<Pending>> {
+        // block for the first request
+        let first = rx.recv().ok()?;
+        let mut batch = vec![first];
+        let deadline = Instant::now() + self.max_wait;
+        while batch.len() < self.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(p) => batch.push(p),
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => break,
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(batch)
+    }
+
+    /// Shared decode length for a batch (max over members).
+    pub(crate) fn batch_gen_len(batch: &[Pending]) -> usize {
+        batch.iter().map(|p| p.req.gen_len).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Request;
+    use std::sync::mpsc;
+
+    fn pending(id: u64, gen: usize) -> (Pending, mpsc::Receiver<crate::coordinator::Response>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Pending {
+                req: Request::new(id, "hi", gen),
+                arrived: Instant::now(),
+                done: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn flushes_full_batch_immediately() {
+        let (tx, rx) = mpsc::channel();
+        let mut keep = Vec::new();
+        for i in 0..4 {
+            let (p, r) = pending(i, 8);
+            keep.push(r);
+            tx.send(p).unwrap();
+        }
+        let b = Batcher::new(4, Duration::from_secs(5));
+        let t0 = Instant::now();
+        let batch = b.next_batch(&rx).unwrap();
+        assert_eq!(batch.len(), 4);
+        assert!(t0.elapsed() < Duration::from_millis(200), "must not wait");
+    }
+
+    #[test]
+    fn flushes_partial_batch_on_timeout() {
+        let (tx, rx) = mpsc::channel();
+        let (p, _r) = pending(0, 8);
+        tx.send(p).unwrap();
+        let b = Batcher::new(4, Duration::from_millis(30));
+        let batch = b.next_batch(&rx).unwrap();
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn none_on_disconnect() {
+        let (tx, rx) = mpsc::channel::<Pending>();
+        drop(tx);
+        let b = Batcher::new(4, Duration::from_millis(10));
+        assert!(b.next_batch(&rx).is_none());
+    }
+
+    #[test]
+    fn batch_gen_len_is_max() {
+        let (p1, _r1) = pending(0, 8);
+        let (p2, _r2) = pending(1, 16);
+        assert_eq!(Batcher::batch_gen_len(&[p1, p2]), 16);
+    }
+}

@@ -1,0 +1,122 @@
+//! Serving metrics aggregation.
+
+use std::sync::{Arc, Mutex};
+
+use crate::util::stats::Summary;
+
+/// Shared metrics sink: per-request latency summaries + token counters.
+#[derive(Debug, Clone, Default)]
+pub struct ServeMetrics {
+    inner: Arc<Mutex<Inner>>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    total_latency: Summary,
+    queue: Summary,
+    decode: Summary,
+    requests: u64,
+    tokens: u64,
+    batches: u64,
+    started: Option<std::time::Instant>,
+    ended: Option<std::time::Instant>,
+}
+
+impl ServeMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_batch(&self, n_requests: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.batches += 1;
+        let _ = n_requests;
+    }
+
+    pub fn record_request(&self, total_s: f64, queue_s: f64, decode_s: f64, tokens: usize) {
+        let mut m = self.inner.lock().unwrap();
+        let now = std::time::Instant::now();
+        m.started.get_or_insert(now);
+        m.ended = Some(now);
+        m.total_latency.add(total_s);
+        m.queue.add(queue_s);
+        m.decode.add(decode_s);
+        m.requests += 1;
+        m.tokens += tokens as u64;
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.inner.lock().unwrap().requests
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.inner.lock().unwrap().batches
+    }
+
+    pub fn tokens(&self) -> u64 {
+        self.inner.lock().unwrap().tokens
+    }
+
+    /// (mean, p50, p99) of end-to-end latency in seconds.
+    pub fn latency_stats(&self) -> (f64, f64, f64) {
+        let m = self.inner.lock().unwrap();
+        if m.total_latency.count() == 0 {
+            return (0.0, 0.0, 0.0);
+        }
+        (m.total_latency.mean(), m.total_latency.p50(), m.total_latency.p99())
+    }
+
+    pub fn mean_queue_s(&self) -> f64 {
+        let m = self.inner.lock().unwrap();
+        if m.queue.count() == 0 {
+            0.0
+        } else {
+            m.queue.mean()
+        }
+    }
+
+    /// Serving throughput: generated tokens / wall time between first and
+    /// last completion.
+    pub fn tok_per_s(&self) -> f64 {
+        let m = self.inner.lock().unwrap();
+        match (m.started, m.ended) {
+            (Some(a), Some(b)) if b > a => m.tokens as f64 / (b - a).as_secs_f64(),
+            _ => 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregates() {
+        let m = ServeMetrics::new();
+        m.record_batch(4);
+        m.record_request(1.0, 0.1, 0.8, 16);
+        m.record_request(2.0, 0.2, 1.6, 16);
+        assert_eq!(m.requests(), 2);
+        assert_eq!(m.batches(), 1);
+        assert_eq!(m.tokens(), 32);
+        let (mean, p50, _p99) = m.latency_stats();
+        assert!((mean - 1.5).abs() < 1e-9);
+        assert!((p50 - 1.5).abs() < 1e-9);
+        assert!((m.mean_queue_s() - 0.15).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        let m = ServeMetrics::new();
+        assert_eq!(m.latency_stats(), (0.0, 0.0, 0.0));
+        assert_eq!(m.tok_per_s(), 0.0);
+    }
+
+    #[test]
+    fn clone_shares_state() {
+        let a = ServeMetrics::new();
+        let b = a.clone();
+        b.record_request(1.0, 0.0, 0.5, 4);
+        assert_eq!(a.requests(), 1);
+    }
+}

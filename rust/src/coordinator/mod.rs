@@ -1,0 +1,19 @@
+//! Serving front end: request queue → dynamic batcher → engine.
+//!
+//! The engine's PJRT handles are thread-pinned, so each [`Server`] spawns a
+//! worker thread that *builds* its own [`Engine`](crate::engine::Engine) and
+//! drains a request channel; the [`Batcher`] groups compatible requests into
+//! the artifact batch buckets; the [`Router`] round-robins across several
+//! servers (data-parallel multi-GPU, paper Appendix A.7).
+
+mod batcher;
+mod metrics;
+mod request;
+mod router;
+mod server;
+
+pub use batcher::Batcher;
+pub use metrics::ServeMetrics;
+pub use request::{Request, Response};
+pub use router::Router;
+pub use server::{Server, ServerConfig};

@@ -1,0 +1,43 @@
+//! Request/response types.
+
+use std::time::Instant;
+
+/// One inference request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: String,
+    pub gen_len: usize,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: &str, gen_len: usize) -> Self {
+        Request { id, prompt: prompt.to_string(), gen_len }
+    }
+}
+
+/// A completed request.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    /// Decoded generation (byte-level tokenizer).
+    pub text: String,
+    pub tokens: Vec<i32>,
+    /// Time spent queued before the batch formed.
+    pub queue_s: f64,
+    /// Share of the batch prefill attributed to this request.
+    pub prefill_s: f64,
+    /// Decode wall time of the batch.
+    pub decode_s: f64,
+    /// End-to-end latency.
+    pub total_s: f64,
+    /// Split points the scheduler picked during this batch's decode.
+    pub splits: Vec<usize>,
+}
+
+/// Internal envelope carrying arrival time + completion channel.
+pub(crate) struct Pending {
+    pub req: Request,
+    pub arrived: Instant,
+    pub done: std::sync::mpsc::Sender<Response>,
+}

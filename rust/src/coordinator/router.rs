@@ -1,0 +1,59 @@
+//! Round-robin router over data-parallel servers.
+//!
+//! Models the paper's Appendix A.7 setup: several GPU workers behind one
+//! entry point.  KVPR needs no shared CPU resource, so adding servers
+//! scales linearly — the property Fig 14 contrasts with FastDecode's
+//! CPU-bottleneck (reproduced in the simulator, `benches/fig14_multigpu`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use anyhow::Result;
+
+use super::server::{ResponseHandle, Server, ServerConfig};
+
+/// Round-robin dispatcher.
+pub struct Router {
+    servers: Vec<Server>,
+    next: AtomicUsize,
+}
+
+impl Router {
+    /// Start `n` identical servers.
+    pub fn start(cfg: &ServerConfig, n: usize) -> Result<Router> {
+        let mut servers = Vec::with_capacity(n);
+        for _ in 0..n {
+            servers.push(Server::start(cfg.clone())?);
+        }
+        Ok(Router { servers, next: AtomicUsize::new(0) })
+    }
+
+    pub fn n_servers(&self) -> usize {
+        self.servers.len()
+    }
+
+    /// Dispatch to the next server in rotation.
+    pub fn submit(&self, prompt: &str, gen_len: usize) -> ResponseHandle {
+        let i = self.next.fetch_add(1, Ordering::Relaxed) % self.servers.len();
+        self.servers[i].submit(prompt, gen_len)
+    }
+
+    /// Aggregate generated-token throughput across workers.
+    pub fn total_tokens(&self) -> u64 {
+        self.servers.iter().map(|s| s.metrics().tokens()).sum()
+    }
+
+    pub fn total_requests(&self) -> u64 {
+        self.servers.iter().map(|s| s.metrics().requests()).sum()
+    }
+
+    pub fn server(&self, i: usize) -> &Server {
+        &self.servers[i]
+    }
+
+    pub fn shutdown(self) -> Result<()> {
+        for s in self.servers {
+            s.shutdown()?;
+        }
+        Ok(())
+    }
+}

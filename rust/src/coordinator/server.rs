@@ -1,0 +1,179 @@
+//! The serving loop: one worker thread owning an engine, fed by a batcher.
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::batcher::Batcher;
+use super::metrics::ServeMetrics;
+use super::request::{Pending, Request, Response};
+use crate::engine::{Engine, EngineConfig};
+use crate::model::ByteTokenizer;
+
+/// Server construction parameters.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub artifact_dir: PathBuf,
+    pub engine: EngineConfig,
+    pub batcher: Batcher,
+    /// Prompt bucket used for padding (must exist in the manifest).
+    pub prompt_bucket: usize,
+}
+
+impl ServerConfig {
+    pub fn new(artifact_dir: &str, engine: EngineConfig) -> Self {
+        ServerConfig {
+            artifact_dir: PathBuf::from(artifact_dir),
+            engine,
+            batcher: Batcher::new(4, Duration::from_millis(20)),
+            prompt_bucket: 32,
+        }
+    }
+}
+
+/// Handle to a completion.
+pub struct ResponseHandle {
+    rx: mpsc::Receiver<Response>,
+}
+
+impl ResponseHandle {
+    pub fn wait(self) -> Result<Response> {
+        self.rx.recv().context("server dropped the request")
+    }
+}
+
+/// A single-engine server.  PJRT is thread-pinned, so the engine is built
+/// *inside* the worker thread.
+pub struct Server {
+    tx: Option<mpsc::Sender<Pending>>,
+    worker: Option<std::thread::JoinHandle<Result<()>>>,
+    metrics: ServeMetrics,
+    next_id: std::sync::atomic::AtomicU64,
+}
+
+impl Server {
+    /// Spawn the worker; blocks until the engine is profiled and warm.
+    pub fn start(cfg: ServerConfig) -> Result<Server> {
+        let (tx, rx) = mpsc::channel::<Pending>();
+        let metrics = ServeMetrics::new();
+        let m2 = metrics.clone();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+
+        let worker = std::thread::Builder::new()
+            .name("kvpr-server".into())
+            .spawn(move || serve_loop(cfg, rx, m2, ready_tx))
+            .context("spawn server thread")?;
+        ready_rx
+            .recv()
+            .context("server thread died during startup")??;
+        Ok(Server {
+            tx: Some(tx),
+            worker: Some(worker),
+            metrics,
+            next_id: std::sync::atomic::AtomicU64::new(1),
+        })
+    }
+
+    pub fn metrics(&self) -> &ServeMetrics {
+        &self.metrics
+    }
+
+    /// Submit a prompt; returns a waitable handle.
+    pub fn submit(&self, prompt: &str, gen_len: usize) -> ResponseHandle {
+        let id = self
+            .next_id
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.submit_request(Request::new(id, prompt, gen_len))
+    }
+
+    pub fn submit_request(&self, req: Request) -> ResponseHandle {
+        let (done, rx) = mpsc::channel();
+        let pending = Pending { req, arrived: Instant::now(), done };
+        self.tx
+            .as_ref()
+            .expect("server shut down")
+            .send(pending)
+            .expect("server thread gone");
+        ResponseHandle { rx }
+    }
+
+    /// Graceful shutdown: close the queue, join the worker.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.tx.take();
+        if let Some(w) = self.worker.take() {
+            w.join().map_err(|_| anyhow::anyhow!("server thread panicked"))??;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.tx.take();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn serve_loop(
+    cfg: ServerConfig,
+    rx: mpsc::Receiver<Pending>,
+    metrics: ServeMetrics,
+    ready: mpsc::Sender<Result<()>>,
+) -> Result<()> {
+    let engine = match Engine::new(&cfg.artifact_dir, cfg.engine.clone()) {
+        Ok(e) => {
+            let _ = ready.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            let _ = ready.send(Err(anyhow::anyhow!(msg)));
+            return Err(e);
+        }
+    };
+    let tok = ByteTokenizer::new();
+
+    while let Some(batch) = cfg.batcher.next_batch(&rx) {
+        metrics.record_batch(batch.len());
+        let gen_len = Batcher::batch_gen_len(&batch);
+        let prompts: Vec<Vec<i32>> = batch
+            .iter()
+            .map(|p| tok.encode(&p.req.prompt, cfg.prompt_bucket))
+            .collect();
+        let t0 = Instant::now();
+        let result = engine.generate(&prompts, gen_len);
+        match result {
+            Ok(gen) => {
+                let total_batch_s = t0.elapsed().as_secs_f64();
+                for (i, p) in batch.into_iter().enumerate() {
+                    let mut toks = gen.tokens[i].clone();
+                    toks.truncate(p.req.gen_len);
+                    let text = tok.decode(&toks);
+                    let queue_s = (t0 - p.arrived).as_secs_f64().max(0.0);
+                    let total_s = p.arrived.elapsed().as_secs_f64();
+                    metrics.record_request(total_s, queue_s, gen.metrics.decode_s, toks.len());
+                    let _ = p.done.send(Response {
+                        id: p.req.id,
+                        text,
+                        tokens: toks,
+                        queue_s,
+                        prefill_s: gen.metrics.prefill_s,
+                        decode_s: gen.metrics.decode_s,
+                        total_s,
+                        splits: gen.metrics.splits.clone(),
+                    });
+                    let _ = total_batch_s;
+                }
+            }
+            Err(e) => {
+                // drop the senders → submitters see an error
+                eprintln!("batch failed: {e:#}");
+            }
+        }
+    }
+    Ok(())
+}

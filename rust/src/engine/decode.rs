@@ -1,0 +1,777 @@
+//! The decode engine: row-by-row and column-by-column generation with
+//! overlapped transfer/compute per Algorithm 1.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::stage::{stage_padded, Breakdown};
+use crate::kvcache::HostKvCache;
+use crate::memory::MemPool;
+use crate::model::{ModelWeights, RefModel};
+use crate::profiler::SystemProfile;
+use crate::runtime::{ArgValue, Runtime};
+use crate::scheduler::{CostModel, Planner, SchedulePolicy};
+use crate::transfer::{Link, LinkConfig, PinnedPool, Priority, TransferHandle};
+
+/// Which schedule structure the engine executes (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EnginePolicy {
+    /// Synchronous full KV transfer, no prefetch (HF-Accelerate-like).
+    FullTransferSync,
+    /// Full KV transfer + next-layer prefetch (FlexGen-like).
+    FullTransferOverlap,
+    /// KVPR: split schedule, recompute ∥ remainder transfer + prefetch.
+    Kvpr,
+    /// KVPR via the fused artifact: same transfer volume, but recompute
+    /// cannot start before the remainder lands (intra-layer ablation).
+    KvprFused,
+    /// Recompute first, *then* transfer the remainder (ALISA-style, no
+    /// overlap between the two).
+    AlisaSequential,
+}
+
+impl EnginePolicy {
+    pub fn is_partial(&self) -> bool {
+        matches!(self, Self::Kvpr | Self::KvprFused | Self::AlisaSequential)
+    }
+
+    pub fn prefetches(&self) -> bool {
+        !matches!(self, Self::FullTransferSync)
+    }
+}
+
+/// Engine construction parameters.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub policy: EnginePolicy,
+    /// Model weights offloaded to host (throughput regime): weight traffic
+    /// is charged per layer per step.
+    pub weights_offloaded: bool,
+    /// Fine-grained MHA pipeline: W_K/W_V transferred at high priority so
+    /// recompute starts early (paper Fig 5b).  Only meaningful when
+    /// `weights_offloaded`.
+    pub fine_grained_weights: bool,
+    /// H2D link shaping.
+    pub link: LinkConfig,
+    /// Paper's `l ≤ s` cap (prompt-only activations); `usize::MAX` = free.
+    pub l_cap: usize,
+    /// Emulated device memory capacity.
+    pub gpu_mem_bytes: u64,
+    /// Weight-generation seed (identical seeds → identical tokens).
+    pub seed: u64,
+}
+
+impl EngineConfig {
+    pub fn new(policy: EnginePolicy) -> Self {
+        EngineConfig {
+            policy,
+            weights_offloaded: false,
+            fine_grained_weights: false,
+            link: LinkConfig::with_bandwidth(30e6),
+            l_cap: usize::MAX,
+            gpu_mem_bytes: 2 << 30,
+            seed: 42,
+        }
+    }
+}
+
+/// Result of one generation call.
+#[derive(Debug, Clone)]
+pub struct GenResult {
+    /// Generated token ids per sequence (greedy).
+    pub tokens: Vec<Vec<i32>>,
+    pub metrics: GenMetrics,
+}
+
+/// Timing + accounting for one generation.
+#[derive(Debug, Clone, Default)]
+pub struct GenMetrics {
+    pub prefill_s: f64,
+    pub decode_s: f64,
+    pub tokens_generated: u64,
+    /// Split point chosen at layer 0 of each decode step (Fig 12 trace).
+    pub splits: Vec<usize>,
+    pub breakdown: Breakdown,
+    pub gpu_peak_bytes: u64,
+    pub h2d_bytes: u64,
+    pub h2d_busy_s: f64,
+}
+
+impl GenMetrics {
+    /// Decode throughput in generated tokens per second.
+    pub fn decode_tok_per_s(&self) -> f64 {
+        if self.decode_s > 0.0 {
+            self.tokens_generated as f64 / self.decode_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Per-layer in-flight transfers (issued ahead of compute).
+struct LayerTransfers {
+    plan_l: usize,
+    act: Option<TransferHandle>,
+    k: Option<TransferHandle>,
+    v: Option<TransferHandle>,
+    w_kv: Option<TransferHandle>,
+    w_rest: Option<TransferHandle>,
+}
+
+/// The decode engine.  Owns the PJRT runtime (single-threaded) plus the
+/// emulated H2D/D2H links (their worker threads provide the overlap).
+pub struct Engine {
+    runtime: Runtime,
+    h2d: Link,
+    d2h: Link,
+    pub weights: ModelWeights,
+    profile: SystemProfile,
+    gpu_pool: MemPool,
+    staging: PinnedPool,
+    cfg: EngineConfig,
+}
+
+impl Engine {
+    /// Load artifacts, generate weights, calibrate the profiler.
+    pub fn new(artifact_dir: &Path, cfg: EngineConfig) -> Result<Self> {
+        let runtime = Runtime::load(artifact_dir)?;
+        let model = runtime.manifest().model.clone();
+        let weights = ModelWeights::generate(&model, cfg.seed);
+        let h2d = Link::new(cfg.link.clone());
+        let d2h = Link::new(cfg.link.clone());
+        // profile at the largest batch bucket (most representative)
+        let b = *runtime
+            .manifest()
+            .batch_buckets
+            .iter()
+            .max()
+            .context("no batch buckets")?;
+        let profile = SystemProfile::measure(&h2d, &runtime, b)?;
+        let gpu_pool = MemPool::new("gpu-hbm", cfg.gpu_mem_bytes);
+        Ok(Engine {
+            runtime,
+            h2d,
+            d2h,
+            weights,
+            profile,
+            gpu_pool,
+            staging: PinnedPool::new(),
+            cfg,
+        })
+    }
+
+    pub fn profile(&self) -> &SystemProfile {
+        &self.profile
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+
+    pub fn gpu_pool(&self) -> &MemPool {
+        &self.gpu_pool
+    }
+
+    pub fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    /// A reference model sharing this engine's weights (tests/debug).
+    pub fn ref_model(&self) -> RefModel {
+        RefModel::new(self.weights.clone())
+    }
+
+    fn planner(&self, batch: usize, policy: SchedulePolicy) -> Planner {
+        let mut cost: CostModel = self.profile.cost_model(&self.runtime.manifest().model);
+        // profile was taken at profile.batch; rescale marginals linearly
+        let scale = batch as f64 / self.profile.batch as f64;
+        cost.recompute_per_token_s *= scale;
+        cost.transfer_kv_per_token_s *= scale;
+        cost.transfer_act_per_token_s *= scale;
+        Planner::new(
+            cost,
+            policy,
+            self.runtime.manifest().l_buckets.clone(),
+            self.cfg.l_cap,
+        )
+    }
+
+    fn layer_weight_args<'a>(&'a self, layer: usize) -> Vec<ArgValue<'a>> {
+        self.weights
+            .layer(layer)
+            .iter()
+            .map(|(_, data, _)| ArgValue::F32(data.as_slice()))
+            .collect()
+    }
+
+    // ---------------------------------------------------------------------
+    // prefill
+    // ---------------------------------------------------------------------
+
+    /// Run whole-model prefill; returns (first tokens, per-layer host cache).
+    fn prefill(
+        &self,
+        ids: &[i32],
+        b: usize,
+        sp: usize,
+        cache: &mut HostKvCache,
+    ) -> Result<Vec<i32>> {
+        let m = self.runtime.manifest();
+        let model = m.model.clone();
+        let art = self.runtime.artifact(&m.prefill_name(b, sp))?;
+        let mut args: Vec<ArgValue> = vec![
+            ArgValue::I32Slice(ids),
+            ArgValue::F32(&self.weights.tok_table),
+            ArgValue::F32(&self.weights.pos_table),
+            ArgValue::F32(&self.weights.lnf_g),
+            ArgValue::F32(&self.weights.lnf_b),
+        ];
+        for i in 0..model.n_layers {
+            args.extend(self.layer_weight_args(i));
+        }
+        let out = art.call(&args)?;
+        let (logits, k_stack, v_stack, x_stack) = (&out[0], &out[1], &out[2], &out[3]);
+        let per_layer = b * sp * model.hidden;
+        for i in 0..model.n_layers {
+            let lo = i * per_layer;
+            cache.layer_mut(i).load_prefill(
+                &k_stack[lo..lo + per_layer],
+                &v_stack[lo..lo + per_layer],
+                &x_stack[lo..lo + per_layer],
+                sp,
+            )?;
+        }
+        Ok(RefModel::argmax(logits, model.vocab))
+    }
+
+    // ---------------------------------------------------------------------
+    // transfer issue / wait
+    // ---------------------------------------------------------------------
+
+    /// Issue all of layer `i`'s transfers for this step (Algorithm 1's
+    /// load_* calls).  `l` is the planned split (0 = full path).
+    fn issue_layer(&self, cache: &HostKvCache, layer: usize, l: usize) -> LayerTransfers {
+        let st = cache.layer(layer);
+        let kv_len = st.len();
+        let mut t = LayerTransfers { plan_l: l, act: None, k: None, v: None, w_kv: None, w_rest: None };
+
+        if self.cfg.weights_offloaded {
+            let lw = self.weights.layer(layer);
+            let total = (lw.bytes() / 4) as usize;
+            let kvp = (lw.kv_proj_bytes() / 4) as usize;
+            if self.cfg.fine_grained_weights {
+                t.w_kv = Some(self.h2d.submit_timing(kvp, Priority::High));
+                t.w_rest = Some(self.h2d.submit_timing(total - kvp, Priority::Normal));
+            } else {
+                t.w_rest = Some(self.h2d.submit_timing(total, Priority::Normal));
+            }
+        }
+
+        if l > 0 {
+            // activations first, at high priority (the recompute feedstock)
+            t.act = Some(self.h2d.submit(st.x_arc(), st.rows(0, l), Priority::High));
+            t.k = Some(self.h2d.submit(st.k_arc(), st.rows(l, kv_len), Priority::Normal));
+            t.v = Some(self.h2d.submit(st.v_arc(), st.rows(l, kv_len), Priority::Normal));
+        } else {
+            t.k = Some(self.h2d.submit(st.k_arc(), st.rows(0, kv_len), Priority::Normal));
+            t.v = Some(self.h2d.submit(st.v_arc(), st.rows(0, kv_len), Priority::Normal));
+        }
+        t
+    }
+
+    // ---------------------------------------------------------------------
+    // one decode step of one layer
+    // ---------------------------------------------------------------------
+
+    /// Consume `t`, run the layer, return (y, k_new, v_new).
+    #[allow(clippy::too_many_arguments)]
+    fn run_layer(
+        &self,
+        layer: usize,
+        b: usize,
+        x: &[f32],
+        kv_len: usize,
+        t: LayerTransfers,
+        bd: &mut Breakdown,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let m = self.runtime.manifest();
+        let h = m.model.hidden;
+        let cap = m.seq_cap;
+        let l = t.plan_l;
+        let _guard = self
+            .gpu_pool
+            .alloc((2 * cap * b * h * 4) as u64)
+            .context("device pool for staged KV")?;
+
+        let out = if l == 0 {
+            // ---- full-transfer path ----
+            if let Some(w) = t.w_kv {
+                let t0 = Instant::now();
+                w.wait();
+                bd.wait_weights_s += t0.elapsed().as_secs_f64();
+            }
+            if let Some(w) = t.w_rest {
+                let t0 = Instant::now();
+                w.wait();
+                bd.wait_weights_s += t0.elapsed().as_secs_f64();
+            }
+            let t0 = Instant::now();
+            let k_rows = t.k.unwrap().wait();
+            let v_rows = t.v.unwrap().wait();
+            bd.wait_kv_s += t0.elapsed().as_secs_f64();
+
+            let t0 = Instant::now();
+            let mut k_buf = self.staging.get(b * cap * h);
+            let mut v_buf = self.staging.get(b * cap * h);
+            stage_padded(&k_rows, kv_len, b, h, cap, &mut k_buf);
+            stage_padded(&v_rows, kv_len, b, h, cap, &mut v_buf);
+            bd.other_s += t0.elapsed().as_secs_f64();
+
+            let art = self.runtime.artifact(&m.decode_full_name(b))?;
+            let mut args: Vec<ArgValue> = vec![
+                ArgValue::F32(x),
+                ArgValue::F32(&k_buf),
+                ArgValue::F32(&v_buf),
+                ArgValue::I32(kv_len as i32),
+            ];
+            args.extend(self.layer_weight_args(layer));
+            let t0 = Instant::now();
+            let out = art.call(&args)?;
+            bd.attn_ffn_s += t0.elapsed().as_secs_f64();
+            self.staging.put(k_buf);
+            self.staging.put(v_buf);
+            out
+        } else {
+            // ---- partial-recompute paths ----
+            let rest_rows = kv_len - l;
+            let w = self.weights.layer(layer);
+
+            let fused = matches!(self.cfg.policy, EnginePolicy::KvprFused);
+            if fused {
+                // wait everything, call the fused artifact
+                if let Some(wh) = t.w_kv {
+                    let t0 = Instant::now();
+                    wh.wait();
+                    bd.wait_weights_s += t0.elapsed().as_secs_f64();
+                }
+                if let Some(wh) = t.w_rest {
+                    let t0 = Instant::now();
+                    wh.wait();
+                    bd.wait_weights_s += t0.elapsed().as_secs_f64();
+                }
+                let t0 = Instant::now();
+                let act_rows = t.act.unwrap().wait();
+                bd.wait_act_s += t0.elapsed().as_secs_f64();
+                let t0 = Instant::now();
+                let k_rows = t.k.unwrap().wait();
+                let v_rows = t.v.unwrap().wait();
+                bd.wait_kv_s += t0.elapsed().as_secs_f64();
+
+                let t0 = Instant::now();
+                let mut x_buf = self.staging.get(b * l * h);
+                let mut k_buf = self.staging.get(b * (cap - l) * h);
+                let mut v_buf = self.staging.get(b * (cap - l) * h);
+                stage_padded(&act_rows, l, b, h, l, &mut x_buf);
+                stage_padded(&k_rows, rest_rows, b, h, cap - l, &mut k_buf);
+                stage_padded(&v_rows, rest_rows, b, h, cap - l, &mut v_buf);
+                bd.other_s += t0.elapsed().as_secs_f64();
+
+                let art = self.runtime.artifact(&m.decode_partial_name(b, l))?;
+                let mut args: Vec<ArgValue> = vec![
+                    ArgValue::F32(x),
+                    ArgValue::F32(&x_buf),
+                    ArgValue::F32(&k_buf),
+                    ArgValue::F32(&v_buf),
+                    ArgValue::I32(kv_len as i32),
+                ];
+                args.extend(self.layer_weight_args(layer));
+                let t0 = Instant::now();
+                let out = art.call(&args)?;
+                bd.attn_ffn_s += t0.elapsed().as_secs_f64();
+                self.staging.put(x_buf);
+                self.staging.put(k_buf);
+                self.staging.put(v_buf);
+                out
+            } else {
+                // split schedule: recompute overlaps the remainder transfer
+                if let Some(wh) = t.w_kv {
+                    // fine-grained: only W_K/W_V gate the recompute
+                    let t0 = Instant::now();
+                    wh.wait();
+                    bd.wait_weights_s += t0.elapsed().as_secs_f64();
+                }
+                let t0 = Instant::now();
+                let act_rows = t.act.unwrap().wait();
+                bd.wait_act_s += t0.elapsed().as_secs_f64();
+
+                let t0 = Instant::now();
+                let mut x_buf = self.staging.get(b * l * h);
+                stage_padded(&act_rows, l, b, h, l, &mut x_buf);
+                bd.other_s += t0.elapsed().as_secs_f64();
+
+                let recompute = self.runtime.artifact(&m.recompute_name(b, l))?;
+                let t0 = Instant::now();
+                let re = recompute.call(&[
+                    ArgValue::F32(&x_buf),
+                    ArgValue::F32(w.get("ln1_g")),
+                    ArgValue::F32(w.get("ln1_b")),
+                    ArgValue::F32(w.get("wk")),
+                    ArgValue::F32(w.get("bk")),
+                    ArgValue::F32(w.get("wv")),
+                    ArgValue::F32(w.get("bv")),
+                ])?;
+                bd.recompute_s += t0.elapsed().as_secs_f64();
+                self.staging.put(x_buf);
+
+                // now join the remainder stream (ALISA issues it only here;
+                // for Kvpr it has been streaming since issue_layer)
+                if let Some(wh) = t.w_rest {
+                    let t0 = Instant::now();
+                    wh.wait();
+                    bd.wait_weights_s += t0.elapsed().as_secs_f64();
+                }
+                let t0 = Instant::now();
+                let k_rows = t.k.unwrap().wait();
+                let v_rows = t.v.unwrap().wait();
+                bd.wait_kv_s += t0.elapsed().as_secs_f64();
+
+                let t0 = Instant::now();
+                let mut k_buf = self.staging.get(b * (cap - l) * h);
+                let mut v_buf = self.staging.get(b * (cap - l) * h);
+                stage_padded(&k_rows, rest_rows, b, h, cap - l, &mut k_buf);
+                stage_padded(&v_rows, rest_rows, b, h, cap - l, &mut v_buf);
+                bd.other_s += t0.elapsed().as_secs_f64();
+
+                let merge = self.runtime.artifact(&m.decode_merge_name(b, l))?;
+                let mut args: Vec<ArgValue> = vec![
+                    ArgValue::F32(x),
+                    ArgValue::F32(&re[0]),
+                    ArgValue::F32(&re[1]),
+                    ArgValue::F32(&k_buf),
+                    ArgValue::F32(&v_buf),
+                    ArgValue::I32(kv_len as i32),
+                ];
+                args.extend(self.layer_weight_args(layer));
+                let t0 = Instant::now();
+                let out = merge.call(&args)?;
+                bd.attn_ffn_s += t0.elapsed().as_secs_f64();
+                self.staging.put(k_buf);
+                self.staging.put(v_buf);
+                out
+            }
+        };
+        Ok((out[0].clone(), out[1].clone(), out[2].clone()))
+    }
+
+    // ---------------------------------------------------------------------
+    // row-by-row generation (paper §3.2, latency objective)
+    // ---------------------------------------------------------------------
+
+    /// Generate `gen_len` tokens for up to `batch_bucket` sequences.
+    /// `ids` is row-major `[n_seqs][prompt_bucket]`, already padded.
+    pub fn generate(
+        &self,
+        ids: &[Vec<i32>],
+        gen_len: usize,
+    ) -> Result<GenResult> {
+        let m = self.runtime.manifest().clone();
+        let model = m.model.clone();
+        let n_seqs = ids.len();
+        let b = m
+            .batch_bucket_for(n_seqs)
+            .with_context(|| format!("no batch bucket for {n_seqs} sequences"))?;
+        let max_prompt = ids.iter().map(|p| p.len()).max().unwrap_or(0);
+        let sp = m
+            .prompt_bucket_for(max_prompt)
+            .with_context(|| format!("no prompt bucket for length {max_prompt}"))?;
+        if sp + gen_len >= m.seq_cap {
+            bail!("prompt {sp} + gen {gen_len} exceeds cache capacity {}", m.seq_cap);
+        }
+
+        // pad ids to [b, sp] (PAD token + replicate last row for slack seqs)
+        let mut flat = vec![crate::model::ByteTokenizer::new().encode("", sp)[0]; 0];
+        flat.reserve(b * sp);
+        for i in 0..b {
+            let src = ids.get(i.min(n_seqs - 1)).unwrap();
+            for j in 0..sp {
+                flat.push(*src.get(j).unwrap_or(&258));
+            }
+        }
+
+        let planner = self
+            .cfg
+            .policy
+            .is_partial()
+            .then(|| self.planner(b, SchedulePolicy::RowByRow));
+
+        let mut cache = HostKvCache::new(model.n_layers, b, model.hidden, m.seq_cap);
+        let mut metrics = GenMetrics::default();
+        self.gpu_pool.reset_peak();
+
+        // weights resident on device when not offloaded (latency regime)
+        let _resident = if !self.cfg.weights_offloaded {
+            Some(
+                self.gpu_pool
+                    .alloc(self.weights.total_bytes())
+                    .context("resident weights exceed device memory")?,
+            )
+        } else {
+            None
+        };
+
+        let t0 = Instant::now();
+        let mut last = self.prefill(&flat, b, sp, &mut cache)?;
+        metrics.prefill_s = t0.elapsed().as_secs_f64();
+
+        let mut tokens: Vec<Vec<i32>> = vec![Vec::with_capacity(gen_len); b];
+        for (i, tk) in tokens.iter_mut().enumerate() {
+            tk.push(last[i]);
+        }
+
+        let embed = self.runtime.artifact(&m.embed_decode_name(b))?;
+        let head = self.runtime.artifact(&m.lm_head_name(b))?;
+
+        let t_dec = Instant::now();
+        let mut store_handles: Vec<TransferHandle> = Vec::new();
+        for _step in 1..gen_len {
+            let kv_len = cache.seq_len();
+            let plan_l = planner
+                .as_ref()
+                .map(|p| p.plan_step(kv_len).l())
+                .unwrap_or(0);
+            metrics.splits.push(plan_l);
+
+            let t0 = Instant::now();
+            let x0 = embed.call(&[
+                ArgValue::I32Slice(&last),
+                ArgValue::I32(kv_len as i32),
+                ArgValue::F32(&self.weights.tok_table),
+                ArgValue::F32(&self.weights.pos_table),
+            ])?;
+            metrics.breakdown.other_s += t0.elapsed().as_secs_f64();
+            let mut x = x0.into_iter().next().unwrap();
+
+            // ALISA defers the remainder: issue only activations up front
+            let alisa = matches!(self.cfg.policy, EnginePolicy::AlisaSequential);
+
+            let mut pending: Option<LayerTransfers> = None;
+            if !alisa {
+                pending = Some(self.issue_layer(&cache, 0, plan_l));
+            }
+            for layer in 0..model.n_layers {
+                let t = if alisa {
+                    // sequential: ALISA issues a layer's transfers only when
+                    // it reaches the layer (no cross-layer prefetch); the
+                    // recompute-then-transfer serialisation inside the layer
+                    // is modelled faithfully in the simulator (sim::policies)
+                    // while the engine covers the no-intra-overlap ablation
+                    // via KvprFused.
+                    self.issue_layer(&cache, layer, plan_l)
+                } else {
+                    // prefetching policies filled this one layer ahead; the
+                    // synchronous baseline issues at the top of the layer
+                    pending
+                        .take()
+                        .unwrap_or_else(|| self.issue_layer(&cache, layer, plan_l))
+                };
+                // prefetch next layer (Algorithm 1: load(i+1) before compute(i))
+                if !alisa && self.cfg.policy.prefetches() && layer + 1 < model.n_layers {
+                    pending = Some(self.issue_layer(&cache, layer + 1, plan_l));
+                }
+
+                let (y, k_new, v_new) =
+                    self.run_layer(layer, b, &x, kv_len, t, &mut metrics.breakdown)?;
+
+                // store streams (Algorithm 1 store_*): host append + D2H timing
+                store_handles.push(self.d2h.submit_timing(3 * b * model.hidden, Priority::Normal));
+                cache.layer_mut(layer).append(&k_new, &v_new, &x)?;
+                x = y;
+
+                if !alisa && self.cfg.policy.prefetches() && layer + 1 == model.n_layers {
+                    // nothing pending into lm_head
+                }
+            }
+
+            let t0 = Instant::now();
+            let logits = head.call(&[
+                ArgValue::F32(&x),
+                ArgValue::F32(&self.weights.tok_table),
+                ArgValue::F32(&self.weights.lnf_g),
+                ArgValue::F32(&self.weights.lnf_b),
+            ])?;
+            metrics.breakdown.other_s += t0.elapsed().as_secs_f64();
+            last = RefModel::argmax(&logits[0], model.vocab);
+            for (i, tk) in tokens.iter_mut().enumerate() {
+                tk.push(last[i]);
+            }
+        }
+        for h in store_handles {
+            h.wait();
+        }
+        metrics.decode_s = t_dec.elapsed().as_secs_f64();
+        metrics.tokens_generated = (n_seqs * gen_len.saturating_sub(1)) as u64;
+        metrics.gpu_peak_bytes = self.gpu_pool.peak();
+        metrics.h2d_bytes = self.h2d.stats().total_bytes();
+        metrics.h2d_busy_s = self.h2d.stats().busy_secs();
+
+        tokens.truncate(n_seqs);
+        Ok(GenResult { tokens, metrics })
+    }
+
+    // ---------------------------------------------------------------------
+    // column-by-column generation (paper §3.2, throughput objective)
+    // ---------------------------------------------------------------------
+
+    /// Generate for `groups` batches, reusing each layer's weights across
+    /// the whole group before moving on (weights offloaded).  Every batch
+    /// must fit the same bucket.
+    pub fn generate_column(
+        &self,
+        groups: &[Vec<Vec<i32>>],
+        gen_len: usize,
+    ) -> Result<Vec<GenResult>> {
+        let m = self.runtime.manifest().clone();
+        let model = m.model.clone();
+        if groups.is_empty() {
+            return Ok(Vec::new());
+        }
+        let n_seqs = groups[0].len();
+        let b = m
+            .batch_bucket_for(n_seqs)
+            .context("no batch bucket for group size")?;
+        let max_prompt = groups
+            .iter()
+            .flat_map(|g| g.iter().map(|p| p.len()))
+            .max()
+            .unwrap_or(0);
+        let sp = m.prompt_bucket_for(max_prompt).context("no prompt bucket")?;
+        if sp + gen_len >= m.seq_cap {
+            bail!("prompt + gen exceeds capacity");
+        }
+
+        let planner = self
+            .cfg
+            .policy
+            .is_partial()
+            .then(|| self.planner(b, SchedulePolicy::ColumnByColumn));
+
+        // per-batch state
+        let n_batches = groups.len();
+        let mut caches: Vec<HostKvCache> = (0..n_batches)
+            .map(|_| HostKvCache::new(model.n_layers, b, model.hidden, m.seq_cap))
+            .collect();
+        let mut lasts: Vec<Vec<i32>> = Vec::with_capacity(n_batches);
+        let mut tokens: Vec<Vec<Vec<i32>>> =
+            vec![vec![Vec::with_capacity(gen_len); b]; n_batches];
+        let mut all_metrics: Vec<GenMetrics> = vec![GenMetrics::default(); n_batches];
+
+        let t0 = Instant::now();
+        for (g, group) in groups.iter().enumerate() {
+            let mut flat = Vec::with_capacity(b * sp);
+            for i in 0..b {
+                let src = group.get(i.min(group.len() - 1)).unwrap();
+                for j in 0..sp {
+                    flat.push(*src.get(j).unwrap_or(&258));
+                }
+            }
+            let first = self.prefill(&flat, b, sp, &mut caches[g])?;
+            for (i, tk) in tokens[g].iter_mut().enumerate() {
+                tk.push(first[i]);
+            }
+            lasts.push(first);
+        }
+        let prefill_s = t0.elapsed().as_secs_f64();
+        for gm in all_metrics.iter_mut() {
+            gm.prefill_s = prefill_s / n_batches as f64;
+        }
+
+        let embed = self.runtime.artifact(&m.embed_decode_name(b))?;
+        let head = self.runtime.artifact(&m.lm_head_name(b))?;
+
+        let t_dec = Instant::now();
+        for _step in 1..gen_len {
+            let kv_len = caches[0].seq_len();
+            let plan_l = planner
+                .as_ref()
+                .map(|p| p.plan_step(kv_len).l())
+                .unwrap_or(0);
+
+            // embed all batches for this step
+            let mut xs: Vec<Vec<f32>> = Vec::with_capacity(n_batches);
+            for g in 0..n_batches {
+                let x0 = embed.call(&[
+                    ArgValue::I32Slice(&lasts[g]),
+                    ArgValue::I32(kv_len as i32),
+                    ArgValue::F32(&self.weights.tok_table),
+                    ArgValue::F32(&self.weights.pos_table),
+                ])?;
+                xs.push(x0.into_iter().next().unwrap());
+            }
+
+            for layer in 0..model.n_layers {
+                // weights move once per layer (the column schedule's point)
+                if self.cfg.weights_offloaded {
+                    let lw = self.weights.layer(layer);
+                    let wh = self
+                        .h2d
+                        .submit_timing((lw.bytes() / 4) as usize, Priority::High);
+                    let t0 = Instant::now();
+                    wh.wait();
+                    all_metrics[0].breakdown.wait_weights_s += t0.elapsed().as_secs_f64();
+                }
+                // pipeline batches through this layer
+                let mut pending = Some(self.issue_layer(&caches[0], layer, plan_l));
+                for g in 0..n_batches {
+                    let t = pending.take().unwrap();
+                    if self.cfg.policy.prefetches() && g + 1 < n_batches {
+                        pending = Some(self.issue_layer(&caches[g + 1], layer, plan_l));
+                    }
+                    let (y, k_new, v_new) = self.run_layer(
+                        layer,
+                        b,
+                        &xs[g],
+                        kv_len,
+                        t,
+                        &mut all_metrics[g].breakdown,
+                    )?;
+                    self.d2h
+                        .submit_timing(3 * b * model.hidden, Priority::Normal);
+                    caches[g].layer_mut(layer).append(&k_new, &v_new, &xs[g])?;
+                    xs[g] = y;
+                    if pending.is_none() && g + 1 < n_batches {
+                        pending = Some(self.issue_layer(&caches[g + 1], layer, plan_l));
+                    }
+                }
+            }
+
+            for g in 0..n_batches {
+                let logits = head.call(&[
+                    ArgValue::F32(&xs[g]),
+                    ArgValue::F32(&self.weights.tok_table),
+                    ArgValue::F32(&self.weights.lnf_g),
+                    ArgValue::F32(&self.weights.lnf_b),
+                ])?;
+                lasts[g] = RefModel::argmax(&logits[0], model.vocab);
+                for (i, tk) in tokens[g].iter_mut().enumerate() {
+                    tk.push(lasts[g][i]);
+                }
+                all_metrics[g].splits.push(plan_l);
+            }
+        }
+        self.d2h.drain();
+        let decode_s = t_dec.elapsed().as_secs_f64();
+
+        let mut out = Vec::with_capacity(n_batches);
+        for (g, mut toks) in tokens.into_iter().enumerate() {
+            toks.truncate(groups[g].len());
+            let mut gm = std::mem::take(&mut all_metrics[g]);
+            gm.decode_s = decode_s; // group decodes are interleaved; report wall
+            gm.tokens_generated = (groups[g].len() * gen_len.saturating_sub(1)) as u64;
+            gm.gpu_peak_bytes = self.gpu_pool.peak();
+            out.push(GenResult { tokens: toks, metrics: gm });
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,33 @@
+//! The runtime module (paper §3.3): overlapped decode execution.
+//!
+//! The engine drives the AOT artifacts layer-by-layer so that KV-cache /
+//! activation / weight transfers interleave with compute exactly like the
+//! paper's six-stream pipeline (Algorithm 1):
+//!
+//! * **within a layer** (KVPR): the activation prefix `X[0:l]` is submitted
+//!   at high priority; as soon as it lands, the `recompute_*` artifact runs
+//!   on the compute thread *while the link is still streaming* `KV[l:s']`;
+//!   the `decode_merge_*` artifact then consumes both.
+//! * **across layers**: transfers for layer i+1 are issued before layer i's
+//!   compute (double buffering / prefetch).
+//! * **weights** (offloaded mode): per-layer weight traffic, optionally
+//!   fine-grained — W_K/W_V jump the queue so recomputation is not blocked
+//!   behind W_Q/W_O (paper Fig 5b, "hiding KV cache partial recomputation").
+//!
+//! Five policies make the paper's baselines runnable on the same engine:
+//! `FullTransferSync` (HF-Accelerate-like), `FullTransferOverlap`
+//! (FlexGen-like), `Kvpr` (split schedule), `KvprFused` (single fused
+//! artifact — no intra-layer overlap; ablation), and `AlisaSequential`
+//! (recompute **then** transfer, the ALISA §5 comparison).
+//!
+//! All policies produce **identical tokens** — the schedules move bytes and
+//! kernels around, never the math.
+
+mod decode;
+mod stage;
+
+pub use decode::{Engine, EngineConfig, EnginePolicy, GenMetrics, GenResult};
+pub use stage::Breakdown;
+
+#[doc(hidden)]
+pub use stage::stage_padded as stage_padded_for_bench;

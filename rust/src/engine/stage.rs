@@ -1,0 +1,127 @@
+//! Staging helpers: seq-major host rows → padded `[batch, seq, hidden]`
+//! artifact inputs, plus the per-component time breakdown (Fig 10).
+
+/// Scatter `n_rows` seq-major rows (layout `[seq][batch*hidden]`) into a
+/// zero-padded `[batch, rows_per_batch, hidden]` buffer.
+pub fn stage_padded(
+    rows_data: &[f32],
+    n_rows: usize,
+    batch: usize,
+    hidden: usize,
+    rows_per_batch: usize,
+    out: &mut Vec<f32>,
+) {
+    assert!(n_rows <= rows_per_batch, "{n_rows} > {rows_per_batch}");
+    assert_eq!(rows_data.len(), n_rows * batch * hidden);
+    out.clear();
+    out.resize(batch * rows_per_batch * hidden, 0.0);
+    for b in 0..batch {
+        for s in 0..n_rows {
+            let src = s * batch * hidden + b * hidden;
+            let dst = (b * rows_per_batch + s) * hidden;
+            out[dst..dst + hidden].copy_from_slice(&rows_data[src..src + hidden]);
+        }
+    }
+}
+
+/// Where a decode step's wall-clock went — the engine-level analogue of the
+/// paper's Fig 10 runtime breakdown.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Breakdown {
+    /// Blocked on weight transfer.
+    pub wait_weights_s: f64,
+    /// Blocked on the activation prefix.
+    pub wait_act_s: f64,
+    /// Blocked on KV-cache transfer.
+    pub wait_kv_s: f64,
+    /// Running the recompute artifact.
+    pub recompute_s: f64,
+    /// Running attention + FFN (merge/full artifacts).
+    pub attn_ffn_s: f64,
+    /// Everything else (embed, lm_head, staging, stores).
+    pub other_s: f64,
+}
+
+impl Breakdown {
+    pub fn total(&self) -> f64 {
+        self.wait_weights_s
+            + self.wait_act_s
+            + self.wait_kv_s
+            + self.recompute_s
+            + self.attn_ffn_s
+            + self.other_s
+    }
+
+    pub fn add(&mut self, other: &Breakdown) {
+        self.wait_weights_s += other.wait_weights_s;
+        self.wait_act_s += other.wait_act_s;
+        self.wait_kv_s += other.wait_kv_s;
+        self.recompute_s += other.recompute_s;
+        self.attn_ffn_s += other.attn_ffn_s;
+        self.other_s += other.other_s;
+    }
+
+    /// Fraction of the step the "GPU" (compute thread) was doing useful
+    /// work rather than waiting on the link — Fig 8's utilization line.
+    pub fn compute_utilization(&self) -> f64 {
+        let busy = self.recompute_s + self.attn_ffn_s + self.other_s;
+        let total = self.total();
+        if total == 0.0 {
+            0.0
+        } else {
+            busy / total
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_transposes_and_pads() {
+        // 2 rows, batch 2, hidden 2 → pad to 3 rows/batch
+        // seq-major rows: row0 = [b0: 1,2 | b1: 3,4], row1 = [b0: 5,6 | b1: 7,8]
+        let rows = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        let mut out = Vec::new();
+        stage_padded(&rows, 2, 2, 2, 3, &mut out);
+        assert_eq!(
+            out,
+            vec![
+                1.0, 2.0, 5.0, 6.0, 0.0, 0.0, // batch 0: row0, row1, pad
+                3.0, 4.0, 7.0, 8.0, 0.0, 0.0, // batch 1
+            ]
+        );
+    }
+
+    #[test]
+    fn stage_zero_rows_is_all_padding() {
+        let mut out = vec![9.0; 4];
+        stage_padded(&[], 0, 1, 2, 2, &mut out);
+        assert_eq!(out, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn stage_reuses_buffer_capacity() {
+        let rows = vec![1.0; 8];
+        let mut out = Vec::with_capacity(64);
+        let cap = out.capacity();
+        stage_padded(&rows, 2, 2, 2, 4, &mut out);
+        assert_eq!(out.len(), 16);
+        assert_eq!(out.capacity(), cap, "no reallocation");
+    }
+
+    #[test]
+    fn breakdown_utilization() {
+        let b = Breakdown {
+            wait_weights_s: 0.0,
+            wait_act_s: 0.1,
+            wait_kv_s: 0.3,
+            recompute_s: 0.2,
+            attn_ffn_s: 0.3,
+            other_s: 0.1,
+        };
+        assert!((b.total() - 1.0).abs() < 1e-12);
+        assert!((b.compute_utilization() - 0.6).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,30 @@
+// quick smoke: generate 6 tokens with Kvpr vs FullTransferOverlap, compare tokens
+use kvpr::engine::{Engine, EngineConfig, EnginePolicy};
+use kvpr::transfer::LinkConfig;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new("artifacts");
+    let mk = |p| {
+        let mut c = EngineConfig::new(p);
+        c.link = LinkConfig { bytes_per_sec: 30e6, latency_s: 100e-6, chunk_bytes: 16 << 10 };
+        c
+    };
+    let prompts: Vec<Vec<i32>> = vec![
+        kvpr::model::ByteTokenizer::new().encode("the quick brown fox", 32),
+        kvpr::model::ByteTokenizer::new().encode("kv cache partial recomputation", 32),
+    ];
+    let t0 = std::time::Instant::now();
+    let e1 = Engine::new(dir, mk(EnginePolicy::Kvpr))?;
+    println!("engine init {:.2}s, profile {:?}", t0.elapsed().as_secs_f64(), e1.profile());
+    let t0 = std::time::Instant::now();
+    let r1 = e1.generate(&prompts, 8)?;
+    println!("kvpr gen {:.2}s decode {:.3}s splits {:?}", t0.elapsed().as_secs_f64(), r1.metrics.decode_s, r1.metrics.splits);
+    let e2 = Engine::new(dir, mk(EnginePolicy::FullTransferOverlap))?;
+    let r2 = e2.generate(&prompts, 8)?;
+    println!("full decode {:.3}s", r2.metrics.decode_s);
+    assert_eq!(r1.tokens, r2.tokens, "tokens must be identical");
+    println!("tokens identical: {:?}", r1.tokens[0]);
+    println!("breakdown kvpr {:?}", r1.metrics.breakdown);
+    Ok(())
+}

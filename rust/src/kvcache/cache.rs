@@ -1,0 +1,273 @@
+//! Per-sequence-batch host store: K, V and input activations X per layer.
+//!
+//! Layout per layer: row-major `[seq, batch*hidden]`-style flattening —
+//! concretely each of K/V/X is a `Vec<f32>` of capacity `cap * row` where
+//! `row = batch * hidden` and rows `[0, len)` are valid.  Row granularity is
+//! what the engine's split views hand to the link: `X[0:l]` (activations to
+//! recompute from) and `KV[l:len]` (the transferred remainder).
+//!
+//! NOTE the artifact expects `[batch, seq, hidden]`; the engine transposes
+//! at staging time via [`LayerState::rows_to_bsh`].  Keeping the host layout
+//! seq-major makes the split views contiguous, which is what lets the link
+//! stream them without gather overhead — the Rust analogue of the paper
+//! storing the KV cache contiguously per token.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+/// K/V/X store for one layer of one running batch.
+#[derive(Debug, Clone)]
+pub struct LayerState {
+    batch: usize,
+    hidden: usize,
+    cap: usize,
+    len: usize,
+    k: Arc<Vec<f32>>,
+    v: Arc<Vec<f32>>,
+    x: Arc<Vec<f32>>,
+}
+
+impl LayerState {
+    fn row(&self) -> usize {
+        self.batch * self.hidden
+    }
+
+    /// Valid sequence length (the paper's s').
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Bytes a full-KV transfer would move (2 segments × len rows).
+    pub fn kv_bytes(&self) -> u64 {
+        (2 * self.len * self.row() * 4) as u64
+    }
+
+    /// Shared handles for zero-copy link submission.
+    pub fn k_arc(&self) -> Arc<Vec<f32>> {
+        self.k.clone()
+    }
+
+    pub fn v_arc(&self) -> Arc<Vec<f32>> {
+        self.v.clone()
+    }
+
+    pub fn x_arc(&self) -> Arc<Vec<f32>> {
+        self.x.clone()
+    }
+
+    /// Element range (into the k/v arcs) covering rows [lo, hi).
+    pub fn rows(&self, lo: usize, hi: usize) -> std::ops::Range<usize> {
+        assert!(lo <= hi && hi <= self.len, "rows {lo}..{hi} of {}", self.len);
+        lo * self.row()..hi * self.row()
+    }
+
+    /// Transpose seq-major rows `[rows, batch, hidden]` → `[batch, seq, hidden]`
+    /// into `out` (artifact input layout). `rows_data` must hold `n_rows`
+    /// contiguous rows as returned by a link transfer of [`Self::rows`].
+    pub fn rows_to_bsh(&self, rows_data: &[f32], n_rows: usize, out: &mut Vec<f32>) {
+        assert_eq!(rows_data.len(), n_rows * self.row());
+        out.clear();
+        out.reserve(n_rows * self.row());
+        for b in 0..self.batch {
+            for s in 0..n_rows {
+                let base = s * self.row() + b * self.hidden;
+                out.extend_from_slice(&rows_data[base..base + self.hidden]);
+            }
+        }
+    }
+
+    /// Append one token row per sequence. `k_new`/`v_new`/`x_new` are
+    /// `[batch, 1, hidden]` (artifact output layout == one seq-major row).
+    pub fn append(&mut self, k_new: &[f32], v_new: &[f32], x_new: &[f32]) -> Result<()> {
+        let row = self.row();
+        if k_new.len() != row || v_new.len() != row || x_new.len() != row {
+            bail!("append row size mismatch: {} vs {}", k_new.len(), row);
+        }
+        if self.len >= self.cap {
+            bail!("layer cache full: len {} == cap {}", self.len, self.cap);
+        }
+        let off = self.len * row;
+        Arc::make_mut(&mut self.k)[off..off + row].copy_from_slice(k_new);
+        Arc::make_mut(&mut self.v)[off..off + row].copy_from_slice(v_new);
+        Arc::make_mut(&mut self.x)[off..off + row].copy_from_slice(x_new);
+        self.len += 1;
+        Ok(())
+    }
+
+    /// Bulk-load prefill results. `k`/`v`/`x` are `[batch, s_p, hidden]`
+    /// (artifact output layout); stored transposed to seq-major rows.
+    pub fn load_prefill(&mut self, k: &[f32], v: &[f32], x: &[f32], s_p: usize) -> Result<()> {
+        let row = self.row();
+        if k.len() != s_p * row {
+            bail!("prefill size mismatch: {} vs {}", k.len(), s_p * row);
+        }
+        if s_p > self.cap {
+            bail!("prefill longer than capacity");
+        }
+        let kd = Arc::make_mut(&mut self.k);
+        let vd = Arc::make_mut(&mut self.v);
+        let xd = Arc::make_mut(&mut self.x);
+        for b in 0..self.batch {
+            for s in 0..s_p {
+                let src = (b * s_p + s) * self.hidden;
+                let dst = s * row + b * self.hidden;
+                kd[dst..dst + self.hidden].copy_from_slice(&k[src..src + self.hidden]);
+                vd[dst..dst + self.hidden].copy_from_slice(&v[src..src + self.hidden]);
+                xd[dst..dst + self.hidden].copy_from_slice(&x[src..src + self.hidden]);
+            }
+        }
+        self.len = s_p;
+        Ok(())
+    }
+}
+
+/// All layers of one running batch.
+#[derive(Debug, Clone)]
+pub struct HostKvCache {
+    layers: Vec<LayerState>,
+}
+
+impl HostKvCache {
+    /// Allocate a cache of `n_layers`, each with row capacity `cap`.
+    pub fn new(n_layers: usize, batch: usize, hidden: usize, cap: usize) -> Self {
+        let mk = || LayerState {
+            batch,
+            hidden,
+            cap,
+            len: 0,
+            k: Arc::new(vec![0.0; cap * batch * hidden]),
+            v: Arc::new(vec![0.0; cap * batch * hidden]),
+            x: Arc::new(vec![0.0; cap * batch * hidden]),
+        };
+        HostKvCache { layers: (0..n_layers).map(|_| mk()).collect() }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn layer(&self, i: usize) -> &LayerState {
+        &self.layers[i]
+    }
+
+    pub fn layer_mut(&mut self, i: usize) -> &mut LayerState {
+        &mut self.layers[i]
+    }
+
+    /// Current sequence length (identical across layers by construction).
+    pub fn seq_len(&self) -> usize {
+        self.layers.first().map_or(0, |l| l.len())
+    }
+
+    /// Total host bytes held (K + V + X across layers, valid rows only).
+    pub fn host_bytes(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| (3 * l.len() * l.batch * l.hidden * 4) as u64)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn poke(cache: &mut HostKvCache, layer: usize, val: f32) {
+        let l = cache.layer(layer);
+        let row = l.batch * l.hidden;
+        let k: Vec<f32> = (0..row).map(|i| val + i as f32).collect();
+        let v: Vec<f32> = (0..row).map(|i| -val - i as f32).collect();
+        let x: Vec<f32> = (0..row).map(|i| val * 2.0 + i as f32).collect();
+        cache.layer_mut(layer).append(&k, &v, &x).unwrap();
+    }
+
+    #[test]
+    fn append_and_views() {
+        let mut c = HostKvCache::new(2, 2, 4, 8);
+        poke(&mut c, 0, 1.0);
+        poke(&mut c, 0, 100.0);
+        let l = c.layer(0);
+        assert_eq!(l.len(), 2);
+        let r = l.rows(0, 2);
+        assert_eq!(r, 0..16);
+        assert_eq!(l.k_arc()[0], 1.0);
+        assert_eq!(l.k_arc()[8], 100.0); // second row
+        assert_eq!(l.kv_bytes(), 2 * 2 * 8 * 4);
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let mut c = HostKvCache::new(1, 1, 2, 2);
+        poke(&mut c, 0, 0.0);
+        poke(&mut c, 0, 0.0);
+        let l = c.layer(0);
+        assert_eq!(l.len(), 2);
+        let row = vec![0.0; 2];
+        assert!(c.layer_mut(0).append(&row, &row, &row).is_err());
+    }
+
+    #[test]
+    fn row_size_checked() {
+        let mut c = HostKvCache::new(1, 2, 4, 4);
+        let bad = vec![0.0; 3];
+        let good = vec![0.0; 8];
+        assert!(c.layer_mut(0).append(&bad, &good, &good).is_err());
+    }
+
+    #[test]
+    fn prefill_roundtrip_transpose() {
+        // load [batch, s_p, hidden] then read back seq-major rows and convert
+        let mut c = HostKvCache::new(1, 2, 3, 8);
+        let s_p = 2;
+        // batch-major input: b0s0=[0,1,2] b0s1=[3,4,5] b1s0=[6,7,8] b1s1=[9,10,11]
+        let data: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        c.layer_mut(0).load_prefill(&data, &data, &data, s_p).unwrap();
+        let l = c.layer(0);
+        assert_eq!(l.len(), 2);
+        // seq-major row 0 = [b0s0, b1s0] = [0,1,2, 6,7,8]
+        let k = l.k_arc();
+        assert_eq!(&k[0..6], &[0.0, 1.0, 2.0, 6.0, 7.0, 8.0]);
+        // convert back to [batch, seq, hidden]
+        let mut out = Vec::new();
+        l.rows_to_bsh(&k[l.rows(0, 2)], 2, &mut out);
+        assert_eq!(out, data);
+    }
+
+    #[test]
+    fn split_views_partition_the_cache() {
+        let mut c = HostKvCache::new(1, 1, 4, 16);
+        for i in 0..10 {
+            poke(&mut c, 0, i as f32);
+        }
+        let l = c.layer(0);
+        let a = l.rows(0, 4);
+        let b = l.rows(4, 10);
+        assert_eq!(a.end, b.start);
+        assert_eq!(b.end, 10 * 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "rows")]
+    fn view_beyond_len_panics() {
+        let c = HostKvCache::new(1, 1, 4, 16);
+        let _ = c.layer(0).rows(0, 1); // len == 0
+    }
+
+    #[test]
+    fn host_bytes_counts_kvx() {
+        let mut c = HostKvCache::new(2, 1, 4, 8);
+        poke(&mut c, 0, 0.0);
+        poke(&mut c, 1, 0.0);
+        // 2 layers × 1 row × (3 tensors × 4 f32 × 4 bytes)
+        assert_eq!(c.host_bytes(), 2 * 3 * 4 * 4);
+    }
+}

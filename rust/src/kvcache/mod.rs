@@ -1,0 +1,11 @@
+//! Host-side KV-cache and activation management.
+//!
+//! In the offloaded regime the KV cache (and, for KVPR, the per-layer input
+//! activations it is recomputed from) live in CPU DRAM; the engine requests
+//! split views of them for transfer.  Group-wise 4-bit quantization (paper
+//! §4.4) compresses the transferred remainder on the wire.
+
+mod cache;
+pub mod quant;
+
+pub use cache::{HostKvCache, LayerState};

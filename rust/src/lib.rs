@@ -1,0 +1,65 @@
+//! # KVPR — I/O-Aware LLM Inference with KV Cache Partial Recomputation
+//!
+//! Reproduction of *"KVPR: Efficient LLM Inference with I/O-Aware KV Cache
+//! Partial Recomputation"* (Jiang & Gao et al., ACL Findings 2025).
+//!
+//! The library is organised as the paper's three modules plus the substrates
+//! they depend on:
+//!
+//! * [`profiler`] — measures link bandwidth and compute speed of the system
+//!   (paper §3.1, "profiler module").
+//! * [`scheduler`] — solves the integer linear program of Eq. (11) for the
+//!   optimal KV-cache split point `l`, and builds row-by-row /
+//!   column-by-column execution plans (paper §3.2).
+//! * [`engine`] — the runtime module (paper §3.3): overlapped execution of
+//!   transfer and recomputation with double buffering, pinned-memory pools
+//!   and the fine-grained W_K/W_V-first MHA pipeline.
+//! * [`coordinator`] — serving front end: request queue, dynamic batcher and
+//!   decode loop driving the engine.
+//! * [`runtime`] — PJRT client wrapper that loads the AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) and executes them on the hot path.
+//! * [`transfer`] — emulated CPU↔GPU PCIe link: a bandwidth-throttled copy
+//!   engine with ordered streams and pinned host memory.
+//! * [`memory`], [`kvcache`], [`model`] — device/host pools, the KV-cache
+//!   manager (including group-wise 4-bit quantization) and the model-weight
+//!   store.
+//! * [`sim`] — discrete-event simulator of the paper's testbeds (A100 +
+//!   PCIe 4.0 x16, RTX 5000 + x8) used to regenerate every table and figure
+//!   of the evaluation at paper scale.
+//!
+//! Python/JAX/Pallas participate only at build time (`make artifacts`); the
+//! request path is pure Rust + PJRT.
+
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod kvcache;
+pub mod memory;
+pub mod model;
+pub mod paper;
+pub mod profiler;
+pub mod runtime;
+pub mod scheduler;
+pub mod sim;
+pub mod transfer;
+pub mod util;
+
+pub use config::{HardwareConfig, ModelConfig, WorkloadConfig};
+pub use scheduler::{SchedulePolicy, Scheduler, SplitSolver};
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Bench-only re-export of the staging transpose (the engine keeps it
+/// private; `benches/perf_hotpath.rs` times it in isolation).
+#[doc(hidden)]
+pub fn engine_stage_padded_bench(
+    rows_data: &[f32],
+    n_rows: usize,
+    batch: usize,
+    hidden: usize,
+    rows_per_batch: usize,
+    out: &mut Vec<f32>,
+) {
+    engine::stage_padded_for_bench(rows_data, n_rows, batch, hidden, rows_per_batch, out)
+}

@@ -1,0 +1,236 @@
+//! `kvpr` — CLI for the KVPR reproduction.
+//!
+//! Subcommands:
+//!   generate  — run the real engine on a prompt (row-by-row)
+//!   serve     — start the coordinator and replay a synthetic request trace
+//!   sim       — simulate a paper-scale configuration and print the report
+//!   plan      — print the LP's split-point trajectory (Fig 12 style)
+//!   profile   — calibrate the local emulated link + recompute artifacts
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use kvpr::config::{HardwareConfig, ModelConfig, WorkloadConfig};
+use kvpr::coordinator::{Batcher, Server, ServerConfig};
+use kvpr::engine::{Engine, EngineConfig, EnginePolicy};
+use kvpr::model::ByteTokenizer;
+use kvpr::profiler::SystemProfile;
+use kvpr::scheduler::{CostModel, Planner, SchedulePolicy};
+use kvpr::sim::{simulate_decode, Policy, RunConfig};
+use kvpr::transfer::{Link, LinkConfig};
+use kvpr::util::table::Table;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Tiny flag parser: `--key value` pairs after the subcommand.
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut map = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                map.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                map.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    map
+}
+
+fn flag<T: std::str::FromStr>(f: &HashMap<String, String>, key: &str, default: T) -> T {
+    f.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn engine_policy(name: &str) -> Result<EnginePolicy> {
+    Ok(match name {
+        "kvpr" => EnginePolicy::Kvpr,
+        "kvpr-fused" => EnginePolicy::KvprFused,
+        "full" | "accelerate" => EnginePolicy::FullTransferSync,
+        "full-overlap" | "flexgen" => EnginePolicy::FullTransferOverlap,
+        "alisa" => EnginePolicy::AlisaSequential,
+        other => bail!("unknown engine policy '{other}'"),
+    })
+}
+
+fn sim_policy(name: &str) -> Result<Policy> {
+    Ok(match name {
+        "kvpr" => Policy::Kvpr,
+        "kvpr-nohide" => Policy::KvprNoHide,
+        "flexgen" => Policy::FlexGen,
+        "accelerate" => Policy::Accelerate,
+        "deepspeed" => Policy::DeepSpeed,
+        "alisa" => Policy::AlisaLike,
+        "fastdecode" => Policy::FastDecode,
+        other => bail!("unknown sim policy '{other}'"),
+    })
+}
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        print_help();
+        return Ok(());
+    };
+    let flags = parse_flags(&argv[1..]);
+    let artifacts = flags
+        .get("artifacts")
+        .cloned()
+        .unwrap_or_else(|| "artifacts".to_string());
+
+    match cmd.as_str() {
+        "generate" => {
+            let prompt = flags
+                .get("prompt")
+                .cloned()
+                .unwrap_or_else(|| "the quick brown fox".into());
+            let gen_len: usize = flag(&flags, "gen", 16);
+            let bw: f64 = flag(&flags, "bandwidth-mbps", 30.0) * 1e6;
+            let policy = engine_policy(flags.get("policy").map(|s| s.as_str()).unwrap_or("kvpr"))?;
+            let mut cfg = EngineConfig::new(policy);
+            cfg.link = LinkConfig::with_bandwidth(bw);
+            let engine = Engine::new(Path::new(&artifacts), cfg)?;
+            let tok = ByteTokenizer::new();
+            let ids = vec![tok.encode(&prompt, 32)];
+            let r = engine.generate(&ids, gen_len)?;
+            println!("prompt:  {prompt}");
+            println!("output:  {:?}", tok.decode(&r.tokens[0]));
+            println!("tokens:  {:?}", r.tokens[0]);
+            println!("splits:  {:?}", r.metrics.splits);
+            println!(
+                "prefill {:.3}s  decode {:.3}s  ({:.1} tok/s)",
+                r.metrics.prefill_s,
+                r.metrics.decode_s,
+                r.metrics.decode_tok_per_s()
+            );
+            println!("breakdown: {:?}", r.metrics.breakdown);
+        }
+        "serve" => {
+            let n_req: usize = flag(&flags, "requests", 8);
+            let gen_len: usize = flag(&flags, "gen", 12);
+            let bw: f64 = flag(&flags, "bandwidth-mbps", 30.0) * 1e6;
+            let policy = engine_policy(flags.get("policy").map(|s| s.as_str()).unwrap_or("kvpr"))?;
+            let mut ecfg = EngineConfig::new(policy);
+            ecfg.link = LinkConfig::with_bandwidth(bw);
+            let mut scfg = ServerConfig::new(&artifacts, ecfg);
+            scfg.batcher = Batcher::new(flag(&flags, "max-batch", 4), Duration::from_millis(25));
+            let server = Server::start(scfg)?;
+            let prompts = [
+                "the quick brown fox",
+                "kv cache partial recomputation",
+                "pcie is the bottleneck",
+                "overlap compute and transfer",
+            ];
+            let handles: Vec<_> = (0..n_req)
+                .map(|i| server.submit(prompts[i % prompts.len()], gen_len))
+                .collect();
+            for (i, h) in handles.into_iter().enumerate() {
+                let r = h.wait()?;
+                println!(
+                    "req {i}: queue {:.3}s decode {:.3}s total {:.3}s  text {:?}",
+                    r.queue_s, r.decode_s, r.total_s, r.text
+                );
+            }
+            let (mean, p50, p99) = server.metrics().latency_stats();
+            println!(
+                "served {} requests in {} batches | latency mean {:.3}s p50 {:.3}s p99 {:.3}s | {:.1} tok/s",
+                server.metrics().requests(),
+                server.metrics().batches(),
+                mean,
+                p50,
+                p99,
+                server.metrics().tok_per_s()
+            );
+            server.shutdown()?;
+        }
+        "sim" => {
+            let model = ModelConfig::by_name(&flag::<String>(&flags, "model", "opt-6.7b".into()))
+                .context("unknown model")?;
+            let hw = HardwareConfig::by_name(&flag::<String>(&flags, "hw", "a100".into()))
+                .context("unknown hardware")?;
+            let policy = sim_policy(&flag::<String>(&flags, "policy", "kvpr".into()))?;
+            let prompt: usize = flag(&flags, "prompt", 512);
+            let gen: usize = flag(&flags, "gen", 32);
+            let objective: String = flag(&flags, "objective", "throughput".into());
+            let wl = match objective.as_str() {
+                "latency" => WorkloadConfig::latency_oriented(prompt, gen),
+                _ => WorkloadConfig::throughput_oriented(prompt, gen),
+            };
+            let report = simulate_decode(&RunConfig::new(model.clone(), hw.clone(), wl, policy));
+            let mut t = Table::new(
+                &format!("sim: {} on {} [{}]", model.name, hw.name, policy.name()),
+                &["metric", "value"],
+            );
+            t.row(&["decode (s)".into(), format!("{:.3}", report.decode_s)]);
+            t.row(&["tokens/s".into(), format!("{:.1}", report.tok_per_s)]);
+            t.row(&["gpu util".into(), format!("{:.1}%", report.gpu_util * 100.0)]);
+            t.row(&["link util".into(), format!("{:.1}%", report.link_util * 100.0)]);
+            t.row(&[
+                "peak mem".into(),
+                kvpr::util::fmt_bytes(report.peak_gpu_bytes),
+            ]);
+            t.row(&["tasks".into(), report.n_tasks.to_string()]);
+            println!("{}", t.render());
+        }
+        "plan" => {
+            let model = ModelConfig::by_name(&flag::<String>(&flags, "model", "opt-6.7b".into()))
+                .context("unknown model")?;
+            let hw = HardwareConfig::by_name(&flag::<String>(&flags, "hw", "a100".into()))
+                .context("unknown hardware")?;
+            let batch: usize = flag(&flags, "batch", 64);
+            let prompt: usize = flag(&flags, "prompt", 128);
+            let gen: usize = flag(&flags, "gen", 32);
+            let cost = CostModel::from_hardware(&hw, &model, batch);
+            let planner = Planner::new(cost, SchedulePolicy::RowByRow, vec![], prompt);
+            let traj = planner.split_trajectory(prompt, gen);
+            println!("optimal split l* per generated token (prompt {prompt}, batch {batch}):");
+            println!("{traj:?}");
+        }
+        "profile" => {
+            let bw: f64 = flag(&flags, "bandwidth-mbps", 30.0) * 1e6;
+            let link = Link::new(LinkConfig::with_bandwidth(bw));
+            let runtime = kvpr::runtime::Runtime::load(Path::new(&artifacts))?;
+            let p = SystemProfile::measure(&link, &runtime, 4)?;
+            println!("{p:#?}");
+            let cm = p.cost_model(&runtime.manifest().model);
+            println!("cost model: {cm:#?}");
+            println!("A/C ratio: {:.3}", cm.recompute_to_transfer_ratio());
+        }
+        "help" | "--help" | "-h" => print_help(),
+        other => bail!("unknown command '{other}' (try `kvpr help`)"),
+    }
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        "kvpr — I/O-aware LLM inference with KV cache partial recomputation (ACL 2025 reproduction)
+
+USAGE: kvpr <command> [--flag value ...]
+
+COMMANDS
+  generate  --prompt <text> --gen <n> --policy kvpr|full|full-overlap|kvpr-fused|alisa
+            --bandwidth-mbps <mb>        run the real engine on one prompt
+  serve     --requests <n> --gen <n> --max-batch <n> --policy ...
+                                         start the coordinator, replay a trace
+  sim       --model opt-6.7b|opt-13b|opt-30b|llama2-7b|llama2-13b
+            --hw a100|rtx5000 --policy kvpr|flexgen|accelerate|deepspeed|alisa|fastdecode
+            --prompt <n> --gen <n> --objective latency|throughput
+                                         paper-scale simulation report
+  plan      --model ... --hw ... --batch <n> --prompt <n> --gen <n>
+                                         print the LP split trajectory (Fig 12)
+  profile   --bandwidth-mbps <mb>        calibrate link + recompute artifacts"
+    );
+}

@@ -1,0 +1,12 @@
+//! Host/device memory accounting.
+//!
+//! The paper reports GPU *peak* memory alongside latency (Tables 3–4) and
+//! plots the memory line in Fig 8; this module is the bookkeeping that makes
+//! those numbers reproducible.  Buffers themselves are plain `Vec<f32>`s in
+//! host RAM (the "device" is the PJRT CPU client), but every allocation on
+//! the emulated device goes through [`MemPool`] so capacity limits and peak
+//! usage behave like the real 40 GB HBM.
+
+mod pool;
+
+pub use pool::{MemPool, PoolGuard};

@@ -1,0 +1,166 @@
+//! Byte-accounted memory pool with capacity enforcement and peak tracking.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+/// A named pool ("gpu-hbm", "cpu-dram", "pinned") tracking used/peak bytes.
+/// Clone-cheap (Arc-shared): the engine's threads account into one pool.
+#[derive(Debug, Clone)]
+pub struct MemPool {
+    inner: Arc<Inner>,
+}
+
+#[derive(Debug)]
+struct Inner {
+    name: String,
+    capacity: u64,
+    used: AtomicU64,
+    peak: AtomicU64,
+}
+
+impl MemPool {
+    pub fn new(name: &str, capacity_bytes: u64) -> Self {
+        MemPool {
+            inner: Arc::new(Inner {
+                name: name.to_string(),
+                capacity: capacity_bytes,
+                used: AtomicU64::new(0),
+                peak: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.inner.name
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.inner.capacity
+    }
+
+    pub fn used(&self) -> u64 {
+        self.inner.used.load(Ordering::Relaxed)
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.inner.peak.load(Ordering::Relaxed)
+    }
+
+    pub fn available(&self) -> u64 {
+        self.capacity().saturating_sub(self.used())
+    }
+
+    /// Reserve `bytes`; fails when the pool would exceed capacity — this is
+    /// how "KV cache no longer fits on the GPU" manifests in the engine.
+    pub fn alloc(&self, bytes: u64) -> Result<PoolGuard> {
+        let prev = self.inner.used.fetch_add(bytes, Ordering::SeqCst);
+        if prev + bytes > self.inner.capacity {
+            self.inner.used.fetch_sub(bytes, Ordering::SeqCst);
+            bail!(
+                "pool '{}' exhausted: want {} but only {} of {} free",
+                self.inner.name,
+                bytes,
+                self.inner.capacity - prev.min(self.inner.capacity),
+                self.inner.capacity
+            );
+        }
+        self.inner.peak.fetch_max(prev + bytes, Ordering::SeqCst);
+        Ok(PoolGuard { pool: self.clone(), bytes })
+    }
+
+    /// Reset the peak marker (between bench phases).
+    pub fn reset_peak(&self) {
+        self.inner.peak.store(self.used(), Ordering::SeqCst);
+    }
+
+    fn release(&self, bytes: u64) {
+        self.inner.used.fetch_sub(bytes, Ordering::SeqCst);
+    }
+}
+
+/// RAII reservation; dropping returns the bytes to the pool.
+#[derive(Debug)]
+pub struct PoolGuard {
+    pool: MemPool,
+    bytes: u64,
+}
+
+impl PoolGuard {
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+}
+
+impl Drop for PoolGuard {
+    fn drop(&mut self) {
+        self.pool.release(self.bytes);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_cycle() {
+        let p = MemPool::new("t", 100);
+        let g1 = p.alloc(60).unwrap();
+        assert_eq!(p.used(), 60);
+        let g2 = p.alloc(40).unwrap();
+        assert_eq!(p.used(), 100);
+        assert_eq!(p.available(), 0);
+        drop(g1);
+        assert_eq!(p.used(), 40);
+        drop(g2);
+        assert_eq!(p.used(), 0);
+        assert_eq!(p.peak(), 100);
+    }
+
+    #[test]
+    fn over_capacity_fails_cleanly() {
+        let p = MemPool::new("t", 100);
+        let _g = p.alloc(80).unwrap();
+        assert!(p.alloc(30).is_err());
+        // failed alloc must not leak accounting
+        assert_eq!(p.used(), 80);
+        assert!(p.alloc(20).is_ok());
+    }
+
+    #[test]
+    fn peak_tracks_high_water_mark() {
+        let p = MemPool::new("t", 1000);
+        {
+            let _a = p.alloc(700).unwrap();
+        }
+        let _b = p.alloc(100).unwrap();
+        assert_eq!(p.peak(), 700);
+        p.reset_peak();
+        assert_eq!(p.peak(), 100);
+    }
+
+    #[test]
+    fn concurrent_alloc_respects_capacity() {
+        let p = MemPool::new("t", 1000);
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let p = p.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut ok = 0;
+                for _ in 0..100 {
+                    if let Ok(g) = p.alloc(10) {
+                        std::hint::black_box(&g);
+                        ok += 1;
+                    }
+                }
+                ok
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(p.used(), 0);
+        assert!(p.peak() <= 1000);
+    }
+}

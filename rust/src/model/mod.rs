@@ -1,0 +1,11 @@
+//! Model-side substrates: deterministic weight generation, a byte-level
+//! tokenizer, and a pure-Rust reference implementation of the decoder-layer
+//! math used to cross-check the PJRT artifacts (Rust↔JAX parity).
+
+mod reference;
+mod tokenizer;
+mod weights;
+
+pub use reference::RefModel;
+pub use tokenizer::ByteTokenizer;
+pub use weights::{LayerWeights, ModelWeights, LAYER_WEIGHT_NAMES};

@@ -1,0 +1,463 @@
+//! Pure-Rust reference implementation of the tiny model.
+//!
+//! Mirrors `python/compile/model.py` operation-for-operation (layernorm eps,
+//! head split, contiguous-prefix cache update, causal prefill) so the
+//! integration tests can check that what the PJRT artifacts compute is what
+//! the math says — Rust↔JAX parity with no Python on the judging side.
+//!
+//! All tensors are flat `Vec<f32>` in `[batch, seq, hidden]` layout, exactly
+//! the artifact I/O layout.
+
+use crate::model::weights::ModelWeights;
+
+const LN_EPS: f32 = 1e-5;
+const NEG_INF: f32 = -1e30;
+
+/// Reference executor over a weight set.
+#[derive(Debug, Clone)]
+pub struct RefModel {
+    pub weights: ModelWeights,
+}
+
+impl RefModel {
+    pub fn new(weights: ModelWeights) -> Self {
+        RefModel { weights }
+    }
+
+    fn h(&self) -> usize {
+        self.weights.config.hidden
+    }
+
+    // -- primitive ops -------------------------------------------------------
+
+    /// Row-wise layernorm over the last dim.
+    pub fn layernorm(x: &[f32], g: &[f32], b: &[f32], h: usize) -> Vec<f32> {
+        let mut out = vec![0.0; x.len()];
+        for (row_i, row) in x.chunks(h).enumerate() {
+            let mu = row.iter().sum::<f32>() / h as f32;
+            let var = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / h as f32;
+            let inv = 1.0 / (var + LN_EPS).sqrt();
+            let o = &mut out[row_i * h..(row_i + 1) * h];
+            for i in 0..h {
+                o[i] = (row[i] - mu) * inv * g[i] + b[i];
+            }
+        }
+        out
+    }
+
+    /// `x[rows, in] @ w[in, out] + b[out]`.
+    pub fn linear(x: &[f32], w: &[f32], b: &[f32], rows: usize, d_in: usize, d_out: usize) -> Vec<f32> {
+        assert_eq!(x.len(), rows * d_in);
+        assert_eq!(w.len(), d_in * d_out);
+        let mut out = vec![0.0; rows * d_out];
+        for r in 0..rows {
+            let xr = &x[r * d_in..(r + 1) * d_in];
+            let or = &mut out[r * d_out..(r + 1) * d_out];
+            or.copy_from_slice(&b[..d_out]);
+            for (i, &xv) in xr.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let wr = &w[i * d_out..(i + 1) * d_out];
+                for j in 0..d_out {
+                    or[j] += xv * wr[j];
+                }
+            }
+        }
+        out
+    }
+
+    fn softmax_inplace(scores: &mut [f32]) {
+        let m = scores.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0;
+        for s in scores.iter_mut() {
+            *s = (*s - m).exp();
+            sum += *s;
+        }
+        for s in scores.iter_mut() {
+            *s /= sum;
+        }
+    }
+
+    // -- model steps (artifact-equivalent) ------------------------------------
+
+    /// `embed_decode` artifact: ids[b] + position → x [b, 1, h].
+    pub fn embed_decode(&self, ids: &[i32], pos: usize) -> Vec<f32> {
+        let h = self.h();
+        let mut out = Vec::with_capacity(ids.len() * h);
+        for &id in ids {
+            let t = &self.weights.tok_table[id as usize * h..(id as usize + 1) * h];
+            let p = &self.weights.pos_table[pos * h..(pos + 1) * h];
+            out.extend(t.iter().zip(p).map(|(a, b)| a + b));
+        }
+        out
+    }
+
+    /// `lm_head` artifact: x [b, 1, h] → logits [b, vocab].
+    pub fn lm_head(&self, x: &[f32]) -> Vec<f32> {
+        let h = self.h();
+        let v = self.weights.config.vocab;
+        let ln = Self::layernorm(x, &self.weights.lnf_g, &self.weights.lnf_b, h);
+        let b = x.len() / h;
+        let mut out = vec![0.0; b * v];
+        for r in 0..b {
+            let xr = &ln[r * h..(r + 1) * h];
+            for t in 0..v {
+                let row = &self.weights.tok_table[t * h..(t + 1) * h];
+                out[r * v + t] = xr.iter().zip(row).map(|(a, b)| a * b).sum();
+            }
+        }
+        out
+    }
+
+    /// Greedy sampling over `lm_head` logits → one token per sequence.
+    pub fn argmax(logits: &[f32], vocab: usize) -> Vec<i32> {
+        logits
+            .chunks(vocab)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0 as i32
+            })
+            .collect()
+    }
+
+    /// `decode_full` artifact: one layer, one token, padded cache with
+    /// `kv_len` valid rows (kv_len < cap).  Returns (y, k_new, v_new);
+    /// the caller owns appending k_new/v_new to its cache.
+    #[allow(clippy::too_many_arguments)]
+    pub fn decode_layer_full(
+        &self,
+        layer: usize,
+        x: &[f32],
+        k_cache: &[f32],
+        v_cache: &[f32],
+        cap: usize,
+        kv_len: usize,
+        batch: usize,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let h = self.h();
+        let nh = self.weights.config.n_heads;
+        let d = h / nh;
+        let w = self.weights.layer(layer);
+        assert!(kv_len < cap, "cache must have room for the new token");
+        assert_eq!(x.len(), batch * h);
+        assert_eq!(k_cache.len(), batch * cap * h);
+
+        let ln1 = Self::layernorm(x, w.get("ln1_g"), w.get("ln1_b"), h);
+        let q = Self::linear(&ln1, w.get("wq"), w.get("bq"), batch, h, h);
+        let k_new = Self::linear(&ln1, w.get("wk"), w.get("bk"), batch, h, h);
+        let v_new = Self::linear(&ln1, w.get("wv"), w.get("bv"), batch, h, h);
+
+        // attention over valid prefix + the new token (logical position kv_len)
+        let n_valid = kv_len + 1;
+        let mut attn = vec![0.0; batch * h];
+        let scale = 1.0 / (d as f32).sqrt();
+        let mut scores = vec![0.0f32; n_valid];
+        for b in 0..batch {
+            for head in 0..nh {
+                let qo = b * h + head * d;
+                let qh = &q[qo..qo + d];
+                for (s, score) in scores.iter_mut().enumerate() {
+                    let krow: &[f32] = if s < kv_len {
+                        let off = (b * cap + s) * h + head * d;
+                        &k_cache[off..off + d]
+                    } else {
+                        // the new token's key (k_new is [batch, h])
+                        &k_new[qo..qo + d]
+                    };
+                    *score = qh.iter().zip(krow).map(|(a, c)| a * c).sum::<f32>() * scale;
+                    if *score < NEG_INF {
+                        *score = NEG_INF;
+                    }
+                }
+                Self::softmax_inplace(&mut scores);
+                let out = &mut attn[qo..qo + d];
+                for (s, &p) in scores.iter().enumerate() {
+                    let vrow: &[f32] = if s < kv_len {
+                        let off = (b * cap + s) * h + head * d;
+                        &v_cache[off..off + d]
+                    } else {
+                        &v_new[b * h + head * d..b * h + head * d + d]
+                    };
+                    for j in 0..d {
+                        out[j] += p * vrow[j];
+                    }
+                }
+            }
+        }
+
+        let proj = Self::linear(&attn, w.get("wo"), w.get("bo"), batch, h, h);
+        let mut xr: Vec<f32> = x.iter().zip(&proj).map(|(a, b)| a + b).collect();
+
+        // FFN
+        let f = self.weights.config.ffn;
+        let ln2 = Self::layernorm(&xr, w.get("ln2_g"), w.get("ln2_b"), h);
+        let mut mid = Self::linear(&ln2, w.get("w1"), w.get("b1"), batch, h, f);
+        for m in mid.iter_mut() {
+            *m = m.max(0.0);
+        }
+        let down = Self::linear(&mid, w.get("w2"), w.get("b2"), batch, f, h);
+        for (a, b) in xr.iter_mut().zip(&down) {
+            *a += b;
+        }
+        (xr, k_new, v_new)
+    }
+
+    /// Causal prefill of one layer over [batch, s_p, h] activations.
+    /// Returns (y, k, v) each [batch, s_p, h].
+    pub fn prefill_layer(
+        &self,
+        layer: usize,
+        x: &[f32],
+        batch: usize,
+        s_p: usize,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let h = self.h();
+        let nh = self.weights.config.n_heads;
+        let d = h / nh;
+        let rows = batch * s_p;
+        let w = self.weights.layer(layer);
+
+        let ln1 = Self::layernorm(x, w.get("ln1_g"), w.get("ln1_b"), h);
+        let q = Self::linear(&ln1, w.get("wq"), w.get("bq"), rows, h, h);
+        let k = Self::linear(&ln1, w.get("wk"), w.get("bk"), rows, h, h);
+        let v = Self::linear(&ln1, w.get("wv"), w.get("bv"), rows, h, h);
+
+        let mut attn = vec![0.0; rows * h];
+        let scale = 1.0 / (d as f32).sqrt();
+        for b in 0..batch {
+            for head in 0..nh {
+                for qi in 0..s_p {
+                    let qo = (b * s_p + qi) * h + head * d;
+                    let qh = &q[qo..qo + d];
+                    let mut scores = vec![0.0f32; qi + 1];
+                    for (s, score) in scores.iter_mut().enumerate() {
+                        let ko = (b * s_p + s) * h + head * d;
+                        *score =
+                            qh.iter().zip(&k[ko..ko + d]).map(|(a, c)| a * c).sum::<f32>() * scale;
+                    }
+                    Self::softmax_inplace(&mut scores);
+                    let out_off = qo;
+                    for (s, &p) in scores.iter().enumerate() {
+                        let vo = (b * s_p + s) * h + head * d;
+                        for j in 0..d {
+                            attn[out_off + j] += p * v[vo + j];
+                        }
+                    }
+                }
+            }
+        }
+
+        let proj = Self::linear(&attn, w.get("wo"), w.get("bo"), rows, h, h);
+        let mut xr: Vec<f32> = x.iter().zip(&proj).map(|(a, b)| a + b).collect();
+        let f = self.weights.config.ffn;
+        let ln2 = Self::layernorm(&xr, w.get("ln2_g"), w.get("ln2_b"), h);
+        let mut mid = Self::linear(&ln2, w.get("w1"), w.get("b1"), rows, h, f);
+        for m in mid.iter_mut() {
+            *m = m.max(0.0);
+        }
+        let down = Self::linear(&mid, w.get("w2"), w.get("b2"), rows, f, h);
+        for (a, b) in xr.iter_mut().zip(&down) {
+            *a += b;
+        }
+        (xr, k, v)
+    }
+
+    /// Whole-model prefill: ids [batch, s_p] → (logits [b, vocab], per-layer
+    /// (k, v, x) each [batch, s_p, h]).
+    #[allow(clippy::type_complexity)]
+    pub fn prefill(
+        &self,
+        ids: &[i32],
+        batch: usize,
+        s_p: usize,
+    ) -> (Vec<f32>, Vec<(Vec<f32>, Vec<f32>, Vec<f32>)>) {
+        let h = self.h();
+        let mut x = Vec::with_capacity(batch * s_p * h);
+        for b in 0..batch {
+            for s in 0..s_p {
+                let id = ids[b * s_p + s] as usize;
+                let tok = &self.weights.tok_table[id * h..(id + 1) * h];
+                let pos = &self.weights.pos_table[s * h..(s + 1) * h];
+                x.extend(tok.iter().zip(pos).map(|(a, b)| a + b));
+            }
+        }
+        let mut per_layer = Vec::with_capacity(self.weights.config.n_layers);
+        for i in 0..self.weights.config.n_layers {
+            let x_in = x.clone();
+            let (y, k, v) = self.prefill_layer(i, &x, batch, s_p);
+            per_layer.push((k, v, x_in));
+            x = y;
+        }
+        // last position's hidden → logits
+        let mut last = Vec::with_capacity(batch * h);
+        for b in 0..batch {
+            let off = (b * s_p + s_p - 1) * h;
+            last.extend_from_slice(&x[off..off + h]);
+        }
+        (self.lm_head(&last), per_layer)
+    }
+
+    /// Reference end-to-end greedy generation (slow; tests/parity only).
+    pub fn generate(&self, prompt_ids: &[i32], batch: usize, s_p: usize, gen: usize, cap: usize) -> Vec<Vec<i32>> {
+        let h = self.h();
+        let n_layers = self.weights.config.n_layers;
+        let (logits, per_layer) = self.prefill(prompt_ids, batch, s_p);
+        // padded caches [batch, cap, h]
+        let mut kc = vec![vec![0.0f32; batch * cap * h]; n_layers];
+        let mut vc = vec![vec![0.0f32; batch * cap * h]; n_layers];
+        for (i, (k, v, _)) in per_layer.iter().enumerate() {
+            for b in 0..batch {
+                for s in 0..s_p {
+                    let src = (b * s_p + s) * h;
+                    let dst = (b * cap + s) * h;
+                    kc[i][dst..dst + h].copy_from_slice(&k[src..src + h]);
+                    vc[i][dst..dst + h].copy_from_slice(&v[src..src + h]);
+                }
+            }
+        }
+        let vocab = self.weights.config.vocab;
+        let mut out: Vec<Vec<i32>> = vec![Vec::new(); batch];
+        let mut next = Self::argmax(&logits, vocab);
+        for (b, t) in next.iter().enumerate() {
+            out[b].push(*t);
+        }
+        let mut kv_len = s_p;
+        for step in 1..gen {
+            let _ = step;
+            let mut x = self.embed_decode(&next, kv_len);
+            for i in 0..n_layers {
+                let (y, k_new, v_new) =
+                    self.decode_layer_full(i, &x, &kc[i], &vc[i], cap, kv_len, batch);
+                for b in 0..batch {
+                    let dst = (b * cap + kv_len) * h;
+                    kc[i][dst..dst + h].copy_from_slice(&k_new[b * h..(b + 1) * h]);
+                    vc[i][dst..dst + h].copy_from_slice(&v_new[b * h..(b + 1) * h]);
+                }
+                x = y;
+            }
+            kv_len += 1;
+            next = Self::argmax(&self.lm_head(&x), vocab);
+            for (b, t) in next.iter().enumerate() {
+                out[b].push(*t);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    fn tiny_model() -> RefModel {
+        RefModel::new(ModelWeights::generate(&ModelConfig::tiny(), 3))
+    }
+
+    #[test]
+    fn layernorm_normalizes() {
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let g = vec![1.0; 4];
+        let b = vec![0.0; 4];
+        let y = RefModel::layernorm(&x, &g, &b, 4);
+        let mu: f32 = y.iter().sum::<f32>() / 4.0;
+        let var: f32 = y.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / 4.0;
+        assert!(mu.abs() < 1e-6);
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn linear_identity() {
+        // identity weight, zero bias
+        let mut w = vec![0.0; 9];
+        for i in 0..3 {
+            w[i * 3 + i] = 1.0;
+        }
+        let x = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let y = RefModel::linear(&x, &w, &[0.0; 3], 2, 3, 3);
+        assert_eq!(y, x);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut s = vec![1.0, 2.0, 3.0];
+        RefModel::softmax_inplace(&mut s);
+        assert!((s.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(s[2] > s[1] && s[1] > s[0]);
+    }
+
+    #[test]
+    fn decode_ignores_padding_rows() {
+        let m = tiny_model();
+        let h = 256;
+        let batch = 1;
+        let cap = 32;
+        let kv_len = 10;
+        let x = vec![0.1; batch * h];
+        let mut kc = vec![0.05; batch * cap * h];
+        let mut vc = vec![-0.05; batch * cap * h];
+        let (y1, _, _) = m.decode_layer_full(0, &x, &kc, &vc, cap, kv_len, batch);
+        // poison rows beyond kv_len+1
+        for row in (kv_len + 1)..cap {
+            for j in 0..h {
+                kc[row * h + j] = 50.0;
+                vc[row * h + j] = -50.0;
+            }
+        }
+        let (y2, _, _) = m.decode_layer_full(0, &x, &kc, &vc, cap, kv_len, batch);
+        for (a, b) in y1.iter().zip(&y2) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn generate_is_deterministic() {
+        let m = tiny_model();
+        let ids: Vec<i32> = (0..16).collect();
+        let a = m.generate(&ids, 1, 16, 4, 64);
+        let b = m.generate(&ids, 1, 16, 4, 64);
+        assert_eq!(a, b);
+        assert_eq!(a[0].len(), 4);
+        assert!(a[0].iter().all(|&t| (0..512).contains(&t)));
+    }
+
+    #[test]
+    fn prefill_matches_decode_chain() {
+        // KV rows from prefill(s_p) must match prefill(s_p-1) + one decode step
+        let m = tiny_model();
+        let s_p = 8;
+        let ids: Vec<i32> = (10..10 + s_p as i32).collect();
+        let (_, full) = m.prefill(&ids, 1, s_p);
+
+        let (_, part) = m.prefill(&ids[..s_p - 1], 1, s_p - 1);
+        let h = 256;
+        let cap = 32;
+        let mut x = m.embed_decode(&ids[s_p - 1..], s_p - 1);
+        for i in 0..m.weights.config.n_layers {
+            let (k, v, _) = &part[i];
+            let mut kc = vec![0.0; cap * h];
+            let mut vcache = vec![0.0; cap * h];
+            for s in 0..s_p - 1 {
+                kc[s * h..(s + 1) * h].copy_from_slice(&k[s * h..(s + 1) * h]);
+                vcache[s * h..(s + 1) * h].copy_from_slice(&v[s * h..(s + 1) * h]);
+            }
+            let (y, k_new, _v_new) = m.decode_layer_full(i, &x, &kc, &vcache, cap, s_p - 1, 1);
+            let (k_full, _, _) = &full[i];
+            let want = &k_full[(s_p - 1) * h..s_p * h];
+            for (a, b) in k_new.iter().zip(want) {
+                assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+            }
+            x = y;
+        }
+    }
+
+    #[test]
+    fn argmax_picks_max() {
+        let logits = vec![0.1, 0.9, 0.3, /* row 2 */ 5.0, -1.0, 2.0];
+        assert_eq!(RefModel::argmax(&logits, 3), vec![1, 0]);
+    }
+}

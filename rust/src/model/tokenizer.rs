@@ -1,0 +1,99 @@
+//! Byte-level tokenizer for the tiny model.
+//!
+//! Token ids 0–255 are raw bytes; 256 = BOS, 257 = EOS, 258 = PAD.  Vocab
+//! 512 leaves headroom.  This is deliberately trivial — tokenization is not
+//! the paper's subject, but the serving examples need a real text→ids→text
+//! path so requests are actual strings.
+
+pub const BOS: i32 = 256;
+#[allow(dead_code)]
+pub const EOS: i32 = 257;
+pub const PAD: i32 = 258;
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub fn new() -> Self {
+        ByteTokenizer
+    }
+
+    /// Encode text, prepend BOS, right-pad with PAD to `pad_to` (0 = none).
+    /// Texts longer than `pad_to` − 1 are truncated from the left (keep the
+    /// most recent context), mirroring the paper's uniform prompt padding.
+    pub fn encode(&self, text: &str, pad_to: usize) -> Vec<i32> {
+        let bytes = text.as_bytes();
+        let mut ids = Vec::with_capacity(pad_to.max(bytes.len() + 1));
+        ids.push(BOS);
+        if pad_to > 0 && bytes.len() > pad_to - 1 {
+            let start = bytes.len() - (pad_to - 1);
+            ids.extend(bytes[start..].iter().map(|&b| b as i32));
+        } else {
+            ids.extend(bytes.iter().map(|&b| b as i32));
+        }
+        while pad_to > 0 && ids.len() < pad_to {
+            ids.push(PAD);
+        }
+        ids
+    }
+
+    /// Decode ids back to text, dropping specials and invalid UTF-8.
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let bytes: Vec<u8> = ids
+            .iter()
+            .filter(|&&t| (0..256).contains(&t))
+            .map(|&t| t as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        512
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = ByteTokenizer::new();
+        let ids = t.encode("hello kvpr", 0);
+        assert_eq!(ids[0], BOS);
+        assert_eq!(t.decode(&ids), "hello kvpr");
+    }
+
+    #[test]
+    fn padding_to_bucket() {
+        let t = ByteTokenizer::new();
+        let ids = t.encode("hi", 16);
+        assert_eq!(ids.len(), 16);
+        assert_eq!(ids[0], BOS);
+        assert_eq!(&ids[1..3], &[104, 105]);
+        assert!(ids[3..].iter().all(|&i| i == PAD));
+    }
+
+    #[test]
+    fn truncates_from_left() {
+        let t = ByteTokenizer::new();
+        let long = "abcdefghijklmnop"; // 16 bytes
+        let ids = t.encode(long, 8);
+        assert_eq!(ids.len(), 8);
+        // keeps the last 7 bytes
+        assert_eq!(t.decode(&ids), "jklmnop");
+    }
+
+    #[test]
+    fn decode_skips_specials() {
+        let t = ByteTokenizer::new();
+        assert_eq!(t.decode(&[BOS, 104, 105, EOS, PAD]), "hi");
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let t = ByteTokenizer::new();
+        let ids = t.encode("µs → fast", 0);
+        assert_eq!(t.decode(&ids), "µs → fast");
+    }
+}

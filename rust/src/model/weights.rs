@@ -1,0 +1,196 @@
+//! Deterministic host-side weight store.
+//!
+//! The artifacts take weights as runtime inputs (the offloading regime moves
+//! them over the link every layer in throughput mode), so Rust owns weight
+//! generation.  Generation is seeded and reproducible: the E2E example
+//! verifies KVPR and the baseline produce *identical* tokens, which needs
+//! identical weights across engine instances.
+//!
+//! Weight order per layer is pinned to `python/compile/model.py`'s
+//! `LAYER_WEIGHT_NAMES` — the manifest loader cross-checks this at startup.
+
+use std::sync::Arc;
+
+use crate::config::ModelConfig;
+use crate::util::prng::Prng;
+
+/// Canonical per-layer weight order (must match the python side).
+pub const LAYER_WEIGHT_NAMES: [&str; 16] = [
+    "ln1_g", "ln1_b", "wq", "bq", "wk", "bk", "wv", "bv", "wo", "bo",
+    "ln2_g", "ln2_b", "w1", "b1", "w2", "b2",
+];
+
+/// One decoder layer's weights, in canonical order.
+#[derive(Debug, Clone)]
+pub struct LayerWeights {
+    /// (name, flat data, shape) in canonical order.
+    tensors: Vec<(String, Arc<Vec<f32>>, Vec<usize>)>,
+}
+
+impl LayerWeights {
+    pub fn get(&self, name: &str) -> &Arc<Vec<f32>> {
+        &self
+            .tensors
+            .iter()
+            .find(|(n, _, _)| n == name)
+            .unwrap_or_else(|| panic!("no weight {name}"))
+            .1
+    }
+
+    pub fn shape(&self, name: &str) -> &[usize] {
+        &self
+            .tensors
+            .iter()
+            .find(|(n, _, _)| n == name)
+            .unwrap_or_else(|| panic!("no weight {name}"))
+            .2
+    }
+
+    /// Iterate in canonical order.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &Arc<Vec<f32>>, &[usize])> {
+        self.tensors.iter().map(|(n, d, s)| (n.as_str(), d, s.as_slice()))
+    }
+
+    /// Total bytes (for transfer accounting).
+    pub fn bytes(&self) -> u64 {
+        self.tensors.iter().map(|(_, d, _)| (d.len() * 4) as u64).sum()
+    }
+
+    /// Bytes of W_K + W_V + their biases — the fine-grained pipeline's
+    /// front-loaded subset (paper Fig 5b).
+    pub fn kv_proj_bytes(&self) -> u64 {
+        ["wk", "bk", "wv", "bv"]
+            .iter()
+            .map(|n| (self.get(n).len() * 4) as u64)
+            .sum()
+    }
+}
+
+/// All weights of the model.
+#[derive(Debug, Clone)]
+pub struct ModelWeights {
+    pub config: ModelConfig,
+    pub tok_table: Arc<Vec<f32>>,
+    pub pos_table: Arc<Vec<f32>>,
+    pub lnf_g: Arc<Vec<f32>>,
+    pub lnf_b: Arc<Vec<f32>>,
+    pub layers: Vec<LayerWeights>,
+}
+
+impl ModelWeights {
+    /// Deterministically generate small-magnitude weights (activations stay
+    /// O(1) through all layers so f32 artifacts are well-conditioned).
+    pub fn generate(config: &ModelConfig, seed: u64) -> Self {
+        let mut rng = Prng::new(seed);
+        let h = config.hidden;
+        let f = config.ffn;
+        let xavier = |rng: &mut Prng, rows: usize, cols: usize| {
+            let scale = (2.0 / (rows + cols) as f64).sqrt() as f32;
+            Arc::new(rng.normal_vec_f32(rows * cols, scale))
+        };
+        let gamma = |rng: &mut Prng, n: usize| {
+            Arc::new((0..n).map(|_| 1.0 + rng.normal() as f32 * 0.02).collect::<Vec<_>>())
+        };
+        let beta = |rng: &mut Prng, n: usize| Arc::new(rng.normal_vec_f32(n, 0.02));
+
+        let tok_table = Arc::new(rng.normal_vec_f32(config.vocab * h, 0.05));
+        let pos_table = Arc::new(rng.normal_vec_f32(config.max_pos * h, 0.05));
+        let lnf_g = gamma(&mut rng, h);
+        let lnf_b = beta(&mut rng, h);
+
+        let layers = (0..config.n_layers)
+            .map(|_| {
+                let tensors = vec![
+                    ("ln1_g".into(), gamma(&mut rng, h), vec![h]),
+                    ("ln1_b".into(), beta(&mut rng, h), vec![h]),
+                    ("wq".into(), xavier(&mut rng, h, h), vec![h, h]),
+                    ("bq".into(), beta(&mut rng, h), vec![h]),
+                    ("wk".into(), xavier(&mut rng, h, h), vec![h, h]),
+                    ("bk".into(), beta(&mut rng, h), vec![h]),
+                    ("wv".into(), xavier(&mut rng, h, h), vec![h, h]),
+                    ("bv".into(), beta(&mut rng, h), vec![h]),
+                    ("wo".into(), xavier(&mut rng, h, h), vec![h, h]),
+                    ("bo".into(), beta(&mut rng, h), vec![h]),
+                    ("ln2_g".into(), gamma(&mut rng, h), vec![h]),
+                    ("ln2_b".into(), beta(&mut rng, h), vec![h]),
+                    ("w1".into(), xavier(&mut rng, h, f), vec![h, f]),
+                    ("b1".into(), beta(&mut rng, f), vec![f]),
+                    ("w2".into(), xavier(&mut rng, f, h), vec![f, h]),
+                    ("b2".into(), beta(&mut rng, h), vec![h]),
+                ];
+                LayerWeights { tensors }
+            })
+            .collect();
+
+        ModelWeights { config: config.clone(), tok_table, pos_table, lnf_g, lnf_b, layers }
+    }
+
+    pub fn layer(&self, i: usize) -> &LayerWeights {
+        &self.layers[i]
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        let head = (self.tok_table.len() + self.pos_table.len() + self.lnf_g.len()
+            + self.lnf_b.len()) as u64
+            * 4;
+        head + self.layers.iter().map(|l| l.bytes()).sum::<u64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let cfg = ModelConfig::tiny();
+        let a = ModelWeights::generate(&cfg, 7);
+        let b = ModelWeights::generate(&cfg, 7);
+        assert_eq!(a.layer(0).get("wq")[..10], b.layer(0).get("wq")[..10]);
+        assert_eq!(a.tok_table[100], b.tok_table[100]);
+        let c = ModelWeights::generate(&cfg, 8);
+        assert_ne!(a.layer(0).get("wq")[0], c.layer(0).get("wq")[0]);
+    }
+
+    #[test]
+    fn canonical_order_matches_names() {
+        let cfg = ModelConfig::tiny();
+        let w = ModelWeights::generate(&cfg, 1);
+        let names: Vec<&str> = w.layer(0).iter().map(|(n, _, _)| n).collect();
+        assert_eq!(names, LAYER_WEIGHT_NAMES);
+    }
+
+    #[test]
+    fn shapes_are_consistent() {
+        let cfg = ModelConfig::tiny();
+        let w = ModelWeights::generate(&cfg, 1);
+        let l = w.layer(0);
+        assert_eq!(l.shape("wq"), &[cfg.hidden, cfg.hidden]);
+        assert_eq!(l.shape("w1"), &[cfg.hidden, cfg.ffn]);
+        assert_eq!(l.get("w1").len(), cfg.hidden * cfg.ffn);
+        assert_eq!(l.get("b1").len(), cfg.ffn);
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let cfg = ModelConfig::tiny();
+        let w = ModelWeights::generate(&cfg, 1);
+        let l = w.layer(0);
+        // 4 h² + 2 h·ffn mats dominate
+        let h = cfg.hidden as u64;
+        let f = cfg.ffn as u64;
+        let mats = (4 * h * h + 2 * h * f) * 4;
+        assert!(l.bytes() > mats);
+        assert!(l.bytes() < mats + 100 * h * 4);
+        assert_eq!(l.kv_proj_bytes(), (2 * h * h + 2 * h) * 4);
+    }
+
+    #[test]
+    fn layernorm_gammas_near_one() {
+        let cfg = ModelConfig::tiny();
+        let w = ModelWeights::generate(&cfg, 1);
+        let g = w.layer(0).get("ln1_g");
+        let mean: f32 = g.iter().sum::<f32>() / g.len() as f32;
+        assert!((mean - 1.0).abs() < 0.05);
+    }
+}

@@ -1,0 +1,277 @@
+//! Manifest parsing: the signature registry emitted by `python/compile/aot.py`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ModelConfig;
+use crate::util::json::Json;
+
+/// Dtype of an artifact input/output (the tiny model only uses these two).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+/// One tensor in an artifact signature.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSig {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSig {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let name = j.at(&["name"]).as_str().context("tensor name")?.to_string();
+        let shape = j
+            .at(&["shape"])
+            .as_arr()
+            .context("tensor shape")?
+            .iter()
+            .map(|d| d.as_usize().context("dim"))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = match j.at(&["dtype"]).as_str() {
+            Some("float32") => DType::F32,
+            Some("int32") => DType::I32,
+            other => bail!("unsupported dtype {other:?}"),
+        };
+        Ok(TensorSig { name, shape, dtype })
+    }
+}
+
+/// Metadata for one AOT-compiled step function.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    /// Function kind: embed_decode | lm_head | decode_full | decode_partial
+    /// | recompute | decode_merge | prefill.
+    pub kind: String,
+    pub b: usize,
+    pub s: usize,
+    pub l: usize,
+    pub sp: usize,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: ModelConfig,
+    pub batch_buckets: Vec<usize>,
+    pub seq_cap: usize,
+    pub l_buckets: Vec<usize>,
+    pub prompt_buckets: Vec<usize>,
+    pub layer_weight_names: Vec<String>,
+    pub artifacts: Vec<ArtifactMeta>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let m = j.at(&["model"]);
+        let mut model = ModelConfig::tiny();
+        model.name = m.at(&["name"]).as_str().context("model.name")?.to_string();
+        model.hidden = m.at(&["hidden"]).as_usize().context("hidden")?;
+        model.n_heads = m.at(&["n_heads"]).as_usize().context("n_heads")?;
+        model.n_layers = m.at(&["n_layers"]).as_usize().context("n_layers")?;
+        model.ffn = m.at(&["ffn"]).as_usize().context("ffn")?;
+        model.vocab = m.at(&["vocab"]).as_usize().context("vocab")?;
+        model.max_pos = m.at(&["max_pos"]).as_usize().context("max_pos")?;
+
+        let get_buckets = |key: &str| -> Result<Vec<usize>> {
+            j.at(&["buckets", key])
+                .as_arr()
+                .with_context(|| format!("buckets.{key}"))?
+                .iter()
+                .map(|v| v.as_usize().context("bucket"))
+                .collect()
+        };
+
+        let artifacts = j
+            .at(&["artifacts"])
+            .as_arr()
+            .context("artifacts")?
+            .iter()
+            .map(|a| {
+                Ok(ArtifactMeta {
+                    name: a.at(&["name"]).as_str().context("name")?.to_string(),
+                    file: a.at(&["file"]).as_str().context("file")?.to_string(),
+                    kind: a.at(&["fn"]).as_str().context("fn")?.to_string(),
+                    b: a.at(&["b"]).as_usize().unwrap_or(0),
+                    s: a.at(&["s"]).as_usize().unwrap_or(0),
+                    l: a.at(&["l"]).as_usize().unwrap_or(0),
+                    sp: a.at(&["sp"]).as_usize().unwrap_or(0),
+                    inputs: a
+                        .at(&["inputs"])
+                        .as_arr()
+                        .context("inputs")?
+                        .iter()
+                        .map(TensorSig::from_json)
+                        .collect::<Result<Vec<_>>>()?,
+                    outputs: a
+                        .at(&["outputs"])
+                        .as_arr()
+                        .context("outputs")?
+                        .iter()
+                        .map(TensorSig::from_json)
+                        .collect::<Result<Vec<_>>>()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let layer_weight_names = j
+            .at(&["layer_weight_names"])
+            .as_arr()
+            .context("layer_weight_names")?
+            .iter()
+            .map(|v| Ok(v.as_str().context("weight name")?.to_string()))
+            .collect::<Result<Vec<_>>>()?;
+
+        // cross-check the canonical weight order against the Rust constant —
+        // a silent mismatch here would mis-wire every weight matrix
+        if layer_weight_names != crate::model::LAYER_WEIGHT_NAMES {
+            bail!("manifest layer_weight_names diverge from rust LAYER_WEIGHT_NAMES");
+        }
+
+        Ok(Manifest {
+            model,
+            batch_buckets: get_buckets("batch")?,
+            seq_cap: j.at(&["buckets", "seq_cap"]).as_usize().context("seq_cap")?,
+            l_buckets: get_buckets("l")?,
+            prompt_buckets: get_buckets("prompt")?,
+            layer_weight_names,
+            artifacts,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    // -- canonical artifact names ------------------------------------------
+
+    pub fn embed_decode_name(&self, b: usize) -> String {
+        format!("embed_decode_b{b}")
+    }
+
+    pub fn lm_head_name(&self, b: usize) -> String {
+        format!("lm_head_b{b}")
+    }
+
+    pub fn decode_full_name(&self, b: usize) -> String {
+        format!("decode_full_b{b}_s{}", self.seq_cap)
+    }
+
+    pub fn decode_partial_name(&self, b: usize, l: usize) -> String {
+        format!("decode_partial_b{b}_s{}_l{l}", self.seq_cap)
+    }
+
+    pub fn recompute_name(&self, b: usize, l: usize) -> String {
+        format!("recompute_b{b}_l{l}")
+    }
+
+    pub fn decode_merge_name(&self, b: usize, l: usize) -> String {
+        format!("decode_merge_b{b}_s{}_l{l}", self.seq_cap)
+    }
+
+    pub fn prefill_name(&self, b: usize, sp: usize) -> String {
+        format!("prefill_b{b}_p{sp}")
+    }
+
+    /// Smallest batch bucket that fits `n` sequences.
+    pub fn batch_bucket_for(&self, n: usize) -> Option<usize> {
+        self.batch_buckets.iter().copied().filter(|&b| b >= n).min()
+    }
+
+    /// Smallest prompt bucket that fits `len` tokens.
+    pub fn prompt_bucket_for(&self, len: usize) -> Option<usize> {
+        self.prompt_buckets.iter().copied().filter(|&p| p >= len).min()
+    }
+}
+
+pub(crate) use DType as ArtifactDType;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn art_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn manifest() -> Option<Manifest> {
+        let dir = art_dir();
+        if dir.join("manifest.json").exists() {
+            Some(Manifest::load(&dir).expect("manifest parses"))
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let Some(m) = manifest() else { return };
+        assert_eq!(m.model.name, "kvpr-tiny");
+        assert_eq!(m.model.hidden, 256);
+        assert_eq!(m.seq_cap, 128);
+        assert!(!m.l_buckets.is_empty());
+        assert!(m.artifacts.len() >= 16);
+    }
+
+    #[test]
+    fn canonical_names_resolve() {
+        let Some(m) = manifest() else { return };
+        for &b in &m.batch_buckets.clone() {
+            assert!(m.find(&m.embed_decode_name(b)).is_some());
+            assert!(m.find(&m.lm_head_name(b)).is_some());
+            assert!(m.find(&m.decode_full_name(b)).is_some());
+            for &l in &m.l_buckets.clone() {
+                assert!(m.find(&m.decode_partial_name(b, l)).is_some());
+                assert!(m.find(&m.recompute_name(b, l)).is_some());
+                assert!(m.find(&m.decode_merge_name(b, l)).is_some());
+            }
+            for &sp in &m.prompt_buckets.clone() {
+                assert!(m.find(&m.prefill_name(b, sp)).is_some());
+            }
+        }
+    }
+
+    #[test]
+    fn signatures_have_weights_in_canonical_order() {
+        let Some(m) = manifest() else { return };
+        let a = m.find(&m.decode_full_name(1)).unwrap();
+        let tail: Vec<&str> = a.inputs[4..].iter().map(|t| t.name.as_str()).collect();
+        assert_eq!(tail, crate::model::LAYER_WEIGHT_NAMES);
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let Some(m) = manifest() else { return };
+        assert_eq!(m.batch_bucket_for(1), Some(1));
+        assert_eq!(m.batch_bucket_for(3), Some(4));
+        assert_eq!(m.batch_bucket_for(100), None);
+        assert_eq!(m.prompt_bucket_for(10), Some(16));
+        assert_eq!(m.prompt_bucket_for(17), Some(32));
+    }
+
+    #[test]
+    fn hlo_files_exist() {
+        let Some(m) = manifest() else { return };
+        for a in &m.artifacts {
+            assert!(m.dir.join(&a.file).exists(), "{}", a.file);
+        }
+    }
+}

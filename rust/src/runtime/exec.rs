@@ -1,0 +1,247 @@
+//! Executable registry + literal marshalling.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use super::artifacts::{ArtifactDType, ArtifactMeta, Manifest};
+
+/// An argument to an artifact call.
+#[derive(Debug, Clone, Copy)]
+pub enum ArgValue<'a> {
+    /// Flat f32 tensor (shape comes from the signature).
+    F32(&'a [f32]),
+    /// Flat i32 tensor.
+    I32Slice(&'a [i32]),
+    /// Scalar i32 (e.g. `kv_len`, `pos`).
+    I32(i32),
+}
+
+/// A compiled artifact bound to the PJRT client.
+pub struct Artifact {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    /// Execute with positional args checked against the manifest signature.
+    /// Returns one flat `Vec<f32>` per output (i32 outputs are unsupported —
+    /// the tiny model has none).
+    pub fn call(&self, args: &[ArgValue]) -> Result<Vec<Vec<f32>>> {
+        if args.len() != self.meta.inputs.len() {
+            bail!(
+                "{}: expected {} args, got {}",
+                self.meta.name,
+                self.meta.inputs.len(),
+                args.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(args.len());
+        for (arg, sig) in args.iter().zip(&self.meta.inputs) {
+            let lit = match (arg, sig.dtype) {
+                (ArgValue::F32(data), ArtifactDType::F32) => {
+                    if data.len() != sig.numel() {
+                        bail!(
+                            "{}: input '{}' numel {} != {}",
+                            self.meta.name,
+                            sig.name,
+                            data.len(),
+                            sig.numel()
+                        );
+                    }
+                    let dims: Vec<i64> = sig.shape.iter().map(|&d| d as i64).collect();
+                    xla::Literal::vec1(data).reshape(&dims)?
+                }
+                (ArgValue::I32Slice(data), ArtifactDType::I32) => {
+                    if data.len() != sig.numel() {
+                        bail!(
+                            "{}: input '{}' numel {} != {}",
+                            self.meta.name,
+                            sig.name,
+                            data.len(),
+                            sig.numel()
+                        );
+                    }
+                    let dims: Vec<i64> = sig.shape.iter().map(|&d| d as i64).collect();
+                    xla::Literal::vec1(data).reshape(&dims)?
+                }
+                (ArgValue::I32(v), ArtifactDType::I32) => {
+                    if !sig.shape.is_empty() {
+                        bail!("{}: '{}' expects shape {:?}", self.meta.name, sig.name, sig.shape);
+                    }
+                    xla::Literal::scalar(*v)
+                }
+                _ => bail!(
+                    "{}: input '{}' dtype mismatch",
+                    self.meta.name,
+                    sig.name
+                ),
+            };
+            literals.push(lit);
+        }
+
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → always a tuple
+        let parts = tuple.to_tuple()?;
+        if parts.len() != self.meta.outputs.len() {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.meta.name,
+                self.meta.outputs.len(),
+                parts.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, sig) in parts.iter().zip(&self.meta.outputs) {
+            let v = lit.to_vec::<f32>()?;
+            if v.len() != sig.numel() {
+                bail!("{}: output '{}' numel mismatch", self.meta.name, sig.name);
+            }
+            out.push(v);
+        }
+        Ok(out)
+    }
+}
+
+/// PJRT client + lazily compiled executable cache.  `!Send`: lives on the
+/// engine's compute thread.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Artifact>>>,
+    compile_count: std::cell::Cell<usize>,
+}
+
+impl Runtime {
+    /// Load the manifest from `dir` and create a CPU PJRT client.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            compile_count: std::cell::Cell::new(0),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// How many artifacts have been XLA-compiled so far (startup metric).
+    pub fn compiled(&self) -> usize {
+        self.compile_count.get()
+    }
+
+    /// Fetch (compiling on first use) the named artifact.
+    pub fn artifact(&self, name: &str) -> Result<Rc<Artifact>> {
+        if let Some(a) = self.cache.borrow().get(name) {
+            return Ok(a.clone());
+        }
+        let meta = self
+            .manifest
+            .find(name)
+            .with_context(|| format!("no artifact '{name}' in manifest"))?
+            .clone();
+        let path = self.manifest.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.compile_count.set(self.compile_count.get() + 1);
+        let artifact = Rc::new(Artifact { meta, exe });
+        self.cache.borrow_mut().insert(name.to_string(), artifact.clone());
+        Ok(artifact)
+    }
+
+    /// Pre-compile every artifact needed for decode at batch bucket `b`
+    /// (keeps first-token latency off the serving path).
+    pub fn warmup_decode(&self, b: usize) -> Result<()> {
+        let m = &self.manifest;
+        self.artifact(&m.embed_decode_name(b))?;
+        self.artifact(&m.lm_head_name(b))?;
+        self.artifact(&m.decode_full_name(b))?;
+        for &l in &m.l_buckets.clone() {
+            self.artifact(&m.recompute_name(b, l))?;
+            self.artifact(&m.decode_merge_name(b, l))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            Some(Runtime::load(&dir).expect("runtime loads"))
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn embed_decode_executes() {
+        let Some(rt) = runtime() else { return };
+        let w = crate::model::ModelWeights::generate(&rt.manifest().model, 1);
+        let a = rt.artifact(&rt.manifest().embed_decode_name(1)).unwrap();
+        let ids = [42i32];
+        let out = a
+            .call(&[
+                ArgValue::I32Slice(&ids),
+                ArgValue::I32(3),
+                ArgValue::F32(&w.tok_table),
+                ArgValue::F32(&w.pos_table),
+            ])
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].len(), 256);
+        // parity with the Rust reference
+        let rm = crate::model::RefModel::new(w);
+        let want = rm.embed_decode(&ids, 3);
+        for (a, b) in out[0].iter().zip(&want) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn arity_and_shape_validated() {
+        let Some(rt) = runtime() else { return };
+        let a = rt.artifact("embed_decode_b1").unwrap();
+        assert!(a.call(&[]).is_err());
+        let ids = [1i32, 2];
+        let junk = [0f32; 4];
+        assert!(a
+            .call(&[
+                ArgValue::I32Slice(&ids), // wrong numel (2 vs 1)
+                ArgValue::I32(0),
+                ArgValue::F32(&junk),
+                ArgValue::F32(&junk),
+            ])
+            .is_err());
+    }
+
+    #[test]
+    fn cache_compiles_once() {
+        let Some(rt) = runtime() else { return };
+        let _ = rt.artifact("lm_head_b1").unwrap();
+        let n = rt.compiled();
+        let _ = rt.artifact("lm_head_b1").unwrap();
+        assert_eq!(rt.compiled(), n);
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let Some(rt) = runtime() else { return };
+        assert!(rt.artifact("nope_b9").is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt`) and execute
+//! them on the request path.
+//!
+//! Flow (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`.  HLO *text* is the interchange format —
+//! `python/compile/aot.py` explains why.
+//!
+//! PJRT handles are not `Send`/`Sync`; a [`Runtime`] therefore lives on the
+//! engine's compute thread.  Executables are compiled lazily on first use
+//! and cached for the lifetime of the runtime.
+
+mod artifacts;
+mod exec;
+
+pub use artifacts::{ArtifactMeta, Manifest, TensorSig};
+pub use exec::{ArgValue, Artifact, Runtime};

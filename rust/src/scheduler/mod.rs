@@ -1,0 +1,29 @@
+//! The scheduler module (paper §3.2).
+//!
+//! Solves the one-variable integer linear program of Eq. (11) for the
+//! optimal KV-cache split point `l` — the prefix whose KV the GPU
+//! *recomputes* from activations while the link transfers the remainder —
+//! and turns the solution into per-step execution plans for the row-by-row
+//! and column-by-column schedules.
+
+mod cost;
+mod plan;
+mod split;
+
+pub use cost::CostModel;
+pub use plan::{PathKind, Planner, StepPlan};
+pub use split::{Split, SplitSolver};
+
+/// Which schedule the engine runs (paper §3, "LLM inference scheduling").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulePolicy {
+    /// Minimise latency: one batch at a time, all layers, weights resident
+    /// when possible.  Eq. (10) without the activation-transfer term.
+    RowByRow,
+    /// Maximise throughput: weights offloaded and reused across a group of
+    /// batches per layer.  Full Eq. (10).
+    ColumnByColumn,
+}
+
+/// Compatibility alias used by the CLI.
+pub type Scheduler = Planner;

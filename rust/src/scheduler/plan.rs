@@ -1,0 +1,180 @@
+//! Per-step execution planning: adaptive re-solve of the LP as the sequence
+//! grows (paper §3.2 "the optimal split point depends on the current
+//! sequence length s', which increases during generation and must therefore
+//! be determined adaptively"), quantised onto the static artifact buckets.
+
+use super::{CostModel, SchedulePolicy, Split, SplitSolver};
+
+/// Which artifact path a decode step takes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PathKind {
+    /// `decode_full_*`: transfer the whole KV cache (l = 0).
+    FullTransfer,
+    /// `recompute_* + decode_merge_*`: KVPR split schedule.
+    PartialRecompute { l: usize },
+}
+
+/// The plan for one decode step of one layer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepPlan {
+    pub path: PathKind,
+    /// Continuous-LP optimum (before bucket quantisation) — logged so
+    /// Fig 12 can be reproduced from engine traces too.
+    pub ideal_l: usize,
+    /// Predicted step time under the chosen (bucketed) path.
+    pub predicted_s: f64,
+    /// Predicted step time at l = 0.
+    pub baseline_s: f64,
+}
+
+impl StepPlan {
+    pub fn l(&self) -> usize {
+        match self.path {
+            PathKind::FullTransfer => 0,
+            PathKind::PartialRecompute { l } => l,
+        }
+    }
+}
+
+/// Adaptive planner: owns the solver + the available L buckets.
+#[derive(Debug, Clone)]
+pub struct Planner {
+    solver: SplitSolver,
+    /// Static artifact split buckets (ascending), e.g. [32, 64, 96].
+    buckets: Vec<usize>,
+    /// Upper bound on l independent of s' (the paper's `l ≤ s` constraint
+    /// when only prompt activations are retained; `usize::MAX` when the
+    /// engine stores activations for generated tokens too).
+    l_cap: usize,
+}
+
+impl Planner {
+    pub fn new(cost: CostModel, policy: SchedulePolicy, buckets: Vec<usize>, l_cap: usize) -> Self {
+        let mut buckets = buckets;
+        buckets.sort_unstable();
+        Planner { solver: SplitSolver::new(cost, policy), buckets, l_cap }
+    }
+
+    pub fn solver(&self) -> &SplitSolver {
+        &self.solver
+    }
+
+    pub fn buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    /// Continuous-grid solve (simulator; no bucket constraint).
+    pub fn solve_exact(&self, s_prime: usize) -> Split {
+        self.solver.solve(s_prime, self.l_cap.min(s_prime))
+    }
+
+    /// Plan one decode step: `kv_len` valid cached tokens (= s' here).
+    pub fn plan_step(&self, kv_len: usize) -> StepPlan {
+        let s_prime = kv_len;
+        let ideal = self.solver.solve(s_prime, self.l_cap.min(s_prime));
+        let l = self
+            .solver
+            .quantize_to_buckets(s_prime, &self.buckets, kv_len.min(self.l_cap));
+        let path = if l == 0 {
+            PathKind::FullTransfer
+        } else {
+            PathKind::PartialRecompute { l }
+        };
+        StepPlan {
+            path,
+            ideal_l: ideal.l,
+            predicted_s: self.solver.objective(l, s_prime),
+            baseline_s: self.solver.objective(0, s_prime),
+        }
+    }
+
+    /// The split-point trajectory over a whole generation (Fig 12): one
+    /// continuous-optimum l* per generated token.
+    pub fn split_trajectory(&self, prompt_len: usize, gen_len: usize) -> Vec<usize> {
+        (0..gen_len)
+            .map(|step| self.solve_exact(prompt_len + step).l)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{HardwareConfig, ModelConfig};
+
+    fn planner(policy: SchedulePolicy) -> Planner {
+        let cost = CostModel::from_hardware(
+            &HardwareConfig::a100_x16(),
+            &ModelConfig::opt_6_7b(),
+            32,
+        );
+        Planner::new(cost, policy, vec![32, 64, 96], usize::MAX)
+    }
+
+    #[test]
+    fn plan_picks_partial_when_transfer_bound() {
+        let p = planner(SchedulePolicy::RowByRow);
+        let plan = p.plan_step(128);
+        match plan.path {
+            PathKind::PartialRecompute { l } => assert!([32, 64, 96].contains(&l)),
+            PathKind::FullTransfer => panic!("expected partial recompute"),
+        }
+        assert!(plan.predicted_s <= plan.baseline_s);
+    }
+
+    #[test]
+    fn plan_respects_prompt_cap() {
+        let cost = CostModel::from_hardware(
+            &HardwareConfig::a100_x16(),
+            &ModelConfig::opt_6_7b(),
+            32,
+        );
+        let p = Planner::new(cost, SchedulePolicy::RowByRow, vec![32, 64, 96], 40);
+        let plan = p.plan_step(128);
+        assert!(plan.l() <= 40);
+    }
+
+    #[test]
+    fn trajectory_is_monotone_when_unclamped() {
+        // As s' grows the transfer side grows, so l* grows (paper Fig 12's
+        // rising trend once past the clamp).
+        let p = planner(SchedulePolicy::RowByRow);
+        let traj = p.split_trajectory(128, 32);
+        assert_eq!(traj.len(), 32);
+        for w in traj.windows(2) {
+            assert!(w[1] >= w[0], "trajectory must not decrease: {traj:?}");
+        }
+    }
+
+    #[test]
+    fn trajectory_clamps_at_prompt_when_capped() {
+        // Fig 12 with the paper's l ≤ s constraint: flat at s once l* ≥ s.
+        let cost = CostModel {
+            recompute_per_token_s: 1e-9, // recompute essentially free
+            transfer_kv_per_token_s: 1e-6,
+            transfer_act_per_token_s: 5e-7,
+            gpu_overhead_s: 0.0,
+            link_latency_s: 0.0,
+        };
+        let p = Planner::new(cost, SchedulePolicy::RowByRow, vec![], 128);
+        let traj = p.split_trajectory(128, 32);
+        assert!(traj.iter().all(|&l| l == 128), "{traj:?}");
+    }
+
+    #[test]
+    fn fulltransfer_when_no_feasible_bucket() {
+        let p = planner(SchedulePolicy::RowByRow);
+        // kv_len below the smallest bucket
+        let plan = p.plan_step(16);
+        assert_eq!(plan.path, PathKind::FullTransfer);
+        assert_eq!(plan.l(), 0);
+    }
+
+    #[test]
+    fn ideal_l_recorded() {
+        let p = planner(SchedulePolicy::RowByRow);
+        let plan = p.plan_step(128);
+        assert!(plan.ideal_l > 0);
+        assert!(plan.ideal_l <= 128);
+    }
+}

@@ -1,0 +1,331 @@
+//! The integer LP of paper Eq. (11): pick `l` minimising
+//!
+//! ```text
+//! t(l) = M_X[0:l]/v_com  +  max( N_KV[0:l]/v_gpu , M_KV[l:s']/v_com )
+//!        └─ column-by-column only ─┘
+//! subject to 0 ≤ l ≤ l_max
+//! ```
+//!
+//! With one integer variable the LP has a closed form: the max of an
+//! increasing and a decreasing affine function is unimodal, so the optimum
+//! is at their crossing (rounded both ways) or at a boundary.  `solve`
+//! evaluates that candidate set exactly; `solve_exhaustive` is the O(s')
+//! oracle the property tests compare against.
+
+use super::cost::CostModel;
+use super::SchedulePolicy;
+
+/// An LP solution.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Split {
+    /// Optimal number of tokens to recompute on the GPU.
+    pub l: usize,
+    /// Predicted per-layer step time at this split (Eq. 10).
+    pub time_s: f64,
+    /// Predicted step time at l = 0 (pure transfer) for comparison.
+    pub baseline_s: f64,
+}
+
+impl Split {
+    /// Predicted speedup over pure transfer.
+    pub fn speedup(&self) -> f64 {
+        self.baseline_s / self.time_s
+    }
+}
+
+/// Solver for the optimal split point.
+#[derive(Debug, Clone)]
+pub struct SplitSolver {
+    pub cost: CostModel,
+    pub policy: SchedulePolicy,
+}
+
+impl SplitSolver {
+    pub fn new(cost: CostModel, policy: SchedulePolicy) -> Self {
+        SplitSolver { cost, policy }
+    }
+
+    /// Eq. (10): per-layer step time if the first `l` of `s_prime` cached
+    /// tokens are recomputed and the rest transferred.
+    pub fn objective(&self, l: usize, s_prime: usize) -> f64 {
+        assert!(l <= s_prime, "l {l} > s' {s_prime}");
+        let c = &self.cost;
+        let lf = l as f64;
+        let rest = (s_prime - l) as f64;
+
+        let t_recomp = if l > 0 { c.gpu_overhead_s + c.recompute_per_token_s * lf } else { 0.0 };
+        let t_rest = if s_prime > l { c.link_latency_s + c.transfer_kv_per_token_s * rest } else { 0.0 };
+        let t_act = if l > 0 { c.link_latency_s + c.transfer_act_per_token_s * lf } else { 0.0 };
+
+        match self.policy {
+            // row-by-row drops the activation term (activations stream in
+            // ahead of the max() stage; Eq. 10 "first term omitted")
+            SchedulePolicy::RowByRow => t_recomp.max(t_rest),
+            SchedulePolicy::ColumnByColumn => t_act + t_recomp.max(t_rest),
+        }
+    }
+
+    /// Closed-form integer solve over 0 ≤ l ≤ l_max.
+    pub fn solve(&self, s_prime: usize, l_max: usize) -> Split {
+        let l_max = l_max.min(s_prime);
+        let c = &self.cost;
+
+        // crossing of t_recomp (increasing) and t_rest (decreasing):
+        //   o_g + A·l = lat + C·(s' - l)   →   l = (lat + C·s' − o_g)/(A + C)
+        // (for column-by-column the +act term is affine-increasing, which
+        // can only pull the optimum left; the candidate set below covers it
+        // because the objective is still piecewise-affine with breakpoints
+        // only at the crossing and the boundaries)
+        let a = c.recompute_per_token_s;
+        let cc = c.transfer_kv_per_token_s;
+        let cross = (c.link_latency_s + cc * s_prime as f64 - c.gpu_overhead_s) / (a + cc);
+
+        let mut candidates = vec![0usize, l_max];
+        if cross.is_finite() && cross > 0.0 {
+            let f = cross.floor() as usize;
+            candidates.push(f.min(l_max));
+            candidates.push((f + 1).min(l_max));
+        }
+        // column-by-column: the activation slope can move the interior
+        // optimum off the crossing onto the transfer-bound segment's best
+        // point, which is also the crossing — but the recompute-bound
+        // segment now has slope (act + A) > 0, so its best point is the
+        // crossing too. Boundaries + crossing remain sufficient. We add
+        // crossing±1 to absorb integer rounding.
+        if cross.is_finite() && cross >= 1.0 {
+            candidates.push(((cross.floor() as usize).saturating_sub(1)).min(l_max));
+        }
+
+        let best = candidates
+            .into_iter()
+            .map(|l| (l, self.objective(l, s_prime)))
+            .min_by(|x, y| x.1.partial_cmp(&y.1).unwrap().then(x.0.cmp(&y.0)))
+            .unwrap();
+
+        Split { l: best.0, time_s: best.1, baseline_s: self.objective(0, s_prime) }
+    }
+
+    /// O(s') brute force — the oracle for property tests.
+    pub fn solve_exhaustive(&self, s_prime: usize, l_max: usize) -> Split {
+        let l_max = l_max.min(s_prime);
+        let best = (0..=l_max)
+            .map(|l| (l, self.objective(l, s_prime)))
+            .min_by(|x, y| x.1.partial_cmp(&y.1).unwrap().then(x.0.cmp(&y.0)))
+            .unwrap();
+        Split { l: best.0, time_s: best.1, baseline_s: self.objective(0, s_prime) }
+    }
+
+    /// Pick the best *available* split from the static artifact buckets
+    /// (plus l = 0 meaning the full-transfer path).  `kv_len` bounds
+    /// feasibility: we can only recompute a prefix that exists.
+    pub fn quantize_to_buckets(&self, s_prime: usize, buckets: &[usize], kv_len: usize) -> usize {
+        let mut best_l = 0usize;
+        let mut best_t = self.objective(0, s_prime);
+        for &b in buckets {
+            if b <= kv_len && b <= s_prime {
+                let t = self.objective(b, s_prime);
+                if t < best_t {
+                    best_t = t;
+                    best_l = b;
+                }
+            }
+        }
+        best_l
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{HardwareConfig, ModelConfig};
+    use crate::util::prng::check_property;
+
+    fn cm(a: f64, c: f64) -> CostModel {
+        CostModel {
+            recompute_per_token_s: a,
+            transfer_kv_per_token_s: c,
+            transfer_act_per_token_s: c / 2.0,
+            gpu_overhead_s: 0.0,
+            link_latency_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn balanced_costs_split_in_the_middle() {
+        // A == C, no overheads → crossing at s'/2
+        let s = SplitSolver::new(cm(1e-6, 1e-6), SchedulePolicy::RowByRow);
+        let sol = s.solve(1000, 1000);
+        assert!((499..=501).contains(&sol.l), "l = {}", sol.l);
+        // and the step time halves vs pure transfer
+        assert!((sol.speedup() - 2.0).abs() < 0.01, "speedup {}", sol.speedup());
+    }
+
+    #[test]
+    fn free_recompute_wants_everything() {
+        // A → 0: recompute all s' tokens
+        let s = SplitSolver::new(cm(1e-12, 1e-6), SchedulePolicy::RowByRow);
+        assert_eq!(s.solve(512, 512).l, 512);
+    }
+
+    #[test]
+    fn expensive_recompute_wants_nothing() {
+        // A ≫ C: pure transfer
+        let s = SplitSolver::new(cm(1e-3, 1e-9), SchedulePolicy::RowByRow);
+        assert_eq!(s.solve(512, 512).l, 0);
+    }
+
+    #[test]
+    fn l_max_caps_the_split() {
+        let s = SplitSolver::new(cm(1e-9, 1e-6), SchedulePolicy::RowByRow);
+        let sol = s.solve(1000, 128); // paper constraint l ≤ s (prompt len)
+        assert_eq!(sol.l, 128);
+    }
+
+    #[test]
+    fn row_by_row_matches_paper_fraction() {
+        // l*/s' = C/(A+C) without overheads
+        let a = 0.7e-6;
+        let c = 1.3e-6;
+        let s = SplitSolver::new(cm(a, c), SchedulePolicy::RowByRow);
+        let sol = s.solve(10_000, 10_000);
+        let want = c / (a + c) * 10_000.0;
+        assert!((sol.l as f64 - want).abs() <= 1.0, "{} vs {want}", sol.l);
+    }
+
+    #[test]
+    fn column_schedule_recomputes_less() {
+        // paying C/2·l for activations shifts the optimum left (or equal)
+        let cost = cm(1e-6, 1e-6);
+        let row = SplitSolver::new(cost.clone(), SchedulePolicy::RowByRow).solve(1000, 1000);
+        let col = SplitSolver::new(cost, SchedulePolicy::ColumnByColumn).solve(1000, 1000);
+        assert!(col.l <= row.l, "col {} row {}", col.l, row.l);
+    }
+
+    #[test]
+    fn overheads_disable_tiny_recompute() {
+        // with a large launch overhead, recomputing 1 token can't pay off
+        let mut c = cm(1e-9, 1e-9);
+        c.gpu_overhead_s = 1.0;
+        let s = SplitSolver::new(c, SchedulePolicy::RowByRow);
+        assert_eq!(s.solve(100, 100).l, 0);
+    }
+
+    #[test]
+    fn closed_form_matches_exhaustive_paper_scale() {
+        for (model, batch) in [
+            (ModelConfig::opt_6_7b(), 32),
+            (ModelConfig::opt_13b(), 32),
+            (ModelConfig::opt_30b(), 16),
+        ] {
+            for policy in [SchedulePolicy::RowByRow, SchedulePolicy::ColumnByColumn] {
+                let cost = CostModel::from_hardware(&HardwareConfig::a100_x16(), &model, batch);
+                let s = SplitSolver::new(cost, policy);
+                for s_prime in [128usize, 300, 1024, 1153] {
+                    let fast = s.solve(s_prime, s_prime);
+                    let slow = s.solve_exhaustive(s_prime, s_prime);
+                    assert_eq!(fast.l, slow.l, "{} s'={s_prime} {policy:?}", model.name);
+                    assert!((fast.time_s - slow.time_s).abs() < 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn property_closed_form_is_optimal() {
+        check_property("split_optimality", 60, |rng| {
+            let a = 10f64.powf(rng.next_f64() * 6.0 - 9.0); // 1e-9 .. 1e-3
+            let c = 10f64.powf(rng.next_f64() * 6.0 - 9.0);
+            let mut cost = cm(a, c);
+            cost.gpu_overhead_s = rng.next_f64() * 1e-4;
+            cost.link_latency_s = rng.next_f64() * 1e-4;
+            let policy = if rng.next_f64() < 0.5 {
+                SchedulePolicy::RowByRow
+            } else {
+                SchedulePolicy::ColumnByColumn
+            };
+            let solver = SplitSolver::new(cost, policy);
+            let s_prime = 1 + rng.index(2000);
+            let l_max = 1 + rng.index(s_prime);
+            let fast = solver.solve(s_prime, l_max);
+            let slow = solver.solve_exhaustive(s_prime, l_max);
+            if (fast.time_s - slow.time_s).abs() > 1e-15 + 1e-9 * slow.time_s {
+                return Err(format!(
+                    "fast l={} t={} vs exhaustive l={} t={} (s'={s_prime}, l_max={l_max}, {policy:?})",
+                    fast.l, fast.time_s, slow.l, slow.time_s
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_solution_never_worse_than_baseline() {
+        check_property("split_beats_baseline", 40, |rng| {
+            let cost = cm(
+                10f64.powf(rng.next_f64() * 4.0 - 8.0),
+                10f64.powf(rng.next_f64() * 4.0 - 8.0),
+            );
+            let solver = SplitSolver::new(cost, SchedulePolicy::RowByRow);
+            let s_prime = 1 + rng.index(1500);
+            let sol = solver.solve(s_prime, s_prime);
+            if sol.time_s <= sol.baseline_s + 1e-15 {
+                Ok(())
+            } else {
+                Err(format!("t {} > baseline {}", sol.time_s, sol.baseline_s))
+            }
+        });
+    }
+
+    #[test]
+    fn property_monotone_in_gpu_speed() {
+        // a faster GPU (smaller A) never wants to recompute fewer tokens
+        check_property("split_monotone_gpu", 30, |rng| {
+            let c = 1e-6;
+            let a1 = 10f64.powf(rng.next_f64() * 3.0 - 7.5);
+            let a2 = a1 * (1.0 + rng.next_f64() * 10.0);
+            let s_prime = 10 + rng.index(1000);
+            let l1 = SplitSolver::new(cm(a1, c), SchedulePolicy::RowByRow)
+                .solve(s_prime, s_prime)
+                .l;
+            let l2 = SplitSolver::new(cm(a2, c), SchedulePolicy::RowByRow)
+                .solve(s_prime, s_prime)
+                .l;
+            if l1 >= l2 {
+                Ok(())
+            } else {
+                Err(format!("faster GPU recomputes less: {l1} < {l2}"))
+            }
+        });
+    }
+
+    #[test]
+    fn bucket_quantization_picks_best_feasible() {
+        let solver = SplitSolver::new(cm(1e-6, 1e-6), SchedulePolicy::RowByRow);
+        let buckets = [32, 64, 96];
+        // optimum ≈ s'/2 = 60 → nearest best feasible bucket is 64
+        assert_eq!(solver.quantize_to_buckets(120, &buckets, 120), 64);
+        // kv_len too short for 64 → 32
+        assert_eq!(solver.quantize_to_buckets(120, &buckets, 40), 32);
+        // recompute hopeless → 0
+        let bad = SplitSolver::new(cm(1.0, 1e-9), SchedulePolicy::RowByRow);
+        assert_eq!(bad.quantize_to_buckets(120, &buckets, 120), 0);
+    }
+
+    #[test]
+    fn bucket_choice_never_worse_than_neighbours() {
+        let solver = SplitSolver::new(
+            CostModel::from_hardware(&HardwareConfig::a100_x16(), &ModelConfig::opt_6_7b(), 32),
+            SchedulePolicy::RowByRow,
+        );
+        let buckets = [32, 64, 96];
+        for s_prime in [96usize, 100, 128] {
+            let l = solver.quantize_to_buckets(s_prime, &buckets, s_prime);
+            let t = solver.objective(l, s_prime);
+            for &alt in buckets.iter().chain(std::iter::once(&0)) {
+                if alt <= s_prime {
+                    assert!(t <= solver.objective(alt, s_prime) + 1e-15);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,27 @@
+//! Discrete-event simulator of the paper's testbeds.
+//!
+//! DESIGN.md §2: our container has no A100/PCIe, so every paper table and
+//! figure is regenerated on a timeline simulator parameterised by the
+//! paper's hardware (`HardwareConfig::a100_x16` / `rtx5000_x8`) and model
+//! geometries.  The simulator is a *list scheduler over FIFO resources*
+//! (GPU, H2D link, D2H link, CPU): each task occupies one resource for an
+//! analytic duration and starts when both its dependencies and its resource
+//! are free — exactly the semantics of CUDA streams + PCIe DMA queues that
+//! the real systems (and our engine's `transfer::Link`) exhibit.
+//!
+//! Policies implemented (paper §4 + §5 baselines):
+//! `Accelerate` (sync KV offloading), `DeepSpeed`, `FlexGen` (overlapped
+//! full transfer), `Kvpr` (+`fine_grained` hiding flag), `KvprNoHide`,
+//! `AlisaLike` (recompute then transfer), `FastDecode` (CPU attention).
+
+mod core;
+mod policies;
+mod run;
+
+pub use self::core::{ResourceId, Sim, TaskId, TaskKind};
+pub use policies::{Policy, StepCtx};
+pub use run::{simulate_decode, RunConfig, RunReport, UtilSample};
+
+/// Public re-export of the per-layer pipeline builder (used by custom
+/// topologies like `paper::fig14_multigpu`'s shared-CPU setup).
+pub use policies::build_layer as build_layer_pub;

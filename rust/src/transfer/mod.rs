@@ -1,0 +1,22 @@
+//! The emulated CPU↔GPU interconnect.
+//!
+//! DESIGN.md §2: we have no PCIe-attached GPU, so the link is a real
+//! background thread that moves bytes between host-side and device-side
+//! buffers at a configurable throttled bandwidth with a fixed per-transfer
+//! latency.  Because the throttling happens on a *separate thread*, compute
+//! (PJRT execution on the caller thread) and communication genuinely
+//! overlap — the engine's KVPR pipeline wins wall-clock time for exactly
+//! the reason the paper's does.
+//!
+//! * [`Link`] — ordered, prioritised copy engine (one per direction, like
+//!   CUDA's H2D/D2H queues).  Priorities implement the fine-grained MHA
+//!   pipeline (W_K/W_V jump the queue, paper Fig 5b).
+//! * [`TransferHandle`] — awaitable completion event (CUDA-event analogue).
+//! * [`PinnedPool`] — reusable staging buffers (pinned-memory analogue,
+//!   paper §3.3 "Pinned memory"): steady-state decode allocates nothing.
+
+mod link;
+mod pinned;
+
+pub use link::{Link, LinkConfig, LinkStats, Priority, TransferHandle};
+pub use pinned::PinnedPool;

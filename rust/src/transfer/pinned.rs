@@ -1,0 +1,104 @@
+//! Pinned staging-buffer pool.
+//!
+//! The paper (§3.3) pins the host buffers used for activation and weight
+//! transfer so DMA can run asynchronously without page faults.  The analogue
+//! here: a freelist of pre-sized `Vec<f32>` buffers, so the steady-state
+//! decode loop performs **zero heap allocation** for staging — the property
+//! the §Perf pass measures.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Size-bucketed freelist of reusable f32 buffers.
+#[derive(Debug, Default)]
+pub struct PinnedPool {
+    free: Mutex<HashMap<usize, Vec<Vec<f32>>>>,
+    hits: std::sync::atomic::AtomicU64,
+    misses: std::sync::atomic::AtomicU64,
+}
+
+impl PinnedPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get a zero-length buffer with at least `capacity` elements reserved.
+    pub fn get(&self, capacity: usize) -> Vec<f32> {
+        let mut free = self.free.lock().unwrap();
+        if let Some(list) = free.get_mut(&capacity) {
+            if let Some(mut buf) = list.pop() {
+                buf.clear();
+                self.hits.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                return buf;
+            }
+        }
+        drop(free);
+        self.misses.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        Vec::with_capacity(capacity)
+    }
+
+    /// Return a buffer to the pool (keyed by its capacity).
+    pub fn put(&self, buf: Vec<f32>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        let mut free = self.free.lock().unwrap();
+        free.entry(buf.capacity()).or_default().push(buf);
+    }
+
+    /// Pre-populate `count` buffers of `capacity` elements (warmup).
+    pub fn reserve(&self, capacity: usize, count: usize) {
+        let mut free = self.free.lock().unwrap();
+        let list = free.entry(capacity).or_default();
+        for _ in 0..count {
+            list.push(Vec::with_capacity(capacity));
+        }
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let h = self.hits.load(std::sync::atomic::Ordering::Relaxed) as f64;
+        let m = self.misses.load(std::sync::atomic::Ordering::Relaxed) as f64;
+        if h + m == 0.0 {
+            0.0
+        } else {
+            h / (h + m)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reuse_roundtrip() {
+        let pool = PinnedPool::new();
+        let mut a = pool.get(1024);
+        a.extend_from_slice(&[1.0, 2.0]);
+        let cap = a.capacity();
+        pool.put(a);
+        let b = pool.get(cap);
+        assert_eq!(b.len(), 0, "recycled buffer must come back cleared");
+        assert_eq!(b.capacity(), cap);
+        assert!(pool.hit_rate() > 0.0);
+    }
+
+    #[test]
+    fn warmup_gives_hits() {
+        let pool = PinnedPool::new();
+        pool.reserve(256, 4);
+        for _ in 0..4 {
+            let b = pool.get(256);
+            assert_eq!(b.capacity(), 256);
+        }
+        assert_eq!(pool.hit_rate(), 1.0);
+    }
+
+    #[test]
+    fn miss_allocates() {
+        let pool = PinnedPool::new();
+        let b = pool.get(512);
+        assert!(b.capacity() >= 512);
+        assert_eq!(pool.hit_rate(), 0.0);
+    }
+}

@@ -1,0 +1,69 @@
+//! Small self-contained substrates: a mini JSON parser/writer (the vendored
+//! crate set has no serde facade), a deterministic PRNG (no `rand`), basic
+//! statistics, and a fixed-width table printer used by the bench harnesses.
+
+pub mod json;
+pub mod prng;
+pub mod stats;
+pub mod table;
+
+/// Global lock serialising wall-clock-sensitive tests.  `cargo test` runs
+/// tests concurrently; on a 2-core box a spinning link worker plus a busy
+/// caller plus an unrelated test is oversubscribed and timing asserts turn
+/// flaky.  Timing tests take this lock first.
+#[cfg(test)]
+pub(crate) fn timing_lock() -> std::sync::MutexGuard<'static, ()> {
+    use std::sync::{Mutex, OnceLock};
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+}
+
+/// Format a byte count human-readably (MiB with 1 decimal below 1 GiB).
+pub fn fmt_bytes(bytes: u64) -> String {
+    const GIB: f64 = (1u64 << 30) as f64;
+    const MIB: f64 = (1u64 << 20) as f64;
+    const KIB: f64 = 1024.0;
+    let b = bytes as f64;
+    if b >= GIB {
+        format!("{:.2} GiB", b / GIB)
+    } else if b >= MIB {
+        format!("{:.1} MiB", b / MIB)
+    } else if b >= KIB {
+        format!("{:.1} KiB", b / KIB)
+    } else {
+        format!("{bytes} B")
+    }
+}
+
+/// Format seconds with an adaptive unit (s / ms / µs).
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} µs", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.0 KiB");
+        assert_eq!(fmt_bytes(5 << 20), "5.0 MiB");
+        assert_eq!(fmt_bytes(3 << 30), "3.00 GiB");
+    }
+
+    #[test]
+    fn secs_units() {
+        assert_eq!(fmt_secs(2.5), "2.500 s");
+        assert_eq!(fmt_secs(0.0156), "15.600 ms");
+        assert_eq!(fmt_secs(3.5e-6), "3.5 µs");
+    }
+}

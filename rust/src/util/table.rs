@@ -1,0 +1,110 @@
+//! Fixed-width text table printer for the bench harnesses — every paper
+//! table/figure reproduction prints through this so the reports have one
+//! consistent look and can be diffed run-to-run.
+
+use std::fmt::Write as _;
+
+#[derive(Debug, Clone)]
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_display(&mut self, cells: &[&dyn std::fmt::Display]) -> &mut Self {
+        let cells: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
+        self.row(&cells)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let total: usize = widths.iter().sum::<usize>() + 3 * ncol + 1;
+        let _ = writeln!(out, "{}", self.title);
+        let _ = writeln!(out, "{}", "=".repeat(total.min(100)));
+        let mut line = String::from("|");
+        for (h, w) in self.headers.iter().zip(&widths) {
+            let _ = write!(line, " {h:<w$} |");
+        }
+        let _ = writeln!(out, "{line}");
+        let _ = writeln!(out, "{}", "-".repeat(line.len()));
+        for row in &self.rows {
+            let mut line = String::from("|");
+            for (c, w) in row.iter().zip(&widths) {
+                let _ = write!(line, " {c:>w$} |");
+            }
+            let _ = writeln!(out, "{line}");
+        }
+        out
+    }
+
+    /// Print to stdout and append to `reports/<slug>.txt` when the reports
+    /// directory exists (bench harness convention).
+    pub fn emit(&self, slug: &str) {
+        let rendered = self.render();
+        println!("{rendered}");
+        let dir = std::path::Path::new("reports");
+        if dir.is_dir() {
+            let path = dir.join(format!("{slug}.txt"));
+            let _ = std::fs::write(path, &rendered);
+        }
+    }
+}
+
+/// Shorthand for formatting a float cell.
+pub fn f(x: f64, decimals: usize) -> String {
+    format!("{x:.decimals$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("T", &["model", "latency (ms)"]);
+        t.row(&["opt-6.7b".into(), "15.6".into()]);
+        t.row(&["opt-30b".into(), "27.3".into()]);
+        let s = t.render();
+        assert!(s.contains("| model    | latency (ms) |"));
+        assert!(s.contains("| opt-6.7b |         15.6 |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn float_helper() {
+        assert_eq!(f(1.23456, 2), "1.23");
+        assert_eq!(f(10.0, 3), "10.000");
+    }
+}

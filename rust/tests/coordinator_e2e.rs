@@ -1,0 +1,82 @@
+//! Coordinator end-to-end: requests through server → batcher → engine,
+//! and the data-parallel router.
+
+use std::time::Duration;
+
+use kvpr::coordinator::{Batcher, Router, Server, ServerConfig};
+use kvpr::engine::{EngineConfig, EnginePolicy};
+use kvpr::transfer::LinkConfig;
+
+fn scfg() -> Option<ServerConfig> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        return None;
+    }
+    let mut ecfg = EngineConfig::new(EnginePolicy::Kvpr);
+    ecfg.link = LinkConfig::with_bandwidth(500e6);
+    let mut cfg = ServerConfig::new(dir.to_str().unwrap(), ecfg);
+    cfg.batcher = Batcher::new(4, Duration::from_millis(10));
+    Some(cfg)
+}
+
+#[test]
+fn serves_batched_requests() {
+    let Some(cfg) = scfg() else { return };
+    let server = Server::start(cfg).unwrap();
+    let handles: Vec<_> = (0..4)
+        .map(|i| server.submit(&format!("request number {i}"), 6))
+        .collect();
+    for h in handles {
+        let r = h.wait().unwrap();
+        assert_eq!(r.tokens.len(), 6);
+        assert!(r.total_s > 0.0);
+        assert!(r.decode_s > 0.0);
+    }
+    assert_eq!(server.metrics().requests(), 4);
+    // 4 requests with batch limit 4 and same instant → ideally one batch
+    assert!(server.metrics().batches() <= 2);
+    assert_eq!(server.metrics().tokens(), 24);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn same_prompt_same_tokens_across_batches() {
+    let Some(cfg) = scfg() else { return };
+    let server = Server::start(cfg).unwrap();
+    let a = server.submit("determinism", 6).wait().unwrap();
+    let b = server.submit("determinism", 6).wait().unwrap();
+    assert_eq!(a.tokens, b.tokens, "same prompt must decode identically");
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn truncates_to_requested_gen_len() {
+    let Some(mut cfg) = scfg() else { return };
+    cfg.batcher = Batcher::new(2, Duration::from_millis(200));
+    let server = Server::start(cfg).unwrap();
+    // two requests with different gen lengths share a batch; the shorter
+    // one is truncated on return
+    let h1 = server.submit("short one", 3);
+    let h2 = server.submit("long one", 8);
+    let r1 = h1.wait().unwrap();
+    let r2 = h2.wait().unwrap();
+    assert_eq!(r1.tokens.len(), 3);
+    assert_eq!(r2.tokens.len(), 8);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn router_round_robins_two_workers() {
+    let Some(cfg) = scfg() else { return };
+    let router = Router::start(&cfg, 2).unwrap();
+    assert_eq!(router.n_servers(), 2);
+    let handles: Vec<_> = (0..4).map(|i| router.submit(&format!("r{i}"), 4)).collect();
+    for h in handles {
+        h.wait().unwrap();
+    }
+    assert_eq!(router.total_requests(), 4);
+    // both workers must have seen traffic
+    assert!(router.server(0).metrics().requests() > 0);
+    assert!(router.server(1).metrics().requests() > 0);
+    router.shutdown().unwrap();
+}

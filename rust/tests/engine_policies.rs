@@ -1,0 +1,164 @@
+//! Engine-level invariants: every policy generates the *same tokens*
+//! (the paper's exactness claim), schedules behave as configured, and the
+//! engine matches the pure-Rust reference generation.
+
+use std::path::PathBuf;
+
+use kvpr::engine::{Engine, EngineConfig, EnginePolicy};
+use kvpr::model::{ByteTokenizer, RefModel};
+use kvpr::transfer::LinkConfig;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn fast_cfg(policy: EnginePolicy) -> EngineConfig {
+    let mut cfg = EngineConfig::new(policy);
+    // fast link so tests don't crawl; correctness is bandwidth-independent
+    cfg.link = LinkConfig::with_bandwidth(500e6);
+    cfg.seed = 77;
+    cfg
+}
+
+fn prompts() -> Vec<Vec<i32>> {
+    let tok = ByteTokenizer::new();
+    vec![
+        tok.encode("hello kvpr world", 16),
+        tok.encode("partial recomputation", 16),
+    ]
+}
+
+#[test]
+fn all_policies_generate_identical_tokens() {
+    let Some(dir) = artifacts() else { return };
+    let mut reference: Option<Vec<Vec<i32>>> = None;
+    for policy in [
+        EnginePolicy::FullTransferSync,
+        EnginePolicy::FullTransferOverlap,
+        EnginePolicy::Kvpr,
+        EnginePolicy::KvprFused,
+        EnginePolicy::AlisaSequential,
+    ] {
+        let engine = Engine::new(&dir, fast_cfg(policy)).unwrap();
+        let r = engine.generate(&prompts(), 10).unwrap();
+        assert_eq!(r.tokens.len(), 2);
+        assert_eq!(r.tokens[0].len(), 10);
+        match &reference {
+            None => reference = Some(r.tokens),
+            Some(want) => assert_eq!(want, &r.tokens, "policy {policy:?} diverged"),
+        }
+    }
+}
+
+#[test]
+fn engine_matches_pure_rust_reference() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::new(&dir, fast_cfg(EnginePolicy::Kvpr)).unwrap();
+    let prompts = prompts();
+    let r = engine.generate(&prompts, 8).unwrap();
+
+    // the reference generates with the same weights (same seed) and the
+    // same padded prompt layout: batch bucket 4, prompt bucket 16
+    let rm = RefModel::new(engine.weights.clone());
+    let sp = 16;
+    let mut flat = Vec::new();
+    for i in 0..4 {
+        let src = &prompts[i.min(prompts.len() - 1)];
+        for j in 0..sp {
+            flat.push(*src.get(j).unwrap_or(&258));
+        }
+    }
+    let want = rm.generate(&flat, 4, sp, 8, 128);
+    assert_eq!(r.tokens[0], want[0], "sequence 0");
+    assert_eq!(r.tokens[1], want[1], "sequence 1");
+}
+
+#[test]
+fn kvpr_records_splits_and_baseline_doesnt_recompute() {
+    let Some(dir) = artifacts() else { return };
+    // slow link → the LP must pick l > 0 once kv_len ≥ smallest bucket;
+    // use the 32-token prompt bucket so kv_len starts at a feasible length
+    let mut cfg = fast_cfg(EnginePolicy::Kvpr);
+    cfg.link = LinkConfig::with_bandwidth(10e6);
+    let engine = Engine::new(&dir, cfg).unwrap();
+    let tok = ByteTokenizer::new();
+    let long_prompts = vec![
+        tok.encode("a prompt that pads into the thirty-two bucket", 32),
+        tok.encode("another prompt that pads into the same bucket", 32),
+    ];
+    let r = engine.generate(&long_prompts, 8).unwrap();
+    assert_eq!(r.metrics.splits.len(), 7);
+    assert!(
+        r.metrics.splits.iter().any(|&l| l > 0),
+        "KVPR never recomputed on a slow link: {:?}",
+        r.metrics.splits
+    );
+    assert!(r.metrics.breakdown.recompute_s > 0.0);
+
+    let engine = Engine::new(&dir, fast_cfg(EnginePolicy::FullTransferOverlap)).unwrap();
+    let r = engine.generate(&prompts(), 8).unwrap();
+    assert!(r.metrics.splits.iter().all(|&l| l == 0));
+    assert_eq!(r.metrics.breakdown.recompute_s, 0.0);
+}
+
+#[test]
+fn column_schedule_matches_row_schedule_tokens() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::new(&dir, fast_cfg(EnginePolicy::Kvpr)).unwrap();
+    let row = engine.generate(&prompts(), 8).unwrap();
+
+    let mut cfg = fast_cfg(EnginePolicy::Kvpr);
+    cfg.weights_offloaded = true; // column regime
+    let engine = Engine::new(&dir, cfg).unwrap();
+    let col = engine
+        .generate_column(&[prompts(), prompts()], 8)
+        .unwrap();
+    assert_eq!(col.len(), 2);
+    assert_eq!(col[0].tokens, row.tokens, "group 0");
+    assert_eq!(col[1].tokens, row.tokens, "group 1 (same prompts)");
+    // weight traffic must have been charged
+    assert!(col[0].metrics.breakdown.wait_weights_s >= 0.0);
+}
+
+#[test]
+fn metrics_are_sane() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::new(&dir, fast_cfg(EnginePolicy::Kvpr)).unwrap();
+    let r = engine.generate(&prompts(), 6).unwrap();
+    let m = &r.metrics;
+    assert!(m.prefill_s > 0.0);
+    assert!(m.decode_s > 0.0);
+    assert_eq!(m.tokens_generated, 2 * 5);
+    assert!(m.gpu_peak_bytes > 0);
+    assert!(m.h2d_bytes > 0, "decode must move KV bytes");
+    let bd_total = m.breakdown.total();
+    assert!(bd_total > 0.0 && bd_total <= m.decode_s * 1.5 + m.prefill_s);
+    assert!(m.decode_tok_per_s() > 0.0);
+}
+
+#[test]
+fn fine_grained_weight_pipeline_runs() {
+    let Some(dir) = artifacts() else { return };
+    let mut cfg = fast_cfg(EnginePolicy::Kvpr);
+    cfg.weights_offloaded = true;
+    cfg.fine_grained_weights = true;
+    cfg.link = LinkConfig::with_bandwidth(50e6);
+    let engine = Engine::new(&dir, cfg).unwrap();
+    let r = engine.generate(&prompts(), 6).unwrap();
+    // weight waits must be accounted and tokens still exact vs non-offloaded
+    let engine2 = Engine::new(&dir, fast_cfg(EnginePolicy::Kvpr)).unwrap();
+    let r2 = engine2.generate(&prompts(), 6).unwrap();
+    assert_eq!(r.tokens, r2.tokens, "offloading must not change tokens");
+}
+
+#[test]
+fn rejects_oversized_requests() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::new(&dir, fast_cfg(EnginePolicy::Kvpr)).unwrap();
+    // gen too long for the cache capacity
+    assert!(engine.generate(&prompts(), 128).is_err());
+    // batch too large for any bucket
+    let many: Vec<Vec<i32>> = (0..9).map(|_| vec![1i32; 16]).collect();
+    assert!(engine.generate(&many, 4).is_err());
+}

@@ -1,0 +1,184 @@
+//! Paper-shape assertions over the simulator: who wins, by roughly what
+//! factor, and where the crossovers fall — the reproduction contract of
+//! DESIGN.md §6.
+
+use kvpr::config::{HardwareConfig, ModelConfig, WorkloadConfig};
+use kvpr::sim::{simulate_decode, Policy, RunConfig};
+
+fn lat(model: ModelConfig, p: usize, g: usize, policy: Policy) -> f64 {
+    simulate_decode(&RunConfig::new(
+        model,
+        HardwareConfig::a100_x16(),
+        WorkloadConfig::latency_oriented(p, g),
+        policy,
+    ))
+    .decode_s
+}
+
+fn thr(model: ModelConfig, hw: HardwareConfig, p: usize, g: usize, policy: Policy) -> f64 {
+    simulate_decode(&RunConfig::new(
+        model,
+        hw,
+        WorkloadConfig::throughput_oriented(p, g),
+        policy,
+    ))
+    .tok_per_s
+}
+
+#[test]
+fn fig7_latency_cut_in_paper_band() {
+    // paper: up to 35.8% lower decode latency vs Accelerate
+    for model in [ModelConfig::opt_6_7b(), ModelConfig::opt_13b()] {
+        for (p, g) in [(128, 128), (512, 32)] {
+            let acc = lat(model.clone(), p, g, Policy::Accelerate);
+            let kv = lat(model.clone(), p, g, Policy::Kvpr);
+            let cut = 1.0 - kv / acc;
+            assert!(
+                (0.05..0.45).contains(&cut),
+                "{} {p}/{g}: cut {:.1}% outside the paper band",
+                model.name,
+                cut * 100.0
+            );
+        }
+    }
+}
+
+#[test]
+fn fig6_throughput_gain_in_paper_band() {
+    // paper: up to 15.1% / 46.2% / 29.0% for OPT-6.7B/13B/30B
+    let hw = HardwareConfig::a100_x16();
+    for model in [ModelConfig::opt_6_7b(), ModelConfig::opt_13b(), ModelConfig::opt_30b()] {
+        let flex = thr(model.clone(), hw.clone(), 1024, 32, Policy::FlexGen);
+        let kvpr = thr(model.clone(), hw.clone(), 1024, 32, Policy::Kvpr);
+        let gain = kvpr / flex - 1.0;
+        assert!(
+            (0.03..0.55).contains(&gain),
+            "{}: gain {:.1}% outside band",
+            model.name,
+            gain * 100.0
+        );
+    }
+}
+
+#[test]
+fn throughput_decreases_with_model_size() {
+    let hw = HardwareConfig::a100_x16();
+    let t67 = thr(ModelConfig::opt_6_7b(), hw.clone(), 512, 32, Policy::Kvpr);
+    let t13 = thr(ModelConfig::opt_13b(), hw.clone(), 512, 32, Policy::Kvpr);
+    let t30 = thr(ModelConfig::opt_30b(), hw, 512, 32, Policy::Kvpr);
+    assert!(t67 > t13 && t13 > t30, "{t67} {t13} {t30}");
+}
+
+#[test]
+fn longer_context_favours_kvpr_more() {
+    // Fig 6: "as the KV cache grows larger, KVPR shows greater performance
+    // benefits"
+    let hw = HardwareConfig::a100_x16();
+    let gain = |p| {
+        let f = thr(ModelConfig::opt_13b(), hw.clone(), p, 32, Policy::FlexGen);
+        let k = thr(ModelConfig::opt_13b(), hw.clone(), p, 32, Policy::Kvpr);
+        k / f - 1.0
+    };
+    assert!(gain(1024) > gain(256), "{} vs {}", gain(1024), gain(256));
+}
+
+#[test]
+fn table5_lowend_still_wins() {
+    // paper: up to 15% on the RTX 5000 / x8 system
+    let hw = HardwareConfig::rtx5000_x8();
+    let flex = thr(ModelConfig::opt_6_7b(), hw.clone(), 1024, 32, Policy::FlexGen);
+    let kvpr = thr(ModelConfig::opt_6_7b(), hw, 1024, 32, Policy::Kvpr);
+    let gain = kvpr / flex - 1.0;
+    assert!(gain > 0.02, "low-end gain {:.1}%", gain * 100.0);
+}
+
+#[test]
+fn fig13_llama_shape() {
+    // KVPR must beat both baselines on LLaMa2 geometries too
+    for model in [ModelConfig::llama2_7b(), ModelConfig::llama2_13b()] {
+        let acc = lat(model.clone(), 256, 32, Policy::Accelerate);
+        let ds = lat(model.clone(), 256, 32, Policy::DeepSpeed);
+        let kv = lat(model.clone(), 256, 32, Policy::Kvpr);
+        assert!(kv < acc && kv < ds, "{}: {kv} vs {acc}/{ds}", model.name);
+    }
+}
+
+#[test]
+fn alisa_sits_between_flexgen_and_kvpr() {
+    // sequential recompute-then-transfer saves volume but loses the overlap
+    let hw = HardwareConfig::a100_x16();
+    let model = ModelConfig::opt_6_7b();
+    let flex = thr(model.clone(), hw.clone(), 1024, 16, Policy::FlexGen);
+    let alisa = thr(model.clone(), hw.clone(), 1024, 16, Policy::AlisaLike);
+    let kvpr = thr(model, hw, 1024, 16, Policy::Kvpr);
+    assert!(kvpr > alisa, "kvpr {kvpr} vs alisa {alisa}");
+    // ALISA transfers fewer bytes but serialises recompute before the
+    // remainder transfer *and* loses the cross-layer link overlap, so it can
+    // land below FlexGen — the point of the comparison is that the overlap
+    // (KVPR's contribution over ALISA, paper §5) is what wins, not the
+    // volume reduction alone.
+    assert!(
+        alisa > flex * 0.6,
+        "alisa unreasonably slow: {alisa} vs flexgen {flex}"
+    );
+    assert!(
+        kvpr / alisa > 1.15,
+        "the overlap must be worth a clear margin: kvpr {kvpr} vs alisa {alisa}"
+    );
+}
+
+#[test]
+fn fig9_quant_gain_band() {
+    let hw = HardwareConfig::a100_x16();
+    let model = ModelConfig::opt_13b();
+    let wl = WorkloadConfig::throughput_oriented(1024, 16);
+    let plain = simulate_decode(&RunConfig::new(model.clone(), hw.clone(), wl.clone(), Policy::Kvpr));
+    let mut wlq = wl;
+    wlq.kv_quant_4bit = true;
+    let quant = simulate_decode(&RunConfig::new(model, hw, wlq, Policy::Kvpr));
+    let gain = quant.tok_per_s / plain.tok_per_s - 1.0;
+    assert!(gain > 0.10, "quant gain {:.1}%", gain * 100.0);
+}
+
+#[test]
+fn table2_hiding_never_loses_to_coarse_when_weight_bound() {
+    // weight-bound regime: batch 1, weights offloaded
+    let hw = HardwareConfig::a100_x16();
+    let model = ModelConfig::opt_6_7b();
+    let mut wl = WorkloadConfig::throughput_oriented(256, 16);
+    wl.batch = 1;
+    wl.n_batches = 1;
+    let fine = simulate_decode(&RunConfig::new(model.clone(), hw.clone(), wl.clone(), Policy::Kvpr));
+    let flex = simulate_decode(&RunConfig::new(model, hw, wl, Policy::FlexGen));
+    // paper's claim: with hiding, KVPR is "no worse than the baseline"
+    assert!(
+        fine.decode_s <= flex.decode_s * 1.03,
+        "hiding violated: kvpr {} vs flexgen {}",
+        fine.decode_s,
+        flex.decode_s
+    );
+}
+
+#[test]
+fn splits_respect_prompt_cap_and_grow() {
+    let r = simulate_decode(&RunConfig::new(
+        ModelConfig::opt_6_7b(),
+        HardwareConfig::a100_x16(),
+        WorkloadConfig::latency_oriented(128, 32),
+        Policy::Kvpr,
+    ));
+    assert!(r.splits.iter().all(|&l| l <= 128));
+    assert!(r.splits.windows(2).all(|w| w[1] >= w[0]));
+}
+
+#[test]
+fn utilization_ordering_holds_across_hardware() {
+    for hw in [HardwareConfig::a100_x16(), HardwareConfig::rtx5000_x8()] {
+        let wl = WorkloadConfig::throughput_oriented(512, 8);
+        let flex = simulate_decode(&RunConfig::new(
+            ModelConfig::opt_6_7b(), hw.clone(), wl.clone(), Policy::FlexGen));
+        let kvpr = simulate_decode(&RunConfig::new(
+            ModelConfig::opt_6_7b(), hw.clone(), wl, Policy::Kvpr));
+        assert!(kvpr.gpu_util > flex.gpu_util, "{}", hw.name);
+    }
+}
