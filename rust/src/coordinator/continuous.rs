@@ -1,0 +1,378 @@
+//! The continuous-batching serving loop: the step-driven event loop that
+//! finally wires coordinator → scheduler → engine together.
+//!
+//! One worker thread owns the engine and advances the world one **decode
+//! step** at a time:
+//!
+//! 1. **Admission** — queued requests are grouped (up to `max_group`) and
+//!    prefilled into a fresh [`DecodeSession`]; a session's full KV-cache
+//!    reservation is charged against the `kv_budget_bytes` [`MemPool`]
+//!    *before* prefill, so an exhausted budget holds requests in the queue
+//!    (backpressure) instead of over-committing host memory.
+//! 2. **Batch re-planning** — each formed group re-solves the paper's
+//!    Eq. (11) for this step via
+//!    [`Planner::plan_batch`](crate::scheduler::Planner::plan_batch),
+//!    aggregating every
+//!    member's cached-token count s' into the Eq. (10) cost model.  Because
+//!    membership changes step to step (admissions, retirements), the split
+//!    point is re-planned on every step, exactly as §3.2 prescribes for a
+//!    growing s'.
+//! 3. **Step** — every group advances one token
+//!    ([`Engine::decode_step_with_plan`]).
+//! 4. **Retirement** — members whose generation budget is met (or whose
+//!    group hit KV capacity) transition `Decoding → Done` and are responded
+//!    to immediately; a fully-retired group frees its KV reservation, which
+//!    unblocks admission.
+//!
+//! Requests move through `Queued → Prefill → Decoding → Done`
+//! ([`RequestState`]); per-step latency, queue depth and occupancy land in
+//! [`ServeMetrics`].  Contrast with [`super::Server`], which forms one batch,
+//! decodes it to completion, and only then looks at the queue again: under
+//! concurrent load the continuous loop starts new work every step and
+//! retires finished requests early — the property the KV-offloading serving
+//! papers in PAPERS.md show is required for the PCIe bottleneck to even be
+//! observable.
+
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::metrics::ServeMetrics;
+use super::request::{Pending, Request, RequestState, Response};
+use super::server::ResponseHandle;
+use crate::engine::{DecodeSession, Engine, EngineConfig};
+use crate::memory::{MemPool, PoolGuard};
+use crate::model::ByteTokenizer;
+use crate::scheduler::SchedulePolicy;
+
+/// Continuous-batching loop construction parameters.
+#[derive(Debug, Clone)]
+pub struct ContinuousConfig {
+    pub artifact_dir: PathBuf,
+    pub engine: EngineConfig,
+    /// Requests prefilled together into one decode group (rounded up to a
+    /// batch bucket internally; keep ≤ the largest bucket).
+    pub max_group: usize,
+    /// Decode groups stepped concurrently (interleaved on the one engine).
+    pub max_groups: usize,
+    /// Prompt bucket used for padding (must exist in the manifest).
+    pub prompt_bucket: usize,
+    /// Host KV budget shared by all live sessions; admission backpressures
+    /// against it.
+    pub kv_budget_bytes: u64,
+    /// How long an *idle* loop waits for more arrivals before prefilling a
+    /// partial group (batching window; never delays active decoding).
+    pub admit_wait: Duration,
+}
+
+impl ContinuousConfig {
+    pub fn new(artifact_dir: &str, engine: EngineConfig) -> Self {
+        ContinuousConfig {
+            artifact_dir: PathBuf::from(artifact_dir),
+            engine,
+            max_group: 4,
+            max_groups: 2,
+            prompt_bucket: 32,
+            kv_budget_bytes: 256 << 20,
+            admit_wait: Duration::from_millis(20),
+        }
+    }
+}
+
+/// One admitted request riding a group lane.
+struct Member {
+    req: Request,
+    arrived: Instant,
+    admitted: Instant,
+    done: mpsc::Sender<Response>,
+    lane: usize,
+    state: RequestState,
+}
+
+/// One decode group: a session plus its members and KV reservation.
+struct Group {
+    sess: DecodeSession,
+    members: Vec<Member>,
+    /// Freed (unblocking admission) when the group is dropped.
+    _kv: PoolGuard,
+}
+
+impl Group {
+    fn active(&self) -> usize {
+        self.members
+            .iter()
+            .filter(|m| m.state == RequestState::Decoding)
+            .count()
+    }
+}
+
+/// A continuous-batching server: same submit/shutdown surface as
+/// [`super::Server`], but the worker runs the step-driven event loop.
+pub struct ContinuousServer {
+    tx: Option<mpsc::Sender<Pending>>,
+    worker: Option<std::thread::JoinHandle<Result<()>>>,
+    metrics: ServeMetrics,
+    next_id: std::sync::atomic::AtomicU64,
+}
+
+impl ContinuousServer {
+    /// Spawn the worker; blocks until the engine is profiled and warm.
+    pub fn start(cfg: ContinuousConfig) -> Result<ContinuousServer> {
+        let (tx, rx) = mpsc::channel::<Pending>();
+        let metrics = ServeMetrics::new();
+        let m2 = metrics.clone();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+
+        let worker = std::thread::Builder::new()
+            .name("kvpr-continuous".into())
+            .spawn(move || serve_loop(cfg, rx, m2, ready_tx))
+            .context("spawn continuous server thread")?;
+        ready_rx
+            .recv()
+            .context("continuous server thread died during startup")??;
+        Ok(ContinuousServer {
+            tx: Some(tx),
+            worker: Some(worker),
+            metrics,
+            next_id: std::sync::atomic::AtomicU64::new(1),
+        })
+    }
+
+    pub fn metrics(&self) -> &ServeMetrics {
+        &self.metrics
+    }
+
+    /// Submit a prompt; returns a waitable handle.
+    pub fn submit(&self, prompt: &str, gen_len: usize) -> ResponseHandle {
+        let id = self
+            .next_id
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.submit_request(Request::new(id, prompt, gen_len))
+    }
+
+    pub fn submit_request(&self, req: Request) -> ResponseHandle {
+        let (done, rx) = mpsc::channel();
+        let pending = Pending { req, arrived: Instant::now(), done };
+        self.tx
+            .as_ref()
+            .expect("server shut down")
+            .send(pending)
+            .expect("server thread gone");
+        ResponseHandle::new(rx)
+    }
+
+    /// Graceful shutdown: close the queue, let in-flight groups finish,
+    /// join the worker.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.tx.take();
+        if let Some(w) = self.worker.take() {
+            w.join()
+                .map_err(|_| anyhow::anyhow!("continuous server thread panicked"))??;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for ContinuousServer {
+    fn drop(&mut self) {
+        self.tx.take();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn serve_loop(
+    cfg: ContinuousConfig,
+    rx: mpsc::Receiver<Pending>,
+    metrics: ServeMetrics,
+    ready: mpsc::Sender<Result<()>>,
+) -> Result<()> {
+    let engine = match Engine::new(&cfg.artifact_dir, cfg.engine.clone()) {
+        Ok(e) => {
+            let _ = ready.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            let _ = ready.send(Err(anyhow::anyhow!(msg)));
+            return Err(e);
+        }
+    };
+    // weights stay device-resident for the server's whole lifetime in the
+    // latency regime (one reservation, not one per session)
+    let _resident = if !cfg.engine.weights_offloaded {
+        Some(
+            engine
+                .gpu_pool()
+                .alloc(engine.weights.total_bytes())
+                .context("resident weights exceed device memory")?,
+        )
+    } else {
+        None
+    };
+    let kv_pool = MemPool::new("host-kv-budget", cfg.kv_budget_bytes);
+    let tok = ByteTokenizer::new();
+    // per-lane planner (batch scaling happens in plan_batch); depends only
+    // on the startup profile, so build it once, off the step path
+    let lane_planner = engine
+        .config()
+        .policy
+        .is_partial()
+        .then(|| engine.planner(1, SchedulePolicy::RowByRow));
+
+    let mut queue: VecDeque<Pending> = VecDeque::new();
+    let mut groups: Vec<Group> = Vec::new();
+
+    loop {
+        // -- 1. arrivals -----------------------------------------------------
+        if groups.is_empty() && queue.is_empty() {
+            // fully idle: block until work or shutdown
+            match rx.recv() {
+                Ok(p) => queue.push_back(p),
+                Err(_) => break, // channel closed and nothing in flight
+            }
+            // idle batching window: gather a fuller first group
+            let deadline = Instant::now() + cfg.admit_wait;
+            while queue.len() < cfg.max_group {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(p) => queue.push_back(p),
+                    Err(_) => break,
+                }
+            }
+        }
+        // never block while groups are decoding: drain whatever arrived
+        while let Ok(p) = rx.try_recv() {
+            queue.push_back(p);
+        }
+
+        // -- 2. admission (Queued → Prefill → Decoding) ----------------------
+        while !queue.is_empty() && groups.len() < cfg.max_groups {
+            let mut n = queue.len().min(cfg.max_group.max(1));
+            let mut guard = None;
+            while n >= 1 {
+                let need = engine.session_kv_bytes(n)?;
+                if let Ok(g) = kv_pool.alloc(need) {
+                    guard = Some(g);
+                    break;
+                }
+                if !groups.is_empty() {
+                    break; // backpressure: a retirement will free budget
+                }
+                n /= 2; // idle engine: shrink the group to fit the budget
+            }
+            let Some(guard) = guard else {
+                // KV budget exhausted: hold requests Queued until a group
+                // retires and frees its reservation
+                metrics.record_backpressure();
+                if groups.is_empty() {
+                    // not even a single-request session fits the configured
+                    // budget — fail the head request instead of spinning
+                    let p = queue.pop_front().unwrap();
+                    drop(p);
+                    continue;
+                }
+                break;
+            };
+            let mut taken: Vec<Pending> = Vec::with_capacity(n);
+            for _ in 0..n {
+                taken.push(queue.pop_front().unwrap());
+            }
+            let prompts: Vec<Vec<i32>> = taken
+                .iter()
+                .map(|p| tok.encode(&p.req.prompt, cfg.prompt_bucket))
+                .collect();
+            let admitted = Instant::now();
+            // Queued → Prefill: members exist (and own their lanes) for the
+            // duration of the prefill call...
+            let mut members: Vec<Member> = taken
+                .into_iter()
+                .enumerate()
+                .map(|(lane, p)| Member {
+                    req: p.req,
+                    arrived: p.arrived,
+                    admitted,
+                    done: p.done,
+                    lane,
+                    state: RequestState::Prefill,
+                })
+                .collect();
+            let sess = engine.start_batch(&prompts)?;
+            // ...then Prefill → Decoding once the cache is populated
+            for m in members.iter_mut() {
+                m.state = RequestState::Decoding;
+            }
+            metrics.record_batch(n);
+            groups.push(Group { sess, members, _kv: guard });
+        }
+
+        if groups.is_empty() {
+            continue;
+        }
+
+        // -- 3+4. re-plan and step every group -------------------------------
+        let t_step = Instant::now();
+        let mut step_tokens = 0usize;
+        let active: usize = groups.iter().map(|g| g.active()).sum();
+        for g in groups.iter_mut() {
+            // membership changed last step ⇒ the aggregate cost model
+            // changed ⇒ re-solve Eq. (11) for this group now.  The engine
+            // decodes (and transfers) every lane of the batch *bucket*,
+            // padding and retired lanes included, so the aggregate uses the
+            // bucket's lane count — not just the live members — at the
+            // members' shared s'.
+            let plan_l = lane_planner.as_ref().map(|p| {
+                let lanes = vec![g.sess.kv_len(); g.sess.batch_bucket()];
+                p.plan_batch(&lanes).l()
+            });
+            engine.decode_step_with_plan(&mut g.sess, plan_l)?;
+            step_tokens += g.active();
+        }
+
+        // -- 5. retirement (Decoding → Done) ---------------------------------
+        for g in groups.iter_mut() {
+            let produced = g.sess.tokens_per_lane();
+            let at_cap = g.sess.kv_len() >= g.sess.seq_cap();
+            let decode_s = g.sess.metrics().decode_s;
+            let prefill_s = g.sess.metrics().prefill_s;
+            let splits = &g.sess.metrics().splits;
+            for m in g.members.iter_mut() {
+                if m.state != RequestState::Decoding {
+                    continue;
+                }
+                if produced >= m.req.gen_len || at_cap {
+                    let mut toks = g.sess.lane_tokens(m.lane).to_vec();
+                    toks.truncate(m.req.gen_len);
+                    let text = tok.decode(&toks);
+                    let queue_s = (m.admitted - m.arrived).as_secs_f64();
+                    let total_s = m.arrived.elapsed().as_secs_f64();
+                    metrics.record_request(total_s, queue_s, decode_s, toks.len());
+                    let _ = m.done.send(Response {
+                        id: m.req.id,
+                        text,
+                        tokens: toks,
+                        queue_s,
+                        prefill_s,
+                        decode_s,
+                        total_s,
+                        splits: splits.clone(),
+                    });
+                    m.state = RequestState::Done;
+                }
+            }
+        }
+        // dropping a finished group frees its KV reservation → admission
+        // can proceed next step
+        groups.retain(|g| g.active() > 0);
+
+        metrics.record_step(queue.len(), active, t_step.elapsed().as_secs_f64(), step_tokens);
+    }
+    Ok(())
+}

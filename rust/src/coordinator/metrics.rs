@@ -1,10 +1,13 @@
-//! Serving metrics aggregation.
+//! Serving metrics aggregation: per-request latency summaries plus the
+//! per-step counters the continuous-batching loop emits (step latency,
+//! queue depth, batch occupancy, KV-budget backpressure events).
 
 use std::sync::{Arc, Mutex};
 
 use crate::util::stats::Summary;
 
 /// Shared metrics sink: per-request latency summaries + token counters.
+/// Clone-cheap (`Arc`-shared): the serving thread records, callers read.
 #[derive(Debug, Clone, Default)]
 pub struct ServeMetrics {
     inner: Arc<Mutex<Inner>>,
@@ -20,6 +23,14 @@ struct Inner {
     batches: u64,
     started: Option<std::time::Instant>,
     ended: Option<std::time::Instant>,
+    // -- continuous-loop step counters --------------------------------------
+    steps: u64,
+    step_time: Summary,
+    queue_depth: Summary,
+    occupancy: Summary,
+    step_tokens: u64,
+    step_time_total: f64,
+    backpressure: u64,
 }
 
 impl ServeMetrics {
@@ -45,6 +56,23 @@ impl ServeMetrics {
         m.tokens += tokens as u64;
     }
 
+    /// One event-loop step: `queue_depth` requests still waiting,
+    /// `active` requests decoding, `step_s` wall seconds, `tokens` sampled.
+    pub fn record_step(&self, queue_depth: usize, active: usize, step_s: f64, tokens: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.steps += 1;
+        m.step_time.add(step_s);
+        m.step_time_total += step_s;
+        m.queue_depth.add(queue_depth as f64);
+        m.occupancy.add(active as f64);
+        m.step_tokens += tokens as u64;
+    }
+
+    /// Admission was refused because the KV budget was exhausted.
+    pub fn record_backpressure(&self) {
+        self.inner.lock().unwrap().backpressure += 1;
+    }
+
     pub fn requests(&self) -> u64 {
         self.inner.lock().unwrap().requests
     }
@@ -55,6 +83,56 @@ impl ServeMetrics {
 
     pub fn tokens(&self) -> u64 {
         self.inner.lock().unwrap().tokens
+    }
+
+    /// Number of event-loop decode steps taken.
+    pub fn steps(&self) -> u64 {
+        self.inner.lock().unwrap().steps
+    }
+
+    /// Times admission hit KV-budget backpressure.
+    pub fn backpressure_events(&self) -> u64 {
+        self.inner.lock().unwrap().backpressure
+    }
+
+    /// (mean, p99) of one event-loop step's wall time in seconds.
+    pub fn step_stats(&self) -> (f64, f64) {
+        let m = self.inner.lock().unwrap();
+        if m.step_time.count() == 0 {
+            return (0.0, 0.0);
+        }
+        (m.step_time.mean(), m.step_time.p99())
+    }
+
+    /// Mean requests waiting in the admission queue per step.
+    pub fn mean_queue_depth(&self) -> f64 {
+        let m = self.inner.lock().unwrap();
+        if m.queue_depth.count() == 0 {
+            0.0
+        } else {
+            m.queue_depth.mean()
+        }
+    }
+
+    /// Mean requests actively decoding per step (batch occupancy).
+    pub fn mean_occupancy(&self) -> f64 {
+        let m = self.inner.lock().unwrap();
+        if m.occupancy.count() == 0 {
+            0.0
+        } else {
+            m.occupancy.mean()
+        }
+    }
+
+    /// Decode throughput over stepped time: tokens sampled per second of
+    /// event-loop stepping (excludes prefill/queueing).
+    pub fn step_tok_per_s(&self) -> f64 {
+        let m = self.inner.lock().unwrap();
+        if m.step_time_total > 0.0 {
+            m.step_tokens as f64 / m.step_time_total
+        } else {
+            0.0
+        }
     }
 
     /// (mean, p50, p99) of end-to-end latency in seconds.
@@ -110,6 +188,8 @@ mod tests {
         let m = ServeMetrics::new();
         assert_eq!(m.latency_stats(), (0.0, 0.0, 0.0));
         assert_eq!(m.tok_per_s(), 0.0);
+        assert_eq!(m.step_stats(), (0.0, 0.0));
+        assert_eq!(m.step_tok_per_s(), 0.0);
     }
 
     #[test]
@@ -118,5 +198,20 @@ mod tests {
         let b = a.clone();
         b.record_request(1.0, 0.0, 0.5, 4);
         assert_eq!(a.requests(), 1);
+    }
+
+    #[test]
+    fn step_counters() {
+        let m = ServeMetrics::new();
+        m.record_step(3, 8, 0.010, 8);
+        m.record_step(0, 6, 0.030, 6);
+        m.record_backpressure();
+        assert_eq!(m.steps(), 2);
+        assert_eq!(m.backpressure_events(), 1);
+        let (mean, _p99) = m.step_stats();
+        assert!((mean - 0.020).abs() < 1e-9);
+        assert!((m.mean_queue_depth() - 1.5).abs() < 1e-9);
+        assert!((m.mean_occupancy() - 7.0).abs() < 1e-9);
+        assert!((m.step_tok_per_s() - 14.0 / 0.040).abs() < 1e-6);
     }
 }

@@ -1,19 +1,34 @@
-//! Serving front end: request queue → dynamic batcher → engine.
+//! Serving front end: admission, batching, and the decode event loop.
 //!
-//! The engine's PJRT handles are thread-pinned, so each [`Server`] spawns a
+//! Two serving modes share the request/response types and metrics:
+//!
+//! * [`ContinuousServer`] — the **continuous-batching** loop:
+//!   a step-driven event loop with per-request state
+//!   machines (`Queued → Prefill → Decoding → Done`), per-step admission
+//!   and retirement, per-batch re-solving of the paper's Eq. (11) split
+//!   point via [`Planner::plan_batch`](crate::scheduler::Planner::plan_batch),
+//!   and KV-budget backpressure through [`MemPool`](crate::memory::MemPool).
+//!   This is the serving mode that exercises KVPR under concurrent load.
+//! * [`Server`] — the simpler whole-batch mode: the [`Batcher`] groups
+//!   queued requests, the engine decodes the batch to completion, then the
+//!   next batch forms.  Kept as the one-batch-at-a-time baseline the
+//!   continuous loop is measured against (`rust/tests/coordinator_e2e.rs`).
+//!
+//! The engine's runtime handles are thread-pinned, so each server spawns a
 //! worker thread that *builds* its own [`Engine`](crate::engine::Engine) and
-//! drains a request channel; the [`Batcher`] groups compatible requests into
-//! the artifact batch buckets; the [`Router`] round-robins across several
+//! drains a request channel; the [`Router`] round-robins across several
 //! servers (data-parallel multi-GPU, paper Appendix A.7).
 
 mod batcher;
+mod continuous;
 mod metrics;
 mod request;
 mod router;
 mod server;
 
 pub use batcher::Batcher;
+pub use continuous::{ContinuousConfig, ContinuousServer};
 pub use metrics::ServeMetrics;
-pub use request::{Request, Response};
+pub use request::{Request, RequestState, Response};
 pub use router::Router;
-pub use server::{Server, ServerConfig};
+pub use server::{ResponseHandle, Server, ServerConfig};

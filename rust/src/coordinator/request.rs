@@ -1,6 +1,26 @@
-//! Request/response types.
+//! Request/response types and the per-request lifecycle state machine the
+//! continuous-batching loop drives.
 
 use std::time::Instant;
+
+/// Lifecycle of a request inside the serving loop:
+/// `Queued → Prefill → Decoding → Done`.
+///
+/// Transitions happen only at event-loop step boundaries — admission
+/// (`Queued → Prefill → Decoding`) when a decode group is formed and its
+/// prompts prefilled, retirement (`Decoding → Done`) when the request's
+/// generation budget is met or the group's KV cache hits capacity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestState {
+    /// Waiting in the admission queue (backpressure holds requests here).
+    Queued,
+    /// Being prefilled into a decode group.
+    Prefill,
+    /// Decoding one token per step as a lane of its group.
+    Decoding,
+    /// Completed and responded.
+    Done,
+}
 
 /// One inference request.
 #[derive(Debug, Clone)]

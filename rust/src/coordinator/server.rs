@@ -39,6 +39,10 @@ pub struct ResponseHandle {
 }
 
 impl ResponseHandle {
+    pub(crate) fn new(rx: mpsc::Receiver<Response>) -> Self {
+        ResponseHandle { rx }
+    }
+
     pub fn wait(self) -> Result<Response> {
         self.rx.recv().context("server dropped the request")
     }

@@ -110,6 +110,71 @@ impl GenMetrics {
     }
 }
 
+/// A running batch mid-decode: prefill is done, one token per lane is
+/// sampled per [`Engine::decode_step`] call.
+///
+/// This is the unit the continuous-batching coordinator schedules: sessions
+/// are admitted (prefilled) and retired per decode step, and each step's
+/// split point can be re-planned from outside via
+/// [`Engine::decode_step_with_plan`].  Sessions are engine-affine — step a
+/// session only on the engine (and thread) that created it.
+pub struct DecodeSession {
+    cache: HostKvCache,
+    /// Last sampled token per lane, the next step's input.
+    last: Vec<i32>,
+    /// Sampled tokens per lane (first entry comes from prefill).
+    tokens: Vec<Vec<i32>>,
+    /// Batch bucket (lanes incl. padding replicas).
+    b: usize,
+    /// Real sequences (≤ `b`).
+    n_seqs: usize,
+    planner: Option<Planner>,
+    metrics: GenMetrics,
+    store_handles: Vec<TransferHandle>,
+}
+
+impl DecodeSession {
+    /// Batch bucket the session decodes at (including padding lanes).
+    pub fn batch_bucket(&self) -> usize {
+        self.b
+    }
+
+    /// Number of real sequences in the session.
+    pub fn n_seqs(&self) -> usize {
+        self.n_seqs
+    }
+
+    /// Valid cached tokens (the paper's s'): prompt bucket + steps taken.
+    pub fn kv_len(&self) -> usize {
+        self.cache.seq_len()
+    }
+
+    /// Row capacity of the session's KV cache.
+    pub fn seq_cap(&self) -> usize {
+        self.cache.layer(0).capacity()
+    }
+
+    /// Tokens sampled so far per lane (identical count across lanes).
+    pub fn tokens_per_lane(&self) -> usize {
+        self.tokens.first().map_or(0, |t| t.len())
+    }
+
+    /// The sampled tokens of one lane.
+    pub fn lane_tokens(&self, lane: usize) -> &[i32] {
+        &self.tokens[lane]
+    }
+
+    /// Host bytes this session's cache reserves (full capacity).
+    pub fn kv_capacity_bytes(&self) -> u64 {
+        self.cache.capacity_bytes()
+    }
+
+    /// Timing and split-point accounting accumulated so far.
+    pub fn metrics(&self) -> &GenMetrics {
+        &self.metrics
+    }
+}
+
 /// Per-layer in-flight transfers (issued ahead of compute).
 struct LayerTransfers {
     plan_l: usize,
@@ -134,20 +199,35 @@ pub struct Engine {
 }
 
 impl Engine {
-    /// Load artifacts, generate weights, calibrate the profiler.
+    /// Load artifacts, generate weights, calibrate the profiler.  When
+    /// `artifact_dir` has no `manifest.json` the engine falls back to the
+    /// interpreter runtime over a synthetic manifest ([`Runtime::synthetic`])
+    /// so the full serving stack works without `make artifacts`.
     pub fn new(artifact_dir: &Path, cfg: EngineConfig) -> Result<Self> {
-        let runtime = Runtime::load(artifact_dir)?;
+        let runtime = Runtime::load_or_synthetic(artifact_dir)?;
         let model = runtime.manifest().model.clone();
         let weights = ModelWeights::generate(&model, cfg.seed);
         let h2d = Link::new(cfg.link.clone());
         let d2h = Link::new(cfg.link.clone());
-        // profile at the largest batch bucket (most representative)
-        let b = *runtime
-            .manifest()
-            .batch_buckets
-            .iter()
-            .max()
-            .context("no batch buckets")?;
+        // profile at the largest batch bucket (most representative) on the
+        // compiled backend; the interpreter's marginal costs are exactly
+        // linear in batch, so the cheapest bucket profiles just as well and
+        // keeps startup fast (the planner rescales linearly either way)
+        let b = if runtime.is_compiled() {
+            *runtime
+                .manifest()
+                .batch_buckets
+                .iter()
+                .max()
+                .context("no batch buckets")?
+        } else {
+            *runtime
+                .manifest()
+                .batch_buckets
+                .iter()
+                .min()
+                .context("no batch buckets")?
+        };
         let profile = SystemProfile::measure(&h2d, &runtime, b)?;
         let gpu_pool = MemPool::new("gpu-hbm", cfg.gpu_mem_bytes);
         Ok(Engine {
@@ -183,7 +263,13 @@ impl Engine {
         RefModel::new(self.weights.clone())
     }
 
-    fn planner(&self, batch: usize, policy: SchedulePolicy) -> Planner {
+    /// Build an adaptive [`Planner`] for batch bucket `batch`: the measured
+    /// cost model is rescaled from the profiled bucket (marginal costs are
+    /// linear in batch, see `CostModel` tests) and constrained to the
+    /// artifact L buckets.  The coordinator uses this to re-solve Eq. (11)
+    /// per formed batch; [`Engine::decode_step`] uses it internally when no
+    /// externally planned split is supplied.
+    pub fn planner(&self, batch: usize, policy: SchedulePolicy) -> Planner {
         let mut cost: CostModel = self.profile.cost_model(&self.runtime.manifest().model);
         // profile was taken at profile.batch; rescale marginals linearly
         let scale = batch as f64 / self.profile.batch as f64;
@@ -466,19 +552,36 @@ impl Engine {
     }
 
     // ---------------------------------------------------------------------
-    // row-by-row generation (paper §3.2, latency objective)
+    // step-wise decode API (continuous batching) and row-by-row generation
     // ---------------------------------------------------------------------
 
-    /// Generate `gen_len` tokens for up to `batch_bucket` sequences.
-    /// `ids` is row-major `[n_seqs][prompt_bucket]`, already padded.
-    pub fn generate(
-        &self,
-        ids: &[Vec<i32>],
-        gen_len: usize,
-    ) -> Result<GenResult> {
-        let m = self.runtime.manifest().clone();
+    /// Host KV+X bytes a new session for `n_seqs` sequences will reserve
+    /// (full capacity, the admission-control number), without building it.
+    pub fn session_kv_bytes(&self, n_seqs: usize) -> Result<u64> {
+        let m = self.runtime.manifest();
+        let b = m
+            .batch_bucket_for(n_seqs)
+            .with_context(|| format!("no batch bucket for {n_seqs} sequences"))?;
+        let model = &m.model;
+        Ok(HostKvCache::capacity_bytes_for(
+            model.n_layers,
+            b,
+            model.hidden,
+            m.seq_cap,
+        ))
+    }
+
+    /// Prefill `ids` (row-major `[n_seqs][prompt]`, padded per request) and
+    /// return a [`DecodeSession`] ready for step-wise decoding.  This is the
+    /// admission half of the continuous-batching loop; whole-batch
+    /// [`Engine::generate`] is a thin wrapper over it.
+    pub fn start_batch(&self, ids: &[Vec<i32>]) -> Result<DecodeSession> {
+        let m = self.runtime.manifest();
         let model = m.model.clone();
         let n_seqs = ids.len();
+        if n_seqs == 0 {
+            bail!("cannot start an empty batch");
+        }
         let b = m
             .batch_bucket_for(n_seqs)
             .with_context(|| format!("no batch bucket for {n_seqs} sequences"))?;
@@ -486,13 +589,9 @@ impl Engine {
         let sp = m
             .prompt_bucket_for(max_prompt)
             .with_context(|| format!("no prompt bucket for length {max_prompt}"))?;
-        if sp + gen_len >= m.seq_cap {
-            bail!("prompt {sp} + gen {gen_len} exceeds cache capacity {}", m.seq_cap);
-        }
 
         // pad ids to [b, sp] (PAD token + replicate last row for slack seqs)
-        let mut flat = vec![crate::model::ByteTokenizer::new().encode("", sp)[0]; 0];
-        flat.reserve(b * sp);
+        let mut flat = Vec::with_capacity(b * sp);
         for i in 0..b {
             let src = ids.get(i.min(n_seqs - 1)).unwrap();
             for j in 0..sp {
@@ -508,8 +607,178 @@ impl Engine {
 
         let mut cache = HostKvCache::new(model.n_layers, b, model.hidden, m.seq_cap);
         let mut metrics = GenMetrics::default();
-        self.gpu_pool.reset_peak();
 
+        let t0 = Instant::now();
+        let last = self.prefill(&flat, b, sp, &mut cache)?;
+        metrics.prefill_s = t0.elapsed().as_secs_f64();
+
+        let mut tokens: Vec<Vec<i32>> = vec![Vec::new(); b];
+        for (i, tk) in tokens.iter_mut().enumerate() {
+            tk.push(last[i]);
+        }
+
+        Ok(DecodeSession {
+            cache,
+            last,
+            tokens,
+            b,
+            n_seqs,
+            planner,
+            metrics,
+            store_handles: Vec::new(),
+        })
+    }
+
+    /// One decode step with the split chosen by the session's own planner.
+    pub fn decode_step(&self, sess: &mut DecodeSession) -> Result<Vec<i32>> {
+        self.decode_step_with_plan(sess, None)
+    }
+
+    /// One decode step of every layer: embed the last sampled tokens, run
+    /// the planned transfer/recompute schedule per layer, sample the next
+    /// token per lane.  `plan_override` supplies an externally solved split
+    /// point (the coordinator re-solves Eq. 11 over the whole formed batch);
+    /// `None` lets the session's planner decide.  Returns the tokens
+    /// sampled this step (one per batch lane).
+    pub fn decode_step_with_plan(
+        &self,
+        sess: &mut DecodeSession,
+        plan_override: Option<usize>,
+    ) -> Result<Vec<i32>> {
+        let m = self.runtime.manifest();
+        let model = &m.model;
+        let b = sess.b;
+        let kv_len = sess.cache.seq_len();
+        if kv_len >= m.seq_cap {
+            bail!("kv cache full ({kv_len} rows): session must be retired");
+        }
+
+        let plan_l = match plan_override {
+            // an override must be an artifact L bucket (plan_batch only
+            // emits those); an infeasible prefix degrades to full transfer
+            // rather than to a bucket no artifact exists for
+            Some(l) if l <= kv_len => l,
+            Some(_) => 0,
+            None => sess
+                .planner
+                .as_ref()
+                .map(|p| p.plan_step(kv_len).l())
+                .unwrap_or(0),
+        };
+        sess.metrics.splits.push(plan_l);
+
+        let t_step = Instant::now();
+        let embed = self.runtime.artifact(&m.embed_decode_name(b))?;
+        let head = self.runtime.artifact(&m.lm_head_name(b))?;
+
+        let t0 = Instant::now();
+        let x0 = embed.call(&[
+            ArgValue::I32Slice(&sess.last),
+            ArgValue::I32(kv_len as i32),
+            ArgValue::F32(&self.weights.tok_table),
+            ArgValue::F32(&self.weights.pos_table),
+        ])?;
+        sess.metrics.breakdown.other_s += t0.elapsed().as_secs_f64();
+        let mut x = x0.into_iter().next().unwrap();
+
+        // ALISA defers the remainder: issue only activations up front
+        let alisa = matches!(self.cfg.policy, EnginePolicy::AlisaSequential);
+
+        let mut pending: Option<LayerTransfers> = None;
+        if !alisa {
+            pending = Some(self.issue_layer(&sess.cache, 0, plan_l));
+        }
+        for layer in 0..model.n_layers {
+            let t = if alisa {
+                // sequential: ALISA issues a layer's transfers only when
+                // it reaches the layer (no cross-layer prefetch); the
+                // recompute-then-transfer serialisation inside the layer
+                // is modelled faithfully in the simulator (sim::policies)
+                // while the engine covers the no-intra-overlap ablation
+                // via KvprFused.
+                self.issue_layer(&sess.cache, layer, plan_l)
+            } else {
+                // prefetching policies filled this one layer ahead; the
+                // synchronous baseline issues at the top of the layer
+                pending
+                    .take()
+                    .unwrap_or_else(|| self.issue_layer(&sess.cache, layer, plan_l))
+            };
+            // prefetch next layer (Algorithm 1: load(i+1) before compute(i))
+            if !alisa && self.cfg.policy.prefetches() && layer + 1 < model.n_layers {
+                pending = Some(self.issue_layer(&sess.cache, layer + 1, plan_l));
+            }
+
+            let (y, k_new, v_new) =
+                self.run_layer(layer, b, &x, kv_len, t, &mut sess.metrics.breakdown)?;
+
+            // store streams (Algorithm 1 store_*): host append + D2H timing
+            sess.store_handles
+                .push(self.d2h.submit_timing(3 * b * model.hidden, Priority::Normal));
+            sess.cache.layer_mut(layer).append(&k_new, &v_new, &x)?;
+            x = y;
+        }
+
+        let t0 = Instant::now();
+        let logits = head.call(&[
+            ArgValue::F32(&x),
+            ArgValue::F32(&self.weights.tok_table),
+            ArgValue::F32(&self.weights.lnf_g),
+            ArgValue::F32(&self.weights.lnf_b),
+        ])?;
+        sess.metrics.breakdown.other_s += t0.elapsed().as_secs_f64();
+        sess.last = RefModel::argmax(&logits[0], model.vocab);
+        for (i, tk) in sess.tokens.iter_mut().enumerate() {
+            tk.push(sess.last[i]);
+        }
+        sess.metrics.decode_s += t_step.elapsed().as_secs_f64();
+
+        // opportunistically retire landed store timings so a long-running
+        // session's handle list stays bounded
+        while sess.store_handles.first().map_or(false, |h| h.is_done()) {
+            sess.store_handles.remove(0).wait();
+        }
+        Ok(sess.last.clone())
+    }
+
+    /// Retire a session: drain outstanding store streams, finalise metrics,
+    /// and hand back the generated tokens (truncated to the real sequences).
+    pub fn finish_batch(&self, mut sess: DecodeSession) -> GenResult {
+        for h in sess.store_handles.drain(..) {
+            h.wait();
+        }
+        let mut metrics = sess.metrics;
+        let per_lane = sess.tokens.first().map_or(0, |t| t.len());
+        metrics.tokens_generated = (sess.n_seqs * per_lane.saturating_sub(1)) as u64;
+        metrics.gpu_peak_bytes = self.gpu_pool.peak();
+        metrics.h2d_bytes = self.h2d.stats().total_bytes();
+        metrics.h2d_busy_s = self.h2d.stats().busy_secs();
+        let mut tokens = sess.tokens;
+        tokens.truncate(sess.n_seqs);
+        GenResult { tokens, metrics }
+    }
+
+    // ---------------------------------------------------------------------
+    // row-by-row generation (paper §3.2, latency objective)
+    // ---------------------------------------------------------------------
+
+    /// Generate `gen_len` tokens for up to `batch_bucket` sequences.
+    /// `ids` is row-major `[n_seqs][prompt_bucket]`, already padded.
+    pub fn generate(
+        &self,
+        ids: &[Vec<i32>],
+        gen_len: usize,
+    ) -> Result<GenResult> {
+        let m = self.runtime.manifest();
+        let max_prompt = ids.iter().map(|p| p.len()).max().unwrap_or(0);
+        let sp = m
+            .prompt_bucket_for(max_prompt)
+            .with_context(|| format!("no prompt bucket for length {max_prompt}"))?;
+        if sp + gen_len >= m.seq_cap {
+            bail!("prompt {sp} + gen {gen_len} exceeds cache capacity {}", m.seq_cap);
+        }
+
+        self.gpu_pool.reset_peak();
         // weights resident on device when not offloaded (latency regime)
         let _resident = if !self.cfg.weights_offloaded {
             Some(
@@ -521,103 +790,11 @@ impl Engine {
             None
         };
 
-        let t0 = Instant::now();
-        let mut last = self.prefill(&flat, b, sp, &mut cache)?;
-        metrics.prefill_s = t0.elapsed().as_secs_f64();
-
-        let mut tokens: Vec<Vec<i32>> = vec![Vec::with_capacity(gen_len); b];
-        for (i, tk) in tokens.iter_mut().enumerate() {
-            tk.push(last[i]);
-        }
-
-        let embed = self.runtime.artifact(&m.embed_decode_name(b))?;
-        let head = self.runtime.artifact(&m.lm_head_name(b))?;
-
-        let t_dec = Instant::now();
-        let mut store_handles: Vec<TransferHandle> = Vec::new();
+        let mut sess = self.start_batch(ids)?;
         for _step in 1..gen_len {
-            let kv_len = cache.seq_len();
-            let plan_l = planner
-                .as_ref()
-                .map(|p| p.plan_step(kv_len).l())
-                .unwrap_or(0);
-            metrics.splits.push(plan_l);
-
-            let t0 = Instant::now();
-            let x0 = embed.call(&[
-                ArgValue::I32Slice(&last),
-                ArgValue::I32(kv_len as i32),
-                ArgValue::F32(&self.weights.tok_table),
-                ArgValue::F32(&self.weights.pos_table),
-            ])?;
-            metrics.breakdown.other_s += t0.elapsed().as_secs_f64();
-            let mut x = x0.into_iter().next().unwrap();
-
-            // ALISA defers the remainder: issue only activations up front
-            let alisa = matches!(self.cfg.policy, EnginePolicy::AlisaSequential);
-
-            let mut pending: Option<LayerTransfers> = None;
-            if !alisa {
-                pending = Some(self.issue_layer(&cache, 0, plan_l));
-            }
-            for layer in 0..model.n_layers {
-                let t = if alisa {
-                    // sequential: ALISA issues a layer's transfers only when
-                    // it reaches the layer (no cross-layer prefetch); the
-                    // recompute-then-transfer serialisation inside the layer
-                    // is modelled faithfully in the simulator (sim::policies)
-                    // while the engine covers the no-intra-overlap ablation
-                    // via KvprFused.
-                    self.issue_layer(&cache, layer, plan_l)
-                } else {
-                    // prefetching policies filled this one layer ahead; the
-                    // synchronous baseline issues at the top of the layer
-                    pending
-                        .take()
-                        .unwrap_or_else(|| self.issue_layer(&cache, layer, plan_l))
-                };
-                // prefetch next layer (Algorithm 1: load(i+1) before compute(i))
-                if !alisa && self.cfg.policy.prefetches() && layer + 1 < model.n_layers {
-                    pending = Some(self.issue_layer(&cache, layer + 1, plan_l));
-                }
-
-                let (y, k_new, v_new) =
-                    self.run_layer(layer, b, &x, kv_len, t, &mut metrics.breakdown)?;
-
-                // store streams (Algorithm 1 store_*): host append + D2H timing
-                store_handles.push(self.d2h.submit_timing(3 * b * model.hidden, Priority::Normal));
-                cache.layer_mut(layer).append(&k_new, &v_new, &x)?;
-                x = y;
-
-                if !alisa && self.cfg.policy.prefetches() && layer + 1 == model.n_layers {
-                    // nothing pending into lm_head
-                }
-            }
-
-            let t0 = Instant::now();
-            let logits = head.call(&[
-                ArgValue::F32(&x),
-                ArgValue::F32(&self.weights.tok_table),
-                ArgValue::F32(&self.weights.lnf_g),
-                ArgValue::F32(&self.weights.lnf_b),
-            ])?;
-            metrics.breakdown.other_s += t0.elapsed().as_secs_f64();
-            last = RefModel::argmax(&logits[0], model.vocab);
-            for (i, tk) in tokens.iter_mut().enumerate() {
-                tk.push(last[i]);
-            }
+            self.decode_step(&mut sess)?;
         }
-        for h in store_handles {
-            h.wait();
-        }
-        metrics.decode_s = t_dec.elapsed().as_secs_f64();
-        metrics.tokens_generated = (n_seqs * gen_len.saturating_sub(1)) as u64;
-        metrics.gpu_peak_bytes = self.gpu_pool.peak();
-        metrics.h2d_bytes = self.h2d.stats().total_bytes();
-        metrics.h2d_busy_s = self.h2d.stats().busy_secs();
-
-        tokens.truncate(n_seqs);
-        Ok(GenResult { tokens, metrics })
+        Ok(self.finish_batch(sess))
     }
 
     // ---------------------------------------------------------------------

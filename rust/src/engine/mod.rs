@@ -26,7 +26,7 @@
 mod decode;
 mod stage;
 
-pub use decode::{Engine, EngineConfig, EnginePolicy, GenMetrics, GenResult};
+pub use decode::{DecodeSession, Engine, EngineConfig, EnginePolicy, GenMetrics, GenResult};
 pub use stage::Breakdown;
 
 #[doc(hidden)]

@@ -168,6 +168,25 @@ impl HostKvCache {
         self.layers.first().map_or(0, |l| l.len())
     }
 
+    /// Host bytes a cache with these dimensions reserves (K + V + X f32
+    /// buffers at full row capacity).  The single source of truth shared by
+    /// the allocation here and by admission control
+    /// ([`Engine::session_kv_bytes`](crate::engine::Engine::session_kv_bytes)),
+    /// so budgeting can never drift from what a session actually holds.
+    pub fn capacity_bytes_for(n_layers: usize, batch: usize, hidden: usize, cap: usize) -> u64 {
+        (n_layers * 3 * cap * batch * hidden * 4) as u64
+    }
+
+    /// Total host bytes *reserved* (K + V + X across layers at full row
+    /// capacity) — what admission control must budget for when a new batch
+    /// is allocated, independent of how far it has filled.
+    pub fn capacity_bytes(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| Self::capacity_bytes_for(1, l.batch, l.hidden, l.capacity()))
+            .sum()
+    }
+
     /// Total host bytes held (K + V + X across layers, valid rows only).
     pub fn host_bytes(&self) -> u64 {
         self.layers

@@ -10,14 +10,22 @@
 //!   (paper §3.1, "profiler module").
 //! * [`scheduler`] — solves the integer linear program of Eq. (11) for the
 //!   optimal KV-cache split point `l`, and builds row-by-row /
-//!   column-by-column execution plans (paper §3.2).
+//!   column-by-column execution plans (paper §3.2).  Includes per-batch
+//!   aggregate planning ([`scheduler::Planner::plan_batch`]) for the
+//!   continuous serving loop.
 //! * [`engine`] — the runtime module (paper §3.3): overlapped execution of
 //!   transfer and recomputation with double buffering, pinned-memory pools
-//!   and the fine-grained W_K/W_V-first MHA pipeline.
-//! * [`coordinator`] — serving front end: request queue, dynamic batcher and
-//!   decode loop driving the engine.
-//! * [`runtime`] — PJRT client wrapper that loads the AOT-compiled JAX/Pallas
-//!   artifacts (`artifacts/*.hlo.txt`) and executes them on the hot path.
+//!   and the fine-grained W_K/W_V-first MHA pipeline.  Exposes both
+//!   whole-batch generation and the step-wise
+//!   [`DecodeSession`](engine::DecodeSession) API.
+//! * [`coordinator`] — serving front end: the **continuous-batching** event
+//!   loop ([`coordinator::ContinuousServer`]: per-step admission and
+//!   retirement, per-batch split re-planning, KV-budget backpressure), the
+//!   whole-batch baseline server, and the data-parallel router.
+//! * [`runtime`] — executes the AOT-compiled JAX/Pallas artifacts
+//!   (`artifacts/*.hlo.txt`) via PJRT (`--features pjrt`), or interprets
+//!   them with the pure-Rust reference model when PJRT/artifacts are absent
+//!   — same math, zero build-time dependencies.
 //! * [`transfer`] — emulated CPU↔GPU PCIe link: a bandwidth-throttled copy
 //!   engine with ordered streams and pinned host memory.
 //! * [`memory`], [`kvcache`], [`model`] — device/host pools, the KV-cache
@@ -28,7 +36,10 @@
 //!   of the evaluation at paper scale.
 //!
 //! Python/JAX/Pallas participate only at build time (`make artifacts`); the
-//! request path is pure Rust + PJRT.
+//! request path is pure Rust.
+
+#![deny(rustdoc::broken_intra_doc_links)]
+#![deny(rustdoc::private_intra_doc_links)]
 
 pub mod config;
 pub mod coordinator;

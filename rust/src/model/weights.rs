@@ -28,6 +28,12 @@ pub struct LayerWeights {
 }
 
 impl LayerWeights {
+    /// Assemble a layer from externally supplied tensors (the interpreter
+    /// runtime rebuilds layer weights from artifact call arguments).
+    pub(crate) fn from_tensors(tensors: Vec<(String, Arc<Vec<f32>>, Vec<usize>)>) -> Self {
+        LayerWeights { tensors }
+    }
+
     pub fn get(&self, name: &str) -> &Arc<Vec<f32>> {
         &self
             .tensors

@@ -157,6 +157,210 @@ impl Manifest {
         })
     }
 
+    /// Build a manifest **in memory**, with the same bucket grid the AOT
+    /// pipeline emits for the tiny model, so the interpreter runtime can
+    /// execute without `make artifacts` ever having run.  Signatures match
+    /// `python/compile/aot.py` exactly; only the `.hlo.txt` files (which the
+    /// interpreter never reads) are absent.
+    pub fn synthetic(model: ModelConfig) -> Self {
+        Self::synthetic_with(model, vec![1, 2, 4, 8], 128, vec![32, 64, 96], vec![16, 32, 64])
+    }
+
+    /// [`Manifest::synthetic`] with explicit bucket grids.
+    pub fn synthetic_with(
+        model: ModelConfig,
+        batch_buckets: Vec<usize>,
+        seq_cap: usize,
+        l_buckets: Vec<usize>,
+        prompt_buckets: Vec<usize>,
+    ) -> Self {
+        let h = model.hidden;
+        let f32s = |name: &str, shape: Vec<usize>| TensorSig {
+            name: name.to_string(),
+            shape,
+            dtype: DType::F32,
+        };
+        let i32s = |name: &str, shape: Vec<usize>| TensorSig {
+            name: name.to_string(),
+            shape,
+            dtype: DType::I32,
+        };
+        let weight_sigs = || -> Vec<TensorSig> {
+            crate::model::LAYER_WEIGHT_NAMES
+                .iter()
+                .map(|&n| {
+                    let shape = match n {
+                        "wq" | "wk" | "wv" | "wo" => vec![h, h],
+                        "w1" => vec![h, model.ffn],
+                        "w2" => vec![model.ffn, h],
+                        "b1" => vec![model.ffn],
+                        _ => vec![h],
+                    };
+                    f32s(n, shape)
+                })
+                .collect()
+        };
+        let tok_table = || f32s("tok_table", vec![model.vocab, h]);
+        let pos_table = || f32s("pos_table", vec![model.max_pos, h]);
+
+        let mut artifacts = Vec::new();
+        let mut push = |name: String, kind: &str, b: usize, s: usize, l: usize, sp: usize,
+                        inputs: Vec<TensorSig>, outputs: Vec<TensorSig>| {
+            artifacts.push(ArtifactMeta {
+                file: format!("{name}.hlo.txt"),
+                name,
+                kind: kind.to_string(),
+                b,
+                s,
+                l,
+                sp,
+                inputs,
+                outputs,
+            });
+        };
+
+        for &b in &batch_buckets {
+            push(
+                format!("embed_decode_b{b}"),
+                "embed_decode",
+                b, 0, 0, 0,
+                vec![i32s("ids", vec![b]), i32s("pos", vec![]), tok_table(), pos_table()],
+                vec![f32s("x", vec![b, 1, h])],
+            );
+            push(
+                format!("lm_head_b{b}"),
+                "lm_head",
+                b, 0, 0, 0,
+                vec![
+                    f32s("x", vec![b, 1, h]),
+                    tok_table(),
+                    f32s("lnf_g", vec![h]),
+                    f32s("lnf_b", vec![h]),
+                ],
+                vec![f32s("logits", vec![b, model.vocab])],
+            );
+            push(
+                format!("decode_full_b{b}_s{seq_cap}"),
+                "decode_full",
+                b, seq_cap, 0, 0,
+                [
+                    vec![
+                        f32s("x", vec![b, 1, h]),
+                        f32s("k_cache", vec![b, seq_cap, h]),
+                        f32s("v_cache", vec![b, seq_cap, h]),
+                        i32s("kv_len", vec![]),
+                    ],
+                    weight_sigs(),
+                ]
+                .concat(),
+                vec![
+                    f32s("y", vec![b, 1, h]),
+                    f32s("k_new", vec![b, 1, h]),
+                    f32s("v_new", vec![b, 1, h]),
+                ],
+            );
+            for &sp in &prompt_buckets {
+                let mut inputs = vec![
+                    i32s("ids", vec![b, sp]),
+                    tok_table(),
+                    pos_table(),
+                    f32s("lnf_g", vec![h]),
+                    f32s("lnf_b", vec![h]),
+                ];
+                for _ in 0..model.n_layers {
+                    inputs.extend(weight_sigs());
+                }
+                push(
+                    format!("prefill_b{b}_p{sp}"),
+                    "prefill",
+                    b, 0, 0, sp,
+                    inputs,
+                    vec![
+                        f32s("logits", vec![b, model.vocab]),
+                        f32s("k_stack", vec![model.n_layers, b, sp, h]),
+                        f32s("v_stack", vec![model.n_layers, b, sp, h]),
+                        f32s("x_stack", vec![model.n_layers, b, sp, h]),
+                    ],
+                );
+            }
+            for &l in &l_buckets {
+                push(
+                    format!("recompute_b{b}_l{l}"),
+                    "recompute",
+                    b, 0, l, 0,
+                    vec![
+                        f32s("x_pre", vec![b, l, h]),
+                        f32s("ln1_g", vec![h]),
+                        f32s("ln1_b", vec![h]),
+                        f32s("wk", vec![h, h]),
+                        f32s("bk", vec![h]),
+                        f32s("wv", vec![h, h]),
+                        f32s("bv", vec![h]),
+                    ],
+                    vec![f32s("k_pre", vec![b, l, h]), f32s("v_pre", vec![b, l, h])],
+                );
+                push(
+                    format!("decode_merge_b{b}_s{seq_cap}_l{l}"),
+                    "decode_merge",
+                    b, seq_cap, l, 0,
+                    [
+                        vec![
+                            f32s("x", vec![b, 1, h]),
+                            f32s("k_pre", vec![b, l, h]),
+                            f32s("v_pre", vec![b, l, h]),
+                            f32s("k_rest", vec![b, seq_cap - l, h]),
+                            f32s("v_rest", vec![b, seq_cap - l, h]),
+                            i32s("kv_len", vec![]),
+                        ],
+                        weight_sigs(),
+                    ]
+                    .concat(),
+                    vec![
+                        f32s("y", vec![b, 1, h]),
+                        f32s("k_new", vec![b, 1, h]),
+                        f32s("v_new", vec![b, 1, h]),
+                    ],
+                );
+                push(
+                    format!("decode_partial_b{b}_s{seq_cap}_l{l}"),
+                    "decode_partial",
+                    b, seq_cap, l, 0,
+                    [
+                        vec![
+                            f32s("x", vec![b, 1, h]),
+                            f32s("x_pre", vec![b, l, h]),
+                            f32s("k_rest", vec![b, seq_cap - l, h]),
+                            f32s("v_rest", vec![b, seq_cap - l, h]),
+                            i32s("kv_len", vec![]),
+                        ],
+                        weight_sigs(),
+                    ]
+                    .concat(),
+                    vec![
+                        f32s("y", vec![b, 1, h]),
+                        f32s("k_new", vec![b, 1, h]),
+                        f32s("v_new", vec![b, 1, h]),
+                    ],
+                );
+            }
+        }
+
+        let layer_weight_names = crate::model::LAYER_WEIGHT_NAMES
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        Manifest {
+            model,
+            batch_buckets,
+            seq_cap,
+            l_buckets,
+            prompt_buckets,
+            layer_weight_names,
+            artifacts,
+            dir: PathBuf::new(),
+        }
+    }
+
     pub fn find(&self, name: &str) -> Option<&ArtifactMeta> {
         self.artifacts.iter().find(|a| a.name == name)
     }
@@ -265,6 +469,29 @@ mod tests {
         assert_eq!(m.batch_bucket_for(100), None);
         assert_eq!(m.prompt_bucket_for(10), Some(16));
         assert_eq!(m.prompt_bucket_for(17), Some(32));
+    }
+
+    #[test]
+    fn synthetic_manifest_resolves_canonical_names() {
+        let m = Manifest::synthetic(ModelConfig::tiny());
+        assert_eq!(m.seq_cap, 128);
+        for &b in &m.batch_buckets.clone() {
+            assert!(m.find(&m.embed_decode_name(b)).is_some());
+            assert!(m.find(&m.lm_head_name(b)).is_some());
+            assert!(m.find(&m.decode_full_name(b)).is_some());
+            for &l in &m.l_buckets.clone() {
+                assert!(m.find(&m.decode_partial_name(b, l)).is_some());
+                assert!(m.find(&m.recompute_name(b, l)).is_some());
+                assert!(m.find(&m.decode_merge_name(b, l)).is_some());
+            }
+            for &sp in &m.prompt_buckets.clone() {
+                assert!(m.find(&m.prefill_name(b, sp)).is_some());
+            }
+        }
+        // weight tail in canonical order, exactly like the AOT manifest
+        let a = m.find(&m.decode_full_name(1)).unwrap();
+        let tail: Vec<&str> = a.inputs[4..].iter().map(|t| t.name.as_str()).collect();
+        assert_eq!(tail, crate::model::LAYER_WEIGHT_NAMES);
     }
 
     #[test]

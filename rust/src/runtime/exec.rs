@@ -1,4 +1,15 @@
-//! Executable registry + literal marshalling.
+//! Executable registry + argument marshalling.
+//!
+//! Two interchangeable backends sit behind [`Artifact::call`]:
+//!
+//! * **Compiled** (`--features pjrt`): the artifact's HLO text is compiled
+//!   through the PJRT CPU client and executed natively.
+//! * **Interpreted** (default): the artifact is evaluated by the pure-Rust
+//!   [`RefModel`](crate::model::RefModel) interpreter (`interp` module) —
+//!   identical math, no XLA, no files needed.
+//!
+//! Argument/output validation against the manifest signature is shared, so a
+//! shape bug fails identically on either backend.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -8,6 +19,7 @@ use std::rc::Rc;
 use anyhow::{bail, Context, Result};
 
 use super::artifacts::{ArtifactDType, ArtifactMeta, Manifest};
+use super::interp::{self, InterpCtx};
 
 /// An argument to an artifact call.
 #[derive(Debug, Clone, Copy)]
@@ -20,17 +32,28 @@ pub enum ArgValue<'a> {
     I32(i32),
 }
 
-/// A compiled artifact bound to the PJRT client.
+enum Backend {
+    /// PJRT-compiled executable.
+    #[cfg(feature = "pjrt")]
+    Compiled(xla::PjRtLoadedExecutable),
+    /// Reference-model interpreter.
+    Interp(InterpCtx),
+}
+
+/// A callable artifact bound to one backend.
 pub struct Artifact {
     pub meta: ArtifactMeta,
-    exe: xla::PjRtLoadedExecutable,
+    backend: Backend,
 }
 
 impl Artifact {
-    /// Execute with positional args checked against the manifest signature.
-    /// Returns one flat `Vec<f32>` per output (i32 outputs are unsupported —
-    /// the tiny model has none).
-    pub fn call(&self, args: &[ArgValue]) -> Result<Vec<Vec<f32>>> {
+    /// Whether this artifact executes on the interpreter backend.
+    pub fn is_interpreted(&self) -> bool {
+        matches!(self.backend, Backend::Interp(_))
+    }
+
+    /// Check positional args against the manifest signature.
+    fn validate_args(&self, args: &[ArgValue]) -> Result<()> {
         if args.len() != self.meta.inputs.len() {
             bail!(
                 "{}: expected {} args, got {}",
@@ -39,9 +62,8 @@ impl Artifact {
                 args.len()
             );
         }
-        let mut literals = Vec::with_capacity(args.len());
         for (arg, sig) in args.iter().zip(&self.meta.inputs) {
-            let lit = match (arg, sig.dtype) {
+            match (arg, sig.dtype) {
                 (ArgValue::F32(data), ArtifactDType::F32) => {
                     if data.len() != sig.numel() {
                         bail!(
@@ -52,8 +74,6 @@ impl Artifact {
                             sig.numel()
                         );
                     }
-                    let dims: Vec<i64> = sig.shape.iter().map(|&d| d as i64).collect();
-                    xla::Literal::vec1(data).reshape(&dims)?
                 }
                 (ArgValue::I32Slice(data), ArtifactDType::I32) => {
                     if data.len() != sig.numel() {
@@ -65,80 +85,187 @@ impl Artifact {
                             sig.numel()
                         );
                     }
-                    let dims: Vec<i64> = sig.shape.iter().map(|&d| d as i64).collect();
-                    xla::Literal::vec1(data).reshape(&dims)?
                 }
-                (ArgValue::I32(v), ArtifactDType::I32) => {
+                (ArgValue::I32(_), ArtifactDType::I32) => {
                     if !sig.shape.is_empty() {
-                        bail!("{}: '{}' expects shape {:?}", self.meta.name, sig.name, sig.shape);
+                        bail!(
+                            "{}: '{}' expects shape {:?}",
+                            self.meta.name,
+                            sig.name,
+                            sig.shape
+                        );
                     }
-                    xla::Literal::scalar(*v)
                 }
-                _ => bail!(
-                    "{}: input '{}' dtype mismatch",
-                    self.meta.name,
-                    sig.name
-                ),
-            };
-            literals.push(lit);
+                _ => bail!("{}: input '{}' dtype mismatch", self.meta.name, sig.name),
+            }
         }
+        Ok(())
+    }
 
-        let result = self.exe.execute::<xla::Literal>(&literals)?;
-        let tuple = result[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True → always a tuple
-        let parts = tuple.to_tuple()?;
-        if parts.len() != self.meta.outputs.len() {
+    /// Execute with positional args checked against the manifest signature.
+    /// Returns one flat `Vec<f32>` per output (i32 outputs are unsupported —
+    /// the tiny model has none).
+    pub fn call(&self, args: &[ArgValue]) -> Result<Vec<Vec<f32>>> {
+        self.validate_args(args)?;
+        let out = match &self.backend {
+            #[cfg(feature = "pjrt")]
+            Backend::Compiled(exe) => call_compiled(&self.meta, exe, args)?,
+            Backend::Interp(ctx) => interp::execute(&self.meta, ctx, args)?,
+        };
+        if out.len() != self.meta.outputs.len() {
             bail!(
                 "{}: expected {} outputs, got {}",
                 self.meta.name,
                 self.meta.outputs.len(),
-                parts.len()
+                out.len()
             );
         }
-        let mut out = Vec::with_capacity(parts.len());
-        for (lit, sig) in parts.iter().zip(&self.meta.outputs) {
-            let v = lit.to_vec::<f32>()?;
+        for (v, sig) in out.iter().zip(&self.meta.outputs) {
             if v.len() != sig.numel() {
                 bail!("{}: output '{}' numel mismatch", self.meta.name, sig.name);
             }
-            out.push(v);
         }
         Ok(out)
     }
 }
 
-/// PJRT client + lazily compiled executable cache.  `!Send`: lives on the
-/// engine's compute thread.
+/// Marshal args into XLA literals, execute, unpack the result tuple.
+#[cfg(feature = "pjrt")]
+fn call_compiled(
+    meta: &ArtifactMeta,
+    exe: &xla::PjRtLoadedExecutable,
+    args: &[ArgValue],
+) -> Result<Vec<Vec<f32>>> {
+    let mut literals = Vec::with_capacity(args.len());
+    for (arg, sig) in args.iter().zip(&meta.inputs) {
+        let lit = match (arg, sig.dtype) {
+            (ArgValue::F32(data), ArtifactDType::F32) => {
+                let dims: Vec<i64> = sig.shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+            (ArgValue::I32Slice(data), ArtifactDType::I32) => {
+                let dims: Vec<i64> = sig.shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+            (ArgValue::I32(v), ArtifactDType::I32) => xla::Literal::scalar(*v),
+            _ => bail!("{}: input '{}' dtype mismatch", meta.name, sig.name),
+        };
+        literals.push(lit);
+    }
+    let result = exe.execute::<xla::Literal>(&literals)?;
+    let tuple = result[0][0].to_literal_sync()?;
+    // aot.py lowers with return_tuple=True → always a tuple
+    let parts = tuple.to_tuple()?;
+    let mut out = Vec::with_capacity(parts.len());
+    for lit in parts.iter() {
+        out.push(lit.to_vec::<f32>()?);
+    }
+    Ok(out)
+}
+
+/// Executable registry: lazily instantiated, cached artifacts over one
+/// manifest.  `!Send`: lives on the engine's compute thread (PJRT handles
+/// are thread-pinned; the interpreter simply inherits the constraint).
 pub struct Runtime {
-    client: xla::PjRtClient,
+    #[cfg(feature = "pjrt")]
+    client: Option<xla::PjRtClient>,
     manifest: Manifest,
     cache: RefCell<HashMap<String, Rc<Artifact>>>,
     compile_count: std::cell::Cell<usize>,
 }
 
 impl Runtime {
-    /// Load the manifest from `dir` and create a CPU PJRT client.
+    /// Load the manifest from `dir`.  With the `pjrt` feature a CPU PJRT
+    /// client is created and artifacts whose HLO files exist are compiled;
+    /// otherwise everything runs on the interpreter.
     pub fn load(dir: &Path) -> Result<Self> {
         let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Runtime {
-            client,
-            manifest,
-            cache: RefCell::new(HashMap::new()),
-            compile_count: std::cell::Cell::new(0),
-        })
+        Self::from_manifest(manifest, true)
+    }
+
+    /// A runtime over an in-memory [`Manifest::synthetic`] manifest for the
+    /// tiny model: everything executes on the interpreter, no files needed.
+    pub fn synthetic() -> Self {
+        let manifest = Manifest::synthetic(crate::config::ModelConfig::tiny());
+        Self::from_manifest(manifest, false).expect("synthetic runtime construction is infallible")
+    }
+
+    /// [`Runtime::load`] when `dir/manifest.json` exists, otherwise
+    /// [`Runtime::synthetic`] — the constructor the serving path uses so the
+    /// whole stack runs with or without `make artifacts`.
+    pub fn load_or_synthetic(dir: &Path) -> Result<Self> {
+        if dir.join("manifest.json").exists() {
+            Self::load(dir)
+        } else {
+            Ok(Self::synthetic())
+        }
+    }
+
+    fn from_manifest(manifest: Manifest, compiled: bool) -> Result<Self> {
+        #[cfg(feature = "pjrt")]
+        {
+            let client = if compiled { Some(xla::PjRtClient::cpu()?) } else { None };
+            Ok(Runtime {
+                client,
+                manifest,
+                cache: RefCell::new(HashMap::new()),
+                compile_count: std::cell::Cell::new(0),
+            })
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            let _ = compiled;
+            Ok(Runtime {
+                manifest,
+                cache: RefCell::new(HashMap::new()),
+                compile_count: std::cell::Cell::new(0),
+            })
+        }
     }
 
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
-    /// How many artifacts have been XLA-compiled so far (startup metric).
+    /// How many artifacts have been instantiated so far (startup metric).
     pub fn compiled(&self) -> usize {
         self.compile_count.get()
     }
 
-    /// Fetch (compiling on first use) the named artifact.
+    /// Whether a PJRT client is active (artifacts may compile natively);
+    /// `false` means every call runs on the interpreter.
+    pub fn is_compiled(&self) -> bool {
+        #[cfg(feature = "pjrt")]
+        {
+            self.client.is_some()
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            false
+        }
+    }
+
+    fn make_backend(&self, meta: &ArtifactMeta) -> Result<Backend> {
+        #[cfg(feature = "pjrt")]
+        if let Some(client) = &self.client {
+            let path = self.manifest.dir.join(&meta.file);
+            if path.exists() {
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().context("artifact path not utf-8")?,
+                )?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client.compile(&comp)?;
+                return Ok(Backend::Compiled(exe));
+            }
+        }
+        let _ = meta;
+        Ok(Backend::Interp(InterpCtx {
+            model: self.manifest.model.clone(),
+            seq_cap: self.manifest.seq_cap,
+        }))
+    }
+
+    /// Fetch (instantiating on first use) the named artifact.
     pub fn artifact(&self, name: &str) -> Result<Rc<Artifact>> {
         if let Some(a) = self.cache.borrow().get(name) {
             return Ok(a.clone());
@@ -148,19 +275,14 @@ impl Runtime {
             .find(name)
             .with_context(|| format!("no artifact '{name}' in manifest"))?
             .clone();
-        let path = self.manifest.dir.join(&meta.file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("artifact path not utf-8")?,
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
+        let backend = self.make_backend(&meta)?;
         self.compile_count.set(self.compile_count.get() + 1);
-        let artifact = Rc::new(Artifact { meta, exe });
+        let artifact = Rc::new(Artifact { meta, backend });
         self.cache.borrow_mut().insert(name.to_string(), artifact.clone());
         Ok(artifact)
     }
 
-    /// Pre-compile every artifact needed for decode at batch bucket `b`
+    /// Pre-instantiate every artifact needed for decode at batch bucket `b`
     /// (keeps first-token latency off the serving path).
     pub fn warmup_decode(&self, b: usize) -> Result<()> {
         let m = &self.manifest;
@@ -243,5 +365,101 @@ mod tests {
     fn missing_artifact_errors() {
         let Some(rt) = runtime() else { return };
         assert!(rt.artifact("nope_b9").is_err());
+    }
+
+    // ---- interpreter backend (always runnable, no artifacts needed) ------
+
+    #[test]
+    fn synthetic_runtime_embed_matches_reference() {
+        let rt = Runtime::synthetic();
+        let w = crate::model::ModelWeights::generate(&rt.manifest().model, 1);
+        let a = rt.artifact(&rt.manifest().embed_decode_name(1)).unwrap();
+        assert!(a.is_interpreted());
+        let ids = [42i32];
+        let out = a
+            .call(&[
+                ArgValue::I32Slice(&ids),
+                ArgValue::I32(3),
+                ArgValue::F32(&w.tok_table),
+                ArgValue::F32(&w.pos_table),
+            ])
+            .unwrap();
+        let rm = crate::model::RefModel::new(w);
+        assert_eq!(out[0], rm.embed_decode(&ids, 3));
+    }
+
+    #[test]
+    fn synthetic_runtime_validates_arity() {
+        let rt = Runtime::synthetic();
+        let a = rt.artifact("embed_decode_b1").unwrap();
+        assert!(a.call(&[]).is_err());
+    }
+
+    #[test]
+    fn synthetic_decode_paths_agree() {
+        // decode_full over a spliced cache == decode_merge over its parts:
+        // the same consistency contract `parity.rs` pins for compiled HLO.
+        let rt = Runtime::synthetic();
+        let m = rt.manifest().clone();
+        let h = m.model.hidden;
+        let cap = m.seq_cap;
+        let w = crate::model::ModelWeights::generate(&m.model, 13);
+        let (b, l, kv_len) = (1usize, 32usize, 50usize);
+
+        let mut rng = crate::util::prng::Prng::new(9);
+        let x: Vec<f32> = rng.normal_vec_f32(b * h, 0.1);
+        let x_pre: Vec<f32> = rng.normal_vec_f32(b * l * h, 0.1);
+        let k_rest: Vec<f32> = rng.normal_vec_f32(b * (cap - l) * h, 0.1);
+        let v_rest: Vec<f32> = rng.normal_vec_f32(b * (cap - l) * h, 0.1);
+
+        let lw = w.layer(0);
+        let rec = rt.artifact(&m.recompute_name(b, l)).unwrap();
+        let re = rec
+            .call(&[
+                ArgValue::F32(&x_pre),
+                ArgValue::F32(lw.get("ln1_g")),
+                ArgValue::F32(lw.get("ln1_b")),
+                ArgValue::F32(lw.get("wk")),
+                ArgValue::F32(lw.get("bk")),
+                ArgValue::F32(lw.get("wv")),
+                ArgValue::F32(lw.get("bv")),
+            ])
+            .unwrap();
+
+        let mut kc = re[0].clone();
+        kc.extend_from_slice(&k_rest);
+        let mut vc = re[1].clone();
+        vc.extend_from_slice(&v_rest);
+        let full = rt.artifact(&m.decode_full_name(b)).unwrap();
+        let mut args = vec![
+            ArgValue::F32(&x),
+            ArgValue::F32(&kc),
+            ArgValue::F32(&vc),
+            ArgValue::I32(kv_len as i32),
+        ];
+        for (_, d, _) in w.layer(0).iter() {
+            args.push(ArgValue::F32(d.as_slice()));
+        }
+        let out_full = full.call(&args).unwrap();
+
+        let merge = rt.artifact(&m.decode_merge_name(b, l)).unwrap();
+        let mut args = vec![
+            ArgValue::F32(&x),
+            ArgValue::F32(&re[0]),
+            ArgValue::F32(&re[1]),
+            ArgValue::F32(&k_rest),
+            ArgValue::F32(&v_rest),
+            ArgValue::I32(kv_len as i32),
+        ];
+        for (_, d, _) in w.layer(0).iter() {
+            args.push(ArgValue::F32(d.as_slice()));
+        }
+        let out_split = merge.call(&args).unwrap();
+
+        for i in 0..3 {
+            for (a, b) in out_full[i].iter().zip(&out_split[i]) {
+                assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+            }
+        }
     }
 }

@@ -1,0 +1,229 @@
+//! Pure-Rust artifact interpreter — the runtime backend used when PJRT is
+//! unavailable (no `pjrt` feature, or no compiled `.hlo.txt` on disk).
+//!
+//! Each artifact kind is executed with [`RefModel`] math over the *argument*
+//! tensors, so the interpreter computes exactly what the compiled HLO
+//! computes (the parity tests in `rust/tests/parity.rs` pin the two against
+//! each other whenever real artifacts are present).  Weights always arrive
+//! as call arguments — never from engine state — mirroring the offloading
+//! regime where weights stream over the link every layer.
+//!
+//! Performance note: this path re-wraps argument weight slices into
+//! [`LayerWeights`] per call (one copy per layer per step).  That is fine
+//! for the tiny model the interpreter serves; the PJRT path keeps weights
+//! device-resident and pays nothing.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::artifacts::ArtifactMeta;
+use super::exec::ArgValue;
+use crate::config::ModelConfig;
+use crate::model::{LayerWeights, ModelWeights, RefModel, LAYER_WEIGHT_NAMES};
+
+/// What the interpreter needs beyond the artifact metadata.
+pub(crate) struct InterpCtx {
+    pub model: ModelConfig,
+    pub seq_cap: usize,
+}
+
+fn f32_arg<'a>(meta: &ArtifactMeta, args: &'a [ArgValue], i: usize) -> Result<&'a [f32]> {
+    match args.get(i) {
+        Some(ArgValue::F32(d)) => Ok(d),
+        _ => bail!("{}: arg {i} must be an f32 tensor", meta.name),
+    }
+}
+
+fn i32_slice_arg<'a>(meta: &ArtifactMeta, args: &'a [ArgValue], i: usize) -> Result<&'a [i32]> {
+    match args.get(i) {
+        Some(ArgValue::I32Slice(d)) => Ok(d),
+        _ => bail!("{}: arg {i} must be an i32 tensor", meta.name),
+    }
+}
+
+fn i32_scalar_arg(meta: &ArtifactMeta, args: &[ArgValue], i: usize) -> Result<i32> {
+    match args.get(i) {
+        Some(ArgValue::I32(v)) => Ok(*v),
+        _ => bail!("{}: arg {i} must be a scalar i32", meta.name),
+    }
+}
+
+fn weight_shape(name: &str, h: usize, f: usize) -> Vec<usize> {
+    match name {
+        "wq" | "wk" | "wv" | "wo" => vec![h, h],
+        "w1" => vec![h, f],
+        "w2" => vec![f, h],
+        "b1" => vec![f],
+        _ => vec![h],
+    }
+}
+
+/// Rebuild one layer's [`LayerWeights`] from 16 consecutive f32 args.
+fn layer_weights(
+    meta: &ArtifactMeta,
+    model: &ModelConfig,
+    args: &[ArgValue],
+    off: usize,
+) -> Result<LayerWeights> {
+    let mut tensors = Vec::with_capacity(LAYER_WEIGHT_NAMES.len());
+    for (j, &name) in LAYER_WEIGHT_NAMES.iter().enumerate() {
+        let data = f32_arg(meta, args, off + j)?;
+        tensors.push((
+            name.to_string(),
+            Arc::new(data.to_vec()),
+            weight_shape(name, model.hidden, model.ffn),
+        ));
+    }
+    Ok(LayerWeights::from_tensors(tensors))
+}
+
+/// A [`ModelWeights`] carrying only one decoder layer (head tables empty):
+/// enough for [`RefModel::decode_layer_full`].
+fn single_layer_model(model: &ModelConfig, lw: LayerWeights) -> RefModel {
+    RefModel::new(ModelWeights {
+        config: model.clone(),
+        tok_table: Arc::new(Vec::new()),
+        pos_table: Arc::new(Vec::new()),
+        lnf_g: Arc::new(Vec::new()),
+        lnf_b: Arc::new(Vec::new()),
+        layers: vec![lw],
+    })
+}
+
+/// Splice a recomputed `[b, l, h]` prefix and a transferred `[b, cap-l, h]`
+/// remainder into one padded `[b, cap, h]` cache.
+fn splice_cache(pre: &[f32], rest: &[f32], b: usize, l: usize, cap: usize, h: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; b * cap * h];
+    let rest_rows = cap - l;
+    for bi in 0..b {
+        let dst = bi * cap * h;
+        out[dst..dst + l * h].copy_from_slice(&pre[bi * l * h..(bi + 1) * l * h]);
+        out[dst + l * h..dst + cap * h]
+            .copy_from_slice(&rest[bi * rest_rows * h..(bi + 1) * rest_rows * h]);
+    }
+    out
+}
+
+/// Execute `meta` over `args`; returns one flat f32 vector per output.
+pub(crate) fn execute(
+    meta: &ArtifactMeta,
+    ctx: &InterpCtx,
+    args: &[ArgValue],
+) -> Result<Vec<Vec<f32>>> {
+    let model = &ctx.model;
+    let h = model.hidden;
+    match meta.kind.as_str() {
+        "embed_decode" => {
+            let ids = i32_slice_arg(meta, args, 0)?;
+            let pos = i32_scalar_arg(meta, args, 1)? as usize;
+            let tok = f32_arg(meta, args, 2)?;
+            let pt = f32_arg(meta, args, 3)?;
+            let mut out = Vec::with_capacity(ids.len() * h);
+            for &id in ids {
+                let t = &tok[id as usize * h..(id as usize + 1) * h];
+                let p = &pt[pos * h..(pos + 1) * h];
+                out.extend(t.iter().zip(p).map(|(a, b)| a + b));
+            }
+            Ok(vec![out])
+        }
+        "lm_head" => {
+            let x = f32_arg(meta, args, 0)?;
+            let tok = f32_arg(meta, args, 1)?;
+            let g = f32_arg(meta, args, 2)?;
+            let bb = f32_arg(meta, args, 3)?;
+            let v = model.vocab;
+            let ln = RefModel::layernorm(x, g, bb, h);
+            let b = x.len() / h;
+            let mut out = vec![0.0f32; b * v];
+            for r in 0..b {
+                let xr = &ln[r * h..(r + 1) * h];
+                for t in 0..v {
+                    let row = &tok[t * h..(t + 1) * h];
+                    out[r * v + t] = xr.iter().zip(row).map(|(a, b)| a * b).sum();
+                }
+            }
+            Ok(vec![out])
+        }
+        "prefill" => {
+            let ids = i32_slice_arg(meta, args, 0)?;
+            let (b, sp) = (meta.b, meta.sp);
+            let mut layers = Vec::with_capacity(model.n_layers);
+            for i in 0..model.n_layers {
+                layers.push(layer_weights(meta, model, args, 5 + i * LAYER_WEIGHT_NAMES.len())?);
+            }
+            let rm = RefModel::new(ModelWeights {
+                config: model.clone(),
+                tok_table: Arc::new(f32_arg(meta, args, 1)?.to_vec()),
+                pos_table: Arc::new(f32_arg(meta, args, 2)?.to_vec()),
+                lnf_g: Arc::new(f32_arg(meta, args, 3)?.to_vec()),
+                lnf_b: Arc::new(f32_arg(meta, args, 4)?.to_vec()),
+                layers,
+            });
+            let (logits, per_layer) = rm.prefill(ids, b, sp);
+            let chunk = b * sp * h;
+            let mut k_stack = Vec::with_capacity(model.n_layers * chunk);
+            let mut v_stack = Vec::with_capacity(model.n_layers * chunk);
+            let mut x_stack = Vec::with_capacity(model.n_layers * chunk);
+            for (k, v, x) in per_layer {
+                k_stack.extend_from_slice(&k);
+                v_stack.extend_from_slice(&v);
+                x_stack.extend_from_slice(&x);
+            }
+            Ok(vec![logits, k_stack, v_stack, x_stack])
+        }
+        "decode_full" => {
+            let x = f32_arg(meta, args, 0)?;
+            let kc = f32_arg(meta, args, 1)?;
+            let vc = f32_arg(meta, args, 2)?;
+            let kv_len = i32_scalar_arg(meta, args, 3)? as usize;
+            let lw = layer_weights(meta, model, args, 4)?;
+            let rm = single_layer_model(model, lw);
+            let (y, kn, vn) = rm.decode_layer_full(0, x, kc, vc, ctx.seq_cap, kv_len, meta.b);
+            Ok(vec![y, kn, vn])
+        }
+        "recompute" => {
+            let x_pre = f32_arg(meta, args, 0)?;
+            let rows = meta.b * meta.l;
+            let ln = RefModel::layernorm(x_pre, f32_arg(meta, args, 1)?, f32_arg(meta, args, 2)?, h);
+            let k = RefModel::linear(&ln, f32_arg(meta, args, 3)?, f32_arg(meta, args, 4)?, rows, h, h);
+            let v = RefModel::linear(&ln, f32_arg(meta, args, 5)?, f32_arg(meta, args, 6)?, rows, h, h);
+            Ok(vec![k, v])
+        }
+        "decode_merge" => {
+            let x = f32_arg(meta, args, 0)?;
+            let k_pre = f32_arg(meta, args, 1)?;
+            let v_pre = f32_arg(meta, args, 2)?;
+            let k_rest = f32_arg(meta, args, 3)?;
+            let v_rest = f32_arg(meta, args, 4)?;
+            let kv_len = i32_scalar_arg(meta, args, 5)? as usize;
+            let (b, l, cap) = (meta.b, meta.l, ctx.seq_cap);
+            let kc = splice_cache(k_pre, k_rest, b, l, cap, h);
+            let vc = splice_cache(v_pre, v_rest, b, l, cap, h);
+            let lw = layer_weights(meta, model, args, 6)?;
+            let rm = single_layer_model(model, lw);
+            let (y, kn, vn) = rm.decode_layer_full(0, x, &kc, &vc, cap, kv_len, b);
+            Ok(vec![y, kn, vn])
+        }
+        "decode_partial" => {
+            let x = f32_arg(meta, args, 0)?;
+            let x_pre = f32_arg(meta, args, 1)?;
+            let k_rest = f32_arg(meta, args, 2)?;
+            let v_rest = f32_arg(meta, args, 3)?;
+            let kv_len = i32_scalar_arg(meta, args, 4)? as usize;
+            let (b, l, cap) = (meta.b, meta.l, ctx.seq_cap);
+            let lw = layer_weights(meta, model, args, 5)?;
+            // fused = recompute + merge in one call
+            let rows = b * l;
+            let ln = RefModel::layernorm(x_pre, lw.get("ln1_g"), lw.get("ln1_b"), h);
+            let k_pre = RefModel::linear(&ln, lw.get("wk"), lw.get("bk"), rows, h, h);
+            let v_pre = RefModel::linear(&ln, lw.get("wv"), lw.get("bv"), rows, h, h);
+            let kc = splice_cache(&k_pre, k_rest, b, l, cap, h);
+            let vc = splice_cache(&v_pre, v_rest, b, l, cap, h);
+            let rm = single_layer_model(model, lw);
+            let (y, kn, vn) = rm.decode_layer_full(0, x, &kc, &vc, cap, kv_len, b);
+            Ok(vec![y, kn, vn])
+        }
+        other => bail!("{}: interpreter has no kernel for kind '{other}'", meta.name),
+    }
+}

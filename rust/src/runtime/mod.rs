@@ -1,17 +1,28 @@
-//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt`) and execute
-//! them on the request path.
+//! The artifact runtime: load the AOT step functions and execute them on
+//! the request path (paper §3.3's "runtime module" substrate).
 //!
-//! Flow (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
-//! `client.compile` → `execute`.  HLO *text* is the interchange format —
-//! `python/compile/aot.py` explains why.
+//! Two backends sit behind one [`Runtime`] API:
 //!
-//! PJRT handles are not `Send`/`Sync`; a [`Runtime`] therefore lives on the
-//! engine's compute thread.  Executables are compiled lazily on first use
-//! and cached for the lifetime of the runtime.
+//! * **PJRT** (`--features pjrt`): `PjRtClient::cpu()` →
+//!   `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//!   `client.compile` → `execute`.  HLO *text* is the interchange format —
+//!   `python/compile/aot.py` explains why.  PJRT handles are not
+//!   `Send`/`Sync`; a [`Runtime`] therefore lives on the engine's compute
+//!   thread.  Executables are compiled lazily on first use and cached.
+//! * **Interpreter** (default): every artifact is evaluated with the
+//!   pure-Rust [`RefModel`](crate::model::RefModel) math over the call's
+//!   argument tensors — exactly what the HLO computes (`rust/tests/parity.rs`
+//!   pins them against each other when artifacts are present).  With
+//!   [`Manifest::synthetic`] this backend needs **no files at all**, which is
+//!   what lets the serving stack and its tests run in a container that never
+//!   ran `make artifacts`.
+//!
+//! The manifest (`manifest.json`) is the contract between the two worlds:
+//! bucket grids, tensor signatures and the canonical per-layer weight order.
 
 mod artifacts;
 mod exec;
+mod interp;
 
 pub use artifacts::{ArtifactMeta, Manifest, TensorSig};
 pub use exec::{ArgValue, Artifact, Runtime};

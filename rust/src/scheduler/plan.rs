@@ -88,6 +88,60 @@ impl Planner {
         }
     }
 
+    /// Plan one decode step for a **formed batch**: aggregate each member's
+    /// cached-token count s'ᵢ into the Eq. (10)/(11) cost model and solve
+    /// once for the whole batch (the continuous-batching coordinator calls
+    /// this per batch per step).
+    ///
+    /// The aggregation is the paper's batch-scaling: marginal per-token
+    /// costs grow linearly with the number of lanes, the shared split point
+    /// is bounded by the *shortest* member (a prefix can only be recomputed
+    /// where every lane has one), and the objective is evaluated at the
+    /// longest member's s' (lanes are padded to a common length).
+    ///
+    /// ```
+    /// use kvpr::scheduler::{CostModel, Planner, SchedulePolicy};
+    /// let cost = CostModel {
+    ///     recompute_per_token_s: 1e-6,
+    ///     transfer_kv_per_token_s: 1e-6,
+    ///     transfer_act_per_token_s: 5e-7,
+    ///     gpu_overhead_s: 0.0,
+    ///     link_latency_s: 0.0,
+    /// };
+    /// // per-lane cost model; the batch aggregation happens in plan_batch
+    /// let planner = Planner::new(cost, SchedulePolicy::RowByRow, vec![32, 64, 96], usize::MAX);
+    /// let plan = planner.plan_batch(&[120, 120, 120, 120]);
+    /// assert!(plan.l() > 0, "transfer-bound batch must recompute a prefix");
+    /// assert!(plan.predicted_s <= plan.baseline_s);
+    /// ```
+    pub fn plan_batch(&self, lane_s_primes: &[usize]) -> StepPlan {
+        assert!(!lane_s_primes.is_empty(), "plan_batch over an empty batch");
+        let n = lane_s_primes.len() as f64;
+        let s_prime = *lane_s_primes.iter().max().unwrap();
+        let feasible = *lane_s_primes.iter().min().unwrap();
+
+        let mut cost = self.solver.cost.clone();
+        cost.recompute_per_token_s *= n;
+        cost.transfer_kv_per_token_s *= n;
+        cost.transfer_act_per_token_s *= n;
+        let solver = SplitSolver::new(cost, self.solver.policy);
+
+        let l_max = self.l_cap.min(feasible);
+        let ideal = solver.solve(s_prime, l_max);
+        let l = solver.quantize_to_buckets(s_prime, &self.buckets, l_max);
+        let path = if l == 0 {
+            PathKind::FullTransfer
+        } else {
+            PathKind::PartialRecompute { l }
+        };
+        StepPlan {
+            path,
+            ideal_l: ideal.l,
+            predicted_s: solver.objective(l, s_prime),
+            baseline_s: solver.objective(0, s_prime),
+        }
+    }
+
     /// The split-point trajectory over a whole generation (Fig 12): one
     /// continuous-optimum l* per generated token.
     pub fn split_trajectory(&self, prompt_len: usize, gen_len: usize) -> Vec<usize> {
@@ -159,6 +213,44 @@ mod tests {
         let p = Planner::new(cost, SchedulePolicy::RowByRow, vec![], 128);
         let traj = p.split_trajectory(128, 32);
         assert!(traj.iter().all(|&l| l == 128), "{traj:?}");
+    }
+
+    #[test]
+    fn batch_plan_matches_scaled_single_plan() {
+        // n identical lanes through plan_batch == one lane through a planner
+        // whose cost model was pre-scaled by n (the engine's construction)
+        let base = CostModel::from_hardware(
+            &HardwareConfig::a100_x16(),
+            &ModelConfig::opt_6_7b(),
+            1,
+        );
+        let per_lane = Planner::new(base.clone(), SchedulePolicy::RowByRow, vec![32, 64, 96], usize::MAX);
+        let scaled = CostModel::from_hardware(
+            &HardwareConfig::a100_x16(),
+            &ModelConfig::opt_6_7b(),
+            32,
+        );
+        let pre_scaled = Planner::new(scaled, SchedulePolicy::RowByRow, vec![32, 64, 96], usize::MAX);
+        let batch_plan = per_lane.plan_batch(&[128; 32]);
+        let single_plan = pre_scaled.plan_step(128);
+        assert_eq!(batch_plan.l(), single_plan.l());
+        assert!((batch_plan.predicted_s - single_plan.predicted_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn batch_plan_bounded_by_shortest_member() {
+        // a lane with only 40 cached tokens caps the shared split below 64
+        let cost = CostModel {
+            recompute_per_token_s: 1e-9, // recompute nearly free → wants max l
+            transfer_kv_per_token_s: 1e-6,
+            transfer_act_per_token_s: 5e-7,
+            gpu_overhead_s: 0.0,
+            link_latency_s: 0.0,
+        };
+        let p = Planner::new(cost, SchedulePolicy::RowByRow, vec![32, 64, 96], usize::MAX);
+        let plan = p.plan_batch(&[128, 128, 40, 128]);
+        assert!(plan.l() <= 40, "split {} exceeds shortest member", plan.l());
+        assert_eq!(plan.l(), 32);
     }
 
     #[test]

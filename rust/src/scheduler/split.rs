@@ -66,6 +66,26 @@ impl SplitSolver {
     }
 
     /// Closed-form integer solve over 0 ≤ l ≤ l_max.
+    ///
+    /// A minimal plan-and-predict round trip: with balanced per-token costs
+    /// (recomputing one token costs what transferring it costs) the LP lands
+    /// mid-sequence and halves the predicted step time versus pure transfer:
+    ///
+    /// ```
+    /// use kvpr::scheduler::{CostModel, SchedulePolicy, SplitSolver};
+    /// let cost = CostModel {
+    ///     recompute_per_token_s: 1e-6,   // A, Eq. 8/9
+    ///     transfer_kv_per_token_s: 1e-6, // C, Eq. 6
+    ///     transfer_act_per_token_s: 5e-7,
+    ///     gpu_overhead_s: 0.0,
+    ///     link_latency_s: 0.0,
+    /// };
+    /// let solver = SplitSolver::new(cost, SchedulePolicy::RowByRow);
+    /// let split = solver.solve(1000, 1000); // s' = 1000 cached tokens
+    /// assert!((499..=501).contains(&split.l));
+    /// assert!(split.time_s <= split.baseline_s);
+    /// assert!((split.speedup() - 2.0).abs() < 0.01);
+    /// ```
     pub fn solve(&self, s_prime: usize, l_max: usize) -> Split {
         let l_max = l_max.min(s_prime);
         let c = &self.cost;

@@ -10,6 +10,32 @@ use super::core::{ResourceId, Sim, TaskId, TaskKind};
 use crate::config::{HardwareConfig, ModelConfig};
 
 /// The paper's systems (§4 baselines + §5 related work).
+///
+/// A minimal plan-and-predict round trip — simulate a short latency-oriented
+/// decode under KVPR and read back the per-step split points the LP chose:
+///
+/// ```
+/// use kvpr::config::{HardwareConfig, ModelConfig, WorkloadConfig};
+/// use kvpr::sim::{simulate_decode, Policy, RunConfig};
+///
+/// let cfg = RunConfig::new(
+///     ModelConfig::opt_6_7b(),
+///     HardwareConfig::a100_x16(),
+///     WorkloadConfig::latency_oriented(256, 4), // prompt 256, generate 4
+///     Policy::Kvpr,
+/// );
+/// let report = simulate_decode(&cfg);
+/// assert_eq!(report.splits.len(), 4);         // one LP solve per step
+/// assert!(report.tok_per_s > 0.0);
+/// // the non-split baseline never recomputes
+/// let base = simulate_decode(&RunConfig::new(
+///     ModelConfig::opt_6_7b(),
+///     HardwareConfig::a100_x16(),
+///     WorkloadConfig::latency_oriented(256, 4),
+///     Policy::FlexGen,
+/// ));
+/// assert!(base.splits.iter().all(|&l| l == 0));
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Policy {
     /// Hugging Face Accelerate: KV offloaded, synchronous transfers.

@@ -115,12 +115,20 @@ impl From<usize> for Json {
     }
 }
 
-#[derive(Debug, Clone, thiserror::Error)]
-#[error("json error at byte {pos}: {msg}")]
+/// Parse failure with the byte offset it occurred at.
+#[derive(Debug, Clone)]
 pub struct JsonError {
     pub pos: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "json error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 struct Parser<'a> {
     bytes: &'a [u8],
