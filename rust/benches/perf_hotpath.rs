@@ -13,6 +13,7 @@ use std::time::Instant;
 
 use kvpr::config::{HardwareConfig, ModelConfig, WorkloadConfig};
 use kvpr::kvcache::quant;
+use kvpr::kvstore::{simulate_eviction, EvictionSimConfig, EvictionSimReport, Lru, RecomputeAware};
 use kvpr::scheduler::{CostModel, SchedulePolicy, SplitSolver};
 use kvpr::sim::{simulate_decode, Policy, RunConfig};
 use kvpr::util::table::Table;
@@ -134,5 +135,43 @@ fn main() {
         format!("{tasks} tasks"),
     ]);
 
+    // kvstore eviction-policy comparison (skewed reuse, tight budget):
+    // LRU vs recompute-aware, analytically — the numbers that start the
+    // kvstore bench trajectory (BENCH_kvstore.json)
+    let cost = CostModel::from_hardware(&HardwareConfig::a100_x16(), &ModelConfig::opt_6_7b(), 32);
+    let ecfg = EvictionSimConfig::skewed_reuse(cost.clone());
+    let lru = simulate_eviction(&ecfg, &Lru);
+    let ra = simulate_eviction(&ecfg, &RecomputeAware::new(cost));
+    let dt = time_per_iter(50, || {
+        std::hint::black_box(simulate_eviction(&ecfg, &Lru));
+    });
+    t.row(&[
+        "kvstore eviction sim (8 seqs)".into(),
+        "50".into(),
+        kvpr::util::fmt_secs(dt),
+        format!(
+            "ra {:.0} vs lru {:.0} steps/s",
+            ra.steps_per_s, lru.steps_per_s
+        ),
+    ]);
+
+    let json = format!(
+        "{{\n  \"bench\": \"kvstore\",\n  \"policies\": {{\n    \"lru\": {},\n    \"recompute_aware\": {}\n  }}\n}}\n",
+        policy_json(&lru),
+        policy_json(&ra)
+    );
+    if let Err(e) = std::fs::write("BENCH_kvstore.json", &json) {
+        eprintln!("BENCH_kvstore.json not written: {e}");
+    } else {
+        println!("wrote BENCH_kvstore.json");
+    }
+
     t.emit("perf_hotpath");
+}
+
+fn policy_json(r: &EvictionSimReport) -> String {
+    format!(
+        "{{ \"steps_per_s\": {:.3}, \"link_busy_frac\": {:.4}, \"evictions\": {}, \"steps\": {}, \"peak_concurrency\": {} }}",
+        r.steps_per_s, r.link_busy_frac, r.evictions, r.steps, r.peak_concurrency
+    )
 }

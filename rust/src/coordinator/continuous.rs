@@ -44,6 +44,7 @@ use super::metrics::ServeMetrics;
 use super::request::{Pending, Request, RequestState, Response};
 use super::server::ResponseHandle;
 use crate::engine::{DecodeSession, Engine, EngineConfig};
+use crate::kvstore::{EvictKind, KvStore, KvStoreConfig, Prefetcher};
 use crate::memory::{MemPool, PoolGuard};
 use crate::model::ByteTokenizer;
 use crate::scheduler::SchedulePolicy;
@@ -66,6 +67,12 @@ pub struct ContinuousConfig {
     /// How long an *idle* loop waits for more arrivals before prefilling a
     /// partial group (batching window; never delays active decoding).
     pub admit_wait: Duration,
+    /// Tiered KV management ([`KvStore`]): when set, `kv_budget_bytes`
+    /// becomes the gpu-hbm *tier* budget (a promotion-only cache),
+    /// sessions are admitted against the pinned + dram host tiers (with
+    /// recompute-aware reclamation) instead of hard backpressure, and a
+    /// device-resident KV suffix shrinks every step's transfer term.
+    pub tiering: Option<TieredKvConfig>,
 }
 
 impl ContinuousConfig {
@@ -78,6 +85,38 @@ impl ContinuousConfig {
             prompt_bucket: 32,
             kv_budget_bytes: 256 << 20,
             admit_wait: Duration::from_millis(20),
+            tiering: None,
+        }
+    }
+}
+
+/// Tier layout and policy for the serving loop's [`KvStore`].
+#[derive(Debug, Clone)]
+pub struct TieredKvConfig {
+    /// Pinned host tier capacity (also backs migration staging).
+    pub pinned_bytes: u64,
+    /// Cold cpu-dram tier capacity.
+    pub dram_bytes: u64,
+    /// Tokens per block; match the smallest artifact L bucket so dropped-KV
+    /// floors land on a real recompute bucket.
+    pub block_tokens: usize,
+    /// Eviction policy (built with the engine's measured cost model).
+    pub policy: EvictKind,
+    /// Blocks promoted per group per step (prefetch lookahead).
+    pub prefetch_blocks: usize,
+    /// Bound on in-flight promotions across all groups.
+    pub max_inflight: usize,
+}
+
+impl Default for TieredKvConfig {
+    fn default() -> Self {
+        TieredKvConfig {
+            pinned_bytes: 64 << 20,
+            dram_bytes: 256 << 20,
+            block_tokens: 32,
+            policy: EvictKind::RecomputeAware,
+            prefetch_blocks: 1,
+            max_inflight: 8,
         }
     }
 }
@@ -92,12 +131,22 @@ struct Member {
     state: RequestState,
 }
 
+/// The KV reservation backing one decode group: a flat budget guard (PR 1
+/// hard backpressure) or a tiered-store session id.
+enum KvHold {
+    /// Freed (unblocking admission) when the group is dropped.
+    Hard(PoolGuard),
+    /// Released via [`KvStore::release`] at retirement.
+    Tiered(u64),
+}
+
 /// One decode group: a session plus its members and KV reservation.
 struct Group {
     sess: DecodeSession,
     members: Vec<Member>,
-    /// Freed (unblocking admission) when the group is dropped.
-    _kv: PoolGuard,
+    kv: KvHold,
+    /// Split the planner chose last step (recompute-aware eviction input).
+    last_l: usize,
 }
 
 impl Group {
@@ -215,6 +264,25 @@ fn serve_loop(
         None
     };
     let kv_pool = MemPool::new("host-kv-budget", cfg.kv_budget_bytes);
+    // tiered mode: the budget becomes the gpu tier; admission goes through
+    // the block-granular store and its reclaimable lower tiers instead
+    let mut store: Option<(KvStore, Prefetcher)> = cfg.tiering.as_ref().map(|t| {
+        let cost = engine.profile().cost_model(&engine.runtime().manifest().model);
+        let s = KvStore::new(
+            KvStoreConfig {
+                gpu_bytes: cfg.kv_budget_bytes,
+                pinned_bytes: t.pinned_bytes,
+                dram_bytes: t.dram_bytes,
+                block_tokens: t.block_tokens,
+                link: cfg.engine.link.clone(),
+            },
+            t.policy.build(cost),
+        );
+        (s, Prefetcher::new(t.max_inflight))
+    });
+    let prefetch_blocks = cfg.tiering.as_ref().map_or(1, |t| t.prefetch_blocks);
+    let seq_cap = engine.runtime().manifest().seq_cap;
+    let mut next_seq: u64 = 1;
     let tok = ByteTokenizer::new();
     // per-lane planner (batch scaling happens in plan_batch); depends only
     // on the startup profile, so build it once, off the step path
@@ -226,6 +294,7 @@ fn serve_loop(
 
     let mut queue: VecDeque<Pending> = VecDeque::new();
     let mut groups: Vec<Group> = Vec::new();
+    let mut seen_kv_drops: u64 = 0;
 
     loop {
         // -- 1. arrivals -----------------------------------------------------
@@ -256,11 +325,27 @@ fn serve_loop(
         // -- 2. admission (Queued → Prefill → Decoding) ----------------------
         while !queue.is_empty() && groups.len() < cfg.max_groups {
             let mut n = queue.len().min(cfg.max_group.max(1));
-            let mut guard = None;
+            let mut hold = None;
             while n >= 1 {
                 let need = engine.session_kv_bytes(n)?;
-                if let Ok(g) = kv_pool.alloc(need) {
-                    guard = Some(g);
+                let got = match store.as_mut() {
+                    Some((s, _)) => {
+                        // tiered admission: place the session's blocks
+                        // across the host tiers, reclaiming (drop KV,
+                        // keep X) before backpressuring
+                        let blocks = seq_cap.div_ceil(s.block_tokens());
+                        if s.admit(next_seq, need, blocks).is_ok() {
+                            let seq = next_seq;
+                            next_seq += 1;
+                            Some(KvHold::Tiered(seq))
+                        } else {
+                            None
+                        }
+                    }
+                    None => kv_pool.alloc(need).ok().map(KvHold::Hard),
+                };
+                if let Some(got) = got {
+                    hold = Some(got);
                     break;
                 }
                 if !groups.is_empty() {
@@ -268,7 +353,7 @@ fn serve_loop(
                 }
                 n /= 2; // idle engine: shrink the group to fit the budget
             }
-            let Some(guard) = guard else {
+            let Some(hold) = hold else {
                 // KV budget exhausted: hold requests Queued until a group
                 // retires and frees its reservation
                 metrics.record_backpressure();
@@ -304,17 +389,52 @@ fn serve_loop(
                     state: RequestState::Prefill,
                 })
                 .collect();
-            let sess = engine.start_batch(&prompts)?;
+            let mut sess = engine.start_batch(&prompts)?;
+            if let (KvHold::Tiered(_), Some(t)) = (&hold, cfg.tiering.as_ref()) {
+                // gpu-tier residency: generated KV stays on device and the
+                // store's placement decisions are mirrored every step
+                engine.enable_residency(&mut sess, t.block_tokens);
+            }
             // ...then Prefill → Decoding once the cache is populated
             for m in members.iter_mut() {
                 m.state = RequestState::Decoding;
             }
             metrics.record_batch(n);
-            groups.push(Group { sess, members, _kv: guard });
+            groups.push(Group { sess, members, kv: hold, last_l: 0 });
         }
 
         if groups.is_empty() {
             continue;
+        }
+
+        // -- 2b. tiered kvstore: land promotions, sync residency, prefetch --
+        if let Some((s, pf)) = store.as_mut() {
+            // surface reclamation drops performed during admission
+            let drops = s.stats().kv_drops;
+            if drops > seen_kv_drops {
+                let tokens = (drops - seen_kv_drops) * s.block_tokens() as u64;
+                metrics.record_tiering(0, 0, tokens);
+                seen_kv_drops = drops;
+            }
+            pf.poll(s);
+            for g in groups.iter_mut() {
+                let KvHold::Tiered(seq) = &g.kv else { continue };
+                let seq = *seq;
+                s.touch(seq, g.sess.kv_len(), g.last_l);
+                // mirror the engine's freely-grown device window into the
+                // gpu tier's accounting, then prefetch deeper blocks ahead
+                // of the step
+                let backed = s.sync_device_suffix(seq, g.sess.resident_tokens());
+                pf.pump(s, seq, prefetch_blocks);
+                let cur = g.sess.resident_tokens();
+                if backed > cur || cur > backed + s.block_tokens() {
+                    // promote up to the store's placement, or demote when
+                    // the gpu tier cannot back the window (budget), with a
+                    // one-block hysteresis for the in-flight growth
+                    let (p, d) = engine.set_resident_target(&mut g.sess, backed);
+                    metrics.record_tiering(p as u64, d as u64, 0);
+                }
+            }
         }
 
         // -- 3+4. re-plan and step every group -------------------------------
@@ -327,11 +447,20 @@ fn serve_loop(
             // decodes (and transfers) every lane of the batch *bucket*,
             // padding and retired lanes included, so the aggregate uses the
             // bucket's lane count — not just the live members — at the
-            // members' shared s'.
+            // members' shared s'.  Under tiering the plan also accounts the
+            // device-resident suffix (shrinks the transfer term) and any
+            // dropped-KV prefix (floors the recompute term).
             let plan_l = lane_planner.as_ref().map(|p| {
                 let lanes = vec![g.sess.kv_len(); g.sess.batch_bucket()];
-                p.plan_batch(&lanes).l()
+                let floor = match (&g.kv, store.as_ref()) {
+                    (KvHold::Tiered(seq), Some((s, _))) => s.kv_dropped_tokens(*seq),
+                    _ => 0,
+                };
+                p.plan_batch_tiered(&lanes, g.sess.resident_tokens(), floor).l()
             });
+            if let Some(l) = plan_l {
+                g.last_l = l;
+            }
             engine.decode_step_with_plan(&mut g.sess, plan_l)?;
             step_tokens += g.active();
         }
@@ -369,8 +498,16 @@ fn serve_loop(
             }
         }
         // dropping a finished group frees its KV reservation → admission
-        // can proceed next step
-        groups.retain(|g| g.active() > 0);
+        // can proceed next step (tiered sessions release their blocks)
+        let mut live = Vec::with_capacity(groups.len());
+        for g in groups.drain(..) {
+            if g.active() > 0 {
+                live.push(g);
+            } else if let (KvHold::Tiered(seq), Some((s, _))) = (&g.kv, store.as_mut()) {
+                s.release(*seq);
+            }
+        }
+        groups = live;
 
         metrics.record_step(queue.len(), active, t_step.elapsed().as_secs_f64(), step_tokens);
     }

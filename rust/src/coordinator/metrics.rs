@@ -31,6 +31,10 @@ struct Inner {
     step_tokens: u64,
     step_time_total: f64,
     backpressure: u64,
+    // -- tiered kvstore counters --------------------------------------------
+    promoted_tokens: u64,
+    demoted_tokens: u64,
+    kv_dropped_tokens: u64,
 }
 
 impl ServeMetrics {
@@ -71,6 +75,32 @@ impl ServeMetrics {
     /// Admission was refused because the KV budget was exhausted.
     pub fn record_backpressure(&self) {
         self.inner.lock().unwrap().backpressure += 1;
+    }
+
+    /// Tiered-kvstore activity this step: tokens promoted into / demoted
+    /// out of the device-resident window, and prefix tokens whose KV the
+    /// store dropped (keeping X) to reclaim capacity.
+    pub fn record_tiering(&self, promoted: u64, demoted: u64, kv_dropped: u64) {
+        let mut m = self.inner.lock().unwrap();
+        m.promoted_tokens += promoted;
+        m.demoted_tokens += demoted;
+        m.kv_dropped_tokens += kv_dropped;
+    }
+
+    /// (promoted, demoted, kv-dropped) token totals of the tiered kvstore.
+    pub fn tiering_totals(&self) -> (u64, u64, u64) {
+        let m = self.inner.lock().unwrap();
+        (m.promoted_tokens, m.demoted_tokens, m.kv_dropped_tokens)
+    }
+
+    /// Highest number of requests decoding concurrently in any step.
+    pub fn peak_occupancy(&self) -> f64 {
+        let m = self.inner.lock().unwrap();
+        if m.occupancy.count() == 0 {
+            0.0
+        } else {
+            m.occupancy.max()
+        }
     }
 
     pub fn requests(&self) -> u64 {
@@ -212,6 +242,17 @@ mod tests {
         assert!((mean - 0.020).abs() < 1e-9);
         assert!((m.mean_queue_depth() - 1.5).abs() < 1e-9);
         assert!((m.mean_occupancy() - 7.0).abs() < 1e-9);
+        assert!((m.peak_occupancy() - 8.0).abs() < 1e-9);
         assert!((m.step_tok_per_s() - 14.0 / 0.040).abs() < 1e-6);
+    }
+
+    #[test]
+    fn tiering_counters() {
+        let m = ServeMetrics::new();
+        assert_eq!(m.tiering_totals(), (0, 0, 0));
+        m.record_tiering(32, 0, 0);
+        m.record_tiering(16, 8, 32);
+        assert_eq!(m.tiering_totals(), (48, 8, 32));
+        assert_eq!(m.peak_occupancy(), 0.0);
     }
 }

@@ -8,6 +8,12 @@
 //!   and retirement, per-batch re-solving of the paper's Eq. (11) split
 //!   point via [`Planner::plan_batch`](crate::scheduler::Planner::plan_batch),
 //!   and KV-budget backpressure through [`MemPool`](crate::memory::MemPool).
+//!   With [`TieredKvConfig`] set, the budget becomes the gpu tier of a
+//!   block-granular [`KvStore`](crate::kvstore::KvStore): admission runs
+//!   against the reclaimable host tiers (with recompute-aware
+//!   drop-KV-keep-X reclamation) instead of hard backpressure, an async
+//!   prefetcher promotes blocks ahead of each step, and a device-resident
+//!   KV suffix shrinks the per-step transfer term.
 //!   This is the serving mode that exercises KVPR under concurrent load.
 //! * [`Server`] — the simpler whole-batch mode: the [`Batcher`] groups
 //!   queued requests, the engine decodes the batch to completion, then the
@@ -27,7 +33,7 @@ mod router;
 mod server;
 
 pub use batcher::Batcher;
-pub use continuous::{ContinuousConfig, ContinuousServer};
+pub use continuous::{ContinuousConfig, ContinuousServer, TieredKvConfig};
 pub use metrics::ServeMetrics;
 pub use request::{Request, RequestState, Response};
 pub use router::Router;

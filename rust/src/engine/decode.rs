@@ -6,9 +6,9 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use super::stage::{stage_padded, Breakdown};
+use super::stage::{stage_padded, stage_padded2, Breakdown};
 use crate::kvcache::HostKvCache;
-use crate::memory::MemPool;
+use crate::memory::{MemPool, PoolGuard};
 use crate::model::{ModelWeights, RefModel};
 use crate::profiler::SystemProfile;
 use crate::runtime::{ArgValue, Runtime};
@@ -131,6 +131,62 @@ pub struct DecodeSession {
     planner: Option<Planner>,
     metrics: GenMetrics,
     store_handles: Vec<TransferHandle>,
+    /// Device-resident KV suffix (tiered kvstore gpu tier); off by default.
+    resident: Option<GpuResident>,
+}
+
+/// Device-resident KV suffix of a session — the engine-side landing of the
+/// kvstore's gpu-hbm tier.  The newest `len` tokens of every layer's K/V
+/// stay on the emulated device between steps (rows `[kv_len − len, kv_len)`,
+/// seq-major), so each step's H2D submission covers only
+/// `[l, kv_len − len)`.  The window grows one token per step for free (the
+/// appended K/V is computed on the GPU), slides under gpu-pool pressure,
+/// and is aligned to the store's placement by
+/// [`Engine::set_resident_target`].  Capacity is charged to the engine's
+/// gpu pool one `block_tokens` block at a time.
+struct GpuResident {
+    /// Resident tokens (suffix of every layer).
+    len: usize,
+    /// Token granularity of pool charges.
+    block_tokens: usize,
+    /// Per-layer seq-major K rows, `len * batch * hidden` elements each.
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    /// One gpu-pool charge per resident block (all layers, K+V).
+    guards: Vec<PoolGuard>,
+}
+
+impl GpuResident {
+    /// Bytes one residency block charges: K+V rows across every layer.
+    fn block_bytes(n_layers: usize, block_tokens: usize, row: usize) -> u64 {
+        (n_layers * 2 * block_tokens * row * 4) as u64
+    }
+
+    /// Drop the oldest `tokens` resident rows (the suffix start moves up)
+    /// and release the charges they no longer need.  No writeback: the
+    /// host cache always holds the canonical copy.
+    fn drop_head(&mut self, tokens: usize, row: usize) {
+        let t = tokens.min(self.len);
+        for k in self.k.iter_mut() {
+            k.drain(..t * row);
+        }
+        for v in self.v.iter_mut() {
+            v.drain(..t * row);
+        }
+        self.len -= t;
+        self.guards.truncate(self.len.div_ceil(self.block_tokens));
+    }
+
+    fn clear(&mut self) {
+        self.len = 0;
+        for k in self.k.iter_mut() {
+            k.clear();
+        }
+        for v in self.v.iter_mut() {
+            v.clear();
+        }
+        self.guards.clear();
+    }
 }
 
 impl DecodeSession {
@@ -167,6 +223,11 @@ impl DecodeSession {
     /// Host bytes this session's cache reserves (full capacity).
     pub fn kv_capacity_bytes(&self) -> u64 {
         self.cache.capacity_bytes()
+    }
+
+    /// Tokens of the device-resident KV suffix (0 when residency is off).
+    pub fn resident_tokens(&self) -> usize {
+        self.resident.as_ref().map_or(0, |g| g.len)
     }
 
     /// Timing and split-point accounting accumulated so far.
@@ -337,10 +398,19 @@ impl Engine {
     // ---------------------------------------------------------------------
 
     /// Issue all of layer `i`'s transfers for this step (Algorithm 1's
-    /// load_* calls).  `l` is the planned split (0 = full path).
-    fn issue_layer(&self, cache: &HostKvCache, layer: usize, l: usize) -> LayerTransfers {
+    /// load_* calls).  `l` is the planned split (0 = full path);
+    /// `resident` is the device-resident suffix length — those rows never
+    /// cross the link, so only `KV[l, kv_len − resident)` is submitted.
+    /// The caller guarantees `l + resident ≤ kv_len`.
+    fn issue_layer(
+        &self,
+        cache: &HostKvCache,
+        layer: usize,
+        l: usize,
+        resident: usize,
+    ) -> LayerTransfers {
         let st = cache.layer(layer);
-        let kv_len = st.len();
+        let kv_len = st.len() - resident;
         let mut t = LayerTransfers { plan_l: l, act: None, k: None, v: None, w_kv: None, w_rest: None };
 
         if self.cfg.weights_offloaded {
@@ -371,7 +441,10 @@ impl Engine {
     // one decode step of one layer
     // ---------------------------------------------------------------------
 
-    /// Consume `t`, run the layer, return (y, k_new, v_new).
+    /// Consume `t`, run the layer, return (y, k_new, v_new).  `res_k` /
+    /// `res_v` are the device-resident suffix rows (empty when residency
+    /// is off): they join the staged K/V after the transferred remainder,
+    /// reproducing the exact layout a full transfer would have staged.
     #[allow(clippy::too_many_arguments)]
     fn run_layer(
         &self,
@@ -380,6 +453,8 @@ impl Engine {
         x: &[f32],
         kv_len: usize,
         t: LayerTransfers,
+        res_k: &[f32],
+        res_v: &[f32],
         bd: &mut Breakdown,
     ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
         let m = self.runtime.manifest();
@@ -411,8 +486,8 @@ impl Engine {
             let t0 = Instant::now();
             let mut k_buf = self.staging.get(b * cap * h);
             let mut v_buf = self.staging.get(b * cap * h);
-            stage_padded(&k_rows, kv_len, b, h, cap, &mut k_buf);
-            stage_padded(&v_rows, kv_len, b, h, cap, &mut v_buf);
+            stage_padded2(&k_rows, res_k, b, h, cap, &mut k_buf);
+            stage_padded2(&v_rows, res_v, b, h, cap, &mut v_buf);
             bd.other_s += t0.elapsed().as_secs_f64();
 
             let art = self.runtime.artifact(&m.decode_full_name(b))?;
@@ -431,7 +506,6 @@ impl Engine {
             out
         } else {
             // ---- partial-recompute paths ----
-            let rest_rows = kv_len - l;
             let w = self.weights.layer(layer);
 
             let fused = matches!(self.cfg.policy, EnginePolicy::KvprFused);
@@ -460,8 +534,8 @@ impl Engine {
                 let mut k_buf = self.staging.get(b * (cap - l) * h);
                 let mut v_buf = self.staging.get(b * (cap - l) * h);
                 stage_padded(&act_rows, l, b, h, l, &mut x_buf);
-                stage_padded(&k_rows, rest_rows, b, h, cap - l, &mut k_buf);
-                stage_padded(&v_rows, rest_rows, b, h, cap - l, &mut v_buf);
+                stage_padded2(&k_rows, res_k, b, h, cap - l, &mut k_buf);
+                stage_padded2(&v_rows, res_v, b, h, cap - l, &mut v_buf);
                 bd.other_s += t0.elapsed().as_secs_f64();
 
                 let art = self.runtime.artifact(&m.decode_partial_name(b, l))?;
@@ -526,8 +600,8 @@ impl Engine {
                 let t0 = Instant::now();
                 let mut k_buf = self.staging.get(b * (cap - l) * h);
                 let mut v_buf = self.staging.get(b * (cap - l) * h);
-                stage_padded(&k_rows, rest_rows, b, h, cap - l, &mut k_buf);
-                stage_padded(&v_rows, rest_rows, b, h, cap - l, &mut v_buf);
+                stage_padded2(&k_rows, res_k, b, h, cap - l, &mut k_buf);
+                stage_padded2(&v_rows, res_v, b, h, cap - l, &mut v_buf);
                 bd.other_s += t0.elapsed().as_secs_f64();
 
                 let merge = self.runtime.artifact(&m.decode_merge_name(b, l))?;
@@ -569,6 +643,104 @@ impl Engine {
             model.hidden,
             m.seq_cap,
         ))
+    }
+
+    /// Headroom residency charges must always leave free in the gpu pool:
+    /// one layer's transient staged-KV allocation at the largest batch
+    /// bucket, doubled for the next-layer prefetch — `run_layer` fails
+    /// hard without it, so the resident window must never squeeze it out.
+    fn residency_headroom(&self) -> u64 {
+        let m = self.runtime.manifest();
+        let b = m.batch_buckets.iter().max().copied().unwrap_or(1);
+        (2 * 2 * m.seq_cap * b * m.model.hidden * 4) as u64
+    }
+
+    /// Charge one residency block, refusing when it would eat into the
+    /// staging headroom (a refused charge shrinks or stops the window —
+    /// always safe — while a squeezed-out staging alloc is a decode error).
+    fn try_charge_resident_block(&self, block_bytes: u64) -> Option<PoolGuard> {
+        if self.gpu_pool.available() < block_bytes + self.residency_headroom() {
+            return None;
+        }
+        self.gpu_pool.alloc(block_bytes).ok()
+    }
+
+    /// Turn on the device-resident KV suffix for a session (the engine
+    /// side of the kvstore's gpu tier).  Newly generated tokens then stay
+    /// on the emulated device — the window grows one token per step for
+    /// free and slides under gpu-pool pressure — and
+    /// [`Engine::set_resident_target`] aligns it with the store's
+    /// placement decisions.  All policies produce identical tokens with or
+    /// without residency: it moves bytes, never math.
+    pub fn enable_residency(&self, sess: &mut DecodeSession, block_tokens: usize) {
+        assert!(block_tokens > 0, "block_tokens must be positive");
+        if sess.resident.is_none() {
+            let n_layers = self.runtime.manifest().model.n_layers;
+            sess.resident = Some(GpuResident {
+                len: 0,
+                block_tokens,
+                k: vec![Vec::new(); n_layers],
+                v: vec![Vec::new(); n_layers],
+                guards: Vec::new(),
+            });
+        }
+    }
+
+    /// Align a session's device-resident KV suffix to `target_tokens` (the
+    /// kvstore's gpu-tier decision): promote by copying host rows up, or
+    /// demote by dropping the oldest resident rows (no writeback — the
+    /// host cache holds the canonical copy).  Promotion does not ride the
+    /// engine's H2D link: the store already paid for the migration on its
+    /// own link, this is the data landing.  Promotion stops early if the
+    /// gpu pool cannot charge the blocks.  Returns (promoted, demoted)
+    /// token counts; (0, 0) when residency is off.
+    pub fn set_resident_target(
+        &self,
+        sess: &mut DecodeSession,
+        target_tokens: usize,
+    ) -> (usize, usize) {
+        let m = self.runtime.manifest();
+        let kv_len = sess.cache.seq_len();
+        let row = sess.b * m.model.hidden;
+        let cache = &sess.cache;
+        let Some(g) = sess.resident.as_mut() else { return (0, 0) };
+        let target = target_tokens.min(kv_len);
+        if target < g.len {
+            let demoted = g.len - target;
+            g.drop_head(demoted, row);
+            return (0, demoted);
+        }
+        // promote: charge the extra blocks, then extend the suffix downward
+        let bb = GpuResident::block_bytes(m.model.n_layers, g.block_tokens, row);
+        let mut new_len = target;
+        while g.guards.len() * g.block_tokens < new_len {
+            match self.try_charge_resident_block(bb) {
+                Some(guard) => g.guards.push(guard),
+                None => {
+                    new_len = (g.guards.len() * g.block_tokens).max(g.len).min(new_len);
+                    break;
+                }
+            }
+        }
+        let add = new_len - g.len;
+        if add == 0 {
+            return (0, 0);
+        }
+        let start = kv_len - new_len;
+        for layer in 0..m.model.n_layers {
+            let st = cache.layer(layer);
+            let range = st.rows(start, start + add);
+            let mut nk: Vec<f32> = Vec::with_capacity(new_len * row);
+            nk.extend_from_slice(&st.k_arc()[range.clone()]);
+            nk.extend_from_slice(&g.k[layer]);
+            g.k[layer] = nk;
+            let mut nv: Vec<f32> = Vec::with_capacity(new_len * row);
+            nv.extend_from_slice(&st.v_arc()[range]);
+            nv.extend_from_slice(&g.v[layer]);
+            g.v[layer] = nv;
+        }
+        g.len = new_len;
+        (add, 0)
     }
 
     /// Prefill `ids` (row-major `[n_seqs][prompt]`, padded per request) and
@@ -626,6 +798,7 @@ impl Engine {
             planner,
             metrics,
             store_handles: Vec::new(),
+            resident: None,
         })
     }
 
@@ -667,6 +840,35 @@ impl Engine {
         };
         sess.metrics.splits.push(plan_l);
 
+        // -- tiered-residency bookkeeping ---------------------------------
+        // the token appended this step stays on device (its K/V is computed
+        // there): charge the crossing into a new residency block up front,
+        // sliding the window when the gpu pool is contended so the resident
+        // region stays a suffix
+        let row = b * model.hidden;
+        if let Some(g) = sess.resident.as_mut() {
+            if g.guards.len() * g.block_tokens < g.len + 1 {
+                let bb = GpuResident::block_bytes(model.n_layers, g.block_tokens, row);
+                match self.try_charge_resident_block(bb) {
+                    Some(guard) => g.guards.push(guard),
+                    None if g.len >= g.block_tokens => {
+                        g.drop_head(g.block_tokens, row);
+                        match self.try_charge_resident_block(bb) {
+                            Some(guard) => g.guards.push(guard),
+                            None => g.clear(),
+                        }
+                    }
+                    None => {} // empty window and no room: stay empty
+                }
+            }
+        }
+        let grow_resident = sess
+            .resident
+            .as_ref()
+            .is_some_and(|g| g.guards.len() * g.block_tokens >= g.len + 1);
+        // the resident suffix yields to the recompute prefix when they meet
+        let r_used = sess.resident_tokens().min(kv_len - plan_l);
+
         let t_step = Instant::now();
         let embed = self.runtime.artifact(&m.embed_decode_name(b))?;
         let head = self.runtime.artifact(&m.lm_head_name(b))?;
@@ -686,7 +888,7 @@ impl Engine {
 
         let mut pending: Option<LayerTransfers> = None;
         if !alisa {
-            pending = Some(self.issue_layer(&sess.cache, 0, plan_l));
+            pending = Some(self.issue_layer(&sess.cache, 0, plan_l, r_used));
         }
         for layer in 0..model.n_layers {
             let t = if alisa {
@@ -696,27 +898,54 @@ impl Engine {
                 // is modelled faithfully in the simulator (sim::policies)
                 // while the engine covers the no-intra-overlap ablation
                 // via KvprFused.
-                self.issue_layer(&sess.cache, layer, plan_l)
+                self.issue_layer(&sess.cache, layer, plan_l, r_used)
             } else {
                 // prefetching policies filled this one layer ahead; the
                 // synchronous baseline issues at the top of the layer
                 pending
                     .take()
-                    .unwrap_or_else(|| self.issue_layer(&sess.cache, layer, plan_l))
+                    .unwrap_or_else(|| self.issue_layer(&sess.cache, layer, plan_l, r_used))
             };
             // prefetch next layer (Algorithm 1: load(i+1) before compute(i))
             if !alisa && self.cfg.policy.prefetches() && layer + 1 < model.n_layers {
-                pending = Some(self.issue_layer(&sess.cache, layer + 1, plan_l));
+                pending = Some(self.issue_layer(&sess.cache, layer + 1, plan_l, r_used));
             }
 
-            let (y, k_new, v_new) =
-                self.run_layer(layer, b, &x, kv_len, t, &mut sess.metrics.breakdown)?;
+            // the resident suffix rows join staging without link traffic
+            let (res_k, res_v): (&[f32], &[f32]) = match sess.resident.as_ref() {
+                Some(g) if r_used > 0 => {
+                    let skip = (g.len - r_used) * row;
+                    (&g.k[layer][skip..], &g.v[layer][skip..])
+                }
+                _ => (&[], &[]),
+            };
+            let (y, k_new, v_new) = self.run_layer(
+                layer,
+                b,
+                &x,
+                kv_len,
+                t,
+                res_k,
+                res_v,
+                &mut sess.metrics.breakdown,
+            )?;
 
             // store streams (Algorithm 1 store_*): host append + D2H timing
             sess.store_handles
                 .push(self.d2h.submit_timing(3 * b * model.hidden, Priority::Normal));
+            if grow_resident {
+                if let Some(g) = sess.resident.as_mut() {
+                    g.k[layer].extend_from_slice(&k_new);
+                    g.v[layer].extend_from_slice(&v_new);
+                }
+            }
             sess.cache.layer_mut(layer).append(&k_new, &v_new, &x)?;
             x = y;
+        }
+        if grow_resident {
+            if let Some(g) = sess.resident.as_mut() {
+                g.len += 1;
+            }
         }
 
         let t0 = Instant::now();
@@ -735,7 +964,7 @@ impl Engine {
 
         // opportunistically retire landed store timings so a long-running
         // session's handle list stays bounded
-        while sess.store_handles.first().map_or(false, |h| h.is_done()) {
+        while sess.store_handles.first().is_some_and(|h| h.is_done()) {
             sess.store_handles.remove(0).wait();
         }
         Ok(sess.last.clone())
@@ -899,11 +1128,11 @@ impl Engine {
                     all_metrics[0].breakdown.wait_weights_s += t0.elapsed().as_secs_f64();
                 }
                 // pipeline batches through this layer
-                let mut pending = Some(self.issue_layer(&caches[0], layer, plan_l));
+                let mut pending = Some(self.issue_layer(&caches[0], layer, plan_l, 0));
                 for g in 0..n_batches {
                     let t = pending.take().unwrap();
                     if self.cfg.policy.prefetches() && g + 1 < n_batches {
-                        pending = Some(self.issue_layer(&caches[g + 1], layer, plan_l));
+                        pending = Some(self.issue_layer(&caches[g + 1], layer, plan_l, 0));
                     }
                     let (y, k_new, v_new) = self.run_layer(
                         layer,
@@ -911,6 +1140,8 @@ impl Engine {
                         &xs[g],
                         kv_len,
                         t,
+                        &[],
+                        &[],
                         &mut all_metrics[g].breakdown,
                     )?;
                     self.d2h
@@ -918,7 +1149,7 @@ impl Engine {
                     caches[g].layer_mut(layer).append(&k_new, &v_new, &xs[g])?;
                     xs[g] = y;
                     if pending.is_none() && g + 1 < n_batches {
-                        pending = Some(self.issue_layer(&caches[g + 1], layer, plan_l));
+                        pending = Some(self.issue_layer(&caches[g + 1], layer, plan_l, 0));
                     }
                 }
             }

@@ -2,7 +2,8 @@
 //! artifact inputs, plus the per-component time breakdown (Fig 10).
 
 /// Scatter `n_rows` seq-major rows (layout `[seq][batch*hidden]`) into a
-/// zero-padded `[batch, rows_per_batch, hidden]` buffer.
+/// zero-padded `[batch, rows_per_batch, hidden]` buffer.  The single-
+/// segment special case of [`stage_padded2`].
 pub fn stage_padded(
     rows_data: &[f32],
     n_rows: usize,
@@ -11,15 +12,36 @@ pub fn stage_padded(
     rows_per_batch: usize,
     out: &mut Vec<f32>,
 ) {
-    assert!(n_rows <= rows_per_batch, "{n_rows} > {rows_per_batch}");
     assert_eq!(rows_data.len(), n_rows * batch * hidden);
+    stage_padded2(rows_data, &[], batch, hidden, rows_per_batch, out);
+}
+
+/// [`stage_padded`] over two contiguous seq-major row segments — the
+/// link-transferred remainder followed by the device-resident suffix the
+/// tiered kvstore kept on the GPU — without concatenating them first.
+/// Either segment may be empty; both must be whole rows.
+pub fn stage_padded2(
+    seg_a: &[f32],
+    seg_b: &[f32],
+    batch: usize,
+    hidden: usize,
+    rows_per_batch: usize,
+    out: &mut Vec<f32>,
+) {
+    let row = batch * hidden;
+    assert_eq!(seg_a.len() % row, 0, "segment A is not whole rows");
+    assert_eq!(seg_b.len() % row, 0, "segment B is not whole rows");
+    let rows_a = seg_a.len() / row;
+    let n_rows = rows_a + seg_b.len() / row;
+    assert!(n_rows <= rows_per_batch, "{n_rows} > {rows_per_batch}");
     out.clear();
     out.resize(batch * rows_per_batch * hidden, 0.0);
     for b in 0..batch {
         for s in 0..n_rows {
-            let src = s * batch * hidden + b * hidden;
+            let (buf, r) = if s < rows_a { (seg_a, s) } else { (seg_b, s - rows_a) };
+            let src = r * row + b * hidden;
             let dst = (b * rows_per_batch + s) * hidden;
-            out[dst..dst + hidden].copy_from_slice(&rows_data[src..src + hidden]);
+            out[dst..dst + hidden].copy_from_slice(&buf[src..src + hidden]);
         }
     }
 }
@@ -109,6 +131,31 @@ mod tests {
         stage_padded(&rows, 2, 2, 2, 4, &mut out);
         assert_eq!(out.len(), 16);
         assert_eq!(out.capacity(), cap, "no reallocation");
+    }
+
+    #[test]
+    fn stage2_matches_concatenated_single_stage() {
+        // 3 rows split 2+1 must stage exactly like the 3 rows in one piece
+        let rows: Vec<f32> = (0..12).map(|i| i as f32).collect(); // 3 rows, b=2, h=2
+        let mut want = Vec::new();
+        stage_padded(&rows, 3, 2, 2, 4, &mut want);
+        let mut got = Vec::new();
+        stage_padded2(&rows[0..8], &rows[8..12], 2, 2, 4, &mut got);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn stage2_empty_segments() {
+        let rows: Vec<f32> = (0..8).map(|i| i as f32).collect(); // 2 rows, b=2, h=2
+        let mut want = Vec::new();
+        stage_padded(&rows, 2, 2, 2, 3, &mut want);
+        let mut got = Vec::new();
+        stage_padded2(&rows, &[], 2, 2, 3, &mut got);
+        assert_eq!(got, want, "empty resident suffix");
+        stage_padded2(&[], &rows, 2, 2, 3, &mut got);
+        assert_eq!(got, want, "everything resident");
+        stage_padded2(&[], &[], 2, 2, 3, &mut got);
+        assert_eq!(got, vec![0.0; 12], "all padding");
     }
 
     #[test]

@@ -16,6 +16,13 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
+/// Element width of the f32 host store.
+pub const ELEM_BYTES_F32: f64 = 4.0;
+
+/// Wire bytes per element under group-wise 4-bit quantization at the
+/// default group size 64: 8-byte header per group + ½ byte payload.
+pub const ELEM_BYTES_INT4_G64: f64 = 0.625;
+
 /// K/V/X store for one layer of one running batch.
 #[derive(Debug, Clone)]
 pub struct LayerState {
@@ -46,9 +53,34 @@ impl LayerState {
         self.cap
     }
 
-    /// Bytes a full-KV transfer would move (2 segments × len rows).
-    pub fn kv_bytes(&self) -> u64 {
-        (2 * self.len * self.row() * 4) as u64
+    /// Bytes a full-KV transfer would move (2 segments × len rows) at
+    /// `elem_bytes` per element.  The host store is f32
+    /// ([`ELEM_BYTES_F32`]), but the *wire* width differs under
+    /// [`quant`](crate::kvcache::quant) compression (0.625 B/elem at group
+    /// size 64), so byte accounting takes the width instead of hardcoding
+    /// it.
+    pub fn kv_bytes(&self, elem_bytes: f64) -> u64 {
+        (2.0 * (self.len * self.row()) as f64 * elem_bytes).ceil() as u64
+    }
+
+    /// Number of `block_tokens`-sized blocks the valid rows span — the
+    /// granularity the tiered [`kvstore`](crate::kvstore) places and
+    /// migrates.
+    pub fn n_blocks(&self, block_tokens: usize) -> usize {
+        assert!(block_tokens > 0, "block_tokens must be positive");
+        self.len.div_ceil(block_tokens)
+    }
+
+    /// Element range (into the k/v/x arcs) covering block `i`: rows
+    /// `[i·block_tokens, (i+1)·block_tokens)` clamped to the valid length.
+    /// Together with [`LayerState::rows`] this makes the layer a view over
+    /// blocks: the kvstore migrates block ranges, the engine transfers
+    /// split ranges, both over the same seq-major rows.
+    pub fn block_rows(&self, i: usize, block_tokens: usize) -> std::ops::Range<usize> {
+        assert!(block_tokens > 0, "block_tokens must be positive");
+        let lo = (i * block_tokens).min(self.len);
+        let hi = ((i + 1) * block_tokens).min(self.len);
+        self.rows(lo, hi)
     }
 
     /// Shared handles for zero-copy link submission.
@@ -220,7 +252,37 @@ mod tests {
         assert_eq!(r, 0..16);
         assert_eq!(l.k_arc()[0], 1.0);
         assert_eq!(l.k_arc()[8], 100.0); // second row
-        assert_eq!(l.kv_bytes(), 2 * 2 * 8 * 4);
+        assert_eq!(l.kv_bytes(ELEM_BYTES_F32), 2 * 2 * 8 * 4);
+    }
+
+    #[test]
+    fn kv_bytes_tracks_element_width() {
+        let mut c = HostKvCache::new(1, 2, 4, 8);
+        poke(&mut c, 0, 0.0);
+        poke(&mut c, 0, 0.0);
+        let l = c.layer(0);
+        assert_eq!(l.kv_bytes(ELEM_BYTES_F32), 2 * 2 * 8 * 4);
+        // int4 wire width: 0.625 B/elem → 2 segments × 2 rows × 8 elems
+        assert_eq!(l.kv_bytes(ELEM_BYTES_INT4_G64), (2.0 * 16.0 * 0.625_f64).ceil() as u64);
+        // fp16 host stores would halve the f32 number
+        assert_eq!(l.kv_bytes(2.0), 2 * 2 * 8 * 2);
+    }
+
+    #[test]
+    fn block_views_tile_the_valid_rows() {
+        let mut c = HostKvCache::new(1, 1, 4, 16);
+        for i in 0..10 {
+            poke(&mut c, 0, i as f32);
+        }
+        let l = c.layer(0);
+        assert_eq!(l.n_blocks(4), 3, "10 rows → 2 full + 1 partial block");
+        assert_eq!(l.block_rows(0, 4), l.rows(0, 4));
+        assert_eq!(l.block_rows(1, 4), l.rows(4, 8));
+        assert_eq!(l.block_rows(2, 4), l.rows(8, 10), "last block clamps to len");
+        assert_eq!(l.block_rows(3, 4).len(), 0, "past the end is empty");
+        // blocks partition exactly
+        let total: usize = (0..l.n_blocks(4)).map(|i| l.block_rows(i, 4).len()).sum();
+        assert_eq!(total, 10 * 4);
     }
 
     #[test]

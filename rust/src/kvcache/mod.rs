@@ -2,10 +2,15 @@
 //!
 //! In the offloaded regime the KV cache (and, for KVPR, the per-layer input
 //! activations it is recomputed from) live in CPU DRAM; the engine requests
-//! split views of them for transfer.  Group-wise 4-bit quantization (paper
-//! §4.4) compresses the transferred remainder on the wire.
+//! split views of them for transfer, and the tiered
+//! [`kvstore`](crate::kvstore) requests *block* views
+//! ([`LayerState::block_rows`]) for placement and migration — both are
+//! ranges over the same seq-major rows.  Group-wise 4-bit quantization
+//! (paper §4.4) compresses the transferred remainder on the wire; byte
+//! accounting takes the element width explicitly
+//! ([`LayerState::kv_bytes`]) so it stays correct across widths.
 
 mod cache;
 pub mod quant;
 
-pub use cache::{HostKvCache, LayerState};
+pub use cache::{HostKvCache, LayerState, ELEM_BYTES_F32, ELEM_BYTES_INT4_G64};

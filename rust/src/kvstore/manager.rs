@@ -1,0 +1,198 @@
+//! Tier migration: moving a block's bytes between pools over the link.
+//!
+//! Migrations are modelled the way the engine models every other copy: the
+//! bytes ride a [`Link`] (so they take wall-clock time and show up in link
+//! stats) and the host side stages through the [`PinnedPool`] — whose
+//! buffers are charged against the *pinned tier's own* [`MemPool`], so
+//! staging occupancy and pinned-resident blocks compete for the same
+//! capacity, exactly as on a real machine.
+//!
+//! Promotions (towards the GPU) are **asynchronous**: [`TierManager::begin_migration`]
+//! grabs the destination reservation and puts the transfer in flight;
+//! the caller completes it later with [`TierManager::finish_migration`]
+//! once [`PendingMigration::is_done`].  Demotions run synchronously on the
+//! caller via [`TierManager::migrate_sync`] — bounded by one block's link
+//! time; making them asynchronous too is a ROADMAP follow-on (it becomes
+//! necessary once a disk tier adds real writeback).
+
+use crate::memory::{MemPool, PoolGuard};
+use crate::transfer::{Link, LinkConfig, PinnedPool, Priority, TransferHandle};
+
+use super::block::{BlockPool, Tier};
+
+/// An in-flight block migration: destination reservation already held,
+/// bytes still on the link, staging buffer pinned until completion.
+pub struct PendingMigration {
+    to: Tier,
+    handle: TransferHandle,
+    guard: PoolGuard,
+    staging: Vec<f32>,
+}
+
+impl PendingMigration {
+    /// Destination tier of this migration.
+    pub fn to(&self) -> Tier {
+        self.to
+    }
+
+    /// Non-blocking: has the transfer landed?
+    pub fn is_done(&self) -> bool {
+        self.handle.is_done()
+    }
+}
+
+/// Aggregate migration counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TierStats {
+    pub migrations: u64,
+    pub migrated_bytes: u64,
+}
+
+/// Owns the three tier pools and the migration link.
+pub struct TierManager {
+    gpu: BlockPool,
+    pinned: BlockPool,
+    dram: BlockPool,
+    link: Link,
+    staging: PinnedPool,
+    stats: TierStats,
+}
+
+impl TierManager {
+    pub fn new(gpu_bytes: u64, pinned_bytes: u64, dram_bytes: u64, link: LinkConfig) -> Self {
+        // the pinned tier's byte pool is shared with the staging freelist so
+        // pinned blocks and pinned staging buffers draw from one budget
+        let pinned_mem = MemPool::new(Tier::Pinned.name(), pinned_bytes);
+        TierManager {
+            gpu: BlockPool::new(Tier::GpuHbm, gpu_bytes),
+            pinned: BlockPool::from_pool(Tier::Pinned, pinned_mem.clone()),
+            dram: BlockPool::new(Tier::CpuDram, dram_bytes),
+            link: Link::new(link),
+            staging: PinnedPool::with_accounting(pinned_mem),
+            stats: TierStats::default(),
+        }
+    }
+
+    pub fn pool(&self, tier: Tier) -> &BlockPool {
+        match tier {
+            Tier::GpuHbm => &self.gpu,
+            Tier::Pinned => &self.pinned,
+            Tier::CpuDram => &self.dram,
+        }
+    }
+
+    pub fn stats(&self) -> TierStats {
+        self.stats
+    }
+
+    pub fn link(&self) -> &Link {
+        &self.link
+    }
+
+    pub fn staging(&self) -> &PinnedPool {
+        &self.staging
+    }
+
+    /// Reserve `bytes` in `tier`; `None` when the tier is full.
+    pub fn grab(&self, tier: Tier, bytes: u64) -> Option<PoolGuard> {
+        self.pool(tier).grab(bytes)
+    }
+
+    /// Start moving a block of `bytes` into `to`: reserve the destination,
+    /// pin a staging buffer, put the bytes on the link.  `None` when the
+    /// destination tier is full (the caller evicts and retries).  The
+    /// source reservation stays with the caller until it swaps guards in
+    /// [`Self::finish_migration`]'s result.
+    pub fn begin_migration(
+        &mut self,
+        to: Tier,
+        bytes: u64,
+        priority: Priority,
+    ) -> Option<PendingMigration> {
+        let guard = self.pool(to).grab(bytes)?;
+        let n = (bytes / 4) as usize;
+        let staging = self.staging.get(n);
+        let handle = self.link.submit_timing(n, priority);
+        self.stats.migrations += 1;
+        self.stats.migrated_bytes += bytes;
+        Some(PendingMigration { to, handle, guard, staging })
+    }
+
+    /// Complete a migration (blocking if the transfer is still in flight);
+    /// returns the destination reservation for the caller to install.
+    pub fn finish_migration(&mut self, pm: PendingMigration) -> (Tier, PoolGuard) {
+        let PendingMigration { to, handle, guard, staging } = pm;
+        handle.wait();
+        self.staging.put(staging);
+        (to, guard)
+    }
+
+    /// Synchronous host-side move timing for `bytes` (demotion path):
+    /// stage through the pinned pool and wait the link out.  Guard shuffling
+    /// is the caller's job (it owns both tiers' reservations).
+    pub fn migrate_sync(&mut self, bytes: u64) {
+        let n = (bytes / 4) as usize;
+        let staging = self.staging.get(n);
+        let handle = self.link.submit_timing(n, Priority::Normal);
+        handle.wait();
+        self.staging.put(staging);
+        self.stats.migrations += 1;
+        self.stats.migrated_bytes += bytes;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mgr() -> TierManager {
+        TierManager::new(1 << 20, 1 << 20, 4 << 20, LinkConfig::unthrottled())
+    }
+
+    #[test]
+    fn async_migration_moves_reservation() {
+        let mut m = mgr();
+        let src = m.grab(Tier::CpuDram, 4096).unwrap();
+        let pm = m
+            .begin_migration(Tier::GpuHbm, 4096, Priority::High)
+            .expect("gpu tier has room");
+        assert_eq!(m.pool(Tier::GpuHbm).used(), 4096, "destination reserved up front");
+        let (to, guard) = m.finish_migration(pm);
+        assert_eq!(to, Tier::GpuHbm);
+        drop(src); // caller swaps: source reservation released...
+        assert_eq!(m.pool(Tier::CpuDram).used(), 0);
+        assert_eq!(guard.bytes(), 4096); // ...destination held by the new guard
+        assert_eq!(m.stats().migrations, 1);
+        assert_eq!(m.stats().migrated_bytes, 4096);
+    }
+
+    #[test]
+    fn begin_migration_fails_when_destination_full() {
+        let mut m = TierManager::new(4096, 1 << 20, 1 << 20, LinkConfig::unthrottled());
+        let _held = m.grab(Tier::GpuHbm, 4096).unwrap();
+        assert!(m.begin_migration(Tier::GpuHbm, 4096, Priority::High).is_none());
+    }
+
+    #[test]
+    fn staging_charges_the_pinned_tier() {
+        let mut m = mgr();
+        // a migration's staging buffer is pinned-accounted: after the first
+        // migration the pinned pool has grown by the staged bytes even
+        // though no *block* lives there
+        m.migrate_sync(8192);
+        assert!(
+            m.pool(Tier::Pinned).used() >= 8192,
+            "staging not pinned-accounted: {}",
+            m.pool(Tier::Pinned).used()
+        );
+        assert_eq!(m.pool(Tier::Pinned).mem().name(), "pinned");
+    }
+
+    #[test]
+    fn migration_rides_the_link() {
+        let mut m = mgr();
+        m.migrate_sync(4096);
+        assert_eq!(m.link().stats().total_bytes(), 4096);
+        assert_eq!(m.link().stats().total_transfers(), 1);
+    }
+}

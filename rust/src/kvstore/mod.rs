@@ -1,0 +1,51 @@
+//! Tiered, block-granular KV store with recompute-aware eviction and
+//! asynchronous prefetch.
+//!
+//! PR 1's serving loop budgeted KV as one flat per-batch reservation: a
+//! session either fit the host budget or queued.  This subsystem turns
+//! that single counter into a managed, three-tier store — the production
+//! layout the KV-cache management literature describes — and generalises
+//! KVPR's Eq. (11) from "how to fetch the cache this step" into "what to
+//! keep resident at all":
+//!
+//! * [`BlockPool`] / [`Tier`] — fixed-size token blocks, one byte-accounted
+//!   reservation each, across gpu-hbm / pinned / cpu-dram pools
+//!   ([`crate::memory::MemPool`] underneath).
+//! * [`TierManager`] — migrates blocks between tiers over a
+//!   [`Link`](crate::transfer::Link), staging through the pinned-accounted
+//!   [`PinnedPool`](crate::transfer::PinnedPool).
+//! * [`KvStore`] — placement, residency and reclamation: resident gpu
+//!   blocks form a *suffix* of each sequence's tokens (the newest KV), so
+//!   they shrink the per-step H2D transfer term the planner sees
+//!   ([`Planner::plan_batch_tiered`](crate::scheduler::Planner::plan_batch_tiered));
+//!   admission that would backpressure may instead drop prefix KV and keep
+//!   the X activations, trading stored bytes for recompute work.
+//! * [`Prefetcher`] — bounded-depth asynchronous promotion of a group's
+//!   blocks ahead of its decode step.
+//! * [`EvictPolicy`] — pluggable victim selection: [`Lru`] recency vs the
+//!   [`RecomputeAware`] refill-cost score driven by the profiler's
+//!   [`CostModel`](crate::scheduler::CostModel).
+//! * [`sim`] — deterministic analytic comparison of eviction strategies on
+//!   skewed reuse workloads (`simulate_eviction`), feeding
+//!   `BENCH_kvstore.json`.
+//!
+//! The serving integration lives in
+//! [`ContinuousServer`](crate::coordinator::ContinuousServer): admission
+//! goes through [`KvStore::admit`] instead of hard backpressure, the
+//! prefetcher runs every event-loop step, and the engine mirrors the gpu
+//! tier as a device-resident KV suffix
+//! ([`Engine::set_resident_target`](crate::engine::Engine::set_resident_target)).
+
+pub mod block;
+pub mod manager;
+pub mod policy;
+pub mod prefetch;
+pub mod sim;
+pub mod store;
+
+pub use block::{BlockId, BlockPool, Tier};
+pub use manager::{PendingMigration, TierManager, TierStats};
+pub use policy::{BlockView, EvictKind, EvictPolicy, Lru, RecomputeAware};
+pub use prefetch::{PrefetchStats, Prefetcher};
+pub use sim::{simulate_eviction, EvictionSimConfig, EvictionSimReport, SimSeq};
+pub use store::{KvStore, KvStoreConfig, StoreStats};

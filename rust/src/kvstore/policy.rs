@@ -1,0 +1,191 @@
+//! Pluggable eviction policies for the tiered KV store.
+//!
+//! The store hands a policy a slate of candidate [`BlockView`]s and asks
+//! which one to give up.  [`Lru`] is the classical recency baseline; the
+//! [`RecomputeAware`] policy is the KVPR-specific one: it scores each block
+//! by the time it would take to *bring the block's contribution back* and
+//! evicts the cheapest.  A block whose tokens fall inside the planner's
+//! split region `[0, l*)` is rebuilt from its retained X activations at the
+//! recompute rate A (Eq. 8/9) — dropping its KV and keeping X — while a
+//! block beyond `l*` would have to be re-transferred at the link rate C
+//! (Eq. 6).  This generalises the Eq. (11) split from "how to fetch the
+//! cache this step" into "what to keep resident at all".
+
+use super::block::BlockId;
+use crate::scheduler::CostModel;
+
+/// What the store knows about a candidate block when choosing a victim.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BlockView {
+    pub id: BlockId,
+    /// Tokens this block covers (may be short for the last block).
+    pub tokens: usize,
+    /// First token position the block covers within its sequence.
+    pub start_token: usize,
+    /// The owning sequence's current cached length s'.
+    pub seq_len: usize,
+    /// Store clock at which the owning sequence last decoded.
+    pub last_use: u64,
+    /// The split point l* the planner currently chooses for the owning
+    /// sequence: tokens below it are recomputed from X anyway.
+    pub split_l: usize,
+}
+
+/// An eviction policy: pick the index of the block to give up.
+pub trait EvictPolicy: Send {
+    fn name(&self) -> &'static str;
+
+    /// `candidates` is non-empty; return the index of the victim.
+    fn victim(&self, candidates: &[BlockView]) -> usize;
+}
+
+/// Least-recently-used: evict the block of the sequence that decoded
+/// longest ago (ties broken by id for determinism).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Lru;
+
+impl EvictPolicy for Lru {
+    fn name(&self) -> &'static str {
+        "lru"
+    }
+
+    fn victim(&self, candidates: &[BlockView]) -> usize {
+        candidates
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, b)| (b.last_use, b.id))
+            .map(|(i, _)| i)
+            .expect("victim() over empty candidate slate")
+    }
+}
+
+/// Recompute-aware eviction driven by the profiler's [`CostModel`].
+#[derive(Debug, Clone)]
+pub struct RecomputeAware {
+    pub cost: CostModel,
+}
+
+impl RecomputeAware {
+    pub fn new(cost: CostModel) -> Self {
+        RecomputeAware { cost }
+    }
+
+    /// Seconds to re-materialise this block's contribution if evicted:
+    /// tokens inside `[0, split_l)` cost the recompute path (ship X, run
+    /// the KV projections), tokens beyond it cost a KV re-transfer.
+    pub fn refill_cost(&self, b: &BlockView) -> f64 {
+        let rec = b.split_l.saturating_sub(b.start_token).min(b.tokens);
+        let xfer = b.tokens - rec;
+        rec as f64 * (self.cost.recompute_per_token_s + self.cost.transfer_act_per_token_s)
+            + xfer as f64 * self.cost.transfer_kv_per_token_s
+    }
+}
+
+impl EvictPolicy for RecomputeAware {
+    fn name(&self) -> &'static str {
+        "recompute-aware"
+    }
+
+    fn victim(&self, candidates: &[BlockView]) -> usize {
+        candidates
+            .iter()
+            .enumerate()
+            .min_by(|(_, x), (_, y)| {
+                self.refill_cost(x)
+                    .partial_cmp(&self.refill_cost(y))
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(x.last_use.cmp(&y.last_use))
+                    .then(x.id.cmp(&y.id))
+            })
+            .map(|(i, _)| i)
+            .expect("victim() over empty candidate slate")
+    }
+}
+
+/// Config-level policy selector: the coordinator carries this in its
+/// config and builds the boxed policy once the engine's *measured*
+/// [`CostModel`] is available at startup.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvictKind {
+    Lru,
+    RecomputeAware,
+}
+
+impl EvictKind {
+    pub fn build(&self, cost: CostModel) -> Box<dyn EvictPolicy> {
+        match self {
+            EvictKind::Lru => Box::new(Lru),
+            EvictKind::RecomputeAware => Box::new(RecomputeAware::new(cost)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(seq: u64, idx: usize, start: usize, last_use: u64, split_l: usize) -> BlockView {
+        BlockView {
+            id: BlockId { seq, idx },
+            tokens: 32,
+            start_token: start,
+            seq_len: 128,
+            last_use,
+            split_l,
+        }
+    }
+
+    fn cheap_recompute() -> CostModel {
+        CostModel {
+            recompute_per_token_s: 1e-7, // A ≪ C: recompute nearly free
+            transfer_kv_per_token_s: 1e-6,
+            transfer_act_per_token_s: 5e-7,
+            gpu_overhead_s: 0.0,
+            link_latency_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn lru_picks_stalest() {
+        let cands = [view(1, 0, 0, 30, 0), view(2, 0, 0, 10, 0), view(3, 0, 0, 20, 0)];
+        assert_eq!(Lru.victim(&cands), 1);
+    }
+
+    #[test]
+    fn lru_ties_break_by_id() {
+        let cands = [view(2, 1, 0, 5, 0), view(1, 0, 0, 5, 0)];
+        assert_eq!(Lru.victim(&cands), 1);
+    }
+
+    #[test]
+    fn recompute_aware_prefers_split_region_blocks() {
+        let p = RecomputeAware::new(cheap_recompute());
+        // block A sits fully inside the split region [0, 64): cheap rebuild;
+        // block B sits beyond it: a full KV re-transfer
+        let a = view(1, 0, 0, 50, 64);
+        let b = view(2, 2, 64, 1, 64); // even *older*, but expensive to refill
+        assert_eq!(p.victim(&[b, a]), 1, "must pick the recomputable block");
+        assert!(p.refill_cost(&a) < p.refill_cost(&b));
+    }
+
+    #[test]
+    fn recompute_aware_partial_overlap_scores_between() {
+        let p = RecomputeAware::new(cheap_recompute());
+        let inside = view(1, 0, 0, 0, 64);
+        let straddle = view(1, 1, 48, 0, 64); // 16 tokens in, 16 out
+        let outside = view(1, 2, 96, 0, 64);
+        let ci = p.refill_cost(&inside);
+        let cs = p.refill_cost(&straddle);
+        let co = p.refill_cost(&outside);
+        assert!(ci < cs && cs < co, "{ci} {cs} {co}");
+    }
+
+    #[test]
+    fn recompute_aware_ties_fall_back_to_recency() {
+        let p = RecomputeAware::new(cheap_recompute());
+        // identical positions → identical cost → stalest wins
+        let a = view(1, 0, 0, 9, 0);
+        let b = view(2, 0, 0, 3, 0);
+        assert_eq!(p.victim(&[a, b]), 1);
+    }
+}

@@ -1,0 +1,115 @@
+//! Asynchronous block prefetch: pull a group's blocks up-tier *ahead* of
+//! its decode step.
+//!
+//! The serving loop calls [`Prefetcher::poll`] once per event-loop step to
+//! land finished promotions, then [`Prefetcher::pump`] per decode group to
+//! keep promotions in flight.  The prefetcher bounds in-flight work so a
+//! burst of groups cannot swamp the migration link with transfers that
+//! will be stale by the time they land.
+
+use super::store::KvStore;
+
+/// Per-prefetcher counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PrefetchStats {
+    pub issued: u64,
+    pub landed: u64,
+    pub throttled: u64,
+}
+
+/// Bounded-depth asynchronous promoter over a [`KvStore`].
+#[derive(Debug)]
+pub struct Prefetcher {
+    max_inflight: usize,
+    stats: PrefetchStats,
+}
+
+impl Prefetcher {
+    pub fn new(max_inflight: usize) -> Self {
+        Prefetcher { max_inflight: max_inflight.max(1), stats: PrefetchStats::default() }
+    }
+
+    pub fn stats(&self) -> PrefetchStats {
+        self.stats
+    }
+
+    /// Land every finished promotion; returns how many.
+    pub fn poll(&mut self, store: &mut KvStore) -> usize {
+        let landed = store.complete_landed();
+        self.stats.landed += landed as u64;
+        landed
+    }
+
+    /// Keep up to `blocks` promotions moving for `seq`, respecting the
+    /// global in-flight bound.  Returns promotions issued now.
+    pub fn pump(&mut self, store: &mut KvStore, seq: u64, blocks: usize) -> usize {
+        let room = self.max_inflight.saturating_sub(store.pending_count());
+        if room == 0 {
+            self.stats.throttled += 1;
+            return 0;
+        }
+        let issued = store.begin_promotions(seq, blocks.min(room));
+        self.stats.issued += issued as u64;
+        issued
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvstore::policy::Lru;
+    use crate::kvstore::store::KvStoreConfig;
+    use crate::transfer::LinkConfig;
+
+    const BB: u64 = 2048;
+
+    fn slow_store(gpu_blocks: u64) -> KvStore {
+        KvStore::new(
+            KvStoreConfig {
+                gpu_bytes: gpu_blocks * BB,
+                pinned_bytes: 8 * BB,
+                dram_bytes: 8 * BB,
+                block_tokens: 16,
+                // slow enough that promotions stay in flight across polls
+                link: LinkConfig { bytes_per_sec: 50e3, latency_s: 0.0, chunk_bytes: 1 << 10 },
+            },
+            Box::new(Lru),
+        )
+    }
+
+    #[test]
+    fn pump_bounds_inflight_depth() {
+        let mut store = slow_store(8);
+        store.admit(1, 8 * BB, 8).unwrap();
+        store.touch(1, 128, 0); // all 8 blocks valid
+        let mut pf = Prefetcher::new(2);
+        assert_eq!(pf.pump(&mut store, 1, 8), 2, "depth-capped");
+        assert_eq!(store.pending_count(), 2);
+        assert_eq!(pf.pump(&mut store, 1, 8), 0, "no room until something lands");
+        assert_eq!(pf.stats().throttled, 1);
+    }
+
+    #[test]
+    fn poll_lands_and_frees_depth() {
+        let mut store = slow_store(4);
+        store.admit(1, 4 * BB, 4).unwrap();
+        store.touch(1, 64, 0);
+        let mut pf = Prefetcher::new(2);
+        pf.pump(&mut store, 1, 4);
+        // wait the slow link out, then land
+        let mut landed = 0;
+        for _ in 0..500 {
+            landed += pf.poll(&mut store);
+            if landed >= 2 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        assert_eq!(landed, 2);
+        assert_eq!(store.pending_count(), 0);
+        assert!(store.gpu_resident_tokens(1) > 0);
+        // freed depth lets the next pump issue again
+        assert!(pf.pump(&mut store, 1, 4) > 0);
+        assert_eq!(pf.stats().landed, 2);
+    }
+}

@@ -1,0 +1,663 @@
+//! The tiered, block-granular KV store.
+//!
+//! [`KvStore`] tracks, for every admitted sequence (decode group), where
+//! each of its fixed-size token blocks lives — gpu-hbm, pinned or cpu-dram
+//! — with one byte-accounted reservation per block.  On top of placement it
+//! implements the three policy levers of the subsystem:
+//!
+//! * **Promotion** ([`KvStore::begin_promotions`] /
+//!   [`KvStore::complete_landed`]): pull a sequence's blocks up into the
+//!   gpu tier ahead of its next decode step, asynchronously over the
+//!   migration link.  Resident blocks form a *suffix* of the valid tokens
+//!   (the newest KV), so every step's H2D transfer shrinks by the resident
+//!   length — the "already-on-GPU blocks shrink the transfer term" input to
+//!   [`Planner::plan_batch_tiered`](crate::scheduler::Planner::plan_batch_tiered).
+//! * **Eviction**: when the gpu tier is full, the configured
+//!   [`EvictPolicy`](super::EvictPolicy) picks a victim among the *lowest*
+//!   blocks of other sequences' resident runs (so residency stays a
+//!   suffix) and it is demoted one tier down.
+//! * **Recompute-aware reclamation** ([`KvStore::admit`] internally):
+//!   admission that would otherwise backpressure may instead *drop the KV
+//!   and keep the X activations* of prefix blocks — the Eq. (11) insight
+//!   turned into a capacity lever: those tokens are rebuilt by the
+//!   recompute path, so their stored KV was dead weight.  The dropped
+//!   prefix becomes a planner floor (`l ≥ dropped`), reported by
+//!   [`KvStore::kv_dropped_tokens`].
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::transfer::{LinkConfig, Priority};
+
+use super::block::{BlockId, Tier};
+use super::manager::{PendingMigration, TierManager, TierStats};
+use super::policy::{BlockView, EvictPolicy};
+
+/// Construction parameters for a [`KvStore`].
+#[derive(Debug, Clone)]
+pub struct KvStoreConfig {
+    /// gpu-hbm tier capacity — the KV-dedicated slice of device memory.
+    pub gpu_bytes: u64,
+    /// Pinned host tier capacity (also backs migration staging buffers).
+    pub pinned_bytes: u64,
+    /// Cold cpu-dram tier capacity.
+    pub dram_bytes: u64,
+    /// Tokens per block.  Match the smallest artifact L bucket so dropped-KV
+    /// floors land on a real recompute bucket.
+    pub block_tokens: usize,
+    /// Migration link shaping (PCIe-ish for promotions).
+    pub link: LinkConfig,
+}
+
+impl KvStoreConfig {
+    pub fn new(gpu_bytes: u64) -> Self {
+        KvStoreConfig {
+            gpu_bytes,
+            pinned_bytes: 64 << 20,
+            dram_bytes: 256 << 20,
+            block_tokens: 32,
+            link: LinkConfig::with_bandwidth(30e6),
+        }
+    }
+}
+
+/// One block's placement state.
+struct BlockState {
+    tier: Tier,
+    /// The tier reservation; `None` only transiently mid-swap.
+    guard: Option<crate::memory::PoolGuard>,
+    /// KV bytes dropped (X kept): the block costs ⅓ and must be covered by
+    /// the recompute path when its tokens are needed.
+    kv_dropped: bool,
+    /// In-flight promotion, if any.
+    pending: Option<PendingMigration>,
+}
+
+/// Per-sequence bookkeeping.
+struct SeqEntry {
+    blocks: Vec<BlockState>,
+    block_bytes: u64,
+    /// Valid cached tokens (the paper's s'); grows as decode proceeds.
+    tokens: usize,
+    /// Latest planner split l* for this sequence (eviction scoring input).
+    split_l: usize,
+    last_use: u64,
+}
+
+/// Aggregate store counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    pub admitted: u64,
+    pub promotions_started: u64,
+    pub promotions_landed: u64,
+    pub demotions: u64,
+    pub kv_drops: u64,
+    /// Landed promotions discarded because an eviction broke the resident
+    /// suffix over them while they were in flight.
+    pub promotions_wasted: u64,
+    /// Top blocks flipped to gpu without link traffic (their KV was
+    /// produced on-device by the decode step itself).
+    pub device_syncs: u64,
+}
+
+/// The tiered block-granular KV store.
+pub struct KvStore {
+    mgr: TierManager,
+    policy: Box<dyn EvictPolicy>,
+    seqs: BTreeMap<u64, SeqEntry>,
+    block_tokens: usize,
+    clock: u64,
+    stats: StoreStats,
+}
+
+impl KvStore {
+    pub fn new(cfg: KvStoreConfig, policy: Box<dyn EvictPolicy>) -> Self {
+        assert!(cfg.block_tokens > 0, "block_tokens must be positive");
+        KvStore {
+            mgr: TierManager::new(cfg.gpu_bytes, cfg.pinned_bytes, cfg.dram_bytes, cfg.link),
+            policy,
+            seqs: BTreeMap::new(),
+            block_tokens: cfg.block_tokens,
+            clock: 0,
+            stats: StoreStats::default(),
+        }
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        self.stats
+    }
+
+    pub fn tier_stats(&self) -> TierStats {
+        self.mgr.stats()
+    }
+
+    /// Bytes currently reserved in `tier`.
+    pub fn tier_used(&self, tier: Tier) -> u64 {
+        self.mgr.pool(tier).used()
+    }
+
+    fn valid_blocks_of(e: &SeqEntry, bt: usize) -> usize {
+        e.tokens.div_ceil(bt).min(e.blocks.len())
+    }
+
+    fn block_tokens_at(e: &SeqEntry, idx: usize, bt: usize) -> usize {
+        e.tokens.saturating_sub(idx * bt).min(bt)
+    }
+
+    /// Admit a sequence whose full-capacity cache is `total_bytes` split
+    /// into `n_blocks` blocks.  Blocks are placed cold-first in the *host*
+    /// tiers only (dram, then pinned) — the gpu tier is a cache layer
+    /// filled exclusively by promotion/sync, so its capacity can never be
+    /// parked under not-yet-valid admission blocks that eviction (which
+    /// only walks resident suffix runs) could not reclaim.  When the host
+    /// tiers are full the store reclaims by dropping droppable KV prefixes
+    /// before giving up.  On failure all partial reservations roll back
+    /// and the caller backpressures.
+    pub fn admit(&mut self, seq: u64, total_bytes: u64, n_blocks: usize) -> Result<()> {
+        if self.seqs.contains_key(&seq) {
+            bail!("sequence {seq} already admitted");
+        }
+        if n_blocks == 0 {
+            bail!("admit with zero blocks");
+        }
+        let block_bytes = total_bytes.div_ceil(n_blocks as u64);
+        // feasibility pre-check, side-effect free: a hopeless admission
+        // must not drain other sequences' droppable KV (the serving loop
+        // retries every step, so leaked drops would compound into planner
+        // floors for every running group)
+        let free = self.mgr.pool(Tier::CpuDram).available()
+            + self.mgr.pool(Tier::Pinned).available();
+        if free + self.reclaimable_bytes() < block_bytes * n_blocks as u64 {
+            bail!(
+                "kvstore cannot fit sequence {seq}: {} bytes needed, {} free + reclaimable",
+                block_bytes * n_blocks as u64,
+                free + self.reclaimable_bytes()
+            );
+        }
+        let mut blocks = Vec::with_capacity(n_blocks);
+        for _ in 0..n_blocks {
+            let placed = loop {
+                if let Some(g) = self.mgr.grab(Tier::CpuDram, block_bytes) {
+                    break Some((Tier::CpuDram, g));
+                }
+                if let Some(g) = self.mgr.grab(Tier::Pinned, block_bytes) {
+                    break Some((Tier::Pinned, g));
+                }
+                if self.reclaim_kv_one().is_none() {
+                    break None;
+                }
+            };
+            match placed {
+                Some((tier, guard)) => blocks.push(BlockState {
+                    tier,
+                    guard: Some(guard),
+                    kv_dropped: false,
+                    pending: None,
+                }),
+                None => {
+                    // `blocks` drops here, rolling the reservations back
+                    bail!(
+                        "kvstore exhausted admitting sequence {seq}: placed {} of {n_blocks} blocks",
+                        blocks.len()
+                    );
+                }
+            }
+        }
+        self.clock += 1;
+        self.seqs.insert(
+            seq,
+            SeqEntry { blocks, block_bytes, tokens: 0, split_l: 0, last_use: self.clock },
+        );
+        self.stats.admitted += 1;
+        Ok(())
+    }
+
+    /// Retire a sequence, releasing every reservation.  In-flight
+    /// promotions are *completed* (blocking briefly on the link) rather
+    /// than dropped, so their staging buffers return to the pinned pool
+    /// instead of stranding phantom pinned charges.
+    pub fn release(&mut self, seq: u64) {
+        if let Some(e) = self.seqs.remove(&seq) {
+            for b in e.blocks {
+                if let Some(pm) = b.pending {
+                    let _ = self.mgr.finish_migration(pm);
+                }
+            }
+        }
+    }
+
+    /// Record a decode step: current cached length and the planner's split.
+    pub fn touch(&mut self, seq: u64, tokens: usize, split_l: usize) {
+        self.clock += 1;
+        if let Some(e) = self.seqs.get_mut(&seq) {
+            e.tokens = e.tokens.max(tokens);
+            e.split_l = split_l;
+            e.last_use = self.clock;
+        }
+    }
+
+    /// Tokens of the sequence's *resident suffix*: the run of settled
+    /// gpu-tier blocks ending at the newest valid token.
+    pub fn gpu_resident_tokens(&self, seq: u64) -> usize {
+        let bt = self.block_tokens;
+        let Some(e) = self.seqs.get(&seq) else { return 0 };
+        let mut covered = 0;
+        let mut idx = Self::valid_blocks_of(e, bt);
+        while idx > 0 {
+            idx -= 1;
+            let b = &e.blocks[idx];
+            if b.tier == Tier::GpuHbm && b.pending.is_none() && !b.kv_dropped {
+                covered += Self::block_tokens_at(e, idx, bt);
+            } else {
+                break;
+            }
+        }
+        covered
+    }
+
+    /// Length of the contiguous dropped-KV prefix — the planner's `l` floor.
+    pub fn kv_dropped_tokens(&self, seq: u64) -> usize {
+        let Some(e) = self.seqs.get(&seq) else { return 0 };
+        e.blocks.iter().take_while(|b| b.kv_dropped).count() * self.block_tokens
+    }
+
+    /// In-flight promotions across all sequences.
+    pub fn pending_count(&self) -> usize {
+        self.seqs
+            .values()
+            .map(|e| e.blocks.iter().filter(|b| b.pending.is_some()).count())
+            .sum()
+    }
+
+    /// The engine keeps the newest `engine_resident` tokens on device for
+    /// free (their K/V was just computed there); mirror that into the gpu
+    /// tier's accounting where the budget allows — no link traffic — and
+    /// return the store-backed resident token count.  When the gpu tier
+    /// cannot back the engine's window, the returned count is smaller and
+    /// the caller demotes the engine window to match (budget enforcement).
+    pub fn sync_device_suffix(&mut self, seq: u64, engine_resident: usize) -> usize {
+        let bt = self.block_tokens;
+        let todo: Vec<usize> = {
+            let Some(e) = self.seqs.get(&seq) else { return 0 };
+            let mut todo = Vec::new();
+            let mut covered = 0usize;
+            let mut idx = Self::valid_blocks_of(e, bt);
+            while idx > 0 && covered < engine_resident {
+                idx -= 1;
+                let b = &e.blocks[idx];
+                covered += Self::block_tokens_at(e, idx, bt);
+                if b.pending.is_some() {
+                    break; // a promotion is already bringing this one up
+                }
+                if b.tier != Tier::GpuHbm && !b.kv_dropped {
+                    todo.push(idx);
+                }
+            }
+            todo
+        };
+        let Some(block_bytes) = self.seqs.get(&seq).map(|e| e.block_bytes) else { return 0 };
+        for idx in todo {
+            let Some(guard) = self.mgr.grab(Tier::GpuHbm, block_bytes) else { break };
+            let Some(e) = self.seqs.get_mut(&seq) else { break };
+            let b = &mut e.blocks[idx];
+            b.guard = Some(guard); // old tier reservation released
+            b.tier = Tier::GpuHbm;
+            self.stats.device_syncs += 1;
+        }
+        self.gpu_resident_tokens(seq)
+    }
+
+    /// Start up to `max_blocks` asynchronous promotions extending `seq`'s
+    /// resident suffix downward (prefetch ahead of its decode step).  When
+    /// the gpu tier is full, the eviction policy demotes other sequences'
+    /// run-start blocks to make room.  Returns promotions issued.
+    pub fn begin_promotions(&mut self, seq: u64, max_blocks: usize) -> usize {
+        let bt = self.block_tokens;
+        let (targets, block_bytes) = {
+            let Some(e) = self.seqs.get(&seq) else { return 0 };
+            let mut targets = Vec::new();
+            let mut idx = Self::valid_blocks_of(e, bt);
+            while idx > 0 && targets.len() < max_blocks {
+                idx -= 1;
+                let b = &e.blocks[idx];
+                if let Some(pm) = &b.pending {
+                    if pm.to() == Tier::GpuHbm {
+                        continue; // already on its way up
+                    }
+                    break;
+                }
+                if b.tier == Tier::GpuHbm {
+                    continue; // part of the established run
+                }
+                if b.kv_dropped {
+                    break; // nothing to promote below a dropped prefix
+                }
+                targets.push(idx);
+            }
+            (targets, e.block_bytes)
+        };
+        let mut issued = 0;
+        'targets: for idx in targets {
+            // evict until the block fits: victims' blocks may be smaller
+            // than ours (different batch buckets), so one demotion is not
+            // always enough; the loop is bounded by the candidate supply
+            let pm = loop {
+                if let Some(pm) =
+                    self.mgr.begin_migration(Tier::GpuHbm, block_bytes, Priority::High)
+                {
+                    break pm;
+                }
+                if !self.evict_gpu_victim(seq) {
+                    break 'targets;
+                }
+            };
+            let Some(e) = self.seqs.get_mut(&seq) else { break };
+            e.blocks[idx].pending = Some(pm);
+            self.stats.promotions_started += 1;
+            issued += 1;
+        }
+        issued
+    }
+
+    /// Complete every landed promotion (non-blocking); returns how many
+    /// were installed.  A landed block is only installed into the gpu tier
+    /// while it still extends the resident suffix from above — if an
+    /// eviction opened a hole over it in the meantime, installing would
+    /// strand gpu bytes no eviction walk can ever reach, so the new
+    /// reservation is dropped and the block stays where it was.
+    pub fn complete_landed(&mut self) -> usize {
+        let Self { mgr, seqs, stats, block_tokens, .. } = self;
+        let bt = *block_tokens;
+        let mut landed = 0;
+        for e in seqs.values_mut() {
+            // walk top-down so an upper block landing this pass extends
+            // the run before the one below it is judged
+            let mut suffix_ok = true;
+            let mut idx = Self::valid_blocks_of(e, bt);
+            while idx > 0 {
+                idx -= 1;
+                if e.blocks[idx].pending.as_ref().is_some_and(|pm| pm.is_done()) {
+                    let pm = e.blocks[idx].pending.take().unwrap();
+                    let (tier, guard) = mgr.finish_migration(pm);
+                    if suffix_ok {
+                        let b = &mut e.blocks[idx];
+                        b.guard = Some(guard);
+                        b.tier = tier;
+                        stats.promotions_landed += 1;
+                        landed += 1;
+                    } else {
+                        stats.promotions_wasted += 1;
+                    }
+                }
+                let b = &e.blocks[idx];
+                // an in-flight promotion still counts as run-extending (it
+                // will land); a settled non-gpu or dropped block is a hole
+                if b.pending.is_none() && (b.tier != Tier::GpuHbm || b.kv_dropped) {
+                    suffix_ok = false;
+                }
+            }
+        }
+        landed
+    }
+
+    /// Demote one other sequence's run-start block (policy's choice) one
+    /// tier down to free gpu capacity.  Returns false when there is no
+    /// candidate or no room below.
+    fn evict_gpu_victim(&mut self, exclude_seq: u64) -> bool {
+        let bt = self.block_tokens;
+        let mut cands: Vec<BlockView> = Vec::new();
+        for (&sid, e) in self.seqs.iter() {
+            if sid == exclude_seq {
+                continue;
+            }
+            // the lowest block of the top gpu run: evicting it keeps the
+            // remaining residency a suffix
+            let mut run_start: Option<usize> = None;
+            let mut idx = Self::valid_blocks_of(e, bt);
+            while idx > 0 {
+                idx -= 1;
+                let b = &e.blocks[idx];
+                if b.tier == Tier::GpuHbm && b.pending.is_none() && !b.kv_dropped {
+                    run_start = Some(idx);
+                } else {
+                    break;
+                }
+            }
+            if let Some(idx) = run_start {
+                cands.push(BlockView {
+                    id: BlockId { seq: sid, idx },
+                    tokens: Self::block_tokens_at(e, idx, bt),
+                    start_token: idx * bt,
+                    seq_len: e.tokens,
+                    last_use: e.last_use,
+                    split_l: e.split_l,
+                });
+            }
+        }
+        if cands.is_empty() {
+            return false;
+        }
+        let v = cands[self.policy.victim(&cands)];
+        let Some(bytes) = self.seqs.get(&v.id.seq).map(|e| e.block_bytes) else { return false };
+        let dest = self
+            .mgr
+            .grab(Tier::Pinned, bytes)
+            .map(|g| (Tier::Pinned, g))
+            .or_else(|| self.mgr.grab(Tier::CpuDram, bytes).map(|g| (Tier::CpuDram, g)));
+        let Some((tier, guard)) = dest else { return false };
+        self.mgr.migrate_sync(bytes);
+        let Some(e) = self.seqs.get_mut(&v.id.seq) else { return false };
+        let b = &mut e.blocks[v.id.idx];
+        b.guard = Some(guard); // gpu reservation released
+        b.tier = tier;
+        self.stats.demotions += 1;
+        true
+    }
+
+    /// Bytes that dropping every currently-droppable KV prefix would free
+    /// (the contiguous chain of fully-valid, host-resident, settled blocks
+    /// above each sequence's dropped prefix) — the admission pre-check's
+    /// reclaim ceiling.
+    fn reclaimable_bytes(&self) -> u64 {
+        let bt = self.block_tokens;
+        let mut total = 0u64;
+        for e in self.seqs.values() {
+            let kv = e.block_bytes - e.block_bytes.div_ceil(3);
+            let mut idx = e.blocks.iter().take_while(|b| b.kv_dropped).count();
+            while idx < e.blocks.len() {
+                let b = &e.blocks[idx];
+                if (idx + 1) * bt > e.tokens || b.tier == Tier::GpuHbm || b.pending.is_some() {
+                    break;
+                }
+                total += kv;
+                idx += 1;
+            }
+        }
+        total
+    }
+
+    /// Drop the KV (keep X) of one policy-chosen block, freeing ≈⅔ of its
+    /// bytes in place.  Only fully-valid, host-resident blocks extending a
+    /// sequence's contiguous dropped prefix qualify.  Returns bytes freed.
+    fn reclaim_kv_one(&mut self) -> Option<u64> {
+        let bt = self.block_tokens;
+        let mut cands: Vec<BlockView> = Vec::new();
+        for (&sid, e) in self.seqs.iter() {
+            let idx = e.blocks.iter().take_while(|b| b.kv_dropped).count();
+            if idx >= e.blocks.len() {
+                continue;
+            }
+            let b = &e.blocks[idx];
+            if (idx + 1) * bt > e.tokens || b.tier == Tier::GpuHbm || b.pending.is_some() {
+                continue;
+            }
+            cands.push(BlockView {
+                id: BlockId { seq: sid, idx },
+                tokens: bt,
+                start_token: idx * bt,
+                seq_len: e.tokens,
+                last_use: e.last_use,
+                split_l: e.split_l,
+            });
+        }
+        if cands.is_empty() {
+            return None;
+        }
+        let v = cands[self.policy.victim(&cands)];
+        let (tier, bytes) = {
+            let e = self.seqs.get(&v.id.seq)?;
+            (e.blocks[v.id.idx].tier, e.block_bytes)
+        };
+        let x_bytes = bytes.div_ceil(3); // X is one of the three K/V/X tensors
+        // shrink in place: release the full-block guard, re-grab X-only
+        self.seqs.get_mut(&v.id.seq)?.blocks[v.id.idx].guard = None;
+        let guard = self.mgr.grab(tier, x_bytes);
+        let e = self.seqs.get_mut(&v.id.seq)?;
+        let b = &mut e.blocks[v.id.idx];
+        b.guard = guard;
+        b.kv_dropped = true;
+        self.stats.kv_drops += 1;
+        Some(bytes - x_bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvstore::policy::Lru;
+
+    const BB: u64 = 3000; // block bytes in these tests
+
+    fn store(gpu_blocks: u64, pinned_blocks: u64, dram_blocks: u64) -> KvStore {
+        KvStore::new(
+            KvStoreConfig {
+                gpu_bytes: gpu_blocks * BB,
+                pinned_bytes: pinned_blocks * BB,
+                dram_bytes: dram_blocks * BB,
+                block_tokens: 16,
+                link: LinkConfig::unthrottled(),
+            },
+            Box::new(Lru),
+        )
+    }
+
+    fn poll_landed_until(s: &mut KvStore, want: usize) -> usize {
+        // unthrottled transfers land almost immediately, but on a worker
+        // thread; poll until `want` promotions have landed
+        let mut total = 0;
+        for _ in 0..500 {
+            total += s.complete_landed();
+            if total >= want {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        total
+    }
+
+    #[test]
+    fn admit_places_cold_first_in_host_tiers_and_rolls_back() {
+        let mut s = store(1, 1, 2);
+        s.admit(1, 3 * BB, 3).unwrap();
+        assert_eq!(s.tier_used(Tier::CpuDram), 2 * BB);
+        assert_eq!(s.tier_used(Tier::Pinned), BB);
+        // the gpu tier is a promotion-only cache: admission never parks
+        // blocks there, so eviction can always reclaim it
+        assert_eq!(s.tier_used(Tier::GpuHbm), 0);
+        // host tiers full, nothing droppable (tokens == 0) → fails clean
+        let used_before: u64 = Tier::ALL.iter().map(|&t| s.tier_used(t)).sum();
+        assert!(s.admit(2, 2 * BB, 2).is_err());
+        let used_after: u64 = Tier::ALL.iter().map(|&t| s.tier_used(t)).sum();
+        assert_eq!(used_before, used_after, "failed admit must roll back");
+    }
+
+    #[test]
+    fn release_frees_everything() {
+        let mut s = store(0, 0, 4);
+        s.admit(1, 4 * BB, 4).unwrap();
+        assert_eq!(s.tier_used(Tier::CpuDram), 4 * BB);
+        s.release(1);
+        assert_eq!(s.tier_used(Tier::CpuDram), 0);
+    }
+
+    #[test]
+    fn device_suffix_sync_respects_gpu_budget() {
+        let mut s = store(1, 0, 4); // gpu fits one block
+        s.admit(1, 4 * BB, 4).unwrap();
+        s.touch(1, 40, 0); // 3 valid blocks (16+16+8 tokens)
+        // engine says its window covers 24 tokens (top partial 8 + one full 16)
+        let r = s.sync_device_suffix(1, 24);
+        assert_eq!(r, 8, "budget backs only the top block (8 valid tokens)");
+        assert_eq!(s.tier_used(Tier::GpuHbm), BB);
+        assert_eq!(s.stats().device_syncs, 1);
+    }
+
+    #[test]
+    fn promotions_prefetch_and_land() {
+        let mut s = store(2, 0, 4);
+        s.admit(1, 4 * BB, 4).unwrap();
+        s.touch(1, 32, 0); // blocks 0 and 1 valid
+        let issued = s.begin_promotions(1, 2);
+        assert_eq!(issued, 2);
+        assert_eq!(s.pending_count(), 2);
+        // in-flight promotions do not count as resident yet
+        assert_eq!(s.gpu_resident_tokens(1), 0);
+        assert_eq!(poll_landed_until(&mut s, 2), 2);
+        assert_eq!(s.gpu_resident_tokens(1), 32);
+        assert_eq!(s.tier_used(Tier::GpuHbm), 2 * BB);
+        assert_eq!(s.tier_used(Tier::CpuDram), 2 * BB, "source reservations released");
+        assert_eq!(s.stats().promotions_landed, 2);
+    }
+
+    #[test]
+    fn full_gpu_tier_evicts_other_seq_via_policy() {
+        let mut s = store(1, 1, 4);
+        s.admit(1, 2 * BB, 2).unwrap();
+        s.admit(2, 2 * BB, 2).unwrap();
+        s.touch(1, 16, 0);
+        assert_eq!(s.sync_device_suffix(1, 16), 16, "seq 1 takes the gpu block");
+        s.touch(2, 16, 0); // seq 2 is now more recent than seq 1
+        let issued = s.begin_promotions(2, 1);
+        assert_eq!(issued, 1, "eviction must have made room");
+        assert!(s.stats().demotions >= 1);
+        assert_eq!(s.gpu_resident_tokens(1), 0, "lru victim demoted");
+        poll_landed_until(&mut s, 1);
+        assert_eq!(s.gpu_resident_tokens(2), 16);
+    }
+
+    #[test]
+    fn admission_reclaims_by_dropping_kv() {
+        let mut s = store(0, 0, 2);
+        s.admit(1, 2 * BB, 2).unwrap();
+        s.touch(1, 32, 32); // both blocks fully valid
+        assert_eq!(s.tier_used(Tier::CpuDram), 2 * BB);
+        // nothing free, but seq 1's prefix KV is droppable: 2 drops free
+        // 2 × ⅔·BB = 4000 ≥ BB, so the new block fits
+        s.admit(2, BB, 1).unwrap();
+        assert!(s.stats().kv_drops >= 1);
+        assert_eq!(s.kv_dropped_tokens(1) % 16, 0);
+        assert!(s.kv_dropped_tokens(1) >= 16);
+        assert!(s.tier_used(Tier::CpuDram) <= 2 * BB);
+    }
+
+    #[test]
+    fn dropped_prefix_reports_planner_floor() {
+        let mut s = store(0, 0, 2);
+        s.admit(1, 2 * BB, 2).unwrap();
+        s.touch(1, 32, 32);
+        assert_eq!(s.kv_dropped_tokens(1), 0);
+        let freed = s.reclaim_kv_one().expect("droppable");
+        assert_eq!(freed, BB - BB.div_ceil(3), "KV is ⅔ of the K/V/X block");
+        assert_eq!(s.tier_used(Tier::CpuDram), BB + BB.div_ceil(3));
+        assert_eq!(s.kv_dropped_tokens(1), 16);
+    }
+}

@@ -31,6 +31,10 @@
 //! * [`memory`], [`kvcache`], [`model`] — device/host pools, the KV-cache
 //!   manager (including group-wise 4-bit quantization) and the model-weight
 //!   store.
+//! * [`kvstore`] — the tiered, block-granular KV store: gpu-hbm / pinned /
+//!   cpu-dram block placement, async prefetch, and pluggable eviction
+//!   including the recompute-aware policy (drop KV, keep X) that
+//!   generalises Eq. (11) into a capacity lever.
 //! * [`sim`] — discrete-event simulator of the paper's testbeds (A100 +
 //!   PCIe 4.0 x16, RTX 5000 + x8) used to regenerate every table and figure
 //!   of the evaluation at paper scale.
@@ -45,6 +49,7 @@ pub mod config;
 pub mod coordinator;
 pub mod engine;
 pub mod kvcache;
+pub mod kvstore;
 pub mod memory;
 pub mod model;
 pub mod paper;

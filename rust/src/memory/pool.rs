@@ -141,6 +141,46 @@ mod tests {
     }
 
     #[test]
+    fn concurrent_accounting_is_exact() {
+        // Under contention: `used` must return to zero once every guard is
+        // dropped, and `peak` must be *exact* — all threads hold their
+        // allocation across a barrier, so the high-water mark is forced to
+        // be precisely n_threads × bytes.
+        const THREADS: usize = 8;
+        const BYTES: u64 = 10;
+        const ROUNDS: usize = 50;
+        let p = MemPool::new("t", THREADS as u64 * BYTES);
+        let barrier = std::sync::Arc::new(std::sync::Barrier::new(THREADS));
+        let mut handles = Vec::new();
+        for _ in 0..THREADS {
+            let p = p.clone();
+            let barrier = barrier.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..ROUNDS {
+                    // churn: allocate/free at random-ish interleavings...
+                    let g = p.alloc(BYTES).expect("capacity fits all threads");
+                    std::hint::black_box(&g);
+                    drop(g);
+                    // ...then all threads hold one allocation simultaneously
+                    let g = p.alloc(BYTES).expect("capacity fits all threads");
+                    barrier.wait(); // every thread holds BYTES here
+                    std::hint::black_box(&g);
+                    barrier.wait(); // nobody frees before everyone arrived
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(p.used(), 0, "used must return to zero");
+        assert_eq!(
+            p.peak(),
+            THREADS as u64 * BYTES,
+            "peak must be exactly the forced simultaneous maximum"
+        );
+    }
+
+    #[test]
     fn concurrent_alloc_respects_capacity() {
         let p = MemPool::new("t", 1000);
         let mut handles = Vec::new();

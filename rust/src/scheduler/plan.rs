@@ -115,10 +115,31 @@ impl Planner {
     /// assert!(plan.predicted_s <= plan.baseline_s);
     /// ```
     pub fn plan_batch(&self, lane_s_primes: &[usize]) -> StepPlan {
+        self.plan_batch_tiered(lane_s_primes, 0, 0)
+    }
+
+    /// [`Planner::plan_batch`] for a group running over the tiered kvstore:
+    ///
+    /// * `resident` — tokens of the group's KV *suffix* already resident in
+    ///   gpu-hbm.  They leave both the transfer and recompute terms, so the
+    ///   plan is solved on the effective cached length `s' − resident`
+    ///   (already-on-GPU blocks shrink the transfer term).
+    /// * `l_floor` — tokens of the group's KV *prefix* whose stored KV the
+    ///   store dropped (keeping X): the recompute path must cover them, so
+    ///   `l = 0` and any bucket below the floor are infeasible.  When no
+    ///   bucket at or above the floor fits, the plan degrades to full
+    ///   transfer (the emulated store's drop is advisory accounting; the
+    ///   host rows still exist).
+    pub fn plan_batch_tiered(
+        &self,
+        lane_s_primes: &[usize],
+        resident: usize,
+        l_floor: usize,
+    ) -> StepPlan {
         assert!(!lane_s_primes.is_empty(), "plan_batch over an empty batch");
         let n = lane_s_primes.len() as f64;
-        let s_prime = *lane_s_primes.iter().max().unwrap();
-        let feasible = *lane_s_primes.iter().min().unwrap();
+        let s_prime = lane_s_primes.iter().max().unwrap().saturating_sub(resident);
+        let feasible = lane_s_primes.iter().min().unwrap().saturating_sub(resident);
 
         let mut cost = self.solver.cost.clone();
         cost.recompute_per_token_s *= n;
@@ -128,7 +149,7 @@ impl Planner {
 
         let l_max = self.l_cap.min(feasible);
         let ideal = solver.solve(s_prime, l_max);
-        let l = solver.quantize_to_buckets(s_prime, &self.buckets, l_max);
+        let l = solver.quantize_to_buckets_floor(s_prime, &self.buckets, l_max, l_floor);
         let path = if l == 0 {
             PathKind::FullTransfer
         } else {
@@ -251,6 +272,67 @@ mod tests {
         let plan = p.plan_batch(&[128, 128, 40, 128]);
         assert!(plan.l() <= 40, "split {} exceeds shortest member", plan.l());
         assert_eq!(plan.l(), 32);
+    }
+
+    #[test]
+    fn resident_suffix_shrinks_the_plan() {
+        let p = planner(SchedulePolicy::RowByRow);
+        let full = p.plan_batch(&[128; 4]);
+        let tiered = p.plan_batch_tiered(&[128; 4], 64, 0);
+        // 64 resident tokens leave the transfer term: the step gets cheaper
+        assert!(tiered.predicted_s < full.predicted_s);
+        // and with (almost) everything resident there is nothing to split
+        let all = p.plan_batch_tiered(&[128; 4], 120, 0);
+        assert_eq!(all.path, PathKind::FullTransfer);
+        assert!(all.predicted_s <= tiered.predicted_s);
+    }
+
+    #[test]
+    fn resident_matches_shorter_sequence_plan() {
+        // planning with r resident tokens ≡ planning the s'−r suffix
+        let p = planner(SchedulePolicy::RowByRow);
+        let a = p.plan_batch_tiered(&[128, 128], 32, 0);
+        let b = p.plan_batch(&[96, 96]);
+        assert_eq!(a.l(), b.l());
+        assert!((a.predicted_s - b.predicted_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dropped_prefix_floors_the_split() {
+        // recompute hopeless → the unconstrained plan is full transfer...
+        let cost = CostModel {
+            recompute_per_token_s: 1e-3,
+            transfer_kv_per_token_s: 1e-9,
+            transfer_act_per_token_s: 5e-10,
+            gpu_overhead_s: 0.0,
+            link_latency_s: 0.0,
+        };
+        let p = Planner::new(cost, SchedulePolicy::RowByRow, vec![32, 64, 96], usize::MAX);
+        assert_eq!(p.plan_batch(&[128; 2]).l(), 0);
+        // ...but a 32-token dropped-KV prefix forces the recompute bucket
+        let floored = p.plan_batch_tiered(&[128; 2], 0, 32);
+        assert_eq!(floored.l(), 32);
+        assert!(floored.predicted_s >= floored.baseline_s);
+    }
+
+    #[test]
+    fn infeasible_floor_degrades_to_full_transfer() {
+        let p = planner(SchedulePolicy::RowByRow);
+        // floor above every feasible bucket (s' − resident < smallest bucket)
+        let plan = p.plan_batch_tiered(&[40; 2], 20, 32);
+        assert_eq!(plan.path, PathKind::FullTransfer);
+    }
+
+    #[test]
+    fn plan_batch_is_the_untiered_special_case() {
+        let p = planner(SchedulePolicy::RowByRow);
+        for lanes in [vec![128usize; 4], vec![120, 64, 96, 128]] {
+            let a = p.plan_batch(&lanes);
+            let b = p.plan_batch_tiered(&lanes, 0, 0);
+            assert_eq!(a.l(), b.l());
+            assert_eq!(a.ideal_l, b.ideal_l);
+            assert!((a.predicted_s - b.predicted_s).abs() < 1e-15);
+        }
     }
 
     #[test]

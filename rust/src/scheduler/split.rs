@@ -139,18 +139,39 @@ impl SplitSolver {
     /// (plus l = 0 meaning the full-transfer path).  `kv_len` bounds
     /// feasibility: we can only recompute a prefix that exists.
     pub fn quantize_to_buckets(&self, s_prime: usize, buckets: &[usize], kv_len: usize) -> usize {
-        let mut best_l = 0usize;
-        let mut best_t = self.objective(0, s_prime);
+        self.quantize_to_buckets_floor(s_prime, buckets, kv_len, 0)
+    }
+
+    /// [`SplitSolver::quantize_to_buckets`] with a feasibility floor:
+    /// buckets below `l_floor` are excluded, and `l = 0` is admissible
+    /// only when the floor is zero (a dropped-KV prefix forces the
+    /// recompute path to cover it).  Falls back to 0 when no bucket
+    /// satisfies the floor — the caller degrades to full transfer.
+    pub fn quantize_to_buckets_floor(
+        &self,
+        s_prime: usize,
+        buckets: &[usize],
+        kv_len: usize,
+        l_floor: usize,
+    ) -> usize {
+        let mut best: Option<(usize, f64)> = if l_floor == 0 {
+            Some((0, self.objective(0, s_prime)))
+        } else {
+            None
+        };
         for &b in buckets {
-            if b <= kv_len && b <= s_prime {
+            if b >= l_floor && b <= kv_len && b <= s_prime {
                 let t = self.objective(b, s_prime);
-                if t < best_t {
-                    best_t = t;
-                    best_l = b;
+                let better = match best {
+                    Some((_, bt)) => t < bt,
+                    None => true,
+                };
+                if better {
+                    best = Some((b, t));
                 }
             }
         }
-        best_l
+        best.map(|(l, _)| l).unwrap_or(0)
     }
 }
 
@@ -329,6 +350,22 @@ mod tests {
         // recompute hopeless → 0
         let bad = SplitSolver::new(cm(1.0, 1e-9), SchedulePolicy::RowByRow);
         assert_eq!(bad.quantize_to_buckets(120, &buckets, 120), 0);
+    }
+
+    #[test]
+    fn bucket_floor_excludes_small_splits() {
+        let solver = SplitSolver::new(cm(1e-6, 1e-6), SchedulePolicy::RowByRow);
+        let buckets = [32, 64, 96];
+        // floor 0 ≡ the unfloored quantisation
+        assert_eq!(
+            solver.quantize_to_buckets_floor(120, &buckets, 120, 0),
+            solver.quantize_to_buckets(120, &buckets, 120)
+        );
+        // a recompute-hopeless model is still forced onto the floor bucket
+        let bad = SplitSolver::new(cm(1.0, 1e-9), SchedulePolicy::RowByRow);
+        assert_eq!(bad.quantize_to_buckets_floor(120, &buckets, 120, 32), 32);
+        // no bucket satisfies the floor → degrade to 0 (full transfer)
+        assert_eq!(solver.quantize_to_buckets_floor(120, &buckets, 20, 32), 0);
     }
 
     #[test]

@@ -9,17 +9,35 @@
 use std::collections::HashMap;
 use std::sync::Mutex;
 
+use crate::memory::{MemPool, PoolGuard};
+
 /// Size-bucketed freelist of reusable f32 buffers.
+///
+/// With [`PinnedPool::with_accounting`] every buffer the pool *creates* is
+/// charged against a byte-accounted [`MemPool`] for the lifetime of the
+/// pinned region (real pinned allocators grow and stay pinned), so pinned
+/// staging occupancy is visible to — and capped by — the "pinned" tier
+/// budget of the kvstore.  When the budget is exhausted the buffer is still
+/// handed out (staging must not fail mid-decode) but counted as an
+/// unpinned fallback.
 #[derive(Debug, Default)]
 pub struct PinnedPool {
     free: Mutex<HashMap<usize, Vec<Vec<f32>>>>,
     hits: std::sync::atomic::AtomicU64,
     misses: std::sync::atomic::AtomicU64,
+    account: Option<MemPool>,
+    guards: Mutex<Vec<PoolGuard>>,
+    unpinned_fallbacks: std::sync::atomic::AtomicU64,
 }
 
 impl PinnedPool {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// A pool whose created buffers are byte-accounted in `account`.
+    pub fn with_accounting(account: MemPool) -> Self {
+        PinnedPool { account: Some(account), ..Self::default() }
     }
 
     /// Get a zero-length buffer with at least `capacity` elements reserved.
@@ -34,6 +52,15 @@ impl PinnedPool {
         }
         drop(free);
         self.misses.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        if let Some(pool) = &self.account {
+            match pool.alloc((capacity * 4) as u64) {
+                Ok(g) => self.guards.lock().unwrap().push(g),
+                Err(_) => {
+                    self.unpinned_fallbacks
+                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                }
+            }
+        }
         Vec::with_capacity(capacity)
     }
 
@@ -51,6 +78,15 @@ impl PinnedPool {
         let mut free = self.free.lock().unwrap();
         let list = free.entry(capacity).or_default();
         for _ in 0..count {
+            if let Some(pool) = &self.account {
+                match pool.alloc((capacity * 4) as u64) {
+                    Ok(g) => self.guards.lock().unwrap().push(g),
+                    Err(_) => {
+                        self.unpinned_fallbacks
+                            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    }
+                }
+            }
             list.push(Vec::with_capacity(capacity));
         }
     }
@@ -63,6 +99,12 @@ impl PinnedPool {
         } else {
             h / (h + m)
         }
+    }
+
+    /// Buffers handed out unaccounted because the pinned budget was full.
+    pub fn unpinned_fallbacks(&self) -> u64 {
+        self.unpinned_fallbacks
+            .load(std::sync::atomic::Ordering::Relaxed)
     }
 }
 
@@ -100,5 +142,36 @@ mod tests {
         let b = pool.get(512);
         assert!(b.capacity() >= 512);
         assert_eq!(pool.hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn accounting_charges_created_buffers_only() {
+        let mem = crate::memory::MemPool::new("pinned", 1 << 20);
+        let pool = PinnedPool::with_accounting(mem.clone());
+        let a = pool.get(256);
+        assert_eq!(mem.used(), 256 * 4, "miss charges the pinned budget");
+        let cap = a.capacity();
+        pool.put(a);
+        let _b = pool.get(cap);
+        assert_eq!(mem.used(), 256 * 4, "recycled hit is not re-charged");
+        assert_eq!(pool.unpinned_fallbacks(), 0);
+    }
+
+    #[test]
+    fn exhausted_budget_falls_back_unpinned() {
+        let mem = crate::memory::MemPool::new("pinned", 100);
+        let pool = PinnedPool::with_accounting(mem.clone());
+        let b = pool.get(1024); // 4 KiB wanted, 100 B budget
+        assert!(b.capacity() >= 1024, "staging must still be served");
+        assert_eq!(pool.unpinned_fallbacks(), 1);
+        assert_eq!(mem.used(), 0);
+    }
+
+    #[test]
+    fn reserve_is_accounted() {
+        let mem = crate::memory::MemPool::new("pinned", 1 << 20);
+        let pool = PinnedPool::with_accounting(mem.clone());
+        pool.reserve(64, 4);
+        assert_eq!(mem.used(), 4 * 64 * 4);
     }
 }

@@ -16,7 +16,9 @@ use std::sync::Mutex;
 use std::time::Duration;
 
 use kvpr::config::{HardwareConfig, ModelConfig, Objective, WorkloadConfig};
-use kvpr::coordinator::{Batcher, ContinuousConfig, ContinuousServer, Router, Server, ServerConfig};
+use kvpr::coordinator::{
+    Batcher, ContinuousConfig, ContinuousServer, Router, Server, ServerConfig, TieredKvConfig,
+};
 use kvpr::engine::{EngineConfig, EnginePolicy};
 use kvpr::sim::{simulate_decode, Policy, RunConfig};
 use kvpr::transfer::LinkConfig;
@@ -226,6 +228,59 @@ fn kv_budget_backpressure_serialises_admission() {
         "expected KV-budget backpressure with a one-session budget"
     );
     server.shutdown().unwrap();
+}
+
+#[test]
+fn tiered_kvstore_admits_more_than_hard_backpressure() {
+    let _g = lock();
+    // Acceptance: under the same gpu-hbm budget, the tiered kvstore admits
+    // strictly more concurrent requests than PR 1's hard backpressure —
+    // and decoding stays bit-identical.  Budget fits exactly one
+    // single-lane session (tiny model: 4 layers × 3 tensors × 128 rows ×
+    // 256 hidden × 4 B ≈ 1.5 MiB).
+    const N: usize = 4;
+    const GEN: usize = 4;
+    let mk = |tiered: bool| {
+        let mut cfg = continuous_cfg(1, 4);
+        cfg.kv_budget_bytes = 2 << 20;
+        cfg.admit_wait = Duration::from_millis(1);
+        if tiered {
+            cfg.tiering = Some(TieredKvConfig::default());
+        }
+        cfg
+    };
+
+    // PR 1 baseline: the budget serialises admission
+    let server = ContinuousServer::start(mk(false)).unwrap();
+    let handles: Vec<_> = prompts(N).iter().map(|p| server.submit(p, GEN)).collect();
+    let mut base_tokens = Vec::new();
+    for h in handles {
+        base_tokens.push(h.wait().unwrap().tokens);
+    }
+    let base_peak = server.metrics().peak_occupancy();
+    assert!(server.metrics().backpressure_events() > 0, "budget must bind");
+    server.shutdown().unwrap();
+    assert!(base_peak <= 1.0 + 1e-9, "baseline must serialise: peak {base_peak}");
+
+    // tiered: same gpu-hbm budget, admission against pinned+dram capacity,
+    // async prefetch + device-resident suffix active
+    let server = ContinuousServer::start(mk(true)).unwrap();
+    let handles: Vec<_> = prompts(N).iter().map(|p| server.submit(p, GEN)).collect();
+    let mut tiered_tokens = Vec::new();
+    for h in handles {
+        tiered_tokens.push(h.wait().unwrap().tokens);
+    }
+    let tiered_peak = server.metrics().peak_occupancy();
+    let (promoted, _demoted, _dropped) = server.metrics().tiering_totals();
+    server.shutdown().unwrap();
+
+    assert!(
+        tiered_peak > base_peak,
+        "tiering must admit strictly more concurrent requests: {tiered_peak} vs {base_peak}"
+    );
+    assert_eq!(base_tokens, tiered_tokens, "tiered serving changed tokens");
+    // the gpu tier actually carried KV (residency/prefetch was exercised)
+    assert!(promoted > 0, "no tokens were ever promoted into the gpu tier");
 }
 
 // ---------------------------------------------------------------------------

@@ -52,6 +52,48 @@ fn all_policies_generate_identical_tokens() {
 }
 
 #[test]
+fn residency_preserves_tokens_exactly() {
+    // The device-resident KV suffix (tiered kvstore gpu tier) moves bytes,
+    // never math: a session whose window grows, is promoted from host rows
+    // and demoted back down mid-decode must emit the same tokens as one
+    // without residency.  Runs on the synthetic manifest when no artifacts
+    // are present, so it is never skipped.
+    let dir = artifacts().unwrap_or_else(|| PathBuf::from("artifacts"));
+    let engine = Engine::new(&dir, fast_cfg(EnginePolicy::Kvpr)).unwrap();
+    let prompts = prompts();
+    const GEN: usize = 24;
+
+    let mut base = engine.start_batch(&prompts).unwrap();
+    for _ in 1..GEN {
+        engine.decode_step(&mut base).unwrap();
+    }
+    let base = engine.finish_batch(base);
+
+    let mut sess = engine.start_batch(&prompts).unwrap();
+    engine.enable_residency(&mut sess, 8);
+    assert_eq!(sess.resident_tokens(), 0);
+    for step in 1..GEN {
+        if step == 6 {
+            // promote the whole cache into the window (host-row copies)
+            let kv = sess.kv_len();
+            let (promoted, _) = engine.set_resident_target(&mut sess, kv);
+            assert!(promoted > 0, "promotion must extend the window");
+            assert_eq!(sess.resident_tokens(), kv);
+        }
+        if step == 12 {
+            // demote most of it back down (no writeback needed)
+            let (_, demoted) = engine.set_resident_target(&mut sess, 4);
+            assert!(demoted > 0);
+            assert!(sess.resident_tokens() <= 4);
+        }
+        engine.decode_step(&mut sess).unwrap();
+    }
+    assert!(sess.resident_tokens() > 0, "the window grows as tokens append");
+    let res = engine.finish_batch(sess);
+    assert_eq!(base.tokens, res.tokens, "residency changed generated tokens");
+}
+
+#[test]
 fn engine_matches_pure_rust_reference() {
     let Some(dir) = artifacts() else { return };
     let engine = Engine::new(&dir, fast_cfg(EnginePolicy::Kvpr)).unwrap();
