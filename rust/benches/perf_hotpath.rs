@@ -141,7 +141,7 @@ fn main() {
     let cost = CostModel::from_hardware(&HardwareConfig::a100_x16(), &ModelConfig::opt_6_7b(), 32);
     let ecfg = EvictionSimConfig::skewed_reuse(cost.clone());
     let lru = simulate_eviction(&ecfg, &Lru);
-    let ra = simulate_eviction(&ecfg, &RecomputeAware::new(cost));
+    let ra = simulate_eviction(&ecfg, &RecomputeAware::new(cost.clone()));
     let dt = time_per_iter(50, || {
         std::hint::black_box(simulate_eviction(&ecfg, &Lru));
     });
@@ -155,10 +155,24 @@ fn main() {
         ),
     ]);
 
+    // the same comparison with a contended gpu tier: async demotions ride
+    // the policy, so the trajectory also tracks writeback traffic
+    let tcfg = EvictionSimConfig::skewed_reuse_tiered(cost.clone());
+    let tlru = simulate_eviction(&tcfg, &Lru);
+    let tra = simulate_eviction(&tcfg, &RecomputeAware::new(cost));
+    t.row(&[
+        "kvstore tiered sim (async demotions)".into(),
+        "1".into(),
+        kvpr::util::fmt_secs(0.0),
+        format!("{} demotions, {:.1} ms writeback", tlru.demotions, tlru.demote_link_s * 1e3),
+    ]);
+
     let json = format!(
-        "{{\n  \"bench\": \"kvstore\",\n  \"policies\": {{\n    \"lru\": {},\n    \"recompute_aware\": {}\n  }}\n}}\n",
+        "{{\n  \"bench\": \"kvstore\",\n  \"policies\": {{\n    \"lru\": {},\n    \"recompute_aware\": {}\n  }},\n  \"tiered\": {{\n    \"lru\": {},\n    \"recompute_aware\": {}\n  }}\n}}\n",
         policy_json(&lru),
-        policy_json(&ra)
+        policy_json(&ra),
+        policy_json(&tlru),
+        policy_json(&tra)
     );
     if let Err(e) = std::fs::write("BENCH_kvstore.json", &json) {
         eprintln!("BENCH_kvstore.json not written: {e}");
@@ -171,7 +185,13 @@ fn main() {
 
 fn policy_json(r: &EvictionSimReport) -> String {
     format!(
-        "{{ \"steps_per_s\": {:.3}, \"link_busy_frac\": {:.4}, \"evictions\": {}, \"steps\": {}, \"peak_concurrency\": {} }}",
-        r.steps_per_s, r.link_busy_frac, r.evictions, r.steps, r.peak_concurrency
+        "{{ \"steps_per_s\": {:.3}, \"link_busy_frac\": {:.4}, \"evictions\": {}, \"demotions\": {}, \"demote_link_s\": {:.6}, \"steps\": {}, \"peak_concurrency\": {} }}",
+        r.steps_per_s,
+        r.link_busy_frac,
+        r.evictions,
+        r.demotions,
+        r.demote_link_s,
+        r.steps,
+        r.peak_concurrency
     )
 }

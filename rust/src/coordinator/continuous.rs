@@ -24,6 +24,14 @@
 //!    to immediately; a fully-retired group frees its KV reservation, which
 //!    unblocks admission.
 //!
+//! Under tiering, every step additionally *polls* the KV store's
+//! [`MigrationEngine`](crate::kvstore::MigrationEngine) — landing finished
+//! promotions/demotions, aligning the engine's device-resident window to
+//! the settled suffix, queueing prefetch — and grants it a link-byte
+//! budget ([`TieredKvConfig::step_link_budget_bytes`]).  Nothing on this
+//! thread ever waits on the migration link: a full gpu tier is drained by
+//! asynchronous demotions whose gpu bytes free at issuance.
+//!
 //! Requests move through `Queued → Prefill → Decoding → Done`
 //! ([`RequestState`]); per-step latency, queue depth and occupancy land in
 //! [`ServeMetrics`].  Contrast with [`super::Server`], which forms one batch,
@@ -104,8 +112,20 @@ pub struct TieredKvConfig {
     pub policy: EvictKind,
     /// Blocks promoted per group per step (prefetch lookahead).
     pub prefetch_blocks: usize,
-    /// Bound on in-flight promotions across all groups.
+    /// Bound on open migrations (queued or in flight) across all groups.
     pub max_inflight: usize,
+    /// Link bytes the migration engine may launch per event-loop step —
+    /// the budget that keeps tier traffic from starving the step's own
+    /// KV/activation transfers.  Queued migrations beyond it wait for the
+    /// next step's grant.
+    pub step_link_budget_bytes: u64,
+    /// Charge migrations int4 wire bytes (0.625 B/elem) and score evicted
+    /// blocks' transfer refills at the same width (paper §4.4 group-wise
+    /// KV quantization applied to tier traffic).
+    pub kv_quant_wire: bool,
+    /// Anti-thrash hysteresis: a block demoted within the last this-many
+    /// event-loop steps is not re-promoted (0 disables).
+    pub promote_cooldown: u64,
 }
 
 impl Default for TieredKvConfig {
@@ -117,6 +137,9 @@ impl Default for TieredKvConfig {
             policy: EvictKind::RecomputeAware,
             prefetch_blocks: 1,
             max_inflight: 8,
+            step_link_budget_bytes: 4 << 20,
+            kv_quant_wire: false,
+            promote_cooldown: 4,
         }
     }
 }
@@ -275,8 +298,16 @@ fn serve_loop(
                 dram_bytes: t.dram_bytes,
                 block_tokens: t.block_tokens,
                 link: cfg.engine.link.clone(),
+                wire_elem_bytes: if t.kv_quant_wire {
+                    crate::kvcache::ELEM_BYTES_INT4_G64
+                } else {
+                    crate::kvcache::ELEM_BYTES_F32
+                },
+                promote_cooldown: t.promote_cooldown,
             },
-            t.policy.build(cost),
+            // the eviction score re-transfers at the same wire width the
+            // migration engine charges on the link
+            t.policy.build_wire(cost, t.kv_quant_wire),
         );
         (s, Prefetcher::new(t.max_inflight))
     });
@@ -358,6 +389,17 @@ fn serve_loop(
                 // retires and frees its reservation
                 metrics.record_backpressure();
                 if groups.is_empty() {
+                    // tiered: a just-released group's canceled migrations
+                    // may still be vacating tier reservations (the drain
+                    // is poll-driven and nothing is stepping to poll) —
+                    // nap, poll, and retry instead of failing the request
+                    if let Some((s, _)) = store.as_mut() {
+                        if s.draining_count() > 0 {
+                            std::thread::sleep(Duration::from_millis(1));
+                            s.poll_landed();
+                            continue;
+                        }
+                    }
                     // not even a single-request session fits the configured
                     // budget — fail the head request instead of spinning
                     let p = queue.pop_front().unwrap();
@@ -407,7 +449,8 @@ fn serve_loop(
             continue;
         }
 
-        // -- 2b. tiered kvstore: land promotions, sync residency, prefetch --
+        // -- 2b. tiered kvstore: poll landed migrations, sync residency,
+        //        queue prefetch, grant the step's link budget --------------
         if let Some((s, pf)) = store.as_mut() {
             // surface reclamation drops performed during admission
             let drops = s.stats().kv_drops;
@@ -416,25 +459,47 @@ fn serve_loop(
                 metrics.record_tiering(0, 0, tokens);
                 seen_kv_drops = drops;
             }
+            let (mig0, st0) = (s.migration_stats(), s.stats());
+            // poll — never wait — the migrations previous steps launched
             pf.poll(s);
             for g in groups.iter_mut() {
                 let KvHold::Tiered(seq) = &g.kv else { continue };
                 let seq = *seq;
                 s.touch(seq, g.sess.kv_len(), g.last_l);
                 // mirror the engine's freely-grown device window into the
-                // gpu tier's accounting, then prefetch deeper blocks ahead
-                // of the step
-                let backed = s.sync_device_suffix(seq, g.sess.resident_tokens());
+                // gpu tier's accounting, then queue deeper blocks for
+                // promotion ahead of the step
+                s.sync_device_suffix(seq, g.sess.resident_tokens());
                 pf.pump(s, seq, prefetch_blocks);
-                let cur = g.sess.resident_tokens();
-                if backed > cur || cur > backed + s.block_tokens() {
-                    // promote up to the store's placement, or demote when
-                    // the gpu tier cannot back the window (budget), with a
-                    // one-block hysteresis for the in-flight growth
-                    let (p, d) = engine.set_resident_target(&mut g.sess, backed);
+            }
+            // second pass, after *every* group's pump: a later group's
+            // promotion may have evicted an earlier group's block, so the
+            // settled suffix and the demotion-in-flight flag are only
+            // final now.  Align each engine window to the settled suffix —
+            // an eviction's in-flight writeback already released gpu bytes
+            // under the window, so those rows must go this step.
+            for g in groups.iter_mut() {
+                let KvHold::Tiered(seq) = &g.kv else { continue };
+                let seq = *seq;
+                let backed = s.gpu_resident_tokens(seq);
+                let demoting = s.demotion_inflight_tokens(seq) > 0;
+                let (p, d) = engine.sync_residency(&mut g.sess, backed, demoting);
+                if p > 0 || d > 0 {
                     metrics.record_tiering(p as u64, d as u64, 0);
                 }
             }
+            // one budgeted launch pass per step: demand promotions first,
+            // then demotion writebacks, then prefetch
+            let budget = cfg.tiering.as_ref().map_or(0, |t| t.step_link_budget_bytes);
+            s.pump_migrations(budget);
+            let (mig1, st1) = (s.migration_stats(), s.stats());
+            metrics.record_migrations(
+                mig1.launched - mig0.launched,
+                mig1.landed - mig0.landed,
+                mig1.budget_deferrals - mig0.budget_deferrals,
+                st1.demotions - st0.demotions,
+                st1.demotions_landed - st0.demotions_landed,
+            );
         }
 
         // -- 3+4. re-plan and step every group -------------------------------

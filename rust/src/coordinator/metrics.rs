@@ -35,6 +35,12 @@ struct Inner {
     promoted_tokens: u64,
     demoted_tokens: u64,
     kv_dropped_tokens: u64,
+    // -- migration-engine lifecycle counters --------------------------------
+    migrations_launched: u64,
+    migrations_landed: u64,
+    migration_deferrals: u64,
+    demotions_issued: u64,
+    demotions_polled: u64,
 }
 
 impl ServeMetrics {
@@ -91,6 +97,41 @@ impl ServeMetrics {
     pub fn tiering_totals(&self) -> (u64, u64, u64) {
         let m = self.inner.lock().unwrap();
         (m.promoted_tokens, m.demoted_tokens, m.kv_dropped_tokens)
+    }
+
+    /// Migration-engine lifecycle activity this step: migrations launched
+    /// onto the link, migrations that landed and were installed, pump
+    /// passes deferred by the step's link-byte budget, and asynchronous
+    /// demotions issued / polled-in.
+    pub fn record_migrations(
+        &self,
+        launched: u64,
+        landed: u64,
+        deferrals: u64,
+        demotions_issued: u64,
+        demotions_polled: u64,
+    ) {
+        let mut m = self.inner.lock().unwrap();
+        m.migrations_launched += launched;
+        m.migrations_landed += landed;
+        m.migration_deferrals += deferrals;
+        m.demotions_issued += demotions_issued;
+        m.demotions_polled += demotions_polled;
+    }
+
+    /// (launched, landed, budget-deferrals) migration totals.
+    pub fn migration_totals(&self) -> (u64, u64, u64) {
+        let m = self.inner.lock().unwrap();
+        (m.migrations_launched, m.migrations_landed, m.migration_deferrals)
+    }
+
+    /// (issued, polled-in) asynchronous demotion totals: issued counts
+    /// evictions whose gpu bytes freed instantly; polled counts their
+    /// writebacks landing on a *later* step — both non-zero proves the
+    /// serving path never waited a demotion out.
+    pub fn demotion_totals(&self) -> (u64, u64) {
+        let m = self.inner.lock().unwrap();
+        (m.demotions_issued, m.demotions_polled)
     }
 
     /// Highest number of requests decoding concurrently in any step.
@@ -254,5 +295,16 @@ mod tests {
         m.record_tiering(16, 8, 32);
         assert_eq!(m.tiering_totals(), (48, 8, 32));
         assert_eq!(m.peak_occupancy(), 0.0);
+    }
+
+    #[test]
+    fn migration_counters() {
+        let m = ServeMetrics::new();
+        assert_eq!(m.migration_totals(), (0, 0, 0));
+        assert_eq!(m.demotion_totals(), (0, 0));
+        m.record_migrations(3, 1, 1, 1, 0);
+        m.record_migrations(0, 2, 0, 0, 1);
+        assert_eq!(m.migration_totals(), (3, 3, 1));
+        assert_eq!(m.demotion_totals(), (1, 1));
     }
 }

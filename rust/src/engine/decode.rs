@@ -743,6 +743,39 @@ impl Engine {
         (add, 0)
     }
 
+    /// Align the session's device window to the store's *settled* resident
+    /// suffix, with slack tuned to the store's asynchronous migrations:
+    ///
+    /// * normally the engine may run up to one residency block ahead of
+    ///   `backed` (the window grows a token per step for free; the store's
+    ///   accounting catches up on the next sync) — forcing exact alignment
+    ///   every step would thrash the window against in-flight growth;
+    /// * but when `demotion_inflight` is set, the store has already
+    ///   *released* gpu bytes under part of this window (an eviction's
+    ///   async writeback is still on the link), so the engine must shed
+    ///   the unbacked rows **this** step — keeping them would double-count
+    ///   the gpu budget against whichever promotion reused those bytes.
+    ///
+    /// Returns the (promoted, demoted) token counts of the alignment, or
+    /// (0, 0) when the window was already within slack.
+    pub fn sync_residency(
+        &self,
+        sess: &mut DecodeSession,
+        backed: usize,
+        demotion_inflight: bool,
+    ) -> (usize, usize) {
+        let cur = sess.resident_tokens();
+        let slack = match (&sess.resident, demotion_inflight) {
+            (Some(g), false) => g.block_tokens,
+            _ => 0,
+        };
+        if backed > cur || cur > backed + slack {
+            self.set_resident_target(sess, backed)
+        } else {
+            (0, 0)
+        }
+    }
+
     /// Prefill `ids` (row-major `[n_seqs][prompt]`, padded per request) and
     /// return a [`DecodeSession`] ready for step-wise decoding.  This is the
     /// admission half of the continuous-batching loop; whole-batch

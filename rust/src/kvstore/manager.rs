@@ -1,61 +1,43 @@
-//! Tier migration: moving a block's bytes between pools over the link.
+//! Tier pools, the migration link, and pinned staging — the resource layer
+//! under the [`MigrationEngine`](super::MigrationEngine).
 //!
-//! Migrations are modelled the way the engine models every other copy: the
-//! bytes ride a [`Link`] (so they take wall-clock time and show up in link
-//! stats) and the host side stages through the [`PinnedPool`] — whose
-//! buffers are charged against the *pinned tier's own* [`MemPool`], so
-//! staging occupancy and pinned-resident blocks compete for the same
-//! capacity, exactly as on a real machine.
+//! The manager owns the three tier [`BlockPool`]s, the [`Link`] migrations
+//! ride, and the [`PinnedPool`] staging freelist — whose buffers are
+//! charged against the *pinned tier's own* [`MemPool`], so staging
+//! occupancy and pinned-resident blocks compete for the same capacity,
+//! exactly as on a real machine.
 //!
-//! Promotions (towards the GPU) are **asynchronous**: [`TierManager::begin_migration`]
-//! grabs the destination reservation and puts the transfer in flight;
-//! the caller completes it later with [`TierManager::finish_migration`]
-//! once [`PendingMigration::is_done`].  Demotions run synchronously on the
-//! caller via [`TierManager::migrate_sync`] — bounded by one block's link
-//! time; making them asynchronous too is a ROADMAP follow-on (it becomes
-//! necessary once a disk tier adds real writeback).
+//! Scheduling — and all counting — lives one layer up: the migration
+//! engine decides *when* bytes move (queued → staged → in-flight →
+//! landed, under the per-step link-byte budget); this layer only answers
+//! "reserve these bytes in that tier".  PR 2's `migrate_sync`
+//! — a blocking link wait on the caller, used by the old eviction path —
+//! is gone with the serving loop's last synchronous migration.
 
-use crate::memory::{MemPool, PoolGuard};
-use crate::transfer::{Link, LinkConfig, PinnedPool, Priority, TransferHandle};
+use crate::memory::MemPool;
+use crate::transfer::{Link, LinkConfig, PinnedPool};
 
 use super::block::{BlockPool, Tier};
 
-/// An in-flight block migration: destination reservation already held,
-/// bytes still on the link, staging buffer pinned until completion.
-pub struct PendingMigration {
-    to: Tier,
-    handle: TransferHandle,
-    guard: PoolGuard,
-    staging: Vec<f32>,
-}
-
-impl PendingMigration {
-    /// Destination tier of this migration.
-    pub fn to(&self) -> Tier {
-        self.to
-    }
-
-    /// Non-blocking: has the transfer landed?
-    pub fn is_done(&self) -> bool {
-        self.handle.is_done()
-    }
-}
-
-/// Aggregate migration counters.
+/// Aggregate migration-traffic counters — a view derived from the
+/// [`MigrationEngine`](super::MigrationEngine)'s lifecycle stats (one
+/// counter, two lenses: the engine tracks the lifecycle, this names the
+/// link-traffic slice of it).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct TierStats {
+    /// Migrations put on the link.
     pub migrations: u64,
+    /// Wire bytes put on the link (post-quantization widths).
     pub migrated_bytes: u64,
 }
 
-/// Owns the three tier pools and the migration link.
+/// Owns the three tier pools, the migration link, and pinned staging.
 pub struct TierManager {
     gpu: BlockPool,
     pinned: BlockPool,
     dram: BlockPool,
     link: Link,
     staging: PinnedPool,
-    stats: TierStats,
 }
 
 impl TierManager {
@@ -69,7 +51,6 @@ impl TierManager {
             dram: BlockPool::new(Tier::CpuDram, dram_bytes),
             link: Link::new(link),
             staging: PinnedPool::with_accounting(pinned_mem),
-            stats: TierStats::default(),
         }
     }
 
@@ -81,10 +62,6 @@ impl TierManager {
         }
     }
 
-    pub fn stats(&self) -> TierStats {
-        self.stats
-    }
-
     pub fn link(&self) -> &Link {
         &self.link
     }
@@ -94,50 +71,8 @@ impl TierManager {
     }
 
     /// Reserve `bytes` in `tier`; `None` when the tier is full.
-    pub fn grab(&self, tier: Tier, bytes: u64) -> Option<PoolGuard> {
+    pub fn grab(&self, tier: Tier, bytes: u64) -> Option<crate::memory::PoolGuard> {
         self.pool(tier).grab(bytes)
-    }
-
-    /// Start moving a block of `bytes` into `to`: reserve the destination,
-    /// pin a staging buffer, put the bytes on the link.  `None` when the
-    /// destination tier is full (the caller evicts and retries).  The
-    /// source reservation stays with the caller until it swaps guards in
-    /// [`Self::finish_migration`]'s result.
-    pub fn begin_migration(
-        &mut self,
-        to: Tier,
-        bytes: u64,
-        priority: Priority,
-    ) -> Option<PendingMigration> {
-        let guard = self.pool(to).grab(bytes)?;
-        let n = (bytes / 4) as usize;
-        let staging = self.staging.get(n);
-        let handle = self.link.submit_timing(n, priority);
-        self.stats.migrations += 1;
-        self.stats.migrated_bytes += bytes;
-        Some(PendingMigration { to, handle, guard, staging })
-    }
-
-    /// Complete a migration (blocking if the transfer is still in flight);
-    /// returns the destination reservation for the caller to install.
-    pub fn finish_migration(&mut self, pm: PendingMigration) -> (Tier, PoolGuard) {
-        let PendingMigration { to, handle, guard, staging } = pm;
-        handle.wait();
-        self.staging.put(staging);
-        (to, guard)
-    }
-
-    /// Synchronous host-side move timing for `bytes` (demotion path):
-    /// stage through the pinned pool and wait the link out.  Guard shuffling
-    /// is the caller's job (it owns both tiers' reservations).
-    pub fn migrate_sync(&mut self, bytes: u64) {
-        let n = (bytes / 4) as usize;
-        let staging = self.staging.get(n);
-        let handle = self.link.submit_timing(n, Priority::Normal);
-        handle.wait();
-        self.staging.put(staging);
-        self.stats.migrations += 1;
-        self.stats.migrated_bytes += bytes;
     }
 }
 
@@ -150,49 +85,35 @@ mod tests {
     }
 
     #[test]
-    fn async_migration_moves_reservation() {
-        let mut m = mgr();
-        let src = m.grab(Tier::CpuDram, 4096).unwrap();
-        let pm = m
-            .begin_migration(Tier::GpuHbm, 4096, Priority::High)
-            .expect("gpu tier has room");
-        assert_eq!(m.pool(Tier::GpuHbm).used(), 4096, "destination reserved up front");
-        let (to, guard) = m.finish_migration(pm);
-        assert_eq!(to, Tier::GpuHbm);
-        drop(src); // caller swaps: source reservation released...
-        assert_eq!(m.pool(Tier::CpuDram).used(), 0);
-        assert_eq!(guard.bytes(), 4096); // ...destination held by the new guard
-        assert_eq!(m.stats().migrations, 1);
-        assert_eq!(m.stats().migrated_bytes, 4096);
+    fn grab_reserves_and_releases_per_tier() {
+        let m = mgr();
+        let g = m.grab(Tier::GpuHbm, 4096).unwrap();
+        assert_eq!(m.pool(Tier::GpuHbm).used(), 4096);
+        assert_eq!(m.pool(Tier::Pinned).used(), 0);
+        drop(g);
+        assert_eq!(m.pool(Tier::GpuHbm).used(), 0);
     }
 
     #[test]
-    fn begin_migration_fails_when_destination_full() {
-        let mut m = TierManager::new(4096, 1 << 20, 1 << 20, LinkConfig::unthrottled());
+    fn grab_fails_when_tier_full() {
+        let m = TierManager::new(4096, 1 << 20, 1 << 20, LinkConfig::unthrottled());
         let _held = m.grab(Tier::GpuHbm, 4096).unwrap();
-        assert!(m.begin_migration(Tier::GpuHbm, 4096, Priority::High).is_none());
+        assert!(m.grab(Tier::GpuHbm, 4096).is_none());
     }
 
     #[test]
     fn staging_charges_the_pinned_tier() {
-        let mut m = mgr();
-        // a migration's staging buffer is pinned-accounted: after the first
-        // migration the pinned pool has grown by the staged bytes even
-        // though no *block* lives there
-        m.migrate_sync(8192);
+        let m = mgr();
+        // a staging buffer is pinned-accounted: after the first get the
+        // pinned pool has grown by the staged bytes even though no *block*
+        // lives there
+        let buf = m.staging().get(2048);
         assert!(
             m.pool(Tier::Pinned).used() >= 8192,
             "staging not pinned-accounted: {}",
             m.pool(Tier::Pinned).used()
         );
         assert_eq!(m.pool(Tier::Pinned).mem().name(), "pinned");
-    }
-
-    #[test]
-    fn migration_rides_the_link() {
-        let mut m = mgr();
-        m.migrate_sync(4096);
-        assert_eq!(m.link().stats().total_bytes(), 4096);
-        assert_eq!(m.link().stats().total_transfers(), 1);
+        m.staging().put(buf);
     }
 }

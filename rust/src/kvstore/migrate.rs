@@ -1,0 +1,490 @@
+//! The unified asynchronous migration engine.
+//!
+//! Every byte that crosses a tier boundary — promotion, demotion, prefetch
+//! — now moves through **one lifecycle**:
+//!
+//! ```text
+//!   queued ──▶ staged ──▶ in-flight ──▶ landed
+//!   (dest      (staging    (bytes on     (polled by the store,
+//!    reserved)  pinned)     the link)      guard installed)
+//! ```
+//!
+//! * **Queued** — the destination reservation is held (so capacity
+//!   decisions are made at request time, when the store can still evict),
+//!   but no staging buffer is pinned and nothing rides the link.
+//! * **Staged** — a pinned staging buffer is charged against the pinned
+//!   tier; transient: [`MigrationEngine::pump`] stages and launches in one
+//!   motion, bounded by the per-step **link-byte budget**.
+//! * **In-flight** — the wire bytes ride the [`Link`](crate::transfer::Link)
+//!   ([`Priority::High`] for demand promotions, `Normal` for prefetch and
+//!   demotions, so urgent traffic overtakes speculative traffic).
+//! * **Landed** — [`MigrationEngine::poll`] drains finished transfers and
+//!   hands the destination guards back to the store, which installs them.
+//!
+//! Nothing in this module ever blocks on the link.  Even teardown
+//! ([`MigrationEngine::finish`], the sequence-release path) just parks an
+//! in-flight transfer on a drain list that later polls sweep.  The serving
+//! loop only ever calls [`MigrationEngine::pump`] /
+//! [`MigrationEngine::poll`] — PR 2's `migrate_sync` (one block's link
+//! wait per eviction, on the step loop's critical path) is gone.
+//!
+//! Wire width: migrations charge `wire_elem_bytes` per f32 element on the
+//! link (4.0 plain, 0.625 with int4 wire quantization), while tier
+//! reservations always hold the full storage bytes — quantization shrinks
+//! traffic, not occupancy.
+
+use std::collections::VecDeque;
+
+use crate::memory::PoolGuard;
+use crate::transfer::{LinkConfig, Priority, TransferHandle};
+
+use super::block::{BlockId, Tier};
+use super::manager::{TierManager, TierStats};
+
+/// Identifier of one migration through its whole lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct MigrationId(u64);
+
+impl MigrationId {
+    #[cfg(test)]
+    pub(crate) fn test_id(n: u64) -> MigrationId {
+        MigrationId(n)
+    }
+}
+
+/// Why a migration was requested; decides link priority and pump order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MigrationClass {
+    /// Demand promotion: a group needs this block resident for its next
+    /// step.  Launched first, rides the link at high priority.
+    Promote,
+    /// Eviction writeback.  Launched before prefetch — a stuck demotion
+    /// pins a lower-tier reservation the store already committed to.
+    Demote,
+    /// Speculative promotion issued by the
+    /// [`Prefetcher`](super::Prefetcher) ahead of need.  Launched last.
+    Prefetch,
+}
+
+impl MigrationClass {
+    fn rank(self) -> u8 {
+        match self {
+            MigrationClass::Promote => 0,
+            MigrationClass::Demote => 1,
+            MigrationClass::Prefetch => 2,
+        }
+    }
+
+    fn priority(self) -> Priority {
+        match self {
+            MigrationClass::Promote => Priority::High,
+            MigrationClass::Demote | MigrationClass::Prefetch => Priority::Normal,
+        }
+    }
+}
+
+/// Aggregate lifecycle counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MigrationStats {
+    /// Migrations accepted into the queue (destination reserved).
+    pub requested: u64,
+    /// Migrations staged + put on the link.
+    pub launched: u64,
+    /// Migrations whose transfer completed and was polled.
+    pub landed: u64,
+    /// Migrations torn down before landing (sequence released).
+    pub canceled: u64,
+    /// Pump passes that left work queued because the step's link-byte
+    /// budget was exhausted.
+    pub budget_deferrals: u64,
+    /// Wire bytes actually put on the link (post-quantization).
+    pub wire_bytes: u64,
+}
+
+/// A queued migration: destination reservation held, nothing launched.
+struct Queued {
+    id: MigrationId,
+    block: BlockId,
+    to: Tier,
+    wire_bytes: u64,
+    class: MigrationClass,
+    dest: PoolGuard,
+}
+
+/// An in-flight migration: staging pinned, bytes riding the link.
+struct InFlight {
+    id: MigrationId,
+    block: BlockId,
+    to: Tier,
+    dest: PoolGuard,
+    staging: Vec<f32>,
+    handle: TransferHandle,
+}
+
+/// A completed migration, ready for the store to install.
+pub struct Landed {
+    pub id: MigrationId,
+    pub block: BlockId,
+    pub to: Tier,
+    /// The destination-tier reservation, held since request time.
+    pub guard: PoolGuard,
+}
+
+/// One lifecycle for all tier traffic, scheduled against a per-step
+/// link-byte budget.  Owns the [`TierManager`] (pools + link + staging).
+pub struct MigrationEngine {
+    mgr: TierManager,
+    queued: VecDeque<Queued>,
+    inflight: Vec<InFlight>,
+    /// Canceled while in flight: the requester is gone, so the transfer is
+    /// drained opportunistically by [`MigrationEngine::poll`] — never
+    /// waited on — and its staging buffer / destination reservation are
+    /// reclaimed when the bytes stop moving.
+    draining: Vec<InFlight>,
+    next_id: u64,
+    /// Link bytes still grantable this step.
+    budget: u64,
+    /// Whether anything launched this step (progress guarantee for blocks
+    /// larger than the whole budget).
+    launched_this_step: bool,
+    wire_elem_bytes: f64,
+    stats: MigrationStats,
+}
+
+impl MigrationEngine {
+    pub fn new(
+        gpu_bytes: u64,
+        pinned_bytes: u64,
+        dram_bytes: u64,
+        link: LinkConfig,
+        wire_elem_bytes: f64,
+    ) -> Self {
+        assert!(wire_elem_bytes > 0.0, "wire_elem_bytes must be positive");
+        MigrationEngine {
+            mgr: TierManager::new(gpu_bytes, pinned_bytes, dram_bytes, link),
+            queued: VecDeque::new(),
+            inflight: Vec::new(),
+            draining: Vec::new(),
+            next_id: 1,
+            budget: 0,
+            launched_this_step: false,
+            wire_elem_bytes,
+            stats: MigrationStats::default(),
+        }
+    }
+
+    /// The tier pools / link / staging this engine migrates over.
+    pub fn tiers(&self) -> &TierManager {
+        &self.mgr
+    }
+
+    pub fn stats(&self) -> MigrationStats {
+        self.stats
+    }
+
+    /// The link-traffic lens on the lifecycle counters (migrations put on
+    /// the link and their wire bytes) — derived, never double-booked.
+    pub fn tier_stats(&self) -> TierStats {
+        TierStats { migrations: self.stats.launched, migrated_bytes: self.stats.wire_bytes }
+    }
+
+    /// Bytes `storage_bytes` of f32 storage put on the wire.
+    pub fn wire_bytes_of(&self, storage_bytes: u64) -> u64 {
+        ((storage_bytes / 4) as f64 * self.wire_elem_bytes).ceil() as u64
+    }
+
+    /// Migrations anywhere in the lifecycle (queued or in flight).
+    pub fn open_count(&self) -> usize {
+        self.queued.len() + self.inflight.len()
+    }
+
+    /// Canceled migrations still vacating their reservations (reclaimed by
+    /// the next [`MigrationEngine::poll`] once their transfer stops).
+    pub fn draining_count(&self) -> usize {
+        self.draining.len()
+    }
+
+    /// Request a migration of `block` into `to`: reserves the destination
+    /// immediately (so the caller's capacity/eviction logic sees the true
+    /// tier state) and queues the transfer for a budgeted launch.  `None`
+    /// when the destination tier is full — the caller evicts and retries.
+    pub fn request(
+        &mut self,
+        block: BlockId,
+        to: Tier,
+        storage_bytes: u64,
+        class: MigrationClass,
+    ) -> Option<MigrationId> {
+        let dest = self.mgr.grab(to, storage_bytes)?;
+        let id = MigrationId(self.next_id);
+        self.next_id += 1;
+        self.queued.push_back(Queued {
+            id,
+            block,
+            to,
+            wire_bytes: self.wire_bytes_of(storage_bytes),
+            class,
+            dest,
+        });
+        self.stats.requested += 1;
+        Some(id)
+    }
+
+    /// Open a new scheduling step with `budget_bytes` of link grant.
+    /// Unused budget does not carry over — the budget models "what the
+    /// link can absorb alongside this step's decode traffic", which resets
+    /// every step.
+    pub fn begin_step(&mut self, budget_bytes: u64) {
+        self.budget = budget_bytes;
+        self.launched_this_step = false;
+    }
+
+    /// Stage + launch queued migrations in class order (demand promotions,
+    /// then demotions, then prefetch; FIFO within a class) until the
+    /// step's budget runs out.  A block wider than the whole budget still
+    /// launches when it is first in line and nothing launched yet this
+    /// step, so oversized blocks cannot wedge the queue.  Returns
+    /// migrations launched.
+    pub fn pump(&mut self) -> usize {
+        let mut launched = 0;
+        loop {
+            let Some(best) = self
+                .queued
+                .iter()
+                .enumerate()
+                .min_by_key(|(pos, q)| (q.class.rank(), q.id, *pos))
+                .map(|(pos, _)| pos)
+            else {
+                break;
+            };
+            let affordable = self.budget > 0
+                && (self.queued[best].wire_bytes <= self.budget || !self.launched_this_step);
+            if !affordable {
+                self.stats.budget_deferrals += 1;
+                break;
+            }
+            let q = self.queued.remove(best).expect("index from enumerate");
+            // staged: pin the wire-sized staging buffer...
+            let n = (q.wire_bytes.div_ceil(4)) as usize;
+            let staging = self.mgr.staging().get(n);
+            // ...and in-flight: the wire bytes ride the link
+            let handle = self.mgr.link().submit_timing(n, q.class.priority());
+            self.budget = self.budget.saturating_sub(q.wire_bytes);
+            self.launched_this_step = true;
+            self.stats.launched += 1;
+            self.stats.wire_bytes += q.wire_bytes;
+            self.inflight.push(InFlight {
+                id: q.id,
+                block: q.block,
+                to: q.to,
+                dest: q.dest,
+                staging,
+                handle,
+            });
+            launched += 1;
+        }
+        launched
+    }
+
+    /// Drain every landed migration (non-blocking).  Staging buffers go
+    /// back to the pinned pool; destination guards go to the caller.
+    /// Canceled in-flight migrations drain here too (resources reclaimed,
+    /// nothing returned — their requester is gone).
+    pub fn poll(&mut self) -> Vec<Landed> {
+        let mut i = 0;
+        while i < self.draining.len() {
+            if self.draining[i].handle.is_done() {
+                let fin = self.draining.swap_remove(i);
+                fin.handle.wait(); // already done: returns immediately
+                self.mgr.staging().put(fin.staging);
+                // fin.dest drops: the destination reservation rolls back
+            } else {
+                i += 1;
+            }
+        }
+        let mut landed = Vec::new();
+        let mut i = 0;
+        while i < self.inflight.len() {
+            if self.inflight[i].handle.is_done() {
+                let fin = self.inflight.swap_remove(i);
+                fin.handle.wait(); // already done: returns immediately
+                self.mgr.staging().put(fin.staging);
+                self.stats.landed += 1;
+                landed.push(Landed { id: fin.id, block: fin.block, to: fin.to, guard: fin.dest });
+            } else {
+                i += 1;
+            }
+        }
+        landed
+    }
+
+    /// Tear down one migration, whatever its phase — without blocking: a
+    /// queued migration is dropped on the spot (destination reservation
+    /// released); an in-flight one is parked on the drain list and its
+    /// staging buffer / destination reservation are reclaimed by a later
+    /// [`MigrationEngine::poll`] once the bytes stop moving.  The
+    /// sequence-release path calls this, so retirement never waits on the
+    /// link either.
+    pub fn finish(&mut self, id: MigrationId) {
+        if let Some(pos) = self.queued.iter().position(|q| q.id == id) {
+            drop(self.queued.remove(pos));
+            self.stats.canceled += 1;
+            return;
+        }
+        if let Some(pos) = self.inflight.iter().position(|f| f.id == id) {
+            self.draining.push(self.inflight.swap_remove(pos));
+            self.stats.canceled += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const BB: u64 = 4096;
+
+    fn engine(link: LinkConfig) -> MigrationEngine {
+        MigrationEngine::new(4 * BB, 16 * BB, 16 * BB, link, 4.0)
+    }
+
+    fn bid(seq: u64, idx: usize) -> BlockId {
+        BlockId { seq, idx }
+    }
+
+    #[test]
+    fn lifecycle_queued_launched_landed() {
+        let mut e = engine(LinkConfig::unthrottled());
+        let id = e
+            .request(bid(1, 0), Tier::GpuHbm, BB, MigrationClass::Promote)
+            .expect("gpu has room");
+        assert_eq!(e.tiers().pool(Tier::GpuHbm).used(), BB, "destination reserved up front");
+        assert_eq!(e.open_count(), 1);
+        assert_eq!(e.poll().len(), 0, "nothing launched yet");
+        e.begin_step(u64::MAX);
+        assert_eq!(e.pump(), 1);
+        // unthrottled link lands near-instantly on the worker thread
+        let landed = poll_until(&mut e, 1);
+        assert_eq!(landed[0].id, id);
+        assert_eq!(landed[0].to, Tier::GpuHbm);
+        assert_eq!(landed[0].guard.bytes(), BB);
+        assert_eq!(e.open_count(), 0);
+        let s = e.stats();
+        assert_eq!((s.requested, s.launched, s.landed), (1, 1, 1));
+    }
+
+    fn poll_until(e: &mut MigrationEngine, want: usize) -> Vec<Landed> {
+        let mut out = Vec::new();
+        for _ in 0..500 {
+            out.extend(e.poll());
+            if out.len() >= want {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        out
+    }
+
+    #[test]
+    fn request_fails_when_destination_full() {
+        let mut e = MigrationEngine::new(BB, BB, BB, LinkConfig::unthrottled(), 4.0);
+        let _held = e.tiers().grab(Tier::GpuHbm, BB).unwrap();
+        assert!(e.request(bid(1, 0), Tier::GpuHbm, BB, MigrationClass::Promote).is_none());
+        assert_eq!(e.stats().requested, 0);
+    }
+
+    #[test]
+    fn budget_gates_launches_per_step() {
+        let mut e = engine(LinkConfig::unthrottled());
+        for i in 0..3 {
+            e.request(bid(1, i), Tier::GpuHbm, BB, MigrationClass::Promote).unwrap();
+        }
+        // budget fits exactly one block's wire bytes per step
+        e.begin_step(BB);
+        assert_eq!(e.pump(), 1, "one launch per budget grant");
+        assert_eq!(e.stats().budget_deferrals, 1);
+        e.begin_step(BB);
+        assert_eq!(e.pump(), 1);
+        e.begin_step(BB);
+        assert_eq!(e.pump(), 1);
+        assert_eq!(e.stats().launched, 3);
+        assert_eq!(poll_until(&mut e, 3).len(), 3);
+    }
+
+    #[test]
+    fn oversized_block_still_makes_progress() {
+        let mut e = engine(LinkConfig::unthrottled());
+        e.request(bid(1, 0), Tier::GpuHbm, BB, MigrationClass::Promote).unwrap();
+        e.begin_step(10); // far below one block's wire bytes
+        assert_eq!(e.pump(), 1, "head of line launches even over budget");
+        e.request(bid(1, 1), Tier::GpuHbm, BB, MigrationClass::Promote).unwrap();
+        assert_eq!(e.pump(), 0, "budget now exhausted for this step");
+    }
+
+    #[test]
+    fn zero_budget_launches_nothing() {
+        let mut e = engine(LinkConfig::unthrottled());
+        e.request(bid(1, 0), Tier::GpuHbm, BB, MigrationClass::Promote).unwrap();
+        e.begin_step(0);
+        assert_eq!(e.pump(), 0);
+        assert_eq!(e.open_count(), 1);
+    }
+
+    #[test]
+    fn demand_promotions_launch_before_prefetch() {
+        let mut e = engine(LinkConfig::unthrottled());
+        let pf = e.request(bid(1, 0), Tier::GpuHbm, BB, MigrationClass::Prefetch).unwrap();
+        let pr = e.request(bid(2, 0), Tier::GpuHbm, BB, MigrationClass::Promote).unwrap();
+        e.begin_step(BB); // budget for one launch
+        assert_eq!(e.pump(), 1);
+        let landed = poll_until(&mut e, 1);
+        assert_eq!(landed[0].id, pr, "demand promotion overtakes older prefetch");
+        e.begin_step(BB);
+        assert_eq!(e.pump(), 1);
+        assert_eq!(poll_until(&mut e, 1)[0].id, pf);
+    }
+
+    #[test]
+    fn wire_quant_shrinks_link_bytes_not_reservations() {
+        let mut e = MigrationEngine::new(
+            4 * BB,
+            16 * BB,
+            16 * BB,
+            LinkConfig::unthrottled(),
+            0.625, // int4 wire
+        );
+        e.request(bid(1, 0), Tier::GpuHbm, BB, MigrationClass::Promote).unwrap();
+        assert_eq!(e.tiers().pool(Tier::GpuHbm).used(), BB, "occupancy stays full-width");
+        e.begin_step(u64::MAX);
+        e.pump();
+        poll_until(&mut e, 1);
+        let wire = e.wire_bytes_of(BB);
+        assert_eq!(wire, BB / 4 * 5 / 8, "0.625 B per f32 element");
+        assert_eq!(e.stats().wire_bytes, wire);
+        assert_eq!(e.tiers().link().stats().total_bytes(), wire.div_ceil(4) * 4);
+    }
+
+    #[test]
+    fn finish_tears_down_any_phase_without_blocking() {
+        let mut e = engine(LinkConfig::unthrottled());
+        let a = e.request(bid(1, 0), Tier::GpuHbm, BB, MigrationClass::Promote).unwrap();
+        let b = e.request(bid(1, 1), Tier::GpuHbm, BB, MigrationClass::Promote).unwrap();
+        e.begin_step(BB);
+        e.pump(); // a launches, b stays queued
+        e.finish(a); // in flight: parked on the drain list, no wait
+        e.finish(b); // queued: reservation released on the spot
+        assert_eq!(e.open_count(), 0);
+        assert_eq!(e.stats().canceled, 2);
+        // a's destination reservation drains via poll once the transfer
+        // stops moving — never via a blocking wait
+        for _ in 0..500 {
+            let drained = e.poll();
+            assert!(drained.is_empty(), "canceled migrations must not be handed out");
+            if e.tiers().pool(Tier::GpuHbm).used() == 0 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(e.tiers().pool(Tier::GpuHbm).used(), 0, "both reservations released");
+    }
+}

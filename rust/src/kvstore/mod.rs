@@ -1,50 +1,74 @@
-//! Tiered, block-granular KV store with recompute-aware eviction and
-//! asynchronous prefetch.
+//! Tiered, block-granular KV store with one asynchronous migration
+//! lifecycle for all tier traffic.
 //!
-//! PR 1's serving loop budgeted KV as one flat per-batch reservation: a
-//! session either fit the host budget or queued.  This subsystem turns
-//! that single counter into a managed, three-tier store — the production
-//! layout the KV-cache management literature describes — and generalises
-//! KVPR's Eq. (11) from "how to fetch the cache this step" into "what to
-//! keep resident at all":
+//! PR 1's serving loop budgeted KV as one flat per-batch reservation; PR 2
+//! turned that into a managed three-tier store but still blocked the
+//! serving thread on every gpu-tier eviction.  This revision finishes the
+//! job KVPR's core claim demands — *the GPU never idles waiting on the
+//! link* — by moving promotions, demotions and prefetch through a single
+//! engine with one lifecycle:
+//!
+//! ```text
+//!   queued ──▶ staged ──▶ in-flight ──▶ landed
+//! ```
 //!
 //! * [`BlockPool`] / [`Tier`] — fixed-size token blocks, one byte-accounted
 //!   reservation each, across gpu-hbm / pinned / cpu-dram pools
 //!   ([`crate::memory::MemPool`] underneath).
-//! * [`TierManager`] — migrates blocks between tiers over a
-//!   [`Link`](crate::transfer::Link), staging through the pinned-accounted
-//!   [`PinnedPool`](crate::transfer::PinnedPool).
+//! * [`TierManager`] — the resource layer: tier pools, the migration
+//!   [`Link`](crate::transfer::Link), and the pinned-accounted
+//!   [`PinnedPool`](crate::transfer::PinnedPool) staging freelist.
+//! * [`MigrationEngine`] — the scheduler: every migration reserves its
+//!   destination at request time, then waits in the queue until the
+//!   serving loop grants a per-step **link-byte budget**; launches ride
+//!   the link in class order ([`MigrationClass`]: demand promotions, then
+//!   demotions, then prefetch) and completions are *polled*, never waited
+//!   for, on the serving path.
 //! * [`KvStore`] — placement, residency and reclamation: resident gpu
 //!   blocks form a *suffix* of each sequence's tokens (the newest KV), so
 //!   they shrink the per-step H2D transfer term the planner sees
-//!   ([`Planner::plan_batch_tiered`](crate::scheduler::Planner::plan_batch_tiered));
-//!   admission that would backpressure may instead drop prefix KV and keep
-//!   the X activations, trading stored bytes for recompute work.
-//! * [`Prefetcher`] — bounded-depth asynchronous promotion of a group's
-//!   blocks ahead of its decode step.
+//!   ([`Planner::plan_batch_tiered`](crate::scheduler::Planner::plan_batch_tiered)).
+//!   Evictions issue **asynchronous demotions**: the victim's gpu bytes
+//!   free at issuance and the writeback lands later, so a full gpu tier
+//!   never stalls the step loop; a victim then sits out a configurable
+//!   cool-down before re-promotion (anti-thrash hysteresis).  Admission
+//!   that would backpressure may instead drop prefix KV and keep the X
+//!   activations, trading stored bytes for recompute work.  The suffix
+//!   invariant itself lives in one place — the `suffix` module's
+//!   `SuffixRuns` iterator — which every placement walk shares.
+//! * [`Prefetcher`] — bounded-depth speculative promotion of a group's
+//!   blocks ahead of its decode step, as [`MigrationClass::Prefetch`]
+//!   traffic through the same engine.
 //! * [`EvictPolicy`] — pluggable victim selection: [`Lru`] recency vs the
 //!   [`RecomputeAware`] refill-cost score driven by the profiler's
-//!   [`CostModel`](crate::scheduler::CostModel).
+//!   [`CostModel`](crate::scheduler::CostModel); under int4 wire
+//!   quantization both the migration traffic and the refill scoring use
+//!   the quantized element width.
 //! * [`sim`] — deterministic analytic comparison of eviction strategies on
-//!   skewed reuse workloads (`simulate_eviction`), feeding
-//!   `BENCH_kvstore.json`.
+//!   skewed reuse workloads (`simulate_eviction`), including the async
+//!   demotion cost of a budgeted gpu tier, feeding `BENCH_kvstore.json`.
 //!
 //! The serving integration lives in
 //! [`ContinuousServer`](crate::coordinator::ContinuousServer): admission
-//! goes through [`KvStore::admit`] instead of hard backpressure, the
-//! prefetcher runs every event-loop step, and the engine mirrors the gpu
-//! tier as a device-resident KV suffix
-//! ([`Engine::set_resident_target`](crate::engine::Engine::set_resident_target)).
+//! goes through [`KvStore::admit`] instead of hard backpressure; each step
+//! the loop *polls* landed migrations, mirrors placement into the engine's
+//! device-resident suffix
+//! ([`Engine::sync_residency`](crate::engine::Engine::sync_residency)),
+//! queues prefetch, and grants the step's link-byte budget via
+//! [`KvStore::pump_migrations`].
 
 pub mod block;
 pub mod manager;
+pub mod migrate;
 pub mod policy;
 pub mod prefetch;
 pub mod sim;
 pub mod store;
+mod suffix;
 
 pub use block::{BlockId, BlockPool, Tier};
-pub use manager::{PendingMigration, TierManager, TierStats};
+pub use manager::{TierManager, TierStats};
+pub use migrate::{MigrationClass, MigrationEngine, MigrationId, MigrationStats};
 pub use policy::{BlockView, EvictKind, EvictPolicy, Lru, RecomputeAware};
 pub use prefetch::{PrefetchStats, Prefetcher};
 pub use sim::{simulate_eviction, EvictionSimConfig, EvictionSimReport, SimSeq};

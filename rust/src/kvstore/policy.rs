@@ -113,6 +113,22 @@ pub enum EvictKind {
 
 impl EvictKind {
     pub fn build(&self, cost: CostModel) -> Box<dyn EvictPolicy> {
+        self.build_wire(cost, false)
+    }
+
+    /// Build the policy with the migration wire width taken into account:
+    /// when `kv_quant_wire` is set, evicted-KV refills re-transfer at the
+    /// int4 wire width (0.625 B/elem instead of 4), so the scoring model's
+    /// transfer term shrinks by the same ratio the
+    /// [`MigrationEngine`](super::MigrationEngine) charges on the link —
+    /// the refill-cost comparison stays honest under quantization.
+    pub fn build_wire(&self, cost: CostModel, kv_quant_wire: bool) -> Box<dyn EvictPolicy> {
+        let cost = if kv_quant_wire {
+            let ratio = crate::kvcache::ELEM_BYTES_INT4_G64 / crate::kvcache::ELEM_BYTES_F32;
+            cost.with_kv_quant(ratio)
+        } else {
+            cost
+        };
         match self {
             EvictKind::Lru => Box::new(Lru),
             EvictKind::RecomputeAware => Box::new(RecomputeAware::new(cost)),
@@ -178,6 +194,50 @@ mod tests {
         let cs = p.refill_cost(&straddle);
         let co = p.refill_cost(&outside);
         assert!(ci < cs && cs < co, "{ci} {cs} {co}");
+    }
+
+    #[test]
+    fn wire_quant_shrinks_the_transfer_refill_side() {
+        // balanced costs: recomputing a block ≈ re-transferring it, so the
+        // full-width policy is near-indifferent...
+        let cost = CostModel {
+            recompute_per_token_s: 4e-7,
+            transfer_kv_per_token_s: 1e-6,
+            transfer_act_per_token_s: 5e-7,
+            gpu_overhead_s: 0.0,
+            link_latency_s: 0.0,
+        };
+        let plain = RecomputeAware::new(cost.clone());
+        let quant = EvictKind::RecomputeAware.build_wire(cost, true);
+        // a block beyond the split (pure re-transfer refill): int4 wire
+        // makes its refill 0.15625× the full-width score
+        let beyond = view(1, 2, 64, 0, 0);
+        let full = plain.refill_cost(&beyond);
+        // recompute the quantized score through the public surface: the
+        // boxed policy must now *prefer evicting* the transfer-refillable
+        // block over a recompute-refillable one of equal recency
+        let inside = view(2, 0, 0, 0, 64);
+        assert_eq!(
+            plain.victim(&[beyond, inside]),
+            1,
+            "full width: recompute side is cheaper to refill"
+        );
+        assert_eq!(
+            quant.victim(&[beyond, inside]),
+            0,
+            "int4 wire: the transfer side becomes the cheap refill"
+        );
+        let q = RecomputeAware::new(
+            CostModel {
+                recompute_per_token_s: 4e-7,
+                transfer_kv_per_token_s: 1e-6,
+                transfer_act_per_token_s: 5e-7,
+                gpu_overhead_s: 0.0,
+                link_latency_s: 0.0,
+            }
+            .with_kv_quant(0.15625),
+        );
+        assert!((q.refill_cost(&beyond) - full * 0.15625).abs() < 1e-12);
     }
 
     #[test]

@@ -1,12 +1,17 @@
-//! Asynchronous block prefetch: pull a group's blocks up-tier *ahead* of
-//! its decode step.
+//! Asynchronous block prefetch: queue a group's blocks for promotion
+//! *ahead* of its decode step.
 //!
-//! The serving loop calls [`Prefetcher::poll`] once per event-loop step to
-//! land finished promotions, then [`Prefetcher::pump`] per decode group to
-//! keep promotions in flight.  The prefetcher bounds in-flight work so a
-//! burst of groups cannot swamp the migration link with transfers that
-//! will be stale by the time they land.
+//! The prefetcher is a thin policy layer over the store's
+//! [`MigrationEngine`](super::MigrationEngine): it queues promotions with
+//! [`MigrationClass::Prefetch`] — launched after demand promotions and
+//! demotions when the serving loop grants the step's link-byte budget via
+//! [`KvStore::pump_migrations`] — and bounds the number of open
+//! migrations so a burst of groups cannot swamp the queue with transfers
+//! that will be stale by the time they land.  The serving loop calls
+//! [`Prefetcher::poll`] once per step to install finished migrations,
+//! then [`Prefetcher::pump`] per decode group to keep the queue fed.
 
+use super::migrate::MigrationClass;
 use super::store::KvStore;
 
 /// Per-prefetcher counters.
@@ -33,22 +38,41 @@ impl Prefetcher {
         self.stats
     }
 
-    /// Land every finished promotion; returns how many.
+    /// Install every landed migration; returns how many.
     pub fn poll(&mut self, store: &mut KvStore) -> usize {
-        let landed = store.complete_landed();
+        let landed = store.poll_landed();
         self.stats.landed += landed as u64;
         landed
     }
 
-    /// Keep up to `blocks` promotions moving for `seq`, respecting the
-    /// global in-flight bound.  Returns promotions issued now.
+    /// Keep up to `blocks` promotions queued for `seq`.  The run's *next*
+    /// extension is demand traffic ([`MigrationClass::Promote`]: launched
+    /// first, rides the link at high priority — the group needs it to
+    /// shrink its very next step's transfer); deeper lookahead blocks are
+    /// speculative [`MigrationClass::Prefetch`] and respect the global
+    /// open-migration bound.  The demand block is admitted even at zero
+    /// room as long as this group has nothing open itself, so one group's
+    /// queued prefetch backlog can never starve another group's next-step
+    /// residency (total open stays ≤ bound + one per group).  Returns
+    /// promotions queued now.
     pub fn pump(&mut self, store: &mut KvStore, seq: u64, blocks: usize) -> usize {
         let room = self.max_inflight.saturating_sub(store.pending_count());
-        if room == 0 {
-            self.stats.throttled += 1;
-            return 0;
+        let mut issued = 0;
+        if blocks > 0 && (room > 0 || store.pending_count_of(seq) == 0) {
+            issued = store.begin_promotions(seq, 1, MigrationClass::Promote);
         }
-        let issued = store.begin_promotions(seq, blocks.min(room));
+        // the demand walk finding nothing means the speculative walk would
+        // find nothing either (same break point) — skip the re-walk, which
+        // would also double-count a cool-down skip
+        if issued > 0 {
+            let spec = blocks.saturating_sub(1).min(room.saturating_sub(issued));
+            if spec > 0 {
+                issued += store.begin_promotions(seq, spec, MigrationClass::Prefetch);
+            }
+        }
+        if issued == 0 && room == 0 {
+            self.stats.throttled += 1;
+        }
         self.stats.issued += issued as u64;
         issued
     }
@@ -72,13 +96,15 @@ mod tests {
                 block_tokens: 16,
                 // slow enough that promotions stay in flight across polls
                 link: LinkConfig { bytes_per_sec: 50e3, latency_s: 0.0, chunk_bytes: 1 << 10 },
+                wire_elem_bytes: 4.0,
+                promote_cooldown: 0,
             },
             Box::new(Lru),
         )
     }
 
     #[test]
-    fn pump_bounds_inflight_depth() {
+    fn pump_bounds_open_depth() {
         let mut store = slow_store(8);
         store.admit(1, 8 * BB, 8).unwrap();
         store.touch(1, 128, 0); // all 8 blocks valid
@@ -96,6 +122,7 @@ mod tests {
         store.touch(1, 64, 0);
         let mut pf = Prefetcher::new(2);
         pf.pump(&mut store, 1, 4);
+        store.pump_migrations(u64::MAX); // grant link budget: queued → in flight
         // wait the slow link out, then land
         let mut landed = 0;
         for _ in 0..500 {
@@ -108,7 +135,7 @@ mod tests {
         assert_eq!(landed, 2);
         assert_eq!(store.pending_count(), 0);
         assert!(store.gpu_resident_tokens(1) > 0);
-        // freed depth lets the next pump issue again
+        // freed depth lets the next pump queue again
         assert!(pf.pump(&mut store, 1, 4) > 0);
         assert_eq!(pf.stats().landed, 2);
     }

@@ -15,6 +15,15 @@
 //! the decode throughput of [`Lru`](super::Lru) at equal admission
 //! schedules — the property `rust/benches/perf_hotpath.rs` tracks in
 //! `BENCH_kvstore.json`.
+//!
+//! With `gpu_bytes` set the sim adds the **resident-suffix tier model**
+//! mirroring the live store's asynchronous migrations: due sequences
+//! promote their suffix (fully overlapped prefetch), a full tier demotes
+//! run-start blocks through the policy, and each demotion charges the
+//! link its wire time but the wall only `demote_serial_frac` of it — the
+//! async-writeback residue.  Setting `demote_serial_frac = 1.0` recovers
+//! PR 2's synchronous `migrate_sync` eviction for comparison, which is
+//! how the tests pin that polling beats blocking at identical schedules.
 
 use crate::scheduler::{CostModel, SchedulePolicy, SplitSolver};
 
@@ -43,6 +52,17 @@ pub struct EvictionSimConfig {
     pub seqs: Vec<SimSeq>,
     /// Safety cap on simulated rounds.
     pub max_rounds: usize,
+    /// gpu tier capacity for the resident-suffix model; 0 disables it
+    /// (host-only reclamation, the PR 2 shape).
+    pub gpu_bytes: u64,
+    /// Wire-byte ratio on migrations (1.0 = full f32 width; 0.15625 under
+    /// int4 wire quantization).
+    pub wire_ratio: f64,
+    /// Fraction of a demotion's wire time the step loop cannot hide.
+    /// Asynchronous demotions overlap decode, so only a residue surfaces
+    /// as wall time; 1.0 recovers the old synchronous `migrate_sync`
+    /// model (the step loop waits the whole writeback out).
+    pub demote_serial_frac: f64,
 }
 
 impl EvictionSimConfig {
@@ -63,7 +83,19 @@ impl EvictionSimConfig {
             bytes_per_token,
             seqs,
             max_rounds: 2000,
+            gpu_bytes: 0,
+            wire_ratio: 1.0,
+            demote_serial_frac: 0.25,
         }
+    }
+
+    /// [`EvictionSimConfig::skewed_reuse`] with a gpu tier sized to ~40 %
+    /// of the workload: promotions/demotions flow through the policy and
+    /// the async demotion cost model becomes observable.
+    pub fn skewed_reuse_tiered(cost: CostModel) -> Self {
+        let mut cfg = Self::skewed_reuse(cost);
+        cfg.gpu_bytes = cfg.capacity_bytes * 4 / 10;
+        cfg
     }
 }
 
@@ -80,6 +112,11 @@ pub struct EvictionSimReport {
     pub link_busy_frac: f64,
     /// KV-drop reclamation events.
     pub evictions: u64,
+    /// gpu-tier demotions (resident-suffix model; 0 when `gpu_bytes` is 0).
+    pub demotions: u64,
+    /// Link seconds spent on demotion writebacks (async: only
+    /// `demote_serial_frac` of this surfaces as wall time).
+    pub demote_link_s: f64,
     pub peak_concurrency: usize,
     pub completed: usize,
 }
@@ -94,6 +131,8 @@ struct SeqState {
     dropped: usize,
     held_bytes: u64,
     last_use: u64,
+    /// gpu-resident suffix in tokens (resident-suffix model).
+    resident: usize,
 }
 
 /// Run the workload under `policy` and report throughput and reclamation.
@@ -112,6 +151,7 @@ pub fn simulate_eviction(cfg: &EvictionSimConfig, policy: &dyn EvictPolicy) -> E
             dropped: 0,
             held_bytes: 0,
             last_use: 0,
+            resident: 0,
         })
         .collect();
 
@@ -120,6 +160,8 @@ pub fn simulate_eviction(cfg: &EvictionSimConfig, policy: &dyn EvictPolicy) -> E
     let mut wall = 0.0f64;
     let mut link_busy = 0.0f64;
     let mut drops = 0u64;
+    let mut demotions = 0u64;
+    let mut demote_link = 0.0f64;
     let mut peak = 0usize;
 
     for round in 0..cfg.max_rounds {
@@ -167,6 +209,9 @@ pub fn simulate_eviction(cfg: &EvictionSimConfig, policy: &dyn EvictPolicy) -> E
                 let freed = block_bytes - block_bytes.div_ceil(3); // KV out, X kept
                 st[j].dropped += bt;
                 st[j].held_bytes = st[j].held_bytes.saturating_sub(freed);
+                // a grown dropped prefix can meet the resident suffix;
+                // the dropped tokens' gpu residency (if any) is void
+                st[j].resident = st[j].resident.min(st[j].s - st[j].dropped);
                 free += freed;
                 drops += 1;
             }
@@ -181,6 +226,81 @@ pub fn simulate_eviction(cfg: &EvictionSimConfig, policy: &dyn EvictPolicy) -> E
         }
         peak = peak.max(st.iter().filter(|s| s.admitted && !s.done).count());
 
+        // -- gpu tier: promote due sequences' suffixes, evict via policy ----
+        // Promotions ride the link fully overlapped (they are prefetched
+        // ahead of the step); demotions are asynchronous writebacks whose
+        // gpu bytes free at issuance — only `demote_serial_frac` of their
+        // wire time surfaces as wall time (1.0 recovers the synchronous
+        // eviction of PR 2).
+        if cfg.gpu_bytes > 0 {
+            let c = &cfg.cost;
+            // s is fixed until the decode section, so one solve per
+            // sequence serves every candidate slate this round
+            let round_split: Vec<usize> = st
+                .iter()
+                .map(|s| if s.admitted && !s.done { solver.solve(s.s, s.s).l } else { 0 })
+                .collect();
+            for i in 0..st.len() {
+                if !st[i].admitted || st[i].done || round % cfg.seqs[i].period != 0 {
+                    continue;
+                }
+                loop {
+                    // dropped-prefix tokens have no stored KV to promote —
+                    // the live store's promotion walk breaks at a dropped
+                    // block — so residency can never waive their recompute
+                    // floor
+                    let want = st[i]
+                        .s
+                        .saturating_sub(st[i].dropped)
+                        .saturating_sub(st[i].resident);
+                    if want == 0 {
+                        break;
+                    }
+                    let take = bt.min(want);
+                    let need = take as u64 * bpt;
+                    let gpu_used: u64 =
+                        st.iter().map(|s| s.resident as u64 * bpt).sum();
+                    if gpu_used + need <= cfg.gpu_bytes {
+                        st[i].resident += take;
+                        link_busy +=
+                            take as f64 * c.transfer_kv_per_token_s * cfg.wire_ratio;
+                        continue;
+                    }
+                    // full: demote another sequence's run-start block
+                    let mut cands: Vec<(usize, BlockView)> = Vec::new();
+                    for (j, s) in st.iter().enumerate() {
+                        if j == i || !s.admitted || s.done || s.resident == 0 {
+                            continue;
+                        }
+                        let start = s.s - s.resident;
+                        cands.push((
+                            j,
+                            BlockView {
+                                id: BlockId { seq: j as u64, idx: start / bt },
+                                tokens: bt.min(s.resident),
+                                start_token: start,
+                                seq_len: s.s,
+                                last_use: s.last_use,
+                                split_l: round_split[j],
+                            },
+                        ));
+                    }
+                    if cands.is_empty() {
+                        break; // nothing evictable: the suffix stays partial
+                    }
+                    let views: Vec<BlockView> = cands.iter().map(|(_, v)| *v).collect();
+                    let (j, _) = cands[policy.victim(&views)];
+                    let dropped_t = bt.min(st[j].resident);
+                    st[j].resident -= dropped_t;
+                    let wire = dropped_t as f64 * c.transfer_kv_per_token_s * cfg.wire_ratio;
+                    link_busy += wire;
+                    demote_link += wire;
+                    wall += c.link_latency_s + cfg.demote_serial_frac * wire;
+                    demotions += 1;
+                }
+            }
+        }
+
         // -- decode steps for every due sequence ----------------------------
         for i in 0..st.len() {
             if !st[i].admitted || st[i].done || round % cfg.seqs[i].period != 0 {
@@ -189,12 +309,15 @@ pub fn simulate_eviction(cfg: &EvictionSimConfig, policy: &dyn EvictPolicy) -> E
             clock += 1;
             st[i].last_use = clock;
             let s = st[i].s;
-            let l_star = solver.solve(s, s).l;
-            let l = l_star.max(st[i].dropped).min(s);
-            wall += solver.objective(l, s);
+            // the resident suffix leaves the transfer and recompute terms
+            let r = st[i].resident.min(s);
+            let s_eff = s - r;
+            let l_star = solver.solve(s_eff, s_eff).l;
+            let l = l_star.max(st[i].dropped.min(s_eff)).min(s_eff);
+            wall += solver.objective(l, s_eff);
             let c = &cfg.cost;
             link_busy += c.link_latency_s
-                + c.transfer_kv_per_token_s * (s - l) as f64
+                + c.transfer_kv_per_token_s * (s_eff - l) as f64
                 + c.transfer_act_per_token_s * l as f64;
             steps += 1;
             st[i].s += 1;
@@ -202,6 +325,7 @@ pub fn simulate_eviction(cfg: &EvictionSimConfig, policy: &dyn EvictPolicy) -> E
             if st[i].produced >= cfg.seqs[i].gen {
                 st[i].done = true;
                 st[i].held_bytes = 0;
+                st[i].resident = 0;
             }
         }
     }
@@ -214,6 +338,8 @@ pub fn simulate_eviction(cfg: &EvictionSimConfig, policy: &dyn EvictPolicy) -> E
         link_busy_s: link_busy,
         link_busy_frac: if wall > 0.0 { (link_busy / wall).min(1.0) } else { 0.0 },
         evictions: drops,
+        demotions,
+        demote_link_s: demote_link,
         peak_concurrency: peak,
         completed: st.iter().filter(|s| s.done).count(),
     }
@@ -274,5 +400,60 @@ mod tests {
         assert!(r.steps_per_s > 0.0);
         assert!(r.link_busy_frac > 0.0 && r.link_busy_frac <= 1.0);
         assert!(r.peak_concurrency >= 1);
+        assert_eq!(r.demotions, 0, "no gpu tier configured");
+        assert_eq!(r.demote_link_s, 0.0);
+    }
+
+    #[test]
+    fn async_demotion_beats_the_synchronous_eviction_model() {
+        // a tight gpu tier forces run-start demotions; the async model
+        // (gpu bytes free at issuance, writeback overlapped) must charge
+        // the link the full wire time but the wall only a residue — the
+        // synchronous PR 2 model (demote_serial_frac = 1.0, the step loop
+        // waits migrate_sync out) pays strictly more wall for the *same*
+        // step count
+        let cfg = EvictionSimConfig::skewed_reuse_tiered(cost());
+        let async_r = simulate_eviction(&cfg, &Lru);
+        assert!(async_r.demotions > 0, "the gpu tier must actually be contended");
+        assert!(async_r.demote_link_s > 0.0);
+        assert_eq!(async_r.completed, cfg.seqs.len());
+
+        let mut sync_cfg = cfg.clone();
+        sync_cfg.demote_serial_frac = 1.0;
+        let sync_r = simulate_eviction(&sync_cfg, &Lru);
+        assert_eq!(sync_r.steps, async_r.steps, "the cost model must not change the schedule");
+        assert_eq!(sync_r.demotions, async_r.demotions);
+        assert!(
+            sync_r.wall_s > async_r.wall_s,
+            "sync eviction must cost wall time: {} vs {}",
+            sync_r.wall_s,
+            async_r.wall_s
+        );
+        assert!(async_r.steps_per_s > sync_r.steps_per_s);
+    }
+
+    #[test]
+    fn residency_shrinks_step_cost() {
+        // with an ample gpu tier every suffix is fully resident: steps pay
+        // no transfer at all, so wall collapses versus the host-only run
+        let host_only = EvictionSimConfig::skewed_reuse(cost());
+        let mut tiered = host_only.clone();
+        tiered.gpu_bytes = tiered.capacity_bytes * 4; // everything fits
+        let a = simulate_eviction(&host_only, &Lru);
+        let b = simulate_eviction(&tiered, &Lru);
+        assert_eq!(a.steps, b.steps);
+        assert_eq!(b.demotions, 0, "ample tier never evicts");
+        assert!(b.wall_s < a.wall_s, "residency must cut step cost: {} vs {}", b.wall_s, a.wall_s);
+    }
+
+    #[test]
+    fn wire_quant_shrinks_demotion_traffic() {
+        let cfg = EvictionSimConfig::skewed_reuse_tiered(cost());
+        let mut quant = cfg.clone();
+        quant.wire_ratio = 0.15625; // int4 wire
+        let full = simulate_eviction(&cfg, &Lru);
+        let q = simulate_eviction(&quant, &Lru);
+        assert_eq!(full.demotions, q.demotions, "same schedule, thinner wire");
+        assert!(q.demote_link_s < full.demote_link_s * 0.16);
     }
 }

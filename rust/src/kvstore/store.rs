@@ -2,20 +2,27 @@
 //!
 //! [`KvStore`] tracks, for every admitted sequence (decode group), where
 //! each of its fixed-size token blocks lives — gpu-hbm, pinned or cpu-dram
-//! — with one byte-accounted reservation per block.  On top of placement it
-//! implements the three policy levers of the subsystem:
+//! — with one byte-accounted reservation per block.  All tier traffic
+//! (promotions, demotions, prefetch) moves through the embedded
+//! [`MigrationEngine`] under one queued → staged → in-flight → landed
+//! lifecycle, so **nothing on the serving path ever waits on the link**:
 //!
 //! * **Promotion** ([`KvStore::begin_promotions`] /
-//!   [`KvStore::complete_landed`]): pull a sequence's blocks up into the
-//!   gpu tier ahead of its next decode step, asynchronously over the
-//!   migration link.  Resident blocks form a *suffix* of the valid tokens
-//!   (the newest KV), so every step's H2D transfer shrinks by the resident
-//!   length — the "already-on-GPU blocks shrink the transfer term" input to
+//!   [`KvStore::poll_landed`]): pull a sequence's blocks up into the gpu
+//!   tier ahead of its next decode step.  Resident blocks form a *suffix*
+//!   of the valid tokens (the newest KV), so every step's H2D transfer
+//!   shrinks by the resident length — the "already-on-GPU blocks shrink
+//!   the transfer term" input to
 //!   [`Planner::plan_batch_tiered`](crate::scheduler::Planner::plan_batch_tiered).
 //! * **Eviction**: when the gpu tier is full, the configured
 //!   [`EvictPolicy`](super::EvictPolicy) picks a victim among the *lowest*
 //!   blocks of other sequences' resident runs (so residency stays a
-//!   suffix) and it is demoted one tier down.
+//!   suffix).  The demotion is issued **asynchronously**: the victim's gpu
+//!   bytes are released immediately (the host rows are canonical; the link
+//!   traffic models writeback) and the block is non-resident from that
+//!   instant — residency accounting and the planner both see the hole
+//!   before the writeback lands.  A freshly demoted block then sits out a
+//!   cool-down before it can be re-promoted (anti-thrash hysteresis).
 //! * **Recompute-aware reclamation** ([`KvStore::admit`] internally):
 //!   admission that would otherwise backpressure may instead *drop the KV
 //!   and keep the X activations* of prefix blocks — the Eq. (11) insight
@@ -23,16 +30,23 @@
 //!   recompute path, so their stored KV was dead weight.  The dropped
 //!   prefix becomes a planner floor (`l ≥ dropped`), reported by
 //!   [`KvStore::kv_dropped_tokens`].
+//!
+//! The residency invariant itself — which blocks are valid, how many
+//! tokens each covers, the top-down run order — lives in the `suffix`
+//! module's `SuffixRuns` iterator; every walker here is a thin loop over
+//! it.
 
 use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
-use crate::transfer::{LinkConfig, Priority};
+use crate::transfer::LinkConfig;
 
 use super::block::{BlockId, Tier};
-use super::manager::{PendingMigration, TierManager, TierStats};
+use super::manager::TierStats;
+use super::migrate::{MigrationClass, MigrationEngine, MigrationStats};
 use super::policy::{BlockView, EvictPolicy};
+use super::suffix::{BlockClass, BlockState, PendingRef, SuffixRuns};
 
 /// Construction parameters for a [`KvStore`].
 #[derive(Debug, Clone)]
@@ -48,6 +62,13 @@ pub struct KvStoreConfig {
     pub block_tokens: usize,
     /// Migration link shaping (PCIe-ish for promotions).
     pub link: LinkConfig,
+    /// Wire bytes per f32 element on migrations: 4.0 plain, 0.625 under
+    /// int4 wire quantization.  Tier occupancy always stays full-width.
+    pub wire_elem_bytes: f64,
+    /// Anti-thrash hysteresis: a block demoted within the last
+    /// `promote_cooldown` *serving steps* ([`KvStore::pump_migrations`]
+    /// calls) is not re-promoted.  0 disables the cool-down.
+    pub promote_cooldown: u64,
 }
 
 impl KvStoreConfig {
@@ -58,20 +79,10 @@ impl KvStoreConfig {
             dram_bytes: 256 << 20,
             block_tokens: 32,
             link: LinkConfig::with_bandwidth(30e6),
+            wire_elem_bytes: 4.0,
+            promote_cooldown: 4,
         }
     }
-}
-
-/// One block's placement state.
-struct BlockState {
-    tier: Tier,
-    /// The tier reservation; `None` only transiently mid-swap.
-    guard: Option<crate::memory::PoolGuard>,
-    /// KV bytes dropped (X kept): the block costs ⅓ and must be covered by
-    /// the recompute path when its tokens are needed.
-    kv_dropped: bool,
-    /// In-flight promotion, if any.
-    pending: Option<PendingMigration>,
 }
 
 /// Per-sequence bookkeeping.
@@ -85,13 +96,22 @@ struct SeqEntry {
     last_use: u64,
 }
 
+impl SeqEntry {
+    fn runs(&self, bt: usize) -> SuffixRuns<'_> {
+        SuffixRuns::new(&self.blocks, self.tokens, bt)
+    }
+}
+
 /// Aggregate store counters.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct StoreStats {
     pub admitted: u64,
     pub promotions_started: u64,
     pub promotions_landed: u64,
+    /// Asynchronous demotions issued (gpu bytes released at issuance).
     pub demotions: u64,
+    /// Demotion writebacks that landed in their destination tier.
+    pub demotions_landed: u64,
     pub kv_drops: u64,
     /// Landed promotions discarded because an eviction broke the resident
     /// suffix over them while they were in flight.
@@ -99,15 +119,24 @@ pub struct StoreStats {
     /// Top blocks flipped to gpu without link traffic (their KV was
     /// produced on-device by the decode step itself).
     pub device_syncs: u64,
+    /// Promotion walks stopped at a cooling-down block (anti-thrash).
+    pub cooldown_skips: u64,
 }
 
 /// The tiered block-granular KV store.
 pub struct KvStore {
-    mgr: TierManager,
+    mig: MigrationEngine,
     policy: Box<dyn EvictPolicy>,
     seqs: BTreeMap<u64, SeqEntry>,
     block_tokens: usize,
+    promote_cooldown: u64,
+    /// Recency clock: ticks once per [`KvStore::touch`]/[`KvStore::admit`]
+    /// (LRU input; advances with *activity*, so it is concurrency-scaled).
     clock: u64,
+    /// Serving-step counter: ticks once per [`KvStore::pump_migrations`]
+    /// call — the cool-down timebase, so hysteresis spans the same number
+    /// of event-loop steps regardless of how many groups are decoding.
+    step: u64,
     stats: StoreStats,
 }
 
@@ -115,11 +144,19 @@ impl KvStore {
     pub fn new(cfg: KvStoreConfig, policy: Box<dyn EvictPolicy>) -> Self {
         assert!(cfg.block_tokens > 0, "block_tokens must be positive");
         KvStore {
-            mgr: TierManager::new(cfg.gpu_bytes, cfg.pinned_bytes, cfg.dram_bytes, cfg.link),
+            mig: MigrationEngine::new(
+                cfg.gpu_bytes,
+                cfg.pinned_bytes,
+                cfg.dram_bytes,
+                cfg.link,
+                cfg.wire_elem_bytes,
+            ),
             policy,
             seqs: BTreeMap::new(),
             block_tokens: cfg.block_tokens,
+            promote_cooldown: cfg.promote_cooldown,
             clock: 0,
+            step: 0,
             stats: StoreStats::default(),
         }
     }
@@ -137,20 +174,17 @@ impl KvStore {
     }
 
     pub fn tier_stats(&self) -> TierStats {
-        self.mgr.stats()
+        self.mig.tier_stats()
+    }
+
+    /// Lifecycle counters of the embedded migration engine.
+    pub fn migration_stats(&self) -> MigrationStats {
+        self.mig.stats()
     }
 
     /// Bytes currently reserved in `tier`.
     pub fn tier_used(&self, tier: Tier) -> u64 {
-        self.mgr.pool(tier).used()
-    }
-
-    fn valid_blocks_of(e: &SeqEntry, bt: usize) -> usize {
-        e.tokens.div_ceil(bt).min(e.blocks.len())
-    }
-
-    fn block_tokens_at(e: &SeqEntry, idx: usize, bt: usize) -> usize {
-        e.tokens.saturating_sub(idx * bt).min(bt)
+        self.mig.tiers().pool(tier).used()
     }
 
     /// Admit a sequence whose full-capacity cache is `total_bytes` split
@@ -174,8 +208,8 @@ impl KvStore {
         // must not drain other sequences' droppable KV (the serving loop
         // retries every step, so leaked drops would compound into planner
         // floors for every running group)
-        let free = self.mgr.pool(Tier::CpuDram).available()
-            + self.mgr.pool(Tier::Pinned).available();
+        let free = self.mig.tiers().pool(Tier::CpuDram).available()
+            + self.mig.tiers().pool(Tier::Pinned).available();
         if free + self.reclaimable_bytes() < block_bytes * n_blocks as u64 {
             bail!(
                 "kvstore cannot fit sequence {seq}: {} bytes needed, {} free + reclaimable",
@@ -186,10 +220,10 @@ impl KvStore {
         let mut blocks = Vec::with_capacity(n_blocks);
         for _ in 0..n_blocks {
             let placed = loop {
-                if let Some(g) = self.mgr.grab(Tier::CpuDram, block_bytes) {
+                if let Some(g) = self.mig.tiers().grab(Tier::CpuDram, block_bytes) {
                     break Some((Tier::CpuDram, g));
                 }
-                if let Some(g) = self.mgr.grab(Tier::Pinned, block_bytes) {
+                if let Some(g) = self.mig.tiers().grab(Tier::Pinned, block_bytes) {
                     break Some((Tier::Pinned, g));
                 }
                 if self.reclaim_kv_one().is_none() {
@@ -202,6 +236,7 @@ impl KvStore {
                     guard: Some(guard),
                     kv_dropped: false,
                     pending: None,
+                    demoted_at: None,
                 }),
                 None => {
                     // `blocks` drops here, rolling the reservations back
@@ -221,15 +256,17 @@ impl KvStore {
         Ok(())
     }
 
-    /// Retire a sequence, releasing every reservation.  In-flight
-    /// promotions are *completed* (blocking briefly on the link) rather
-    /// than dropped, so their staging buffers return to the pinned pool
-    /// instead of stranding phantom pinned charges.
+    /// Retire a sequence, releasing every reservation — without blocking:
+    /// queued migrations are dropped on the spot; launched ones are parked
+    /// on the engine's drain list and their staging buffers / destination
+    /// reservations are reclaimed by a later [`KvStore::poll_landed`] once
+    /// the bytes stop moving, so retirement never waits on the link and no
+    /// phantom pinned charge is stranded.
     pub fn release(&mut self, seq: u64) {
         if let Some(e) = self.seqs.remove(&seq) {
             for b in e.blocks {
-                if let Some(pm) = b.pending {
-                    let _ = self.mgr.finish_migration(pm);
+                if let Some(p) = b.pending {
+                    self.mig.finish(p.id);
                 }
             }
         }
@@ -246,22 +283,24 @@ impl KvStore {
     }
 
     /// Tokens of the sequence's *resident suffix*: the run of settled
-    /// gpu-tier blocks ending at the newest valid token.
+    /// gpu-tier blocks ending at the newest valid token.  A block whose
+    /// demotion is in flight already released its gpu bytes, so it counts
+    /// as a hole — the planner's `resident` input shrinks the moment an
+    /// eviction is issued, never after.
     pub fn gpu_resident_tokens(&self, seq: u64) -> usize {
-        let bt = self.block_tokens;
         let Some(e) = self.seqs.get(&seq) else { return 0 };
-        let mut covered = 0;
-        let mut idx = Self::valid_blocks_of(e, bt);
-        while idx > 0 {
-            idx -= 1;
-            let b = &e.blocks[idx];
-            if b.tier == Tier::GpuHbm && b.pending.is_none() && !b.kv_dropped {
-                covered += Self::block_tokens_at(e, idx, bt);
-            } else {
-                break;
-            }
-        }
-        covered
+        e.runs(self.block_tokens).resident_tokens()
+    }
+
+    /// Valid tokens of `seq`'s blocks whose demotion is currently in
+    /// flight.  Non-zero means the engine's device window must shed those
+    /// rows *this* step (the store's gpu bytes are already reusable).
+    pub fn demotion_inflight_tokens(&self, seq: u64) -> usize {
+        let Some(e) = self.seqs.get(&seq) else { return 0 };
+        e.runs(self.block_tokens)
+            .filter(|rb| rb.class == BlockClass::DemotionInFlight)
+            .map(|rb| rb.tokens)
+            .sum()
     }
 
     /// Length of the contiguous dropped-KV prefix — the planner's `l` floor.
@@ -270,12 +309,25 @@ impl KvStore {
         e.blocks.iter().take_while(|b| b.kv_dropped).count() * self.block_tokens
     }
 
-    /// In-flight promotions across all sequences.
+    /// Migrations open (queued or in flight) across all sequences.
     pub fn pending_count(&self) -> usize {
+        self.mig.open_count()
+    }
+
+    /// Open migrations belonging to `seq`'s blocks.
+    pub fn pending_count_of(&self, seq: u64) -> usize {
         self.seqs
-            .values()
-            .map(|e| e.blocks.iter().filter(|b| b.pending.is_some()).count())
-            .sum()
+            .get(&seq)
+            .map_or(0, |e| e.blocks.iter().filter(|b| b.pending.is_some()).count())
+    }
+
+    /// Canceled migrations (released sequences) whose tier reservations
+    /// are still draining — reclaimed by [`KvStore::poll_landed`] once
+    /// their transfers stop moving.  Admission that fails while this is
+    /// non-zero should poll and retry rather than give up: the bytes are
+    /// coming back.
+    pub fn draining_count(&self) -> usize {
+        self.mig.draining_count()
     }
 
     /// The engine keeps the newest `engine_resident` tokens on device for
@@ -290,23 +342,23 @@ impl KvStore {
             let Some(e) = self.seqs.get(&seq) else { return 0 };
             let mut todo = Vec::new();
             let mut covered = 0usize;
-            let mut idx = Self::valid_blocks_of(e, bt);
-            while idx > 0 && covered < engine_resident {
-                idx -= 1;
-                let b = &e.blocks[idx];
-                covered += Self::block_tokens_at(e, idx, bt);
-                if b.pending.is_some() {
-                    break; // a promotion is already bringing this one up
+            for rb in e.runs(bt) {
+                if covered >= engine_resident {
+                    break;
                 }
-                if b.tier != Tier::GpuHbm && !b.kv_dropped {
-                    todo.push(idx);
+                covered += rb.tokens;
+                match rb.class {
+                    // a migration is already moving this one; let it land
+                    BlockClass::PromotionInFlight | BlockClass::DemotionInFlight => break,
+                    BlockClass::Host => todo.push(rb.idx),
+                    BlockClass::Resident | BlockClass::Dropped => {}
                 }
             }
             todo
         };
         let Some(block_bytes) = self.seqs.get(&seq).map(|e| e.block_bytes) else { return 0 };
         for idx in todo {
-            let Some(guard) = self.mgr.grab(Tier::GpuHbm, block_bytes) else { break };
+            let Some(guard) = self.mig.tiers().grab(Tier::GpuHbm, block_bytes) else { break };
             let Some(e) = self.seqs.get_mut(&seq) else { break };
             let b = &mut e.blocks[idx];
             b.guard = Some(guard); // old tier reservation released
@@ -316,102 +368,159 @@ impl KvStore {
         self.gpu_resident_tokens(seq)
     }
 
-    /// Start up to `max_blocks` asynchronous promotions extending `seq`'s
-    /// resident suffix downward (prefetch ahead of its decode step).  When
-    /// the gpu tier is full, the eviction policy demotes other sequences'
-    /// run-start blocks to make room.  Returns promotions issued.
-    pub fn begin_promotions(&mut self, seq: u64, max_blocks: usize) -> usize {
+    /// Queue up to `max_blocks` promotions extending `seq`'s resident
+    /// suffix downward.  When the gpu tier is full, the eviction policy
+    /// issues asynchronous demotions of other sequences' run-start blocks
+    /// — their gpu bytes free immediately, so this never waits on the
+    /// link.  A block still cooling down from a recent demotion stops the
+    /// walk (anti-thrash).  The promotions launch on later
+    /// [`KvStore::pump_migrations`] calls, within the step budget.
+    /// Returns promotions queued.
+    pub fn begin_promotions(
+        &mut self,
+        seq: u64,
+        max_blocks: usize,
+        class: MigrationClass,
+    ) -> usize {
         let bt = self.block_tokens;
+        let cooldown = self.promote_cooldown;
+        let step = self.step;
+        let mut cooled = 0u64;
         let (targets, block_bytes) = {
             let Some(e) = self.seqs.get(&seq) else { return 0 };
             let mut targets = Vec::new();
-            let mut idx = Self::valid_blocks_of(e, bt);
-            while idx > 0 && targets.len() < max_blocks {
-                idx -= 1;
-                let b = &e.blocks[idx];
-                if let Some(pm) = &b.pending {
-                    if pm.to() == Tier::GpuHbm {
-                        continue; // already on its way up
-                    }
+            for rb in e.runs(bt) {
+                if targets.len() >= max_blocks {
                     break;
                 }
-                if b.tier == Tier::GpuHbm {
-                    continue; // part of the established run
+                match rb.class {
+                    // part of the established run / already on its way up
+                    BlockClass::Resident | BlockClass::PromotionInFlight => continue,
+                    // a hole being written back, or nothing to promote
+                    // below a dropped prefix
+                    BlockClass::DemotionInFlight | BlockClass::Dropped => break,
+                    BlockClass::Host => {
+                        if cooldown > 0 {
+                            if let Some(at) = e.blocks[rb.idx].demoted_at {
+                                if step.saturating_sub(at) < cooldown {
+                                    // freshly demoted: promoting it back
+                                    // would ping-pong with the eviction
+                                    // that just freed it
+                                    cooled += 1;
+                                    break;
+                                }
+                            }
+                        }
+                        targets.push(rb.idx);
+                    }
                 }
-                if b.kv_dropped {
-                    break; // nothing to promote below a dropped prefix
-                }
-                targets.push(idx);
             }
             (targets, e.block_bytes)
         };
+        self.stats.cooldown_skips += cooled;
         let mut issued = 0;
         'targets: for idx in targets {
             // evict until the block fits: victims' blocks may be smaller
             // than ours (different batch buckets), so one demotion is not
             // always enough; the loop is bounded by the candidate supply
-            let pm = loop {
-                if let Some(pm) =
-                    self.mgr.begin_migration(Tier::GpuHbm, block_bytes, Priority::High)
+            let id = loop {
+                if let Some(id) =
+                    self.mig.request(BlockId { seq, idx }, Tier::GpuHbm, block_bytes, class)
                 {
-                    break pm;
+                    break id;
                 }
                 if !self.evict_gpu_victim(seq) {
                     break 'targets;
                 }
             };
             let Some(e) = self.seqs.get_mut(&seq) else { break };
-            e.blocks[idx].pending = Some(pm);
+            e.blocks[idx].pending = Some(PendingRef { id, to: Tier::GpuHbm });
             self.stats.promotions_started += 1;
             issued += 1;
         }
         issued
     }
 
-    /// Complete every landed promotion (non-blocking); returns how many
-    /// were installed.  A landed block is only installed into the gpu tier
-    /// while it still extends the resident suffix from above — if an
-    /// eviction opened a hole over it in the meantime, installing would
+    /// Grant this step's link-byte budget and launch queued migrations
+    /// against it (class order: demand promotions, demotions, prefetch).
+    /// Returns migrations launched.  The serving loop calls this once per
+    /// step; completions come back through [`KvStore::poll_landed`].
+    pub fn pump_migrations(&mut self, budget_bytes: u64) -> usize {
+        self.step += 1; // the cool-down timebase: one tick per serving step
+        self.mig.begin_step(budget_bytes);
+        self.mig.pump()
+    }
+
+    /// Install every landed migration (non-blocking); returns how many
+    /// were installed.  Demotions settle unconditionally in their
+    /// destination tier.  A landed *promotion* is only installed into the
+    /// gpu tier while it still extends the resident suffix from above — if
+    /// an eviction opened a hole over it in the meantime, installing would
     /// strand gpu bytes no eviction walk can ever reach, so the new
     /// reservation is dropped and the block stays where it was.
-    pub fn complete_landed(&mut self) -> usize {
-        let Self { mgr, seqs, stats, block_tokens, .. } = self;
-        let bt = *block_tokens;
-        let mut landed = 0;
-        for e in seqs.values_mut() {
+    pub fn poll_landed(&mut self) -> usize {
+        let mut landed_total = 0;
+        let mut promos: BTreeMap<u64, Vec<(usize, crate::memory::PoolGuard)>> = BTreeMap::new();
+        for l in self.mig.poll() {
+            if l.to == Tier::GpuHbm {
+                promos.entry(l.block.seq).or_default().push((l.block.idx, l.guard));
+            } else {
+                // demotion writeback: install in the lower tier
+                let Some(e) = self.seqs.get_mut(&l.block.seq) else { continue };
+                let b = &mut e.blocks[l.block.idx];
+                debug_assert!(b.pending.as_ref().is_some_and(|p| p.id == l.id));
+                b.pending = None;
+                b.guard = Some(l.guard);
+                b.tier = l.to;
+                self.stats.demotions_landed += 1;
+                landed_total += 1;
+            }
+        }
+        let bt = self.block_tokens;
+        for (seq, mut list) in promos {
+            let Some(e) = self.seqs.get_mut(&seq) else { continue };
             // walk top-down so an upper block landing this pass extends
-            // the run before the one below it is judged
+            // the run before the one below it is judged; ascending sort so
+            // the tail of the list is always the next (largest) index
+            list.sort_by_key(|(i, _)| *i);
             let mut suffix_ok = true;
-            let mut idx = Self::valid_blocks_of(e, bt);
+            let mut idx = SuffixRuns::valid_blocks(e.tokens, bt, e.blocks.len());
             while idx > 0 {
                 idx -= 1;
-                if e.blocks[idx].pending.as_ref().is_some_and(|pm| pm.is_done()) {
-                    let pm = e.blocks[idx].pending.take().unwrap();
-                    let (tier, guard) = mgr.finish_migration(pm);
+                if list.last().is_some_and(|(i, _)| *i == idx) {
+                    let (_, guard) = list.pop().unwrap();
+                    let b = &mut e.blocks[idx];
+                    b.pending = None;
                     if suffix_ok {
-                        let b = &mut e.blocks[idx];
                         b.guard = Some(guard);
-                        b.tier = tier;
-                        stats.promotions_landed += 1;
-                        landed += 1;
+                        b.tier = Tier::GpuHbm;
+                        self.stats.promotions_landed += 1;
+                        landed_total += 1;
                     } else {
-                        stats.promotions_wasted += 1;
+                        self.stats.promotions_wasted += 1;
+                        // guard drops: the gpu reservation rolls back
                     }
                 }
                 let b = &e.blocks[idx];
                 // an in-flight promotion still counts as run-extending (it
-                // will land); a settled non-gpu or dropped block is a hole
-                if b.pending.is_none() && (b.tier != Tier::GpuHbm || b.kv_dropped) {
-                    suffix_ok = false;
+                // will land); anything else non-resident is a hole
+                match b.class() {
+                    BlockClass::Resident | BlockClass::PromotionInFlight => {}
+                    _ => suffix_ok = false,
                 }
             }
+            // landed promotions for blocks past the valid range (can only
+            // happen if tokens shrank, which they never do) — drop guards
+            debug_assert!(list.is_empty(), "landed promotion outside the valid range");
         }
-        landed
+        landed_total
     }
 
-    /// Demote one other sequence's run-start block (policy's choice) one
-    /// tier down to free gpu capacity.  Returns false when there is no
-    /// candidate or no room below.
+    /// Issue an asynchronous demotion of one other sequence's run-start
+    /// block (policy's choice): the destination reservation is taken in a
+    /// lower tier, the victim's gpu bytes free **immediately**, and the
+    /// writeback rides the link under the step budget.  Returns false when
+    /// there is no candidate or no room below.
     fn evict_gpu_victim(&mut self, exclude_seq: u64) -> bool {
         let bt = self.block_tokens;
         let mut cands: Vec<BlockView> = Vec::new();
@@ -421,21 +530,15 @@ impl KvStore {
             }
             // the lowest block of the top gpu run: evicting it keeps the
             // remaining residency a suffix
-            let mut run_start: Option<usize> = None;
-            let mut idx = Self::valid_blocks_of(e, bt);
-            while idx > 0 {
-                idx -= 1;
-                let b = &e.blocks[idx];
-                if b.tier == Tier::GpuHbm && b.pending.is_none() && !b.kv_dropped {
-                    run_start = Some(idx);
-                } else {
-                    break;
-                }
-            }
+            let run_start = e
+                .runs(bt)
+                .take_while(|rb| rb.class == BlockClass::Resident)
+                .map(|rb| rb.idx)
+                .last();
             if let Some(idx) = run_start {
                 cands.push(BlockView {
                     id: BlockId { seq: sid, idx },
-                    tokens: Self::block_tokens_at(e, idx, bt),
+                    tokens: SuffixRuns::tokens_at(e.tokens, bt, idx),
                     start_token: idx * bt,
                     seq_len: e.tokens,
                     last_use: e.last_use,
@@ -448,17 +551,22 @@ impl KvStore {
         }
         let v = cands[self.policy.victim(&cands)];
         let Some(bytes) = self.seqs.get(&v.id.seq).map(|e| e.block_bytes) else { return false };
-        let dest = self
-            .mgr
-            .grab(Tier::Pinned, bytes)
-            .map(|g| (Tier::Pinned, g))
-            .or_else(|| self.mgr.grab(Tier::CpuDram, bytes).map(|g| (Tier::CpuDram, g)));
-        let Some((tier, guard)) = dest else { return false };
-        self.mgr.migrate_sync(bytes);
+        let req = self
+            .mig
+            .request(v.id, Tier::Pinned, bytes, MigrationClass::Demote)
+            .map(|id| (id, Tier::Pinned))
+            .or_else(|| {
+                self.mig
+                    .request(v.id, Tier::CpuDram, bytes, MigrationClass::Demote)
+                    .map(|id| (id, Tier::CpuDram))
+            });
+        let Some((id, to)) = req else { return false };
+        let step = self.step;
         let Some(e) = self.seqs.get_mut(&v.id.seq) else { return false };
         let b = &mut e.blocks[v.id.idx];
-        b.guard = Some(guard); // gpu reservation released
-        b.tier = tier;
+        b.guard = None; // gpu reservation released *now*: no link wait
+        b.pending = Some(PendingRef { id, to });
+        b.demoted_at = Some(step);
         self.stats.demotions += 1;
         true
     }
@@ -520,7 +628,7 @@ impl KvStore {
         let x_bytes = bytes.div_ceil(3); // X is one of the three K/V/X tensors
         // shrink in place: release the full-block guard, re-grab X-only
         self.seqs.get_mut(&v.id.seq)?.blocks[v.id.idx].guard = None;
-        let guard = self.mgr.grab(tier, x_bytes);
+        let guard = self.mig.tiers().grab(tier, x_bytes);
         let e = self.seqs.get_mut(&v.id.seq)?;
         let b = &mut e.blocks[v.id.idx];
         b.guard = guard;
@@ -538,24 +646,35 @@ mod tests {
     const BB: u64 = 3000; // block bytes in these tests
 
     fn store(gpu_blocks: u64, pinned_blocks: u64, dram_blocks: u64) -> KvStore {
-        KvStore::new(
-            KvStoreConfig {
-                gpu_bytes: gpu_blocks * BB,
-                pinned_bytes: pinned_blocks * BB,
-                dram_bytes: dram_blocks * BB,
-                block_tokens: 16,
-                link: LinkConfig::unthrottled(),
-            },
-            Box::new(Lru),
-        )
+        store_cfg(gpu_blocks, pinned_blocks, dram_blocks, |_| {})
     }
 
-    fn poll_landed_until(s: &mut KvStore, want: usize) -> usize {
-        // unthrottled transfers land almost immediately, but on a worker
-        // thread; poll until `want` promotions have landed
+    fn store_cfg(
+        gpu_blocks: u64,
+        pinned_blocks: u64,
+        dram_blocks: u64,
+        tweak: impl FnOnce(&mut KvStoreConfig),
+    ) -> KvStore {
+        let mut cfg = KvStoreConfig {
+            gpu_bytes: gpu_blocks * BB,
+            pinned_bytes: pinned_blocks * BB,
+            dram_bytes: dram_blocks * BB,
+            block_tokens: 16,
+            link: LinkConfig::unthrottled(),
+            wire_elem_bytes: 4.0,
+            promote_cooldown: 0, // most tests want no hysteresis
+        };
+        tweak(&mut cfg);
+        KvStore::new(cfg, Box::new(Lru))
+    }
+
+    /// Launch everything queued (unbounded budget) and poll until `want`
+    /// migrations have installed.
+    fn pump_and_land(s: &mut KvStore, want: usize) -> usize {
+        s.pump_migrations(u64::MAX);
         let mut total = 0;
         for _ in 0..500 {
-            total += s.complete_landed();
+            total += s.poll_landed();
             if total >= want {
                 break;
             }
@@ -602,36 +721,99 @@ mod tests {
     }
 
     #[test]
-    fn promotions_prefetch_and_land() {
+    fn promotions_queue_launch_and_land() {
         let mut s = store(2, 0, 4);
         s.admit(1, 4 * BB, 4).unwrap();
         s.touch(1, 32, 0); // blocks 0 and 1 valid
-        let issued = s.begin_promotions(1, 2);
+        let issued = s.begin_promotions(1, 2, MigrationClass::Promote);
         assert_eq!(issued, 2);
         assert_eq!(s.pending_count(), 2);
+        // queued migrations do not move until the step grants link budget
+        assert_eq!(s.poll_landed(), 0);
+        assert_eq!(s.migration_stats().launched, 0);
         // in-flight promotions do not count as resident yet
         assert_eq!(s.gpu_resident_tokens(1), 0);
-        assert_eq!(poll_landed_until(&mut s, 2), 2);
+        assert_eq!(pump_and_land(&mut s, 2), 2);
         assert_eq!(s.gpu_resident_tokens(1), 32);
         assert_eq!(s.tier_used(Tier::GpuHbm), 2 * BB);
         assert_eq!(s.tier_used(Tier::CpuDram), 2 * BB, "source reservations released");
         assert_eq!(s.stats().promotions_landed, 2);
+        assert_eq!(s.migration_stats().landed, 2);
     }
 
     #[test]
-    fn full_gpu_tier_evicts_other_seq_via_policy() {
+    fn step_budget_spreads_launches_across_steps() {
+        let mut s = store(4, 0, 4);
+        s.admit(1, 4 * BB, 4).unwrap();
+        s.touch(1, 64, 0); // all 4 blocks valid
+        assert_eq!(s.begin_promotions(1, 4, MigrationClass::Promote), 4);
+        // one block's wire bytes per step: four steps to launch the queue
+        for step in 1..=4 {
+            assert_eq!(s.pump_migrations(BB), 1, "step {step} launches one");
+        }
+        assert_eq!(s.migration_stats().budget_deferrals, 3);
+        let mut landed = 0;
+        for _ in 0..500 {
+            landed += s.poll_landed();
+            if landed >= 4 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(landed, 4);
+        assert_eq!(s.gpu_resident_tokens(1), 64);
+    }
+
+    #[test]
+    fn full_gpu_tier_evicts_other_seq_without_blocking() {
         let mut s = store(1, 1, 4);
         s.admit(1, 2 * BB, 2).unwrap();
         s.admit(2, 2 * BB, 2).unwrap();
         s.touch(1, 16, 0);
         assert_eq!(s.sync_device_suffix(1, 16), 16, "seq 1 takes the gpu block");
         s.touch(2, 16, 0); // seq 2 is now more recent than seq 1
-        let issued = s.begin_promotions(2, 1);
-        assert_eq!(issued, 1, "eviction must have made room");
+        let issued = s.begin_promotions(2, 1, MigrationClass::Promote);
+        assert_eq!(issued, 1, "async eviction must have made room instantly");
         assert!(s.stats().demotions >= 1);
+        // the victim is non-resident from the instant the demotion is
+        // issued (its gpu bytes are already reusable) — no link wait
         assert_eq!(s.gpu_resident_tokens(1), 0, "lru victim demoted");
-        poll_landed_until(&mut s, 1);
+        assert!(s.demotion_inflight_tokens(1) > 0, "writeback still in flight");
+        pump_and_land(&mut s, 2); // the demotion writeback + the promotion
         assert_eq!(s.gpu_resident_tokens(2), 16);
+        assert_eq!(s.demotion_inflight_tokens(1), 0);
+        assert_eq!(s.stats().demotions_landed, 1);
+        // the victim settled one tier down
+        assert_eq!(s.tier_used(Tier::Pinned), BB);
+    }
+
+    #[test]
+    fn cooldown_blocks_repromotion_of_fresh_victim() {
+        let mut s = store_cfg(1, 2, 4, |c| c.promote_cooldown = 3);
+        s.admit(1, 2 * BB, 2).unwrap();
+        s.admit(2, 2 * BB, 2).unwrap();
+        s.touch(1, 16, 0);
+        assert_eq!(s.sync_device_suffix(1, 16), 16);
+        s.touch(2, 16, 0);
+        // seq 2 steals the only gpu block; seq 1's block 0 is demoted
+        assert_eq!(s.begin_promotions(2, 1, MigrationClass::Promote), 1);
+        pump_and_land(&mut s, 2); // one pump = serving step 1
+        assert_eq!(s.gpu_resident_tokens(2), 16);
+        // seq 1 immediately wants back in: the cool-down stops the
+        // ping-pong (without it this would demote seq 2 right away).
+        // Touch activity does NOT age the cool-down — only serving steps
+        // do, so heavy concurrency cannot wear the hysteresis off early.
+        s.touch(1, 16, 0);
+        s.touch(1, 16, 0);
+        s.touch(1, 16, 0);
+        assert_eq!(s.begin_promotions(1, 1, MigrationClass::Promote), 0);
+        assert_eq!(s.stats().cooldown_skips, 1);
+        assert_eq!(s.stats().demotions, 1, "no second demotion");
+        // two more serving steps age the victim past the cool-down
+        s.pump_migrations(0); // step 2
+        s.pump_migrations(0); // step 3
+        assert_eq!(s.begin_promotions(1, 1, MigrationClass::Promote), 1);
+        assert!(s.stats().demotions >= 2);
     }
 
     #[test]
@@ -659,5 +841,43 @@ mod tests {
         assert_eq!(freed, BB - BB.div_ceil(3), "KV is ⅔ of the K/V/X block");
         assert_eq!(s.tier_used(Tier::CpuDram), BB + BB.div_ceil(3));
         assert_eq!(s.kv_dropped_tokens(1), 16);
+    }
+
+    #[test]
+    fn wire_quant_charges_int4_bytes_on_migrations() {
+        let mut s = store_cfg(2, 0, 4, |c| c.wire_elem_bytes = 0.625);
+        s.admit(1, 4 * BB, 4).unwrap();
+        s.touch(1, 32, 0);
+        s.begin_promotions(1, 2, MigrationClass::Promote);
+        pump_and_land(&mut s, 2);
+        let wire_per_block = ((BB / 4) as f64 * 0.625).ceil() as u64;
+        assert_eq!(s.tier_stats().migrated_bytes, 2 * wire_per_block);
+        // occupancy stays full-width: quantization shrinks traffic only
+        assert_eq!(s.tier_used(Tier::GpuHbm), 2 * BB);
+    }
+
+    #[test]
+    fn release_mid_flight_reclaims_everything() {
+        let mut s = store(2, 2, 4);
+        s.admit(1, 4 * BB, 4).unwrap();
+        s.touch(1, 32, 0);
+        s.begin_promotions(1, 2, MigrationClass::Promote);
+        s.pump_migrations(u64::MAX); // launched but maybe not landed
+        s.release(1); // non-blocking: in-flight migrations go to draining
+        assert_eq!(s.pending_count(), 0);
+        assert_eq!(s.tier_used(Tier::CpuDram), 0, "source reservations released");
+        // the in-flight destination reservations drain via polling once
+        // their transfers stop moving — release itself never waits
+        for _ in 0..500 {
+            s.poll_landed();
+            if s.tier_used(Tier::GpuHbm) == 0 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(s.tier_used(Tier::GpuHbm), 0, "in-flight dest reservations released");
+        // the pinned tier may keep staging-buffer charges (pinned regions
+        // stay pinned by design) but no *blocks*
+        assert!(s.tier_used(Tier::Pinned) <= 2 * BB, "only staging charges remain");
     }
 }

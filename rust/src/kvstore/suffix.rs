@@ -1,0 +1,404 @@
+//! The device-resident-suffix invariant, in one place.
+//!
+//! Residency in the tiered store is a *suffix* property: the gpu tier holds
+//! a contiguous run of blocks ending at a sequence's newest valid token.
+//! Every placement decision — counting resident tokens, mirroring the
+//! engine's device window, extending the run with promotions, picking the
+//! eviction victim that keeps the run contiguous — walks the same top-down
+//! block order with the same valid-block arithmetic, differing only in
+//! where it stops.  PR 2 re-implemented that walk four times with subtly
+//! different break conditions; [`SuffixRuns`] owns it once:
+//!
+//! * which blocks are *valid* (cover at least one of the sequence's
+//!   `tokens` cached tokens),
+//! * how many tokens each valid block covers (the top block may be short),
+//! * the top-down iteration order that makes "resident run" well-defined,
+//! * the [`BlockClass`] taxonomy the walkers branch on.
+//!
+//! The walkers themselves live in [`store`](super::store) as thin loops
+//! over this iterator; the property test at the bottom of this file pins
+//! the iterator against standalone re-implementations of all four legacy
+//! walks across randomized layouts.
+
+use crate::memory::PoolGuard;
+
+use super::block::Tier;
+use super::migrate::MigrationId;
+
+/// A reference to an in-flight migration of one block: the store-side
+/// marker whose lifecycle (queued → staged → in-flight → landed) is owned
+/// by the [`MigrationEngine`](super::MigrationEngine).
+#[derive(Debug, Clone, Copy)]
+pub struct PendingRef {
+    pub id: MigrationId,
+    /// Destination tier: [`Tier::GpuHbm`] marks a promotion, anything
+    /// else a demotion.
+    pub to: Tier,
+}
+
+/// One block's placement state (store-internal).
+pub struct BlockState {
+    /// Tier the block is *settled* in.  While a migration is in flight the
+    /// field still names the source tier (promotion) or the tier being
+    /// left (demotion); [`BlockState::class`] is the authoritative view.
+    pub tier: Tier,
+    /// The tier reservation.  `None` while a demotion is in flight: the
+    /// gpu bytes are released the moment the demotion is issued (the host
+    /// cache holds the canonical rows; the link traffic models writeback),
+    /// which is what lets a full gpu tier never stall the step loop.
+    pub guard: Option<PoolGuard>,
+    /// KV bytes dropped (X kept): the block costs ⅓ and must be covered by
+    /// the recompute path when its tokens are needed.
+    pub kv_dropped: bool,
+    /// In-flight migration, if any.
+    pub pending: Option<PendingRef>,
+    /// Serving step at which this block was last demoted out of the gpu
+    /// tier — the anti-thrash cool-down input: a freshly demoted block is
+    /// not re-promoted for `promote_cooldown` *steps* (the step counter
+    /// ticks once per `pump_migrations` call, not per touch, so the
+    /// hysteresis does not shrink as concurrency grows).
+    pub demoted_at: Option<u64>,
+}
+
+/// What a suffix walker sees when it looks at one block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlockClass {
+    /// Settled in the gpu tier, KV intact: part of a resident run.
+    Resident,
+    /// A promotion is in flight: will extend the run when it lands.
+    PromotionInFlight,
+    /// A demotion is in flight: **already non-resident** — its gpu bytes
+    /// were released at issuance, so residency accounting (and the
+    /// planner's transfer term) must treat it as a hole immediately.
+    DemotionInFlight,
+    /// Settled in a host tier, KV intact: a promotion candidate.
+    Host,
+    /// KV dropped (X kept): only the recompute path can cover it.
+    Dropped,
+}
+
+impl BlockState {
+    pub fn class(&self) -> BlockClass {
+        if let Some(p) = &self.pending {
+            if p.to == Tier::GpuHbm {
+                BlockClass::PromotionInFlight
+            } else {
+                BlockClass::DemotionInFlight
+            }
+        } else if self.kv_dropped {
+            BlockClass::Dropped
+        } else if self.tier == Tier::GpuHbm {
+            BlockClass::Resident
+        } else {
+            BlockClass::Host
+        }
+    }
+}
+
+/// One step of a [`SuffixRuns`] walk.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RunBlock {
+    /// Block index within the sequence.
+    pub idx: usize,
+    /// Valid tokens this block covers (the top block may be short).
+    pub tokens: usize,
+    pub class: BlockClass,
+}
+
+/// Top-down iterator over the *valid* blocks of one sequence: from the
+/// block holding the newest cached token down to block 0.  Each item
+/// reports the block's index, how many of the sequence's `tokens` it
+/// covers, and its [`BlockClass`].  Walkers express their break condition
+/// over the class stream instead of re-deriving the arithmetic.
+pub struct SuffixRuns<'a> {
+    blocks: &'a [BlockState],
+    tokens: usize,
+    bt: usize,
+    /// Number of not-yet-yielded valid blocks (yield order `idx-1 .. 0`).
+    idx: usize,
+}
+
+impl<'a> SuffixRuns<'a> {
+    pub fn new(blocks: &'a [BlockState], tokens: usize, block_tokens: usize) -> Self {
+        let idx = Self::valid_blocks(tokens, block_tokens, blocks.len());
+        SuffixRuns { blocks, tokens, bt: block_tokens, idx }
+    }
+
+    /// Blocks covering at least one of `tokens` cached tokens.
+    pub fn valid_blocks(tokens: usize, block_tokens: usize, n_blocks: usize) -> usize {
+        tokens.div_ceil(block_tokens).min(n_blocks)
+    }
+
+    /// Valid tokens block `idx` covers (0 past the valid range).
+    pub fn tokens_at(tokens: usize, block_tokens: usize, idx: usize) -> usize {
+        tokens.saturating_sub(idx * block_tokens).min(block_tokens)
+    }
+
+    /// Tokens of the resident suffix: the run of settled gpu blocks ending
+    /// at the newest valid token.  In-flight demotions released their gpu
+    /// bytes at issuance, so they terminate the run like any other hole.
+    pub fn resident_tokens(self) -> usize {
+        self.take_while(|rb| rb.class == BlockClass::Resident)
+            .map(|rb| rb.tokens)
+            .sum()
+    }
+}
+
+impl Iterator for SuffixRuns<'_> {
+    type Item = RunBlock;
+
+    fn next(&mut self) -> Option<RunBlock> {
+        if self.idx == 0 {
+            return None;
+        }
+        self.idx -= 1;
+        let idx = self.idx;
+        Some(RunBlock {
+            idx,
+            tokens: Self::tokens_at(self.tokens, self.bt, idx),
+            class: self.blocks[idx].class(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::{check_property, Prng};
+
+    const BT: usize = 16;
+
+    fn block(class: BlockClass) -> BlockState {
+        let (tier, kv_dropped, pending) = match class {
+            BlockClass::Resident => (Tier::GpuHbm, false, None),
+            BlockClass::PromotionInFlight => (
+                Tier::CpuDram,
+                false,
+                Some(PendingRef { id: MigrationId::test_id(1), to: Tier::GpuHbm }),
+            ),
+            BlockClass::DemotionInFlight => (
+                Tier::GpuHbm,
+                false,
+                Some(PendingRef { id: MigrationId::test_id(2), to: Tier::Pinned }),
+            ),
+            BlockClass::Host => (Tier::CpuDram, false, None),
+            BlockClass::Dropped => (Tier::Pinned, true, None),
+        };
+        BlockState { tier, guard: None, kv_dropped, pending, demoted_at: None }
+    }
+
+    fn random_layout(rng: &mut Prng) -> (Vec<BlockState>, usize) {
+        let n = 1 + rng.index(8);
+        let mut blocks: Vec<BlockState> = Vec::with_capacity(n);
+        // a realistic layout: optional dropped prefix, then a random mix
+        let dropped_prefix = rng.index(n + 1) / 2;
+        for i in 0..n {
+            let class = if i < dropped_prefix {
+                BlockClass::Dropped
+            } else {
+                match rng.index(5) {
+                    0 => BlockClass::Resident,
+                    1 => BlockClass::PromotionInFlight,
+                    2 => BlockClass::DemotionInFlight,
+                    3 => BlockClass::Dropped,
+                    _ => BlockClass::Host,
+                }
+            };
+            blocks.push(block(class));
+        }
+        // tokens in [0, n*BT], sometimes leaving trailing invalid blocks
+        // and sometimes a short top block
+        let tokens = rng.index(n * BT + 1);
+        (blocks, tokens)
+    }
+
+    // -- standalone re-implementations of the four PR 2 walkers ------------
+    // (the literal loops store.rs used to carry, kept here as the oracle)
+
+    fn legacy_valid(blocks: &[BlockState], tokens: usize) -> usize {
+        tokens.div_ceil(BT).min(blocks.len())
+    }
+
+    fn legacy_tokens_at(tokens: usize, idx: usize) -> usize {
+        tokens.saturating_sub(idx * BT).min(BT)
+    }
+
+    /// `gpu_resident_tokens`: settled-gpu run from the top.
+    fn legacy_resident(blocks: &[BlockState], tokens: usize) -> usize {
+        let mut covered = 0;
+        let mut idx = legacy_valid(blocks, tokens);
+        while idx > 0 {
+            idx -= 1;
+            let b = &blocks[idx];
+            if b.tier == Tier::GpuHbm && b.pending.is_none() && !b.kv_dropped {
+                covered += legacy_tokens_at(tokens, idx);
+            } else {
+                break;
+            }
+        }
+        covered
+    }
+
+    /// `sync_device_suffix`: host blocks to flip while covering the
+    /// engine's window; breaks on any in-flight migration.
+    fn legacy_sync_todo(blocks: &[BlockState], tokens: usize, engine_resident: usize) -> Vec<usize> {
+        let mut todo = Vec::new();
+        let mut covered = 0usize;
+        let mut idx = legacy_valid(blocks, tokens);
+        while idx > 0 && covered < engine_resident {
+            idx -= 1;
+            let b = &blocks[idx];
+            covered += legacy_tokens_at(tokens, idx);
+            if b.pending.is_some() {
+                break;
+            }
+            if b.tier != Tier::GpuHbm && !b.kv_dropped {
+                todo.push(idx);
+            }
+        }
+        todo
+    }
+
+    /// `begin_promotions`: promotion targets extending the run downward.
+    fn legacy_promo_targets(blocks: &[BlockState], tokens: usize, max: usize) -> Vec<usize> {
+        let mut targets = Vec::new();
+        let mut idx = legacy_valid(blocks, tokens);
+        while idx > 0 && targets.len() < max {
+            idx -= 1;
+            let b = &blocks[idx];
+            if let Some(pm) = &b.pending {
+                if pm.to == Tier::GpuHbm {
+                    continue;
+                }
+                break;
+            }
+            if b.tier == Tier::GpuHbm {
+                continue;
+            }
+            if b.kv_dropped {
+                break;
+            }
+            targets.push(idx);
+        }
+        targets
+    }
+
+    /// `evict_gpu_victim`: the lowest block of the top resident run.
+    fn legacy_run_start(blocks: &[BlockState], tokens: usize) -> Option<usize> {
+        let mut run_start: Option<usize> = None;
+        let mut idx = legacy_valid(blocks, tokens);
+        while idx > 0 {
+            idx -= 1;
+            let b = &blocks[idx];
+            if b.tier == Tier::GpuHbm && b.pending.is_none() && !b.kv_dropped {
+                run_start = Some(idx);
+            } else {
+                break;
+            }
+        }
+        run_start
+    }
+
+    // -- the same four walks expressed over SuffixRuns ---------------------
+
+    fn runs_sync_todo(blocks: &[BlockState], tokens: usize, engine_resident: usize) -> Vec<usize> {
+        let mut todo = Vec::new();
+        let mut covered = 0usize;
+        for rb in SuffixRuns::new(blocks, tokens, BT) {
+            if covered >= engine_resident {
+                break;
+            }
+            covered += rb.tokens;
+            match rb.class {
+                BlockClass::PromotionInFlight | BlockClass::DemotionInFlight => break,
+                BlockClass::Host => todo.push(rb.idx),
+                BlockClass::Resident | BlockClass::Dropped => {}
+            }
+        }
+        todo
+    }
+
+    fn runs_promo_targets(blocks: &[BlockState], tokens: usize, max: usize) -> Vec<usize> {
+        let mut targets = Vec::new();
+        for rb in SuffixRuns::new(blocks, tokens, BT) {
+            if targets.len() >= max {
+                break;
+            }
+            match rb.class {
+                BlockClass::Resident | BlockClass::PromotionInFlight => continue,
+                BlockClass::DemotionInFlight | BlockClass::Dropped => break,
+                BlockClass::Host => targets.push(rb.idx),
+            }
+        }
+        targets
+    }
+
+    fn runs_run_start(blocks: &[BlockState], tokens: usize) -> Option<usize> {
+        SuffixRuns::new(blocks, tokens, BT)
+            .take_while(|rb| rb.class == BlockClass::Resident)
+            .map(|rb| rb.idx)
+            .last()
+    }
+
+    #[test]
+    fn suffix_runs_reproduces_all_four_legacy_walkers() {
+        check_property("suffix-runs == legacy walkers", 500, |rng| {
+            let (blocks, tokens) = random_layout(rng);
+            let resident = SuffixRuns::new(&blocks, tokens, BT).resident_tokens();
+            if resident != legacy_resident(&blocks, tokens) {
+                return Err(format!(
+                    "resident {} != legacy {} (tokens {tokens})",
+                    resident,
+                    legacy_resident(&blocks, tokens)
+                ));
+            }
+            let window = rng.index(tokens + BT + 1);
+            if runs_sync_todo(&blocks, tokens, window) != legacy_sync_todo(&blocks, tokens, window)
+            {
+                return Err(format!("sync todo diverged (tokens {tokens}, window {window})"));
+            }
+            let max = rng.index(blocks.len() + 2);
+            if runs_promo_targets(&blocks, tokens, max)
+                != legacy_promo_targets(&blocks, tokens, max)
+            {
+                return Err(format!("promo targets diverged (tokens {tokens}, max {max})"));
+            }
+            if runs_run_start(&blocks, tokens) != legacy_run_start(&blocks, tokens) {
+                return Err(format!("eviction run start diverged (tokens {tokens})"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn short_top_block_and_invalid_tail() {
+        // 3 blocks, 20 tokens: block 1 holds 4 valid tokens, block 2 none
+        let blocks = vec![
+            block(BlockClass::Resident),
+            block(BlockClass::Resident),
+            block(BlockClass::Host),
+        ];
+        let items: Vec<RunBlock> = SuffixRuns::new(&blocks, 20, BT).collect();
+        assert_eq!(items.len(), 2, "invalid tail block must not be yielded");
+        assert_eq!(items[0], RunBlock { idx: 1, tokens: 4, class: BlockClass::Resident });
+        assert_eq!(items[1], RunBlock { idx: 0, tokens: 16, class: BlockClass::Resident });
+        assert_eq!(SuffixRuns::new(&blocks, 20, BT).resident_tokens(), 20);
+    }
+
+    #[test]
+    fn demotion_in_flight_is_a_hole() {
+        // top block settled-gpu, next demoting: the run stops at the hole
+        let blocks = vec![block(BlockClass::DemotionInFlight), block(BlockClass::Resident)];
+        assert_eq!(SuffixRuns::new(&blocks, 32, BT).resident_tokens(), 16);
+        // a pending promotion is not resident either (bytes still moving)
+        let blocks = vec![block(BlockClass::PromotionInFlight), block(BlockClass::Resident)];
+        assert_eq!(SuffixRuns::new(&blocks, 32, BT).resident_tokens(), 16);
+    }
+
+    #[test]
+    fn zero_tokens_is_empty() {
+        let blocks = vec![block(BlockClass::Resident)];
+        assert_eq!(SuffixRuns::new(&blocks, 0, BT).count(), 0);
+        assert_eq!(SuffixRuns::new(&[], 64, BT).count(), 0);
+    }
+}

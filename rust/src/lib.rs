@@ -32,7 +32,9 @@
 //!   manager (including group-wise 4-bit quantization) and the model-weight
 //!   store.
 //! * [`kvstore`] — the tiered, block-granular KV store: gpu-hbm / pinned /
-//!   cpu-dram block placement, async prefetch, and pluggable eviction
+//!   cpu-dram block placement with one asynchronous migration lifecycle
+//!   (queued → staged → in-flight → landed) for promotions, demotions and
+//!   prefetch under a per-step link-byte budget, plus pluggable eviction
 //!   including the recompute-aware policy (drop KV, keep X) that
 //!   generalises Eq. (11) into a capacity lever.
 //! * [`sim`] — discrete-event simulator of the paper's testbeds (A100 +

@@ -123,7 +123,13 @@ impl Planner {
     /// * `resident` — tokens of the group's KV *suffix* already resident in
     ///   gpu-hbm.  They leave both the transfer and recompute terms, so the
     ///   plan is solved on the effective cached length `s' − resident`
-    ///   (already-on-GPU blocks shrink the transfer term).
+    ///   (already-on-GPU blocks shrink the transfer term).  This must be
+    ///   the **settled** suffix only: a block whose asynchronous demotion
+    ///   is in flight released its gpu bytes at issuance, so the store
+    ///   reports it non-resident from that instant
+    ///   ([`KvStore::gpu_resident_tokens`](crate::kvstore::KvStore::gpu_resident_tokens))
+    ///   and the plan re-pays its transfer immediately — never trust a
+    ///   window the writeback is still vacating.
     /// * `l_floor` — tokens of the group's KV *prefix* whose stored KV the
     ///   store dropped (keeping X): the recompute path must cover them, so
     ///   `l = 0` and any bucket below the floor are infeasible.  When no
@@ -285,6 +291,26 @@ mod tests {
         let all = p.plan_batch_tiered(&[128; 4], 120, 0);
         assert_eq!(all.path, PathKind::FullTransfer);
         assert!(all.predicted_s <= tiered.predicted_s);
+    }
+
+    #[test]
+    fn shrinking_resident_repays_the_transfer_term() {
+        // the coordinator contract for async demotions: when the store
+        // revokes residency at eviction-issuance time, the very next plan
+        // (smaller `resident`) must already charge the extra transfer —
+        // the cost is monotone non-increasing in the settled suffix
+        let p = planner(SchedulePolicy::RowByRow);
+        let mut prev = f64::INFINITY;
+        for resident in [0usize, 32, 64, 96] {
+            let plan = p.plan_batch_tiered(&[128; 4], resident, 0);
+            assert!(
+                plan.predicted_s <= prev + 1e-15,
+                "resident {resident}: {} > {}",
+                plan.predicted_s,
+                prev
+            );
+            prev = plan.predicted_s;
+        }
     }
 
     #[test]
