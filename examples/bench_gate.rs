@@ -1,0 +1,72 @@
+//! CI bench-regression gate: compare a fresh `BENCH_kvstore.json` against
+//! the committed `BENCH_baseline.json` and exit non-zero when any policy's
+//! throughput dropped beyond the allowed fraction.
+//!
+//! ```bash
+//! cargo bench --bench perf_hotpath
+//! cargo run --release --example bench_gate -- BENCH_baseline.json BENCH_kvstore.json
+//! ```
+//!
+//! The gate logic (and its tests) live in `kvpr::util::benchgate`; this is
+//! the file-reading, exit-code-setting shell around it.
+
+use kvpr::util::benchgate::{compare, DEFAULT_MAX_DROP};
+use kvpr::util::json::Json;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    if args.len() < 3 || args.len() > 4 {
+        eprintln!("usage: bench_gate <baseline.json> <fresh.json> [max_drop_frac]");
+        std::process::exit(2);
+    }
+    let max_drop = match args.get(3) {
+        Some(s) => match s.parse::<f64>() {
+            Ok(v) if v >= 0.0 && v < 1.0 => v,
+            _ => {
+                eprintln!("bench_gate: max_drop_frac must be a fraction in [0, 1): {s}");
+                std::process::exit(2);
+            }
+        },
+        None => DEFAULT_MAX_DROP,
+    };
+    let read = |path: &str| -> Json {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("bench_gate: cannot read {path}: {e}");
+                std::process::exit(2);
+            }
+        };
+        match Json::parse(&text) {
+            Ok(j) => j,
+            Err(e) => {
+                eprintln!("bench_gate: {path}: {e}");
+                std::process::exit(2);
+            }
+        }
+    };
+    let baseline = read(&args[1]);
+    let fresh = read(&args[2]);
+    let report = compare(&baseline, &fresh, max_drop);
+    if report.provisional {
+        println!(
+            "bench_gate: baseline {} is provisional — structure checked only.\n\
+             bench_gate: refresh it from a trusted machine with:\n\
+             bench_gate:   cargo bench --bench perf_hotpath && cp BENCH_kvstore.json {}",
+            args[1], args[1]
+        );
+    }
+    println!(
+        "bench_gate: {} metric path(s) checked against {} (max drop {:.0}%)",
+        report.checked,
+        args[1],
+        max_drop * 100.0
+    );
+    for f in &report.failures {
+        eprintln!("bench_gate: FAIL {f}");
+    }
+    if !report.passed() {
+        std::process::exit(1);
+    }
+    println!("bench_gate: OK");
+}

@@ -159,7 +159,7 @@ fn main() {
     // the policy, so the trajectory also tracks writeback traffic
     let tcfg = EvictionSimConfig::skewed_reuse_tiered(cost.clone());
     let tlru = simulate_eviction(&tcfg, &Lru);
-    let tra = simulate_eviction(&tcfg, &RecomputeAware::new(cost));
+    let tra = simulate_eviction(&tcfg, &RecomputeAware::new(cost.clone()));
     t.row(&[
         "kvstore tiered sim (async demotions)".into(),
         "1".into(),
@@ -167,12 +167,32 @@ fn main() {
         format!("{} demotions, {:.1} ms writeback", tlru.demotions, tlru.demote_link_s * 1e3),
     ]);
 
+    // four-tier: an NVMe disk tier absorbs admission shortfalls as spills
+    // instead of KV drops; the trajectory tracks spill traffic and the
+    // read-through surcharge the spill-victim choice controls
+    let fcfg = EvictionSimConfig::skewed_reuse_four_tier(cost.clone());
+    let flru = simulate_eviction(&fcfg, &Lru);
+    let fra = simulate_eviction(&fcfg, &RecomputeAware::new(cost));
+    t.row(&[
+        "kvstore four-tier sim (disk spill)".into(),
+        "1".into(),
+        kvpr::util::fmt_secs(0.0),
+        format!(
+            "{} spills, {:.1} ms nvme writeback, {:.2} ms read-through",
+            flru.spills,
+            flru.spill_link_s * 1e3,
+            flru.readthrough_s * 1e3
+        ),
+    ]);
+
     let json = format!(
-        "{{\n  \"bench\": \"kvstore\",\n  \"policies\": {{\n    \"lru\": {},\n    \"recompute_aware\": {}\n  }},\n  \"tiered\": {{\n    \"lru\": {},\n    \"recompute_aware\": {}\n  }}\n}}\n",
+        "{{\n  \"bench\": \"kvstore\",\n  \"policies\": {{\n    \"lru\": {},\n    \"recompute_aware\": {}\n  }},\n  \"tiered\": {{\n    \"lru\": {},\n    \"recompute_aware\": {}\n  }},\n  \"four_tier\": {{\n    \"lru\": {},\n    \"recompute_aware\": {}\n  }}\n}}\n",
         policy_json(&lru),
         policy_json(&ra),
         policy_json(&tlru),
-        policy_json(&tra)
+        policy_json(&tra),
+        policy_json(&flru),
+        policy_json(&fra)
     );
     if let Err(e) = std::fs::write("BENCH_kvstore.json", &json) {
         eprintln!("BENCH_kvstore.json not written: {e}");
@@ -185,12 +205,15 @@ fn main() {
 
 fn policy_json(r: &EvictionSimReport) -> String {
     format!(
-        "{{ \"steps_per_s\": {:.3}, \"link_busy_frac\": {:.4}, \"evictions\": {}, \"demotions\": {}, \"demote_link_s\": {:.6}, \"steps\": {}, \"peak_concurrency\": {} }}",
+        "{{ \"steps_per_s\": {:.3}, \"link_busy_frac\": {:.4}, \"evictions\": {}, \"demotions\": {}, \"demote_link_s\": {:.6}, \"spills\": {}, \"spill_link_s\": {:.6}, \"readthrough_s\": {:.6}, \"steps\": {}, \"peak_concurrency\": {} }}",
         r.steps_per_s,
         r.link_busy_frac,
         r.evictions,
         r.demotions,
         r.demote_link_s,
+        r.spills,
+        r.spill_link_s,
+        r.readthrough_s,
         r.steps,
         r.peak_concurrency
     )

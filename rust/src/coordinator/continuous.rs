@@ -26,11 +26,17 @@
 //!
 //! Under tiering, every step additionally *polls* the KV store's
 //! [`MigrationEngine`](crate::kvstore::MigrationEngine) — landing finished
-//! promotions/demotions, aligning the engine's device-resident window to
-//! the settled suffix, queueing prefetch — and grants it a link-byte
-//! budget ([`TieredKvConfig::step_link_budget_bytes`]).  Nothing on this
-//! thread ever waits on the migration link: a full gpu tier is drained by
-//! asynchronous demotions whose gpu bytes free at issuance.
+//! promotions/demotions/spills, aligning the engine's device-resident
+//! window to the settled suffix, queueing prefetch — and grants it a
+//! link-byte budget ([`TieredKvConfig::step_link_budget_bytes`]).  Nothing
+//! on this thread ever waits on the migration links: a full gpu tier is
+//! drained by asynchronous demotions whose gpu bytes free at issuance,
+//! and with a disk tier configured ([`TieredKvConfig::disk_bytes`]) a
+//! crowded dram tier is drained the same way by watermark-driven spills
+//! whose NVMe writebacks ride leftover step budget — admission that would
+//! have backpressured parks cold blocks on disk instead, and the planner
+//! charges disk-resident prefixes a two-hop transfer term
+//! ([`Planner::plan_batch_four_tier`](crate::scheduler::Planner::plan_batch_four_tier)).
 //!
 //! Requests move through `Queued → Prefill → Decoding → Done`
 //! ([`RequestState`]); per-step latency, queue depth and occupancy land in
@@ -105,6 +111,18 @@ pub struct TieredKvConfig {
     pub pinned_bytes: u64,
     /// Cold cpu-dram tier capacity.
     pub dram_bytes: u64,
+    /// NVMe disk tier capacity below dram; 0 keeps the PR 3 three-tier
+    /// layout.  The disk tier's link is derived from the engine link
+    /// ([`LinkConfig::nvme_below`](crate::transfer::LinkConfig::nvme_below)),
+    /// and dram blocks spill to it under the watermark policy before
+    /// admission has to backpressure.
+    pub disk_bytes: u64,
+    /// Capacity-aware spill: dram occupancy above this fraction spills
+    /// cold blocks to disk (leftover-budget NVMe traffic).  Ignored when
+    /// `disk_bytes` is 0.
+    pub spill_watermark: f64,
+    /// Spills issued per event-loop step at most.
+    pub spill_max_per_step: usize,
     /// Tokens per block; match the smallest artifact L bucket so dropped-KV
     /// floors land on a real recompute bucket.
     pub block_tokens: usize,
@@ -133,6 +151,9 @@ impl Default for TieredKvConfig {
         TieredKvConfig {
             pinned_bytes: 64 << 20,
             dram_bytes: 256 << 20,
+            disk_bytes: 0,
+            spill_watermark: 0.9,
+            spill_max_per_step: 2,
             block_tokens: 32,
             policy: EvictKind::RecomputeAware,
             prefetch_blocks: 1,
@@ -287,6 +308,16 @@ fn serve_loop(
         None
     };
     let kv_pool = MemPool::new("host-kv-budget", cfg.kv_budget_bytes);
+    // the disk tier rides an NVMe-shaped wire derived from the engine
+    // link; its speed ratio feeds both the spill policy's two-hop reload
+    // scoring and the planner's two-hop transfer term
+    let nvme_link = crate::transfer::LinkConfig::nvme_below(&cfg.engine.link);
+    let nvme_factor = if nvme_link.bytes_per_sec.is_finite() && nvme_link.bytes_per_sec > 0.0 {
+        cfg.engine.link.bytes_per_sec / nvme_link.bytes_per_sec
+    } else {
+        // unthrottled links: fall back to the link model's shape ratio
+        crate::transfer::NVME_BANDWIDTH_FACTOR
+    };
     // tiered mode: the budget becomes the gpu tier; admission goes through
     // the block-granular store and its reclaimable lower tiers instead
     let mut store: Option<(KvStore, Prefetcher)> = cfg.tiering.as_ref().map(|t| {
@@ -296,18 +327,22 @@ fn serve_loop(
                 gpu_bytes: cfg.kv_budget_bytes,
                 pinned_bytes: t.pinned_bytes,
                 dram_bytes: t.dram_bytes,
+                disk_bytes: t.disk_bytes,
                 block_tokens: t.block_tokens,
                 link: cfg.engine.link.clone(),
+                nvme_link: nvme_link.clone(),
                 wire_elem_bytes: if t.kv_quant_wire {
                     crate::kvcache::ELEM_BYTES_INT4_G64
                 } else {
                     crate::kvcache::ELEM_BYTES_F32
                 },
                 promote_cooldown: t.promote_cooldown,
+                spill_watermark: t.spill_watermark,
+                spill_max_per_step: t.spill_max_per_step,
             },
-            // the eviction score re-transfers at the same wire width the
-            // migration engine charges on the link
-            t.policy.build_wire(cost, t.kv_quant_wire),
+            // the eviction/demotion/spill scores move bytes at the same
+            // wire width and NVMe ratio the migration engine charges
+            t.policy.build_tiered(cost, t.kv_quant_wire, nvme_factor),
         );
         (s, Prefetcher::new(t.max_inflight))
     });
@@ -326,6 +361,10 @@ fn serve_loop(
     let mut queue: VecDeque<Pending> = VecDeque::new();
     let mut groups: Vec<Group> = Vec::new();
     let mut seen_kv_drops: u64 = 0;
+    // cumulative disk-traffic counters already surfaced to the metrics
+    // (spills/hops can also be issued inside admission, before the step's
+    // migration snapshot, so deltas are taken against these, not per-step)
+    let mut seen_disk: (u64, u64, u64, u64) = (0, 0, 0, 0);
 
     loop {
         // -- 1. arrivals -----------------------------------------------------
@@ -500,6 +539,14 @@ fn serve_loop(
                 st1.demotions - st0.demotions,
                 st1.demotions_landed - st0.demotions_landed,
             );
+            let disk = (st1.spills, st1.spills_landed, st1.hops, st1.hops_landed);
+            metrics.record_disk(
+                disk.0 - seen_disk.0,
+                disk.1 - seen_disk.1,
+                disk.2 - seen_disk.2,
+                disk.3 - seen_disk.3,
+            );
+            seen_disk = disk;
         }
 
         // -- 3+4. re-plan and step every group -------------------------------
@@ -517,11 +564,14 @@ fn serve_loop(
             // dropped-KV prefix (floors the recompute term).
             let plan_l = lane_planner.as_ref().map(|p| {
                 let lanes = vec![g.sess.kv_len(); g.sess.batch_bucket()];
-                let floor = match (&g.kv, store.as_ref()) {
-                    (KvHold::Tiered(seq), Some((s, _))) => s.kv_dropped_tokens(*seq),
-                    _ => 0,
+                let (floor, disk) = match (&g.kv, store.as_ref()) {
+                    (KvHold::Tiered(seq), Some((s, _))) => {
+                        (s.kv_dropped_tokens(*seq), s.disk_resident_tokens(*seq))
+                    }
+                    _ => (0, 0),
                 };
-                p.plan_batch_tiered(&lanes, g.sess.resident_tokens(), floor).l()
+                p.plan_batch_four_tier(&lanes, g.sess.resident_tokens(), floor, disk, nvme_factor)
+                    .l()
             });
             if let Some(l) = plan_l {
                 g.last_l = l;

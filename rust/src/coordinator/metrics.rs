@@ -41,6 +41,11 @@ struct Inner {
     migration_deferrals: u64,
     demotions_issued: u64,
     demotions_polled: u64,
+    // -- disk-tier counters --------------------------------------------------
+    spills_issued: u64,
+    spills_polled: u64,
+    hops_issued: u64,
+    hops_polled: u64,
 }
 
 impl ServeMetrics {
@@ -132,6 +137,33 @@ impl ServeMetrics {
     pub fn demotion_totals(&self) -> (u64, u64) {
         let m = self.inner.lock().unwrap();
         (m.demotions_issued, m.demotions_polled)
+    }
+
+    /// Disk-tier traffic this step: dram→disk spills issued (dram bytes
+    /// freed instantly) and their NVMe writebacks polled in, plus
+    /// disk→dram promotion hops issued and landed (the first leg of the
+    /// two-hop promotion path).
+    pub fn record_disk(
+        &self,
+        spills_issued: u64,
+        spills_polled: u64,
+        hops_issued: u64,
+        hops_polled: u64,
+    ) {
+        let mut m = self.inner.lock().unwrap();
+        m.spills_issued += spills_issued;
+        m.spills_polled += spills_polled;
+        m.hops_issued += hops_issued;
+        m.hops_polled += hops_polled;
+    }
+
+    /// (spills issued, spill writebacks polled, hops issued, hops polled)
+    /// disk-tier totals.  Issued > 0 with polled > 0 proves every disk
+    /// transfer moved through the migration engine's poll path — the step
+    /// loop never blocked on NVMe.
+    pub fn disk_totals(&self) -> (u64, u64, u64, u64) {
+        let m = self.inner.lock().unwrap();
+        (m.spills_issued, m.spills_polled, m.hops_issued, m.hops_polled)
     }
 
     /// Highest number of requests decoding concurrently in any step.
@@ -306,5 +338,14 @@ mod tests {
         m.record_migrations(0, 2, 0, 0, 1);
         assert_eq!(m.migration_totals(), (3, 3, 1));
         assert_eq!(m.demotion_totals(), (1, 1));
+    }
+
+    #[test]
+    fn disk_counters() {
+        let m = ServeMetrics::new();
+        assert_eq!(m.disk_totals(), (0, 0, 0, 0));
+        m.record_disk(2, 0, 1, 0);
+        m.record_disk(0, 2, 0, 1);
+        assert_eq!(m.disk_totals(), (2, 2, 1, 1));
     }
 }

@@ -8,14 +8,15 @@
 
 use crate::memory::{MemPool, PoolGuard};
 
-/// Storage tier of one KV block, fastest first — the standard production
-/// layout the KV-cache management survey describes: GPU HBM over pinned
-/// host memory over pageable CPU DRAM.
+/// Storage tier of one KV block, fastest first — the full production
+/// hierarchy the KV-cache management survey describes: GPU HBM over pinned
+/// host memory over pageable CPU DRAM over NVMe storage.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum Tier {
     GpuHbm,
     Pinned,
     CpuDram,
+    DiskNvme,
 }
 
 impl Tier {
@@ -25,6 +26,7 @@ impl Tier {
             Tier::GpuHbm => "gpu-hbm",
             Tier::Pinned => "pinned",
             Tier::CpuDram => "cpu-dram",
+            Tier::DiskNvme => "disk-nvme",
         }
     }
 
@@ -33,12 +35,19 @@ impl Tier {
         match self {
             Tier::GpuHbm => Some(Tier::Pinned),
             Tier::Pinned => Some(Tier::CpuDram),
-            Tier::CpuDram => None,
+            Tier::CpuDram => Some(Tier::DiskNvme),
+            Tier::DiskNvme => None,
         }
     }
 
+    /// Whether a migration touching this tier rides the NVMe link rather
+    /// than the CPU↔GPU interconnect.
+    pub fn is_disk(&self) -> bool {
+        matches!(self, Tier::DiskNvme)
+    }
+
     /// All tiers, fastest first.
-    pub const ALL: [Tier; 3] = [Tier::GpuHbm, Tier::Pinned, Tier::CpuDram];
+    pub const ALL: [Tier; 4] = [Tier::GpuHbm, Tier::Pinned, Tier::CpuDram, Tier::DiskNvme];
 }
 
 /// Identifier of a block: the owning sequence plus its index within the
@@ -106,11 +115,15 @@ mod tests {
     fn tier_order_and_names() {
         assert!(Tier::GpuHbm < Tier::Pinned);
         assert!(Tier::Pinned < Tier::CpuDram);
+        assert!(Tier::CpuDram < Tier::DiskNvme);
         assert_eq!(Tier::GpuHbm.name(), "gpu-hbm");
+        assert_eq!(Tier::DiskNvme.name(), "disk-nvme");
         assert_eq!(Tier::GpuHbm.lower(), Some(Tier::Pinned));
         assert_eq!(Tier::Pinned.lower(), Some(Tier::CpuDram));
-        assert_eq!(Tier::CpuDram.lower(), None);
-        assert_eq!(Tier::ALL.len(), 3);
+        assert_eq!(Tier::CpuDram.lower(), Some(Tier::DiskNvme));
+        assert_eq!(Tier::DiskNvme.lower(), None);
+        assert!(Tier::DiskNvme.is_disk() && !Tier::CpuDram.is_disk());
+        assert_eq!(Tier::ALL.len(), 4);
     }
 
     #[test]

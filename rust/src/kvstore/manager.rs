@@ -1,8 +1,10 @@
-//! Tier pools, the migration link, and pinned staging — the resource layer
+//! Tier pools, the migration links, and pinned staging — the resource layer
 //! under the [`MigrationEngine`](super::MigrationEngine).
 //!
-//! The manager owns the three tier [`BlockPool`]s, the [`Link`] migrations
-//! ride, and the [`PinnedPool`] staging freelist — whose buffers are
+//! The manager owns the four tier [`BlockPool`]s, the two [`Link`]s
+//! migrations ride — the CPU↔GPU interconnect for gpu↔pinned↔dram traffic
+//! and a slower, higher-latency **NVMe link** for anything touching the
+//! disk tier — and the [`PinnedPool`] staging freelist, whose buffers are
 //! charged against the *pinned tier's own* [`MemPool`], so staging
 //! occupancy and pinned-resident blocks compete for the same capacity,
 //! exactly as on a real machine.
@@ -10,9 +12,10 @@
 //! Scheduling — and all counting — lives one layer up: the migration
 //! engine decides *when* bytes move (queued → staged → in-flight →
 //! landed, under the per-step link-byte budget); this layer only answers
-//! "reserve these bytes in that tier".  PR 2's `migrate_sync`
-//! — a blocking link wait on the caller, used by the old eviction path —
-//! is gone with the serving loop's last synchronous migration.
+//! "reserve these bytes in that tier" and "which wire does this hop ride".
+//! PR 2's `migrate_sync` — a blocking link wait on the caller, used by the
+//! old eviction path — is gone with the serving loop's last synchronous
+//! migration.
 
 use crate::memory::MemPool;
 use crate::transfer::{Link, LinkConfig, PinnedPool};
@@ -25,23 +28,32 @@ use super::block::{BlockPool, Tier};
 /// link-traffic slice of it).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct TierStats {
-    /// Migrations put on the link.
+    /// Migrations put on a link (either wire).
     pub migrations: u64,
-    /// Wire bytes put on the link (post-quantization widths).
+    /// Wire bytes put on the links (post-quantization widths).
     pub migrated_bytes: u64,
 }
 
-/// Owns the three tier pools, the migration link, and pinned staging.
+/// Owns the four tier pools, the two migration links, and pinned staging.
 pub struct TierManager {
     gpu: BlockPool,
     pinned: BlockPool,
     dram: BlockPool,
+    disk: BlockPool,
     link: Link,
+    nvme: Link,
     staging: PinnedPool,
 }
 
 impl TierManager {
-    pub fn new(gpu_bytes: u64, pinned_bytes: u64, dram_bytes: u64, link: LinkConfig) -> Self {
+    pub fn new(
+        gpu_bytes: u64,
+        pinned_bytes: u64,
+        dram_bytes: u64,
+        disk_bytes: u64,
+        link: LinkConfig,
+        nvme: LinkConfig,
+    ) -> Self {
         // the pinned tier's byte pool is shared with the staging freelist so
         // pinned blocks and pinned staging buffers draw from one budget
         let pinned_mem = MemPool::new(Tier::Pinned.name(), pinned_bytes);
@@ -49,7 +61,9 @@ impl TierManager {
             gpu: BlockPool::new(Tier::GpuHbm, gpu_bytes),
             pinned: BlockPool::from_pool(Tier::Pinned, pinned_mem.clone()),
             dram: BlockPool::new(Tier::CpuDram, dram_bytes),
+            disk: BlockPool::new(Tier::DiskNvme, disk_bytes),
             link: Link::new(link),
+            nvme: Link::new(nvme),
             staging: PinnedPool::with_accounting(pinned_mem),
         }
     }
@@ -59,11 +73,28 @@ impl TierManager {
             Tier::GpuHbm => &self.gpu,
             Tier::Pinned => &self.pinned,
             Tier::CpuDram => &self.dram,
+            Tier::DiskNvme => &self.disk,
         }
     }
 
+    /// The CPU↔GPU interconnect (gpu↔pinned↔dram migrations).
     pub fn link(&self) -> &Link {
         &self.link
+    }
+
+    /// The NVMe wire (anything touching the disk tier).
+    pub fn nvme(&self) -> &Link {
+        &self.nvme
+    }
+
+    /// The wire a `from → to` migration rides: a hop with either endpoint
+    /// on disk moves at NVMe speed, everything else at interconnect speed.
+    pub fn link_for(&self, from: Tier, to: Tier) -> &Link {
+        if from.is_disk() || to.is_disk() {
+            &self.nvme
+        } else {
+            &self.link
+        }
     }
 
     pub fn staging(&self) -> &PinnedPool {
@@ -81,7 +112,14 @@ mod tests {
     use super::*;
 
     fn mgr() -> TierManager {
-        TierManager::new(1 << 20, 1 << 20, 4 << 20, LinkConfig::unthrottled())
+        TierManager::new(
+            1 << 20,
+            1 << 20,
+            4 << 20,
+            16 << 20,
+            LinkConfig::unthrottled(),
+            LinkConfig::unthrottled(),
+        )
     }
 
     #[test]
@@ -92,13 +130,33 @@ mod tests {
         assert_eq!(m.pool(Tier::Pinned).used(), 0);
         drop(g);
         assert_eq!(m.pool(Tier::GpuHbm).used(), 0);
+        let g = m.grab(Tier::DiskNvme, 8192).unwrap();
+        assert_eq!(m.pool(Tier::DiskNvme).used(), 8192);
+        drop(g);
     }
 
     #[test]
     fn grab_fails_when_tier_full() {
-        let m = TierManager::new(4096, 1 << 20, 1 << 20, LinkConfig::unthrottled());
+        let m = TierManager::new(
+            4096,
+            1 << 20,
+            1 << 20,
+            0, // no disk tier configured
+            LinkConfig::unthrottled(),
+            LinkConfig::unthrottled(),
+        );
         let _held = m.grab(Tier::GpuHbm, 4096).unwrap();
         assert!(m.grab(Tier::GpuHbm, 4096).is_none());
+        assert!(m.grab(Tier::DiskNvme, 1).is_none(), "zero-capacity disk tier");
+    }
+
+    #[test]
+    fn disk_hops_ride_the_nvme_wire() {
+        let m = mgr();
+        assert!(std::ptr::eq(m.link_for(Tier::CpuDram, Tier::DiskNvme), m.nvme()));
+        assert!(std::ptr::eq(m.link_for(Tier::DiskNvme, Tier::CpuDram), m.nvme()));
+        assert!(std::ptr::eq(m.link_for(Tier::CpuDram, Tier::GpuHbm), m.link()));
+        assert!(std::ptr::eq(m.link_for(Tier::GpuHbm, Tier::Pinned), m.link()));
     }
 
     #[test]

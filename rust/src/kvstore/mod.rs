@@ -2,28 +2,31 @@
 //! lifecycle for all tier traffic.
 //!
 //! PR 1's serving loop budgeted KV as one flat per-batch reservation; PR 2
-//! turned that into a managed three-tier store but still blocked the
-//! serving thread on every gpu-tier eviction.  This revision finishes the
-//! job KVPR's core claim demands — *the GPU never idles waiting on the
-//! link* — by moving promotions, demotions and prefetch through a single
-//! engine with one lifecycle:
+//! turned that into a managed three-tier store; PR 3 made every tier
+//! crossing asynchronous.  This revision extends the hierarchy one level
+//! down — the KV-cache management survey's full production layout — with
+//! an **NVMe disk tier** below cpu-dram, while keeping KVPR's core claim
+//! intact: *the GPU never idles waiting on any wire*.  All traffic moves
+//! through a single engine with one lifecycle:
 //!
 //! ```text
 //!   queued ──▶ staged ──▶ in-flight ──▶ landed
 //! ```
 //!
 //! * [`BlockPool`] / [`Tier`] — fixed-size token blocks, one byte-accounted
-//!   reservation each, across gpu-hbm / pinned / cpu-dram pools
-//!   ([`crate::memory::MemPool`] underneath).
-//! * [`TierManager`] — the resource layer: tier pools, the migration
-//!   [`Link`](crate::transfer::Link), and the pinned-accounted
+//!   reservation each, across the gpu-hbm ⊃ pinned ⊃ cpu-dram ⊃ disk-nvme
+//!   tier *chain* ([`crate::memory::MemPool`] underneath).
+//! * [`TierManager`] — the resource layer: tier pools, the two migration
+//!   wires — the CPU↔GPU [`Link`](crate::transfer::Link) and a slower,
+//!   higher-latency NVMe link for disk-tier hops — and the pinned-accounted
 //!   [`PinnedPool`](crate::transfer::PinnedPool) staging freelist.
 //! * [`MigrationEngine`] — the scheduler: every migration reserves its
 //!   destination at request time, then waits in the queue until the
 //!   serving loop grants a per-step **link-byte budget**; launches ride
-//!   the link in class order ([`MigrationClass`]: demand promotions, then
-//!   demotions, then prefetch) and completions are *polled*, never waited
-//!   for, on the serving path.
+//!   their wire in class order ([`MigrationClass`]: demand promotions,
+//!   then gpu-eviction demotions, then prefetch, then dram→disk spill —
+//!   which only ever consumes leftover budget) and completions are
+//!   *polled*, never waited for, on the serving path.
 //! * [`KvStore`] — placement, residency and reclamation: resident gpu
 //!   blocks form a *suffix* of each sequence's tokens (the newest KV), so
 //!   they shrink the per-step H2D transfer term the planner sees
@@ -31,22 +34,30 @@
 //!   Evictions issue **asynchronous demotions**: the victim's gpu bytes
 //!   free at issuance and the writeback lands later, so a full gpu tier
 //!   never stalls the step loop; a victim then sits out a configurable
-//!   cool-down before re-promotion (anti-thrash hysteresis).  Admission
-//!   that would backpressure may instead drop prefix KV and keep the X
-//!   activations, trading stored bytes for recompute work.  The suffix
-//!   invariant itself lives in one place — the `suffix` module's
-//!   `SuffixRuns` iterator — which every placement walk shares.
+//!   cool-down before re-promotion (anti-thrash hysteresis).  A
+//!   **capacity-aware spill** check demotes cold dram blocks to disk
+//!   before admission pressure becomes backpressure, and promoting a
+//!   disk-resident block back is a **two-hop** (disk→dram→gpu) migration
+//!   the store stages across steps.  Admission that still cannot place a
+//!   block parks it on the disk tier directly, and as the last resort
+//!   drops prefix KV while keeping the X activations, trading stored
+//!   bytes for recompute work.  The suffix invariant itself lives in one
+//!   place — the `suffix` module's `SuffixRuns` iterator — which every
+//!   placement walk shares.
 //! * [`Prefetcher`] — bounded-depth speculative promotion of a group's
 //!   blocks ahead of its decode step, as [`MigrationClass::Prefetch`]
-//!   traffic through the same engine.
-//! * [`EvictPolicy`] — pluggable victim selection: [`Lru`] recency vs the
-//!   [`RecomputeAware`] refill-cost score driven by the profiler's
-//!   [`CostModel`](crate::scheduler::CostModel); under int4 wire
-//!   quantization both the migration traffic and the refill scoring use
+//!   traffic through the same engine (including disk→dram hop warming).
+//! * [`EvictPolicy`] — pluggable victim selection with three lenses:
+//!   in-place reclamation (refill only), gpu demotion (refill + writeback
+//!   at the wire width) and disk spill (NVMe writeback + two-hop reload);
+//!   [`Lru`] recency vs the [`RecomputeAware`] scores driven by the
+//!   profiler's [`CostModel`](crate::scheduler::CostModel).  Under int4
+//!   wire quantization the migration traffic and every scoring lens use
 //!   the quantized element width.
 //! * [`sim`] — deterministic analytic comparison of eviction strategies on
 //!   skewed reuse workloads (`simulate_eviction`), including the async
-//!   demotion cost of a budgeted gpu tier, feeding `BENCH_kvstore.json`.
+//!   demotion cost of a budgeted gpu tier and the four-tier spill model
+//!   (disk capacity, NVMe read-through), feeding `BENCH_kvstore.json`.
 //!
 //! The serving integration lives in
 //! [`ContinuousServer`](crate::coordinator::ContinuousServer): admission

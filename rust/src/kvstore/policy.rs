@@ -1,4 +1,4 @@
-//! Pluggable eviction policies for the tiered KV store.
+//! Pluggable eviction, demotion and spill policies for the tiered KV store.
 //!
 //! The store hands a policy a slate of candidate [`BlockView`]s and asks
 //! which one to give up.  [`Lru`] is the classical recency baseline; the
@@ -10,6 +10,20 @@
 //! block beyond `l*` would have to be re-transferred at the link rate C
 //! (Eq. 6).  This generalises the Eq. (11) split from "how to fetch the
 //! cache this step" into "what to keep resident at all".
+//!
+//! Three victim questions, three lenses over the same cost model:
+//!
+//! * [`EvictPolicy::victim`] — reclamation in place (drop KV, keep X):
+//!   pure refill cost, no writeback crosses a wire.
+//! * [`EvictPolicy::demote_victim`] — gpu eviction: the refill cost *plus*
+//!   the demotion writeback, scored at the migration wire width
+//!   (`wire_elem_bytes`) — under int4 wire quantization the writeback is
+//!   ~6.4× cheaper than full width, and scoring it at full width would
+//!   bias victim choice toward small blocks whose refill is expensive.
+//! * [`EvictPolicy::spill_victim`] — dram→disk capacity spill: the NVMe
+//!   writeback plus the *two-hop* (disk→dram→gpu) reload of whatever the
+//!   recompute path will not cover — so spill prefers cold blocks whose
+//!   recompute-aware refill beats their two-hop reload.
 
 use super::block::BlockId;
 use crate::scheduler::CostModel;
@@ -35,8 +49,23 @@ pub struct BlockView {
 pub trait EvictPolicy: Send {
     fn name(&self) -> &'static str;
 
-    /// `candidates` is non-empty; return the index of the victim.
+    /// Reclamation victim (drop KV in place): `candidates` is non-empty;
+    /// return the index of the victim.
     fn victim(&self, candidates: &[BlockView]) -> usize;
+
+    /// Gpu-eviction victim: like [`EvictPolicy::victim`] but the move also
+    /// pays a demotion writeback on the wire.  Defaults to the plain
+    /// victim for policies that do not model traffic.
+    fn demote_victim(&self, candidates: &[BlockView]) -> usize {
+        self.victim(candidates)
+    }
+
+    /// Dram→disk spill victim: the move pays an NVMe writeback now and a
+    /// two-hop reload later for tokens the recompute path will not cover.
+    /// Defaults to the plain victim.
+    fn spill_victim(&self, candidates: &[BlockView]) -> usize {
+        self.victim(candidates)
+    }
 }
 
 /// Least-recently-used: evict the block of the sequence that decoded
@@ -59,15 +88,30 @@ impl EvictPolicy for Lru {
     }
 }
 
-/// Recompute-aware eviction driven by the profiler's [`CostModel`].
+/// Recompute-aware victim selection driven by the profiler's [`CostModel`].
+///
+/// `cost.transfer_kv_per_token_s` is expected at the *migration wire
+/// width* (see [`EvictKind::build_tiered`]): refill transfers, demotion
+/// writebacks and spill writebacks all cross the wires at that width, so
+/// one coefficient serves every lens.
 #[derive(Debug, Clone)]
 pub struct RecomputeAware {
     pub cost: CostModel,
+    /// NVMe wire time per byte relative to the CPU↔GPU interconnect
+    /// (pcie_bytes_per_sec / nvme_bytes_per_sec); feeds the spill lens.
+    pub nvme_factor: f64,
 }
 
 impl RecomputeAware {
+    /// Defaults the NVMe gap to the link model's
+    /// [`NVME_BANDWIDTH_FACTOR`](crate::transfer::NVME_BANDWIDTH_FACTOR).
     pub fn new(cost: CostModel) -> Self {
-        RecomputeAware { cost }
+        Self::with_nvme_factor(cost, crate::transfer::NVME_BANDWIDTH_FACTOR)
+    }
+
+    pub fn with_nvme_factor(cost: CostModel, nvme_factor: f64) -> Self {
+        assert!(nvme_factor > 0.0, "nvme_factor must be positive");
+        RecomputeAware { cost, nvme_factor }
     }
 
     /// Seconds to re-materialise this block's contribution if evicted:
@@ -79,6 +123,47 @@ impl RecomputeAware {
         rec as f64 * (self.cost.recompute_per_token_s + self.cost.transfer_act_per_token_s)
             + xfer as f64 * self.cost.transfer_kv_per_token_s
     }
+
+    /// Full cost of demoting this block out of the gpu tier: the refill
+    /// *plus* the eviction writeback, both at the wire width the
+    /// [`MigrationEngine`](super::MigrationEngine) charges.  Scoring the
+    /// writeback at full storage width instead would overweight large
+    /// blocks by the quantization ratio (~6.4× under int4 wire).
+    pub fn demote_cost(&self, b: &BlockView) -> f64 {
+        self.refill_cost(b) + b.tokens as f64 * self.cost.transfer_kv_per_token_s
+    }
+
+    /// Full cost of spilling this block to disk: the NVMe writeback now,
+    /// plus — for the tokens the split region's recompute path will not
+    /// cover — a *two-hop* reload (disk→dram at NVMe speed, then dram→gpu
+    /// at interconnect speed) whenever the block is needed again.
+    pub fn spill_cost(&self, b: &BlockView) -> f64 {
+        let kv = self.cost.transfer_kv_per_token_s;
+        let rec = b.split_l.saturating_sub(b.start_token).min(b.tokens);
+        let xfer = b.tokens - rec;
+        b.tokens as f64 * kv * self.nvme_factor
+            + rec as f64 * (self.cost.recompute_per_token_s + self.cost.transfer_act_per_token_s)
+            + xfer as f64 * kv * (1.0 + self.nvme_factor)
+    }
+
+    fn min_by_score(
+        &self,
+        candidates: &[BlockView],
+        score: impl Fn(&BlockView) -> f64,
+    ) -> usize {
+        candidates
+            .iter()
+            .enumerate()
+            .min_by(|(_, x), (_, y)| {
+                score(x)
+                    .partial_cmp(&score(y))
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(x.last_use.cmp(&y.last_use))
+                    .then(x.id.cmp(&y.id))
+            })
+            .map(|(i, _)| i)
+            .expect("victim() over empty candidate slate")
+    }
 }
 
 impl EvictPolicy for RecomputeAware {
@@ -87,18 +172,15 @@ impl EvictPolicy for RecomputeAware {
     }
 
     fn victim(&self, candidates: &[BlockView]) -> usize {
-        candidates
-            .iter()
-            .enumerate()
-            .min_by(|(_, x), (_, y)| {
-                self.refill_cost(x)
-                    .partial_cmp(&self.refill_cost(y))
-                    .unwrap_or(std::cmp::Ordering::Equal)
-                    .then(x.last_use.cmp(&y.last_use))
-                    .then(x.id.cmp(&y.id))
-            })
-            .map(|(i, _)| i)
-            .expect("victim() over empty candidate slate")
+        self.min_by_score(candidates, |b| self.refill_cost(b))
+    }
+
+    fn demote_victim(&self, candidates: &[BlockView]) -> usize {
+        self.min_by_score(candidates, |b| self.demote_cost(b))
+    }
+
+    fn spill_victim(&self, candidates: &[BlockView]) -> usize {
+        self.min_by_score(candidates, |b| self.spill_cost(b))
     }
 }
 
@@ -117,12 +199,23 @@ impl EvictKind {
     }
 
     /// Build the policy with the migration wire width taken into account:
-    /// when `kv_quant_wire` is set, evicted-KV refills re-transfer at the
-    /// int4 wire width (0.625 B/elem instead of 4), so the scoring model's
-    /// transfer term shrinks by the same ratio the
+    /// when `kv_quant_wire` is set, evicted-KV refills and demotion/spill
+    /// writebacks are all scored at the int4 wire width (0.625 B/elem
+    /// instead of 4), the same ratio the
     /// [`MigrationEngine`](super::MigrationEngine) charges on the link —
-    /// the refill-cost comparison stays honest under quantization.
+    /// the cost comparison stays honest under quantization.
     pub fn build_wire(&self, cost: CostModel, kv_quant_wire: bool) -> Box<dyn EvictPolicy> {
+        self.build_tiered(cost, kv_quant_wire, crate::transfer::NVME_BANDWIDTH_FACTOR)
+    }
+
+    /// [`EvictKind::build_wire`] with the disk tier's measured NVMe/PCIe
+    /// speed ratio (feeds the spill lens's two-hop reload term).
+    pub fn build_tiered(
+        &self,
+        cost: CostModel,
+        kv_quant_wire: bool,
+        nvme_factor: f64,
+    ) -> Box<dyn EvictPolicy> {
         let cost = if kv_quant_wire {
             let ratio = crate::kvcache::ELEM_BYTES_INT4_G64 / crate::kvcache::ELEM_BYTES_F32;
             cost.with_kv_quant(ratio)
@@ -131,7 +224,9 @@ impl EvictKind {
         };
         match self {
             EvictKind::Lru => Box::new(Lru),
-            EvictKind::RecomputeAware => Box::new(RecomputeAware::new(cost)),
+            EvictKind::RecomputeAware => {
+                Box::new(RecomputeAware::with_nvme_factor(cost, nvme_factor))
+            }
         }
     }
 }
@@ -165,6 +260,9 @@ mod tests {
     fn lru_picks_stalest() {
         let cands = [view(1, 0, 0, 30, 0), view(2, 0, 0, 10, 0), view(3, 0, 0, 20, 0)];
         assert_eq!(Lru.victim(&cands), 1);
+        // Lru's demote/spill lenses are recency too (no traffic model)
+        assert_eq!(Lru.demote_victim(&cands), 1);
+        assert_eq!(Lru.spill_victim(&cands), 1);
     }
 
     #[test]
@@ -194,6 +292,73 @@ mod tests {
         let cs = p.refill_cost(&straddle);
         let co = p.refill_cost(&outside);
         assert!(ci < cs && cs < co, "{ci} {cs} {co}");
+    }
+
+    #[test]
+    fn demote_scoring_adds_the_writeback_and_flips_the_victim() {
+        // A: 32 tokens inside the split region (cheap refill by recompute);
+        // B: 24 tokens beyond it (expensive refill by re-transfer).
+        // Refill-only scoring prefers evicting A (1.92e-5 < 2.4e-5), but
+        // demoting A also writes 32 tokens back over the wire — the full
+        // demotion cost makes B the correct victim (5.12e-5 > 4.8e-5).
+        let p = RecomputeAware::new(cheap_recompute());
+        let a = view(1, 0, 0, 0, 32); // 32 tokens, all recomputable
+        let mut b = view(2, 2, 64, 0, 0); // beyond split
+        b.tokens = 24;
+        assert_eq!(p.victim(&[a, b]), 0, "refill lens picks the recomputable block");
+        assert_eq!(p.demote_victim(&[a, b]), 1, "writeback-aware lens picks the smaller block");
+        assert!(p.demote_cost(&a) > p.demote_cost(&b));
+        assert!(p.refill_cost(&a) < p.refill_cost(&b));
+    }
+
+    #[test]
+    fn demote_writeback_is_scored_at_wire_width() {
+        // The ROADMAP bug: scoring the writeback at full storage width
+        // while the MigrationEngine charges int4 wire bytes (0.15625×)
+        // overweights large blocks by ~6.4×.  With recompute nearly free:
+        //   A: 32 tokens inside the split   B: 24 tokens beyond it
+        // at the int4 wire width A is the cheaper demotion (its writeback
+        // shrank with the wire); at full width the stale scoring would
+        // evict B instead.
+        let cost = CostModel {
+            recompute_per_token_s: 1e-9,
+            transfer_kv_per_token_s: 1e-6,
+            transfer_act_per_token_s: 0.0,
+            gpu_overhead_s: 0.0,
+            link_latency_s: 0.0,
+        };
+        let a = view(1, 0, 0, 0, 32);
+        let mut b = view(2, 2, 64, 0, 0);
+        b.tokens = 24;
+        let quant = EvictKind::RecomputeAware.build_wire(cost.clone(), true);
+        assert_eq!(quant.demote_victim(&[a, b]), 0, "wire-width writeback must pick A");
+        // the buggy full-width writeback score, reconstructed by hand,
+        // orders the candidates the other way
+        let wire = RecomputeAware::new(cost.clone().with_kv_quant(0.15625));
+        let full_wb = |v: &BlockView| {
+            wire.refill_cost(v) + v.tokens as f64 * cost.transfer_kv_per_token_s
+        };
+        assert!(
+            full_wb(&a) > full_wb(&b),
+            "full-width writeback would have biased the choice to B: {} vs {}",
+            full_wb(&a),
+            full_wb(&b)
+        );
+        assert!(wire.demote_cost(&a) < wire.demote_cost(&b));
+    }
+
+    #[test]
+    fn spill_prefers_recompute_covered_blocks() {
+        let p = RecomputeAware::new(cheap_recompute());
+        // same size, same recency: the block inside the split region never
+        // needs its two-hop reload (recompute covers it), so it spills
+        let inside = view(1, 0, 0, 5, 64);
+        let beyond = view(2, 2, 64, 5, 64);
+        assert_eq!(p.spill_victim(&[beyond, inside]), 1);
+        assert!(p.spill_cost(&inside) < p.spill_cost(&beyond));
+        // the two-hop reload term scales with the NVMe gap
+        let slow = RecomputeAware::with_nvme_factor(cheap_recompute(), 16.0);
+        assert!(slow.spill_cost(&beyond) > p.spill_cost(&beyond));
     }
 
     #[test]

@@ -4,10 +4,12 @@
 //! The prefetcher is a thin policy layer over the store's
 //! [`MigrationEngine`](super::MigrationEngine): it queues promotions with
 //! [`MigrationClass::Prefetch`] — launched after demand promotions and
-//! demotions when the serving loop grants the step's link-byte budget via
-//! [`KvStore::pump_migrations`] — and bounds the number of open
-//! migrations so a burst of groups cannot swamp the queue with transfers
-//! that will be stale by the time they land.  The serving loop calls
+//! demotions (but still ahead of disk spill) when the serving loop grants
+//! the step's link-byte budget via [`KvStore::pump_migrations`] — and
+//! bounds the number of open migrations so a burst of groups cannot swamp
+//! the queue with transfers that will be stale by the time they land.  A
+//! prefetch that reaches a disk-resident block issues that block's
+//! disk→dram hop, warming the two-hop path ahead of demand.  The serving loop calls
 //! [`Prefetcher::poll`] once per step to install finished migrations,
 //! then [`Prefetcher::pump`] per decode group to keep the queue fed.
 
@@ -88,16 +90,21 @@ mod tests {
     const BB: u64 = 2048;
 
     fn slow_store(gpu_blocks: u64) -> KvStore {
+        // slow enough that promotions stay in flight across polls
+        let link = LinkConfig { bytes_per_sec: 50e3, latency_s: 0.0, chunk_bytes: 1 << 10 };
         KvStore::new(
             KvStoreConfig {
                 gpu_bytes: gpu_blocks * BB,
                 pinned_bytes: 8 * BB,
                 dram_bytes: 8 * BB,
+                disk_bytes: 0,
                 block_tokens: 16,
-                // slow enough that promotions stay in flight across polls
-                link: LinkConfig { bytes_per_sec: 50e3, latency_s: 0.0, chunk_bytes: 1 << 10 },
+                nvme_link: LinkConfig::nvme_below(&link),
+                link,
                 wire_elem_bytes: 4.0,
                 promote_cooldown: 0,
+                spill_watermark: 0.0,
+                spill_max_per_step: 2,
             },
             Box::new(Lru),
         )

@@ -24,6 +24,20 @@
 //! async-writeback residue.  Setting `demote_serial_frac = 1.0` recovers
 //! PR 2's synchronous `migrate_sync` eviction for comparison, which is
 //! how the tests pin that polling beats blocking at identical schedules.
+//!
+//! With `disk_bytes` set the sim becomes **four-tier**: admission
+//! shortfalls *spill* the policy's chosen prefix blocks to an emulated
+//! NVMe tier (full bytes back, KV preserved) before they drop any KV.
+//! Spill writebacks charge the NVMe wire (`nvme_factor` × the
+//! interconnect's per-byte time) and the wall only `spill_serial_frac` of
+//! it — the same async residue shape as demotions.  A spilled token the
+//! step's split does not cover pays a **read-through surcharge** (the
+//! extra NVMe hop of the two-hop reload), and each step picks the cheaper
+//! of the three-tier split or a split raised to cover the whole disk
+//! prefix by recompute — the `plan_batch_four_tier` logic in closed form.
+//! Recompute-aware spill therefore targets blocks the split covers anyway
+//! (zero surcharge), which is exactly what the live policy's spill lens
+//! scores.
 
 use crate::scheduler::{CostModel, SchedulePolicy, SplitSolver};
 
@@ -63,6 +77,14 @@ pub struct EvictionSimConfig {
     /// as wall time; 1.0 recovers the old synchronous `migrate_sync`
     /// model (the step loop waits the whole writeback out).
     pub demote_serial_frac: f64,
+    /// NVMe disk tier capacity; 0 disables the four-tier spill model.
+    pub disk_bytes: u64,
+    /// NVMe wire time per byte relative to the interconnect (the
+    /// `LinkConfig::nvme_below` ratio).
+    pub nvme_factor: f64,
+    /// Fraction of a spill writeback's NVMe time the step loop cannot
+    /// hide (async-writeback residue, like `demote_serial_frac`).
+    pub spill_serial_frac: f64,
 }
 
 impl EvictionSimConfig {
@@ -86,6 +108,9 @@ impl EvictionSimConfig {
             gpu_bytes: 0,
             wire_ratio: 1.0,
             demote_serial_frac: 0.25,
+            disk_bytes: 0,
+            nvme_factor: crate::transfer::NVME_BANDWIDTH_FACTOR,
+            spill_serial_frac: 0.25,
         }
     }
 
@@ -95,6 +120,16 @@ impl EvictionSimConfig {
     pub fn skewed_reuse_tiered(cost: CostModel) -> Self {
         let mut cfg = Self::skewed_reuse(cost);
         cfg.gpu_bytes = cfg.capacity_bytes * 4 / 10;
+        cfg
+    }
+
+    /// [`EvictionSimConfig::skewed_reuse_tiered`] with an NVMe tier large
+    /// enough to absorb every spill: the four-tier model — admission
+    /// shortfalls spill before they drop, and read-through surcharges make
+    /// the spill-victim choice observable.
+    pub fn skewed_reuse_four_tier(cost: CostModel) -> Self {
+        let mut cfg = Self::skewed_reuse_tiered(cost);
+        cfg.disk_bytes = cfg.capacity_bytes * 2;
         cfg
     }
 }
@@ -117,6 +152,16 @@ pub struct EvictionSimReport {
     /// Link seconds spent on demotion writebacks (async: only
     /// `demote_serial_frac` of this surfaces as wall time).
     pub demote_link_s: f64,
+    /// Dram→disk spill events (four-tier model; 0 when `disk_bytes` is 0).
+    pub spills: u64,
+    /// NVMe seconds spent on spill writebacks (async: only
+    /// `spill_serial_frac` of this surfaces as wall time).
+    pub spill_link_s: f64,
+    /// Wall seconds of NVMe read-through: spilled tokens the chosen split
+    /// did not cover, re-read over the extra hop every step they were
+    /// needed.  The spill-victim quality signal: a policy that spills
+    /// recompute-covered blocks keeps this at zero.
+    pub readthrough_s: f64,
     pub peak_concurrency: usize,
     pub completed: usize,
 }
@@ -133,6 +178,9 @@ struct SeqState {
     last_use: u64,
     /// gpu-resident suffix in tokens (resident-suffix model).
     resident: usize,
+    /// Tokens spilled to the disk tier (contiguous above the dropped
+    /// prefix; four-tier model).
+    spilled: usize,
 }
 
 /// Run the workload under `policy` and report throughput and reclamation.
@@ -152,6 +200,7 @@ pub fn simulate_eviction(cfg: &EvictionSimConfig, policy: &dyn EvictPolicy) -> E
             held_bytes: 0,
             last_use: 0,
             resident: 0,
+            spilled: 0,
         })
         .collect();
 
@@ -162,6 +211,9 @@ pub fn simulate_eviction(cfg: &EvictionSimConfig, policy: &dyn EvictPolicy) -> E
     let mut drops = 0u64;
     let mut demotions = 0u64;
     let mut demote_link = 0.0f64;
+    let mut spills = 0u64;
+    let mut spill_link = 0.0f64;
+    let mut readthrough = 0.0f64;
     let mut peak = 0usize;
 
     for round in 0..cfg.max_rounds {
@@ -177,11 +229,67 @@ pub fn simulate_eviction(cfg: &EvictionSimConfig, policy: &dyn EvictPolicy) -> E
             }
             let need = (cfg.seqs[i].prompt + cfg.seqs[i].gen) as u64 * bpt;
             while free < need {
+                let block_bytes = bt as u64 * bpt;
+                // four-tier: spill first — the policy's chosen prefix
+                // block moves to disk, giving its *full* bytes back and
+                // keeping the KV reachable (two-hop).  The NVMe writeback
+                // is async: the wire is charged in full, the wall only the
+                // serial residue.
+                if cfg.disk_bytes > 0 {
+                    let disk_used: u64 = st
+                        .iter()
+                        .filter(|s| !s.done)
+                        .map(|s| s.spilled as u64 * bpt)
+                        .sum();
+                    if disk_used + block_bytes <= cfg.disk_bytes {
+                        let mut cands: Vec<(usize, BlockView)> = Vec::new();
+                        for (j, s) in st.iter().enumerate() {
+                            if !s.admitted || s.done {
+                                continue;
+                            }
+                            let start = s.dropped + s.spilled;
+                            if start + bt > s.s {
+                                continue;
+                            }
+                            cands.push((
+                                j,
+                                BlockView {
+                                    id: BlockId { seq: j as u64, idx: start / bt },
+                                    tokens: bt,
+                                    start_token: start,
+                                    seq_len: s.s,
+                                    last_use: s.last_use,
+                                    split_l: solver.solve(s.s, s.s).l,
+                                },
+                            ));
+                        }
+                        if !cands.is_empty() {
+                            let views: Vec<BlockView> = cands.iter().map(|(_, v)| *v).collect();
+                            let (j, _) = cands[policy.spill_victim(&views)];
+                            st[j].spilled += bt;
+                            st[j].held_bytes = st[j].held_bytes.saturating_sub(block_bytes);
+                            st[j].resident = st[j]
+                                .resident
+                                .min(st[j].s.saturating_sub(st[j].dropped + st[j].spilled));
+                            let wire = bt as f64
+                                * cfg.cost.transfer_kv_per_token_s
+                                * cfg.wire_ratio
+                                * cfg.nvme_factor;
+                            link_busy += wire;
+                            spill_link += wire;
+                            wall += cfg.spill_serial_frac * wire;
+                            spills += 1;
+                            free += block_bytes;
+                            continue;
+                        }
+                    }
+                }
                 // candidate slate: each admitted sequence's next droppable
-                // block (contiguous prefix, fully valid)
+                // block (contiguous prefix, fully valid, not behind a
+                // spilled region — dropping on-disk KV frees no host byte)
                 let mut cands: Vec<(usize, BlockView)> = Vec::new();
                 for (j, s) in st.iter().enumerate() {
-                    if !s.admitted || s.done {
+                    if !s.admitted || s.done || s.spilled > 0 {
                         continue;
                     }
                     let idx = s.dropped / bt;
@@ -205,7 +313,6 @@ pub fn simulate_eviction(cfg: &EvictionSimConfig, policy: &dyn EvictPolicy) -> E
                 }
                 let views: Vec<BlockView> = cands.iter().map(|(_, v)| *v).collect();
                 let (j, _) = cands[policy.victim(&views)];
-                let block_bytes = bt as u64 * bpt;
                 let freed = block_bytes - block_bytes.div_ceil(3); // KV out, X kept
                 st[j].dropped += bt;
                 st[j].held_bytes = st[j].held_bytes.saturating_sub(freed);
@@ -247,11 +354,12 @@ pub fn simulate_eviction(cfg: &EvictionSimConfig, policy: &dyn EvictPolicy) -> E
                 loop {
                     // dropped-prefix tokens have no stored KV to promote —
                     // the live store's promotion walk breaks at a dropped
-                    // block — so residency can never waive their recompute
-                    // floor
+                    // block — and spilled tokens stay disk-side (their
+                    // reload is the read-through term, not the suffix), so
+                    // residency can never waive either region's cost
                     let want = st[i]
                         .s
-                        .saturating_sub(st[i].dropped)
+                        .saturating_sub(st[i].dropped + st[i].spilled)
                         .saturating_sub(st[i].resident);
                     if want == 0 {
                         break;
@@ -289,7 +397,8 @@ pub fn simulate_eviction(cfg: &EvictionSimConfig, policy: &dyn EvictPolicy) -> E
                         break; // nothing evictable: the suffix stays partial
                     }
                     let views: Vec<BlockView> = cands.iter().map(|(_, v)| *v).collect();
-                    let (j, _) = cands[policy.victim(&views)];
+                    // the demotion lens: refill plus writeback at wire width
+                    let (j, _) = cands[policy.demote_victim(&views)];
                     let dropped_t = bt.min(st[j].resident);
                     st[j].resident -= dropped_t;
                     let wire = dropped_t as f64 * c.transfer_kv_per_token_s * cfg.wire_ratio;
@@ -313,8 +422,26 @@ pub fn simulate_eviction(cfg: &EvictionSimConfig, policy: &dyn EvictPolicy) -> E
             let r = st[i].resident.min(s);
             let s_eff = s - r;
             let l_star = solver.solve(s_eff, s_eff).l;
-            let l = l_star.max(st[i].dropped.min(s_eff)).min(s_eff);
-            wall += solver.objective(l, s_eff);
+            let l_a = l_star.max(st[i].dropped.min(s_eff)).min(s_eff);
+            // four-tier: a spilled token the split does not cover re-reads
+            // over the extra NVMe hop this step; covering the whole disk
+            // prefix by recompute may be cheaper (the closed-form twin of
+            // Planner::plan_batch_four_tier's candidate pair)
+            let disk_end = (st[i].dropped + st[i].spilled).min(s_eff);
+            let rt_per_tok =
+                cfg.cost.transfer_kv_per_token_s * cfg.wire_ratio * cfg.nvme_factor;
+            let rt = |l: usize| disk_end.saturating_sub(l) as f64 * rt_per_tok;
+            let l_b = disk_end.max(l_a);
+            let (l, rt_s) =
+                if solver.objective(l_b, s_eff) + rt(l_b) < solver.objective(l_a, s_eff) + rt(l_a)
+                {
+                    (l_b, rt(l_b))
+                } else {
+                    (l_a, rt(l_a))
+                };
+            wall += solver.objective(l, s_eff) + rt_s;
+            readthrough += rt_s;
+            link_busy += rt_s;
             let c = &cfg.cost;
             link_busy += c.link_latency_s
                 + c.transfer_kv_per_token_s * (s_eff - l) as f64
@@ -326,6 +453,7 @@ pub fn simulate_eviction(cfg: &EvictionSimConfig, policy: &dyn EvictPolicy) -> E
                 st[i].done = true;
                 st[i].held_bytes = 0;
                 st[i].resident = 0;
+                st[i].spilled = 0; // disk reservations release with the seq
             }
         }
     }
@@ -340,6 +468,9 @@ pub fn simulate_eviction(cfg: &EvictionSimConfig, policy: &dyn EvictPolicy) -> E
         evictions: drops,
         demotions,
         demote_link_s: demote_link,
+        spills,
+        spill_link_s: spill_link,
+        readthrough_s: readthrough,
         peak_concurrency: peak,
         completed: st.iter().filter(|s| s.done).count(),
     }
@@ -402,6 +533,57 @@ mod tests {
         assert!(r.peak_concurrency >= 1);
         assert_eq!(r.demotions, 0, "no gpu tier configured");
         assert_eq!(r.demote_link_s, 0.0);
+        assert_eq!(r.spills, 0, "no disk tier configured");
+        assert_eq!(r.spill_link_s, 0.0);
+        assert_eq!(r.readthrough_s, 0.0);
+    }
+
+    #[test]
+    fn four_tier_spills_before_dropping_and_completes() {
+        let cfg = EvictionSimConfig::skewed_reuse_four_tier(cost());
+        let four = simulate_eviction(&cfg, &RecomputeAware::new(cost()));
+        assert!(four.spills > 0, "the tight budget must spill");
+        assert!(four.spill_link_s > 0.0, "spill writebacks must charge the NVMe wire");
+        assert_eq!(four.completed, cfg.seqs.len());
+        // spill frees full blocks (and is tried first), so the same
+        // workload needs no more KV drops than the drop-only three-tier run
+        let three = EvictionSimConfig::skewed_reuse_tiered(cost());
+        let r3 = simulate_eviction(&three, &RecomputeAware::new(cost()));
+        assert!(r3.evictions > 0, "the three-tier run must actually be short on capacity");
+        assert!(
+            four.evictions <= r3.evictions,
+            "spill must not increase drops: {} vs {}",
+            four.evictions,
+            r3.evictions
+        );
+    }
+
+    #[test]
+    fn zero_disk_capacity_is_exactly_the_three_tier_model() {
+        let mut gated = EvictionSimConfig::skewed_reuse_four_tier(cost());
+        gated.disk_bytes = 0;
+        let a = simulate_eviction(&EvictionSimConfig::skewed_reuse_tiered(cost()), &Lru);
+        let b = simulate_eviction(&gated, &Lru);
+        assert_eq!(a.steps, b.steps);
+        assert_eq!(a.evictions, b.evictions);
+        assert_eq!(b.spills, 0);
+        assert!((a.wall_s - b.wall_s).abs() < 1e-12, "{} vs {}", a.wall_s, b.wall_s);
+    }
+
+    #[test]
+    fn recompute_aware_spill_never_reads_through_more_than_lru() {
+        // the spill lens prefers blocks the split region covers, so its
+        // read-through surcharge is bounded by the recency baseline's
+        let cfg = EvictionSimConfig::skewed_reuse_four_tier(cost());
+        let lru = simulate_eviction(&cfg, &Lru);
+        let ra = simulate_eviction(&cfg, &RecomputeAware::new(cost()));
+        assert!(lru.spills > 0 && ra.spills > 0);
+        assert!(
+            ra.readthrough_s <= lru.readthrough_s + 1e-12,
+            "ra {} vs lru {}",
+            ra.readthrough_s,
+            lru.readthrough_s
+        );
     }
 
     #[test]

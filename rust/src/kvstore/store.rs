@@ -1,11 +1,12 @@
 //! The tiered, block-granular KV store.
 //!
 //! [`KvStore`] tracks, for every admitted sequence (decode group), where
-//! each of its fixed-size token blocks lives — gpu-hbm, pinned or cpu-dram
-//! — with one byte-accounted reservation per block.  All tier traffic
-//! (promotions, demotions, prefetch) moves through the embedded
-//! [`MigrationEngine`] under one queued → staged → in-flight → landed
-//! lifecycle, so **nothing on the serving path ever waits on the link**:
+//! each of its fixed-size token blocks lives — gpu-hbm, pinned, cpu-dram
+//! or disk-nvme — with one byte-accounted reservation per block.  All tier
+//! traffic (promotions, demotions, prefetch, spill) moves through the
+//! embedded [`MigrationEngine`] under one queued → staged → in-flight →
+//! landed lifecycle, so **nothing on the serving path ever waits on a
+//! link**:
 //!
 //! * **Promotion** ([`KvStore::begin_promotions`] /
 //!   [`KvStore::poll_landed`]): pull a sequence's blocks up into the gpu
@@ -14,22 +15,34 @@
 //!   shrinks by the resident length — the "already-on-GPU blocks shrink
 //!   the transfer term" input to
 //!   [`Planner::plan_batch_tiered`](crate::scheduler::Planner::plan_batch_tiered).
+//!   A **disk-resident** block promotes in *two hops* staged across steps:
+//!   the walk first issues disk→dram at NVMe speed; once that hop lands
+//!   the next step's walk picks the (now host) block up for the dram→gpu
+//!   leg — no step ever waits for either wire.
 //! * **Eviction**: when the gpu tier is full, the configured
 //!   [`EvictPolicy`](super::EvictPolicy) picks a victim among the *lowest*
 //!   blocks of other sequences' resident runs (so residency stays a
-//!   suffix).  The demotion is issued **asynchronously**: the victim's gpu
+//!   suffix), scored by the **demotion lens** (refill + writeback at wire
+//!   width).  The demotion is issued **asynchronously**: the victim's gpu
 //!   bytes are released immediately (the host rows are canonical; the link
 //!   traffic models writeback) and the block is non-resident from that
-//!   instant — residency accounting and the planner both see the hole
-//!   before the writeback lands.  A freshly demoted block then sits out a
-//!   cool-down before it can be re-promoted (anti-thrash hysteresis).
-//! * **Recompute-aware reclamation** ([`KvStore::admit`] internally):
-//!   admission that would otherwise backpressure may instead *drop the KV
-//!   and keep the X activations* of prefix blocks — the Eq. (11) insight
-//!   turned into a capacity lever: those tokens are rebuilt by the
-//!   recompute path, so their stored KV was dead weight.  The dropped
-//!   prefix becomes a planner floor (`l ≥ dropped`), reported by
-//!   [`KvStore::kv_dropped_tokens`].
+//!   instant.  A freshly demoted block then sits out a cool-down before it
+//!   can be re-promoted (anti-thrash hysteresis).
+//! * **Capacity-aware spill** ([`KvStore::pump_migrations`] per step, and
+//!   admission on demand): when the dram tier runs past the configured
+//!   watermark — i.e. *before* admission would backpressure — cold,
+//!   settled dram blocks are spilled to the disk tier, chosen by the
+//!   policy's **spill lens** (NVMe writeback + two-hop reload of whatever
+//!   recompute won't cover).  The dram bytes free at issuance; the
+//!   writeback rides the NVMe wire strictly within leftover step budget
+//!   ([`MigrationClass::Spill`]).  Admission that still cannot place a
+//!   block parks it on the disk tier directly (a brand-new block holds no
+//!   KV yet, so the "move" is pure reservation accounting) and, failing
+//!   even that, *drops the KV and keeps the X* of prefix blocks — the
+//!   Eq. (11) insight turned into a capacity lever.  The dropped prefix
+//!   becomes a planner floor (`l ≥ dropped`), reported by
+//!   [`KvStore::kv_dropped_tokens`]; the disk-resident prefix feeds the
+//!   planner's two-hop term via [`KvStore::disk_resident_tokens`].
 //!
 //! The residency invariant itself — which blocks are valid, how many
 //! tokens each covers, the top-down run order — lives in the `suffix`
@@ -57,30 +70,48 @@ pub struct KvStoreConfig {
     pub pinned_bytes: u64,
     /// Cold cpu-dram tier capacity.
     pub dram_bytes: u64,
+    /// NVMe disk tier capacity below dram; 0 disables the tier (the PR 3
+    /// three-tier layout).
+    pub disk_bytes: u64,
     /// Tokens per block.  Match the smallest artifact L bucket so dropped-KV
     /// floors land on a real recompute bucket.
     pub block_tokens: usize,
-    /// Migration link shaping (PCIe-ish for promotions).
+    /// Migration link shaping (PCIe-ish, for gpu↔pinned↔dram hops).
     pub link: LinkConfig,
+    /// NVMe link shaping for disk-tier hops (slower, higher latency).
+    pub nvme_link: LinkConfig,
     /// Wire bytes per f32 element on migrations: 4.0 plain, 0.625 under
     /// int4 wire quantization.  Tier occupancy always stays full-width.
     pub wire_elem_bytes: f64,
-    /// Anti-thrash hysteresis: a block demoted within the last
+    /// Anti-thrash hysteresis: a block demoted or spilled within the last
     /// `promote_cooldown` *serving steps* ([`KvStore::pump_migrations`]
     /// calls) is not re-promoted.  0 disables the cool-down.
     pub promote_cooldown: u64,
+    /// Capacity-aware spill: when dram occupancy exceeds this fraction of
+    /// the tier, cold blocks spill to disk ahead of admission pressure.
+    /// 0.0 (or a zero-capacity disk tier) disables proactive spill.
+    pub spill_watermark: f64,
+    /// Spills issued per serving step at most (bounds the queue the
+    /// leftover budget has to drain).
+    pub spill_max_per_step: usize,
 }
 
 impl KvStoreConfig {
     pub fn new(gpu_bytes: u64) -> Self {
+        let link = LinkConfig::with_bandwidth(30e6);
+        let nvme_link = LinkConfig::nvme_below(&link);
         KvStoreConfig {
             gpu_bytes,
             pinned_bytes: 64 << 20,
             dram_bytes: 256 << 20,
+            disk_bytes: 0,
             block_tokens: 32,
-            link: LinkConfig::with_bandwidth(30e6),
+            link,
+            nvme_link,
             wire_elem_bytes: 4.0,
             promote_cooldown: 4,
+            spill_watermark: 0.9,
+            spill_max_per_step: 2,
         }
     }
 }
@@ -121,6 +152,17 @@ pub struct StoreStats {
     pub device_syncs: u64,
     /// Promotion walks stopped at a cooling-down block (anti-thrash).
     pub cooldown_skips: u64,
+    /// Dram→disk spills issued (dram bytes released at issuance).
+    pub spills: u64,
+    /// Spill writebacks that landed on the disk tier.
+    pub spills_landed: u64,
+    /// Disk→dram promotion hops issued (first leg of a two-hop promotion).
+    pub hops: u64,
+    /// Hops that landed in dram (the block becomes a one-hop candidate).
+    pub hops_landed: u64,
+    /// Blocks parked on the disk tier directly at admission (no KV moved —
+    /// a brand-new block is reservation only).
+    pub disk_admissions: u64,
 }
 
 /// The tiered block-granular KV store.
@@ -130,6 +172,8 @@ pub struct KvStore {
     seqs: BTreeMap<u64, SeqEntry>,
     block_tokens: usize,
     promote_cooldown: u64,
+    spill_watermark: f64,
+    spill_max_per_step: usize,
     /// Recency clock: ticks once per [`KvStore::touch`]/[`KvStore::admit`]
     /// (LRU input; advances with *activity*, so it is concurrency-scaled).
     clock: u64,
@@ -148,13 +192,17 @@ impl KvStore {
                 cfg.gpu_bytes,
                 cfg.pinned_bytes,
                 cfg.dram_bytes,
+                cfg.disk_bytes,
                 cfg.link,
+                cfg.nvme_link,
                 cfg.wire_elem_bytes,
             ),
             policy,
             seqs: BTreeMap::new(),
             block_tokens: cfg.block_tokens,
             promote_cooldown: cfg.promote_cooldown,
+            spill_watermark: cfg.spill_watermark,
+            spill_max_per_step: cfg.spill_max_per_step,
             clock: 0,
             step: 0,
             stats: StoreStats::default(),
@@ -193,9 +241,15 @@ impl KvStore {
     /// filled exclusively by promotion/sync, so its capacity can never be
     /// parked under not-yet-valid admission blocks that eviction (which
     /// only walks resident suffix runs) could not reclaim.  When the host
-    /// tiers are full the store reclaims by dropping droppable KV prefixes
-    /// before giving up.  On failure all partial reservations roll back
-    /// and the caller backpressures.
+    /// tiers are full the store reclaims, in order of preference: spill a
+    /// cold valid dram block to disk (full bytes back, KV preserved), park
+    /// the new — still empty — block on the disk tier directly, and only
+    /// then drop droppable KV prefixes.  On failure the new sequence's
+    /// partial reservations roll back and the caller backpressures; spills
+    /// already issued for it are *not* undone — they are the same
+    /// capacity-relief moves the watermark check would make under the same
+    /// dram pressure, and the spilled KV stays reachable (two-hop) — while
+    /// KV drops are attempted last precisely because they cannot be.
     pub fn admit(&mut self, seq: u64, total_bytes: u64, n_blocks: usize) -> Result<()> {
         if self.seqs.contains_key(&seq) {
             bail!("sequence {seq} already admitted");
@@ -205,11 +259,14 @@ impl KvStore {
         }
         let block_bytes = total_bytes.div_ceil(n_blocks as u64);
         // feasibility pre-check, side-effect free: a hopeless admission
-        // must not drain other sequences' droppable KV (the serving loop
-        // retries every step, so leaked drops would compound into planner
-        // floors for every running group)
+        // must not drain other sequences' droppable KV or spill their
+        // blocks (the serving loop retries every step, so leaked drops
+        // would compound into planner floors for every running group).
+        // Spill adds no *net* capacity (it moves bytes host→disk), so the
+        // ceiling is host + disk free plus droppable KV.
         let free = self.mig.tiers().pool(Tier::CpuDram).available()
-            + self.mig.tiers().pool(Tier::Pinned).available();
+            + self.mig.tiers().pool(Tier::Pinned).available()
+            + self.mig.tiers().pool(Tier::DiskNvme).available();
         if free + self.reclaimable_bytes() < block_bytes * n_blocks as u64 {
             bail!(
                 "kvstore cannot fit sequence {seq}: {} bytes needed, {} free + reclaimable",
@@ -225,6 +282,17 @@ impl KvStore {
                 }
                 if let Some(g) = self.mig.tiers().grab(Tier::Pinned, block_bytes) {
                     break Some((Tier::Pinned, g));
+                }
+                // spill a cold valid block to disk: frees its full dram
+                // bytes and keeps its KV reachable (two-hop reload)
+                if self.spill_one().is_some() {
+                    continue;
+                }
+                // nothing spillable: this (empty) block parks on disk —
+                // pure reservation, no bytes cross any wire
+                if let Some(g) = self.mig.tiers().grab(Tier::DiskNvme, block_bytes) {
+                    self.stats.disk_admissions += 1;
+                    break Some((Tier::DiskNvme, g));
                 }
                 if self.reclaim_kv_one().is_none() {
                     break None;
@@ -292,9 +360,11 @@ impl KvStore {
         e.runs(self.block_tokens).resident_tokens()
     }
 
-    /// Valid tokens of `seq`'s blocks whose demotion is currently in
-    /// flight.  Non-zero means the engine's device window must shed those
-    /// rows *this* step (the store's gpu bytes are already reusable).
+    /// Valid tokens of `seq`'s blocks whose demotion *out of the gpu tier*
+    /// is currently in flight.  Non-zero means the engine's device window
+    /// must shed those rows *this* step (the store's gpu bytes are already
+    /// reusable).  Spill writebacks (dram→disk) are never counted: those
+    /// blocks were not on device to begin with.
     pub fn demotion_inflight_tokens(&self, seq: u64) -> usize {
         let Some(e) = self.seqs.get(&seq) else { return 0 };
         e.runs(self.block_tokens)
@@ -307,6 +377,29 @@ impl KvStore {
     pub fn kv_dropped_tokens(&self, seq: u64) -> usize {
         let Some(e) = self.seqs.get(&seq) else { return 0 };
         e.blocks.iter().take_while(|b| b.kv_dropped).count() * self.block_tokens
+    }
+
+    /// Valid tokens of the sequence's *disk-side prefix*: blocks settled
+    /// on (or writing back to, or hopping up from) the disk tier in the
+    /// contiguous region above the dropped prefix.  The planner's two-hop
+    /// transfer term: fetching these tokens this step costs an NVMe hop on
+    /// top of the interconnect, so a split that covers them by recompute
+    /// may win even when the three-tier plan would not recompute at all.
+    pub fn disk_resident_tokens(&self, seq: u64) -> usize {
+        let Some(e) = self.seqs.get(&seq) else { return 0 };
+        let bt = self.block_tokens;
+        let valid = SuffixRuns::valid_blocks(e.tokens, bt, e.blocks.len());
+        let mut total = 0;
+        for idx in 0..valid {
+            match e.blocks[idx].class() {
+                BlockClass::Dropped => {}
+                BlockClass::Disk | BlockClass::SpillInFlight | BlockClass::HopInFlight => {
+                    total += SuffixRuns::tokens_at(e.tokens, bt, idx);
+                }
+                _ => break,
+            }
+        }
+        total
     }
 
     /// Migrations open (queued or in flight) across all sequences.
@@ -333,9 +426,11 @@ impl KvStore {
     /// The engine keeps the newest `engine_resident` tokens on device for
     /// free (their K/V was just computed there); mirror that into the gpu
     /// tier's accounting where the budget allows — no link traffic — and
-    /// return the store-backed resident token count.  When the gpu tier
-    /// cannot back the engine's window, the returned count is smaller and
-    /// the caller demotes the engine window to match (budget enforcement).
+    /// return the store-backed resident token count.  A disk-parked block
+    /// flips the same way (its rows were just produced on device; the disk
+    /// reservation simply rolls back).  When the gpu tier cannot back the
+    /// engine's window, the returned count is smaller and the caller
+    /// demotes the engine window to match (budget enforcement).
     pub fn sync_device_suffix(&mut self, seq: u64, engine_resident: usize) -> usize {
         let bt = self.block_tokens;
         let todo: Vec<usize> = {
@@ -349,8 +444,11 @@ impl KvStore {
                 covered += rb.tokens;
                 match rb.class {
                     // a migration is already moving this one; let it land
-                    BlockClass::PromotionInFlight | BlockClass::DemotionInFlight => break,
-                    BlockClass::Host => todo.push(rb.idx),
+                    BlockClass::PromotionInFlight
+                    | BlockClass::DemotionInFlight
+                    | BlockClass::HopInFlight
+                    | BlockClass::SpillInFlight => break,
+                    BlockClass::Host | BlockClass::Disk => todo.push(rb.idx),
                     BlockClass::Resident | BlockClass::Dropped => {}
                 }
             }
@@ -369,13 +467,17 @@ impl KvStore {
     }
 
     /// Queue up to `max_blocks` promotions extending `seq`'s resident
-    /// suffix downward.  When the gpu tier is full, the eviction policy
-    /// issues asynchronous demotions of other sequences' run-start blocks
-    /// — their gpu bytes free immediately, so this never waits on the
-    /// link.  A block still cooling down from a recent demotion stops the
-    /// walk (anti-thrash).  The promotions launch on later
+    /// suffix downward.  A host block promotes in one hop; a disk block
+    /// promotes in two — this walk issues the disk→dram leg (NVMe wire)
+    /// and a *later* step's walk finds the landed block in dram and issues
+    /// the dram→gpu leg, so two-hop promotions stage across steps without
+    /// ever blocking.  When the gpu tier is full, the eviction policy's
+    /// demotion lens picks other sequences' run-start blocks to demote
+    /// asynchronously — their gpu bytes free immediately.  A block still
+    /// cooling down from a recent demotion or spill stops the walk
+    /// (anti-thrash).  The migrations launch on later
     /// [`KvStore::pump_migrations`] calls, within the step budget.
-    /// Returns promotions queued.
+    /// Returns migrations queued.
     pub fn begin_promotions(
         &mut self,
         seq: u64,
@@ -388,7 +490,12 @@ impl KvStore {
         let mut cooled = 0u64;
         let (targets, block_bytes) = {
             let Some(e) = self.seqs.get(&seq) else { return 0 };
-            let mut targets = Vec::new();
+            let mut targets: Vec<(usize, bool)> = Vec::new();
+            // a disk block above (settled or mid-hop) caps every deeper
+            // block at the dram rung: a gpu promotion issued under it
+            // would land suffix-broken and be discarded by poll_landed,
+            // wasting the wire bytes and the budget they rode on
+            let mut hop_above = false;
             for rb in e.runs(bt) {
                 if targets.len() >= max_blocks {
                     break;
@@ -396,22 +503,37 @@ impl KvStore {
                 match rb.class {
                     // part of the established run / already on its way up
                     BlockClass::Resident | BlockClass::PromotionInFlight => continue,
+                    BlockClass::HopInFlight => {
+                        hop_above = true;
+                        continue;
+                    }
                     // a hole being written back, or nothing to promote
                     // below a dropped prefix
-                    BlockClass::DemotionInFlight | BlockClass::Dropped => break,
-                    BlockClass::Host => {
+                    BlockClass::DemotionInFlight
+                    | BlockClass::SpillInFlight
+                    | BlockClass::Dropped => break,
+                    BlockClass::Host | BlockClass::Disk => {
+                        let is_hop = rb.class == BlockClass::Disk;
+                        if !is_hop && hop_above {
+                            // already in dram; nothing useful to issue
+                            // until the hop above settles
+                            continue;
+                        }
                         if cooldown > 0 {
                             if let Some(at) = e.blocks[rb.idx].demoted_at {
                                 if step.saturating_sub(at) < cooldown {
-                                    // freshly demoted: promoting it back
-                                    // would ping-pong with the eviction
+                                    // freshly demoted/spilled: promoting it
+                                    // back would ping-pong with the move
                                     // that just freed it
                                     cooled += 1;
                                     break;
                                 }
                             }
                         }
-                        targets.push(rb.idx);
+                        targets.push((rb.idx, is_hop));
+                        if is_hop {
+                            hop_above = true;
+                        }
                     }
                 }
             }
@@ -419,45 +541,72 @@ impl KvStore {
         };
         self.stats.cooldown_skips += cooled;
         let mut issued = 0;
-        'targets: for idx in targets {
-            // evict until the block fits: victims' blocks may be smaller
-            // than ours (different batch buckets), so one demotion is not
-            // always enough; the loop is bounded by the candidate supply
-            let id = loop {
-                if let Some(id) =
-                    self.mig.request(BlockId { seq, idx }, Tier::GpuHbm, block_bytes, class)
-                {
-                    break id;
+        'targets: for (idx, is_hop) in targets {
+            let pend = if is_hop {
+                // first leg of the two-hop promotion: disk→dram.  A full
+                // dram tier gets one spill attempt to make room; failing
+                // that, the walk stops and retries next step.
+                let bid = BlockId { seq, idx };
+                let mut req =
+                    self.mig.request(bid, Tier::DiskNvme, Tier::CpuDram, block_bytes, class);
+                if req.is_none() && self.spill_one().is_some() {
+                    req =
+                        self.mig.request(bid, Tier::DiskNvme, Tier::CpuDram, block_bytes, class);
                 }
-                if !self.evict_gpu_victim(seq) {
-                    break 'targets;
-                }
+                let Some(id) = req else { break 'targets };
+                self.stats.hops += 1;
+                PendingRef { id, to: Tier::CpuDram }
+            } else {
+                // evict until the block fits: victims' blocks may be smaller
+                // than ours (different batch buckets), so one demotion is not
+                // always enough; the loop is bounded by the candidate supply
+                let bid = BlockId { seq, idx };
+                let from = self
+                    .seqs
+                    .get(&seq)
+                    .map_or(Tier::CpuDram, |e| e.blocks[idx].tier);
+                let id = loop {
+                    if let Some(id) =
+                        self.mig.request(bid, from, Tier::GpuHbm, block_bytes, class)
+                    {
+                        break id;
+                    }
+                    if !self.evict_gpu_victim(seq) {
+                        break 'targets;
+                    }
+                };
+                self.stats.promotions_started += 1;
+                PendingRef { id, to: Tier::GpuHbm }
             };
             let Some(e) = self.seqs.get_mut(&seq) else { break };
-            e.blocks[idx].pending = Some(PendingRef { id, to: Tier::GpuHbm });
-            self.stats.promotions_started += 1;
+            e.blocks[idx].pending = Some(pend);
             issued += 1;
         }
         issued
     }
 
     /// Grant this step's link-byte budget and launch queued migrations
-    /// against it (class order: demand promotions, demotions, prefetch).
-    /// Returns migrations launched.  The serving loop calls this once per
-    /// step; completions come back through [`KvStore::poll_landed`].
+    /// against it (class order: demand promotions, demotions, prefetch,
+    /// spill).  Before granting, the capacity-aware spill check runs: dram
+    /// occupancy above the watermark queues cold-block spills — strictly
+    /// leftover-budget traffic — so admission pressure is relieved ahead
+    /// of the backpressure it would otherwise become.  Returns migrations
+    /// launched.  The serving loop calls this once per step; completions
+    /// come back through [`KvStore::poll_landed`].
     pub fn pump_migrations(&mut self, budget_bytes: u64) -> usize {
         self.step += 1; // the cool-down timebase: one tick per serving step
+        self.spill_to_watermark();
         self.mig.begin_step(budget_bytes);
         self.mig.pump()
     }
 
     /// Install every landed migration (non-blocking); returns how many
-    /// were installed.  Demotions settle unconditionally in their
-    /// destination tier.  A landed *promotion* is only installed into the
-    /// gpu tier while it still extends the resident suffix from above — if
-    /// an eviction opened a hole over it in the meantime, installing would
-    /// strand gpu bytes no eviction walk can ever reach, so the new
-    /// reservation is dropped and the block stays where it was.
+    /// were installed.  Demotions, spills and hops settle unconditionally
+    /// in their destination tier.  A landed *promotion* is only installed
+    /// into the gpu tier while it still extends the resident suffix from
+    /// above — if an eviction opened a hole over it in the meantime,
+    /// installing would strand gpu bytes no eviction walk can ever reach,
+    /// so the new reservation is dropped and the block stays where it was.
     pub fn poll_landed(&mut self) -> usize {
         let mut landed_total = 0;
         let mut promos: BTreeMap<u64, Vec<(usize, crate::memory::PoolGuard)>> = BTreeMap::new();
@@ -465,14 +614,22 @@ impl KvStore {
             if l.to == Tier::GpuHbm {
                 promos.entry(l.block.seq).or_default().push((l.block.idx, l.guard));
             } else {
-                // demotion writeback: install in the lower tier
+                // demotion/spill writeback or disk→dram hop: install in
+                // the destination tier
                 let Some(e) = self.seqs.get_mut(&l.block.seq) else { continue };
                 let b = &mut e.blocks[l.block.idx];
                 debug_assert!(b.pending.as_ref().is_some_and(|p| p.id == l.id));
+                let was = b.tier;
                 b.pending = None;
                 b.guard = Some(l.guard);
                 b.tier = l.to;
-                self.stats.demotions_landed += 1;
+                if was == Tier::GpuHbm {
+                    self.stats.demotions_landed += 1;
+                } else if l.to < was {
+                    self.stats.hops_landed += 1;
+                } else {
+                    self.stats.spills_landed += 1;
+                }
                 landed_total += 1;
             }
         }
@@ -517,9 +674,10 @@ impl KvStore {
     }
 
     /// Issue an asynchronous demotion of one other sequence's run-start
-    /// block (policy's choice): the destination reservation is taken in a
-    /// lower tier, the victim's gpu bytes free **immediately**, and the
-    /// writeback rides the link under the step budget.  Returns false when
+    /// block (the policy's demotion lens): the destination reservation is
+    /// taken in a lower tier — pinned, then dram, then disk as the last
+    /// resort — the victim's gpu bytes free **immediately**, and the
+    /// writeback rides its wire under the step budget.  Returns false when
     /// there is no candidate or no room below.
     fn evict_gpu_victim(&mut self, exclude_seq: u64) -> bool {
         let bt = self.block_tokens;
@@ -549,16 +707,21 @@ impl KvStore {
         if cands.is_empty() {
             return false;
         }
-        let v = cands[self.policy.victim(&cands)];
+        let v = cands[self.policy.demote_victim(&cands)];
         let Some(bytes) = self.seqs.get(&v.id.seq).map(|e| e.block_bytes) else { return false };
         let req = self
             .mig
-            .request(v.id, Tier::Pinned, bytes, MigrationClass::Demote)
+            .request(v.id, Tier::GpuHbm, Tier::Pinned, bytes, MigrationClass::Demote)
             .map(|id| (id, Tier::Pinned))
             .or_else(|| {
                 self.mig
-                    .request(v.id, Tier::CpuDram, bytes, MigrationClass::Demote)
+                    .request(v.id, Tier::GpuHbm, Tier::CpuDram, bytes, MigrationClass::Demote)
                     .map(|id| (id, Tier::CpuDram))
+            })
+            .or_else(|| {
+                self.mig
+                    .request(v.id, Tier::GpuHbm, Tier::DiskNvme, bytes, MigrationClass::Demote)
+                    .map(|id| (id, Tier::DiskNvme))
             });
         let Some((id, to)) = req else { return false };
         let step = self.step;
@@ -571,8 +734,100 @@ impl KvStore {
         true
     }
 
+    /// Capacity-aware spill: while dram occupancy sits above the
+    /// watermark, move cold valid blocks to disk (bounded per step).
+    fn spill_to_watermark(&mut self) {
+        if self.spill_watermark <= 0.0 {
+            return;
+        }
+        // no disk tier: never pay the candidate scan (three-tier layouts
+        // keep the default watermark but can't spill anywhere)
+        if self.mig.tiers().pool(Tier::DiskNvme).capacity() == 0 {
+            return;
+        }
+        let cap = self.mig.tiers().pool(Tier::CpuDram).capacity();
+        if cap == 0 {
+            return;
+        }
+        let mut spilled = 0;
+        while spilled < self.spill_max_per_step {
+            let used = self.mig.tiers().pool(Tier::CpuDram).used();
+            if (used as f64) <= self.spill_watermark * cap as f64 {
+                break;
+            }
+            if self.spill_one().is_none() {
+                break;
+            }
+            spilled += 1;
+        }
+    }
+
+    /// Spill one cold block to the disk tier (the policy's spill lens):
+    /// the disk reservation is taken, the dram bytes free **immediately**,
+    /// and the writeback rides the NVMe wire as leftover-budget
+    /// [`MigrationClass::Spill`] traffic.  Per sequence the only candidate
+    /// is the block *extending its contiguous dropped/disk-side prefix*
+    /// (and it must be a fully-valid, settled dram block), so the spilled
+    /// region stays literally prefix-shaped — which is what keeps
+    /// [`KvStore::disk_resident_tokens`]' lens (and the planner/sim
+    /// two-hop terms built on it) honest.  A pinned, resident or
+    /// in-flight block ends a sequence's spillable prefix.  Returns the
+    /// dram bytes freed, or `None` when nothing is spillable / the disk
+    /// tier is full.
+    fn spill_one(&mut self) -> Option<u64> {
+        if self.mig.tiers().pool(Tier::DiskNvme).capacity() == 0 {
+            return None;
+        }
+        let bt = self.block_tokens;
+        let mut cands: Vec<BlockView> = Vec::new();
+        for (&sid, e) in self.seqs.iter() {
+            for (idx, b) in e.blocks.iter().enumerate() {
+                if (idx + 1) * bt > e.tokens {
+                    break; // only fully-valid blocks carry spillable KV
+                }
+                match b.class() {
+                    // already below the line: the prefix continues above
+                    BlockClass::Dropped | BlockClass::Disk | BlockClass::SpillInFlight => {
+                        continue
+                    }
+                    // dram-settled: the one block that extends the prefix
+                    BlockClass::Host if b.tier == Tier::CpuDram => {
+                        cands.push(BlockView {
+                            id: BlockId { seq: sid, idx },
+                            tokens: bt,
+                            start_token: idx * bt,
+                            seq_len: e.tokens,
+                            last_use: e.last_use,
+                            split_l: e.split_l,
+                        });
+                        break;
+                    }
+                    // pinned, resident or in-flight: spilling anything
+                    // above it would break the prefix lens — stop here
+                    _ => break,
+                }
+            }
+        }
+        if cands.is_empty() {
+            return None;
+        }
+        let v = cands[self.policy.spill_victim(&cands)];
+        let bytes = self.seqs.get(&v.id.seq).map(|e| e.block_bytes)?;
+        let id =
+            self.mig
+                .request(v.id, Tier::CpuDram, Tier::DiskNvme, bytes, MigrationClass::Spill)?;
+        let step = self.step;
+        let e = self.seqs.get_mut(&v.id.seq)?;
+        let b = &mut e.blocks[v.id.idx];
+        b.guard = None; // dram bytes free *now*; writeback rides NVMe later
+        b.pending = Some(PendingRef { id, to: Tier::DiskNvme });
+        b.demoted_at = Some(step); // anti-thrash: no instant re-promotion
+        self.stats.spills += 1;
+        Some(bytes)
+    }
+
     /// Bytes that dropping every currently-droppable KV prefix would free
-    /// (the contiguous chain of fully-valid, host-resident, settled blocks
+    /// (the contiguous chain of fully-valid, non-gpu, settled blocks
     /// above each sequence's dropped prefix) — the admission pre-check's
     /// reclaim ceiling.
     fn reclaimable_bytes(&self) -> u64 {
@@ -594,8 +849,8 @@ impl KvStore {
     }
 
     /// Drop the KV (keep X) of one policy-chosen block, freeing ≈⅔ of its
-    /// bytes in place.  Only fully-valid, host-resident blocks extending a
-    /// sequence's contiguous dropped prefix qualify.  Returns bytes freed.
+    /// bytes in place.  Only fully-valid, non-gpu, settled blocks extending
+    /// a sequence's contiguous dropped prefix qualify.  Returns bytes freed.
     fn reclaim_kv_one(&mut self) -> Option<u64> {
         let bt = self.block_tokens;
         let mut cands: Vec<BlockView> = Vec::new();
@@ -659,10 +914,14 @@ mod tests {
             gpu_bytes: gpu_blocks * BB,
             pinned_bytes: pinned_blocks * BB,
             dram_bytes: dram_blocks * BB,
+            disk_bytes: 0, // three-tier layout unless a test opts in
             block_tokens: 16,
             link: LinkConfig::unthrottled(),
+            nvme_link: LinkConfig::unthrottled(),
             wire_elem_bytes: 4.0,
             promote_cooldown: 0, // most tests want no hysteresis
+            spill_watermark: 0.0, // proactive spill off unless opted in
+            spill_max_per_step: 2,
         };
         tweak(&mut cfg);
         KvStore::new(cfg, Box::new(Lru))
@@ -692,7 +951,8 @@ mod tests {
         // the gpu tier is a promotion-only cache: admission never parks
         // blocks there, so eviction can always reclaim it
         assert_eq!(s.tier_used(Tier::GpuHbm), 0);
-        // host tiers full, nothing droppable (tokens == 0) → fails clean
+        // host tiers full, no disk, nothing droppable (tokens == 0) →
+        // fails clean
         let used_before: u64 = Tier::ALL.iter().map(|&t| s.tier_used(t)).sum();
         assert!(s.admit(2, 2 * BB, 2).is_err());
         let used_after: u64 = Tier::ALL.iter().map(|&t| s.tier_used(t)).sum();
@@ -822,8 +1082,8 @@ mod tests {
         s.admit(1, 2 * BB, 2).unwrap();
         s.touch(1, 32, 32); // both blocks fully valid
         assert_eq!(s.tier_used(Tier::CpuDram), 2 * BB);
-        // nothing free, but seq 1's prefix KV is droppable: 2 drops free
-        // 2 × ⅔·BB = 4000 ≥ BB, so the new block fits
+        // nothing free, no disk, but seq 1's prefix KV is droppable: 2
+        // drops free 2 × ⅔·BB = 4000 ≥ BB, so the new block fits
         s.admit(2, BB, 1).unwrap();
         assert!(s.stats().kv_drops >= 1);
         assert_eq!(s.kv_dropped_tokens(1) % 16, 0);
@@ -879,5 +1139,113 @@ mod tests {
         // the pinned tier may keep staging-buffer charges (pinned regions
         // stay pinned by design) but no *blocks*
         assert!(s.tier_used(Tier::Pinned) <= 2 * BB, "only staging charges remain");
+    }
+
+    // -- disk-tier behaviors ------------------------------------------------
+
+    #[test]
+    fn admission_overflows_cold_blocks_to_disk() {
+        // host tiers fit one block; the rest of the (empty) sequence parks
+        // on disk with zero wire traffic
+        let mut s = store_cfg(0, 0, 1, |c| c.disk_bytes = 8 * BB);
+        s.admit(1, 4 * BB, 4).unwrap();
+        assert_eq!(s.tier_used(Tier::CpuDram), BB);
+        assert_eq!(s.tier_used(Tier::DiskNvme), 3 * BB);
+        assert_eq!(s.stats().disk_admissions, 3);
+        assert_eq!(s.migration_stats().launched, 0, "no bytes crossed a wire");
+        // the disk prefix is reported for the planner's two-hop term once
+        // those blocks hold valid tokens — block 0 (dram) is not disk-side
+        s.touch(1, 64, 0);
+        assert_eq!(s.disk_resident_tokens(1), 0, "prefix scan stops at the dram block");
+        s.release(1);
+        assert_eq!(s.tier_used(Tier::DiskNvme), 0);
+    }
+
+    #[test]
+    fn watermark_spill_frees_dram_without_blocking() {
+        // dram full (2/2 blocks) and a 50% watermark: the step's spill
+        // check queues cold-block spills whose dram bytes free instantly
+        let mut s = store_cfg(0, 0, 2, |c| {
+            c.disk_bytes = 8 * BB;
+            c.spill_watermark = 0.5;
+        });
+        s.admit(1, 2 * BB, 2).unwrap();
+        s.touch(1, 32, 0); // both blocks fully valid → spillable
+        assert_eq!(s.tier_used(Tier::CpuDram), 2 * BB);
+        s.pump_migrations(u64::MAX);
+        assert!(s.stats().spills >= 1, "watermark must trigger spill");
+        assert!(s.tier_used(Tier::CpuDram) <= BB, "dram bytes free at issuance");
+        assert!(s.tier_used(Tier::DiskNvme) > 0, "disk reservation held");
+        // the writeback lands via polling on later steps, never a wait
+        let mut landed = 0;
+        for _ in 0..500 {
+            landed += s.poll_landed();
+            if s.stats().spills_landed >= 1 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert!(landed >= 1 && s.stats().spills_landed >= 1);
+        assert_eq!(s.disk_resident_tokens(1), 16, "spilled block 0 is the disk prefix");
+    }
+
+    #[test]
+    fn admission_spills_before_dropping_kv() {
+        // host tiers hold seq 1's two valid blocks; admitting seq 2 spills
+        // (full bytes back, KV preserved on disk) instead of dropping KV
+        let mut s = store_cfg(0, 0, 2, |c| c.disk_bytes = 8 * BB);
+        s.admit(1, 2 * BB, 2).unwrap();
+        s.touch(1, 32, 32);
+        s.admit(2, BB, 1).unwrap();
+        assert!(s.stats().spills >= 1, "spill must be preferred");
+        assert_eq!(s.stats().kv_drops, 0, "no KV dropped while spill can reclaim");
+        assert_eq!(s.kv_dropped_tokens(1), 0);
+    }
+
+    #[test]
+    fn two_hop_promotion_stages_across_steps() {
+        // seq 1's valid blocks sit on disk (spilled); promoting them takes
+        // a disk→dram hop on one step and dram→gpu on a later one — the
+        // walk never waits on either wire
+        let mut s = store_cfg(2, 0, 2, |c| c.disk_bytes = 8 * BB);
+        s.admit(1, 2 * BB, 2).unwrap();
+        s.touch(1, 32, 0);
+        // push both blocks down to disk
+        while s.spill_one().is_some() {}
+        assert_eq!(s.stats().spills, 2);
+        pump_and_land(&mut s, 2);
+        assert_eq!(s.stats().spills_landed, 2);
+        assert_eq!(s.tier_used(Tier::CpuDram), 0);
+        assert_eq!(s.disk_resident_tokens(1), 32);
+        // step A: the promotion walk issues hops, not gpu promotions
+        let issued = s.begin_promotions(1, 2, MigrationClass::Promote);
+        assert_eq!(issued, 2);
+        assert_eq!(s.stats().hops, 2);
+        assert_eq!(s.stats().promotions_started, 0, "no direct gpu leg yet");
+        assert_eq!(s.gpu_resident_tokens(1), 0);
+        pump_and_land(&mut s, 2);
+        assert_eq!(s.stats().hops_landed, 2);
+        assert_eq!(s.tier_used(Tier::CpuDram), 2 * BB, "hop landed in dram");
+        assert_eq!(s.disk_resident_tokens(1), 0);
+        // step B: the walk now sees host blocks and issues the gpu leg
+        let issued = s.begin_promotions(1, 2, MigrationClass::Promote);
+        assert_eq!(issued, 2);
+        assert_eq!(s.stats().promotions_started, 2);
+        pump_and_land(&mut s, 2);
+        assert_eq!(s.gpu_resident_tokens(1), 32);
+        assert_eq!(s.tier_used(Tier::DiskNvme), 0, "disk reservations released");
+    }
+
+    #[test]
+    fn zero_disk_capacity_keeps_three_tier_behavior() {
+        let mut s = store(0, 0, 2); // disk_bytes = 0
+        s.admit(1, 2 * BB, 2).unwrap();
+        s.touch(1, 32, 32);
+        assert!(s.spill_one().is_none(), "no disk tier, no spill");
+        s.pump_migrations(u64::MAX);
+        assert_eq!(s.stats().spills, 0);
+        // admission still reclaims by dropping KV, exactly like PR 3
+        s.admit(2, BB, 1).unwrap();
+        assert!(s.stats().kv_drops >= 1);
     }
 }

@@ -3,7 +3,8 @@
 //! Residency in the tiered store is a *suffix* property: the gpu tier holds
 //! a contiguous run of blocks ending at a sequence's newest valid token.
 //! Every placement decision — counting resident tokens, mirroring the
-//! engine's device window, extending the run with promotions, picking the
+//! engine's device window, extending the run with promotions (including
+//! the disk→dram hop that starts a two-hop promotion), picking the
 //! eviction victim that keeps the run contiguous — walks the same top-down
 //! block order with the same valid-block arithmetic, differing only in
 //! where it stops.  PR 2 re-implemented that walk four times with subtly
@@ -18,7 +19,7 @@
 //! The walkers themselves live in [`store`](super::store) as thin loops
 //! over this iterator; the property test at the bottom of this file pins
 //! the iterator against standalone re-implementations of all four legacy
-//! walks across randomized layouts.
+//! walks across randomized four-tier layouts.
 
 use crate::memory::PoolGuard;
 
@@ -31,21 +32,26 @@ use super::migrate::MigrationId;
 #[derive(Debug, Clone, Copy)]
 pub struct PendingRef {
     pub id: MigrationId,
-    /// Destination tier: [`Tier::GpuHbm`] marks a promotion, anything
-    /// else a demotion.
+    /// Destination tier.  Together with the block's settled tier this
+    /// decides the in-flight [`BlockClass`]: [`Tier::GpuHbm`] marks a
+    /// promotion, an upward move short of the gpu marks a disk→dram hop,
+    /// and a downward move marks a demotion (out of gpu) or spill (out of
+    /// dram).
     pub to: Tier,
 }
 
 /// One block's placement state (store-internal).
 pub struct BlockState {
     /// Tier the block is *settled* in.  While a migration is in flight the
-    /// field still names the source tier (promotion) or the tier being
-    /// left (demotion); [`BlockState::class`] is the authoritative view.
+    /// field still names the source tier (promotion/hop) or the tier being
+    /// left (demotion/spill); [`BlockState::class`] is the authoritative
+    /// view.
     pub tier: Tier,
-    /// The tier reservation.  `None` while a demotion is in flight: the
-    /// gpu bytes are released the moment the demotion is issued (the host
-    /// cache holds the canonical rows; the link traffic models writeback),
-    /// which is what lets a full gpu tier never stall the step loop.
+    /// The tier reservation.  `None` while a demotion or spill is in
+    /// flight: the source bytes are released the moment the move is issued
+    /// (the host cache holds the canonical rows; the link traffic models
+    /// writeback), which is what lets a full tier never stall the step
+    /// loop.
     pub guard: Option<PoolGuard>,
     /// KV bytes dropped (X kept): the block costs ⅓ and must be covered by
     /// the recompute path when its tokens are needed.
@@ -53,10 +59,11 @@ pub struct BlockState {
     /// In-flight migration, if any.
     pub pending: Option<PendingRef>,
     /// Serving step at which this block was last demoted out of the gpu
-    /// tier — the anti-thrash cool-down input: a freshly demoted block is
-    /// not re-promoted for `promote_cooldown` *steps* (the step counter
-    /// ticks once per `pump_migrations` call, not per touch, so the
-    /// hysteresis does not shrink as concurrency grows).
+    /// tier or spilled out of dram — the anti-thrash cool-down input: a
+    /// freshly demoted/spilled block is not re-promoted for
+    /// `promote_cooldown` *steps* (the step counter ticks once per
+    /// `pump_migrations` call, not per touch, so the hysteresis does not
+    /// shrink as concurrency grows).
     pub demoted_at: Option<u64>,
 }
 
@@ -71,8 +78,21 @@ pub enum BlockClass {
     /// were released at issuance, so residency accounting (and the
     /// planner's transfer term) must treat it as a hole immediately.
     DemotionInFlight,
-    /// Settled in a host tier, KV intact: a promotion candidate.
+    /// The first hop of a two-hop promotion (disk→dram) is in flight: the
+    /// block is on its way up but cannot extend the run until it settles
+    /// in dram and a later step issues the dram→gpu leg.
+    HopInFlight,
+    /// A dram→disk spill writeback is in flight: the dram bytes were
+    /// released at issuance, so the block is disk-side for planning —
+    /// but never a residency hole the engine must shed (it was not on
+    /// device to begin with).
+    SpillInFlight,
+    /// Settled in a host tier (pinned/dram), KV intact: a one-hop
+    /// promotion candidate.
     Host,
+    /// Settled on the disk tier, KV intact: promoting it is a two-hop
+    /// (disk→dram→gpu) migration staged across steps.
+    Disk,
     /// KV dropped (X kept): only the recompute path can cover it.
     Dropped,
 }
@@ -82,13 +102,19 @@ impl BlockState {
         if let Some(p) = &self.pending {
             if p.to == Tier::GpuHbm {
                 BlockClass::PromotionInFlight
-            } else {
+            } else if p.to < self.tier {
+                BlockClass::HopInFlight
+            } else if self.tier == Tier::GpuHbm {
                 BlockClass::DemotionInFlight
+            } else {
+                BlockClass::SpillInFlight
             }
         } else if self.kv_dropped {
             BlockClass::Dropped
         } else if self.tier == Tier::GpuHbm {
             BlockClass::Resident
+        } else if self.tier == Tier::DiskNvme {
+            BlockClass::Disk
         } else {
             BlockClass::Host
         }
@@ -181,7 +207,18 @@ mod tests {
                 false,
                 Some(PendingRef { id: MigrationId::test_id(2), to: Tier::Pinned }),
             ),
+            BlockClass::HopInFlight => (
+                Tier::DiskNvme,
+                false,
+                Some(PendingRef { id: MigrationId::test_id(3), to: Tier::CpuDram }),
+            ),
+            BlockClass::SpillInFlight => (
+                Tier::CpuDram,
+                false,
+                Some(PendingRef { id: MigrationId::test_id(4), to: Tier::DiskNvme }),
+            ),
             BlockClass::Host => (Tier::CpuDram, false, None),
+            BlockClass::Disk => (Tier::DiskNvme, false, None),
             BlockClass::Dropped => (Tier::Pinned, true, None),
         };
         BlockState { tier, guard: None, kv_dropped, pending, demoted_at: None }
@@ -196,11 +233,14 @@ mod tests {
             let class = if i < dropped_prefix {
                 BlockClass::Dropped
             } else {
-                match rng.index(5) {
+                match rng.index(8) {
                     0 => BlockClass::Resident,
                     1 => BlockClass::PromotionInFlight,
                     2 => BlockClass::DemotionInFlight,
                     3 => BlockClass::Dropped,
+                    4 => BlockClass::Disk,
+                    5 => BlockClass::HopInFlight,
+                    6 => BlockClass::SpillInFlight,
                     _ => BlockClass::Host,
                 }
             };
@@ -212,8 +252,9 @@ mod tests {
         (blocks, tokens)
     }
 
-    // -- standalone re-implementations of the four PR 2 walkers ------------
-    // (the literal loops store.rs used to carry, kept here as the oracle)
+    // -- standalone re-implementations of the four store walkers -----------
+    // (the literal loops store.rs used to carry, extended to the disk tier,
+    // kept here as the oracle)
 
     fn legacy_valid(blocks: &[BlockState], tokens: usize) -> usize {
         tokens.div_ceil(BT).min(blocks.len())
@@ -239,7 +280,7 @@ mod tests {
         covered
     }
 
-    /// `sync_device_suffix`: host blocks to flip while covering the
+    /// `sync_device_suffix`: host/disk blocks to flip while covering the
     /// engine's window; breaks on any in-flight migration.
     fn legacy_sync_todo(blocks: &[BlockState], tokens: usize, engine_resident: usize) -> Vec<usize> {
         let mut todo = Vec::new();
@@ -259,15 +300,29 @@ mod tests {
         todo
     }
 
-    /// `begin_promotions`: promotion targets extending the run downward.
-    fn legacy_promo_targets(blocks: &[BlockState], tokens: usize, max: usize) -> Vec<usize> {
+    /// `begin_promotions`: promotion targets extending the run downward;
+    /// the bool marks a disk block needing the disk→dram hop first.  A
+    /// disk block above (settled or mid-hop) caps deeper blocks at the
+    /// dram rung — a gpu promotion under it could only land suffix-broken.
+    fn legacy_promo_targets(
+        blocks: &[BlockState],
+        tokens: usize,
+        max: usize,
+    ) -> Vec<(usize, bool)> {
         let mut targets = Vec::new();
+        let mut hop_above = false;
         let mut idx = legacy_valid(blocks, tokens);
         while idx > 0 && targets.len() < max {
             idx -= 1;
             let b = &blocks[idx];
             if let Some(pm) = &b.pending {
+                // upward moves (to gpu, or the disk→dram hop) are on their
+                // way; downward moves are holes the walk stops at
                 if pm.to == Tier::GpuHbm {
+                    continue;
+                }
+                if pm.to < b.tier {
+                    hop_above = true;
                     continue;
                 }
                 break;
@@ -278,7 +333,12 @@ mod tests {
             if b.kv_dropped {
                 break;
             }
-            targets.push(idx);
+            if b.tier == Tier::DiskNvme {
+                targets.push((idx, true));
+                hop_above = true;
+            } else if !hop_above {
+                targets.push((idx, false));
+            }
         }
         targets
     }
@@ -310,24 +370,39 @@ mod tests {
             }
             covered += rb.tokens;
             match rb.class {
-                BlockClass::PromotionInFlight | BlockClass::DemotionInFlight => break,
-                BlockClass::Host => todo.push(rb.idx),
+                BlockClass::PromotionInFlight
+                | BlockClass::DemotionInFlight
+                | BlockClass::HopInFlight
+                | BlockClass::SpillInFlight => break,
+                BlockClass::Host | BlockClass::Disk => todo.push(rb.idx),
                 BlockClass::Resident | BlockClass::Dropped => {}
             }
         }
         todo
     }
 
-    fn runs_promo_targets(blocks: &[BlockState], tokens: usize, max: usize) -> Vec<usize> {
+    fn runs_promo_targets(blocks: &[BlockState], tokens: usize, max: usize) -> Vec<(usize, bool)> {
         let mut targets = Vec::new();
+        let mut hop_above = false;
         for rb in SuffixRuns::new(blocks, tokens, BT) {
             if targets.len() >= max {
                 break;
             }
             match rb.class {
                 BlockClass::Resident | BlockClass::PromotionInFlight => continue,
-                BlockClass::DemotionInFlight | BlockClass::Dropped => break,
-                BlockClass::Host => targets.push(rb.idx),
+                BlockClass::HopInFlight => hop_above = true,
+                BlockClass::DemotionInFlight | BlockClass::SpillInFlight | BlockClass::Dropped => {
+                    break
+                }
+                BlockClass::Host => {
+                    if !hop_above {
+                        targets.push((rb.idx, false));
+                    }
+                }
+                BlockClass::Disk => {
+                    targets.push((rb.idx, true));
+                    hop_above = true;
+                }
             }
         }
         targets
@@ -392,6 +467,28 @@ mod tests {
         assert_eq!(SuffixRuns::new(&blocks, 32, BT).resident_tokens(), 16);
         // a pending promotion is not resident either (bytes still moving)
         let blocks = vec![block(BlockClass::PromotionInFlight), block(BlockClass::Resident)];
+        assert_eq!(SuffixRuns::new(&blocks, 32, BT).resident_tokens(), 16);
+    }
+
+    #[test]
+    fn disk_side_classes_classify_by_direction() {
+        // settled on disk
+        assert_eq!(block(BlockClass::Disk).class(), BlockClass::Disk);
+        // disk→dram (upward, short of gpu) is a hop
+        assert_eq!(block(BlockClass::HopInFlight).class(), BlockClass::HopInFlight);
+        // dram→disk (downward, not out of gpu) is a spill
+        assert_eq!(block(BlockClass::SpillInFlight).class(), BlockClass::SpillInFlight);
+        // gpu→disk (downward, out of gpu) stays a demotion
+        let b = BlockState {
+            tier: Tier::GpuHbm,
+            guard: None,
+            kv_dropped: false,
+            pending: Some(PendingRef { id: MigrationId::test_id(9), to: Tier::DiskNvme }),
+            demoted_at: None,
+        };
+        assert_eq!(b.class(), BlockClass::DemotionInFlight);
+        // neither disk-side class is ever resident
+        let blocks = vec![block(BlockClass::Disk), block(BlockClass::Resident)];
         assert_eq!(SuffixRuns::new(&blocks, 32, BT).resident_tokens(), 16);
     }
 

@@ -32,11 +32,13 @@
 //!   manager (including group-wise 4-bit quantization) and the model-weight
 //!   store.
 //! * [`kvstore`] — the tiered, block-granular KV store: gpu-hbm / pinned /
-//!   cpu-dram block placement with one asynchronous migration lifecycle
-//!   (queued → staged → in-flight → landed) for promotions, demotions and
-//!   prefetch under a per-step link-byte budget, plus pluggable eviction
-//!   including the recompute-aware policy (drop KV, keep X) that
-//!   generalises Eq. (11) into a capacity lever.
+//!   cpu-dram / disk-nvme block placement with one asynchronous migration
+//!   lifecycle (queued → staged → in-flight → landed) for promotions,
+//!   demotions, prefetch and capacity-aware disk spill under a per-step
+//!   link-byte budget (disk hops ride their own slower NVMe wire), plus
+//!   pluggable victim selection including the recompute-aware lenses
+//!   (drop KV keep X, writeback-aware demotion, two-hop-aware spill) that
+//!   generalise Eq. (11) into a capacity lever.
 //! * [`sim`] — discrete-event simulator of the paper's testbeds (A100 +
 //!   PCIe 4.0 x16, RTX 5000 + x8) used to regenerate every table and figure
 //!   of the evaluation at paper scale.

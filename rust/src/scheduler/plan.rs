@@ -169,6 +169,59 @@ impl Planner {
         }
     }
 
+    /// [`Planner::plan_batch_tiered`] for a group over the **four-tier**
+    /// store: `disk_prefix` tokens of the group's KV live on the disk tier
+    /// in the contiguous region *directly above* the dropped-KV floor —
+    /// token positions `[l_floor, l_floor + disk_prefix)` — so fetching
+    /// them this step is a *two-hop* transfer: an NVMe hop on top of the
+    /// interconnect, costing `nvme_factor` extra interconnect-equivalents
+    /// per token.  Two candidate splits are compared:
+    ///
+    /// * the three-tier optimum, paying the two-hop surcharge for every
+    ///   disk token beyond its split, and
+    /// * a split whose floor is raised to cover the whole disk region by
+    ///   recompute (no disk byte crosses either wire),
+    ///
+    /// and the cheaper plan wins — the disk tier thus *pushes the split
+    /// up*: prefixes too cold for dram become recompute work before they
+    /// become NVMe reads.  `predicted_s`/`baseline_s` include the
+    /// surcharge, so the serving metrics stay honest.
+    pub fn plan_batch_four_tier(
+        &self,
+        lane_s_primes: &[usize],
+        resident: usize,
+        l_floor: usize,
+        disk_prefix: usize,
+        nvme_factor: f64,
+    ) -> StepPlan {
+        let a = self.plan_batch_tiered(lane_s_primes, resident, l_floor);
+        if disk_prefix == 0 {
+            return a;
+        }
+        let n = lane_s_primes.len() as f64;
+        let extra = self.solver.cost.transfer_kv_per_token_s * nvme_factor.max(0.0) * n;
+        // the disk region ends at l_floor + disk_prefix; a split of l
+        // covers its tokens below l (and the floor region below l_floor
+        // holds no stored KV at all, so it can never owe the surcharge —
+        // relevant when an infeasible floor degrades the plan to l = 0)
+        let disk_end = l_floor + disk_prefix;
+        let surcharge = |l: usize| disk_end.saturating_sub(l.max(l_floor)) as f64 * extra;
+        let b = self.plan_batch_tiered(lane_s_primes, resident, disk_end);
+        let (plan, cost) = {
+            let ca = a.predicted_s + surcharge(a.l());
+            let cb = b.predicted_s + surcharge(b.l());
+            if cb < ca {
+                (b, cb)
+            } else {
+                (a, ca)
+            }
+        };
+        let mut plan = plan;
+        plan.baseline_s += surcharge(0);
+        plan.predicted_s = cost;
+        plan
+    }
+
     /// The split-point trajectory over a whole generation (Fig 12): one
     /// continuous-optimum l* per generated token.
     pub fn split_trajectory(&self, prompt_len: usize, gen_len: usize) -> Vec<usize> {
@@ -359,6 +412,87 @@ mod tests {
             assert_eq!(a.ideal_l, b.ideal_l);
             assert!((a.predicted_s - b.predicted_s).abs() < 1e-15);
         }
+    }
+
+    #[test]
+    fn four_tier_reduces_to_tiered_without_disk() {
+        let p = planner(SchedulePolicy::RowByRow);
+        for lanes in [vec![128usize; 4], vec![120, 64, 96, 128]] {
+            let a = p.plan_batch_tiered(&lanes, 32, 0);
+            let b = p.plan_batch_four_tier(&lanes, 32, 0, 0, 4.0);
+            assert_eq!(a.l(), b.l());
+            assert!((a.predicted_s - b.predicted_s).abs() < 1e-15);
+            assert!((a.baseline_s - b.baseline_s).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn disk_prefix_pays_the_two_hop_surcharge() {
+        // recompute hopeless → the plan stays full transfer, but every
+        // disk-prefix token now costs an extra NVMe hop on top of the
+        // interconnect transfer the objective already charges
+        let cost = CostModel {
+            recompute_per_token_s: 1e-3,
+            transfer_kv_per_token_s: 1e-9,
+            transfer_act_per_token_s: 5e-10,
+            gpu_overhead_s: 0.0,
+            link_latency_s: 0.0,
+        };
+        let p = Planner::new(cost, SchedulePolicy::RowByRow, vec![32, 64, 96], usize::MAX);
+        let tiered = p.plan_batch_tiered(&[128; 2], 0, 0);
+        assert_eq!(tiered.l(), 0);
+        let four = p.plan_batch_four_tier(&[128; 2], 0, 0, 32, 4.0);
+        assert_eq!(four.l(), 0, "covering by recompute is hopeless here");
+        let surcharge = 32.0 * 1e-9 * 4.0 * 2.0; // tokens × C × nvme × lanes
+        assert!((four.predicted_s - (tiered.predicted_s + surcharge)).abs() < 1e-15);
+        assert!((four.baseline_s - (tiered.baseline_s + surcharge)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn expensive_disk_prefix_pushes_the_split_up() {
+        // commensurate costs: the three-tier plan picks bucket 32, but a
+        // 64-token disk prefix makes the two-hop read of tokens [32, 64)
+        // dearer than recomputing the whole prefix — the four-tier plan
+        // raises the split to the covering bucket
+        let cost = CostModel {
+            recompute_per_token_s: 2e-6,
+            transfer_kv_per_token_s: 1e-6,
+            transfer_act_per_token_s: 5e-7,
+            gpu_overhead_s: 0.0,
+            link_latency_s: 0.0,
+        };
+        let p = Planner::new(cost, SchedulePolicy::RowByRow, vec![32, 64, 96], usize::MAX);
+        let tiered = p.plan_batch_tiered(&[128; 2], 0, 0);
+        assert_eq!(tiered.l(), 32, "three-tier optimum is the low bucket");
+        let four = p.plan_batch_four_tier(&[128; 2], 0, 0, 64, 4.0);
+        assert_eq!(four.l(), 64, "disk prefix must push the split to its covering bucket");
+        // and it must genuinely beat paying the surcharge at l = 32
+        let surcharge_at_32 = 32.0 * 1e-6 * 4.0 * 2.0;
+        assert!(four.predicted_s < tiered.predicted_s + surcharge_at_32);
+    }
+
+    #[test]
+    fn disk_region_is_offset_by_the_dropped_prefix() {
+        // dropped [0, 32) + disk [32, 64): the three-tier candidate lands
+        // on the floor bucket l = 32, which covers *none* of the disk
+        // region — the surcharge must still charge all 32 disk tokens, so
+        // raising the split to cover through token 64 wins
+        let cost = CostModel {
+            recompute_per_token_s: 2e-6,
+            transfer_kv_per_token_s: 1e-6,
+            transfer_act_per_token_s: 5e-7,
+            gpu_overhead_s: 0.0,
+            link_latency_s: 0.0,
+        };
+        let p = Planner::new(cost, SchedulePolicy::RowByRow, vec![32, 64, 96], usize::MAX);
+        let floored = p.plan_batch_tiered(&[128; 2], 0, 32);
+        assert_eq!(floored.l(), 32);
+        let four = p.plan_batch_four_tier(&[128; 2], 0, 32, 32, 4.0);
+        assert_eq!(
+            four.l(),
+            64,
+            "the covering split must reach the disk region's end, not its length"
+        );
     }
 
     #[test]

@@ -18,5 +18,5 @@
 mod link;
 mod pinned;
 
-pub use link::{Link, LinkConfig, LinkStats, Priority, TransferHandle};
+pub use link::{Link, LinkConfig, LinkStats, Priority, TransferHandle, NVME_BANDWIDTH_FACTOR};
 pub use pinned::PinnedPool;

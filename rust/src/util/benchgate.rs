@@ -1,0 +1,205 @@
+//! Bench-regression gate over the JSON trajectories the bench harnesses
+//! emit (`BENCH_kvstore.json`): compare a fresh run against the committed
+//! `BENCH_baseline.json` and fail when any policy's throughput regressed
+//! beyond the allowed fraction.  CI runs this through the thin
+//! `examples/bench_gate.rs` wrapper after `cargo bench --bench
+//! perf_hotpath`.
+//!
+//! Two modes, decided by the baseline file itself:
+//!
+//! * **Regression mode** (the normal state): the baseline mirrors the
+//!   bench output's shape.  Every object in the baseline carrying a
+//!   `steps_per_s` number is located at the same path in the fresh run
+//!   and must not have dropped by more than `max_drop_frac`.
+//! * **Provisional mode** (`"provisional": true` in the baseline): the
+//!   baseline carries no trusted numbers yet — only an `"expect"` list of
+//!   dotted paths that must exist in the fresh run with a positive
+//!   `steps_per_s`.  The gate passes on structure alone and prints the
+//!   refresh recipe, so the first machine to run the bench can promote
+//!   its output to the real baseline.
+
+use super::json::Json;
+
+/// Throughput metric the gate compares at every policy path.
+const METRIC: &str = "steps_per_s";
+
+/// Default allowed fractional drop before the gate fails (10 %).
+pub const DEFAULT_MAX_DROP: f64 = 0.10;
+
+/// Outcome of one gate run.
+#[derive(Debug)]
+pub struct GateReport {
+    /// Metric paths compared (regression mode) or structurally verified
+    /// (provisional mode).
+    pub checked: usize,
+    /// Human-readable failures; empty means the gate passed.
+    pub failures: Vec<String>,
+    /// The baseline was provisional: only structure was enforced.
+    pub provisional: bool,
+}
+
+impl GateReport {
+    pub fn passed(&self) -> bool {
+        self.failures.is_empty()
+    }
+}
+
+/// Compare `fresh` against `baseline`, allowing `max_drop_frac` relative
+/// regression on every `steps_per_s` metric the baseline pins.
+pub fn compare(baseline: &Json, fresh: &Json, max_drop_frac: f64) -> GateReport {
+    let provisional = matches!(baseline.get("provisional"), Some(Json::Bool(true)));
+    let mut report = GateReport { checked: 0, failures: Vec::new(), provisional };
+    if provisional {
+        match baseline.get("expect").and_then(|e| e.as_arr()) {
+            Some(paths) if !paths.is_empty() => {
+                for p in paths {
+                    let Some(path) = p.as_str() else {
+                        report.failures.push("non-string entry in \"expect\"".to_string());
+                        continue;
+                    };
+                    let parts: Vec<&str> = path.split('.').collect();
+                    let node = fresh.at(&parts);
+                    match node.get(METRIC).and_then(|v| v.as_f64()) {
+                        Some(v) if v > 0.0 => report.checked += 1,
+                        _ => report.failures.push(format!(
+                            "{path}: missing or non-positive {METRIC} in the fresh run"
+                        )),
+                    }
+                }
+            }
+            _ => report
+                .failures
+                .push("provisional baseline carries no \"expect\" path list".to_string()),
+        }
+        return report;
+    }
+    walk(baseline, fresh, "", max_drop_frac, &mut report);
+    if report.checked == 0 {
+        report.failures.push(format!("baseline pins no {METRIC} metrics — nothing gated"));
+    }
+    report
+}
+
+fn walk(base: &Json, fresh: &Json, path: &str, max_drop: f64, report: &mut GateReport) {
+    let Json::Obj(map) = base else { return };
+    if let Some(bv) = map.get(METRIC).and_then(|v| v.as_f64()) {
+        report.checked += 1;
+        match fresh.get(METRIC).and_then(|v| v.as_f64()) {
+            Some(fv) if fv + 1e-12 >= bv * (1.0 - max_drop) => {}
+            Some(fv) => report.failures.push(format!(
+                "{path}: {METRIC} regressed {bv:.3} → {fv:.3} (allowed drop {:.0}%)",
+                max_drop * 100.0
+            )),
+            None => report
+                .failures
+                .push(format!("{path}: {METRIC} missing from the fresh run")),
+        }
+    }
+    for (k, v) in map {
+        if matches!(v, Json::Obj(_)) {
+            let child = fresh.get(k).unwrap_or(&Json::Null);
+            let p = if path.is_empty() { k.clone() } else { format!("{path}.{k}") };
+            walk(v, child, &p, max_drop, report);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn j(text: &str) -> Json {
+        Json::parse(text).expect("test json")
+    }
+
+    #[test]
+    fn equal_runs_pass() {
+        let b = j(r#"{"policies": {"lru": {"steps_per_s": 100.0, "evictions": 3}}}"#);
+        let r = compare(&b, &b.clone(), DEFAULT_MAX_DROP);
+        assert!(r.passed());
+        assert_eq!(r.checked, 1);
+        assert!(!r.provisional);
+    }
+
+    #[test]
+    fn small_drop_passes_large_drop_fails() {
+        let b = j(r#"{"policies": {"lru": {"steps_per_s": 100.0}}}"#);
+        let ok = j(r#"{"policies": {"lru": {"steps_per_s": 91.0}}}"#);
+        assert!(compare(&b, &ok, 0.10).passed());
+        let bad = j(r#"{"policies": {"lru": {"steps_per_s": 89.0}}}"#);
+        let r = compare(&b, &bad, 0.10);
+        assert!(!r.passed());
+        assert!(r.failures[0].contains("policies.lru"), "{}", r.failures[0]);
+    }
+
+    #[test]
+    fn improvements_always_pass() {
+        let b = j(r#"{"a": {"steps_per_s": 50.0}, "b": {"steps_per_s": 70.0}}"#);
+        let f = j(r#"{"a": {"steps_per_s": 500.0}, "b": {"steps_per_s": 70.0}}"#);
+        let r = compare(&b, &f, 0.10);
+        assert!(r.passed());
+        assert_eq!(r.checked, 2);
+    }
+
+    #[test]
+    fn missing_policy_in_fresh_run_fails() {
+        let b = j(r#"{"four_tier": {"lru": {"steps_per_s": 10.0}}}"#);
+        let f = j(r#"{"four_tier": {}}"#);
+        let r = compare(&b, &f, 0.10);
+        assert!(!r.passed());
+        assert!(r.failures[0].contains("missing"));
+    }
+
+    #[test]
+    fn nested_sections_are_all_gated() {
+        let b = j(
+            r#"{"policies": {"lru": {"steps_per_s": 10.0}},
+                "tiered": {"ra": {"steps_per_s": 20.0}},
+                "four_tier": {"ra": {"steps_per_s": 30.0}}}"#,
+        );
+        let f = j(
+            r#"{"policies": {"lru": {"steps_per_s": 10.0}},
+                "tiered": {"ra": {"steps_per_s": 20.0}},
+                "four_tier": {"ra": {"steps_per_s": 1.0}}}"#,
+        );
+        let r = compare(&b, &f, 0.10);
+        assert_eq!(r.checked, 3);
+        assert_eq!(r.failures.len(), 1);
+        assert!(r.failures[0].contains("four_tier.ra"));
+    }
+
+    #[test]
+    fn empty_baseline_is_a_failure_not_a_silent_pass() {
+        let b = j(r#"{"bench": "kvstore"}"#);
+        let r = compare(&b, &b.clone(), 0.10);
+        assert!(!r.passed(), "a baseline pinning nothing must not pass silently");
+    }
+
+    #[test]
+    fn provisional_baseline_checks_structure_only() {
+        let b = j(
+            r#"{"provisional": true,
+                "expect": ["policies.lru", "four_tier.recompute_aware"]}"#,
+        );
+        let good = j(
+            r#"{"policies": {"lru": {"steps_per_s": 12.5}},
+                "four_tier": {"recompute_aware": {"steps_per_s": 40.0}}}"#,
+        );
+        let r = compare(&b, &good, 0.10);
+        assert!(r.passed());
+        assert!(r.provisional);
+        assert_eq!(r.checked, 2);
+        // a fresh run missing an expected section still fails the gate
+        let bad = j(r#"{"policies": {"lru": {"steps_per_s": 12.5}}}"#);
+        let r = compare(&b, &bad, 0.10);
+        assert!(!r.passed());
+        assert!(r.failures[0].contains("four_tier.recompute_aware"));
+    }
+
+    #[test]
+    fn provisional_without_expectations_fails() {
+        let b = j(r#"{"provisional": true}"#);
+        let r = compare(&b, &j("{}"), 0.10);
+        assert!(!r.passed());
+    }
+}

@@ -1,7 +1,9 @@
 //! Small self-contained substrates: a mini JSON parser/writer (the vendored
 //! crate set has no serde facade), a deterministic PRNG (no `rand`), basic
-//! statistics, and a fixed-width table printer used by the bench harnesses.
+//! statistics, a fixed-width table printer used by the bench harnesses, and
+//! the bench-regression gate CI runs over their JSON output.
 
+pub mod benchgate;
 pub mod json;
 pub mod prng;
 pub mod stats;

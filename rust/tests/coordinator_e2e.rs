@@ -347,6 +347,100 @@ fn async_demotions_drain_a_full_gpu_tier_across_steps() {
     }
 }
 
+#[test]
+fn disk_spill_admits_more_sequences_and_never_blocks_the_step_loop() {
+    let _g = lock();
+    // Acceptance (PR 4): with a dram budget too small for the offered
+    // load, spill-enabled four-tier serving admits strictly more
+    // concurrent sequences than the PR 3 three-tier config, produces
+    // bit-identical tokens, and the step loop never blocks on a disk
+    // transfer — every disk byte is issued and completed through the
+    // MigrationEngine's poll path (issued on one step, polled on later
+    // ones).
+    //
+    // Two waves make the spill path deterministic: one long request fills
+    // the dram tier and decodes until its prefix blocks are fully valid
+    // (the one-block gpu tier cannot absorb them), then three more
+    // requests arrive.  Three-tier: the dram budget serialises the wave.
+    // Four-tier: the mature prefix blocks spill to disk and the wave's
+    // own cold blocks park there, so everything decodes concurrently.
+    const GEN_LONG: usize = 60;
+    const GEN_SHORT: usize = 6;
+    let mk = |disk_bytes: u64| {
+        let mut cfg = continuous_cfg(1, 4);
+        cfg.kv_budget_bytes = 200 << 10; // gpu tier: one 16-token block
+        cfg.admit_wait = Duration::from_millis(1);
+        cfg.tiering = Some(TieredKvConfig {
+            pinned_bytes: 64 << 10, // below one block: dram is the host tier
+            dram_bytes: 2 << 20,    // ~10 blocks: one session plus change
+            disk_bytes,
+            spill_watermark: 0.5,
+            block_tokens: 16,
+            prefetch_blocks: 1,
+            max_inflight: 8,
+            promote_cooldown: 2,
+            ..TieredKvConfig::default()
+        });
+        cfg
+    };
+    let run = |cfg: ContinuousConfig| {
+        let server = ContinuousServer::start(cfg).unwrap();
+        let long = server.submit("the long running sequence", GEN_LONG);
+        // wave 2 arrives once the long group's prefix blocks are mature
+        // (kv ≥ 32 tokens ⇒ a fully-valid dram block exists)
+        for _ in 0..2000 {
+            if server.metrics().steps() >= 20 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let wave: Vec<_> = ["wave two b", "wave two c", "wave two d"]
+            .iter()
+            .map(|p| server.submit(p, GEN_SHORT))
+            .collect();
+        let mut tokens = vec![long.wait().unwrap().tokens];
+        for h in wave {
+            tokens.push(h.wait().unwrap().tokens);
+        }
+        let m = server.metrics();
+        let out = (tokens, m.peak_occupancy(), m.disk_totals(), m.backpressure_events());
+        server.shutdown().unwrap();
+        out
+    };
+
+    let (tok3, peak3, disk3, bp3) = run(mk(0));
+    assert_eq!(disk3, (0, 0, 0, 0), "no disk tier, no disk traffic");
+    assert!(bp3 > 0, "the dram budget must bind in the three-tier run");
+    assert!(peak3 <= 1.0 + 1e-9, "three-tier must serialise the wave: peak {peak3}");
+
+    let (tok4, peak4, (sp_issued, sp_polled, hop_issued, hop_polled), _) = run(mk(64 << 20));
+    assert!(
+        peak4 > peak3,
+        "spill-enabled serving must admit strictly more concurrent sequences: \
+         {peak4} vs {peak3}"
+    );
+    assert!(sp_issued > 0, "dram pressure must spill cold blocks to disk");
+    assert!(
+        sp_polled > 0,
+        "spill writebacks must land via polling on later steps, never a blocking \
+         wait (issued {sp_issued}, polled {sp_polled})"
+    );
+    // Disk *reads* (two-hop promotions) depend on gpu-tier timing and are
+    // not guaranteed to trigger here; their issued-one-step /
+    // polled-a-later-step staging is pinned deterministically by
+    // kvstore::store::tests::two_hop_promotion_stages_across_steps.  This
+    // run only checks consistency if any occurred.
+    assert!(hop_polled <= hop_issued, "hops cannot land more often than issued");
+    let interpreted = !std::path::Path::new(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/artifacts/manifest.json"
+    ))
+    .exists();
+    if interpreted {
+        assert_eq!(tok3, tok4, "disk spill changed generated tokens");
+    }
+}
+
 // ---------------------------------------------------------------------------
 // whole-batch baseline server + router (previously artifact-gated; the
 // interpreter runtime makes them unconditional)
