@@ -14,7 +14,9 @@ use std::time::Instant;
 use kvpr::config::{HardwareConfig, ModelConfig, WorkloadConfig};
 use kvpr::kvcache::quant;
 use kvpr::kvstore::{simulate_eviction, EvictionSimConfig, EvictionSimReport, Lru, RecomputeAware};
-use kvpr::scheduler::{CostModel, SchedulePolicy, SplitSolver};
+use kvpr::scheduler::{
+    CostModel, LinkSpec, PlanInput, Planner, SchedulePolicy, SplitSolver, TierTopology,
+};
 use kvpr::sim::{simulate_decode, Policy, RunConfig};
 use kvpr::util::table::Table;
 
@@ -185,14 +187,69 @@ fn main() {
         ),
     ]);
 
+    // topology-driven planning: the one plan_batch fold the continuous
+    // loop runs per group per step.  One planner per chain length — a
+    // genuine 2/3/4-tier sweep, each over its own declared chain with a
+    // matching PlanInput shape — so plan latency (which must stay sub-µs:
+    // it multiplies by groups × steps) is tracked as a function of chain
+    // depth, and the slack prediction (the adaptive migration budget)
+    // alongside it.
+    let pcost =
+        CostModel::from_hardware(&HardwareConfig::a100_x16(), &ModelConfig::opt_6_7b(), 1);
+    let pcie = LinkSpec { bytes_per_sec: 28e9, latency_s: 30e-6 }; // PCIe 4.0 x16-ish
+    let mut topo_json = Vec::new();
+    for (name, tiers) in [("two_tier", 2usize), ("three_tier", 3), ("four_tier", 4)] {
+        let topo = match tiers {
+            2 => TierTopology::device_host(2 << 30, pcie),
+            3 => TierTopology::standard(2 << 30, 16u64 << 30, 64u64 << 30).calibrated(&pcie),
+            _ => TierTopology::standard(2 << 30, 16u64 << 30, 64u64 << 30)
+                .with_disk(1u64 << 40, 0.9) // datacenter NVMe below dram
+                .calibrated(&pcie),
+        };
+        let disk = topo.tier_named("disk-nvme");
+        let planner = Planner::new(
+            pcost.clone(),
+            SchedulePolicy::RowByRow,
+            vec![128, 256, 384, 512],
+            usize::MAX,
+        )
+        .with_topology(topo);
+        let mut input = PlanInput::new(vec![1024; 32]);
+        if tiers >= 3 {
+            input = input.resident(256).dropped_floor(128);
+        }
+        if tiers >= 4 {
+            input = input.prefix(disk.expect("four-tier chain has a disk rung"), 256);
+        }
+        let plan = planner.plan_batch(&input);
+        let dt = time_per_iter(200_000, || {
+            std::hint::black_box(planner.plan_batch(std::hint::black_box(&input)));
+        });
+        t.row(&[
+            format!("topology plan ({name})"),
+            "200k".into(),
+            kvpr::util::fmt_secs(dt),
+            format!("l={}, slack {} B", plan.l(), plan.link_slack_bytes),
+        ]);
+        topo_json.push(format!(
+            "\"{name}\": {{ \"plans_per_s\": {:.3}, \"slack_bytes\": {}, \"l\": {} }}",
+            1.0 / dt,
+            plan.link_slack_bytes,
+            plan.l()
+        ));
+    }
+
     let json = format!(
-        "{{\n  \"bench\": \"kvstore\",\n  \"policies\": {{\n    \"lru\": {},\n    \"recompute_aware\": {}\n  }},\n  \"tiered\": {{\n    \"lru\": {},\n    \"recompute_aware\": {}\n  }},\n  \"four_tier\": {{\n    \"lru\": {},\n    \"recompute_aware\": {}\n  }}\n}}\n",
+        "{{\n  \"bench\": \"kvstore\",\n  \"policies\": {{\n    \"lru\": {},\n    \"recompute_aware\": {}\n  }},\n  \"tiered\": {{\n    \"lru\": {},\n    \"recompute_aware\": {}\n  }},\n  \"four_tier\": {{\n    \"lru\": {},\n    \"recompute_aware\": {}\n  }},\n  \"topology_plan\": {{\n    {},\n    {},\n    {}\n  }}\n}}\n",
         policy_json(&lru),
         policy_json(&ra),
         policy_json(&tlru),
         policy_json(&tra),
         policy_json(&flru),
-        policy_json(&fra)
+        policy_json(&fra),
+        topo_json[0],
+        topo_json[1],
+        topo_json[2]
     );
     if let Err(e) = std::fs::write("BENCH_kvstore.json", &json) {
         eprintln!("BENCH_kvstore.json not written: {e}");

@@ -24,19 +24,29 @@
 //!    to immediately; a fully-retired group frees its KV reservation, which
 //!    unblocks admission.
 //!
-//! Under tiering, every step additionally *polls* the KV store's
+//! Under tiering, the hardware shape is **declared, not hard-coded**: the
+//! [`TieredKvConfig`] carries a [`TierTopology`] — the ordered chain of
+//! tiers with capacities, links and wire widths — which the loop
+//! calibrates against the engine's wire at startup and hands to both the
+//! [`KvStore`] (pool layout + emulated migration wires) and the planner
+//! ([`Planner::with_topology`](crate::scheduler::Planner::with_topology)).
+//! Every step then *polls* the store's
 //! [`MigrationEngine`](crate::kvstore::MigrationEngine) — landing finished
 //! promotions/demotions/spills, aligning the engine's device-resident
-//! window to the settled suffix, queueing prefetch — and grants it a
-//! link-byte budget ([`TieredKvConfig::step_link_budget_bytes`]).  Nothing
-//! on this thread ever waits on the migration links: a full gpu tier is
-//! drained by asynchronous demotions whose gpu bytes free at issuance,
-//! and with a disk tier configured ([`TieredKvConfig::disk_bytes`]) a
-//! crowded dram tier is drained the same way by watermark-driven spills
-//! whose NVMe writebacks ride leftover step budget — admission that would
-//! have backpressured parks cold blocks on disk instead, and the planner
-//! charges disk-resident prefixes a two-hop transfer term
-//! ([`Planner::plan_batch_four_tier`](crate::scheduler::Planner::plan_batch_four_tier)).
+//! window to the settled suffix, queueing prefetch — plans each group via
+//! one [`PlanInput`] (residency, dropped floor, per-tier prefix spans),
+//! and grants the migration engine exactly the idle-link budget those
+//! plans predict ([`StepPlan::link_slack_bytes`](crate::scheduler::StepPlan::link_slack_bytes)):
+//! the **adaptive step budget** — migrations soak up the wire time the
+//! split freed, a zero-slack (full-transfer) step grants only the
+//! progress-guarantee minimum, and no static budget knob exists to tune.
+//! Nothing on this thread ever waits on the migration links: a full gpu
+//! tier is drained by asynchronous demotions whose gpu bytes free at
+//! issuance, and with a disk rung declared in the topology a crowded dram
+//! tier is drained the same way by watermark-driven spills whose NVMe
+//! writebacks ride leftover step budget — admission that would have
+//! backpressured parks cold blocks on disk instead, and the planner's
+//! topology fold charges disk-resident prefixes their extra hops.
 //!
 //! Requests move through `Queued → Prefill → Decoding → Done`
 //! ([`RequestState`]); per-step latency, queue depth and occupancy land in
@@ -61,7 +71,7 @@ use crate::engine::{DecodeSession, Engine, EngineConfig};
 use crate::kvstore::{EvictKind, KvStore, KvStoreConfig, Prefetcher};
 use crate::memory::{MemPool, PoolGuard};
 use crate::model::ByteTokenizer;
-use crate::scheduler::SchedulePolicy;
+use crate::scheduler::{LinkSpec, PlanInput, SchedulePolicy, TierTopology};
 
 /// Continuous-batching loop construction parameters.
 #[derive(Debug, Clone)]
@@ -105,24 +115,23 @@ impl ContinuousConfig {
 }
 
 /// Tier layout and policy for the serving loop's [`KvStore`].
+///
+/// The hardware shape lives in one place: the [`TierTopology`].  Tier
+/// capacities, the dram spill watermark and the migration wire width are
+/// all read off the chain (`TierTopology::standard(..).with_disk(..)`,
+/// [`TierTopology::with_wire_elem_bytes`] for int4 wire quantization);
+/// what remains here are the runtime knobs a chain does not describe —
+/// block size, cool-downs, prefetch depth.
 #[derive(Debug, Clone)]
 pub struct TieredKvConfig {
-    /// Pinned host tier capacity (also backs migration staging).
-    pub pinned_bytes: u64,
-    /// Cold cpu-dram tier capacity.
-    pub dram_bytes: u64,
-    /// NVMe disk tier capacity below dram; 0 keeps the PR 3 three-tier
-    /// layout.  The disk tier's link is derived from the engine link
-    /// ([`LinkConfig::nvme_below`](crate::transfer::LinkConfig::nvme_below)),
-    /// and dram blocks spill to it under the watermark policy before
-    /// admission has to backpressure.
-    pub disk_bytes: u64,
-    /// Capacity-aware spill: dram occupancy above this fraction spills
-    /// cold blocks to disk (leftover-budget NVMe traffic).  Ignored when
-    /// `disk_bytes` is 0.
-    pub spill_watermark: f64,
-    /// Spills issued per event-loop step at most.
-    pub spill_max_per_step: usize,
+    /// The declared tier chain at and below the gpu tier.  A zero
+    /// capacity on the top (gpu) rung inherits
+    /// [`ContinuousConfig::kv_budget_bytes`]; links the config leaves
+    /// unresolved are calibrated against the engine's wire at startup
+    /// ([`TierTopology::calibrated`]), so the store's emulated migration
+    /// wires, the eviction scores and the planner's hop surcharges all
+    /// read the same measured numbers.
+    pub topology: TierTopology,
     /// Tokens per block; match the smallest artifact L bucket so dropped-KV
     /// floors land on a real recompute bucket.
     pub block_tokens: usize,
@@ -132,35 +141,52 @@ pub struct TieredKvConfig {
     pub prefetch_blocks: usize,
     /// Bound on open migrations (queued or in flight) across all groups.
     pub max_inflight: usize,
-    /// Link bytes the migration engine may launch per event-loop step —
-    /// the budget that keeps tier traffic from starving the step's own
-    /// KV/activation transfers.  Queued migrations beyond it wait for the
-    /// next step's grant.
-    pub step_link_budget_bytes: u64,
-    /// Charge migrations int4 wire bytes (0.625 B/elem) and score evicted
-    /// blocks' transfer refills at the same width (paper §4.4 group-wise
-    /// KV quantization applied to tier traffic).
-    pub kv_quant_wire: bool,
     /// Anti-thrash hysteresis: a block demoted within the last this-many
     /// event-loop steps is not re-promoted (0 disables).
     pub promote_cooldown: u64,
+    /// The spill-side mirror: a block whose disk→dram hop landed within
+    /// the last this-many steps is not re-spillable (0 disables).
+    pub spill_cooldown: u64,
+    /// Dram-occupancy floor below the watermark: spill declines at or
+    /// under this occupancy fraction (0.0 disables).
+    pub spill_floor: f64,
+    /// Spills issued per event-loop step at most.
+    pub spill_max_per_step: usize,
+    /// Pin the per-step migration grant to a fixed byte count instead of
+    /// deriving it from the planner's predicted idle-link slack
+    /// ([`StepPlan::link_slack_bytes`](crate::scheduler::StepPlan::link_slack_bytes))
+    /// — an A/B lever for experiments (the e2e uses it to pin
+    /// bit-identical tokens across budget policies).  `None` — the
+    /// default, and the intended production setting — is the adaptive
+    /// path.
+    ///
+    /// Note the adaptive grant is deliberately austere on a saturated
+    /// wire: a workload whose plans never split (full transfer every
+    /// step, or a non-partial engine policy, where the wire is busy end
+    /// to end and the true slack *is* zero) grants only the 1-byte
+    /// progress minimum — demand traffic trickles at one launch per step
+    /// and spill writebacks (strictly leftover-budget, never given the
+    /// progress override) wait for a step with real slack.  Their dram
+    /// bytes were freed at issuance, so capacity relief is not delayed —
+    /// only the background writeback is.  Pin an override if a workload
+    /// needs tier traffic to overcommit the wire the way the old static
+    /// knob did.
+    pub step_budget_override: Option<u64>,
 }
 
 impl Default for TieredKvConfig {
     fn default() -> Self {
         TieredKvConfig {
-            pinned_bytes: 64 << 20,
-            dram_bytes: 256 << 20,
-            disk_bytes: 0,
-            spill_watermark: 0.9,
-            spill_max_per_step: 2,
+            topology: TierTopology::standard(0, 64 << 20, 256 << 20),
             block_tokens: 32,
             policy: EvictKind::RecomputeAware,
             prefetch_blocks: 1,
             max_inflight: 8,
-            step_link_budget_bytes: 4 << 20,
-            kv_quant_wire: false,
             promote_cooldown: 4,
+            spill_cooldown: 4,
+            spill_floor: 0.0,
+            spill_max_per_step: 2,
+            step_budget_override: None,
         }
     }
 }
@@ -308,55 +334,64 @@ fn serve_loop(
         None
     };
     let kv_pool = MemPool::new("host-kv-budget", cfg.kv_budget_bytes);
-    // the disk tier rides an NVMe-shaped wire derived from the engine
-    // link; its speed ratio feeds both the spill policy's two-hop reload
-    // scoring and the planner's two-hop transfer term
-    let nvme_link = crate::transfer::LinkConfig::nvme_below(&cfg.engine.link);
-    let nvme_factor = if nvme_link.bytes_per_sec.is_finite() && nvme_link.bytes_per_sec > 0.0 {
-        cfg.engine.link.bytes_per_sec / nvme_link.bytes_per_sec
-    } else {
-        // unthrottled links: fall back to the link model's shape ratio
-        crate::transfer::NVME_BANDWIDTH_FACTOR
+    // the declared tier chain, calibrated against the engine wire: links
+    // the config left unresolved resolve to that wire (host rungs) or an
+    // NVMe-shaped derivation of it (rungs below the base), so the store's
+    // emulated wires, the eviction scores and the planner's hop
+    // surcharges all read the same numbers; a zero-capacity gpu rung
+    // inherits the serving KV budget
+    let topo: Option<TierTopology> = cfg.tiering.as_ref().map(|t| {
+        let mut topo = t.topology.calibrated(&LinkSpec::of(&cfg.engine.link));
+        if topo.tier(0).capacity_bytes == 0 {
+            topo.set_capacity(0, cfg.kv_budget_bytes);
+        }
+        topo
+    });
+    let disk_tier = topo.as_ref().and_then(|t| t.tier_named("disk-nvme"));
+    // the disk rung's extra-hop surcharge feeds the spill policy's
+    // two-hop reload scoring (the planner reads it from the same chain)
+    let nvme_factor = match (topo.as_ref(), disk_tier) {
+        (Some(t), Some(i)) => t.hop_factor(i),
+        _ => crate::transfer::NVME_BANDWIDTH_FACTOR,
     };
     // tiered mode: the budget becomes the gpu tier; admission goes through
     // the block-granular store and its reclaimable lower tiers instead
-    let mut store: Option<(KvStore, Prefetcher)> = cfg.tiering.as_ref().map(|t| {
-        let cost = engine.profile().cost_model(&engine.runtime().manifest().model);
-        let s = KvStore::new(
-            KvStoreConfig {
-                gpu_bytes: cfg.kv_budget_bytes,
-                pinned_bytes: t.pinned_bytes,
-                dram_bytes: t.dram_bytes,
-                disk_bytes: t.disk_bytes,
-                block_tokens: t.block_tokens,
-                link: cfg.engine.link.clone(),
-                nvme_link: nvme_link.clone(),
-                wire_elem_bytes: if t.kv_quant_wire {
-                    crate::kvcache::ELEM_BYTES_INT4_G64
-                } else {
-                    crate::kvcache::ELEM_BYTES_F32
-                },
-                promote_cooldown: t.promote_cooldown,
-                spill_watermark: t.spill_watermark,
-                spill_max_per_step: t.spill_max_per_step,
-            },
-            // the eviction/demotion/spill scores move bytes at the same
-            // wire width and NVMe ratio the migration engine charges
-            t.policy.build_tiered(cost, t.kv_quant_wire, nvme_factor),
-        );
-        (s, Prefetcher::new(t.max_inflight))
-    });
+    let mut store: Option<(KvStore, Prefetcher)> = match (cfg.tiering.as_ref(), topo.as_ref()) {
+        (Some(t), Some(topo)) => {
+            let cost = engine.profile().cost_model(&engine.runtime().manifest().model);
+            let mut scfg = KvStoreConfig::from_topology(topo, cfg.engine.link.chunk_bytes);
+            scfg.block_tokens = t.block_tokens;
+            scfg.promote_cooldown = t.promote_cooldown;
+            scfg.spill_cooldown = t.spill_cooldown;
+            scfg.spill_floor = t.spill_floor;
+            scfg.spill_max_per_step = t.spill_max_per_step;
+            let s = KvStore::new(
+                scfg,
+                // the eviction/demotion/spill scores move bytes at the
+                // exact wire width and NVMe ratio the migration engine
+                // charges — both read off the same declared chain
+                t.policy.build_for_wire(cost, topo.wire_elem_bytes(), nvme_factor),
+            );
+            Some((s, Prefetcher::new(t.max_inflight)))
+        }
+        _ => None,
+    };
     let prefetch_blocks = cfg.tiering.as_ref().map_or(1, |t| t.prefetch_blocks);
     let seq_cap = engine.runtime().manifest().seq_cap;
     let mut next_seq: u64 = 1;
     let tok = ByteTokenizer::new();
     // per-lane planner (batch scaling happens in plan_batch); depends only
-    // on the startup profile, so build it once, off the step path
-    let lane_planner = engine
-        .config()
-        .policy
-        .is_partial()
-        .then(|| engine.planner(1, SchedulePolicy::RowByRow));
+    // on the startup profile + the declared topology, so build it once,
+    // off the step path.  Untiered, the engine roots it on the profile's
+    // measured device⊃host chain; tiered, the calibrated serving chain
+    // replaces that root so prefix spans resolve against the right rungs.
+    let lane_planner = engine.config().policy.is_partial().then(|| {
+        let p = engine.planner(1, SchedulePolicy::RowByRow);
+        match topo.as_ref() {
+            Some(t) => p.with_topology(t.clone()),
+            None => p,
+        }
+    });
 
     let mut queue: VecDeque<Pending> = VecDeque::new();
     let mut groups: Vec<Group> = Vec::new();
@@ -489,7 +524,8 @@ fn serve_loop(
         }
 
         // -- 2b. tiered kvstore: poll landed migrations, sync residency,
-        //        queue prefetch, grant the step's link budget --------------
+        //        queue prefetch ---------------------------------------------
+        let mut mig_before = None;
         if let Some((s, pf)) = store.as_mut() {
             // surface reclamation drops performed during admission
             let drops = s.stats().kv_drops;
@@ -498,7 +534,7 @@ fn serve_loop(
                 metrics.record_tiering(0, 0, tokens);
                 seen_kv_drops = drops;
             }
-            let (mig0, st0) = (s.migration_stats(), s.stats());
+            mig_before = Some((s.migration_stats(), s.stats()));
             // poll — never wait — the migrations previous steps launched
             pf.poll(s);
             for g in groups.iter_mut() {
@@ -527,55 +563,80 @@ fn serve_loop(
                     metrics.record_tiering(p as u64, d as u64, 0);
                 }
             }
-            // one budgeted launch pass per step: demand promotions first,
-            // then demotion writebacks, then prefetch
-            let budget = cfg.tiering.as_ref().map_or(0, |t| t.step_link_budget_bytes);
-            s.pump_migrations(budget);
-            let (mig1, st1) = (s.migration_stats(), s.stats());
-            metrics.record_migrations(
-                mig1.launched - mig0.launched,
-                mig1.landed - mig0.landed,
-                mig1.budget_deferrals - mig0.budget_deferrals,
-                st1.demotions - st0.demotions,
-                st1.demotions_landed - st0.demotions_landed,
-            );
-            let disk = (st1.spills, st1.spills_landed, st1.hops, st1.hops_landed);
-            metrics.record_disk(
-                disk.0 - seen_disk.0,
-                disk.1 - seen_disk.1,
-                disk.2 - seen_disk.2,
-                disk.3 - seen_disk.3,
-            );
-            seen_disk = disk;
         }
 
-        // -- 3+4. re-plan and step every group -------------------------------
+        // -- 3. re-plan every group over the declared chain ------------------
+        // membership changed last step ⇒ the aggregate cost model changed
+        // ⇒ re-solve Eq. (11) for each group now.  The engine decodes (and
+        // transfers) every lane of the batch *bucket*, padding and retired
+        // lanes included, so the aggregate uses the bucket's lane count —
+        // not just the live members — at the members' shared s'.  Under
+        // tiering the PlanInput also carries the device-resident suffix
+        // (shrinks the transfer term), any dropped-KV prefix (floors the
+        // recompute term) and the disk-resident prefix span (pays its
+        // extra hops unless the fold raises the split over it).
+        let mut plans: Vec<Option<usize>> = Vec::with_capacity(groups.len());
+        let mut slack_total: u64 = 0;
+        for g in groups.iter_mut() {
+            let plan = lane_planner.as_ref().map(|p| {
+                let lanes = vec![g.sess.kv_len(); g.sess.batch_bucket()];
+                let mut input = PlanInput::new(lanes).resident(g.sess.resident_tokens());
+                if let (KvHold::Tiered(seq), Some((s, _))) = (&g.kv, store.as_ref()) {
+                    input = input.dropped_floor(s.kv_dropped_tokens(*seq));
+                    let disk = s.disk_resident_tokens(*seq);
+                    if disk > 0 {
+                        let tier = disk_tier
+                            .expect("disk-resident tokens without a disk rung in the topology");
+                        input = input.prefix(tier, disk);
+                    }
+                }
+                p.plan_batch(&input)
+            });
+            if let Some(pl) = &plan {
+                g.last_l = pl.l();
+                slack_total = slack_total.saturating_add(pl.link_slack_bytes);
+            }
+            plans.push(plan.map(|pl| pl.l()));
+        }
+
+        // -- 3b. adaptive step budget: grant the migration engine exactly
+        //        the idle-link bytes this step's plans predict (the static
+        //        override pins a fixed grant for A/B runs).  A zero-slack
+        //        step grants the 1-byte progress minimum, so demand traffic
+        //        can still ride the engine's oversized-block override —
+        //        one launch, nothing more.  Launch order under the grant:
+        //        demand promotions, demotion writebacks, prefetch, spill.
+        if let (Some((s, _)), Some(t)) = (store.as_mut(), cfg.tiering.as_ref()) {
+            let grant = t.step_budget_override.unwrap_or(slack_total.max(1));
+            let launched_before = s.migration_stats().launched;
+            s.pump_migrations(grant);
+            let launched = s.migration_stats().launched - launched_before;
+            metrics.record_step_budget(slack_total, grant, launched);
+            if let Some((mig0, st0)) = mig_before {
+                let (mig1, st1) = (s.migration_stats(), s.stats());
+                metrics.record_migrations(
+                    mig1.launched - mig0.launched,
+                    mig1.landed - mig0.landed,
+                    mig1.budget_deferrals - mig0.budget_deferrals,
+                    st1.demotions - st0.demotions,
+                    st1.demotions_landed - st0.demotions_landed,
+                );
+                let disk = (st1.spills, st1.spills_landed, st1.hops, st1.hops_landed);
+                metrics.record_disk(
+                    disk.0 - seen_disk.0,
+                    disk.1 - seen_disk.1,
+                    disk.2 - seen_disk.2,
+                    disk.3 - seen_disk.3,
+                );
+                seen_disk = disk;
+            }
+        }
+
+        // -- 4. step every group ---------------------------------------------
         let t_step = Instant::now();
         let mut step_tokens = 0usize;
         let active: usize = groups.iter().map(|g| g.active()).sum();
-        for g in groups.iter_mut() {
-            // membership changed last step ⇒ the aggregate cost model
-            // changed ⇒ re-solve Eq. (11) for this group now.  The engine
-            // decodes (and transfers) every lane of the batch *bucket*,
-            // padding and retired lanes included, so the aggregate uses the
-            // bucket's lane count — not just the live members — at the
-            // members' shared s'.  Under tiering the plan also accounts the
-            // device-resident suffix (shrinks the transfer term) and any
-            // dropped-KV prefix (floors the recompute term).
-            let plan_l = lane_planner.as_ref().map(|p| {
-                let lanes = vec![g.sess.kv_len(); g.sess.batch_bucket()];
-                let (floor, disk) = match (&g.kv, store.as_ref()) {
-                    (KvHold::Tiered(seq), Some((s, _))) => {
-                        (s.kv_dropped_tokens(*seq), s.disk_resident_tokens(*seq))
-                    }
-                    _ => (0, 0),
-                };
-                p.plan_batch_four_tier(&lanes, g.sess.resident_tokens(), floor, disk, nvme_factor)
-                    .l()
-            });
-            if let Some(l) = plan_l {
-                g.last_l = l;
-            }
+        for (g, plan_l) in groups.iter_mut().zip(plans) {
             engine.decode_step_with_plan(&mut g.sess, plan_l)?;
             step_tokens += g.active();
         }

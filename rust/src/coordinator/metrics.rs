@@ -46,6 +46,30 @@ struct Inner {
     spills_polled: u64,
     hops_issued: u64,
     hops_polled: u64,
+    // -- adaptive step-budget counters ---------------------------------------
+    budget: StepBudgetTotals,
+}
+
+/// Aggregates of the per-step adaptive migration grant (the planner-slack
+/// budget the serving loop hands [`KvStore::pump_migrations`](crate::kvstore::KvStore::pump_migrations)).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StepBudgetTotals {
+    /// Steps that granted a migration budget.
+    pub steps: u64,
+    /// Planner-predicted idle-link bytes, summed (saturating).
+    pub slack_bytes: u64,
+    /// Bytes actually granted, summed (saturating).
+    pub granted_bytes: u64,
+    /// Steps whose grant was not `max(slack, 1)` — stays 0 on the adaptive
+    /// path, so any non-zero value means a static override (or a bug)
+    /// detached the grant from the planner's slack.
+    pub mismatch_steps: u64,
+    /// Steps whose predicted slack was zero (the plan saved no link time).
+    pub zero_slack_steps: u64,
+    /// Most migrations launched in any zero-slack step: ≤ 1 proves only
+    /// the engine's progress-guarantee override fires when the plan
+    /// predicts no idle link time.
+    pub zero_slack_launch_max: u64,
 }
 
 impl ServeMetrics {
@@ -164,6 +188,29 @@ impl ServeMetrics {
     pub fn disk_totals(&self) -> (u64, u64, u64, u64) {
         let m = self.inner.lock().unwrap();
         (m.spills_issued, m.spills_polled, m.hops_issued, m.hops_polled)
+    }
+
+    /// One step's migration grant: the planner-predicted idle-link slack,
+    /// the bytes actually granted, and how many migrations the grant
+    /// launched.
+    pub fn record_step_budget(&self, slack_bytes: u64, granted_bytes: u64, launched: u64) {
+        let mut m = self.inner.lock().unwrap();
+        let b = &mut m.budget;
+        b.steps += 1;
+        b.slack_bytes = b.slack_bytes.saturating_add(slack_bytes);
+        b.granted_bytes = b.granted_bytes.saturating_add(granted_bytes);
+        if granted_bytes != slack_bytes.max(1) {
+            b.mismatch_steps += 1;
+        }
+        if slack_bytes == 0 {
+            b.zero_slack_steps += 1;
+            b.zero_slack_launch_max = b.zero_slack_launch_max.max(launched);
+        }
+    }
+
+    /// Aggregates of the adaptive per-step migration grant.
+    pub fn budget_totals(&self) -> StepBudgetTotals {
+        self.inner.lock().unwrap().budget
     }
 
     /// Highest number of requests decoding concurrently in any step.
@@ -347,5 +394,29 @@ mod tests {
         m.record_disk(2, 0, 1, 0);
         m.record_disk(0, 2, 0, 1);
         assert_eq!(m.disk_totals(), (2, 2, 1, 1));
+    }
+
+    #[test]
+    fn step_budget_counters_track_the_grant_rule() {
+        let m = ServeMetrics::new();
+        assert_eq!(m.budget_totals(), StepBudgetTotals::default());
+        // adaptive steps: grant == max(slack, 1)
+        m.record_step_budget(4096, 4096, 3);
+        m.record_step_budget(0, 1, 1); // zero slack: progress-only grant
+        m.record_step_budget(0, 1, 0);
+        let b = m.budget_totals();
+        assert_eq!(b.steps, 3);
+        assert_eq!(b.slack_bytes, 4096);
+        assert_eq!(b.granted_bytes, 4098);
+        assert_eq!(b.mismatch_steps, 0, "adaptive grants track the slack");
+        assert_eq!(b.zero_slack_steps, 2);
+        assert_eq!(b.zero_slack_launch_max, 1);
+        // a static override detaches the grant from the slack
+        m.record_step_budget(4096, 1 << 20, 5);
+        assert_eq!(m.budget_totals().mismatch_steps, 1);
+        // saturating, never wrapping, under unthrottled-wire slack
+        m.record_step_budget(u64::MAX, u64::MAX, 0);
+        assert_eq!(m.budget_totals().slack_bytes, u64::MAX);
+        assert_eq!(m.budget_totals().granted_bytes, u64::MAX);
     }
 }

@@ -6,14 +6,21 @@
 //!   a step-driven event loop with per-request state
 //!   machines (`Queued → Prefill → Decoding → Done`), per-step admission
 //!   and retirement, per-batch re-solving of the paper's Eq. (11) split
-//!   point via [`Planner::plan_batch`](crate::scheduler::Planner::plan_batch),
+//!   point via [`Planner::plan_batch`](crate::scheduler::Planner::plan_batch)
+//!   over one [`PlanInput`](crate::scheduler::PlanInput) per group,
 //!   and KV-budget backpressure through [`MemPool`](crate::memory::MemPool).
-//!   With [`TieredKvConfig`] set, the budget becomes the gpu tier of a
-//!   block-granular [`KvStore`](crate::kvstore::KvStore): admission runs
-//!   against the reclaimable host tiers (with recompute-aware
-//!   drop-KV-keep-X reclamation) instead of hard backpressure, an async
-//!   prefetcher promotes blocks ahead of each step, and a device-resident
-//!   KV suffix shrinks the per-step transfer term.
+//!   With [`TieredKvConfig`] set, the hardware shape is a declarative
+//!   [`TierTopology`](crate::scheduler::TierTopology) — calibrated
+//!   against the engine's measured wire and shared by the store, the
+//!   eviction scores and the planner — and the budget becomes the gpu
+//!   tier of a block-granular [`KvStore`](crate::kvstore::KvStore):
+//!   admission runs against the reclaimable host tiers (with
+//!   recompute-aware drop-KV-keep-X reclamation) instead of hard
+//!   backpressure, an async prefetcher promotes blocks ahead of each
+//!   step, a device-resident KV suffix shrinks the per-step transfer
+//!   term, and the migration engine's per-step link grant is derived
+//!   adaptively from the plans' predicted idle-link slack
+//!   ([`StepPlan::link_slack_bytes`](crate::scheduler::StepPlan::link_slack_bytes)).
 //!   This is the serving mode that exercises KVPR under concurrent load.
 //! * [`Server`] — the simpler whole-batch mode: the [`Batcher`] groups
 //!   queued requests, the engine decodes the batch to completion, then the
@@ -34,7 +41,7 @@ mod server;
 
 pub use batcher::Batcher;
 pub use continuous::{ContinuousConfig, ContinuousServer, TieredKvConfig};
-pub use metrics::ServeMetrics;
+pub use metrics::{ServeMetrics, StepBudgetTotals};
 pub use request::{Request, RequestState, Response};
 pub use router::Router;
 pub use server::{ResponseHandle, Server, ServerConfig};

@@ -327,9 +327,16 @@ impl Engine {
     /// Build an adaptive [`Planner`] for batch bucket `batch`: the measured
     /// cost model is rescaled from the profiled bucket (marginal costs are
     /// linear in batch, see `CostModel` tests) and constrained to the
-    /// artifact L buckets.  The coordinator uses this to re-solve Eq. (11)
-    /// per formed batch; [`Engine::decode_step`] uses it internally when no
-    /// externally planned split is supplied.
+    /// artifact L buckets.  The planner is rooted on the profile's
+    /// measured device⊃host topology
+    /// ([`SystemProfile::topology`](crate::profiler::SystemProfile::topology)),
+    /// so its [`StepPlan`](crate::scheduler::StepPlan)s predict link slack
+    /// out of the box; the tiered serving loop swaps in its deeper
+    /// calibrated chain via
+    /// [`Planner::with_topology`](crate::scheduler::Planner::with_topology).
+    /// The coordinator uses this to re-solve Eq. (11) per formed batch;
+    /// [`Engine::decode_step`] uses it internally when no externally
+    /// planned split is supplied.
     pub fn planner(&self, batch: usize, policy: SchedulePolicy) -> Planner {
         let mut cost: CostModel = self.profile.cost_model(&self.runtime.manifest().model);
         // profile was taken at profile.batch; rescale marginals linearly
@@ -343,6 +350,7 @@ impl Engine {
             self.runtime.manifest().l_buckets.clone(),
             self.cfg.l_cap,
         )
+        .with_topology(self.profile.topology(self.cfg.gpu_mem_bytes))
     }
 
     fn layer_weight_args<'a>(&'a self, layer: usize) -> Vec<ArgValue<'a>> {

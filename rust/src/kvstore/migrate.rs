@@ -385,7 +385,7 @@ impl MigrationEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::prng::check_property;
+    use crate::util::prng::{check_property, prop_cases};
 
     const BB: u64 = 4096;
 
@@ -644,10 +644,12 @@ mod tests {
     /// step's link-byte grant except through the single oversized-block
     /// override — which spill traffic is never given.  Pinned against an
     /// independent re-implementation of the launch rule across randomized
-    /// request mixes, sizes and per-step grants.
+    /// request mixes, sizes and per-step grants.  `KVPR_PROPTEST_CASES`
+    /// scales the case count (the nightly extended CI job runs it high).
     #[test]
     fn budgeted_pump_matches_oracle_across_three_classes() {
-        check_property("pump budget/progress with spill contention", 150, |rng| {
+        let cases = prop_cases(150);
+        check_property("pump budget/progress with spill contention", cases, |rng| {
             let cap = 1u64 << 30;
             let mut e = MigrationEngine::new(
                 cap,

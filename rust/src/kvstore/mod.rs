@@ -29,8 +29,10 @@
 //!   *polled*, never waited for, on the serving path.
 //! * [`KvStore`] — placement, residency and reclamation: resident gpu
 //!   blocks form a *suffix* of each sequence's tokens (the newest KV), so
-//!   they shrink the per-step H2D transfer term the planner sees
-//!   ([`Planner::plan_batch_tiered`](crate::scheduler::Planner::plan_batch_tiered)).
+//!   they shrink the per-step H2D transfer term the planner sees (the
+//!   `resident` input of one
+//!   [`PlanInput`](crate::scheduler::PlanInput) per group, consumed by
+//!   [`Planner::plan_batch`](crate::scheduler::Planner::plan_batch)).
 //!   Evictions issue **asynchronous demotions**: the victim's gpu bytes
 //!   free at issuance and the writeback lands later, so a full gpu tier
 //!   never stalls the step loop; a victim then sits out a configurable
@@ -60,13 +62,18 @@
 //!   (disk capacity, NVMe read-through), feeding `BENCH_kvstore.json`.
 //!
 //! The serving integration lives in
-//! [`ContinuousServer`](crate::coordinator::ContinuousServer): admission
-//! goes through [`KvStore::admit`] instead of hard backpressure; each step
-//! the loop *polls* landed migrations, mirrors placement into the engine's
+//! [`ContinuousServer`](crate::coordinator::ContinuousServer): the tier
+//! layout itself arrives as a declarative
+//! [`TierTopology`](crate::scheduler::TierTopology)
+//! ([`KvStoreConfig::from_topology`]), admission goes through
+//! [`KvStore::admit`] instead of hard backpressure; each step the loop
+//! *polls* landed migrations, mirrors placement into the engine's
 //! device-resident suffix
 //! ([`Engine::sync_residency`](crate::engine::Engine::sync_residency)),
 //! queues prefetch, and grants the step's link-byte budget via
-//! [`KvStore::pump_migrations`].
+//! [`KvStore::pump_migrations`] — sized adaptively from the planner's
+//! predicted idle-link slack
+//! ([`StepPlan::link_slack_bytes`](crate::scheduler::StepPlan::link_slack_bytes)).
 
 pub mod block;
 pub mod manager;

@@ -103,6 +103,8 @@ mod tests {
                 link,
                 wire_elem_bytes: 4.0,
                 promote_cooldown: 0,
+                spill_cooldown: 0,
+                spill_floor: 0.0,
                 spill_watermark: 0.0,
                 spill_max_per_step: 2,
             },

@@ -34,12 +34,13 @@
 //! step's split does not cover pays a **read-through surcharge** (the
 //! extra NVMe hop of the two-hop reload), and each step picks the cheaper
 //! of the three-tier split or a split raised to cover the whole disk
-//! prefix by recompute — the `plan_batch_four_tier` logic in closed form.
+//! prefix by recompute — the planner's topology-fold candidate pair
+//! (`Planner::plan_batch` over a disk-span `PlanInput`) in closed form.
 //! Recompute-aware spill therefore targets blocks the split covers anyway
 //! (zero surcharge), which is exactly what the live policy's spill lens
 //! scores.
 
-use crate::scheduler::{CostModel, SchedulePolicy, SplitSolver};
+use crate::scheduler::{CostModel, SchedulePolicy, SplitSolver, TierTopology};
 
 use super::block::BlockId;
 use super::policy::{BlockView, EvictPolicy};
@@ -131,6 +132,40 @@ impl EvictionSimConfig {
         let mut cfg = Self::skewed_reuse_tiered(cost);
         cfg.disk_bytes = cfg.capacity_bytes * 2;
         cfg
+    }
+
+    /// Take the tier model from a calibrated [`TierTopology`] instead of
+    /// the hand-set fields: the gpu rung's capacity, the summed host
+    /// rungs (pinned + cpu-dram) as `capacity_bytes`, the disk rung's
+    /// capacity, the chain's disk-hop surcharge as `nvme_factor`, and the
+    /// chain's wire element width as `wire_ratio` — so the analytic sim
+    /// and the live store read the *same* declared chain and their cost
+    /// models cannot drift.  A zero-capacity gpu or host rung keeps the
+    /// workload-relative default sizing (chains built for a serving loop
+    /// leave the gpu rung at 0 to inherit the KV budget).
+    pub fn with_topology(mut self, topo: &TierTopology) -> Self {
+        use super::block::Tier;
+        if let Some(i) = topo.tier_named(Tier::GpuHbm.name()) {
+            if topo.tier(i).capacity_bytes > 0 {
+                self.gpu_bytes = topo.tier(i).capacity_bytes;
+            }
+        }
+        let host: u64 = [Tier::Pinned.name(), Tier::CpuDram.name()]
+            .iter()
+            .filter_map(|n| topo.tier_named(n))
+            .map(|i| topo.tier(i).capacity_bytes)
+            .sum();
+        if host > 0 {
+            self.capacity_bytes = host;
+        }
+        if let Some(i) = topo.tier_named(Tier::DiskNvme.name()) {
+            self.disk_bytes = topo.tier(i).capacity_bytes;
+            self.nvme_factor = topo.hop_factor(i);
+        } else {
+            self.disk_bytes = 0;
+        }
+        self.wire_ratio = topo.wire_elem_bytes() / 4.0;
+        self
     }
 }
 
@@ -426,7 +461,7 @@ pub fn simulate_eviction(cfg: &EvictionSimConfig, policy: &dyn EvictPolicy) -> E
             // four-tier: a spilled token the split does not cover re-reads
             // over the extra NVMe hop this step; covering the whole disk
             // prefix by recompute may be cheaper (the closed-form twin of
-            // Planner::plan_batch_four_tier's candidate pair)
+            // Planner::plan_batch's topology-fold candidate pair)
             let disk_end = (st[i].dropped + st[i].spilled).min(s_eff);
             let rt_per_tok =
                 cfg.cost.transfer_kv_per_token_s * cfg.wire_ratio * cfg.nvme_factor;
@@ -556,6 +591,31 @@ mod tests {
             four.evictions,
             r3.evictions
         );
+    }
+
+    #[test]
+    fn topology_config_matches_the_hand_set_four_tier_model() {
+        // the declared chain and the hand-set fields describe the same
+        // hardware → identical analytic runs (topology is data, not a fork)
+        let hand = EvictionSimConfig::skewed_reuse_four_tier(cost());
+        let topo = crate::scheduler::TierTopology::standard(
+            hand.gpu_bytes,
+            0,
+            hand.capacity_bytes,
+        )
+        .with_disk(hand.disk_bytes, 0.9)
+        .calibrated_bps(100e6, 30e-6);
+        let from_topo = EvictionSimConfig::skewed_reuse_tiered(cost()).with_topology(&topo);
+        assert_eq!(from_topo.gpu_bytes, hand.gpu_bytes);
+        assert_eq!(from_topo.capacity_bytes, hand.capacity_bytes, "host rungs are read too");
+        assert_eq!(from_topo.disk_bytes, hand.disk_bytes);
+        assert!((from_topo.nvme_factor - hand.nvme_factor).abs() < 1e-9);
+        assert!((from_topo.wire_ratio - hand.wire_ratio).abs() < 1e-12);
+        let a = simulate_eviction(&hand, &Lru);
+        let b = simulate_eviction(&from_topo, &Lru);
+        assert_eq!(a.steps, b.steps);
+        assert_eq!(a.spills, b.spills);
+        assert!((a.wall_s - b.wall_s).abs() < 1e-12, "{} vs {}", a.wall_s, b.wall_s);
     }
 
     #[test]

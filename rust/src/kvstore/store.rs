@@ -13,8 +13,9 @@
 //!   tier ahead of its next decode step.  Resident blocks form a *suffix*
 //!   of the valid tokens (the newest KV), so every step's H2D transfer
 //!   shrinks by the resident length — the "already-on-GPU blocks shrink
-//!   the transfer term" input to
-//!   [`Planner::plan_batch_tiered`](crate::scheduler::Planner::plan_batch_tiered).
+//!   the transfer term" `resident` input of the
+//!   [`PlanInput`](crate::scheduler::PlanInput) handed to
+//!   [`Planner::plan_batch`](crate::scheduler::Planner::plan_batch).
 //!   A **disk-resident** block promotes in *two hops* staged across steps:
 //!   the walk first issues disk→dram at NVMe speed; once that hop lands
 //!   the next step's walk picks the (now host) block up for the dram→gpu
@@ -53,6 +54,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
+use crate::scheduler::TierTopology;
 use crate::transfer::LinkConfig;
 
 use super::block::{BlockId, Tier};
@@ -87,6 +89,17 @@ pub struct KvStoreConfig {
     /// `promote_cooldown` *serving steps* ([`KvStore::pump_migrations`]
     /// calls) is not re-promoted.  0 disables the cool-down.
     pub promote_cooldown: u64,
+    /// The spill-side mirror of `promote_cooldown`: a block whose
+    /// disk→dram hop landed within the last `spill_cooldown` serving
+    /// steps is not re-spillable, so a promotion/spill ping-pong under
+    /// adversarial alternating reuse is bounded from both directions.
+    /// 0 disables the cool-down.
+    pub spill_cooldown: u64,
+    /// Dram-occupancy floor below the watermark: spill declines while
+    /// dram occupancy is at or below this fraction of the tier, bounding
+    /// how far below the watermark admission-driven spills can drain the
+    /// tier.  0.0 disables the floor.
+    pub spill_floor: f64,
     /// Capacity-aware spill: when dram occupancy exceeds this fraction of
     /// the tier, cold blocks spill to disk ahead of admission pressure.
     /// 0.0 (or a zero-capacity disk tier) disables proactive spill.
@@ -110,8 +123,51 @@ impl KvStoreConfig {
             nvme_link,
             wire_elem_bytes: 4.0,
             promote_cooldown: 4,
+            spill_cooldown: 4,
+            spill_floor: 0.0,
             spill_watermark: 0.9,
             spill_max_per_step: 2,
+        }
+    }
+
+    /// Realise a **calibrated** [`TierTopology`] as a store layout: tier
+    /// capacities come from the chain's named rungs (a missing rung gets
+    /// capacity 0, disabling it), the migration wires are the chain's
+    /// declared links paced at `chunk_bytes`, the wire element width and
+    /// the dram spill watermark come off the specs.  The runtime knobs
+    /// the topology does not describe (block size, cool-downs, per-step
+    /// spill bound) keep [`KvStoreConfig::new`]'s defaults — set them on
+    /// the returned config.
+    pub fn from_topology(topo: &TierTopology, chunk_bytes: usize) -> Self {
+        let cap =
+            |name: &str| topo.tier_named(name).map_or(0, |i| topo.tier(i).capacity_bytes);
+        // the store's gpu↔pinned↔dram wire is the chain's device boundary
+        // — tier 1's up-link, the same rung the planner's
+        // `primary_bytes_per_sec` slack conversion reads, so the grant and
+        // the emulated wire can never disagree
+        let link = topo
+            .tiers()
+            .get(1)
+            .filter(|t| t.up.is_resolved())
+            .map(|t| t.up.to_link_config(chunk_bytes))
+            .unwrap_or_else(LinkConfig::unthrottled);
+        let nvme_link = topo
+            .tier_named(Tier::DiskNvme.name())
+            .map(|i| topo.tier(i).up.to_link_config(chunk_bytes))
+            .unwrap_or_else(|| LinkConfig::nvme_below(&link));
+        let spill_watermark = topo
+            .tier_named(Tier::CpuDram.name())
+            .map_or(0.0, |i| topo.tier(i).spill_watermark);
+        KvStoreConfig {
+            gpu_bytes: cap(Tier::GpuHbm.name()),
+            pinned_bytes: cap(Tier::Pinned.name()),
+            dram_bytes: cap(Tier::CpuDram.name()),
+            disk_bytes: cap(Tier::DiskNvme.name()),
+            link,
+            nvme_link,
+            wire_elem_bytes: topo.wire_elem_bytes(),
+            spill_watermark,
+            ..KvStoreConfig::new(0)
         }
     }
 }
@@ -152,6 +208,9 @@ pub struct StoreStats {
     pub device_syncs: u64,
     /// Promotion walks stopped at a cooling-down block (anti-thrash).
     pub cooldown_skips: u64,
+    /// Spill candidate scans stopped at a freshly-promoted block (the
+    /// spill-side cool-down — anti-thrash in the other direction).
+    pub spill_cooldown_skips: u64,
     /// Dram→disk spills issued (dram bytes released at issuance).
     pub spills: u64,
     /// Spill writebacks that landed on the disk tier.
@@ -172,6 +231,8 @@ pub struct KvStore {
     seqs: BTreeMap<u64, SeqEntry>,
     block_tokens: usize,
     promote_cooldown: u64,
+    spill_cooldown: u64,
+    spill_floor: f64,
     spill_watermark: f64,
     spill_max_per_step: usize,
     /// Recency clock: ticks once per [`KvStore::touch`]/[`KvStore::admit`]
@@ -201,6 +262,8 @@ impl KvStore {
             seqs: BTreeMap::new(),
             block_tokens: cfg.block_tokens,
             promote_cooldown: cfg.promote_cooldown,
+            spill_cooldown: cfg.spill_cooldown,
+            spill_floor: cfg.spill_floor,
             spill_watermark: cfg.spill_watermark,
             spill_max_per_step: cfg.spill_max_per_step,
             clock: 0,
@@ -305,6 +368,7 @@ impl KvStore {
                     kv_dropped: false,
                     pending: None,
                     demoted_at: None,
+                    promoted_at: None,
                 }),
                 None => {
                     // `blocks` drops here, rolling the reservations back
@@ -609,6 +673,7 @@ impl KvStore {
     /// so the new reservation is dropped and the block stays where it was.
     pub fn poll_landed(&mut self) -> usize {
         let mut landed_total = 0;
+        let step = self.step;
         let mut promos: BTreeMap<u64, Vec<(usize, crate::memory::PoolGuard)>> = BTreeMap::new();
         for l in self.mig.poll() {
             if l.to == Tier::GpuHbm {
@@ -626,6 +691,9 @@ impl KvStore {
                 if was == Tier::GpuHbm {
                     self.stats.demotions_landed += 1;
                 } else if l.to < was {
+                    // the hop moved the block *up*: start its spill-side
+                    // cool-down so it is not immediately re-spillable
+                    b.promoted_at = Some(step);
                     self.stats.hops_landed += 1;
                 } else {
                     self.stats.spills_landed += 1;
@@ -771,14 +839,28 @@ impl KvStore {
     /// region stays literally prefix-shaped — which is what keeps
     /// [`KvStore::disk_resident_tokens`]' lens (and the planner/sim
     /// two-hop terms built on it) honest.  A pinned, resident or
-    /// in-flight block ends a sequence's spillable prefix.  Returns the
-    /// dram bytes freed, or `None` when nothing is spillable / the disk
-    /// tier is full.
+    /// in-flight block ends a sequence's spillable prefix, and so does a
+    /// block whose disk→dram hop landed within the last `spill_cooldown`
+    /// steps (the spill-side anti-thrash hysteresis).  Spill also
+    /// declines outright while dram occupancy sits at or below the
+    /// `spill_floor` fraction — admission-driven spills cannot drain the
+    /// tier arbitrarily far under the watermark.  Returns the dram bytes
+    /// freed, or `None` when nothing is spillable / the disk tier is
+    /// full.
     fn spill_one(&mut self) -> Option<u64> {
         if self.mig.tiers().pool(Tier::DiskNvme).capacity() == 0 {
             return None;
         }
+        if self.spill_floor > 0.0 {
+            let dram = self.mig.tiers().pool(Tier::CpuDram);
+            if (dram.used() as f64) <= self.spill_floor * dram.capacity() as f64 {
+                return None;
+            }
+        }
         let bt = self.block_tokens;
+        let cooldown = self.spill_cooldown;
+        let step = self.step;
+        let mut cooled = 0u64;
         let mut cands: Vec<BlockView> = Vec::new();
         for (&sid, e) in self.seqs.iter() {
             for (idx, b) in e.blocks.iter().enumerate() {
@@ -792,6 +874,16 @@ impl KvStore {
                     }
                     // dram-settled: the one block that extends the prefix
                     BlockClass::Host if b.tier == Tier::CpuDram => {
+                        if cooldown > 0 {
+                            if let Some(at) = b.promoted_at {
+                                if step.saturating_sub(at) < cooldown {
+                                    // it just hopped up; spilling it back
+                                    // would ping-pong with that promotion
+                                    cooled += 1;
+                                    break;
+                                }
+                            }
+                        }
                         cands.push(BlockView {
                             id: BlockId { seq: sid, idx },
                             tokens: bt,
@@ -808,6 +900,7 @@ impl KvStore {
                 }
             }
         }
+        self.stats.spill_cooldown_skips += cooled;
         if cands.is_empty() {
             return None;
         }
@@ -920,6 +1013,8 @@ mod tests {
             nvme_link: LinkConfig::unthrottled(),
             wire_elem_bytes: 4.0,
             promote_cooldown: 0, // most tests want no hysteresis
+            spill_cooldown: 0,
+            spill_floor: 0.0,
             spill_watermark: 0.0, // proactive spill off unless opted in
             spill_max_per_step: 2,
         };
@@ -1247,5 +1342,102 @@ mod tests {
         // admission still reclaims by dropping KV, exactly like PR 3
         s.admit(2, BB, 1).unwrap();
         assert!(s.stats().kv_drops >= 1);
+    }
+
+    // -- spill-side hysteresis ----------------------------------------------
+
+    #[test]
+    fn spill_cooldown_bounds_ping_pong_under_alternating_reuse() {
+        // Adversarial alternating reuse over a one-block dram tier: each
+        // sequence's promotion can only make room by spilling the other's
+        // just-promoted block.  Without the spill-side cool-down the pair
+        // swaps through the disk tier forever (one spill + one hop per
+        // alternation); with it, the walk finds no spillable block while
+        // the fresh promotee cools and issues nothing.
+        let mut s = store_cfg(0, 0, 1, |c| {
+            c.disk_bytes = 8 * BB;
+            c.spill_cooldown = 8;
+        });
+        s.admit(1, BB, 1).unwrap();
+        s.touch(1, 16, 0);
+        // seq 2's admission spills seq 1's block to make room
+        s.admit(2, BB, 1).unwrap();
+        s.touch(2, 16, 0);
+        assert_eq!(s.stats().spills, 1);
+        pump_and_land(&mut s, 1); // the spill writeback lands: seq 1 is disk-side
+        // seq 1 hops back up; the hop's room is made by spilling seq 2
+        assert_eq!(s.begin_promotions(1, 1, MigrationClass::Promote), 1);
+        assert_eq!(s.stats().spills, 2);
+        assert_eq!(s.stats().hops, 1);
+        pump_and_land(&mut s, 2); // spill writeback + hop land; seq 1 starts cooling
+        // the adversarial alternation: each side immediately wants back in
+        for _ in 0..6 {
+            s.touch(2, 16, 0);
+            assert_eq!(
+                s.begin_promotions(2, 1, MigrationClass::Promote),
+                0,
+                "hopping seq 2 up would spill the just-promoted block"
+            );
+            s.touch(1, 16, 0);
+            assert_eq!(s.begin_promotions(1, 1, MigrationClass::Promote), 0, "already home");
+        }
+        assert_eq!(s.stats().spills, 2, "no ping-pong: the cool-down held the line");
+        assert_eq!(s.stats().hops, 1);
+        assert!(s.stats().spill_cooldown_skips >= 6);
+        // hysteresis bounds the thrash, it must not deadlock: once the
+        // cool-down ages out (serving steps, not touches), seq 2 proceeds
+        for _ in 0..8 {
+            s.pump_migrations(0);
+        }
+        s.touch(2, 16, 0);
+        assert_eq!(s.begin_promotions(2, 1, MigrationClass::Promote), 1, "cool-down expired");
+        assert_eq!(s.stats().spills, 3);
+    }
+
+    #[test]
+    fn spill_floor_holds_dram_occupancy_under_the_watermark() {
+        // dram of 4 blocks with a 50 % floor: spill works down to the
+        // floor and then declines, even under admission pressure
+        let mut s = store_cfg(0, 0, 4, |c| {
+            c.disk_bytes = 8 * BB;
+            c.spill_floor = 0.5;
+        });
+        s.admit(1, 3 * BB, 3).unwrap();
+        s.touch(1, 48, 0); // all three blocks fully valid → spillable
+        assert_eq!(s.tier_used(Tier::CpuDram), 3 * BB);
+        assert!(s.spill_one().is_some(), "above the floor: spill proceeds");
+        assert_eq!(s.tier_used(Tier::CpuDram), 2 * BB);
+        assert!(
+            s.spill_one().is_none(),
+            "at the floor (2/4 blocks): spill must decline, not drain the tier"
+        );
+        assert_eq!(s.stats().spills, 1);
+    }
+
+    #[test]
+    fn config_from_topology_maps_named_rungs() {
+        use crate::scheduler::TierTopology;
+        let topo = TierTopology::standard(7 * BB, 2 * BB, 4 * BB)
+            .with_disk(9 * BB, 0.5)
+            .calibrated_bps(100e6, 30e-6);
+        let cfg = KvStoreConfig::from_topology(&topo, 64 << 10);
+        assert_eq!(cfg.gpu_bytes, 7 * BB);
+        assert_eq!(cfg.pinned_bytes, 2 * BB);
+        assert_eq!(cfg.dram_bytes, 4 * BB);
+        assert_eq!(cfg.disk_bytes, 9 * BB);
+        assert_eq!(cfg.link.bytes_per_sec, 100e6);
+        assert!((cfg.nvme_link.bytes_per_sec - 25e6).abs() < 1.0);
+        assert!(cfg.nvme_link.latency_s > cfg.link.latency_s);
+        assert_eq!(cfg.spill_watermark, 0.5);
+        assert_eq!(cfg.wire_elem_bytes, 4.0);
+        // the store built from it has the declared tier capacities
+        let s = KvStore::new(cfg, Box::new(Lru));
+        assert_eq!(s.mig.tiers().pool(Tier::GpuHbm).capacity(), 7 * BB);
+        assert_eq!(s.mig.tiers().pool(Tier::DiskNvme).capacity(), 9 * BB);
+        // a three-tier chain disables the disk rung by capacity
+        let three = TierTopology::standard(BB, BB, BB).calibrated_bps(100e6, 30e-6);
+        let cfg = KvStoreConfig::from_topology(&three, 64 << 10);
+        assert_eq!(cfg.disk_bytes, 0);
+        assert!(cfg.spill_watermark >= 1.0, "no disk rung: the watermark never binds");
     }
 }

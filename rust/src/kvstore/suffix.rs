@@ -65,6 +65,13 @@ pub struct BlockState {
     /// `pump_migrations` call, not per touch, so the hysteresis does not
     /// shrink as concurrency grows).
     pub demoted_at: Option<u64>,
+    /// Serving step at which this block last moved *up* a rung (its
+    /// disk→dram hop landed) — the spill-side cool-down input, mirroring
+    /// `demoted_at`: a just-promoted block is not re-spillable for
+    /// `spill_cooldown` steps, so promotion/spill ping-pong under
+    /// adversarial alternating reuse is bounded the same way
+    /// promotion/demotion ping-pong already is.
+    pub promoted_at: Option<u64>,
 }
 
 /// What a suffix walker sees when it looks at one block.
@@ -221,7 +228,7 @@ mod tests {
             BlockClass::Disk => (Tier::DiskNvme, false, None),
             BlockClass::Dropped => (Tier::Pinned, true, None),
         };
-        BlockState { tier, guard: None, kv_dropped, pending, demoted_at: None }
+        BlockState { tier, guard: None, kv_dropped, pending, demoted_at: None, promoted_at: None }
     }
 
     fn random_layout(rng: &mut Prng) -> (Vec<BlockState>, usize) {
@@ -485,6 +492,7 @@ mod tests {
             kv_dropped: false,
             pending: Some(PendingRef { id: MigrationId::test_id(9), to: Tier::DiskNvme }),
             demoted_at: None,
+            promoted_at: None,
         };
         assert_eq!(b.class(), BlockClass::DemotionInFlight);
         // neither disk-side class is ever resident

@@ -10,9 +10,11 @@
 //!   (paper §3.1, "profiler module").
 //! * [`scheduler`] — solves the integer linear program of Eq. (11) for the
 //!   optimal KV-cache split point `l`, and builds row-by-row /
-//!   column-by-column execution plans (paper §3.2).  Includes per-batch
-//!   aggregate planning ([`scheduler::Planner::plan_batch`]) for the
-//!   continuous serving loop.
+//!   column-by-column execution plans (paper §3.2).  Planning is
+//!   topology-driven: one per-batch entry point
+//!   ([`scheduler::Planner::plan_batch`]) folds the transfer term over a
+//!   declarative [`scheduler::TierTopology`] chain and predicts the
+//!   idle-link slack the serving loop grants to tier migrations.
 //! * [`engine`] — the runtime module (paper §3.3): overlapped execution of
 //!   transfer and recomputation with double buffering, pinned-memory pools
 //!   and the fine-grained W_K/W_V-first MHA pipeline.  Exposes both

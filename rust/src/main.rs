@@ -207,6 +207,9 @@ fn run() -> Result<()> {
             let cm = p.cost_model(&runtime.manifest().model);
             println!("cost model: {cm:#?}");
             println!("A/C ratio: {:.3}", cm.recompute_to_transfer_ratio());
+            // the measured root of the declarative tier chain the serving
+            // loop stacks its configured capacities below
+            println!("topology root: {:#?}", p.topology(0));
         }
         "help" | "--help" | "-h" => print_help(),
         other => bail!("unknown command '{other}' (try `kvpr help`)"),

@@ -12,6 +12,11 @@
 //!   LP's per-token recompute cost A, *measured*, not assumed.
 //! * [`SystemProfile::measure`] — runs both and packages a [`CostModel`]
 //!   for the scheduler.
+//! * [`SystemProfile::topology`] — packages the measured wire as the root
+//!   of a declarative [`TierTopology`]: the device⊃host chain the profiler
+//!   can see on its own, which configuration extends with storage rungs
+//!   and [`TierTopology::calibrated`] resolves — the **profiler →
+//!   topology → plan → runtime** pipeline's first stage.
 //!
 //! Profiling runs once at engine startup (paper §7 notes the same static
 //! assumption), off the request path.
@@ -23,7 +28,7 @@ use anyhow::Result;
 
 use crate::config::ModelConfig;
 use crate::runtime::{ArgValue, Runtime};
-use crate::scheduler::CostModel;
+use crate::scheduler::{CostModel, LinkSpec, TierTopology};
 use crate::transfer::{Link, Priority};
 use crate::util::stats::linear_fit;
 
@@ -54,6 +59,22 @@ impl SystemProfile {
             gpu_overhead_s: intercept,
             batch,
         })
+    }
+
+    /// The measured primary wire as a topology [`LinkSpec`].
+    pub fn link_spec(&self) -> LinkSpec {
+        LinkSpec { bytes_per_sec: self.link_bytes_per_sec, latency_s: self.link_latency_s }
+    }
+
+    /// The measured chain this profile can vouch for: a device tier over
+    /// one host tier joined by the probed wire.  `gpu_capacity_bytes` is
+    /// configuration, not measurement, so the caller supplies it (0 for
+    /// "inherit").  Deeper chains are built by stacking storage rungs
+    /// below this root ([`TierTopology::with_disk`]) and calibrating the
+    /// new links against the same measured spec
+    /// ([`TierTopology::calibrated`]).
+    pub fn topology(&self, gpu_capacity_bytes: u64) -> TierTopology {
+        TierTopology::device_host(gpu_capacity_bytes, self.link_spec())
     }
 
     /// Cost model for the scheduler at this profile's batch bucket.
@@ -170,5 +191,29 @@ mod tests {
             crate::scheduler::SplitSolver::new(cm, crate::scheduler::SchedulePolicy::RowByRow);
         let sol = solver.solve(100, 100);
         assert!(sol.l <= 100);
+    }
+
+    #[test]
+    fn profile_roots_the_topology() {
+        // the measured wire becomes the primary link of the declarative
+        // chain; stacking a disk rung and calibrating derives its NVMe
+        // shape from the same measurement — nothing drifts
+        let p = SystemProfile {
+            link_bytes_per_sec: 100e6,
+            link_latency_s: 1e-4,
+            recompute_per_token_s: 5e-5,
+            gpu_overhead_s: 1e-3,
+            batch: 4,
+        };
+        let topo = p.topology(1 << 20);
+        assert_eq!(topo.len(), 2);
+        assert_eq!(topo.primary_bytes_per_sec(), 100e6);
+        assert_eq!(topo.tier(0).capacity_bytes, 1 << 20);
+        let four = p
+            .topology(0)
+            .with_disk(1 << 30, 0.9)
+            .calibrated(&p.link_spec());
+        let disk = four.tier_named("disk-nvme").unwrap();
+        assert!((four.hop_factor(disk) - 4.0).abs() < 1e-9);
     }
 }

@@ -5,14 +5,35 @@
 //! *recomputes* from activations while the link transfers the remainder —
 //! and turns the solution into per-step execution plans for the row-by-row
 //! and column-by-column schedules.
+//!
+//! Planning is one stage of the automated pipeline **profiler → topology →
+//! plan → runtime**:
+//!
+//! 1. the [`profiler`](crate::profiler) measures the wires and packages
+//!    them as the root of a declarative [`TierTopology`]
+//!    ([`SystemProfile::topology`](crate::profiler::SystemProfile::topology));
+//! 2. configuration stacks capacities below the measured boundary and
+//!    [`TierTopology::calibrated`] resolves the remaining links;
+//! 3. the [`Planner`] — handed that chain via [`Planner::with_topology`] —
+//!    answers every step with one entry point, [`Planner::plan_batch`],
+//!    folding the transfer term over however many hops the chain declares
+//!    (a [`PlanInput`] names the per-tier prefix spans; there is no
+//!    per-hardware-shape planner fork);
+//! 4. the runtime (the continuous serving loop) consumes the resulting
+//!    [`StepPlan`] — the split `l` drives the decode step, and
+//!    [`StepPlan::link_slack_bytes`] becomes the migration engine's
+//!    per-step link-byte grant, so tier traffic soaks up exactly the idle
+//!    wire time the plan predicts.
 
 mod cost;
 mod plan;
 mod split;
+mod topology;
 
 pub use cost::CostModel;
-pub use plan::{PathKind, Planner, StepPlan};
+pub use plan::{PathKind, PlanInput, Planner, StepPlan, TierPrefix};
 pub use split::{Split, SplitSolver};
+pub use topology::{LinkSpec, TierSpec, TierTopology};
 
 /// Which schedule the engine runs (paper §3, "LLM inference scheduling").
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

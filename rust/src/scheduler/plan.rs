@@ -2,7 +2,19 @@
 //! grows (paper §3.2 "the optimal split point depends on the current
 //! sequence length s', which increases during generation and must therefore
 //! be determined adaptively"), quantised onto the static artifact buckets.
+//!
+//! Planning is **topology-driven**: one entry point,
+//! [`Planner::plan_batch`], takes a [`PlanInput`] describing the step —
+//! per-lane cached lengths, the device-resident suffix, the dropped-prefix
+//! floor, and the per-tier resident prefix spans — and folds the transfer
+//! term over however many hops the planner's [`TierTopology`] declares.
+//! The 3-tier and 4-tier closed forms the scheduler used to expose as
+//! separate entry points are now just 0- and 1-span instances of the same
+//! fold (thin `#[deprecated]` shims remain for one PR); a deeper chain — a
+//! second storage rung, a sharded worker's remote hop — is a data change,
+//! not a planner fork.
 
+use super::topology::TierTopology;
 use super::{CostModel, SchedulePolicy, Split, SplitSolver};
 
 /// Which artifact path a decode step takes.
@@ -25,6 +37,14 @@ pub struct StepPlan {
     pub predicted_s: f64,
     /// Predicted step time at l = 0.
     pub baseline_s: f64,
+    /// Predicted idle-link budget of this step, in bytes on the primary
+    /// interconnect: the `baseline_s − predicted_s` seconds the split
+    /// freed, converted at the topology's primary-wire bandwidth.  The
+    /// serving loop grants exactly this much to the migration engine each
+    /// step, so tier traffic soaks up the idle link time the plan predicts
+    /// and nothing more.  0 when the plan saved nothing (full transfer
+    /// keeps the wire busy end to end) or the planner has no topology.
+    pub link_slack_bytes: u64,
 }
 
 impl StepPlan {
@@ -36,7 +56,69 @@ impl StepPlan {
     }
 }
 
-/// Adaptive planner: owns the solver + the available L buckets.
+/// A contiguous run of tokens resident on one topology tier, stacked
+/// directly above the dropped-prefix floor (see [`PlanInput`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TierPrefix {
+    /// Index into the planner's [`TierTopology`] chain.
+    pub tier: usize,
+    /// Tokens of the span.
+    pub tokens: usize,
+}
+
+/// Everything [`Planner::plan_batch`] needs to know about one step of one
+/// decode group — the planner-facing summary of the tiered store's state.
+///
+/// Token layout, oldest first: `[0, l_floor)` dropped KV (recompute must
+/// cover it), then each [`TierPrefix`] span in order (tokens settled on
+/// deeper topology tiers, paying [`TierTopology::hop_factor`] extra wire
+/// per token fetched), then host-tier tokens (the base transfer term), and
+/// finally `resident` tokens already on the device (they leave the
+/// transfer term entirely).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanInput {
+    /// Cached-token count s'ᵢ of every lane in the decode bucket.
+    pub lane_s_primes: Vec<usize>,
+    /// Tokens of the group's settled device-resident KV *suffix*.
+    pub resident: usize,
+    /// Tokens of the group's dropped-KV *prefix* (the recompute floor).
+    pub l_floor: usize,
+    /// Per-tier resident prefix spans stacked directly above the floor.
+    pub tier_prefixes: Vec<TierPrefix>,
+}
+
+impl PlanInput {
+    pub fn new(lane_s_primes: Vec<usize>) -> Self {
+        PlanInput { lane_s_primes, resident: 0, l_floor: 0, tier_prefixes: Vec::new() }
+    }
+
+    /// Tokens of the settled device-resident suffix.  This must be the
+    /// **settled** suffix only: a block whose asynchronous demotion is in
+    /// flight released its gpu bytes at issuance, so the store reports it
+    /// non-resident from that instant and the plan re-pays its transfer
+    /// immediately — never trust a window the writeback is still vacating.
+    pub fn resident(mut self, tokens: usize) -> Self {
+        self.resident = tokens;
+        self
+    }
+
+    /// Tokens of the dropped-KV prefix: the recompute path must cover
+    /// them, so `l = 0` and any bucket below the floor are infeasible.
+    pub fn dropped_floor(mut self, tokens: usize) -> Self {
+        self.l_floor = tokens;
+        self
+    }
+
+    /// Append a span of `tokens` resident on topology tier `tier`,
+    /// directly above the previous span (or the floor).
+    pub fn prefix(mut self, tier: usize, tokens: usize) -> Self {
+        self.tier_prefixes.push(TierPrefix { tier, tokens });
+        self
+    }
+}
+
+/// Adaptive planner: owns the solver, the available L buckets, and the
+/// [`TierTopology`] its transfer fold runs over.
 #[derive(Debug, Clone)]
 pub struct Planner {
     solver: SplitSolver,
@@ -46,13 +128,26 @@ pub struct Planner {
     /// when only prompt activations are retained; `usize::MAX` when the
     /// engine stores activations for generated tokens too).
     l_cap: usize,
+    /// The declared tier chain: resolves [`TierPrefix`] spans to per-token
+    /// hop surcharges and converts plan slack into link bytes.  `None`
+    /// plans simple device-host chains (no spans, no slack prediction).
+    topology: Option<TierTopology>,
 }
 
 impl Planner {
     pub fn new(cost: CostModel, policy: SchedulePolicy, buckets: Vec<usize>, l_cap: usize) -> Self {
         let mut buckets = buckets;
         buckets.sort_unstable();
-        Planner { solver: SplitSolver::new(cost, policy), buckets, l_cap }
+        Planner { solver: SplitSolver::new(cost, policy), buckets, l_cap, topology: None }
+    }
+
+    /// Attach the declarative tier chain the transfer fold runs over
+    /// (typically [`SystemProfile::topology`](crate::profiler::SystemProfile::topology)
+    /// extended with the configured capacities and calibrated against the
+    /// measured primary wire).
+    pub fn with_topology(mut self, topology: TierTopology) -> Self {
+        self.topology = Some(topology);
+        self
     }
 
     pub fn solver(&self) -> &SplitSolver {
@@ -61,6 +156,17 @@ impl Planner {
 
     pub fn buckets(&self) -> &[usize] {
         &self.buckets
+    }
+
+    pub fn topology(&self) -> Option<&TierTopology> {
+        self.topology.as_ref()
+    }
+
+    /// Predicted idle-link bytes for a (predicted, baseline) pair.
+    fn slack_bytes(&self, predicted_s: f64, baseline_s: f64) -> u64 {
+        self.topology
+            .as_ref()
+            .map_or(0, |t| t.slack_bytes(baseline_s - predicted_s))
     }
 
     /// Continuous-grid solve (simulator; no bucket constraint).
@@ -80,27 +186,39 @@ impl Planner {
         } else {
             PathKind::PartialRecompute { l }
         };
+        let predicted_s = self.solver.objective(l, s_prime);
+        let baseline_s = self.solver.objective(0, s_prime);
         StepPlan {
             path,
             ideal_l: ideal.l,
-            predicted_s: self.solver.objective(l, s_prime),
-            baseline_s: self.solver.objective(0, s_prime),
+            predicted_s,
+            baseline_s,
+            link_slack_bytes: self.slack_bytes(predicted_s, baseline_s),
         }
     }
 
-    /// Plan one decode step for a **formed batch**: aggregate each member's
-    /// cached-token count s'ᵢ into the Eq. (10)/(11) cost model and solve
-    /// once for the whole batch (the continuous-batching coordinator calls
-    /// this per batch per step).
+    /// Plan one decode step for a **formed batch** over the declared tier
+    /// chain: aggregate each member's cached-token count s'ᵢ into the
+    /// Eq. (10)/(11) cost model, fold the transfer term over the
+    /// [`PlanInput`]'s per-tier prefix spans, and solve once for the whole
+    /// batch (the continuous-batching coordinator calls this per group per
+    /// step).
     ///
     /// The aggregation is the paper's batch-scaling: marginal per-token
-    /// costs grow linearly with the number of lanes, the shared split point
-    /// is bounded by the *shortest* member (a prefix can only be recomputed
-    /// where every lane has one), and the objective is evaluated at the
-    /// longest member's s' (lanes are padded to a common length).
+    /// costs grow linearly with the number of lanes, the shared split
+    /// point is bounded by the *shortest* member (a prefix can only be
+    /// recomputed where every lane has one), and the objective is
+    /// evaluated at the longest member's s' (lanes are padded to a common
+    /// length).  The `resident` suffix leaves the transfer term, the
+    /// `l_floor` dropped prefix floors the split, and every
+    /// [`TierPrefix`] span charges its tokens the topology's extra-hop
+    /// wire whenever the chosen split does not cover them — the fold also
+    /// tries raising the floor to each span boundary, so a prefix too cold
+    /// for the host tiers becomes recompute work before it becomes a deep
+    /// read.
     ///
     /// ```
-    /// use kvpr::scheduler::{CostModel, Planner, SchedulePolicy};
+    /// use kvpr::scheduler::{CostModel, PlanInput, Planner, SchedulePolicy};
     /// let cost = CostModel {
     ///     recompute_per_token_s: 1e-6,
     ///     transfer_kv_per_token_s: 1e-6,
@@ -110,37 +228,43 @@ impl Planner {
     /// };
     /// // per-lane cost model; the batch aggregation happens in plan_batch
     /// let planner = Planner::new(cost, SchedulePolicy::RowByRow, vec![32, 64, 96], usize::MAX);
-    /// let plan = planner.plan_batch(&[120, 120, 120, 120]);
+    /// let plan = planner.plan_batch(&PlanInput::new(vec![120, 120, 120, 120]));
     /// assert!(plan.l() > 0, "transfer-bound batch must recompute a prefix");
     /// assert!(plan.predicted_s <= plan.baseline_s);
     /// ```
-    pub fn plan_batch(&self, lane_s_primes: &[usize]) -> StepPlan {
-        self.plan_batch_tiered(lane_s_primes, 0, 0)
+    ///
+    /// # Panics
+    ///
+    /// Panics when `input.tier_prefixes` is non-empty but no
+    /// [`TierTopology`] was attached via [`Planner::with_topology`] — a
+    /// prefix span names a tier of the chain, so there is no meaningful
+    /// way to price it without one.  (Also panics on an empty
+    /// `lane_s_primes`, like every batch entry point before it.)
+    pub fn plan_batch(&self, input: &PlanInput) -> StepPlan {
+        let spans: Vec<(f64, usize)> = input
+            .tier_prefixes
+            .iter()
+            .map(|p| {
+                let topo = self
+                    .topology
+                    .as_ref()
+                    .expect("PlanInput has tier prefixes but the Planner has no TierTopology");
+                (topo.hop_factor(p.tier), p.tokens)
+            })
+            .collect();
+        self.plan_spans(&input.lane_s_primes, input.resident, input.l_floor, &spans)
     }
 
-    /// [`Planner::plan_batch`] for a group running over the tiered kvstore:
-    ///
-    /// * `resident` — tokens of the group's KV *suffix* already resident in
-    ///   gpu-hbm.  They leave both the transfer and recompute terms, so the
-    ///   plan is solved on the effective cached length `s' − resident`
-    ///   (already-on-GPU blocks shrink the transfer term).  This must be
-    ///   the **settled** suffix only: a block whose asynchronous demotion
-    ///   is in flight released its gpu bytes at issuance, so the store
-    ///   reports it non-resident from that instant
-    ///   ([`KvStore::gpu_resident_tokens`](crate::kvstore::KvStore::gpu_resident_tokens))
-    ///   and the plan re-pays its transfer immediately — never trust a
-    ///   window the writeback is still vacating.
-    /// * `l_floor` — tokens of the group's KV *prefix* whose stored KV the
-    ///   store dropped (keeping X): the recompute path must cover them, so
-    ///   `l = 0` and any bucket below the floor are infeasible.  When no
-    ///   bucket at or above the floor fits, the plan degrades to full
-    ///   transfer (the emulated store's drop is advisory accounting; the
-    ///   host rows still exist).
-    pub fn plan_batch_tiered(
+    /// The transfer fold behind [`Planner::plan_batch`], over spans whose
+    /// hop factors are already resolved (extra interconnect-equivalents
+    /// per token; the deprecated shims feed explicit factors through
+    /// here).
+    fn plan_spans(
         &self,
         lane_s_primes: &[usize],
         resident: usize,
         l_floor: usize,
+        spans: &[(f64, usize)],
     ) -> StepPlan {
         assert!(!lane_s_primes.is_empty(), "plan_batch over an empty batch");
         let n = lane_s_primes.len() as f64;
@@ -155,7 +279,62 @@ impl Planner {
 
         let l_max = self.l_cap.min(feasible);
         let ideal = solver.solve(s_prime, l_max);
-        let l = solver.quantize_to_buckets_floor(s_prime, &self.buckets, l_max, l_floor);
+
+        // a span's tokens beyond the chosen split cross every extra wire
+        // between their tier and the base rung this step; tokens the split
+        // covers are rebuilt by recompute and never touch a deep wire.
+        // (the floor region below l_floor holds no stored KV at all, so it
+        // can never owe a surcharge — relevant when an infeasible floor
+        // degrades the plan to l = 0)
+        let surcharge = |l: usize| {
+            let mut start = l_floor;
+            let mut total = 0.0;
+            for &(factor, tokens) in spans {
+                let end = start + tokens;
+                let extra = self.solver.cost.transfer_kv_per_token_s * factor.max(0.0) * n;
+                total += end.saturating_sub(l.max(start)) as f64 * extra;
+                start = end;
+            }
+            total
+        };
+
+        let quantize =
+            |floor: usize| solver.quantize_to_buckets_floor(s_prime, &self.buckets, l_max, floor);
+
+        // candidate floors: the declared floor, plus — for every span — a
+        // floor raised to the span's end, so the whole region below it is
+        // covered by recompute and no deep byte crosses any wire.  The
+        // cheapest candidate (objective + surcharge) wins; ties keep the
+        // lower floor.
+        let (l, predicted_s) = if spans.iter().all(|&(_, tokens)| tokens == 0) {
+            let l = quantize(l_floor);
+            (l, solver.objective(l, s_prime))
+        } else {
+            let mut floors = vec![l_floor];
+            let mut end = l_floor;
+            for &(_, tokens) in spans {
+                end += tokens;
+                if tokens > 0 {
+                    floors.push(end);
+                }
+            }
+            let mut best: Option<(usize, f64)> = None;
+            for &floor in &floors {
+                let l = quantize(floor);
+                let cost = solver.objective(l, s_prime) + surcharge(l);
+                match best {
+                    Some((_, c)) if cost >= c => {}
+                    _ => best = Some((l, cost)),
+                }
+            }
+            best.expect("at least the declared floor is a candidate")
+        };
+        let baseline_s = if spans.iter().all(|&(_, tokens)| tokens == 0) {
+            solver.objective(0, s_prime)
+        } else {
+            solver.objective(0, s_prime) + surcharge(0)
+        };
+
         let path = if l == 0 {
             PathKind::FullTransfer
         } else {
@@ -164,28 +343,37 @@ impl Planner {
         StepPlan {
             path,
             ideal_l: ideal.l,
-            predicted_s: solver.objective(l, s_prime),
-            baseline_s: solver.objective(0, s_prime),
+            predicted_s,
+            baseline_s,
+            link_slack_bytes: self.slack_bytes(predicted_s, baseline_s),
         }
     }
 
-    /// [`Planner::plan_batch_tiered`] for a group over the **four-tier**
-    /// store: `disk_prefix` tokens of the group's KV live on the disk tier
-    /// in the contiguous region *directly above* the dropped-KV floor —
-    /// token positions `[l_floor, l_floor + disk_prefix)` — so fetching
-    /// them this step is a *two-hop* transfer: an NVMe hop on top of the
-    /// interconnect, costing `nvme_factor` extra interconnect-equivalents
-    /// per token.  Two candidate splits are compared:
-    ///
-    /// * the three-tier optimum, paying the two-hop surcharge for every
-    ///   disk token beyond its split, and
-    /// * a split whose floor is raised to cover the whole disk region by
-    ///   recompute (no disk byte crosses either wire),
-    ///
-    /// and the cheaper plan wins — the disk tier thus *pushes the split
-    /// up*: prefixes too cold for dram become recompute work before they
-    /// become NVMe reads.  `predicted_s`/`baseline_s` include the
-    /// surcharge, so the serving metrics stay honest.
+    /// [`Planner::plan_batch`] for a group over the three-tier store:
+    /// `resident` device-suffix tokens leave the transfer term and
+    /// `l_floor` dropped-prefix tokens floor the split.
+    #[deprecated(
+        since = "0.1.0",
+        note = "describe the step to `Planner::plan_batch` via `PlanInput` instead"
+    )]
+    pub fn plan_batch_tiered(
+        &self,
+        lane_s_primes: &[usize],
+        resident: usize,
+        l_floor: usize,
+    ) -> StepPlan {
+        self.plan_spans(lane_s_primes, resident, l_floor, &[])
+    }
+
+    /// [`Planner::plan_batch`] for a group over the four-tier store:
+    /// `disk_prefix` tokens directly above the floor cost `nvme_factor`
+    /// extra interconnect-equivalents per token to fetch this step.
+    #[deprecated(
+        since = "0.1.0",
+        note = "attach a `TierTopology` via `Planner::with_topology` and pass a \
+                `PlanInput` prefix span to `Planner::plan_batch` instead (a span \
+                without a topology panics: the span names a rung of the chain)"
+    )]
     pub fn plan_batch_four_tier(
         &self,
         lane_s_primes: &[usize],
@@ -194,32 +382,7 @@ impl Planner {
         disk_prefix: usize,
         nvme_factor: f64,
     ) -> StepPlan {
-        let a = self.plan_batch_tiered(lane_s_primes, resident, l_floor);
-        if disk_prefix == 0 {
-            return a;
-        }
-        let n = lane_s_primes.len() as f64;
-        let extra = self.solver.cost.transfer_kv_per_token_s * nvme_factor.max(0.0) * n;
-        // the disk region ends at l_floor + disk_prefix; a split of l
-        // covers its tokens below l (and the floor region below l_floor
-        // holds no stored KV at all, so it can never owe the surcharge —
-        // relevant when an infeasible floor degrades the plan to l = 0)
-        let disk_end = l_floor + disk_prefix;
-        let surcharge = |l: usize| disk_end.saturating_sub(l.max(l_floor)) as f64 * extra;
-        let b = self.plan_batch_tiered(lane_s_primes, resident, disk_end);
-        let (plan, cost) = {
-            let ca = a.predicted_s + surcharge(a.l());
-            let cb = b.predicted_s + surcharge(b.l());
-            if cb < ca {
-                (b, cb)
-            } else {
-                (a, ca)
-            }
-        };
-        let mut plan = plan;
-        plan.baseline_s += surcharge(0);
-        plan.predicted_s = cost;
-        plan
+        self.plan_spans(lane_s_primes, resident, l_floor, &[(nvme_factor, disk_prefix)])
     }
 
     /// The split-point trajectory over a whole generation (Fig 12): one
@@ -235,6 +398,8 @@ impl Planner {
 mod tests {
     use super::*;
     use crate::config::{HardwareConfig, ModelConfig};
+    use crate::scheduler::topology::{LinkSpec, TierSpec};
+    use crate::util::prng::{check_property, prop_cases, Prng};
 
     fn planner(policy: SchedulePolicy) -> Planner {
         let cost = CostModel::from_hardware(
@@ -243,6 +408,30 @@ mod tests {
             32,
         );
         Planner::new(cost, policy, vec![32, 64, 96], usize::MAX)
+    }
+
+    /// A four-tier chain whose disk rung costs exactly `nvme_factor` extra
+    /// interconnect-equivalents per token: the primary wire moves
+    /// `nvme_factor` bytes/s and the disk wire 1 byte/s, so the
+    /// `hop_factor` ratio is the factor itself, bit-for-bit.
+    fn four_tier_topology(nvme_factor: f64) -> TierTopology {
+        let primary = LinkSpec { bytes_per_sec: nvme_factor, latency_s: 0.0 };
+        let mut pinned = TierSpec::new("pinned", 1 << 20);
+        pinned.up = primary;
+        let mut dram = TierSpec::new("cpu-dram", 1 << 20);
+        dram.up = primary;
+        let mut disk = TierSpec::new("disk-nvme", 1 << 30);
+        disk.up = LinkSpec { bytes_per_sec: 1.0, latency_s: 0.0 };
+        TierTopology::new(
+            vec![TierSpec::new("gpu-hbm", 1 << 20), pinned, dram, disk],
+            2,
+        )
+    }
+
+    fn four_tier_planner(policy: SchedulePolicy, nvme_factor: f64) -> (Planner, usize) {
+        let topo = four_tier_topology(nvme_factor);
+        let disk = topo.tier_named("disk-nvme").unwrap();
+        (planner(policy).with_topology(topo), disk)
     }
 
     #[test]
@@ -311,7 +500,7 @@ mod tests {
             32,
         );
         let pre_scaled = Planner::new(scaled, SchedulePolicy::RowByRow, vec![32, 64, 96], usize::MAX);
-        let batch_plan = per_lane.plan_batch(&[128; 32]);
+        let batch_plan = per_lane.plan_batch(&PlanInput::new(vec![128; 32]));
         let single_plan = pre_scaled.plan_step(128);
         assert_eq!(batch_plan.l(), single_plan.l());
         assert!((batch_plan.predicted_s - single_plan.predicted_s).abs() < 1e-12);
@@ -328,7 +517,7 @@ mod tests {
             link_latency_s: 0.0,
         };
         let p = Planner::new(cost, SchedulePolicy::RowByRow, vec![32, 64, 96], usize::MAX);
-        let plan = p.plan_batch(&[128, 128, 40, 128]);
+        let plan = p.plan_batch(&PlanInput::new(vec![128, 128, 40, 128]));
         assert!(plan.l() <= 40, "split {} exceeds shortest member", plan.l());
         assert_eq!(plan.l(), 32);
     }
@@ -336,12 +525,12 @@ mod tests {
     #[test]
     fn resident_suffix_shrinks_the_plan() {
         let p = planner(SchedulePolicy::RowByRow);
-        let full = p.plan_batch(&[128; 4]);
-        let tiered = p.plan_batch_tiered(&[128; 4], 64, 0);
+        let full = p.plan_batch(&PlanInput::new(vec![128; 4]));
+        let tiered = p.plan_batch(&PlanInput::new(vec![128; 4]).resident(64));
         // 64 resident tokens leave the transfer term: the step gets cheaper
         assert!(tiered.predicted_s < full.predicted_s);
         // and with (almost) everything resident there is nothing to split
-        let all = p.plan_batch_tiered(&[128; 4], 120, 0);
+        let all = p.plan_batch(&PlanInput::new(vec![128; 4]).resident(120));
         assert_eq!(all.path, PathKind::FullTransfer);
         assert!(all.predicted_s <= tiered.predicted_s);
     }
@@ -355,7 +544,7 @@ mod tests {
         let p = planner(SchedulePolicy::RowByRow);
         let mut prev = f64::INFINITY;
         for resident in [0usize, 32, 64, 96] {
-            let plan = p.plan_batch_tiered(&[128; 4], resident, 0);
+            let plan = p.plan_batch(&PlanInput::new(vec![128; 4]).resident(resident));
             assert!(
                 plan.predicted_s <= prev + 1e-15,
                 "resident {resident}: {} > {}",
@@ -370,8 +559,8 @@ mod tests {
     fn resident_matches_shorter_sequence_plan() {
         // planning with r resident tokens ≡ planning the s'−r suffix
         let p = planner(SchedulePolicy::RowByRow);
-        let a = p.plan_batch_tiered(&[128, 128], 32, 0);
-        let b = p.plan_batch(&[96, 96]);
+        let a = p.plan_batch(&PlanInput::new(vec![128, 128]).resident(32));
+        let b = p.plan_batch(&PlanInput::new(vec![96, 96]));
         assert_eq!(a.l(), b.l());
         assert!((a.predicted_s - b.predicted_s).abs() < 1e-12);
     }
@@ -387,9 +576,9 @@ mod tests {
             link_latency_s: 0.0,
         };
         let p = Planner::new(cost, SchedulePolicy::RowByRow, vec![32, 64, 96], usize::MAX);
-        assert_eq!(p.plan_batch(&[128; 2]).l(), 0);
+        assert_eq!(p.plan_batch(&PlanInput::new(vec![128; 2])).l(), 0);
         // ...but a 32-token dropped-KV prefix forces the recompute bucket
-        let floored = p.plan_batch_tiered(&[128; 2], 0, 32);
+        let floored = p.plan_batch(&PlanInput::new(vec![128; 2]).dropped_floor(32));
         assert_eq!(floored.l(), 32);
         assert!(floored.predicted_s >= floored.baseline_s);
     }
@@ -398,16 +587,16 @@ mod tests {
     fn infeasible_floor_degrades_to_full_transfer() {
         let p = planner(SchedulePolicy::RowByRow);
         // floor above every feasible bucket (s' − resident < smallest bucket)
-        let plan = p.plan_batch_tiered(&[40; 2], 20, 32);
+        let plan = p.plan_batch(&PlanInput::new(vec![40; 2]).resident(20).dropped_floor(32));
         assert_eq!(plan.path, PathKind::FullTransfer);
     }
 
     #[test]
-    fn plan_batch_is_the_untiered_special_case() {
+    fn plain_input_is_the_untiered_special_case() {
         let p = planner(SchedulePolicy::RowByRow);
         for lanes in [vec![128usize; 4], vec![120, 64, 96, 128]] {
-            let a = p.plan_batch(&lanes);
-            let b = p.plan_batch_tiered(&lanes, 0, 0);
+            let a = p.plan_batch(&PlanInput::new(lanes.clone()));
+            let b = p.plan_batch(&PlanInput::new(lanes).resident(0).dropped_floor(0));
             assert_eq!(a.l(), b.l());
             assert_eq!(a.ideal_l, b.ideal_l);
             assert!((a.predicted_s - b.predicted_s).abs() < 1e-15);
@@ -415,11 +604,11 @@ mod tests {
     }
 
     #[test]
-    fn four_tier_reduces_to_tiered_without_disk() {
-        let p = planner(SchedulePolicy::RowByRow);
+    fn empty_prefix_span_reduces_to_the_spanless_plan() {
+        let (p, disk) = four_tier_planner(SchedulePolicy::RowByRow, 4.0);
         for lanes in [vec![128usize; 4], vec![120, 64, 96, 128]] {
-            let a = p.plan_batch_tiered(&lanes, 32, 0);
-            let b = p.plan_batch_four_tier(&lanes, 32, 0, 0, 4.0);
+            let a = p.plan_batch(&PlanInput::new(lanes.clone()).resident(32));
+            let b = p.plan_batch(&PlanInput::new(lanes).resident(32).prefix(disk, 0));
             assert_eq!(a.l(), b.l());
             assert!((a.predicted_s - b.predicted_s).abs() < 1e-15);
             assert!((a.baseline_s - b.baseline_s).abs() < 1e-15);
@@ -438,10 +627,13 @@ mod tests {
             gpu_overhead_s: 0.0,
             link_latency_s: 0.0,
         };
-        let p = Planner::new(cost, SchedulePolicy::RowByRow, vec![32, 64, 96], usize::MAX);
-        let tiered = p.plan_batch_tiered(&[128; 2], 0, 0);
+        let topo = four_tier_topology(4.0);
+        let disk = topo.tier_named("disk-nvme").unwrap();
+        let p = Planner::new(cost, SchedulePolicy::RowByRow, vec![32, 64, 96], usize::MAX)
+            .with_topology(topo);
+        let tiered = p.plan_batch(&PlanInput::new(vec![128; 2]));
         assert_eq!(tiered.l(), 0);
-        let four = p.plan_batch_four_tier(&[128; 2], 0, 0, 32, 4.0);
+        let four = p.plan_batch(&PlanInput::new(vec![128; 2]).prefix(disk, 32));
         assert_eq!(four.l(), 0, "covering by recompute is hopeless here");
         let surcharge = 32.0 * 1e-9 * 4.0 * 2.0; // tokens × C × nvme × lanes
         assert!((four.predicted_s - (tiered.predicted_s + surcharge)).abs() < 1e-15);
@@ -452,8 +644,8 @@ mod tests {
     fn expensive_disk_prefix_pushes_the_split_up() {
         // commensurate costs: the three-tier plan picks bucket 32, but a
         // 64-token disk prefix makes the two-hop read of tokens [32, 64)
-        // dearer than recomputing the whole prefix — the four-tier plan
-        // raises the split to the covering bucket
+        // dearer than recomputing the whole prefix — the fold raises the
+        // split to the covering bucket
         let cost = CostModel {
             recompute_per_token_s: 2e-6,
             transfer_kv_per_token_s: 1e-6,
@@ -461,10 +653,13 @@ mod tests {
             gpu_overhead_s: 0.0,
             link_latency_s: 0.0,
         };
-        let p = Planner::new(cost, SchedulePolicy::RowByRow, vec![32, 64, 96], usize::MAX);
-        let tiered = p.plan_batch_tiered(&[128; 2], 0, 0);
+        let topo = four_tier_topology(4.0);
+        let disk = topo.tier_named("disk-nvme").unwrap();
+        let p = Planner::new(cost, SchedulePolicy::RowByRow, vec![32, 64, 96], usize::MAX)
+            .with_topology(topo);
+        let tiered = p.plan_batch(&PlanInput::new(vec![128; 2]));
         assert_eq!(tiered.l(), 32, "three-tier optimum is the low bucket");
-        let four = p.plan_batch_four_tier(&[128; 2], 0, 0, 64, 4.0);
+        let four = p.plan_batch(&PlanInput::new(vec![128; 2]).prefix(disk, 64));
         assert_eq!(four.l(), 64, "disk prefix must push the split to its covering bucket");
         // and it must genuinely beat paying the surcharge at l = 32
         let surcharge_at_32 = 32.0 * 1e-6 * 4.0 * 2.0;
@@ -484,15 +679,104 @@ mod tests {
             gpu_overhead_s: 0.0,
             link_latency_s: 0.0,
         };
-        let p = Planner::new(cost, SchedulePolicy::RowByRow, vec![32, 64, 96], usize::MAX);
-        let floored = p.plan_batch_tiered(&[128; 2], 0, 32);
+        let topo = four_tier_topology(4.0);
+        let disk = topo.tier_named("disk-nvme").unwrap();
+        let p = Planner::new(cost, SchedulePolicy::RowByRow, vec![32, 64, 96], usize::MAX)
+            .with_topology(topo);
+        let floored = p.plan_batch(&PlanInput::new(vec![128; 2]).dropped_floor(32));
         assert_eq!(floored.l(), 32);
-        let four = p.plan_batch_four_tier(&[128; 2], 0, 32, 32, 4.0);
+        let four =
+            p.plan_batch(&PlanInput::new(vec![128; 2]).dropped_floor(32).prefix(disk, 32));
         assert_eq!(
             four.l(),
             64,
             "the covering split must reach the disk region's end, not its length"
         );
+    }
+
+    #[test]
+    fn two_stacked_spans_fold_both_wires() {
+        // a five-tier-style input: a deep span (factor 8) under a shallow
+        // one (factor 4).  With recompute hopeless the plan stays full
+        // transfer and owes both spans their own wire surcharges.
+        let cost = CostModel {
+            recompute_per_token_s: 1e-3,
+            transfer_kv_per_token_s: 1e-9,
+            transfer_act_per_token_s: 5e-10,
+            gpu_overhead_s: 0.0,
+            link_latency_s: 0.0,
+        };
+        // primary 8 B/s over wires of 1 and 2 B/s: factors 8 and 4
+        let primary = LinkSpec { bytes_per_sec: 8.0, latency_s: 0.0 };
+        let mut dram = TierSpec::new("cpu-dram", 1 << 20);
+        dram.up = primary;
+        let mut disk = TierSpec::new("disk-nvme", 1 << 30);
+        disk.up = LinkSpec { bytes_per_sec: 2.0, latency_s: 0.0 };
+        let mut cold = TierSpec::new("cold-object", 1 << 30);
+        cold.up = LinkSpec { bytes_per_sec: 2.0, latency_s: 0.0 };
+        let topo = TierTopology::new(
+            vec![TierSpec::new("gpu-hbm", 1 << 20), dram, disk, cold],
+            1,
+        );
+        let disk_i = topo.tier_named("disk-nvme").unwrap();
+        let cold_i = topo.tier_named("cold-object").unwrap();
+        assert_eq!(topo.hop_factor(disk_i), 4.0);
+        assert_eq!(topo.hop_factor(cold_i), 8.0);
+        let p = Planner::new(cost, SchedulePolicy::RowByRow, vec![32, 64, 96], usize::MAX)
+            .with_topology(topo);
+        let plain = p.plan_batch(&PlanInput::new(vec![128; 2]));
+        let deep = p.plan_batch(
+            &PlanInput::new(vec![128; 2]).prefix(cold_i, 32).prefix(disk_i, 32),
+        );
+        assert_eq!(deep.l(), 0);
+        // 32 tokens × 8× + 32 tokens × 4× across 2 lanes at C = 1e-9
+        let surcharge = 32.0 * 1e-9 * 8.0 * 2.0 + 32.0 * 1e-9 * 4.0 * 2.0;
+        assert!((deep.predicted_s - (plain.predicted_s + surcharge)).abs() < 1e-15);
+        assert!((deep.baseline_s - (plain.baseline_s + surcharge)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn deprecated_shims_delegate_to_the_fold() {
+        #![allow(deprecated)]
+        let (p, disk) = four_tier_planner(SchedulePolicy::RowByRow, 4.0);
+        let lanes = vec![128usize; 2];
+        let a = p.plan_batch_tiered(&lanes, 16, 32);
+        let b = p.plan_batch(&PlanInput::new(lanes.clone()).resident(16).dropped_floor(32));
+        assert_eq!(a, b);
+        let a = p.plan_batch_four_tier(&lanes, 0, 32, 32, 4.0);
+        let b = p.plan_batch(
+            &PlanInput::new(lanes).dropped_floor(32).prefix(disk, 32),
+        );
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn slack_prediction_tracks_the_split_savings() {
+        // a topology-attached planner converts baseline − predicted into
+        // primary-wire bytes; without a topology the field stays 0
+        let bare = planner(SchedulePolicy::RowByRow);
+        assert_eq!(bare.plan_batch(&PlanInput::new(vec![128; 4])).link_slack_bytes, 0);
+        let topo = TierTopology::standard(0, 1 << 20, 4 << 20).calibrated_bps(100e6, 30e-6);
+        let p = planner(SchedulePolicy::RowByRow).with_topology(topo);
+        let plan = p.plan_batch(&PlanInput::new(vec![128; 4]));
+        assert!(plan.predicted_s < plan.baseline_s, "transfer-bound batch must split");
+        let want = ((plan.baseline_s - plan.predicted_s) * 100e6) as u64;
+        assert_eq!(plan.link_slack_bytes, want);
+        assert!(plan.link_slack_bytes > 0);
+        // a forced full-transfer plan saves nothing: zero slack
+        let cost = CostModel {
+            recompute_per_token_s: 1e-3,
+            transfer_kv_per_token_s: 1e-9,
+            transfer_act_per_token_s: 5e-10,
+            gpu_overhead_s: 0.0,
+            link_latency_s: 0.0,
+        };
+        let topo = TierTopology::standard(0, 1 << 20, 4 << 20).calibrated_bps(100e6, 30e-6);
+        let p = Planner::new(cost, SchedulePolicy::RowByRow, vec![32, 64, 96], usize::MAX)
+            .with_topology(topo);
+        let plan = p.plan_batch(&PlanInput::new(vec![128; 2]));
+        assert_eq!(plan.path, PathKind::FullTransfer);
+        assert_eq!(plan.link_slack_bytes, 0);
     }
 
     #[test]
@@ -510,5 +794,149 @@ mod tests {
         let plan = p.plan_step(128);
         assert!(plan.ideal_l > 0);
         assert!(plan.ideal_l <= 128);
+    }
+
+    // -- plan equivalence: the topology fold vs the legacy closed forms ----
+    //
+    // The three legacy entry points (`plan_batch` over bare lanes,
+    // `plan_batch_tiered`, `plan_batch_four_tier`) are preserved below as
+    // standalone oracle transcriptions of their pre-topology bodies.  The
+    // property pins the single topology-driven `plan_batch` to reproduce
+    // every one of them bit-for-bit when given the equivalent 2/3/4-tier
+    // topologies — the acceptance gate for deleting the closed forms.
+
+    fn oracle_tiered(
+        p: &Planner,
+        lanes: &[usize],
+        resident: usize,
+        l_floor: usize,
+    ) -> (usize, usize, f64, f64) {
+        let n = lanes.len() as f64;
+        let s_prime = lanes.iter().max().unwrap().saturating_sub(resident);
+        let feasible = lanes.iter().min().unwrap().saturating_sub(resident);
+        let mut cost = p.solver.cost.clone();
+        cost.recompute_per_token_s *= n;
+        cost.transfer_kv_per_token_s *= n;
+        cost.transfer_act_per_token_s *= n;
+        let solver = SplitSolver::new(cost, p.solver.policy);
+        let l_max = p.l_cap.min(feasible);
+        let ideal = solver.solve(s_prime, l_max);
+        let l = solver.quantize_to_buckets_floor(s_prime, &p.buckets, l_max, l_floor);
+        (
+            l,
+            ideal.l,
+            solver.objective(l, s_prime),
+            solver.objective(0, s_prime),
+        )
+    }
+
+    fn oracle_four_tier(
+        p: &Planner,
+        lanes: &[usize],
+        resident: usize,
+        l_floor: usize,
+        disk_prefix: usize,
+        nvme_factor: f64,
+    ) -> (usize, usize, f64, f64) {
+        let a = oracle_tiered(p, lanes, resident, l_floor);
+        if disk_prefix == 0 {
+            return a;
+        }
+        let n = lanes.len() as f64;
+        let extra = p.solver.cost.transfer_kv_per_token_s * nvme_factor.max(0.0) * n;
+        let disk_end = l_floor + disk_prefix;
+        let surcharge = |l: usize| disk_end.saturating_sub(l.max(l_floor)) as f64 * extra;
+        let b = oracle_tiered(p, lanes, resident, disk_end);
+        let ca = a.2 + surcharge(a.0);
+        let cb = b.2 + surcharge(b.0);
+        let (mut plan, cost) = if cb < ca { (b, cb) } else { (a, ca) };
+        plan.3 += surcharge(0);
+        plan.2 = cost;
+        plan
+    }
+
+    fn random_planner(rng: &mut Prng, nvme_factor: f64) -> Planner {
+        let a = 10f64.powf(rng.next_f64() * 6.0 - 9.0); // 1e-9 .. 1e-3
+        let c = 10f64.powf(rng.next_f64() * 6.0 - 9.0);
+        let cost = CostModel {
+            recompute_per_token_s: a,
+            transfer_kv_per_token_s: c,
+            transfer_act_per_token_s: c / 2.0,
+            gpu_overhead_s: rng.next_f64() * 1e-4,
+            link_latency_s: rng.next_f64() * 1e-4,
+        };
+        let policy = if rng.next_f64() < 0.5 {
+            SchedulePolicy::RowByRow
+        } else {
+            SchedulePolicy::ColumnByColumn
+        };
+        let mut buckets = Vec::new();
+        let step = 8 + rng.index(48);
+        for i in 1..=(1 + rng.index(5)) {
+            buckets.push(i * step);
+        }
+        let l_cap = if rng.next_f64() < 0.3 { 1 + rng.index(256) } else { usize::MAX };
+        Planner::new(cost, policy, buckets, l_cap)
+            .with_topology(four_tier_topology(nvme_factor))
+    }
+
+    #[test]
+    fn property_plan_batch_reproduces_all_three_legacy_entry_points() {
+        let cases = prop_cases(500);
+        check_property("topology plan == legacy closed forms", cases, |rng| {
+            let nvme_factor = 0.25 + rng.next_f64() * 8.0;
+            let p = random_planner(rng, nvme_factor);
+            let disk = p.topology().unwrap().tier_named("disk-nvme").unwrap();
+            let n_lanes = 1 + rng.index(6);
+            let lanes: Vec<usize> = (0..n_lanes).map(|_| 1 + rng.index(500)).collect();
+            let shortest = *lanes.iter().min().unwrap();
+            let resident = rng.index(shortest + 8);
+            let l_floor = rng.index(shortest.saturating_sub(resident) + 8);
+            let disk_prefix = rng.index(shortest.saturating_sub(resident + l_floor) + 8);
+
+            // 2-tier: bare lanes (the legacy slice-based plan_batch)
+            let got = p.plan_batch(&PlanInput::new(lanes.clone()));
+            let want = oracle_tiered(&p, &lanes, 0, 0);
+            if (got.l(), got.ideal_l) != (want.0, want.1)
+                || got.predicted_s != want.2
+                || got.baseline_s != want.3
+            {
+                return Err(format!("2-tier diverged: {got:?} vs {want:?} (lanes {lanes:?})"));
+            }
+
+            // 3-tier: resident suffix + dropped floor
+            let got = p.plan_batch(
+                &PlanInput::new(lanes.clone()).resident(resident).dropped_floor(l_floor),
+            );
+            let want = oracle_tiered(&p, &lanes, resident, l_floor);
+            if (got.l(), got.ideal_l) != (want.0, want.1)
+                || got.predicted_s != want.2
+                || got.baseline_s != want.3
+            {
+                return Err(format!(
+                    "3-tier diverged: {got:?} vs {want:?} \
+                     (lanes {lanes:?}, r {resident}, floor {l_floor})"
+                ));
+            }
+
+            // 4-tier: + the disk prefix span over the topology's NVMe rung
+            let got = p.plan_batch(
+                &PlanInput::new(lanes.clone())
+                    .resident(resident)
+                    .dropped_floor(l_floor)
+                    .prefix(disk, disk_prefix),
+            );
+            let want = oracle_four_tier(&p, &lanes, resident, l_floor, disk_prefix, nvme_factor);
+            if (got.l(), got.ideal_l) != (want.0, want.1)
+                || got.predicted_s != want.2
+                || got.baseline_s != want.3
+            {
+                return Err(format!(
+                    "4-tier diverged: {got:?} vs {want:?} (lanes {lanes:?}, r {resident}, \
+                     floor {l_floor}, disk {disk_prefix}, nvme {nvme_factor})"
+                ));
+            }
+            Ok(())
+        });
     }
 }

@@ -179,7 +179,7 @@ impl SplitSolver {
 mod tests {
     use super::*;
     use crate::config::{HardwareConfig, ModelConfig};
-    use crate::util::prng::check_property;
+    use crate::util::prng::{check_property, prop_cases};
 
     fn cm(a: f64, c: f64) -> CostModel {
         CostModel {
@@ -273,7 +273,7 @@ mod tests {
 
     #[test]
     fn property_closed_form_is_optimal() {
-        check_property("split_optimality", 60, |rng| {
+        check_property("split_optimality", prop_cases(60), |rng| {
             let a = 10f64.powf(rng.next_f64() * 6.0 - 9.0); // 1e-9 .. 1e-3
             let c = 10f64.powf(rng.next_f64() * 6.0 - 9.0);
             let mut cost = cm(a, c);

@@ -1,0 +1,434 @@
+//! The declarative tier topology the whole planning pipeline hangs off.
+//!
+//! KVPR's pitch is a fully automated profiler → scheduler → runtime
+//! pipeline, but hardware shapes keep growing: PR 2 added host tiers,
+//! PR 4 an NVMe disk tier, and the roadmap wants sharded workers.  Every
+//! one of those used to fork the planner's closed form into a new entry
+//! point (`plan_batch` / `plan_batch_tiered` / `plan_batch_four_tier`).
+//! The KV-offloading bottleneck analyses model the hierarchy as an
+//! arbitrary chain of capacity/bandwidth stages instead — so this module
+//! makes the chain **data**:
+//!
+//! * [`LinkSpec`] — one wire's measured (or declared) bandwidth + latency.
+//! * [`TierSpec`] — one storage rung: capacity, the wire its blocks cross
+//!   toward the tier above, the wire element width migrations charge, and
+//!   an optional occupancy watermark above which the rung proactively
+//!   spills one tier down.
+//! * [`TierTopology`] — the ordered chain, top (device) first, plus the
+//!   index of the *base* tier the planner's per-step KV transfer term
+//!   already reads from.  Fetching a token from any tier **below** the
+//!   base pays every extra wire on the way up as a surcharge
+//!   ([`TierTopology::hop_factor`]), which is how the planner folds the
+//!   transfer term over however many hops the chain declares.
+//!
+//! The chain is built once at startup: the profiler measures the device
+//! boundary ([`SystemProfile::topology`](crate::profiler::SystemProfile::topology)),
+//! configuration stacks capacities below it, and
+//! [`TierTopology::calibrated`] resolves any links the config left
+//! unspecified from the measured primary wire (tiers below the base get
+//! NVMe-shaped derivations, exactly matching
+//! [`LinkConfig::nvme_below`](crate::transfer::LinkConfig::nvme_below)).
+//! From then on a new tier — or a sharded worker's remote hop — is a data
+//! change, not a planner fork.
+
+use crate::transfer::{LinkConfig, NVME_BANDWIDTH_FACTOR};
+
+/// One wire's shape: bandwidth and fixed per-transfer latency.  A spec
+/// with zero bandwidth is **unresolved** — a placeholder the profiler
+/// fills in via [`TierTopology::calibrated`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkSpec {
+    /// Bytes per second; 0.0 means "derive from the primary wire".
+    pub bytes_per_sec: f64,
+    /// Fixed per-transfer latency in seconds.
+    pub latency_s: f64,
+}
+
+impl LinkSpec {
+    /// An unresolved placeholder: [`TierTopology::calibrated`] replaces it
+    /// with the measured primary wire (host rungs) or an NVMe-shaped
+    /// derivation of it (below-base rungs).
+    pub fn unresolved() -> Self {
+        LinkSpec { bytes_per_sec: 0.0, latency_s: 0.0 }
+    }
+
+    pub fn is_resolved(&self) -> bool {
+        self.bytes_per_sec > 0.0 || self.bytes_per_sec.is_infinite()
+    }
+
+    /// The spec of an emulated [`LinkConfig`] wire.
+    pub fn of(link: &LinkConfig) -> Self {
+        LinkSpec { bytes_per_sec: link.bytes_per_sec, latency_s: link.latency_s }
+    }
+
+    /// Realise this spec as an emulated wire, pacing at `chunk_bytes`.
+    pub fn to_link_config(&self, chunk_bytes: usize) -> LinkConfig {
+        LinkConfig {
+            bytes_per_sec: self.bytes_per_sec,
+            latency_s: self.latency_s,
+            chunk_bytes,
+        }
+    }
+}
+
+/// One rung of the tier chain.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TierSpec {
+    /// Pool name, matching the [`MemPool`](crate::memory::MemPool) naming
+    /// convention ("gpu-hbm", "pinned", "cpu-dram", "disk-nvme", ...).
+    pub name: String,
+    /// Tier capacity in bytes (0 for "inherit/unbounded": the coordinator
+    /// substitutes its KV budget for a zero-capacity top tier).
+    pub capacity_bytes: u64,
+    /// The wire this tier's blocks cross toward the tier above.  Ignored
+    /// for the chain's top tier (nothing above it).
+    pub up: LinkSpec,
+    /// Wire bytes per f32 element migrations over `up` charge: 4.0 plain,
+    /// 0.625 under int4 wire quantization.
+    pub wire_elem_bytes: f64,
+    /// Occupancy fraction above which this tier proactively spills cold
+    /// blocks one rung down; 1.0 (or ≥ 1.0) disables proactive spill.
+    pub spill_watermark: f64,
+}
+
+impl TierSpec {
+    pub fn new(name: &str, capacity_bytes: u64) -> Self {
+        TierSpec {
+            name: name.to_string(),
+            capacity_bytes,
+            up: LinkSpec::unresolved(),
+            wire_elem_bytes: 4.0,
+            spill_watermark: 1.0,
+        }
+    }
+}
+
+/// The declarative tier chain, fastest (device) first.
+///
+/// The planner folds its transfer term over this chain: tokens resident at
+/// or above `base` are covered by the per-step KV transfer coefficient the
+/// cost model already carries, while a token fetched from a deeper tier
+/// additionally crosses every wire between its rung and the base — the
+/// per-token surcharge [`TierTopology::hop_factor`] expresses in units of
+/// that coefficient.  Building a four-tier chain and planning over it:
+///
+/// ```
+/// use kvpr::scheduler::{CostModel, PlanInput, Planner, SchedulePolicy, TierTopology};
+/// // profiler → topology: capacities are config, wires are measured (here
+/// // declared); the disk rung's unresolved link calibrates NVMe-shaped
+/// let topo = TierTopology::standard(2 << 20, 64 << 20, 256 << 20)
+///     .with_disk(1 << 30, 0.9)
+///     .calibrated_bps(100e6, 30e-6);
+/// assert_eq!(topo.len(), 4);
+/// let disk = topo.tier_named("disk-nvme").unwrap();
+/// assert!((topo.hop_factor(disk) - 4.0).abs() < 1e-9, "one extra NVMe hop");
+///
+/// // topology → plan: one entry point, however many hops the chain has
+/// let cost = CostModel {
+///     recompute_per_token_s: 2e-6,
+///     transfer_kv_per_token_s: 1e-6,
+///     transfer_act_per_token_s: 5e-7,
+///     gpu_overhead_s: 0.0,
+///     link_latency_s: 0.0,
+/// };
+/// let planner = Planner::new(cost, SchedulePolicy::RowByRow, vec![32, 64, 96], usize::MAX)
+///     .with_topology(topo);
+/// let input = PlanInput::new(vec![128, 128]).prefix(disk, 64);
+/// let plan = planner.plan_batch(&input);
+/// assert_eq!(plan.l(), 64, "the disk prefix is cheaper to recompute than to two-hop");
+/// assert!(plan.predicted_s <= plan.baseline_s);
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct TierTopology {
+    tiers: Vec<TierSpec>,
+    /// Index of the deepest tier the planner's base KV transfer term
+    /// already covers (cpu-dram in the canonical chain): fetching from any
+    /// deeper tier pays the extra wires as a surcharge.
+    base: usize,
+}
+
+impl TierTopology {
+    /// A chain from explicit tier specs.  `base` is the index of the
+    /// deepest tier the per-step transfer term reads from for free.
+    pub fn new(tiers: Vec<TierSpec>, base: usize) -> Self {
+        assert!(!tiers.is_empty(), "a topology needs at least one tier");
+        assert!(base < tiers.len(), "base {base} out of range");
+        TierTopology { tiers, base }
+    }
+
+    /// The minimal measured chain: a device tier over one host tier joined
+    /// by the primary interconnect — what the profiler can see on its own.
+    pub fn device_host(gpu_capacity_bytes: u64, link: LinkSpec) -> Self {
+        let gpu = TierSpec::new("gpu-hbm", gpu_capacity_bytes);
+        let mut host = TierSpec::new("cpu-dram", 0);
+        host.up = link;
+        TierTopology { tiers: vec![gpu, host], base: 1 }
+    }
+
+    /// The canonical three-tier serving chain gpu-hbm ⊃ pinned ⊃ cpu-dram
+    /// with unresolved links (the serving loop calibrates them from the
+    /// profiled engine wire).  A gpu capacity of 0 means "inherit" — the
+    /// coordinator substitutes its KV budget.
+    pub fn standard(gpu_bytes: u64, pinned_bytes: u64, dram_bytes: u64) -> Self {
+        let tiers = vec![
+            TierSpec::new("gpu-hbm", gpu_bytes),
+            TierSpec::new("pinned", pinned_bytes),
+            TierSpec::new("cpu-dram", dram_bytes),
+        ];
+        TierTopology { tiers, base: 2 }
+    }
+
+    /// Append an NVMe disk rung below the chain and set the watermark at
+    /// which the rung above it starts spilling cold blocks down.  The disk
+    /// link stays unresolved: calibration derives it NVMe-shaped from the
+    /// wire above.  The new rung inherits the chain's current wire
+    /// element width, so `with_wire_elem_bytes` composes in either order.
+    pub fn with_disk(mut self, disk_bytes: u64, spill_watermark: f64) -> Self {
+        let width = self.tiers.last().map_or(4.0, |t| t.wire_elem_bytes);
+        if let Some(last) = self.tiers.last_mut() {
+            last.spill_watermark = spill_watermark;
+        }
+        let mut disk = TierSpec::new("disk-nvme", disk_bytes);
+        disk.wire_elem_bytes = width;
+        self.tiers.push(disk);
+        self
+    }
+
+    /// Set every rung's migration wire width (4.0 plain f32, 0.625 under
+    /// int4 wire quantization).
+    pub fn with_wire_elem_bytes(mut self, wire_elem_bytes: f64) -> Self {
+        assert!(wire_elem_bytes > 0.0, "wire_elem_bytes must be positive");
+        for t in &mut self.tiers {
+            t.wire_elem_bytes = wire_elem_bytes;
+        }
+        self
+    }
+
+    /// Override one tier's capacity (the coordinator resolves a
+    /// zero-capacity top tier to its KV budget through this).
+    pub fn set_capacity(&mut self, tier: usize, capacity_bytes: u64) {
+        self.tiers[tier].capacity_bytes = capacity_bytes;
+    }
+
+    /// Resolve every unresolved link from the measured primary wire: tiers
+    /// at or above the base rung get the primary spec verbatim; each
+    /// deeper rung with an unspecified link gets an NVMe-shaped derivation
+    /// of the (resolved) wire directly above it — the same shape
+    /// [`LinkConfig::nvme_below`] uses, so cost models and the emulated
+    /// wires can never drift apart.  Explicitly-specified links are kept.
+    pub fn calibrated(&self, primary: &LinkSpec) -> TierTopology {
+        let mut out = self.clone();
+        let mut above = *primary;
+        for (i, t) in out.tiers.iter_mut().enumerate().skip(1) {
+            if !t.up.is_resolved() {
+                t.up = if i <= self.base {
+                    *primary
+                } else {
+                    LinkSpec {
+                        bytes_per_sec: above.bytes_per_sec / NVME_BANDWIDTH_FACTOR,
+                        latency_s: above.latency_s.max(1e-6) * NVME_BANDWIDTH_FACTOR,
+                    }
+                };
+            }
+            above = t.up;
+        }
+        out
+    }
+
+    /// [`TierTopology::calibrated`] from raw primary-wire numbers.
+    pub fn calibrated_bps(&self, bytes_per_sec: f64, latency_s: f64) -> TierTopology {
+        self.calibrated(&LinkSpec { bytes_per_sec, latency_s })
+    }
+
+    pub fn len(&self) -> usize {
+        self.tiers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tiers.is_empty()
+    }
+
+    pub fn tiers(&self) -> &[TierSpec] {
+        &self.tiers
+    }
+
+    pub fn tier(&self, i: usize) -> &TierSpec {
+        &self.tiers[i]
+    }
+
+    /// Index of the deepest tier the base transfer term covers.
+    pub fn base(&self) -> usize {
+        self.base
+    }
+
+    /// Index of the tier called `name`, if the chain has one.
+    pub fn tier_named(&self, name: &str) -> Option<usize> {
+        self.tiers.iter().position(|t| t.name == name)
+    }
+
+    /// The wire element width migrations across the device boundary charge
+    /// (builders keep the chain uniform; this reads the boundary rung).
+    pub fn wire_elem_bytes(&self) -> f64 {
+        self.tiers.get(1).map_or(4.0, |t| t.wire_elem_bytes)
+    }
+
+    /// Bandwidth of the primary interconnect — the wire crossing into the
+    /// chain's top (device) tier.  Infinite for a single-tier chain or an
+    /// unthrottled wire.
+    pub fn primary_bytes_per_sec(&self) -> f64 {
+        match self.tiers.get(1) {
+            Some(t) if t.up.is_resolved() => t.up.bytes_per_sec,
+            _ => f64::INFINITY,
+        }
+    }
+
+    /// Extra interconnect-equivalents one token fetched from `tier` pays
+    /// this step on top of the base transfer term: 0 at or above the base
+    /// rung, and one `primary / link` ratio for every wire between `tier`
+    /// and the base below it.  Non-finite ratios (unthrottled emulation)
+    /// fall back to [`NVME_BANDWIDTH_FACTOR`] per hop, mirroring the
+    /// serving loop's historical fallback.
+    pub fn hop_factor(&self, tier: usize) -> f64 {
+        assert!(tier < self.tiers.len(), "tier {tier} out of range");
+        let primary = self.primary_bytes_per_sec();
+        let mut factor = 0.0;
+        for spec in self.tiers.iter().take(tier + 1).skip(self.base + 1) {
+            let ratio = primary / spec.up.bytes_per_sec;
+            factor += if ratio.is_finite() && ratio > 0.0 {
+                ratio
+            } else {
+                NVME_BANDWIDTH_FACTOR
+            };
+        }
+        factor
+    }
+
+    /// Convert predicted idle-link seconds into a grantable link-byte
+    /// budget on the primary wire (saturating; an unthrottled wire absorbs
+    /// everything).
+    pub fn slack_bytes(&self, slack_s: f64) -> u64 {
+        if slack_s.is_nan() || slack_s <= 0.0 {
+            return 0;
+        }
+        let bps = self.primary_bytes_per_sec();
+        if !bps.is_finite() {
+            return u64::MAX;
+        }
+        let bytes = slack_s * bps;
+        if bytes >= u64::MAX as f64 {
+            u64::MAX
+        } else {
+            bytes as u64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pcie() -> LinkSpec {
+        LinkSpec { bytes_per_sec: 100e6, latency_s: 30e-6 }
+    }
+
+    #[test]
+    fn standard_chain_calibrates_host_rungs_to_the_primary_wire() {
+        let topo = TierTopology::standard(1 << 20, 2 << 20, 4 << 20).calibrated(&pcie());
+        assert_eq!(topo.len(), 3);
+        assert_eq!(topo.base(), 2);
+        for i in 1..topo.len() {
+            assert_eq!(topo.tier(i).up, pcie(), "host rung {i} rides the primary wire");
+        }
+        assert_eq!(topo.primary_bytes_per_sec(), 100e6);
+        assert_eq!(topo.hop_factor(0), 0.0);
+        assert_eq!(topo.hop_factor(2), 0.0, "the base rung is covered by the transfer term");
+    }
+
+    #[test]
+    fn disk_rung_derives_an_nvme_shaped_wire() {
+        let topo = TierTopology::standard(0, 1 << 20, 4 << 20)
+            .with_disk(1 << 30, 0.9)
+            .calibrated(&pcie());
+        let disk = topo.tier_named("disk-nvme").unwrap();
+        assert_eq!(disk, 3);
+        let up = topo.tier(disk).up;
+        assert!((up.bytes_per_sec - 25e6).abs() < 1.0, "bw {up:?}");
+        assert!(up.latency_s > pcie().latency_s);
+        // the derivation matches LinkConfig::nvme_below exactly
+        let nvme = LinkConfig::nvme_below(&pcie().to_link_config(64 << 10));
+        assert!((up.bytes_per_sec - nvme.bytes_per_sec).abs() < 1e-9);
+        assert!((up.latency_s - nvme.latency_s).abs() < 1e-15);
+        // and the planner surcharge is the bandwidth gap
+        assert!((topo.hop_factor(disk) - NVME_BANDWIDTH_FACTOR).abs() < 1e-9);
+        // the watermark landed on the rung above the disk
+        assert!((topo.tier(2).spill_watermark - 0.9).abs() < 1e-12);
+        assert!(topo.tier(1).spill_watermark >= 1.0);
+    }
+
+    #[test]
+    fn explicit_links_survive_calibration() {
+        let mut spec = TierSpec::new("disk-nvme", 1 << 30);
+        spec.up = LinkSpec { bytes_per_sec: 7e9, latency_s: 1e-4 };
+        let topo = TierTopology::new(
+            vec![
+                TierSpec::new("gpu-hbm", 1 << 20),
+                TierSpec::new("cpu-dram", 4 << 20),
+                spec,
+            ],
+            1,
+        )
+        .calibrated(&LinkSpec { bytes_per_sec: 28e9, latency_s: 30e-6 });
+        let disk = topo.tier_named("disk-nvme").unwrap();
+        assert_eq!(topo.tier(disk).up.bytes_per_sec, 7e9, "declared wire kept");
+        assert!((topo.hop_factor(disk) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deeper_chains_accumulate_hop_factors() {
+        // a five-tier chain: every rung below the base adds its own ratio
+        let mut cold = TierSpec::new("cold-object", 1 << 40);
+        cold.up = LinkSpec { bytes_per_sec: 5e6, latency_s: 1e-3 };
+        let tiers = vec![
+            TierSpec::new("gpu-hbm", 1 << 20),
+            TierSpec::new("pinned", 2 << 20),
+            TierSpec::new("cpu-dram", 4 << 20),
+            TierSpec::new("disk-nvme", 1 << 30),
+            cold,
+        ];
+        let topo = TierTopology::new(tiers, 2).calibrated(&pcie());
+        let disk = topo.tier_named("disk-nvme").unwrap();
+        let cold = topo.tier_named("cold-object").unwrap();
+        assert!((topo.hop_factor(disk) - 4.0).abs() < 1e-9);
+        // cold pays the NVMe hop plus its own 100e6/5e6 = 20× wire
+        assert!((topo.hop_factor(cold) - 24.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unthrottled_wires_fall_back_to_the_nvme_shape_ratio() {
+        let topo = TierTopology::standard(0, 1 << 20, 4 << 20)
+            .with_disk(1 << 30, 0.9)
+            .calibrated(&LinkSpec { bytes_per_sec: f64::INFINITY, latency_s: 0.0 });
+        let disk = topo.tier_named("disk-nvme").unwrap();
+        assert!(
+            (topo.hop_factor(disk) - NVME_BANDWIDTH_FACTOR).abs() < 1e-9,
+            "inf/inf must fall back to the shape ratio"
+        );
+        assert_eq!(topo.slack_bytes(0.5), u64::MAX, "unthrottled wire absorbs everything");
+    }
+
+    #[test]
+    fn slack_bytes_converts_idle_seconds_on_the_primary_wire() {
+        let topo = TierTopology::standard(0, 1 << 20, 4 << 20).calibrated(&pcie());
+        assert_eq!(topo.slack_bytes(0.0), 0);
+        assert_eq!(topo.slack_bytes(-1.0), 0);
+        assert_eq!(topo.slack_bytes(f64::NAN), 0);
+        assert_eq!(topo.slack_bytes(0.01), 1_000_000);
+    }
+
+    #[test]
+    fn wire_width_builder_applies_to_every_rung() {
+        let topo = TierTopology::standard(0, 1, 2).with_disk(3, 0.5).with_wire_elem_bytes(0.625);
+        assert_eq!(topo.wire_elem_bytes(), 0.625);
+        assert!(topo.tiers().iter().all(|t| t.wire_elem_bytes == 0.625));
+    }
+}

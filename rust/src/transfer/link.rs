@@ -40,6 +40,11 @@ impl LinkConfig {
     /// sequential bandwidth is [`NVME_BANDWIDTH_FACTOR`]× slower than the
     /// CPU↔GPU interconnect and each I/O pays a much larger fixed setup
     /// cost (queue submission + flash access vs DMA setup).
+    ///
+    /// [`TierTopology::calibrated`](crate::scheduler::TierTopology::calibrated)
+    /// applies this exact derivation to every below-base rung whose link
+    /// the configuration left unspecified, so the declarative chain and
+    /// the emulated wires can never drift apart.
     pub fn nvme_below(pcie: &LinkConfig) -> Self {
         LinkConfig {
             bytes_per_sec: pcie.bytes_per_sec / NVME_BANDWIDTH_FACTOR,
@@ -457,6 +462,23 @@ mod tests {
         // the shared constant IS the shaped ratio (cost models reuse it)
         let ratio = pcie.bytes_per_sec / nvme.bytes_per_sec;
         assert!((ratio - NVME_BANDWIDTH_FACTOR).abs() < 1e-9);
+    }
+
+    #[test]
+    fn topology_calibration_matches_nvme_below() {
+        // the declarative chain's derived disk wire is this module's
+        // nvme_below, number for number — the planner's hop surcharge and
+        // the emulated NVMe link can never disagree
+        let pcie = LinkConfig::with_bandwidth(100e6);
+        let nvme = LinkConfig::nvme_below(&pcie);
+        let topo = crate::scheduler::TierTopology::standard(1, 1, 1)
+            .with_disk(1, 0.9)
+            .calibrated(&crate::scheduler::LinkSpec::of(&pcie));
+        let disk = topo.tier_named("disk-nvme").unwrap();
+        let derived = topo.tier(disk).up.to_link_config(pcie.chunk_bytes);
+        assert_eq!(derived.bytes_per_sec, nvme.bytes_per_sec);
+        assert_eq!(derived.latency_s, nvme.latency_s);
+        assert_eq!(derived.chunk_bytes, nvme.chunk_bytes);
     }
 
     #[test]

@@ -14,14 +14,16 @@
 //! * **Provisional mode** (`"provisional": true` in the baseline): the
 //!   baseline carries no trusted numbers yet — only an `"expect"` list of
 //!   dotted paths that must exist in the fresh run with a positive
-//!   `steps_per_s`.  The gate passes on structure alone and prints the
-//!   refresh recipe, so the first machine to run the bench can promote
-//!   its output to the real baseline.
+//!   throughput metric.  The gate passes on structure alone and prints
+//!   the refresh recipe, so the first machine to run the bench can
+//!   promote its output to the real baseline.
 
 use super::json::Json;
 
-/// Throughput metric the gate compares at every policy path.
-const METRIC: &str = "steps_per_s";
+/// Throughput metrics the gate compares at every pinned path: eviction
+/// policies report `steps_per_s`, the planner's topology-fold section
+/// reports `plans_per_s`.  Higher is better for every listed metric.
+const METRICS: [&str; 2] = ["steps_per_s", "plans_per_s"];
 
 /// Default allowed fractional drop before the gate fails (10 %).
 pub const DEFAULT_MAX_DROP: f64 = 0.10;
@@ -59,11 +61,17 @@ pub fn compare(baseline: &Json, fresh: &Json, max_drop_frac: f64) -> GateReport 
                     };
                     let parts: Vec<&str> = path.split('.').collect();
                     let node = fresh.at(&parts);
-                    match node.get(METRIC).and_then(|v| v.as_f64()) {
-                        Some(v) if v > 0.0 => report.checked += 1,
-                        _ => report.failures.push(format!(
-                            "{path}: missing or non-positive {METRIC} in the fresh run"
-                        )),
+                    let ok = METRICS.iter().any(|m| {
+                        node.get(m).and_then(|v| v.as_f64()).is_some_and(|v| v > 0.0)
+                    });
+                    if ok {
+                        report.checked += 1;
+                    } else {
+                        report.failures.push(format!(
+                            "{path}: missing or non-positive throughput metric \
+                             ({}) in the fresh run",
+                            METRICS.join("/")
+                        ));
                     }
                 }
             }
@@ -75,24 +83,29 @@ pub fn compare(baseline: &Json, fresh: &Json, max_drop_frac: f64) -> GateReport 
     }
     walk(baseline, fresh, "", max_drop_frac, &mut report);
     if report.checked == 0 {
-        report.failures.push(format!("baseline pins no {METRIC} metrics — nothing gated"));
+        report.failures.push(format!(
+            "baseline pins no throughput metrics ({}) — nothing gated",
+            METRICS.join("/")
+        ));
     }
     report
 }
 
 fn walk(base: &Json, fresh: &Json, path: &str, max_drop: f64, report: &mut GateReport) {
     let Json::Obj(map) = base else { return };
-    if let Some(bv) = map.get(METRIC).and_then(|v| v.as_f64()) {
-        report.checked += 1;
-        match fresh.get(METRIC).and_then(|v| v.as_f64()) {
-            Some(fv) if fv + 1e-12 >= bv * (1.0 - max_drop) => {}
-            Some(fv) => report.failures.push(format!(
-                "{path}: {METRIC} regressed {bv:.3} → {fv:.3} (allowed drop {:.0}%)",
-                max_drop * 100.0
-            )),
-            None => report
-                .failures
-                .push(format!("{path}: {METRIC} missing from the fresh run")),
+    for metric in METRICS {
+        if let Some(bv) = map.get(metric).and_then(|v| v.as_f64()) {
+            report.checked += 1;
+            match fresh.get(metric).and_then(|v| v.as_f64()) {
+                Some(fv) if fv + 1e-12 >= bv * (1.0 - max_drop) => {}
+                Some(fv) => report.failures.push(format!(
+                    "{path}: {metric} regressed {bv:.3} → {fv:.3} (allowed drop {:.0}%)",
+                    max_drop * 100.0
+                )),
+                None => report
+                    .failures
+                    .push(format!("{path}: {metric} missing from the fresh run")),
+            }
         }
     }
     for (k, v) in map {
@@ -201,5 +214,24 @@ mod tests {
         let b = j(r#"{"provisional": true}"#);
         let r = compare(&b, &j("{}"), 0.10);
         assert!(!r.passed());
+    }
+
+    #[test]
+    fn plans_per_s_is_gated_like_steps_per_s() {
+        // the planner's topology_plan section reports plans_per_s; the
+        // gate must regress-check it with the same rule
+        let b = j(r#"{"topology_plan": {"four_tier": {"plans_per_s": 1000.0}}}"#);
+        let ok = j(r#"{"topology_plan": {"four_tier": {"plans_per_s": 950.0}}}"#);
+        let r = compare(&b, &ok, 0.10);
+        assert!(r.passed());
+        assert_eq!(r.checked, 1);
+        let bad = j(r#"{"topology_plan": {"four_tier": {"plans_per_s": 500.0}}}"#);
+        let r = compare(&b, &bad, 0.10);
+        assert!(!r.passed());
+        assert!(r.failures[0].contains("plans_per_s"), "{}", r.failures[0]);
+        // provisional expect entries accept either throughput metric
+        let prov = j(r#"{"provisional": true, "expect": ["topology_plan.four_tier"]}"#);
+        assert!(compare(&prov, &ok, 0.10).passed());
+        assert!(!compare(&prov, &j("{}"), 0.10).passed());
     }
 }

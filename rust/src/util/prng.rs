@@ -80,6 +80,19 @@ impl Prng {
     }
 }
 
+/// Case-count knob for the heavier property tests (the proptest
+/// `PROPTEST_CASES` convention): `KVPR_PROPTEST_CASES` in the environment
+/// overrides the test's default, so the nightly-scheduled extended CI job
+/// can run the same properties at high case counts without dragging the
+/// PR-latency path.  Unset or unparsable values keep the default.
+pub fn prop_cases(default_cases: usize) -> usize {
+    std::env::var("KVPR_PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(default_cases)
+}
+
 /// Tiny property-test harness: run `f` on `n` PRNG-derived cases and report
 /// the seed of the first failure so it can be replayed.  A stand-in for
 /// proptest (not in the vendored crate set) — shrinkless but reproducible.
@@ -170,5 +183,15 @@ mod tests {
             let x = rng.range(0, 5);
             if x < 5 { Ok(()) } else { Err(format!("{x} out of range")) }
         });
+    }
+
+    #[test]
+    fn prop_cases_defaults_without_the_env_knob() {
+        // the knob is read per call; tests must not set the variable (that
+        // would race other tests in the same process), so only the default
+        // path is pinned here — the nightly CI job exercises the override
+        if std::env::var("KVPR_PROPTEST_CASES").is_err() {
+            assert_eq!(prop_cases(123), 123);
+        }
     }
 }
