@@ -1,0 +1,145 @@
+//! **Workload SLO driver**: replay one named workload mix through the
+//! continuous-batching server and its analytic twin, then print an SLO
+//! table — TTFT/TPOT percentiles, SLO attainment, and throughput from
+//! both executions — and write the numbers to `SLO_workload.json`
+//! (the artifact the CI smoke job uploads).
+//!
+//! The served half measures wall-clock latency against the mix's declared
+//! [`SloTargets`]; the sim half replays the identical trace through
+//! [`EvictionSimConfig::from_trace`] on the shared decode-step clock, so
+//! its per-mix `steps_per_s` and queueing-delay TTFT are wall-clock-free
+//! reference numbers (`rust/tests/workload_trace.rs` pins how tightly the
+//! two executions must agree).
+//!
+//! ```bash
+//! cargo run --release --example workload_slo -- [mix] [requests]
+//! # mix: bursty_chat (default) | diurnal_mixed | rag_long_context
+//! # requests: optional override of the mix's request count (CI smoke: 8)
+//! ```
+//!
+//! Runs with or without `make artifacts` (interpreter fallback).
+
+use std::time::{Duration, Instant};
+
+use kvpr::config::{HardwareConfig, ModelConfig};
+use kvpr::coordinator::{ContinuousConfig, ContinuousServer};
+use kvpr::engine::{EngineConfig, EnginePolicy};
+use kvpr::kvstore::{simulate_eviction, EvictionSimConfig, RecomputeAware};
+use kvpr::scheduler::CostModel;
+use kvpr::transfer::LinkConfig;
+use kvpr::util::stats::Summary;
+use kvpr::workload::WorkloadSpec;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let mix = args.get(1).map(String::as_str).unwrap_or("bursty_chat");
+    let Some(mut spec) = WorkloadSpec::named(mix) else {
+        eprintln!("workload_slo: unknown mix {mix:?}; available: {:?}", WorkloadSpec::mix_names());
+        std::process::exit(2);
+    };
+    if let Some(n) = args.get(2) {
+        spec.requests = n
+            .parse()
+            .map_err(|e| anyhow::anyhow!("bad request count {n:?}: {e}"))?;
+    }
+    let trace = spec.generate();
+    println!(
+        "workload_slo: mix {} — {} requests over {} arrival steps, {} gen tokens",
+        trace.name,
+        trace.requests.len(),
+        trace.max_step() + 1,
+        trace.total_gen_tokens()
+    );
+
+    // -- analytic replay: the trace through the eviction sim ----------------
+    let cost = CostModel::from_hardware(&HardwareConfig::a100_x16(), &ModelConfig::opt_6_7b(), 32);
+    let sim_cfg = EvictionSimConfig::from_trace(cost.clone(), &trace);
+    let sim = simulate_eviction(&sim_cfg, &RecomputeAware::new(cost));
+    let mut delays = Summary::new();
+    for &d in &sim.admit_delay_steps {
+        delays.add(d as f64);
+    }
+    let sim_ttft_p99_steps = if delays.count() == 0 { 0.0 } else { delays.p99() };
+
+    // -- served replay: the same trace through the continuous loop ----------
+    let mut ecfg = EngineConfig::new(EnginePolicy::Kvpr);
+    ecfg.weights_offloaded = true;
+    ecfg.link = LinkConfig::with_bandwidth(100e6);
+    ecfg.seed = 42;
+    let mut cfg = ContinuousConfig::new("artifacts", ecfg);
+    cfg.max_group = 4;
+    cfg.max_groups = 4;
+    cfg.admit_wait = Duration::from_millis(5);
+    let server = ContinuousServer::start(cfg)?;
+    server.metrics().set_slo(spec.slo);
+    let t0 = Instant::now();
+    let handles = server.submit_trace(&trace);
+    for (h, r) in handles.into_iter().zip(&trace.requests) {
+        let resp = h.wait()?;
+        assert_eq!(resp.tokens.len(), r.gen_tokens, "request {} length", r.id);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let m = server.metrics();
+    let ttft = m.ttft_stats();
+    let tpot = m.tpot_stats();
+    let slo = m.slo_attainment();
+    let tok_per_s = m.tokens() as f64 / wall;
+    let peak = m.peak_occupancy();
+
+    println!("\n  metric              p50        p95        p99     target  attainment");
+    println!(
+        "  TTFT        {:9.4}s {:9.4}s {:9.4}s {:9.3}s      {:5.1}%",
+        ttft.p50,
+        ttft.p95,
+        ttft.p99,
+        spec.slo.ttft_s,
+        slo.ttft_frac() * 100.0
+    );
+    println!(
+        "  TPOT        {:9.4}s {:9.4}s {:9.4}s {:9.3}s      {:5.1}%",
+        tpot.p50,
+        tpot.p95,
+        tpot.p99,
+        spec.slo.tpot_s,
+        slo.tpot_frac() * 100.0
+    );
+    println!(
+        "\n  served: {:.1} tok/s over {:.2}s wall, peak occupancy {:.0}, backpressure {}",
+        tok_per_s,
+        wall,
+        peak,
+        m.backpressure_events()
+    );
+    println!(
+        "  sim:    {:.0} steps/s (analytic), peak concurrency {}, p99 TTFT {:.0} steps, {} completed",
+        sim.steps_per_s, sim.peak_concurrency, sim_ttft_p99_steps, sim.completed
+    );
+
+    let json = format!(
+        "{{\n  \"workload\": \"{}\",\n  \"requests\": {},\n  \"slo\": {{ \"ttft_s\": {}, \"tpot_s\": {} }},\n  \"served\": {{ \"ttft_p50_s\": {:.6}, \"ttft_p95_s\": {:.6}, \"ttft_p99_s\": {:.6}, \"tpot_p50_s\": {:.6}, \"tpot_p95_s\": {:.6}, \"tpot_p99_s\": {:.6}, \"ttft_attainment\": {:.4}, \"tpot_attainment\": {:.4}, \"tok_per_s\": {:.3}, \"peak_occupancy\": {:.1}, \"backpressure\": {} }},\n  \"sim\": {{ \"steps_per_s\": {:.3}, \"ttft_p99_steps\": {:.1}, \"peak_concurrency\": {}, \"completed\": {} }}\n}}\n",
+        trace.name,
+        trace.requests.len(),
+        spec.slo.ttft_s,
+        spec.slo.tpot_s,
+        ttft.p50,
+        ttft.p95,
+        ttft.p99,
+        tpot.p50,
+        tpot.p95,
+        tpot.p99,
+        slo.ttft_frac(),
+        slo.tpot_frac(),
+        tok_per_s,
+        peak,
+        m.backpressure_events(),
+        sim.steps_per_s,
+        sim_ttft_p99_steps,
+        sim.peak_concurrency,
+        sim.completed
+    );
+    server.shutdown()?;
+    std::fs::write("SLO_workload.json", &json)?;
+    println!("\nwrote SLO_workload.json");
+    Ok(())
+}

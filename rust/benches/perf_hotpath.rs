@@ -18,7 +18,9 @@ use kvpr::scheduler::{
     CostModel, LinkSpec, PlanInput, Planner, SchedulePolicy, SplitSolver, TierTopology,
 };
 use kvpr::sim::{simulate_decode, Policy, RunConfig};
+use kvpr::util::stats::Summary;
 use kvpr::util::table::Table;
+use kvpr::workload::WorkloadSpec;
 
 fn time_per_iter<F: FnMut()>(iters: usize, mut f: F) -> f64 {
     // warmup
@@ -239,8 +241,47 @@ fn main() {
         ));
     }
 
+    // trace-driven workload mixes: each named generator lowered to a
+    // trace and replayed through the analytic sim (the serving loop's
+    // twin) — per-mix decode throughput plus the queueing-delay
+    // component of TTFT in steps (p99 of admission round − arrival round)
+    let wcost = CostModel::from_hardware(&HardwareConfig::a100_x16(), &ModelConfig::opt_6_7b(), 32);
+    let mut wl_json = Vec::new();
+    for name in WorkloadSpec::mix_names() {
+        let spec = WorkloadSpec::named(name).expect("named mix");
+        let trace = spec.generate();
+        let wcfg = EvictionSimConfig::from_trace(wcost.clone(), &trace);
+        let rep = simulate_eviction(&wcfg, &RecomputeAware::new(wcost.clone()));
+        let dt = time_per_iter(50, || {
+            std::hint::black_box(simulate_eviction(&wcfg, &RecomputeAware::new(wcost.clone())));
+        });
+        let mut delays = Summary::new();
+        for &d in &rep.admit_delay_steps {
+            delays.add(d as f64);
+        }
+        let ttft_p99_steps = if delays.count() == 0 { 0.0 } else { delays.p99() };
+        t.row(&[
+            format!("workload replay ({name})"),
+            "50".into(),
+            kvpr::util::fmt_secs(dt),
+            format!(
+                "{} reqs, {:.0} steps/s, p99 TTFT {:.0} steps",
+                trace.requests.len(),
+                rep.steps_per_s,
+                ttft_p99_steps
+            ),
+        ]);
+        wl_json.push(format!(
+            "\"{name}\": {{ \"steps_per_s\": {:.3}, \"ttft_p99_steps\": {:.1}, \"requests\": {}, \"completed\": {} }}",
+            rep.steps_per_s,
+            ttft_p99_steps,
+            trace.requests.len(),
+            rep.completed
+        ));
+    }
+
     let json = format!(
-        "{{\n  \"bench\": \"kvstore\",\n  \"policies\": {{\n    \"lru\": {},\n    \"recompute_aware\": {}\n  }},\n  \"tiered\": {{\n    \"lru\": {},\n    \"recompute_aware\": {}\n  }},\n  \"four_tier\": {{\n    \"lru\": {},\n    \"recompute_aware\": {}\n  }},\n  \"topology_plan\": {{\n    {},\n    {},\n    {}\n  }}\n}}\n",
+        "{{\n  \"bench\": \"kvstore\",\n  \"policies\": {{\n    \"lru\": {},\n    \"recompute_aware\": {}\n  }},\n  \"tiered\": {{\n    \"lru\": {},\n    \"recompute_aware\": {}\n  }},\n  \"four_tier\": {{\n    \"lru\": {},\n    \"recompute_aware\": {}\n  }},\n  \"topology_plan\": {{\n    {},\n    {},\n    {}\n  }},\n  \"workload\": {{\n    {},\n    {},\n    {}\n  }}\n}}\n",
         policy_json(&lru),
         policy_json(&ra),
         policy_json(&tlru),
@@ -249,7 +290,10 @@ fn main() {
         policy_json(&fra),
         topo_json[0],
         topo_json[1],
-        topo_json[2]
+        topo_json[2],
+        wl_json[0],
+        wl_json[1],
+        wl_json[2]
     );
     if let Err(e) = std::fs::write("BENCH_kvstore.json", &json) {
         eprintln!("BENCH_kvstore.json not written: {e}");

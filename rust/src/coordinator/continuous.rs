@@ -50,7 +50,17 @@
 //!
 //! Requests move through `Queued → Prefill → Decoding → Done`
 //! ([`RequestState`]); per-step latency, queue depth and occupancy land in
-//! [`ServeMetrics`].  Contrast with [`super::Server`], which forms one batch,
+//! [`ServeMetrics`], and retirement additionally records each request's
+//! TTFT/TPOT sample for the workload harness's SLO table.
+//!
+//! **Trace replay** ([`ContinuousServer::submit_trace`]): a request carrying
+//! [`Request::arrival_step`] is held in the queue until the loop's
+//! decode-step clock reaches that step — admission respects the trace's
+//! arrival schedule, not just queue order — and idle stretches fast-forward
+//! the clock to the next arrival, so think-time gaps cost no wall time.
+//! The analytic sim replays the identical trace on the identical step
+//! clock ([`EvictionSimConfig::from_trace`](crate::kvstore::EvictionSimConfig::from_trace)),
+//! which is what makes sim-vs-served agreement a testable claim.  Contrast with [`super::Server`], which forms one batch,
 //! decodes it to completion, and only then looks at the queue again: under
 //! concurrent load the continuous loop starts new work every step and
 //! retires finished requests early — the property the KV-offloading serving
@@ -196,6 +206,8 @@ struct Member {
     req: Request,
     arrived: Instant,
     admitted: Instant,
+    /// When this member's first token landed (TTFT sample at retirement).
+    first_tok: Option<Instant>,
     done: mpsc::Sender<Response>,
     lane: usize,
     state: RequestState,
@@ -270,6 +282,30 @@ impl ContinuousServer {
             .next_id
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         self.submit_request(Request::new(id, prompt, gen_len))
+    }
+
+    /// Submit every request of a generated workload
+    /// [`Trace`](crate::workload::Trace), step-indexed: admission holds
+    /// each one until the loop's decode-step clock reaches its arrival
+    /// step, so the trace's arrival schedule — not channel delivery order
+    /// or wall time — decides when it can join a group.  Returns handles
+    /// in trace order.
+    pub fn submit_trace(&self, trace: &crate::workload::Trace) -> Vec<ResponseHandle> {
+        trace
+            .requests
+            .iter()
+            .map(|r| {
+                let id = self
+                    .next_id
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                self.submit_request(Request::at_step(
+                    id,
+                    &r.prompt_text(),
+                    r.gen_tokens.max(1),
+                    r.step,
+                ))
+            })
+            .collect()
     }
 
     pub fn submit_request(&self, req: Request) -> ResponseHandle {
@@ -395,6 +431,10 @@ fn serve_loop(
 
     let mut queue: VecDeque<Pending> = VecDeque::new();
     let mut groups: Vec<Group> = Vec::new();
+    // decode-step clock: counts completed loop steps; trace-replay
+    // requests (Request::arrival_step) are admissible only once the clock
+    // reaches their arrival step
+    let mut steps_done: usize = 0;
     let mut seen_kv_drops: u64 = 0;
     // cumulative disk-traffic counters already surfaced to the metrics
     // (spills/hops can also be issued inside admission, before the step's
@@ -427,9 +467,31 @@ fn serve_loop(
             queue.push_back(p);
         }
 
+        // -- 1b. trace clock: nothing is decoding and every queued request
+        //        is step-indexed in the future — idle steps pass instantly,
+        //        so jump the clock to the next arrival instead of spinning
+        if groups.is_empty()
+            && !queue.is_empty()
+            && !queue.iter().any(|p| arrival_eligible(p, steps_done))
+        {
+            if let Some(next) = queue.iter().filter_map(|p| p.req.arrival_step).min() {
+                steps_done = next;
+            }
+        }
+
         // -- 2. admission (Queued → Prefill → Decoding) ----------------------
-        while !queue.is_empty() && groups.len() < cfg.max_groups {
-            let mut n = queue.len().min(cfg.max_group.max(1));
+        // a step-indexed request whose arrival step is still in the future
+        // is invisible here: admission respects the trace's arrival
+        // schedule, not just queue order
+        loop {
+            if groups.len() >= cfg.max_groups {
+                break;
+            }
+            let eligible = queue.iter().filter(|p| arrival_eligible(p, steps_done)).count();
+            if eligible == 0 {
+                break;
+            }
+            let mut n = eligible.min(cfg.max_group.max(1));
             let mut hold = None;
             while n >= 1 {
                 let need = engine.session_kv_bytes(n)?;
@@ -475,17 +537,28 @@ fn serve_loop(
                         }
                     }
                     // not even a single-request session fits the configured
-                    // budget — fail the head request instead of spinning
-                    let p = queue.pop_front().unwrap();
-                    drop(p);
+                    // budget — fail the first eligible request instead of
+                    // spinning (the head may be a future trace arrival)
+                    if let Some(pos) = queue.iter().position(|p| arrival_eligible(p, steps_done))
+                    {
+                        let _ = queue.remove(pos);
+                    }
                     continue;
                 }
                 break;
             };
+            // pop the first n eligible requests, keeping future trace
+            // arrivals (and any overflow) queued in order
             let mut taken: Vec<Pending> = Vec::with_capacity(n);
-            for _ in 0..n {
-                taken.push(queue.pop_front().unwrap());
+            let mut kept: VecDeque<Pending> = VecDeque::with_capacity(queue.len());
+            while let Some(p) = queue.pop_front() {
+                if taken.len() < n && arrival_eligible(&p, steps_done) {
+                    taken.push(p);
+                } else {
+                    kept.push_back(p);
+                }
             }
+            queue = kept;
             let prompts: Vec<Vec<i32>> = taken
                 .iter()
                 .map(|p| tok.encode(&p.req.prompt, cfg.prompt_bucket))
@@ -500,6 +573,7 @@ fn serve_loop(
                     req: p.req,
                     arrived: p.arrived,
                     admitted,
+                    first_tok: None,
                     done: p.done,
                     lane,
                     state: RequestState::Prefill,
@@ -640,6 +714,16 @@ fn serve_loop(
             engine.decode_step_with_plan(&mut g.sess, plan_l)?;
             step_tokens += g.active();
         }
+        // every decoding member just produced a token: stamp first-token
+        // times for the TTFT samples retirement reports
+        let after_step = Instant::now();
+        for g in groups.iter_mut() {
+            for m in g.members.iter_mut() {
+                if m.state == RequestState::Decoding && m.first_tok.is_none() {
+                    m.first_tok = Some(after_step);
+                }
+            }
+        }
 
         // -- 5. retirement (Decoding → Done) ---------------------------------
         for g in groups.iter_mut() {
@@ -659,6 +743,14 @@ fn serve_loop(
                     let queue_s = (m.admitted - m.arrived).as_secs_f64();
                     let total_s = m.arrived.elapsed().as_secs_f64();
                     metrics.record_request(total_s, queue_s, decode_s, toks.len());
+                    let retired = Instant::now();
+                    let first = m.first_tok.unwrap_or(retired);
+                    let tpot_s = if toks.len() > 1 {
+                        Some((retired - first).as_secs_f64() / (toks.len() - 1) as f64)
+                    } else {
+                        None
+                    };
+                    metrics.record_ttft_tpot((first - m.arrived).as_secs_f64(), tpot_s);
                     let _ = m.done.send(Response {
                         id: m.req.id,
                         text,
@@ -686,6 +778,16 @@ fn serve_loop(
         groups = live;
 
         metrics.record_step(queue.len(), active, t_step.elapsed().as_secs_f64(), step_tokens);
+        steps_done += 1;
     }
     Ok(())
+}
+
+/// Whether a queued request may be admitted at the given decode-step clock
+/// (wall-clock requests always; trace requests once their step arrives).
+fn arrival_eligible(p: &Pending, step_clock: usize) -> bool {
+    match p.req.arrival_step {
+        Some(s) => s <= step_clock,
+        None => true,
+    }
 }

@@ -1,10 +1,13 @@
 //! Serving metrics aggregation: per-request latency summaries plus the
 //! per-step counters the continuous-batching loop emits (step latency,
-//! queue depth, batch occupancy, KV-budget backpressure events).
+//! queue depth, batch occupancy, KV-budget backpressure events), and the
+//! per-request TTFT/TPOT samples the workload harness scores against a
+//! mix's [`SloTargets`].
 
 use std::sync::{Arc, Mutex};
 
 use crate::util::stats::Summary;
+use crate::workload::SloTargets;
 
 /// Shared metrics sink: per-request latency summaries + token counters.
 /// Clone-cheap (`Arc`-shared): the serving thread records, callers read.
@@ -48,6 +51,55 @@ struct Inner {
     hops_polled: u64,
     // -- adaptive step-budget counters ---------------------------------------
     budget: StepBudgetTotals,
+    // -- workload SLO samples -------------------------------------------------
+    ttft: Summary,
+    tpot: Summary,
+    slo: Option<SloTargets>,
+    slo_requests: u64,
+    slo_ttft_ok: u64,
+    slo_tpot_ok: u64,
+}
+
+/// Percentile snapshot of one latency dimension (all zeros when no sample
+/// was recorded — never NaN, never a panic).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LatencyPercentiles {
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+/// SLO attainment counters: of `requests` scored requests, how many met
+/// the TTFT and TPOT targets.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SloAttainment {
+    /// Requests recorded while a target was set.
+    pub requests: u64,
+    pub ttft_ok: u64,
+    pub tpot_ok: u64,
+}
+
+impl SloAttainment {
+    /// Fraction of scored requests meeting the TTFT target.  Documented
+    /// edge: with zero scored requests the objective is vacuously met —
+    /// 1.0, never NaN.
+    pub fn ttft_frac(&self) -> f64 {
+        if self.requests == 0 {
+            1.0
+        } else {
+            self.ttft_ok as f64 / self.requests as f64
+        }
+    }
+
+    /// Fraction meeting the TPOT target (same vacuous-1.0 edge).
+    pub fn tpot_frac(&self) -> f64 {
+        if self.requests == 0 {
+            1.0
+        } else {
+            self.tpot_ok as f64 / self.requests as f64
+        }
+    }
 }
 
 /// Aggregates of the per-step adaptive migration grant (the planner-slack
@@ -211,6 +263,67 @@ impl ServeMetrics {
     /// Aggregates of the adaptive per-step migration grant.
     pub fn budget_totals(&self) -> StepBudgetTotals {
         self.inner.lock().unwrap().budget
+    }
+
+    /// Arm SLO scoring: subsequent [`record_ttft_tpot`](Self::record_ttft_tpot)
+    /// calls are counted against these targets (samples recorded before a
+    /// target is set only feed the percentile summaries).
+    pub fn set_slo(&self, targets: SloTargets) {
+        self.inner.lock().unwrap().slo = Some(targets);
+    }
+
+    /// One retired request's first-token latency and per-output-token
+    /// pace.  `tpot_s` is `None` for single-token generations (no second
+    /// token to pace) — such a request vacuously meets the TPOT target.
+    pub fn record_ttft_tpot(&self, ttft_s: f64, tpot_s: Option<f64>) {
+        let mut m = self.inner.lock().unwrap();
+        m.ttft.add(ttft_s);
+        if let Some(t) = tpot_s {
+            m.tpot.add(t);
+        }
+        if let Some(slo) = m.slo {
+            m.slo_requests += 1;
+            if ttft_s <= slo.ttft_s {
+                m.slo_ttft_ok += 1;
+            }
+            // a missed pace requires an actual second token; single-token
+            // generations (tpot_s None) meet the target vacuously
+            match tpot_s {
+                Some(t) if t > slo.tpot_s => {}
+                _ => m.slo_tpot_ok += 1,
+            }
+        }
+    }
+
+    /// TTFT percentile snapshot (zeros when no request was recorded).
+    pub fn ttft_stats(&self) -> LatencyPercentiles {
+        let m = self.inner.lock().unwrap();
+        Self::percentiles(&m.ttft)
+    }
+
+    /// TPOT percentile snapshot (zeros when every generation was a single
+    /// token, or nothing retired yet).
+    pub fn tpot_stats(&self) -> LatencyPercentiles {
+        let m = self.inner.lock().unwrap();
+        Self::percentiles(&m.tpot)
+    }
+
+    fn percentiles(s: &Summary) -> LatencyPercentiles {
+        if s.count() == 0 {
+            return LatencyPercentiles::default();
+        }
+        LatencyPercentiles { mean: s.mean(), p50: s.p50(), p95: s.p95(), p99: s.p99() }
+    }
+
+    /// SLO attainment counters ([`set_slo`](Self::set_slo) arms scoring;
+    /// all zeros before that, and the fractions are vacuously 1.0).
+    pub fn slo_attainment(&self) -> SloAttainment {
+        let m = self.inner.lock().unwrap();
+        SloAttainment {
+            requests: m.slo_requests,
+            ttft_ok: m.slo_ttft_ok,
+            tpot_ok: m.slo_tpot_ok,
+        }
     }
 
     /// Highest number of requests decoding concurrently in any step.
@@ -394,6 +507,86 @@ mod tests {
         m.record_disk(2, 0, 1, 0);
         m.record_disk(0, 2, 0, 1);
         assert_eq!(m.disk_totals(), (2, 2, 1, 1));
+    }
+
+    #[test]
+    fn empty_slo_math_is_documented_zeros_not_nan() {
+        // documented values: no samples → all-zero percentiles, zero
+        // attainment counters, vacuous 1.0 fractions — no NaN, no panic
+        let m = ServeMetrics::new();
+        assert_eq!(m.ttft_stats(), LatencyPercentiles::default());
+        assert_eq!(m.tpot_stats(), LatencyPercentiles::default());
+        let a = m.slo_attainment();
+        assert_eq!(a, SloAttainment::default());
+        assert_eq!(a.ttft_frac(), 1.0);
+        assert_eq!(a.tpot_frac(), 1.0);
+        assert!(!a.ttft_frac().is_nan() && !a.tpot_frac().is_nan());
+    }
+
+    #[test]
+    fn single_sample_percentiles_are_that_sample() {
+        let m = ServeMetrics::new();
+        m.set_slo(SloTargets { ttft_s: 0.5, tpot_s: 0.1 });
+        m.record_ttft_tpot(0.25, Some(0.05));
+        let t = m.ttft_stats();
+        assert_eq!((t.mean, t.p50, t.p95, t.p99), (0.25, 0.25, 0.25, 0.25));
+        let p = m.tpot_stats();
+        assert_eq!((p.p50, p.p99), (0.05, 0.05));
+        let a = m.slo_attainment();
+        assert_eq!((a.requests, a.ttft_ok, a.tpot_ok), (1, 1, 1));
+    }
+
+    #[test]
+    fn tied_samples_collapse_to_the_tie() {
+        let m = ServeMetrics::new();
+        for _ in 0..5 {
+            m.record_ttft_tpot(0.2, Some(0.04));
+        }
+        let t = m.ttft_stats();
+        assert_eq!((t.mean, t.p50, t.p95, t.p99), (0.2, 0.2, 0.2, 0.2));
+        let p = m.tpot_stats();
+        assert_eq!((p.mean, p.p95), (0.04, 0.04));
+    }
+
+    #[test]
+    fn samples_merge_across_batches() {
+        // retirement happens batch by batch; the summaries must aggregate
+        // across those calls identically to one big batch
+        let a = ServeMetrics::new();
+        let b = ServeMetrics::new();
+        let samples = [0.1, 0.4, 0.2, 0.3, 0.9, 0.05, 0.6, 0.7];
+        for x in samples {
+            a.record_ttft_tpot(x, Some(x / 10.0));
+        }
+        for chunk in samples.chunks(3) {
+            for x in chunk {
+                b.record_ttft_tpot(*x, Some(*x / 10.0));
+            }
+        }
+        let (ta, tb) = (a.ttft_stats(), b.ttft_stats());
+        assert!((ta.mean - tb.mean).abs() < 1e-12);
+        assert_eq!((ta.p50, ta.p95, ta.p99), (tb.p50, tb.p95, tb.p99));
+        let (pa, pb) = (a.tpot_stats(), b.tpot_stats());
+        assert_eq!((pa.p50, pa.p99), (pb.p50, pb.p99));
+    }
+
+    #[test]
+    fn slo_counters_score_against_the_targets() {
+        let m = ServeMetrics::new();
+        // recorded before arming: feeds percentiles, not attainment
+        m.record_ttft_tpot(9.0, Some(9.0));
+        m.set_slo(SloTargets { ttft_s: 0.5, tpot_s: 0.1 });
+        m.record_ttft_tpot(0.4, Some(0.05)); // both met
+        m.record_ttft_tpot(0.6, Some(0.05)); // ttft missed
+        m.record_ttft_tpot(0.4, Some(0.2)); // tpot missed
+        m.record_ttft_tpot(0.4, None); // single token: tpot vacuously met
+        let a = m.slo_attainment();
+        assert_eq!(a.requests, 4);
+        assert_eq!(a.ttft_ok, 3);
+        assert_eq!(a.tpot_ok, 3);
+        assert!((a.ttft_frac() - 0.75).abs() < 1e-12);
+        assert!((a.tpot_frac() - 0.75).abs() < 1e-12);
+        assert!(!m.ttft_stats().p99.is_nan());
     }
 
     #[test]

@@ -41,7 +41,7 @@ mod server;
 
 pub use batcher::Batcher;
 pub use continuous::{ContinuousConfig, ContinuousServer, TieredKvConfig};
-pub use metrics::{ServeMetrics, StepBudgetTotals};
+pub use metrics::{LatencyPercentiles, ServeMetrics, SloAttainment, StepBudgetTotals};
 pub use request::{Request, RequestState, Response};
 pub use router::Router;
 pub use server::{ResponseHandle, Server, ServerConfig};

@@ -28,11 +28,21 @@ pub struct Request {
     pub id: u64,
     pub prompt: String,
     pub gen_len: usize,
+    /// Trace arrival step: admission holds the request until the serving
+    /// loop's step clock reaches this step, so a replayed trace's arrival
+    /// schedule is honoured independent of wall time.  `None` (the
+    /// wall-clock path) is eligible immediately.
+    pub arrival_step: Option<usize>,
 }
 
 impl Request {
     pub fn new(id: u64, prompt: &str, gen_len: usize) -> Self {
-        Request { id, prompt: prompt.to_string(), gen_len }
+        Request { id, prompt: prompt.to_string(), gen_len, arrival_step: None }
+    }
+
+    /// A step-indexed request (trace replay).
+    pub fn at_step(id: u64, prompt: &str, gen_len: usize, step: usize) -> Self {
+        Request { id, prompt: prompt.to_string(), gen_len, arrival_step: Some(step) }
     }
 }
 

@@ -86,6 +86,10 @@ pub struct EvictionSimConfig {
     /// Fraction of a spill writeback's NVMe time the step loop cannot
     /// hide (async-writeback residue, like `demote_serial_frac`).
     pub spill_serial_frac: f64,
+    /// Arrival round per sequence (trace replay): sequence `i` is not
+    /// offered to admission before round `arrivals[i]`.  Empty — the
+    /// synthetic-workload default — offers everything at round 0.
+    pub arrivals: Vec<usize>,
 }
 
 impl EvictionSimConfig {
@@ -112,6 +116,49 @@ impl EvictionSimConfig {
             disk_bytes: 0,
             nvme_factor: crate::transfer::NVME_BANDWIDTH_FACTOR,
             spill_serial_frac: 0.25,
+            arrivals: Vec::new(),
+        }
+    }
+
+    /// Trace replay: one sim sequence per request of a generated workload
+    /// [`Trace`](crate::workload::Trace), arrival-gated at its step and
+    /// stepping every round (`period` 1) — the analytic twin of
+    /// [`ContinuousServer::submit_trace`](crate::coordinator::ContinuousServer::submit_trace),
+    /// sharing the serving loop's decode-step clock.  Capacities default
+    /// to ample (everything fits); narrow them by hand or read a declared
+    /// chain via [`with_topology`](EvictionSimConfig::with_topology) to
+    /// make reclamation observable.
+    pub fn from_trace(cost: CostModel, trace: &crate::workload::Trace) -> Self {
+        let bytes_per_token: u64 = 3 * 4 * 256 * 4; // K/V/X × layers × hidden × f32
+        let seqs: Vec<SimSeq> = trace
+            .requests
+            .iter()
+            .map(|r| SimSeq {
+                prompt: r.prompt_tokens.max(1),
+                gen: r.gen_tokens.max(1),
+                period: 1,
+            })
+            .collect();
+        let arrivals: Vec<usize> = trace.requests.iter().map(|r| r.step).collect();
+        let total: u64 = seqs
+            .iter()
+            .map(|s| (s.prompt + s.gen) as u64 * bytes_per_token)
+            .sum();
+        let span = trace.max_step() + trace.total_gen_tokens() as usize + 64;
+        EvictionSimConfig {
+            cost,
+            capacity_bytes: total.max(1),
+            block_tokens: 16,
+            bytes_per_token,
+            seqs,
+            max_rounds: span,
+            gpu_bytes: 0,
+            wire_ratio: 1.0,
+            demote_serial_frac: 0.25,
+            disk_bytes: 0,
+            nvme_factor: crate::transfer::NVME_BANDWIDTH_FACTOR,
+            spill_serial_frac: 0.25,
+            arrivals,
         }
     }
 
@@ -199,6 +246,11 @@ pub struct EvictionSimReport {
     pub readthrough_s: f64,
     pub peak_concurrency: usize,
     pub completed: usize,
+    /// Per-sequence admission delay in rounds (admission round − arrival
+    /// round), in sequence order, admitted sequences only.  The analytic
+    /// queueing-delay term of TTFT: percentile it for the workload
+    /// bench's p99-TTFT-in-steps column.
+    pub admit_delay_steps: Vec<usize>,
 }
 
 struct SeqState {
@@ -239,6 +291,11 @@ pub fn simulate_eviction(cfg: &EvictionSimConfig, policy: &dyn EvictPolicy) -> E
         })
         .collect();
 
+    // arrival gating (trace replay): sequence i is invisible to admission
+    // before round arrive(i); the synthetic workloads leave this empty
+    let arrive = |i: usize| cfg.arrivals.get(i).copied().unwrap_or(0);
+    let mut admit_round: Vec<Option<usize>> = vec![None; cfg.seqs.len()];
+
     let mut clock = 0u64;
     let mut steps = 0u64;
     let mut wall = 0.0f64;
@@ -259,7 +316,7 @@ pub fn simulate_eviction(cfg: &EvictionSimConfig, policy: &dyn EvictPolicy) -> E
         let used: u64 = st.iter().map(|s| s.held_bytes).sum();
         let mut free = cfg.capacity_bytes.saturating_sub(used);
         for i in 0..st.len() {
-            if st[i].admitted || st[i].done {
+            if st[i].admitted || st[i].done || round < arrive(i) {
                 continue;
             }
             let need = (cfg.seqs[i].prompt + cfg.seqs[i].gen) as u64 * bpt;
@@ -362,6 +419,7 @@ pub fn simulate_eviction(cfg: &EvictionSimConfig, policy: &dyn EvictPolicy) -> E
                 st[i].admitted = true;
                 st[i].held_bytes = need;
                 st[i].s = cfg.seqs[i].prompt;
+                admit_round[i] = Some(round);
             } else {
                 break; // head-of-line backpressure
             }
@@ -508,6 +566,11 @@ pub fn simulate_eviction(cfg: &EvictionSimConfig, policy: &dyn EvictPolicy) -> E
         readthrough_s: readthrough,
         peak_concurrency: peak,
         completed: st.iter().filter(|s| s.done).count(),
+        admit_delay_steps: admit_round
+            .iter()
+            .enumerate()
+            .filter_map(|(i, r)| r.map(|r| r - arrive(i)))
+            .collect(),
     }
 }
 
@@ -686,6 +749,49 @@ mod tests {
         assert_eq!(a.steps, b.steps);
         assert_eq!(b.demotions, 0, "ample tier never evicts");
         assert!(b.wall_s < a.wall_s, "residency must cut step cost: {} vs {}", b.wall_s, a.wall_s);
+    }
+
+    #[test]
+    fn staggered_arrivals_gate_admission_without_changing_work() {
+        let mut base = EvictionSimConfig::skewed_reuse(cost());
+        base.seqs = vec![SimSeq { prompt: 32, gen: 8, period: 1 }; 4];
+        base.capacity_bytes = 4 * 40 * base.bytes_per_token; // ample
+        let all_at_once = simulate_eviction(&base, &Lru);
+        assert_eq!(all_at_once.peak_concurrency, 4);
+        assert_eq!(all_at_once.admit_delay_steps, vec![0; 4]);
+
+        // gaps wider than a sequence lifetime: lifetimes never overlap
+        let mut gated = base.clone();
+        gated.arrivals = vec![0, 40, 80, 120];
+        let staggered = simulate_eviction(&gated, &Lru);
+        assert_eq!(staggered.completed, 4);
+        assert_eq!(
+            staggered.steps, all_at_once.steps,
+            "arrival time moves work, not its amount"
+        );
+        assert_eq!(staggered.peak_concurrency, 1);
+        // ample capacity admits at the arrival round exactly
+        assert_eq!(staggered.admit_delay_steps, vec![0; 4]);
+    }
+
+    #[test]
+    fn from_trace_replays_the_workload_arrival_schedule() {
+        let trace = crate::workload::WorkloadSpec::bursty_chat().generate();
+        let cfg = EvictionSimConfig::from_trace(cost(), &trace);
+        assert_eq!(cfg.seqs.len(), trace.requests.len());
+        assert_eq!(
+            cfg.arrivals,
+            trace.requests.iter().map(|r| r.step).collect::<Vec<_>>()
+        );
+        let r = simulate_eviction(&cfg, &Lru);
+        assert_eq!(r.completed, trace.requests.len(), "ample defaults finish the trace");
+        assert_eq!(r.steps, trace.total_gen_tokens(), "one decode step per generated token");
+        assert_eq!(r.evictions, 0);
+        assert!(
+            r.admit_delay_steps.iter().all(|&d| d == 0),
+            "ample capacity admits on arrival: {:?}",
+            r.admit_delay_steps
+        );
     }
 
     #[test]

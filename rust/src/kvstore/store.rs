@@ -222,6 +222,12 @@ pub struct StoreStats {
     /// Blocks parked on the disk tier directly at admission (no KV moved —
     /// a brand-new block is reservation only).
     pub disk_admissions: u64,
+    /// Stranded resident blocks reclaimed by the per-step sweep: settled
+    /// gpu blocks left *below* a non-resident block (the sequence grew but
+    /// a full gpu tier kept its new top block cold), where the eviction
+    /// walk — which only sees the bottom of the *top* resident run — can
+    /// never reach them.
+    pub stranded_reclaims: u64,
 }
 
 /// The tiered block-granular KV store.
@@ -660,6 +666,7 @@ impl KvStore {
     pub fn pump_migrations(&mut self, budget_bytes: u64) -> usize {
         self.step += 1; // the cool-down timebase: one tick per serving step
         self.spill_to_watermark();
+        self.sweep_stranded_residents();
         self.mig.begin_step(budget_bytes);
         self.mig.pump()
     }
@@ -776,30 +783,74 @@ impl KvStore {
             return false;
         }
         let v = cands[self.policy.demote_victim(&cands)];
-        let Some(bytes) = self.seqs.get(&v.id.seq).map(|e| e.block_bytes) else { return false };
+        self.demote_block(v.id.seq, v.id.idx)
+    }
+
+    /// Issue the asynchronous demotion of one settled gpu block: the
+    /// destination reservation is taken in a lower tier — pinned, then
+    /// dram, then disk as the last resort — the gpu bytes free
+    /// **immediately**, and the writeback rides its wire under the step
+    /// budget.  Returns false when no tier below has room.
+    fn demote_block(&mut self, seq: u64, idx: usize) -> bool {
+        let Some(bytes) = self.seqs.get(&seq).map(|e| e.block_bytes) else { return false };
+        let bid = BlockId { seq, idx };
         let req = self
             .mig
-            .request(v.id, Tier::GpuHbm, Tier::Pinned, bytes, MigrationClass::Demote)
+            .request(bid, Tier::GpuHbm, Tier::Pinned, bytes, MigrationClass::Demote)
             .map(|id| (id, Tier::Pinned))
             .or_else(|| {
                 self.mig
-                    .request(v.id, Tier::GpuHbm, Tier::CpuDram, bytes, MigrationClass::Demote)
+                    .request(bid, Tier::GpuHbm, Tier::CpuDram, bytes, MigrationClass::Demote)
                     .map(|id| (id, Tier::CpuDram))
             })
             .or_else(|| {
                 self.mig
-                    .request(v.id, Tier::GpuHbm, Tier::DiskNvme, bytes, MigrationClass::Demote)
+                    .request(bid, Tier::GpuHbm, Tier::DiskNvme, bytes, MigrationClass::Demote)
                     .map(|id| (id, Tier::DiskNvme))
             });
         let Some((id, to)) = req else { return false };
         let step = self.step;
-        let Some(e) = self.seqs.get_mut(&v.id.seq) else { return false };
-        let b = &mut e.blocks[v.id.idx];
+        let Some(e) = self.seqs.get_mut(&seq) else { return false };
+        let b = &mut e.blocks[idx];
         b.guard = None; // gpu reservation released *now*: no link wait
         b.pending = Some(PendingRef { id, to });
         b.demoted_at = Some(step);
         self.stats.demotions += 1;
         true
+    }
+
+    /// Reclaim **stranded** residents: settled gpu blocks sitting below a
+    /// non-resident block.  The eviction walk only ever demotes the bottom
+    /// of a sequence's *top* resident run, so a block that stays resident
+    /// while the sequence grows past it — tokens advanced but a full gpu
+    /// tier kept the new top block cold — is unreachable to it, and its
+    /// gpu bytes would be pinned until the sequence retires.  (It is not
+    /// counted by [`KvStore::gpu_resident_tokens`] either, so it shrinks
+    /// no transfer term: pure waste.)  The sweep demotes such blocks
+    /// asynchronously, exactly like an eviction, and runs once per
+    /// [`KvStore::pump_migrations`] step.
+    fn sweep_stranded_residents(&mut self) {
+        let bt = self.block_tokens;
+        let mut stranded: Vec<(u64, usize)> = Vec::new();
+        for (&sid, e) in self.seqs.iter() {
+            let mut suffix_ok = true;
+            for rb in e.runs(bt) {
+                match rb.class {
+                    // the same run-extension rule as poll_landed's install
+                    // gate: an in-flight promotion will land and join the
+                    // suffix
+                    BlockClass::Resident | BlockClass::PromotionInFlight if suffix_ok => {}
+                    BlockClass::Resident => stranded.push((sid, rb.idx)),
+                    _ => suffix_ok = false,
+                }
+            }
+        }
+        for (sid, idx) in stranded {
+            if !self.demote_block(sid, idx) {
+                break; // no room below: leave the rest for a later step
+            }
+            self.stats.stranded_reclaims += 1;
+        }
     }
 
     /// Capacity-aware spill: while dram occupancy sits above the
@@ -1169,6 +1220,43 @@ mod tests {
         s.pump_migrations(0); // step 3
         assert_eq!(s.begin_promotions(1, 1, MigrationClass::Promote), 1);
         assert!(s.stats().demotions >= 2);
+    }
+
+    #[test]
+    fn stranded_resident_below_a_cold_top_block_is_swept_back() {
+        // gpu fits one block; seq 1's first block flips resident, then the
+        // sequence grows and the full gpu tier keeps the new top block
+        // cold: the settled resident block now sits *below* a never-flipped
+        // block, where the eviction walk (bottom of the *top* resident run
+        // only) can never reach it
+        let mut s = store(1, 2, 4);
+        s.admit(1, 4 * BB, 4).unwrap();
+        s.touch(1, 16, 0);
+        assert_eq!(s.sync_device_suffix(1, 16), 16);
+        s.touch(1, 32, 0);
+        assert_eq!(s.sync_device_suffix(1, 32), 0, "gpu full: the new top block stays cold");
+        assert_eq!(s.tier_used(Tier::GpuHbm), BB, "…but the old resident block holds gpu bytes");
+
+        // the regression: another sequence cannot promote — the walk finds
+        // no victim, yet the tier is "full" of unreachable bytes
+        s.admit(2, BB, 1).unwrap();
+        s.touch(2, 16, 0);
+        assert_eq!(s.begin_promotions(2, 1, MigrationClass::Promote), 0);
+        assert_eq!(s.stats().demotions, 0, "eviction never saw the stranded block");
+        assert_eq!(s.tier_used(Tier::GpuHbm), BB, "gpu bytes stranded");
+
+        // the per-step sweep demotes the stranded block like any other
+        // async eviction: gpu bytes free at issuance
+        s.pump_migrations(u64::MAX);
+        assert_eq!(s.stats().stranded_reclaims, 1);
+        assert_eq!(s.stats().demotions, 1);
+        assert_eq!(s.tier_used(Tier::GpuHbm), 0);
+        assert_eq!(s.begin_promotions(2, 1, MigrationClass::Promote), 1, "tier reclaimed");
+        assert!(pump_and_land(&mut s, 2) >= 2, "demotion writeback + promotion land");
+        assert_eq!(s.gpu_resident_tokens(2), 16);
+        // the sweep is idempotent: nothing left to reclaim
+        s.pump_migrations(u64::MAX);
+        assert_eq!(s.stats().stranded_reclaims, 1);
     }
 
     #[test]

@@ -44,6 +44,12 @@
 //! * [`sim`] — discrete-event simulator of the paper's testbeds (A100 +
 //!   PCIe 4.0 x16, RTX 5000 + x8) used to regenerate every table and figure
 //!   of the evaluation at paper scale.
+//! * [`workload`] — deterministic trace generator (bursty/diurnal arrival
+//!   processes, heavy-tailed context lengths, chat think-time gaps, RAG
+//!   mixes as a declarative [`workload::WorkloadSpec`]); the same seeded
+//!   trace replays through the continuous server (step-indexed admission)
+//!   and the analytic kvstore sim, and `ServeMetrics` scores the served
+//!   run against the mix's TTFT/TPOT SLOs.
 //!
 //! Python/JAX/Pallas participate only at build time (`make artifacts`); the
 //! request path is pure Rust.
@@ -65,6 +71,7 @@ pub mod scheduler;
 pub mod sim;
 pub mod transfer;
 pub mod util;
+pub mod workload;
 
 pub use config::{HardwareConfig, ModelConfig, WorkloadConfig};
 pub use scheduler::{SchedulePolicy, Scheduler, SplitSolver};

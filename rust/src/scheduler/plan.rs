@@ -9,10 +9,10 @@
 //! floor, and the per-tier resident prefix spans — and folds the transfer
 //! term over however many hops the planner's [`TierTopology`] declares.
 //! The 3-tier and 4-tier closed forms the scheduler used to expose as
-//! separate entry points are now just 0- and 1-span instances of the same
-//! fold (thin `#[deprecated]` shims remain for one PR); a deeper chain — a
-//! second storage rung, a sharded worker's remote hop — is a data change,
-//! not a planner fork.
+//! separate entry points are just 0- and 1-span instances of the same
+//! fold (the test module keeps them alive as oracle transcriptions); a
+//! deeper chain — a second storage rung, a sharded worker's remote hop —
+//! is a data change, not a planner fork.
 
 use super::topology::TierTopology;
 use super::{CostModel, SchedulePolicy, Split, SplitSolver};
@@ -257,8 +257,7 @@ impl Planner {
 
     /// The transfer fold behind [`Planner::plan_batch`], over spans whose
     /// hop factors are already resolved (extra interconnect-equivalents
-    /// per token; the deprecated shims feed explicit factors through
-    /// here).
+    /// per token).
     fn plan_spans(
         &self,
         lane_s_primes: &[usize],
@@ -347,42 +346,6 @@ impl Planner {
             baseline_s,
             link_slack_bytes: self.slack_bytes(predicted_s, baseline_s),
         }
-    }
-
-    /// [`Planner::plan_batch`] for a group over the three-tier store:
-    /// `resident` device-suffix tokens leave the transfer term and
-    /// `l_floor` dropped-prefix tokens floor the split.
-    #[deprecated(
-        since = "0.1.0",
-        note = "describe the step to `Planner::plan_batch` via `PlanInput` instead"
-    )]
-    pub fn plan_batch_tiered(
-        &self,
-        lane_s_primes: &[usize],
-        resident: usize,
-        l_floor: usize,
-    ) -> StepPlan {
-        self.plan_spans(lane_s_primes, resident, l_floor, &[])
-    }
-
-    /// [`Planner::plan_batch`] for a group over the four-tier store:
-    /// `disk_prefix` tokens directly above the floor cost `nvme_factor`
-    /// extra interconnect-equivalents per token to fetch this step.
-    #[deprecated(
-        since = "0.1.0",
-        note = "attach a `TierTopology` via `Planner::with_topology` and pass a \
-                `PlanInput` prefix span to `Planner::plan_batch` instead (a span \
-                without a topology panics: the span names a rung of the chain)"
-    )]
-    pub fn plan_batch_four_tier(
-        &self,
-        lane_s_primes: &[usize],
-        resident: usize,
-        l_floor: usize,
-        disk_prefix: usize,
-        nvme_factor: f64,
-    ) -> StepPlan {
-        self.plan_spans(lane_s_primes, resident, l_floor, &[(nvme_factor, disk_prefix)])
     }
 
     /// The split-point trajectory over a whole generation (Fig 12): one
@@ -736,21 +699,6 @@ mod tests {
     }
 
     #[test]
-    fn deprecated_shims_delegate_to_the_fold() {
-        #![allow(deprecated)]
-        let (p, disk) = four_tier_planner(SchedulePolicy::RowByRow, 4.0);
-        let lanes = vec![128usize; 2];
-        let a = p.plan_batch_tiered(&lanes, 16, 32);
-        let b = p.plan_batch(&PlanInput::new(lanes.clone()).resident(16).dropped_floor(32));
-        assert_eq!(a, b);
-        let a = p.plan_batch_four_tier(&lanes, 0, 32, 32, 4.0);
-        let b = p.plan_batch(
-            &PlanInput::new(lanes).dropped_floor(32).prefix(disk, 32),
-        );
-        assert_eq!(a, b);
-    }
-
-    #[test]
     fn slack_prediction_tracks_the_split_savings() {
         // a topology-attached planner converts baseline − predicted into
         // primary-wire bytes; without a topology the field stays 0
@@ -798,12 +746,13 @@ mod tests {
 
     // -- plan equivalence: the topology fold vs the legacy closed forms ----
     //
-    // The three legacy entry points (`plan_batch` over bare lanes,
-    // `plan_batch_tiered`, `plan_batch_four_tier`) are preserved below as
+    // The three legacy entry points the scheduler once exposed (bare-lane,
+    // 3-tier, 4-tier closed forms — since deleted) are preserved below as
     // standalone oracle transcriptions of their pre-topology bodies.  The
     // property pins the single topology-driven `plan_batch` to reproduce
     // every one of them bit-for-bit when given the equivalent 2/3/4-tier
-    // topologies — the acceptance gate for deleting the closed forms.
+    // topologies, so the fold can never silently drift from the paper's
+    // closed forms.
 
     fn oracle_tiered(
         p: &Planner,

@@ -4,7 +4,7 @@
 //! pipeline, but hardware shapes keep growing: PR 2 added host tiers,
 //! PR 4 an NVMe disk tier, and the roadmap wants sharded workers.  Every
 //! one of those used to fork the planner's closed form into a new entry
-//! point (`plan_batch` / `plan_batch_tiered` / `plan_batch_four_tier`).
+//! point (a bare-lane, a 3-tier and a 4-tier variant of `plan_batch`).
 //! The KV-offloading bottleneck analyses model the hierarchy as an
 //! arbitrary chain of capacity/bandwidth stages instead — so this module
 //! makes the chain **data**:

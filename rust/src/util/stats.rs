@@ -64,6 +64,10 @@ impl Summary {
         self.percentile(50.0)
     }
 
+    pub fn p95(&self) -> f64 {
+        self.percentile(95.0)
+    }
+
     pub fn p99(&self) -> f64 {
         self.percentile(99.0)
     }
@@ -110,6 +114,7 @@ mod tests {
             s.add(x as f64);
         }
         assert!((s.p50() - 50.5).abs() < 1e-9);
+        assert!((s.p95() - 95.05).abs() < 1e-9);
         assert!((s.percentile(0.0) - 1.0).abs() < 1e-9);
         assert!((s.percentile(100.0) - 100.0).abs() < 1e-9);
     }

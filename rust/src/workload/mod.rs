@@ -1,0 +1,561 @@
+//! Deterministic trace-driven workload generation (the serving harness's
+//! load side).
+//!
+//! Every e2e before this module drove the serving loop with hand-rolled
+//! uniform request lists; the offloading-bottleneck analysis in PAPERS.md
+//! shows the CPU–GPU transfer regime flips with arrival burstiness and
+//! context-length tails, so watermarks, cooldowns and spill floors tuned
+//! against uniform load are tuned against the wrong regime.  A
+//! [`WorkloadSpec`] declares a mix — an arrival process
+//! ([`Arrival`]: uniform / bursty / diurnal), traffic classes with
+//! heavy-tailed context lengths ([`LenDist::HeavyTail`], a bounded
+//! Pareto) and chat think-time gaps — and [`WorkloadSpec::generate`]
+//! lowers it with a seeded [`Prng`] into a [`Trace`]: a flat,
+//! step-indexed request list.
+//!
+//! The same trace drives both sides of the validation story:
+//!
+//! * **served** — [`ContinuousServer::submit_trace`](crate::coordinator::ContinuousServer::submit_trace)
+//!   replays it against the real engine (admission honours each request's
+//!   arrival step), and [`ServeMetrics`](crate::coordinator::ServeMetrics)
+//!   reports TTFT/TPOT percentiles and attainment against the spec's
+//!   [`SloTargets`];
+//! * **analytic** — [`EvictionSimConfig::from_trace`](crate::kvstore::EvictionSimConfig::from_trace)
+//!   replays it through the closed-form eviction/spill model, and a tier-1
+//!   e2e asserts the two agree on step counts, concurrency and KV traffic.
+//!
+//! Generation is bit-deterministic: the same spec + seed yields a
+//! byte-identical serialized trace (the JSON writer's `BTreeMap` key order
+//! does the rest), and traces round-trip losslessly through
+//! [`Trace::to_json`] / [`Trace::from_json`].
+//!
+//! ```
+//! use kvpr::workload::{Arrival, LenDist, SloTargets, Trace, TrafficClass, WorkloadSpec};
+//!
+//! // a small bursty chat mix: pairs of arrivals, then a 3-step lull
+//! let spec = WorkloadSpec {
+//!     name: "doc_bursty".into(),
+//!     seed: 7,
+//!     requests: 6,
+//!     arrivals: Arrival::Bursty { burst: 2, gap: 3 },
+//!     classes: vec![TrafficClass {
+//!         name: "chat".into(),
+//!         weight: 1.0,
+//!         prompt: LenDist::HeavyTail { floor: 16, alpha: 1.5, cap: 64 },
+//!         gen: LenDist::Uniform { lo: 4, hi: 8 },
+//!         think: LenDist::Fixed { steps: 0 },
+//!     }],
+//!     slo: SloTargets::default(),
+//! };
+//! let trace = spec.generate();
+//! assert_eq!(trace.requests.len(), 6);
+//! assert!(trace.requests.windows(2).all(|w| w[0].step <= w[1].step));
+//! // byte-identical regeneration + lossless JSON round-trip
+//! assert_eq!(spec.generate().to_json().to_string(), trace.to_json().to_string());
+//! let back = Trace::from_json_str(&trace.to_json().to_string()).unwrap();
+//! assert_eq!(back, trace);
+//! ```
+
+use crate::util::json::Json;
+use crate::util::prng::Prng;
+
+/// Arrival process of a workload mix, in event-loop **steps** (the serving
+/// loop's decode-step clock, not wall time — the analytic sim shares the
+/// same clock, which is what makes sim-vs-served agreement assertable).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Arrival {
+    /// One request every `every` steps.
+    Uniform { every: usize },
+    /// `burst` back-to-back arrivals, then `gap` idle steps.
+    Bursty { burst: usize, gap: usize },
+    /// Sinusoidal rate modulation over a `period`-step "day": the
+    /// inter-arrival gap swings from `min_gap` at the peak to `max_gap`
+    /// in the trough.
+    Diurnal { period: usize, min_gap: usize, max_gap: usize },
+}
+
+/// Token-length (or think-step) distribution.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LenDist {
+    /// Always `steps` (named for the think-time use; it is a token count
+    /// in the prompt/gen positions).
+    Fixed { steps: usize },
+    /// Uniform over the inclusive range `[lo, hi]`.
+    Uniform { lo: usize, hi: usize },
+    /// Bounded Pareto: floor / (1 − u)^(1/alpha), capped at `cap` — the
+    /// heavy-tailed context-length shape of production chat/RAG traffic.
+    HeavyTail { floor: usize, alpha: f64, cap: usize },
+}
+
+impl LenDist {
+    fn sample(&self, rng: &mut Prng) -> usize {
+        match *self {
+            LenDist::Fixed { steps } => steps,
+            LenDist::Uniform { lo, hi } => {
+                if hi <= lo {
+                    lo
+                } else {
+                    lo + rng.index(hi - lo + 1)
+                }
+            }
+            LenDist::HeavyTail { floor, alpha, cap } => {
+                let u = rng.next_f64();
+                let x = floor.max(1) as f64 / (1.0 - u).powf(1.0 / alpha.max(1e-9));
+                (x as usize).clamp(floor, cap.max(floor))
+            }
+        }
+    }
+}
+
+/// One component of a mix: a weighted traffic class with its own length
+/// distributions and a chat think-time gap (extra idle steps the user
+/// "types" before the next arrival).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrafficClass {
+    pub name: String,
+    /// Relative sampling weight within the mix (need not sum to 1).
+    pub weight: f64,
+    /// Prompt (context) length in tokens.
+    pub prompt: LenDist,
+    /// Generation length in tokens.
+    pub gen: LenDist,
+    /// Think-time steps appended to the arrival cursor after a request of
+    /// this class.
+    pub think: LenDist,
+}
+
+/// Per-mix service-level objectives the SLO table is scored against.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloTargets {
+    /// Time-to-first-token target, seconds.
+    pub ttft_s: f64,
+    /// Time-per-output-token target, seconds.
+    pub tpot_s: f64,
+}
+
+impl Default for SloTargets {
+    fn default() -> Self {
+        SloTargets { ttft_s: 0.5, tpot_s: 0.1 }
+    }
+}
+
+/// Declarative workload mix: arrival process + traffic classes + SLOs.
+/// [`generate`](WorkloadSpec::generate) lowers it deterministically into a
+/// [`Trace`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadSpec {
+    pub name: String,
+    pub seed: u64,
+    /// Requests in the trace.
+    pub requests: usize,
+    pub arrivals: Arrival,
+    pub classes: Vec<TrafficClass>,
+    pub slo: SloTargets,
+}
+
+impl WorkloadSpec {
+    /// Chat traffic arriving in bursts (the "everyone hits enter at once"
+    /// shape), with a small long-context RAG admixture.
+    pub fn bursty_chat() -> Self {
+        WorkloadSpec {
+            name: "bursty_chat".into(),
+            seed: 0xb0c1,
+            requests: 32,
+            arrivals: Arrival::Bursty { burst: 4, gap: 6 },
+            classes: vec![
+                TrafficClass {
+                    name: "chat".into(),
+                    weight: 0.85,
+                    prompt: LenDist::HeavyTail { floor: 24, alpha: 1.5, cap: 96 },
+                    gen: LenDist::Uniform { lo: 4, hi: 16 },
+                    think: LenDist::Uniform { lo: 0, hi: 2 },
+                },
+                TrafficClass {
+                    name: "rag".into(),
+                    weight: 0.15,
+                    prompt: LenDist::HeavyTail { floor: 64, alpha: 1.1, cap: 120 },
+                    gen: LenDist::Uniform { lo: 2, hi: 8 },
+                    think: LenDist::Fixed { steps: 0 },
+                },
+            ],
+            slo: SloTargets { ttft_s: 0.5, tpot_s: 0.1 },
+        }
+    }
+
+    /// Mixed chat/RAG traffic under a sinusoidal "day": dense arrivals at
+    /// the peak, long lulls in the trough.
+    pub fn diurnal_mixed() -> Self {
+        WorkloadSpec {
+            name: "diurnal_mixed".into(),
+            seed: 0xd1c2,
+            requests: 32,
+            arrivals: Arrival::Diurnal { period: 64, min_gap: 1, max_gap: 8 },
+            classes: vec![
+                TrafficClass {
+                    name: "chat".into(),
+                    weight: 0.7,
+                    prompt: LenDist::HeavyTail { floor: 24, alpha: 1.4, cap: 96 },
+                    gen: LenDist::Uniform { lo: 4, hi: 12 },
+                    think: LenDist::Uniform { lo: 0, hi: 3 },
+                },
+                TrafficClass {
+                    name: "rag".into(),
+                    weight: 0.3,
+                    prompt: LenDist::HeavyTail { floor: 48, alpha: 1.2, cap: 120 },
+                    gen: LenDist::Uniform { lo: 2, hi: 8 },
+                    think: LenDist::Fixed { steps: 0 },
+                },
+            ],
+            slo: SloTargets { ttft_s: 0.8, tpot_s: 0.1 },
+        }
+    }
+
+    /// Long-context retrieval traffic: steady arrivals, fat prompt tail,
+    /// short generations — the KV-capacity stressor.
+    pub fn rag_long_context() -> Self {
+        WorkloadSpec {
+            name: "rag_long_context".into(),
+            seed: 0x4a63,
+            requests: 24,
+            arrivals: Arrival::Uniform { every: 2 },
+            classes: vec![TrafficClass {
+                name: "rag".into(),
+                weight: 1.0,
+                prompt: LenDist::HeavyTail { floor: 64, alpha: 1.05, cap: 480 },
+                gen: LenDist::Uniform { lo: 2, hi: 6 },
+                think: LenDist::Fixed { steps: 0 },
+            }],
+            slo: SloTargets { ttft_s: 1.0, tpot_s: 0.15 },
+        }
+    }
+
+    /// The named mixes the bench and example binaries iterate over.
+    pub fn mix_names() -> &'static [&'static str] {
+        &["bursty_chat", "diurnal_mixed", "rag_long_context"]
+    }
+
+    /// Look up a named mix ([`mix_names`](WorkloadSpec::mix_names)).
+    pub fn named(name: &str) -> Option<Self> {
+        match name {
+            "bursty_chat" => Some(Self::bursty_chat()),
+            "diurnal_mixed" => Some(Self::diurnal_mixed()),
+            "rag_long_context" => Some(Self::rag_long_context()),
+            _ => None,
+        }
+    }
+
+    /// Lower the spec into a concrete trace.  Deterministic: the same spec
+    /// (same seed included) always produces the same trace, byte for byte
+    /// once serialized.
+    pub fn generate(&self) -> Trace {
+        assert!(!self.classes.is_empty(), "a workload mix needs at least one class");
+        let total_w: f64 = self.classes.iter().map(|c| c.weight.max(0.0)).sum();
+        assert!(total_w > 0.0, "class weights must not all be zero");
+        let mut rng = Prng::new(self.seed);
+        let mut step = 0usize;
+        let mut burst_pos = 0usize;
+        let mut requests = Vec::with_capacity(self.requests);
+        for id in 0..self.requests {
+            // weighted class pick
+            let mut x = rng.next_f64() * total_w;
+            let mut ci = self.classes.len() - 1;
+            for (i, c) in self.classes.iter().enumerate() {
+                x -= c.weight.max(0.0);
+                if x < 0.0 {
+                    ci = i;
+                    break;
+                }
+            }
+            let c = &self.classes[ci];
+            requests.push(TraceRequest {
+                id: id as u64,
+                step,
+                class: c.name.clone(),
+                prompt_tokens: c.prompt.sample(&mut rng).max(1),
+                gen_tokens: c.gen.sample(&mut rng).max(1),
+            });
+            // advance the arrival cursor for the next request
+            let gap = match self.arrivals {
+                Arrival::Uniform { every } => every,
+                Arrival::Bursty { burst, gap } => {
+                    burst_pos += 1;
+                    if burst_pos >= burst.max(1) {
+                        burst_pos = 0;
+                        gap
+                    } else {
+                        0
+                    }
+                }
+                Arrival::Diurnal { period, min_gap, max_gap } => {
+                    let p = period.max(1) as f64;
+                    let phase = (step % period.max(1)) as f64 / p;
+                    // load peaks mid-period: 0 in the trough, 1 at the peak
+                    let load = 0.5 - 0.5 * (2.0 * std::f64::consts::PI * phase).cos();
+                    let (lo, hi) = (min_gap as f64, max_gap.max(min_gap) as f64);
+                    (hi - (hi - lo) * load).round() as usize
+                }
+            };
+            step += gap + c.think.sample(&mut rng);
+        }
+        Trace { name: self.name.clone(), seed: self.seed, requests }
+    }
+}
+
+/// One request of a trace: a step-indexed arrival with sampled lengths.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceRequest {
+    pub id: u64,
+    /// Arrival step (the serving loop's decode-step clock).
+    pub step: usize,
+    /// Name of the traffic class that sampled this request.
+    pub class: String,
+    pub prompt_tokens: usize,
+    pub gen_tokens: usize,
+}
+
+impl TraceRequest {
+    /// Deterministic synthetic prompt of exactly `prompt_tokens` bytes
+    /// (the serving tokenizer is byte-level, so bytes are tokens).  The
+    /// id is mixed in so lanes don't share identical prompts.
+    pub fn prompt_text(&self) -> String {
+        let seedling = format!("req{} kv partial recompute trace ", self.id);
+        seedling
+            .bytes()
+            .cycle()
+            .take(self.prompt_tokens.max(1))
+            .map(|b| b as char)
+            .collect()
+    }
+}
+
+/// A generated trace: the flat, serializable request list both the serving
+/// loop and the analytic sim replay.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    pub name: String,
+    pub seed: u64,
+    pub requests: Vec<TraceRequest>,
+}
+
+impl Trace {
+    /// Last arrival step in the trace (0 for an empty trace).
+    pub fn max_step(&self) -> usize {
+        self.requests.iter().map(|r| r.step).max().unwrap_or(0)
+    }
+
+    /// Total generation budget across requests, in tokens — equal to the
+    /// decode-step count a lossless replay must take (one token per
+    /// request per step).
+    pub fn total_gen_tokens(&self) -> u64 {
+        self.requests.iter().map(|r| r.gen_tokens as u64).sum()
+    }
+
+    /// Serialize to the JSON trace format.  Key order is `BTreeMap`-fixed,
+    /// so equal traces serialize byte-identically.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::from(self.name.as_str())),
+            ("seed", Json::Num(self.seed as f64)),
+            (
+                "requests",
+                Json::Arr(
+                    self.requests
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("id", Json::Num(r.id as f64)),
+                                ("step", Json::from(r.step)),
+                                ("class", Json::from(r.class.as_str())),
+                                ("prompt", Json::from(r.prompt_tokens)),
+                                ("gen", Json::from(r.gen_tokens)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Parse the JSON trace format back into a trace (lossless inverse of
+    /// [`to_json`](Trace::to_json)).
+    pub fn from_json(v: &Json) -> Result<Trace, String> {
+        let name = v
+            .at(&["name"])
+            .as_str()
+            .ok_or("trace: missing string field 'name'")?
+            .to_string();
+        let seed = v.at(&["seed"]).as_f64().ok_or("trace: missing numeric field 'seed'")? as u64;
+        let reqs = v.at(&["requests"]).as_arr().ok_or("trace: missing array field 'requests'")?;
+        let mut requests = Vec::with_capacity(reqs.len());
+        for (i, r) in reqs.iter().enumerate() {
+            let field = |k: &str| {
+                r.at(&[k])
+                    .as_f64()
+                    .ok_or_else(|| format!("trace request {i}: missing numeric field '{k}'"))
+            };
+            requests.push(TraceRequest {
+                id: field("id")? as u64,
+                step: field("step")? as usize,
+                class: r
+                    .at(&["class"])
+                    .as_str()
+                    .ok_or_else(|| format!("trace request {i}: missing string field 'class'"))?
+                    .to_string(),
+                prompt_tokens: field("prompt")? as usize,
+                gen_tokens: field("gen")? as usize,
+            });
+        }
+        Ok(Trace { name, seed, requests })
+    }
+
+    /// [`from_json`](Trace::from_json) over raw text.
+    pub fn from_json_str(text: &str) -> Result<Trace, String> {
+        let v = Json::parse(text).map_err(|e| e.to_string())?;
+        Self::from_json(&v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec() -> WorkloadSpec {
+        WorkloadSpec {
+            name: "tiny".into(),
+            seed: 11,
+            requests: 8,
+            arrivals: Arrival::Bursty { burst: 2, gap: 4 },
+            classes: vec![
+                TrafficClass {
+                    name: "chat".into(),
+                    weight: 0.75,
+                    prompt: LenDist::HeavyTail { floor: 8, alpha: 1.3, cap: 64 },
+                    gen: LenDist::Uniform { lo: 2, hi: 6 },
+                    think: LenDist::Uniform { lo: 0, hi: 1 },
+                },
+                TrafficClass {
+                    name: "rag".into(),
+                    weight: 0.25,
+                    prompt: LenDist::Fixed { steps: 48 },
+                    gen: LenDist::Fixed { steps: 3 },
+                    think: LenDist::Fixed { steps: 0 },
+                },
+            ],
+            slo: SloTargets::default(),
+        }
+    }
+
+    #[test]
+    fn same_spec_and_seed_is_byte_identical() {
+        // satellite: determinism down to the serialized bytes
+        let a = tiny_spec().generate().to_json().to_string();
+        let b = tiny_spec().generate().to_json().to_string();
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+    }
+
+    #[test]
+    fn different_seed_changes_the_trace() {
+        let mut other = tiny_spec();
+        other.seed = 12;
+        assert_ne!(
+            tiny_spec().generate().to_json().to_string(),
+            other.generate().to_json().to_string()
+        );
+    }
+
+    #[test]
+    fn json_round_trip_is_lossless() {
+        let trace = tiny_spec().generate();
+        let text = trace.to_json().to_string();
+        let back = Trace::from_json_str(&text).unwrap();
+        assert_eq!(back, trace);
+        // and re-serialization is stable (BTreeMap key order)
+        assert_eq!(back.to_json().to_string(), text);
+    }
+
+    #[test]
+    fn from_json_reports_missing_fields() {
+        assert!(Trace::from_json_str("{}").is_err());
+        assert!(Trace::from_json_str(r#"{"name":"x","seed":1}"#).is_err());
+        let bad_req = r#"{"name":"x","seed":1,"requests":[{"id":0}]}"#;
+        let err = Trace::from_json_str(bad_req).unwrap_err();
+        assert!(err.contains("request 0"), "{err}");
+    }
+
+    #[test]
+    fn arrival_steps_are_monotone_and_lengths_positive() {
+        for name in WorkloadSpec::mix_names() {
+            let trace = WorkloadSpec::named(name).unwrap().generate();
+            assert_eq!(trace.requests.len(), WorkloadSpec::named(name).unwrap().requests);
+            assert!(trace.requests.windows(2).all(|w| w[0].step <= w[1].step), "{name}");
+            assert!(trace.requests.iter().all(|r| r.prompt_tokens >= 1 && r.gen_tokens >= 1));
+            assert_eq!(trace.total_gen_tokens(), trace.requests.iter().map(|r| r.gen_tokens as u64).sum::<u64>());
+        }
+    }
+
+    #[test]
+    fn bursty_arrivals_come_in_bursts() {
+        let mut spec = tiny_spec();
+        spec.classes.truncate(1);
+        spec.classes[0].think = LenDist::Fixed { steps: 0 };
+        spec.arrivals = Arrival::Bursty { burst: 2, gap: 5 };
+        let t = spec.generate();
+        // pairs share a step, then a 5-step gap
+        assert_eq!(t.requests[0].step, t.requests[1].step);
+        assert_eq!(t.requests[2].step, t.requests[1].step + 5);
+        assert_eq!(t.requests[2].step, t.requests[3].step);
+    }
+
+    #[test]
+    fn diurnal_gaps_swing_between_the_bounds() {
+        let spec = WorkloadSpec {
+            arrivals: Arrival::Diurnal { period: 16, min_gap: 1, max_gap: 9 },
+            classes: vec![TrafficClass {
+                name: "c".into(),
+                weight: 1.0,
+                prompt: LenDist::Fixed { steps: 8 },
+                gen: LenDist::Fixed { steps: 2 },
+                think: LenDist::Fixed { steps: 0 },
+            }],
+            requests: 24,
+            name: "d".into(),
+            seed: 3,
+            slo: SloTargets::default(),
+        };
+        let t = spec.generate();
+        let gaps: Vec<usize> =
+            t.requests.windows(2).map(|w| w[1].step - w[0].step).collect();
+        assert!(gaps.iter().all(|&g| (1..=9).contains(&g)), "{gaps:?}");
+        assert!(gaps.iter().any(|&g| g <= 2), "peak gaps present: {gaps:?}");
+        assert!(gaps.iter().any(|&g| g >= 8), "trough gaps present: {gaps:?}");
+    }
+
+    #[test]
+    fn heavy_tail_respects_floor_and_cap() {
+        let d = LenDist::HeavyTail { floor: 16, alpha: 1.1, cap: 128 };
+        let mut rng = Prng::new(5);
+        let xs: Vec<usize> = (0..2000).map(|_| d.sample(&mut rng)).collect();
+        assert!(xs.iter().all(|&x| (16..=128).contains(&x)));
+        // heavy tail: the cap is actually hit, and the median hugs the floor
+        assert!(xs.iter().any(|&x| x == 128));
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert!(sorted[xs.len() / 2] < 48, "median {}", sorted[xs.len() / 2]);
+    }
+
+    #[test]
+    fn prompt_text_is_exact_length_and_deterministic() {
+        let r = TraceRequest {
+            id: 3,
+            step: 0,
+            class: "chat".into(),
+            prompt_tokens: 37,
+            gen_tokens: 4,
+        };
+        assert_eq!(r.prompt_text().len(), 37);
+        assert_eq!(r.prompt_text(), r.prompt_text());
+        let other = TraceRequest { id: 4, ..r.clone() };
+        assert_ne!(other.prompt_text(), r.prompt_text());
+    }
+}

@@ -1,0 +1,232 @@
+//! Trace-driven sim-vs-served validation: the same seeded workload trace
+//! replays through the continuous-batching server
+//! ([`ContinuousServer::submit_trace`]) and the analytic eviction sim
+//! ([`EvictionSimConfig::from_trace`]), and the two must agree on the
+//! KV traffic the trace implies — generated-token totals exactly, peak
+//! KV occupancy within **one request** (the stated tolerance: the sim
+//! admits at the top of a round, the serving loop inside a pass, so a
+//! retirement racing an arrival can differ by one), and the
+//! capacity regime (no reclamation under ample budgets, host overflow
+//! under tight ones) in kind.
+//!
+//! Like `coordinator_e2e.rs` these need **no artifacts**: without
+//! `artifacts/manifest.json` the engine runs the interpreter runtime,
+//! which is bitwise-deterministic — replaying the identical trace twice
+//! must produce bit-identical tokens.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use kvpr::coordinator::{ContinuousConfig, ContinuousServer, TieredKvConfig};
+use kvpr::engine::{EngineConfig, EnginePolicy};
+use kvpr::kvstore::{simulate_eviction, EvictionSimConfig, Lru, RecomputeAware};
+use kvpr::scheduler::{CostModel, TierTopology};
+use kvpr::transfer::LinkConfig;
+use kvpr::workload::{Arrival, LenDist, SloTargets, Trace, TrafficClass, WorkloadSpec};
+
+/// Serialise the heavy tests: each spins up engine + link worker threads.
+static HEAVY: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    HEAVY.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+const LINK_BPS: f64 = 100e6;
+
+fn engine_cfg() -> EngineConfig {
+    let mut e = EngineConfig::new(EnginePolicy::Kvpr);
+    e.weights_offloaded = true;
+    e.link = LinkConfig::with_bandwidth(LINK_BPS);
+    e.seed = 42;
+    e
+}
+
+fn continuous_cfg(max_group: usize, max_groups: usize) -> ContinuousConfig {
+    let mut c = ContinuousConfig::new("artifacts", engine_cfg());
+    c.max_group = max_group;
+    c.max_groups = max_groups;
+    c.prompt_bucket = 16;
+    // trace arrivals are step-indexed, not wall-timed: no batching window
+    c.admit_wait = Duration::from_millis(1);
+    c
+}
+
+/// The analytic sim's cost model (same literal the kvstore sim tests
+/// use); the agreement asserts here are structural — token totals and
+/// occupancy — so the absolute scale never matters.
+fn cost() -> CostModel {
+    CostModel {
+        recompute_per_token_s: 0.3e-6,
+        transfer_kv_per_token_s: 1e-6,
+        transfer_act_per_token_s: 0.5e-6,
+        gpu_overhead_s: 1e-6,
+        link_latency_s: 1e-6,
+    }
+}
+
+/// Six requests in three bursts of two (arrival steps 0,0,3,3,6,6),
+/// prompts pinned to the 16-token prompt bucket, short generations.
+fn e2e_spec(gen: LenDist) -> WorkloadSpec {
+    WorkloadSpec {
+        name: "e2e_bursty".into(),
+        seed: 17,
+        requests: 6,
+        arrivals: Arrival::Bursty { burst: 2, gap: 3 },
+        classes: vec![TrafficClass {
+            name: "chat".into(),
+            weight: 1.0,
+            prompt: LenDist::Fixed { steps: 16 },
+            gen,
+            think: LenDist::Fixed { steps: 0 },
+        }],
+        // generous targets: the debug interpreter's absolute latencies are
+        // machine noise; the SLO *counters* are what the test pins
+        slo: SloTargets { ttft_s: 30.0, tpot_s: 30.0 },
+    }
+}
+
+/// What one served replay measured.
+struct ServedRun {
+    tokens: Vec<Vec<i32>>,
+    gen_tokens: u64,
+    requests: u64,
+    peak_occupancy: f64,
+    backpressure: u64,
+    kv_dropped: u64,
+    spills_issued: u64,
+    ttft_p99_s: f64,
+    slo_requests: u64,
+}
+
+fn run_trace(cfg: ContinuousConfig, trace: &Trace, slo: SloTargets) -> ServedRun {
+    let server = ContinuousServer::start(cfg).unwrap();
+    server.metrics().set_slo(slo);
+    let handles = server.submit_trace(trace);
+    let mut tokens = Vec::with_capacity(trace.requests.len());
+    for (h, r) in handles.into_iter().zip(&trace.requests) {
+        let resp = h.wait().unwrap();
+        assert_eq!(resp.tokens.len(), r.gen_tokens, "request {} length", r.id);
+        tokens.push(resp.tokens);
+    }
+    let m = server.metrics();
+    let out = ServedRun {
+        tokens,
+        gen_tokens: m.tokens(),
+        requests: m.requests(),
+        peak_occupancy: m.peak_occupancy(),
+        backpressure: m.backpressure_events(),
+        kv_dropped: m.tiering_totals().2,
+        spills_issued: m.disk_totals().0,
+        ttft_p99_s: m.ttft_stats().p99,
+        slo_requests: m.slo_attainment().requests,
+    };
+    server.shutdown().unwrap();
+    out
+}
+
+fn interpreted() -> bool {
+    !std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json"))
+        .exists()
+}
+
+#[test]
+fn trace_replay_agrees_with_the_analytic_sim_in_the_ample_regime() {
+    let _g = lock();
+    // Acceptance (tentpole): one seeded trace, two executions — the live
+    // continuous-batching loop and the analytic sim share the decode-step
+    // clock, so under ample budgets they must agree on the KV traffic.
+    let spec = e2e_spec(LenDist::Uniform { lo: 4, hi: 8 });
+    let trace = spec.generate();
+    assert_eq!(spec.generate(), trace, "generation must be deterministic");
+    assert_eq!(
+        trace.requests.iter().map(|r| r.step).collect::<Vec<_>>(),
+        vec![0, 0, 3, 3, 6, 6],
+        "three bursts of two"
+    );
+
+    let mk = || {
+        let mut cfg = continuous_cfg(2, 4);
+        cfg.kv_budget_bytes = 64 << 20; // ample: admission never backpressures
+        cfg
+    };
+    let a = run_trace(mk(), &trace, spec.slo);
+    let b = run_trace(mk(), &trace, spec.slo);
+    if interpreted() {
+        assert_eq!(a.tokens, b.tokens, "same trace, same tokens, bit for bit");
+    }
+
+    let sim_cfg = EvictionSimConfig::from_trace(cost(), &trace);
+    let sim = simulate_eviction(&sim_cfg, &Lru);
+
+    // KV-traffic agreement: every generated token appends one token of KV
+    // in both executions, and both retire the whole trace
+    assert_eq!(a.gen_tokens, trace.total_gen_tokens());
+    assert_eq!(sim.steps, trace.total_gen_tokens());
+    assert_eq!(a.requests, trace.requests.len() as u64);
+    assert_eq!(sim.completed, trace.requests.len());
+
+    // KV-occupancy agreement within the stated tolerance of one request
+    assert!(
+        (sim.peak_concurrency as f64 - a.peak_occupancy).abs() <= 1.0,
+        "peak occupancy diverged: sim {} vs served {}",
+        sim.peak_concurrency,
+        a.peak_occupancy
+    );
+
+    // regime agreement: ample budgets reclaim nothing on either side
+    assert_eq!(sim.evictions, 0);
+    assert_eq!(sim.spills, 0);
+    assert!(sim.admit_delay_steps.iter().all(|&d| d == 0), "ample sim admits on arrival");
+    assert_eq!(a.backpressure, 0, "ample serving never backpressures");
+    assert_eq!(a.kv_dropped, 0);
+
+    // the SLO scorer saw every request, and TTFT percentiles are real
+    assert_eq!(a.slo_requests, trace.requests.len() as u64);
+    assert!(a.ttft_p99_s > 0.0);
+}
+
+#[test]
+fn trace_replay_agrees_with_the_analytic_sim_under_host_pressure() {
+    let _g = lock();
+    // Same harness, tight budgets: a host tier far smaller than the
+    // trace's concurrent KV demand must overflow in *both* executions —
+    // the served four-tier store spills dram blocks to disk, the sim's
+    // four-tier model spills its admission shortfall — and both still
+    // retire the whole trace (disk absorbs, nothing deadlocks).
+    let spec = e2e_spec(LenDist::Fixed { steps: 24 });
+    let trace = spec.generate();
+
+    let mut cfg = continuous_cfg(1, 6);
+    cfg.kv_budget_bytes = 200 << 10; // gpu tier: one 16-token block
+    cfg.tiering = Some(TieredKvConfig {
+        // pinned below one block makes dram the host tier (~10 blocks —
+        // one session plus change, against six sessions of demand)
+        topology: TierTopology::standard(0, 64 << 10, 2 << 20).with_disk(64 << 20, 0.5),
+        block_tokens: 16,
+        prefetch_blocks: 1,
+        max_inflight: 8,
+        promote_cooldown: 2,
+        // the tiny full-transfer-bound workload's adaptive grant has no
+        // slack; pin the static grant so tier traffic actually flows
+        step_budget_override: Some(4 << 20),
+        ..TieredKvConfig::default()
+    });
+    let served = run_trace(cfg, &trace, spec.slo);
+    assert_eq!(served.gen_tokens, trace.total_gen_tokens());
+    assert_eq!(served.requests, trace.requests.len() as u64);
+    assert!(
+        served.spills_issued > 0,
+        "host pressure must spill dram blocks to disk (issued {})",
+        served.spills_issued
+    );
+
+    // the analytic twin: same trace, host capacity squeezed to ~40 % of
+    // demand, ample disk — the sim must land in the same regime
+    let mut sim_cfg = EvictionSimConfig::from_trace(cost(), &trace);
+    sim_cfg.disk_bytes = sim_cfg.capacity_bytes * 4;
+    sim_cfg.capacity_bytes = sim_cfg.capacity_bytes * 2 / 5;
+    let sim = simulate_eviction(&sim_cfg, &RecomputeAware::new(cost()));
+    assert_eq!(sim.completed, trace.requests.len(), "disk absorbs the overflow");
+    assert_eq!(sim.steps, trace.total_gen_tokens());
+    assert!(sim.spills > 0, "the squeezed host budget must spill in the sim too");
+}
