@@ -11,6 +11,12 @@
 //! reference numbers (`rust/tests/workload_trace.rs` pins how tightly the
 //! two executions must agree).
 //!
+//! The served replay runs with tracing enabled: a Chrome `trace_event`
+//! export of the whole run lands in `TRACE_workload.json` (load it in
+//! Perfetto / `chrome://tracing`), the tracer's plan-vs-actual residual
+//! summary prints after the SLO table, and the flight recorder dumps on
+//! any TTFT SLO breach.
+//!
 //! ```bash
 //! cargo run --release --example workload_slo -- [mix] [requests]
 //! # mix: bursty_chat (default) | diurnal_mixed | rag_long_context
@@ -25,6 +31,7 @@ use kvpr::config::{HardwareConfig, ModelConfig};
 use kvpr::coordinator::{ContinuousConfig, ContinuousServer};
 use kvpr::engine::{EngineConfig, EnginePolicy};
 use kvpr::kvstore::{simulate_eviction, EvictionSimConfig, RecomputeAware};
+use kvpr::obs::{chrome_trace, AnomalyConfig, TracerConfig};
 use kvpr::scheduler::CostModel;
 use kvpr::transfer::LinkConfig;
 use kvpr::util::stats::Summary;
@@ -70,6 +77,12 @@ fn main() -> anyhow::Result<()> {
     cfg.max_group = 4;
     cfg.max_groups = 4;
     cfg.admit_wait = Duration::from_millis(5);
+    // full tracing: every event retained for the Chrome export, and the
+    // flight recorder dumps its ring on any TTFT SLO breach
+    cfg.trace = Some(TracerConfig {
+        anomaly: AnomalyConfig { ttft_slo_s: Some(spec.slo.ttft_s), ..AnomalyConfig::default() },
+        ..TracerConfig::default()
+    });
     let server = ContinuousServer::start(cfg)?;
     server.metrics().set_slo(spec.slo);
     let t0 = Instant::now();
@@ -138,8 +151,26 @@ fn main() -> anyhow::Result<()> {
         sim.peak_concurrency,
         sim.completed
     );
+    let tracer = server.tracer();
     server.shutdown()?;
+
+    // -- observability artifacts -------------------------------------------
+    if let Some(pva) = tracer.plan_vs_actual() {
+        println!();
+        print!("{}", pva.summary_table().render());
+    }
+    let dumps = tracer.dumps();
+    if !dumps.is_empty() {
+        println!(
+            "  flight recorder: {} dump(s) — first: {:?} at step {}",
+            dumps.len(),
+            dumps[0].reason,
+            dumps[0].step
+        );
+    }
+    let trace_json = chrome_trace(&tracer.events()).to_string();
+    std::fs::write("TRACE_workload.json", &trace_json)?;
     std::fs::write("SLO_workload.json", &json)?;
-    println!("\nwrote SLO_workload.json");
+    println!("\nwrote SLO_workload.json and TRACE_workload.json");
     Ok(())
 }

@@ -14,6 +14,7 @@ use std::time::Instant;
 use kvpr::config::{HardwareConfig, ModelConfig, WorkloadConfig};
 use kvpr::kvcache::quant;
 use kvpr::kvstore::{simulate_eviction, EvictionSimConfig, EvictionSimReport, Lru, RecomputeAware};
+use kvpr::obs::{EventKind, Phase, StepRecord, Tracer, TracerConfig};
 use kvpr::scheduler::{
     CostModel, LinkSpec, PlanInput, Planner, SchedulePolicy, SplitSolver, TierTopology,
 };
@@ -241,6 +242,77 @@ fn main() {
         ));
     }
 
+    // observability overhead: a synthetic serving step — eight four-tier
+    // plan_batch folds plus the per-step tracer traffic the continuous
+    // loop emits (phase spans, per-group plan events, a step record) —
+    // timed against the no-op sink and against a live ring-buffer tracer.
+    // BENCH_baseline.json's ratio_gates pins enabled ≥ 95 % of disabled.
+    let obs_topo = TierTopology::standard(2 << 30, 16u64 << 30, 64u64 << 30)
+        .with_disk(1u64 << 40, 0.9)
+        .calibrated(&pcie);
+    let obs_disk = obs_topo.tier_named("disk-nvme").expect("four-tier chain has a disk rung");
+    let obs_planner = Planner::new(
+        pcost.clone(),
+        SchedulePolicy::RowByRow,
+        vec![128, 256, 384, 512],
+        usize::MAX,
+    )
+    .with_topology(obs_topo);
+    let obs_input = PlanInput::new(vec![1024; 128])
+        .resident(256)
+        .dropped_floor(128)
+        .prefix(obs_disk, 256);
+    let synthetic_step = |tracer: &Tracer, step: u64| {
+        tracer.set_step(step);
+        tracer.emit(|| EventKind::PhaseBegin { phase: Phase::Step });
+        tracer.emit(|| EventKind::PhaseBegin { phase: Phase::Plan });
+        let mut predicted = 0.0;
+        let mut slack = 0u64;
+        for g in 0..8 {
+            let pl = obs_planner.plan_batch(&obs_input);
+            predicted += pl.predicted_s;
+            slack = pl.link_slack_bytes;
+            tracer.emit(|| EventKind::Plan {
+                group: g,
+                l: pl.l(),
+                predicted_s: pl.predicted_s,
+                slack_bytes: pl.link_slack_bytes,
+            });
+            std::hint::black_box(&pl);
+        }
+        tracer.emit(|| EventKind::PhaseEnd { phase: Phase::Plan });
+        tracer.emit(|| EventKind::PhaseEnd { phase: Phase::Step });
+        tracer.record_step(StepRecord {
+            step,
+            predicted_s: predicted,
+            slack_bytes: slack,
+            granted_bytes: slack,
+            measured_s: predicted,
+            launched: 0,
+            launched_wire_bytes: 0,
+            landed: 0,
+        });
+    };
+    let off = Tracer::disabled();
+    let mut step_no = 0u64;
+    let dt_off = time_per_iter(2_000, || {
+        synthetic_step(&off, step_no);
+        step_no += 1;
+    });
+    // ring-only retention: the steady-state production configuration
+    let on = Tracer::new(TracerConfig { retain_all: false, ..TracerConfig::default() });
+    let mut step_no = 0u64;
+    let dt_on = time_per_iter(2_000, || {
+        synthetic_step(&on, step_no);
+        step_no += 1;
+    });
+    t.row(&[
+        "obs synthetic step (8 plans + spans)".into(),
+        "2k".into(),
+        kvpr::util::fmt_secs(dt_on),
+        format!("enabled/disabled throughput {:.3}", dt_off / dt_on),
+    ]);
+
     // trace-driven workload mixes: each named generator lowered to a
     // trace and replayed through the analytic sim (the serving loop's
     // twin) — per-mix decode throughput plus the queueing-delay
@@ -281,7 +353,7 @@ fn main() {
     }
 
     let json = format!(
-        "{{\n  \"bench\": \"kvstore\",\n  \"policies\": {{\n    \"lru\": {},\n    \"recompute_aware\": {}\n  }},\n  \"tiered\": {{\n    \"lru\": {},\n    \"recompute_aware\": {}\n  }},\n  \"four_tier\": {{\n    \"lru\": {},\n    \"recompute_aware\": {}\n  }},\n  \"topology_plan\": {{\n    {},\n    {},\n    {}\n  }},\n  \"workload\": {{\n    {},\n    {},\n    {}\n  }}\n}}\n",
+        "{{\n  \"bench\": \"kvstore\",\n  \"policies\": {{\n    \"lru\": {},\n    \"recompute_aware\": {}\n  }},\n  \"tiered\": {{\n    \"lru\": {},\n    \"recompute_aware\": {}\n  }},\n  \"four_tier\": {{\n    \"lru\": {},\n    \"recompute_aware\": {}\n  }},\n  \"topology_plan\": {{\n    {},\n    {},\n    {}\n  }},\n  \"obs_overhead\": {{\n    \"disabled\": {{ \"steps_per_s\": {:.3} }},\n    \"enabled\": {{ \"steps_per_s\": {:.3} }}\n  }},\n  \"workload\": {{\n    {},\n    {},\n    {}\n  }}\n}}\n",
         policy_json(&lru),
         policy_json(&ra),
         policy_json(&tlru),
@@ -291,6 +363,8 @@ fn main() {
         topo_json[0],
         topo_json[1],
         topo_json[2],
+        1.0 / dt_off,
+        1.0 / dt_on,
         wl_json[0],
         wl_json[1],
         wl_json[2]

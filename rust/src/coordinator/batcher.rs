@@ -63,7 +63,7 @@ mod tests {
         (
             Pending {
                 req: Request::new(id, "hi", gen),
-                arrived: Instant::now(),
+                arrived: 0.0,
                 done: tx,
             },
             rx,

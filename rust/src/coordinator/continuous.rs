@@ -81,7 +81,9 @@ use crate::engine::{DecodeSession, Engine, EngineConfig};
 use crate::kvstore::{EvictKind, KvStore, KvStoreConfig, Prefetcher};
 use crate::memory::{MemPool, PoolGuard};
 use crate::model::ByteTokenizer;
+use crate::obs::{EventKind, Phase, StepRecord, Tracer, TracerConfig};
 use crate::scheduler::{LinkSpec, PlanInput, SchedulePolicy, TierTopology};
+use crate::util::clock::{Clock, ClockMode};
 
 /// Continuous-batching loop construction parameters.
 #[derive(Debug, Clone)]
@@ -107,6 +109,23 @@ pub struct ContinuousConfig {
     /// recompute-aware reclamation) instead of hard backpressure, and a
     /// device-resident KV suffix shrinks every step's transfer term.
     pub tiering: Option<TieredKvConfig>,
+    /// Serving clock mode.  [`ClockMode::Wall`] (the default) stamps
+    /// latencies from monotonic wall time; [`ClockMode::Step`] makes every
+    /// stamp a pure function of the decode-step counter, so two replays of
+    /// the same trace produce identical latency samples and trace events.
+    pub clock: ClockMode,
+    /// When set the serving loop emits structured trace events (request /
+    /// phase / migration lifecycle), records per-step plan-vs-actual
+    /// telemetry and arms the flight recorder; read results off
+    /// [`ContinuousServer::tracer`].  `None` installs the no-op sink — one
+    /// predictable branch per would-be event, nothing allocated.
+    pub trace: Option<TracerConfig>,
+    /// Deterministic replay: block until this many requests have been
+    /// received *before* the first step, so arrival events land on the
+    /// serve thread in submission order instead of racing the step loop
+    /// (0 disables).  Meant for step-clock trace replays; submitters must
+    /// send at least this many requests or the loop never starts.
+    pub preload_requests: usize,
 }
 
 impl ContinuousConfig {
@@ -120,6 +139,9 @@ impl ContinuousConfig {
             kv_budget_bytes: 256 << 20,
             admit_wait: Duration::from_millis(20),
             tiering: None,
+            clock: ClockMode::Wall,
+            trace: None,
+            preload_requests: 0,
         }
     }
 }
@@ -201,13 +223,15 @@ impl Default for TieredKvConfig {
     }
 }
 
-/// One admitted request riding a group lane.
+/// One admitted request riding a group lane.  Times are serving-clock
+/// seconds ([`Clock::now`]), so under the deterministic step clock every
+/// latency sample is a pure function of step indices.
 struct Member {
     req: Request,
-    arrived: Instant,
-    admitted: Instant,
+    arrived: f64,
+    admitted: f64,
     /// When this member's first token landed (TTFT sample at retirement).
-    first_tok: Option<Instant>,
+    first_tok: Option<f64>,
     done: mpsc::Sender<Response>,
     lane: usize,
     state: RequestState,
@@ -247,6 +271,8 @@ pub struct ContinuousServer {
     worker: Option<std::thread::JoinHandle<Result<()>>>,
     metrics: ServeMetrics,
     next_id: std::sync::atomic::AtomicU64,
+    clock: Clock,
+    tracer: Tracer,
 }
 
 impl ContinuousServer {
@@ -255,11 +281,17 @@ impl ContinuousServer {
         let (tx, rx) = mpsc::channel::<Pending>();
         let metrics = ServeMetrics::new();
         let m2 = metrics.clone();
+        let clock = Clock::new(cfg.clock);
+        let tracer = match cfg.trace {
+            Some(tc) => Tracer::new(tc),
+            None => Tracer::disabled(),
+        };
+        let (c2, t2) = (clock.clone(), tracer.clone());
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
 
         let worker = std::thread::Builder::new()
             .name("kvpr-continuous".into())
-            .spawn(move || serve_loop(cfg, rx, m2, ready_tx))
+            .spawn(move || serve_loop(cfg, rx, m2, ready_tx, c2, t2))
             .context("spawn continuous server thread")?;
         ready_rx
             .recv()
@@ -269,11 +301,22 @@ impl ContinuousServer {
             worker: Some(worker),
             metrics,
             next_id: std::sync::atomic::AtomicU64::new(1),
+            clock,
+            tracer,
         })
     }
 
     pub fn metrics(&self) -> &ServeMetrics {
         &self.metrics
+    }
+
+    /// Handle to the serving loop's tracer — the shared event buffers,
+    /// plan-vs-actual ledger and flight-recorder dumps.  The handle stays
+    /// valid after [`shutdown`](Self::shutdown) (clone it out first); with
+    /// tracing off ([`ContinuousConfig::trace`] `None`) this is the no-op
+    /// sink and every read returns empty.
+    pub fn tracer(&self) -> Tracer {
+        self.tracer.clone()
     }
 
     /// Submit a prompt; returns a waitable handle.
@@ -310,7 +353,7 @@ impl ContinuousServer {
 
     pub fn submit_request(&self, req: Request) -> ResponseHandle {
         let (done, rx) = mpsc::channel();
-        let pending = Pending { req, arrived: Instant::now(), done };
+        let pending = Pending { req, arrived: self.clock.now(), done };
         self.tx
             .as_ref()
             .expect("server shut down")
@@ -345,6 +388,8 @@ fn serve_loop(
     rx: mpsc::Receiver<Pending>,
     metrics: ServeMetrics,
     ready: mpsc::Sender<Result<()>>,
+    clock: Clock,
+    tracer: Tracer,
 ) -> Result<()> {
     let engine = match Engine::new(&cfg.artifact_dir, cfg.engine.clone()) {
         Ok(e) => {
@@ -401,13 +446,16 @@ fn serve_loop(
             scfg.spill_cooldown = t.spill_cooldown;
             scfg.spill_floor = t.spill_floor;
             scfg.spill_max_per_step = t.spill_max_per_step;
-            let s = KvStore::new(
+            let mut s = KvStore::new(
                 scfg,
                 // the eviction/demotion/spill scores move bytes at the
                 // exact wire width and NVMe ratio the migration engine
                 // charges — both read off the same declared chain
                 t.policy.build_for_wire(cost, topo.wire_elem_bytes(), nvme_factor),
             );
+            // migration lifecycle events (queued → staged → in-flight →
+            // landed) flow into the same step-stamped trace
+            s.set_tracer(tracer.clone());
             Some((s, Prefetcher::new(t.max_inflight)))
         }
         _ => None,
@@ -431,22 +479,38 @@ fn serve_loop(
 
     let mut queue: VecDeque<Pending> = VecDeque::new();
     let mut groups: Vec<Group> = Vec::new();
-    // decode-step clock: counts completed loop steps; trace-replay
-    // requests (Request::arrival_step) are admissible only once the clock
-    // reaches their arrival step
-    let mut steps_done: usize = 0;
+    // the decode-step clock lives in `clock` (advanced once per completed
+    // loop step); trace-replay requests (Request::arrival_step) are
+    // admissible only once it reaches their arrival step
     let mut seen_kv_drops: u64 = 0;
     // cumulative disk-traffic counters already surfaced to the metrics
     // (spills/hops can also be issued inside admission, before the step's
     // migration snapshot, so deltas are taken against these, not per-step)
     let mut seen_disk: (u64, u64, u64, u64) = (0, 0, 0, 0);
 
+    // deterministic replay: gather the whole trace before stepping, so
+    // arrival events land on this thread in submission order instead of
+    // racing the step loop
+    for _ in 0..cfg.preload_requests {
+        match rx.recv() {
+            Ok(p) => {
+                tracer.emit(|| EventKind::ReqArrive { id: p.req.id });
+                queue.push_back(p);
+            }
+            Err(_) => break,
+        }
+    }
+
     loop {
+        tracer.set_step(clock.step());
         // -- 1. arrivals -----------------------------------------------------
         if groups.is_empty() && queue.is_empty() {
             // fully idle: block until work or shutdown
             match rx.recv() {
-                Ok(p) => queue.push_back(p),
+                Ok(p) => {
+                    tracer.emit(|| EventKind::ReqArrive { id: p.req.id });
+                    queue.push_back(p);
+                }
                 Err(_) => break, // channel closed and nothing in flight
             }
             // idle batching window: gather a fuller first group
@@ -457,13 +521,17 @@ fn serve_loop(
                     break;
                 }
                 match rx.recv_timeout(deadline - now) {
-                    Ok(p) => queue.push_back(p),
+                    Ok(p) => {
+                        tracer.emit(|| EventKind::ReqArrive { id: p.req.id });
+                        queue.push_back(p);
+                    }
                     Err(_) => break,
                 }
             }
         }
         // never block while groups are decoding: drain whatever arrived
         while let Ok(p) = rx.try_recv() {
+            tracer.emit(|| EventKind::ReqArrive { id: p.req.id });
             queue.push_back(p);
         }
 
@@ -472,12 +540,19 @@ fn serve_loop(
         //        so jump the clock to the next arrival instead of spinning
         if groups.is_empty()
             && !queue.is_empty()
-            && !queue.iter().any(|p| arrival_eligible(p, steps_done))
+            && !queue.iter().any(|p| arrival_eligible(p, clock.step() as usize))
         {
             if let Some(next) = queue.iter().filter_map(|p| p.req.arrival_step).min() {
-                steps_done = next;
+                clock.set_step(next as u64);
+                tracer.set_step(clock.step());
             }
         }
+
+        // the Step span encloses this iteration's stage / plan / compute
+        // phases; every early `continue` below closes it to keep begin/end
+        // events balanced in the exported trace
+        tracer.emit(|| EventKind::PhaseBegin { phase: Phase::Step });
+        tracer.emit(|| EventKind::PhaseBegin { phase: Phase::Stage });
 
         // -- 2. admission (Queued → Prefill → Decoding) ----------------------
         // a step-indexed request whose arrival step is still in the future
@@ -487,7 +562,8 @@ fn serve_loop(
             if groups.len() >= cfg.max_groups {
                 break;
             }
-            let eligible = queue.iter().filter(|p| arrival_eligible(p, steps_done)).count();
+            let step_now = clock.step() as usize;
+            let eligible = queue.iter().filter(|p| arrival_eligible(p, step_now)).count();
             if eligible == 0 {
                 break;
             }
@@ -524,6 +600,7 @@ fn serve_loop(
                 // KV budget exhausted: hold requests Queued until a group
                 // retires and frees its reservation
                 metrics.record_backpressure();
+                tracer.emit(|| EventKind::Backpressure);
                 if groups.is_empty() {
                     // tiered: a just-released group's canceled migrations
                     // may still be vacating tier reservations (the drain
@@ -539,8 +616,7 @@ fn serve_loop(
                     // not even a single-request session fits the configured
                     // budget — fail the first eligible request instead of
                     // spinning (the head may be a future trace arrival)
-                    if let Some(pos) = queue.iter().position(|p| arrival_eligible(p, steps_done))
-                    {
+                    if let Some(pos) = queue.iter().position(|p| arrival_eligible(p, step_now)) {
                         let _ = queue.remove(pos);
                     }
                     continue;
@@ -552,7 +628,7 @@ fn serve_loop(
             let mut taken: Vec<Pending> = Vec::with_capacity(n);
             let mut kept: VecDeque<Pending> = VecDeque::with_capacity(queue.len());
             while let Some(p) = queue.pop_front() {
-                if taken.len() < n && arrival_eligible(&p, steps_done) {
+                if taken.len() < n && arrival_eligible(&p, step_now) {
                     taken.push(p);
                 } else {
                     kept.push_back(p);
@@ -563,20 +639,30 @@ fn serve_loop(
                 .iter()
                 .map(|p| tok.encode(&p.req.prompt, cfg.prompt_bucket))
                 .collect();
-            let admitted = Instant::now();
+            let admitted = clock.now();
             // Queued → Prefill: members exist (and own their lanes) for the
             // duration of the prefill call...
             let mut members: Vec<Member> = taken
                 .into_iter()
                 .enumerate()
-                .map(|(lane, p)| Member {
-                    req: p.req,
-                    arrived: p.arrived,
-                    admitted,
-                    first_tok: None,
-                    done: p.done,
-                    lane,
-                    state: RequestState::Prefill,
+                .map(|(lane, p)| {
+                    // under the step clock a trace request's queue wait is
+                    // measured from its *scheduled* arrival step, not from
+                    // whenever the submitting thread happened to enqueue it
+                    let arrived = match (clock.step_seconds(), p.req.arrival_step) {
+                        (Some(ss), Some(st)) => p.arrived.max(st as f64 * ss),
+                        _ => p.arrived,
+                    };
+                    tracer.emit(|| EventKind::ReqAdmit { id: p.req.id, lane });
+                    Member {
+                        req: p.req,
+                        arrived,
+                        admitted,
+                        first_tok: None,
+                        done: p.done,
+                        lane,
+                        state: RequestState::Prefill,
+                    }
                 })
                 .collect();
             let mut sess = engine.start_batch(&prompts)?;
@@ -592,13 +678,16 @@ fn serve_loop(
             metrics.record_batch(n);
             groups.push(Group { sess, members, kv: hold, last_l: 0 });
         }
+        tracer.emit(|| EventKind::PhaseEnd { phase: Phase::Stage });
 
         if groups.is_empty() {
+            tracer.emit(|| EventKind::PhaseEnd { phase: Phase::Step });
             continue;
         }
 
         // -- 2b. tiered kvstore: poll landed migrations, sync residency,
         //        queue prefetch ---------------------------------------------
+        tracer.emit(|| EventKind::PhaseBegin { phase: Phase::MigrationPoll });
         let mut mig_before = None;
         if let Some((s, pf)) = store.as_mut() {
             // surface reclamation drops performed during admission
@@ -638,6 +727,7 @@ fn serve_loop(
                 }
             }
         }
+        tracer.emit(|| EventKind::PhaseEnd { phase: Phase::MigrationPoll });
 
         // -- 3. re-plan every group over the declared chain ------------------
         // membership changed last step ⇒ the aggregate cost model changed
@@ -649,9 +739,14 @@ fn serve_loop(
         // (shrinks the transfer term), any dropped-KV prefix (floors the
         // recompute term) and the disk-resident prefix span (pays its
         // extra hops unless the fold raises the split over it).
+        tracer.emit(|| EventKind::PhaseBegin { phase: Phase::Plan });
         let mut plans: Vec<Option<usize>> = Vec::with_capacity(groups.len());
         let mut slack_total: u64 = 0;
-        for g in groups.iter_mut() {
+        // summed predicted step time across groups — the prediction half of
+        // the tracer's plan-vs-actual ledger (groups decode sequentially on
+        // the one engine, so the step's predicted wall time is the sum)
+        let mut predicted_s_total: f64 = 0.0;
+        for (gi, g) in groups.iter_mut().enumerate() {
             let plan = lane_planner.as_ref().map(|p| {
                 let lanes = vec![g.sess.kv_len(); g.sess.batch_bucket()];
                 let mut input = PlanInput::new(lanes).resident(g.sess.resident_tokens());
@@ -669,6 +764,13 @@ fn serve_loop(
             if let Some(pl) = &plan {
                 g.last_l = pl.l();
                 slack_total = slack_total.saturating_add(pl.link_slack_bytes);
+                predicted_s_total += pl.predicted_s;
+                tracer.emit(|| EventKind::Plan {
+                    group: gi,
+                    l: pl.l(),
+                    predicted_s: pl.predicted_s,
+                    slack_bytes: pl.link_slack_bytes,
+                });
             }
             plans.push(plan.map(|pl| pl.l()));
         }
@@ -680,14 +782,28 @@ fn serve_loop(
         //        can still ride the engine's oversized-block override —
         //        one launch, nothing more.  Launch order under the grant:
         //        demand promotions, demotion writebacks, prefetch, spill.
+        let mut step_grant: u64 = 0;
+        let mut step_launched: usize = 0;
+        let mut step_landed: usize = 0;
+        let mut step_launched_bytes: u64 = 0;
         if let (Some((s, _)), Some(t)) = (store.as_mut(), cfg.tiering.as_ref()) {
             let grant = t.step_budget_override.unwrap_or(slack_total.max(1));
             let launched_before = s.migration_stats().launched;
             s.pump_migrations(grant);
             let launched = s.migration_stats().launched - launched_before;
             metrics.record_step_budget(slack_total, grant, launched);
+            step_grant = grant;
+            step_launched = launched as usize;
+            step_launched_bytes = s.step_launched_wire_bytes();
+            tracer.emit(|| EventKind::StepBudget {
+                slack: slack_total,
+                granted: grant,
+                launched: launched as usize,
+                launched_bytes: step_launched_bytes,
+            });
             if let Some((mig0, st0)) = mig_before {
                 let (mig1, st1) = (s.migration_stats(), s.stats());
+                step_landed = (mig1.landed - mig0.landed) as usize;
                 metrics.record_migrations(
                     mig1.launched - mig0.launched,
                     mig1.landed - mig0.landed,
@@ -705,22 +821,30 @@ fn serve_loop(
                 seen_disk = disk;
             }
         }
+        tracer.emit(|| EventKind::PhaseEnd { phase: Phase::Plan });
 
         // -- 4. step every group ---------------------------------------------
-        let t_step = Instant::now();
+        tracer.emit(|| EventKind::PhaseBegin { phase: Phase::Compute });
+        let step_idx = clock.step();
+        let t_step = clock.now();
         let mut step_tokens = 0usize;
         let active: usize = groups.iter().map(|g| g.active()).sum();
         for (g, plan_l) in groups.iter_mut().zip(plans) {
             engine.decode_step_with_plan(&mut g.sess, plan_l)?;
             step_tokens += g.active();
         }
+        // the completed decode advances the serving clock one step (under
+        // the deterministic clock, exactly `step_s` seconds)
+        clock.advance();
+        let after_step = clock.now();
+        tracer.emit(|| EventKind::PhaseEnd { phase: Phase::Compute });
         // every decoding member just produced a token: stamp first-token
         // times for the TTFT samples retirement reports
-        let after_step = Instant::now();
         for g in groups.iter_mut() {
             for m in g.members.iter_mut() {
                 if m.state == RequestState::Decoding && m.first_tok.is_none() {
                     m.first_tok = Some(after_step);
+                    tracer.emit(|| EventKind::ReqFirstToken { id: m.req.id });
                 }
             }
         }
@@ -740,17 +864,23 @@ fn serve_loop(
                     let mut toks = g.sess.lane_tokens(m.lane).to_vec();
                     toks.truncate(m.req.gen_len);
                     let text = tok.decode(&toks);
-                    let queue_s = (m.admitted - m.arrived).as_secs_f64();
-                    let total_s = m.arrived.elapsed().as_secs_f64();
+                    let queue_s = (m.admitted - m.arrived).max(0.0);
+                    let retired = clock.now();
+                    let total_s = (retired - m.arrived).max(0.0);
                     metrics.record_request(total_s, queue_s, decode_s, toks.len());
-                    let retired = Instant::now();
                     let first = m.first_tok.unwrap_or(retired);
                     let tpot_s = if toks.len() > 1 {
-                        Some((retired - first).as_secs_f64() / (toks.len() - 1) as f64)
+                        Some((retired - first).max(0.0) / (toks.len() - 1) as f64)
                     } else {
                         None
                     };
-                    metrics.record_ttft_tpot((first - m.arrived).as_secs_f64(), tpot_s);
+                    let ttft_s = (first - m.arrived).max(0.0);
+                    metrics.record_ttft_tpot(ttft_s, tpot_s);
+                    tracer.emit(|| EventKind::ReqRetire {
+                        id: m.req.id,
+                        tokens: toks.len(),
+                        ttft_s,
+                    });
                     let _ = m.done.send(Response {
                         id: m.req.id,
                         text,
@@ -777,8 +907,20 @@ fn serve_loop(
         }
         groups = live;
 
-        metrics.record_step(queue.len(), active, t_step.elapsed().as_secs_f64(), step_tokens);
-        steps_done += 1;
+        metrics.record_step(queue.len(), active, clock.now() - t_step, step_tokens);
+        tracer.emit(|| EventKind::PhaseEnd { phase: Phase::Step });
+        // plan-vs-actual: the decode window is what `predicted_s` predicts,
+        // so the ledger measures it alone (metrics keep the wider span)
+        tracer.record_step(StepRecord {
+            step: step_idx,
+            predicted_s: predicted_s_total,
+            slack_bytes: slack_total,
+            granted_bytes: step_grant,
+            measured_s: after_step - t_step,
+            launched: step_launched,
+            launched_wire_bytes: step_launched_bytes,
+            landed: step_landed,
+        });
     }
     Ok(())
 }

@@ -102,6 +102,54 @@ impl SloAttainment {
     }
 }
 
+/// Token totals of the tiered kvstore's residency churn.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TieringTotals {
+    /// Tokens promoted into the device-resident window.
+    pub promoted_tokens: u64,
+    /// Tokens demoted out of it.
+    pub demoted_tokens: u64,
+    /// Prefix tokens whose KV the store dropped (keeping X) to reclaim
+    /// capacity.
+    pub kv_dropped_tokens: u64,
+}
+
+/// Migration-engine lifecycle totals.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MigrationTotals {
+    /// Migrations launched onto a wire.
+    pub launched: u64,
+    /// Migrations that landed and were installed.
+    pub landed: u64,
+    /// Pump passes deferred by the step's link-byte budget.
+    pub budget_deferrals: u64,
+}
+
+/// Asynchronous gpu-eviction demotion totals: `issued` counts evictions
+/// whose gpu bytes freed instantly; `polled` counts their writebacks
+/// landing on a *later* step — both non-zero proves the serving path
+/// never waited a demotion out.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DemotionTotals {
+    pub issued: u64,
+    pub polled: u64,
+}
+
+/// Disk-tier traffic totals.  Issued > 0 with polled > 0 proves every
+/// disk transfer moved through the migration engine's poll path — the
+/// step loop never blocked on NVMe.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DiskTotals {
+    /// dram→disk spills issued (dram bytes freed instantly).
+    pub spills_issued: u64,
+    /// Spill NVMe writebacks polled in.
+    pub spills_polled: u64,
+    /// disk→dram promotion hops issued (first leg of the two-hop path).
+    pub hops_issued: u64,
+    /// Promotion hops landed.
+    pub hops_polled: u64,
+}
+
 /// Aggregates of the per-step adaptive migration grant (the planner-slack
 /// budget the serving loop hands [`KvStore::pump_migrations`](crate::kvstore::KvStore::pump_migrations)).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -174,10 +222,14 @@ impl ServeMetrics {
         m.kv_dropped_tokens += kv_dropped;
     }
 
-    /// (promoted, demoted, kv-dropped) token totals of the tiered kvstore.
-    pub fn tiering_totals(&self) -> (u64, u64, u64) {
+    /// Token totals of the tiered kvstore's residency churn.
+    pub fn tiering_totals(&self) -> TieringTotals {
         let m = self.inner.lock().unwrap();
-        (m.promoted_tokens, m.demoted_tokens, m.kv_dropped_tokens)
+        TieringTotals {
+            promoted_tokens: m.promoted_tokens,
+            demoted_tokens: m.demoted_tokens,
+            kv_dropped_tokens: m.kv_dropped_tokens,
+        }
     }
 
     /// Migration-engine lifecycle activity this step: migrations launched
@@ -200,19 +252,23 @@ impl ServeMetrics {
         m.demotions_polled += demotions_polled;
     }
 
-    /// (launched, landed, budget-deferrals) migration totals.
-    pub fn migration_totals(&self) -> (u64, u64, u64) {
+    /// Migration-engine lifecycle totals.
+    pub fn migration_totals(&self) -> MigrationTotals {
         let m = self.inner.lock().unwrap();
-        (m.migrations_launched, m.migrations_landed, m.migration_deferrals)
+        MigrationTotals {
+            launched: m.migrations_launched,
+            landed: m.migrations_landed,
+            budget_deferrals: m.migration_deferrals,
+        }
     }
 
-    /// (issued, polled-in) asynchronous demotion totals: issued counts
-    /// evictions whose gpu bytes freed instantly; polled counts their
-    /// writebacks landing on a *later* step — both non-zero proves the
-    /// serving path never waited a demotion out.
-    pub fn demotion_totals(&self) -> (u64, u64) {
+    /// Asynchronous demotion totals (see [`DemotionTotals`]).
+    pub fn demotion_totals(&self) -> DemotionTotals {
         let m = self.inner.lock().unwrap();
-        (m.demotions_issued, m.demotions_polled)
+        DemotionTotals {
+            issued: m.demotions_issued,
+            polled: m.demotions_polled,
+        }
     }
 
     /// Disk-tier traffic this step: dram→disk spills issued (dram bytes
@@ -233,13 +289,15 @@ impl ServeMetrics {
         m.hops_polled += hops_polled;
     }
 
-    /// (spills issued, spill writebacks polled, hops issued, hops polled)
-    /// disk-tier totals.  Issued > 0 with polled > 0 proves every disk
-    /// transfer moved through the migration engine's poll path — the step
-    /// loop never blocked on NVMe.
-    pub fn disk_totals(&self) -> (u64, u64, u64, u64) {
+    /// Disk-tier traffic totals (see [`DiskTotals`]).
+    pub fn disk_totals(&self) -> DiskTotals {
         let m = self.inner.lock().unwrap();
-        (m.spills_issued, m.spills_polled, m.hops_issued, m.hops_polled)
+        DiskTotals {
+            spills_issued: m.spills_issued,
+            spills_polled: m.spills_polled,
+            hops_issued: m.hops_issued,
+            hops_polled: m.hops_polled,
+        }
     }
 
     /// One step's migration grant: the planner-predicted idle-link slack,
@@ -482,31 +540,53 @@ mod tests {
     #[test]
     fn tiering_counters() {
         let m = ServeMetrics::new();
-        assert_eq!(m.tiering_totals(), (0, 0, 0));
+        assert_eq!(m.tiering_totals(), TieringTotals::default());
         m.record_tiering(32, 0, 0);
         m.record_tiering(16, 8, 32);
-        assert_eq!(m.tiering_totals(), (48, 8, 32));
+        assert_eq!(
+            m.tiering_totals(),
+            TieringTotals {
+                promoted_tokens: 48,
+                demoted_tokens: 8,
+                kv_dropped_tokens: 32,
+            }
+        );
         assert_eq!(m.peak_occupancy(), 0.0);
     }
 
     #[test]
     fn migration_counters() {
         let m = ServeMetrics::new();
-        assert_eq!(m.migration_totals(), (0, 0, 0));
-        assert_eq!(m.demotion_totals(), (0, 0));
+        assert_eq!(m.migration_totals(), MigrationTotals::default());
+        assert_eq!(m.demotion_totals(), DemotionTotals::default());
         m.record_migrations(3, 1, 1, 1, 0);
         m.record_migrations(0, 2, 0, 0, 1);
-        assert_eq!(m.migration_totals(), (3, 3, 1));
-        assert_eq!(m.demotion_totals(), (1, 1));
+        assert_eq!(
+            m.migration_totals(),
+            MigrationTotals {
+                launched: 3,
+                landed: 3,
+                budget_deferrals: 1,
+            }
+        );
+        assert_eq!(m.demotion_totals(), DemotionTotals { issued: 1, polled: 1 });
     }
 
     #[test]
     fn disk_counters() {
         let m = ServeMetrics::new();
-        assert_eq!(m.disk_totals(), (0, 0, 0, 0));
+        assert_eq!(m.disk_totals(), DiskTotals::default());
         m.record_disk(2, 0, 1, 0);
         m.record_disk(0, 2, 0, 1);
-        assert_eq!(m.disk_totals(), (2, 2, 1, 1));
+        assert_eq!(
+            m.disk_totals(),
+            DiskTotals {
+                spills_issued: 2,
+                spills_polled: 2,
+                hops_issued: 1,
+                hops_polled: 1,
+            }
+        );
     }
 
     #[test]

@@ -41,7 +41,10 @@ mod server;
 
 pub use batcher::Batcher;
 pub use continuous::{ContinuousConfig, ContinuousServer, TieredKvConfig};
-pub use metrics::{LatencyPercentiles, ServeMetrics, SloAttainment, StepBudgetTotals};
+pub use metrics::{
+    DemotionTotals, DiskTotals, LatencyPercentiles, MigrationTotals, ServeMetrics, SloAttainment,
+    StepBudgetTotals, TieringTotals,
+};
 pub use request::{Request, RequestState, Response};
 pub use router::Router;
 pub use server::{ResponseHandle, Server, ServerConfig};

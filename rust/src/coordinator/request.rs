@@ -1,8 +1,6 @@
 //! Request/response types and the per-request lifecycle state machine the
 //! continuous-batching loop drives.
 
-use std::time::Instant;
-
 /// Lifecycle of a request inside the serving loop:
 /// `Queued → Prefill → Decoding → Done`.
 ///
@@ -68,6 +66,10 @@ pub struct Response {
 /// Internal envelope carrying arrival time + completion channel.
 pub(crate) struct Pending {
     pub req: Request,
-    pub arrived: Instant,
+    /// Arrival stamp in seconds on the owning server's
+    /// [`Clock`](crate::util::clock::Clock) — wall-elapsed or virtual
+    /// step time depending on the server's clock mode, so every latency
+    /// derived from it is reproducible under the deterministic clock.
+    pub arrived: f64,
     pub done: std::sync::mpsc::Sender<Response>,
 }

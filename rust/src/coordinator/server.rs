@@ -2,7 +2,7 @@
 
 use std::path::PathBuf;
 use std::sync::mpsc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
@@ -11,6 +11,7 @@ use super::metrics::ServeMetrics;
 use super::request::{Pending, Request, Response};
 use crate::engine::{Engine, EngineConfig};
 use crate::model::ByteTokenizer;
+use crate::util::clock::Clock;
 
 /// Server construction parameters.
 #[derive(Debug, Clone)]
@@ -55,6 +56,7 @@ pub struct Server {
     worker: Option<std::thread::JoinHandle<Result<()>>>,
     metrics: ServeMetrics,
     next_id: std::sync::atomic::AtomicU64,
+    clock: Clock,
 }
 
 impl Server {
@@ -63,11 +65,13 @@ impl Server {
         let (tx, rx) = mpsc::channel::<Pending>();
         let metrics = ServeMetrics::new();
         let m2 = metrics.clone();
+        let clock = Clock::wall();
+        let c2 = clock.clone();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
 
         let worker = std::thread::Builder::new()
             .name("kvpr-server".into())
-            .spawn(move || serve_loop(cfg, rx, m2, ready_tx))
+            .spawn(move || serve_loop(cfg, rx, m2, ready_tx, c2))
             .context("spawn server thread")?;
         ready_rx
             .recv()
@@ -77,6 +81,7 @@ impl Server {
             worker: Some(worker),
             metrics,
             next_id: std::sync::atomic::AtomicU64::new(1),
+            clock,
         })
     }
 
@@ -94,7 +99,7 @@ impl Server {
 
     pub fn submit_request(&self, req: Request) -> ResponseHandle {
         let (done, rx) = mpsc::channel();
-        let pending = Pending { req, arrived: Instant::now(), done };
+        let pending = Pending { req, arrived: self.clock.now(), done };
         self.tx
             .as_ref()
             .expect("server shut down")
@@ -127,6 +132,7 @@ fn serve_loop(
     rx: mpsc::Receiver<Pending>,
     metrics: ServeMetrics,
     ready: mpsc::Sender<Result<()>>,
+    clock: Clock,
 ) -> Result<()> {
     let engine = match Engine::new(&cfg.artifact_dir, cfg.engine.clone()) {
         Ok(e) => {
@@ -148,17 +154,17 @@ fn serve_loop(
             .iter()
             .map(|p| tok.encode(&p.req.prompt, cfg.prompt_bucket))
             .collect();
-        let t0 = Instant::now();
+        let t0_s = clock.now();
         let result = engine.generate(&prompts, gen_len);
         match result {
             Ok(gen) => {
-                let total_batch_s = t0.elapsed().as_secs_f64();
+                let total_batch_s = clock.now() - t0_s;
                 for (i, p) in batch.into_iter().enumerate() {
                     let mut toks = gen.tokens[i].clone();
                     toks.truncate(p.req.gen_len);
                     let text = tok.decode(&toks);
-                    let queue_s = (t0 - p.arrived).as_secs_f64().max(0.0);
-                    let total_s = p.arrived.elapsed().as_secs_f64();
+                    let queue_s = (t0_s - p.arrived).max(0.0);
+                    let total_s = (clock.now() - p.arrived).max(0.0);
                     metrics.record_request(total_s, queue_s, gen.metrics.decode_s, toks.len());
                     let _ = p.done.send(Response {
                         id: p.req.id,

@@ -46,6 +46,7 @@
 use std::collections::VecDeque;
 
 use crate::memory::PoolGuard;
+use crate::obs::{EventKind, MigPhase, Tracer};
 use crate::transfer::{LinkConfig, Priority, TransferHandle};
 
 use super::block::{BlockId, Tier};
@@ -83,6 +84,16 @@ pub enum MigrationClass {
 }
 
 impl MigrationClass {
+    /// Stable lowercase label (trace events, tables).
+    pub fn name(self) -> &'static str {
+        match self {
+            MigrationClass::Promote => "promote",
+            MigrationClass::Demote => "demote",
+            MigrationClass::Prefetch => "prefetch",
+            MigrationClass::Spill => "spill",
+        }
+    }
+
     fn rank(self) -> u8 {
         match self {
             MigrationClass::Promote => 0,
@@ -134,11 +145,16 @@ struct Queued {
     dest: PoolGuard,
 }
 
-/// An in-flight migration: staging pinned, bytes riding a wire.
+/// An in-flight migration: staging pinned, bytes riding a wire.  Carries
+/// its hop/class/bytes tags through to landing so the landed trace event
+/// is as fully tagged as the queued one.
 struct InFlight {
     id: MigrationId,
     block: BlockId,
+    from: Tier,
     to: Tier,
+    class: MigrationClass,
+    wire_bytes: u64,
     dest: PoolGuard,
     staging: Vec<f32>,
     handle: TransferHandle,
@@ -174,6 +190,9 @@ pub struct MigrationEngine {
     step_wire_bytes: u64,
     wire_elem_bytes: f64,
     stats: MigrationStats,
+    /// Lifecycle trace sink (the no-op sink unless the serving loop
+    /// installs its tracer via [`MigrationEngine::set_tracer`]).
+    tracer: Tracer,
 }
 
 impl MigrationEngine {
@@ -198,7 +217,15 @@ impl MigrationEngine {
             step_wire_bytes: 0,
             wire_elem_bytes,
             stats: MigrationStats::default(),
+            tracer: Tracer::disabled(),
         }
+    }
+
+    /// Route lifecycle events (queued → staged → in-flight → landed, plus
+    /// cancellations) into `tracer`, tagged with tier hop, class and wire
+    /// bytes.  The engine starts with the no-op sink.
+    pub fn set_tracer(&mut self, tracer: Tracer) {
+        self.tracer = tracer;
     }
 
     /// The tier pools / links / staging this engine migrates over.
@@ -253,16 +280,17 @@ impl MigrationEngine {
         let dest = self.mgr.grab(to, storage_bytes)?;
         let id = MigrationId(self.next_id);
         self.next_id += 1;
-        self.queued.push_back(Queued {
-            id,
-            block,
-            from,
-            to,
-            wire_bytes: self.wire_bytes_of(storage_bytes),
-            class,
-            dest,
-        });
+        let wire_bytes = self.wire_bytes_of(storage_bytes);
+        self.queued.push_back(Queued { id, block, from, to, wire_bytes, class, dest });
         self.stats.requested += 1;
+        self.tracer.emit(|| EventKind::Migration {
+            id: id.0,
+            phase: MigPhase::Queued,
+            class: class.name().to_string(),
+            from: from.name().to_string(),
+            to: to.name().to_string(),
+            bytes: wire_bytes,
+        });
         Some(id)
     }
 
@@ -307,6 +335,14 @@ impl MigrationEngine {
             // staged: pin the wire-sized staging buffer...
             let n = (q.wire_bytes.div_ceil(4)) as usize;
             let staging = self.mgr.staging().get(n);
+            self.tracer.emit(|| EventKind::Migration {
+                id: q.id.0,
+                phase: MigPhase::Staged,
+                class: q.class.name().to_string(),
+                from: q.from.name().to_string(),
+                to: q.to.name().to_string(),
+                bytes: q.wire_bytes,
+            });
             // ...and in-flight: the wire bytes ride the hop's wire
             let handle = self.mgr.link_for(q.from, q.to).submit_timing(n, q.class.priority());
             if q.from.is_disk() || q.to.is_disk() {
@@ -317,10 +353,21 @@ impl MigrationEngine {
             self.step_wire_bytes += q.wire_bytes;
             self.stats.launched += 1;
             self.stats.wire_bytes += q.wire_bytes;
+            self.tracer.emit(|| EventKind::Migration {
+                id: q.id.0,
+                phase: MigPhase::InFlight,
+                class: q.class.name().to_string(),
+                from: q.from.name().to_string(),
+                to: q.to.name().to_string(),
+                bytes: q.wire_bytes,
+            });
             self.inflight.push(InFlight {
                 id: q.id,
                 block: q.block,
+                from: q.from,
                 to: q.to,
+                class: q.class,
+                wire_bytes: q.wire_bytes,
                 dest: q.dest,
                 staging,
                 handle,
@@ -354,6 +401,14 @@ impl MigrationEngine {
                 fin.handle.wait(); // already done: returns immediately
                 self.mgr.staging().put(fin.staging);
                 self.stats.landed += 1;
+                self.tracer.emit(|| EventKind::Migration {
+                    id: fin.id.0,
+                    phase: MigPhase::Landed,
+                    class: fin.class.name().to_string(),
+                    from: fin.from.name().to_string(),
+                    to: fin.to.name().to_string(),
+                    bytes: fin.wire_bytes,
+                });
                 landed.push(Landed { id: fin.id, block: fin.block, to: fin.to, guard: fin.dest });
             } else {
                 i += 1;
@@ -371,12 +426,30 @@ impl MigrationEngine {
     /// link either.
     pub fn finish(&mut self, id: MigrationId) {
         if let Some(pos) = self.queued.iter().position(|q| q.id == id) {
-            drop(self.queued.remove(pos));
+            let q = self.queued.remove(pos).expect("position from iter");
+            self.tracer.emit(|| EventKind::Migration {
+                id: q.id.0,
+                phase: MigPhase::Canceled,
+                class: q.class.name().to_string(),
+                from: q.from.name().to_string(),
+                to: q.to.name().to_string(),
+                bytes: q.wire_bytes,
+            });
+            drop(q);
             self.stats.canceled += 1;
             return;
         }
         if let Some(pos) = self.inflight.iter().position(|f| f.id == id) {
-            self.draining.push(self.inflight.swap_remove(pos));
+            let f = self.inflight.swap_remove(pos);
+            self.tracer.emit(|| EventKind::Migration {
+                id: f.id.0,
+                phase: MigPhase::Canceled,
+                class: f.class.name().to_string(),
+                from: f.from.name().to_string(),
+                to: f.to.name().to_string(),
+                bytes: f.wire_bytes,
+            });
+            self.draining.push(f);
             self.stats.canceled += 1;
         }
     }

@@ -299,6 +299,19 @@ impl KvStore {
         self.mig.stats()
     }
 
+    /// Wire bytes the embedded migration engine launched under the current
+    /// step's grant (the actual half of the serving loop's plan-vs-actual
+    /// ledger; resets at each [`KvStore::pump_migrations`]).
+    pub fn step_launched_wire_bytes(&self) -> u64 {
+        self.mig.step_launched_wire_bytes()
+    }
+
+    /// Route the embedded migration engine's lifecycle events into
+    /// `tracer` (see [`MigrationEngine::set_tracer`]).
+    pub fn set_tracer(&mut self, tracer: crate::obs::Tracer) {
+        self.mig.set_tracer(tracer);
+    }
+
     /// Bytes currently reserved in `tier`.
     pub fn tier_used(&self, tier: Tier) -> u64 {
         self.mig.tiers().pool(tier).used()

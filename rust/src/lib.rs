@@ -44,6 +44,11 @@
 //! * [`sim`] — discrete-event simulator of the paper's testbeds (A100 +
 //!   PCIe 4.0 x16, RTX 5000 + x8) used to regenerate every table and figure
 //!   of the evaluation at paper scale.
+//! * [`obs`] — observability: a zero-dependency step-level tracer
+//!   (request / phase / migration lifecycle events on the decode-step
+//!   virtual clock), plan-vs-actual residual telemetry, a flight recorder
+//!   with anomaly-triggered JSON dumps, and a Chrome `trace_event`
+//!   exporter (`examples/trace_dump.rs`); costs one branch when disabled.
 //! * [`workload`] — deterministic trace generator (bursty/diurnal arrival
 //!   processes, heavy-tailed context lengths, chat think-time gaps, RAG
 //!   mixes as a declarative [`workload::WorkloadSpec`]); the same seeded
@@ -64,6 +69,7 @@ pub mod kvcache;
 pub mod kvstore;
 pub mod memory;
 pub mod model;
+pub mod obs;
 pub mod paper;
 pub mod profiler;
 pub mod runtime;

@@ -1,0 +1,244 @@
+//! Chrome `trace_event` exporter: loads in Perfetto / `chrome://tracing`.
+//!
+//! The serving loop's virtual clock is the decode step, so the export maps
+//! one step to 1 ms of trace time (`ts = step·1000 + ordinal` µs, the
+//! within-step emission ordinal breaking ties) — wall time never enters,
+//! which is what makes two seeded replays byte-identical.  Phases become
+//! synchronous `B`/`E` spans (the `step` span encloses the four sub-phase
+//! spans), requests become async `b`/`n`/`e` spans keyed by request id,
+//! migrations and plans are instants, and the per-step link budget is a
+//! counter track (`C`).
+
+use crate::obs::event::{Event, EventKind};
+use crate::util::json::Json;
+
+fn base(ph: &str, name: &str, cat: &str, ts: u64) -> Vec<(&'static str, Json)> {
+    vec![
+        ("ph", ph.into()),
+        ("name", name.into()),
+        ("cat", cat.into()),
+        ("ts", Json::from(ts as f64)),
+        ("pid", Json::from(1usize)),
+        ("tid", Json::from(1usize)),
+    ]
+}
+
+/// Convert an event stream (as produced by
+/// [`Tracer::events`](crate::obs::Tracer::events)) into a Chrome
+/// `trace_event` JSON document.
+pub fn chrome_trace(events: &[Event]) -> Json {
+    let mut out: Vec<Json> = Vec::with_capacity(events.len());
+    let (mut cur_step, mut ordinal) = (u64::MAX, 0u64);
+    for ev in events {
+        if ev.step != cur_step {
+            cur_step = ev.step;
+            ordinal = 0;
+        }
+        let ts = ev.step * 1000 + ordinal.min(999);
+        ordinal += 1;
+        let mut kv = match &ev.kind {
+            EventKind::PhaseBegin { phase } => base("B", phase.name(), "step", ts),
+            EventKind::PhaseEnd { phase } => base("E", phase.name(), "step", ts),
+            EventKind::ReqArrive { id } => {
+                let mut kv = base("b", "req", "request", ts);
+                kv.push(("id", Json::from(*id as f64)));
+                kv
+            }
+            EventKind::ReqAdmit { id, lane } => {
+                let mut kv = base("n", "req", "request", ts);
+                kv.push(("id", Json::from(*id as f64)));
+                kv.push((
+                    "args",
+                    Json::obj(vec![
+                        ("milestone", "admit".into()),
+                        ("lane", Json::from(*lane)),
+                    ]),
+                ));
+                kv
+            }
+            EventKind::ReqFirstToken { id } => {
+                let mut kv = base("n", "req", "request", ts);
+                kv.push(("id", Json::from(*id as f64)));
+                kv.push(("args", Json::obj(vec![("milestone", "first_token".into())])));
+                kv
+            }
+            EventKind::ReqRetire { id, tokens, ttft_s } => {
+                let mut kv = base("e", "req", "request", ts);
+                kv.push(("id", Json::from(*id as f64)));
+                kv.push((
+                    "args",
+                    Json::obj(vec![
+                        ("tokens", Json::from(*tokens)),
+                        ("ttft_s", Json::from(*ttft_s)),
+                    ]),
+                ));
+                kv
+            }
+            EventKind::Plan {
+                group,
+                l,
+                predicted_s,
+                slack_bytes,
+            } => {
+                let mut kv = base("i", "plan", "plan", ts);
+                kv.push(("s", "t".into()));
+                kv.push((
+                    "args",
+                    Json::obj(vec![
+                        ("group", Json::from(*group)),
+                        ("l", Json::from(*l)),
+                        ("predicted_s", Json::from(*predicted_s)),
+                        ("slack_bytes", Json::from(*slack_bytes as f64)),
+                    ]),
+                ));
+                kv
+            }
+            EventKind::StepBudget {
+                slack,
+                granted,
+                launched,
+                launched_bytes,
+            } => {
+                let mut kv = base("C", "link_budget", "step", ts);
+                kv.push((
+                    "args",
+                    Json::obj(vec![
+                        ("slack", Json::from(*slack as f64)),
+                        ("granted", Json::from(*granted as f64)),
+                        ("launched", Json::from(*launched)),
+                        ("launched_bytes", Json::from(*launched_bytes as f64)),
+                    ]),
+                ));
+                kv
+            }
+            EventKind::Migration {
+                id,
+                phase,
+                class,
+                from,
+                to,
+                bytes,
+            } => {
+                let mut kv = base("i", phase.name(), "migration", ts);
+                kv.push(("s", "t".into()));
+                kv.push((
+                    "args",
+                    Json::obj(vec![
+                        ("id", Json::from(*id as f64)),
+                        ("class", class.as_str().into()),
+                        ("from", from.as_str().into()),
+                        ("to", to.as_str().into()),
+                        ("bytes", Json::from(*bytes as f64)),
+                    ]),
+                ));
+                kv
+            }
+            EventKind::Backpressure => {
+                let mut kv = base("i", "backpressure", "step", ts);
+                kv.push(("s", "t".into()));
+                kv
+            }
+            EventKind::Anomaly { reason } => {
+                let mut kv = base("i", "anomaly", "anomaly", ts);
+                kv.push(("s", "g".into()));
+                kv.push(("args", Json::obj(vec![("reason", reason.as_str().into())])));
+                kv
+            }
+        };
+        kv.push(("seq", Json::from(ev.seq as f64)));
+        out.push(Json::obj(kv));
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(out)),
+        ("displayTimeUnit", "ms".into()),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::event::Phase;
+
+    fn ev(step: u64, seq: u64, kind: EventKind) -> Event {
+        Event { step, seq, kind }
+    }
+
+    fn sample() -> Vec<Event> {
+        vec![
+            ev(0, 0, EventKind::ReqArrive { id: 7 }),
+            ev(0, 1, EventKind::PhaseBegin { phase: Phase::Step }),
+            ev(0, 2, EventKind::PhaseBegin { phase: Phase::Stage }),
+            ev(0, 3, EventKind::ReqAdmit { id: 7, lane: 0 }),
+            ev(0, 4, EventKind::PhaseEnd { phase: Phase::Stage }),
+            ev(
+                0,
+                5,
+                EventKind::PhaseBegin {
+                    phase: Phase::Compute,
+                },
+            ),
+            ev(0, 6, EventKind::PhaseEnd { phase: Phase::Compute }),
+            ev(0, 7, EventKind::ReqFirstToken { id: 7 }),
+            ev(0, 8, EventKind::PhaseEnd { phase: Phase::Step }),
+            ev(
+                1,
+                9,
+                EventKind::ReqRetire {
+                    id: 7,
+                    tokens: 2,
+                    ttft_s: 0.25,
+                },
+            ),
+        ]
+    }
+
+    #[test]
+    fn timestamps_are_monotone_and_step_scaled() {
+        let doc = chrome_trace(&sample());
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), 10);
+        let ts: Vec<f64> = evs.iter().map(|e| e.at(&["ts"]).as_f64().unwrap()).collect();
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]), "ts must be ordered: {ts:?}");
+        // step 1 events start at the 1 ms boundary
+        assert_eq!(ts[9], 1000.0);
+    }
+
+    #[test]
+    fn spans_nest_properly() {
+        let doc = chrome_trace(&sample());
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let mut stack: Vec<String> = Vec::new();
+        for e in evs {
+            match e.at(&["ph"]).as_str().unwrap() {
+                "B" => stack.push(e.at(&["name"]).as_str().unwrap().to_string()),
+                "E" => {
+                    let open = stack.pop().expect("E without open span");
+                    assert_eq!(open, e.at(&["name"]).as_str().unwrap(), "mismatched span close");
+                }
+                _ => {}
+            }
+        }
+        assert!(stack.is_empty(), "unclosed spans: {stack:?}");
+    }
+
+    #[test]
+    fn request_async_span_is_keyed_by_request_id() {
+        let doc = chrome_trace(&sample());
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let req: Vec<&Json> = evs
+            .iter()
+            .filter(|e| e.at(&["cat"]).as_str() == Some("request"))
+            .collect();
+        let phs: Vec<&str> = req.iter().map(|e| e.at(&["ph"]).as_str().unwrap()).collect();
+        assert_eq!(phs, vec!["b", "n", "n", "e"]);
+        assert!(req.iter().all(|e| e.at(&["id"]).as_f64() == Some(7.0)));
+    }
+
+    #[test]
+    fn export_is_deterministic_and_parses() {
+        let a = chrome_trace(&sample()).to_string();
+        let b = chrome_trace(&sample()).to_string();
+        assert_eq!(a, b);
+        assert!(Json::parse(&a).is_ok());
+    }
+}

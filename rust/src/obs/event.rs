@@ -1,0 +1,350 @@
+//! Typed trace events and their lossless JSON encoding.
+//!
+//! One [`Event`] is a `(step, seq, kind)` triple: `step` is the serving
+//! loop's decode-step clock at emission time, `seq` a global monotonically
+//! increasing ordinal (total order over the whole trace), and
+//! [`EventKind`] the payload.  Events serialise to flat, tag-discriminated
+//! JSON objects through [`crate::util::json::Json`] — the writer's ordered
+//! keys make encoded traces byte-stable, and [`Event::from_json`] round-trips
+//! them back for postmortem tooling and the flight-recorder tests.
+
+use crate::util::json::Json;
+
+/// Serving-loop phase a span event brackets (one B/E pair per phase per
+/// step in the Chrome export; `Step` encloses the other four).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// The whole decode step (admission through retirement).
+    Step,
+    /// Admission / prefill staging (§2 of the loop).
+    Stage,
+    /// Tier sync + migration completion polling (§2b).
+    MigrationPoll,
+    /// Per-group Eq. (11) re-planning and the slack→grant derivation (§3).
+    Plan,
+    /// The engine decode step itself (§4).
+    Compute,
+}
+
+impl Phase {
+    /// Stable lower-case label used in JSON and the Chrome export.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Step => "step",
+            Phase::Stage => "stage",
+            Phase::MigrationPoll => "migration_poll",
+            Phase::Plan => "plan",
+            Phase::Compute => "compute",
+        }
+    }
+
+    fn parse(s: &str) -> Option<Phase> {
+        Some(match s {
+            "step" => Phase::Step,
+            "stage" => Phase::Stage,
+            "migration_poll" => Phase::MigrationPoll,
+            "plan" => Phase::Plan,
+            "compute" => Phase::Compute,
+            _ => return None,
+        })
+    }
+}
+
+/// Where in the queued → staged → in-flight → landed lifecycle a
+/// migration event was emitted (plus cancellation on sequence release).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MigPhase {
+    /// Destination reserved, waiting for link-budget grant.
+    Queued,
+    /// Copied into the pinned staging buffer at launch.
+    Staged,
+    /// Riding the wire.
+    InFlight,
+    /// Completion observed by `poll()`.
+    Landed,
+    /// Released before landing; parked on the drain list.
+    Canceled,
+}
+
+impl MigPhase {
+    /// Stable lower-case label used in JSON and the Chrome export.
+    pub fn name(&self) -> &'static str {
+        match self {
+            MigPhase::Queued => "queued",
+            MigPhase::Staged => "staged",
+            MigPhase::InFlight => "in_flight",
+            MigPhase::Landed => "landed",
+            MigPhase::Canceled => "canceled",
+        }
+    }
+
+    fn parse(s: &str) -> Option<MigPhase> {
+        Some(match s {
+            "queued" => MigPhase::Queued,
+            "staged" => MigPhase::Staged,
+            "in_flight" => MigPhase::InFlight,
+            "landed" => MigPhase::Landed,
+            "canceled" => MigPhase::Canceled,
+            _ => return None,
+        })
+    }
+}
+
+/// The typed payload of one trace event.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventKind {
+    /// Request entered the serving queue.
+    ReqArrive { id: u64 },
+    /// Request admitted into a decode group on `lane`.
+    ReqAdmit { id: u64, lane: usize },
+    /// First generated token produced.
+    ReqFirstToken { id: u64 },
+    /// Request finished and left the loop.
+    ReqRetire { id: u64, tokens: usize, ttft_s: f64 },
+    /// A serving-loop phase opened.
+    PhaseBegin { phase: Phase },
+    /// A serving-loop phase closed.
+    PhaseEnd { phase: Phase },
+    /// One group's step plan (Eq. 11 output) for this step.
+    Plan {
+        group: usize,
+        l: usize,
+        predicted_s: f64,
+        slack_bytes: u64,
+    },
+    /// The step's slack→grant derivation and what the grant bought.
+    StepBudget {
+        slack: u64,
+        granted: u64,
+        launched: usize,
+        launched_bytes: u64,
+    },
+    /// Migration lifecycle transition, tagged with the tier hop.
+    Migration {
+        id: u64,
+        phase: MigPhase,
+        class: String,
+        from: String,
+        to: String,
+        bytes: u64,
+    },
+    /// Admission hit backpressure this step.
+    Backpressure,
+    /// Flight-recorder trigger fired (`reason` matches the dump's).
+    Anomaly { reason: String },
+}
+
+/// One trace event (see the [module docs](self)).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    /// Decode-step clock at emission.
+    pub step: u64,
+    /// Global emission ordinal (total order).
+    pub seq: u64,
+    /// Payload.
+    pub kind: EventKind,
+}
+
+impl Event {
+    /// Encode as a flat JSON object with a `"kind"` tag.
+    pub fn to_json(&self) -> Json {
+        let mut kv: Vec<(&str, Json)> = vec![
+            ("step", Json::from(self.step as f64)),
+            ("seq", Json::from(self.seq as f64)),
+        ];
+        match &self.kind {
+            EventKind::ReqArrive { id } => {
+                kv.push(("kind", "req_arrive".into()));
+                kv.push(("id", Json::from(*id as f64)));
+            }
+            EventKind::ReqAdmit { id, lane } => {
+                kv.push(("kind", "req_admit".into()));
+                kv.push(("id", Json::from(*id as f64)));
+                kv.push(("lane", Json::from(*lane)));
+            }
+            EventKind::ReqFirstToken { id } => {
+                kv.push(("kind", "req_first_token".into()));
+                kv.push(("id", Json::from(*id as f64)));
+            }
+            EventKind::ReqRetire { id, tokens, ttft_s } => {
+                kv.push(("kind", "req_retire".into()));
+                kv.push(("id", Json::from(*id as f64)));
+                kv.push(("tokens", Json::from(*tokens)));
+                kv.push(("ttft_s", Json::from(*ttft_s)));
+            }
+            EventKind::PhaseBegin { phase } => {
+                kv.push(("kind", "phase_begin".into()));
+                kv.push(("phase", phase.name().into()));
+            }
+            EventKind::PhaseEnd { phase } => {
+                kv.push(("kind", "phase_end".into()));
+                kv.push(("phase", phase.name().into()));
+            }
+            EventKind::Plan {
+                group,
+                l,
+                predicted_s,
+                slack_bytes,
+            } => {
+                kv.push(("kind", "plan".into()));
+                kv.push(("group", Json::from(*group)));
+                kv.push(("l", Json::from(*l)));
+                kv.push(("predicted_s", Json::from(*predicted_s)));
+                kv.push(("slack_bytes", Json::from(*slack_bytes as f64)));
+            }
+            EventKind::StepBudget {
+                slack,
+                granted,
+                launched,
+                launched_bytes,
+            } => {
+                kv.push(("kind", "step_budget".into()));
+                kv.push(("slack", Json::from(*slack as f64)));
+                kv.push(("granted", Json::from(*granted as f64)));
+                kv.push(("launched", Json::from(*launched)));
+                kv.push(("launched_bytes", Json::from(*launched_bytes as f64)));
+            }
+            EventKind::Migration {
+                id,
+                phase,
+                class,
+                from,
+                to,
+                bytes,
+            } => {
+                kv.push(("kind", "migration".into()));
+                kv.push(("id", Json::from(*id as f64)));
+                kv.push(("phase", phase.name().into()));
+                kv.push(("class", class.as_str().into()));
+                kv.push(("from", from.as_str().into()));
+                kv.push(("to", to.as_str().into()));
+                kv.push(("bytes", Json::from(*bytes as f64)));
+            }
+            EventKind::Backpressure => kv.push(("kind", "backpressure".into())),
+            EventKind::Anomaly { reason } => {
+                kv.push(("kind", "anomaly".into()));
+                kv.push(("reason", reason.as_str().into()));
+            }
+        }
+        Json::obj(kv)
+    }
+
+    /// Decode an event encoded by [`Event::to_json`].
+    pub fn from_json(j: &Json) -> Option<Event> {
+        let step = j.get("step")?.as_f64()? as u64;
+        let seq = j.get("seq")?.as_f64()? as u64;
+        let u = |key: &str| j.get(key).and_then(Json::as_f64).map(|v| v as u64);
+        let us = |key: &str| j.get(key).and_then(Json::as_usize);
+        let s = |key: &str| j.get(key).and_then(Json::as_str).map(str::to_string);
+        let kind = match j.get("kind")?.as_str()? {
+            "req_arrive" => EventKind::ReqArrive { id: u("id")? },
+            "req_admit" => EventKind::ReqAdmit {
+                id: u("id")?,
+                lane: us("lane")?,
+            },
+            "req_first_token" => EventKind::ReqFirstToken { id: u("id")? },
+            "req_retire" => EventKind::ReqRetire {
+                id: u("id")?,
+                tokens: us("tokens")?,
+                ttft_s: j.get("ttft_s")?.as_f64()?,
+            },
+            "phase_begin" => EventKind::PhaseBegin {
+                phase: Phase::parse(j.get("phase")?.as_str()?)?,
+            },
+            "phase_end" => EventKind::PhaseEnd {
+                phase: Phase::parse(j.get("phase")?.as_str()?)?,
+            },
+            "plan" => EventKind::Plan {
+                group: us("group")?,
+                l: us("l")?,
+                predicted_s: j.get("predicted_s")?.as_f64()?,
+                slack_bytes: u("slack_bytes")?,
+            },
+            "step_budget" => EventKind::StepBudget {
+                slack: u("slack")?,
+                granted: u("granted")?,
+                launched: us("launched")?,
+                launched_bytes: u("launched_bytes")?,
+            },
+            "migration" => EventKind::Migration {
+                id: u("id")?,
+                phase: MigPhase::parse(j.get("phase")?.as_str()?)?,
+                class: s("class")?,
+                from: s("from")?,
+                to: s("to")?,
+                bytes: u("bytes")?,
+            },
+            "backpressure" => EventKind::Backpressure,
+            "anomaly" => EventKind::Anomaly { reason: s("reason")? },
+            _ => return None,
+        };
+        Some(Event { step, seq, kind })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(e: Event) {
+        let j = e.to_json();
+        let parsed = crate::util::json::Json::parse(&j.to_string()).expect("encoded event parses");
+        let back = Event::from_json(&parsed).expect("decodes");
+        assert_eq!(back, e);
+    }
+
+    #[test]
+    fn every_kind_round_trips_through_json() {
+        let kinds = vec![
+            EventKind::ReqArrive { id: 3 },
+            EventKind::ReqAdmit { id: 3, lane: 1 },
+            EventKind::ReqFirstToken { id: 3 },
+            EventKind::ReqRetire {
+                id: 3,
+                tokens: 17,
+                ttft_s: 0.125,
+            },
+            EventKind::PhaseBegin { phase: Phase::Plan },
+            EventKind::PhaseEnd {
+                phase: Phase::MigrationPoll,
+            },
+            EventKind::Plan {
+                group: 0,
+                l: 48,
+                predicted_s: 0.01,
+                slack_bytes: 1 << 20,
+            },
+            EventKind::StepBudget {
+                slack: 4096,
+                granted: 4096,
+                launched: 2,
+                launched_bytes: 2048,
+            },
+            EventKind::Migration {
+                id: 9,
+                phase: MigPhase::InFlight,
+                class: "promote".into(),
+                from: "cpu-dram".into(),
+                to: "gpu-hbm".into(),
+                bytes: 65536,
+            },
+            EventKind::Backpressure,
+            EventKind::Anomaly {
+                reason: "slo_violation".into(),
+            },
+        ];
+        for (i, kind) in kinds.into_iter().enumerate() {
+            roundtrip(Event {
+                step: i as u64,
+                seq: 100 + i as u64,
+                kind,
+            });
+        }
+    }
+
+    #[test]
+    fn unknown_kind_is_rejected() {
+        let j = crate::util::json::Json::parse(r#"{"step":0,"seq":0,"kind":"martian"}"#).unwrap();
+        assert!(Event::from_json(&j).is_none());
+    }
+}

@@ -1,0 +1,276 @@
+//! Plan-vs-actual accounting: per-step predicted time and link slack from
+//! [`StepPlan`](crate::scheduler::StepPlan) against what the step actually
+//! measured and launched.
+//!
+//! The serving loop records one [`StepRecord`] per completed decode step;
+//! [`PlanVsActual::from_records`] folds them into residual summaries
+//! (`measured − predicted`, via [`crate::util::stats::Summary`]) and a
+//! log₂-ratio **drift histogram** — the profiler→scheduler feedback signal
+//! the ROADMAP's auto-tuning item needs: a systematic residual means the
+//! cost model under- or over-prices the step and every slack grant inherits
+//! the bias.
+
+use std::collections::VecDeque;
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+use crate::util::table::{f, Table};
+
+/// One decode step's plan-vs-actual ledger entry.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepRecord {
+    /// Decode-step clock value.
+    pub step: u64,
+    /// Sum of the step's group plans' `predicted_s` (groups decode serially).
+    pub predicted_s: f64,
+    /// Sum of the plans' `link_slack_bytes`.
+    pub slack_bytes: u64,
+    /// The migration grant actually issued (`max(slack, 1)` or the A/B pin).
+    pub granted_bytes: u64,
+    /// Measured step duration on the serving clock.
+    pub measured_s: f64,
+    /// Migration launches this step.
+    pub launched: usize,
+    /// Wire bytes those launches put on the link.
+    pub launched_wire_bytes: u64,
+    /// Migration completions polled this step.
+    pub landed: usize,
+}
+
+/// Bounded FIFO of step records (the tracer keeps the most recent window).
+#[derive(Debug)]
+pub(crate) struct Ledger {
+    records: VecDeque<StepRecord>,
+    cap: usize,
+}
+
+impl Ledger {
+    pub(crate) fn new(cap: usize) -> Self {
+        Ledger {
+            records: VecDeque::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    pub(crate) fn push(&mut self, rec: StepRecord) {
+        if self.records.len() == self.cap {
+            self.records.pop_front();
+        }
+        self.records.push_back(rec);
+    }
+
+    pub(crate) fn snapshot(&self) -> Vec<StepRecord> {
+        self.records.iter().copied().collect()
+    }
+}
+
+/// Bucket edges (log₂ of measured/predicted) for the drift histogram.
+const DRIFT_EDGES: [f64; 6] = [-1.0, -0.5, -0.1, 0.1, 0.5, 1.0];
+
+/// Human label for drift bucket `i` (`i in 0..=DRIFT_EDGES.len()`).
+fn drift_label(i: usize) -> String {
+    if i == 0 {
+        format!("log2<{}", DRIFT_EDGES[0])
+    } else if i == DRIFT_EDGES.len() {
+        format!("log2>={}", DRIFT_EDGES[DRIFT_EDGES.len() - 1])
+    } else {
+        format!("log2[{},{})", DRIFT_EDGES[i - 1], DRIFT_EDGES[i])
+    }
+}
+
+/// Folded plan-vs-actual report (see the [module docs](self)).
+#[derive(Debug)]
+pub struct PlanVsActual {
+    /// Steps folded in.
+    pub steps: usize,
+    /// `measured_s − predicted_s` per step.
+    pub residual_s: Summary,
+    /// `measured_s / predicted_s` per step (only steps with a positive
+    /// prediction — untiered idle steps predict 0).
+    pub ratio: Summary,
+    /// Count per log₂-ratio bucket; same indexing as [`PlanVsActual::drift_labels`].
+    pub drift_hist: Vec<usize>,
+    /// Total predicted slack bytes across steps.
+    pub slack_bytes: u64,
+    /// Total granted bytes across steps.
+    pub granted_bytes: u64,
+    /// Total launched wire bytes across steps.
+    pub launched_wire_bytes: u64,
+    /// Total migration launches / landings.
+    pub launched: usize,
+    /// Total migration landings.
+    pub landed: usize,
+}
+
+impl PlanVsActual {
+    /// Fold a record window into the report.
+    pub fn from_records(records: &[StepRecord]) -> Self {
+        let mut residual_s = Summary::new();
+        let mut ratio = Summary::new();
+        let mut drift_hist = vec![0usize; DRIFT_EDGES.len() + 1];
+        let (mut slack, mut granted, mut lw) = (0u64, 0u64, 0u64);
+        let (mut launched, mut landed) = (0usize, 0usize);
+        for r in records {
+            residual_s.add(r.measured_s - r.predicted_s);
+            if r.predicted_s > 0.0 && r.measured_s > 0.0 {
+                let q = r.measured_s / r.predicted_s;
+                ratio.add(q);
+                let d = q.log2();
+                let bucket = DRIFT_EDGES.iter().position(|&e| d < e).unwrap_or(DRIFT_EDGES.len());
+                drift_hist[bucket] += 1;
+            }
+            slack += r.slack_bytes;
+            granted += r.granted_bytes;
+            lw += r.launched_wire_bytes;
+            launched += r.launched;
+            landed += r.landed;
+        }
+        PlanVsActual {
+            steps: records.len(),
+            residual_s,
+            ratio,
+            drift_hist,
+            slack_bytes: slack,
+            granted_bytes: granted,
+            launched_wire_bytes: lw,
+            launched,
+            landed,
+        }
+    }
+
+    /// Bucket labels aligned with [`PlanVsActual::drift_hist`].
+    pub fn drift_labels(&self) -> Vec<String> {
+        (0..self.drift_hist.len()).map(drift_label).collect()
+    }
+
+    /// Render as a two-column text table (`util::table`).
+    pub fn summary_table(&self) -> Table {
+        let mut t = Table::new("plan vs actual", &["metric", "value"]);
+        t.row(&["steps".into(), self.steps.to_string()]);
+        if self.residual_s.count() > 0 {
+            t.row(&["residual_mean_s".into(), f(self.residual_s.mean(), 6)]);
+            t.row(&["residual_p50_s".into(), f(self.residual_s.p50(), 6)]);
+            t.row(&["residual_p95_s".into(), f(self.residual_s.p95(), 6)]);
+        }
+        if self.ratio.count() > 0 {
+            t.row(&["ratio_mean".into(), f(self.ratio.mean(), 4)]);
+            t.row(&["ratio_p95".into(), f(self.ratio.p95(), 4)]);
+        }
+        t.row(&["slack_bytes".into(), self.slack_bytes.to_string()]);
+        t.row(&["granted_bytes".into(), self.granted_bytes.to_string()]);
+        t.row(&["launched_wire_bytes".into(), self.launched_wire_bytes.to_string()]);
+        t.row(&["migrations_launched".into(), self.launched.to_string()]);
+        t.row(&["migrations_landed".into(), self.landed.to_string()]);
+        for (i, &n) in self.drift_hist.iter().enumerate() {
+            if n > 0 {
+                t.row(&[format!("drift {}", drift_label(i)), n.to_string()]);
+            }
+        }
+        t
+    }
+
+    /// Encode for artifacts (`TRACE_*.json` sidecars, tests).
+    pub fn to_json(&self) -> Json {
+        fn summary_json(s: &Summary) -> Json {
+            if s.count() == 0 {
+                return Json::Null;
+            }
+            Json::obj(vec![
+                ("count", Json::from(s.count())),
+                ("mean", Json::from(s.mean())),
+                ("p50", Json::from(s.p50())),
+                ("p95", Json::from(s.p95())),
+                ("min", Json::from(s.min())),
+                ("max", Json::from(s.max())),
+            ])
+        }
+        let drift = self
+            .drift_hist
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| (drift_label(i), Json::from(n)))
+            .collect::<Vec<_>>();
+        Json::obj(vec![
+            ("steps", Json::from(self.steps)),
+            ("residual_s", summary_json(&self.residual_s)),
+            ("ratio", summary_json(&self.ratio)),
+            (
+                "drift_hist",
+                Json::obj(drift.iter().map(|(k, v)| (k.as_str(), v.clone())).collect()),
+            ),
+            ("slack_bytes", Json::from(self.slack_bytes as f64)),
+            ("granted_bytes", Json::from(self.granted_bytes as f64)),
+            ("launched_wire_bytes", Json::from(self.launched_wire_bytes as f64)),
+            ("migrations_launched", Json::from(self.launched)),
+            ("migrations_landed", Json::from(self.landed)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: u64, predicted_s: f64, measured_s: f64) -> StepRecord {
+        StepRecord {
+            step,
+            predicted_s,
+            slack_bytes: 100,
+            granted_bytes: 100,
+            measured_s,
+            launched: 1,
+            launched_wire_bytes: 64,
+            landed: 1,
+        }
+    }
+
+    #[test]
+    fn ledger_is_bounded_fifo() {
+        let mut l = Ledger::new(3);
+        for i in 0..5 {
+            l.push(rec(i, 1.0, 1.0));
+        }
+        let snap = l.snapshot();
+        assert_eq!(snap.len(), 3);
+        assert_eq!(snap[0].step, 2);
+        assert_eq!(snap[2].step, 4);
+    }
+
+    #[test]
+    fn residuals_and_drift_buckets() {
+        // measured exactly 2x predicted → log2 ratio = 1 → top bucket
+        let report = PlanVsActual::from_records(&[rec(0, 0.5, 1.0), rec(1, 1.0, 1.0)]);
+        assert_eq!(report.steps, 2);
+        assert_eq!(report.residual_s.count(), 2);
+        assert!((report.residual_s.mean() - 0.25).abs() < 1e-12);
+        assert_eq!(report.ratio.count(), 2);
+        assert_eq!(report.drift_hist.iter().sum::<usize>(), 2);
+        // ratio 2.0 lands in the >= 1.0 overflow bucket, ratio 1.0 in the
+        // centred [-0.1, 0.1) bucket
+        assert_eq!(report.drift_hist[DRIFT_EDGES.len()], 1);
+        let centre = DRIFT_EDGES.iter().position(|&e| 0.0 < e).unwrap();
+        assert_eq!(report.drift_hist[centre], 1);
+        assert_eq!(report.slack_bytes, 200);
+        assert_eq!(report.launched, 2);
+    }
+
+    #[test]
+    fn zero_prediction_steps_skip_ratio_but_keep_residual() {
+        let report = PlanVsActual::from_records(&[rec(0, 0.0, 0.25)]);
+        assert_eq!(report.residual_s.count(), 1);
+        assert_eq!(report.ratio.count(), 0);
+        assert_eq!(report.drift_hist.iter().sum::<usize>(), 0);
+        // json encodes the empty ratio as null, and the table still renders
+        let j = report.to_json();
+        assert_eq!(j.get("ratio"), Some(&Json::Null));
+        assert!(!report.summary_table().is_empty());
+    }
+
+    #[test]
+    fn json_report_parses_back() {
+        let report = PlanVsActual::from_records(&[rec(0, 0.5, 1.0)]);
+        let parsed = Json::parse(&report.to_json().to_string()).expect("parses");
+        assert_eq!(parsed.at(&["steps"]).as_usize(), Some(1));
+        assert!(parsed.at(&["residual_s", "mean"]).as_f64().is_some());
+    }
+}

@@ -1,0 +1,64 @@
+//! Observability: step-level tracing, plan-vs-actual telemetry, and a
+//! flight recorder for the serving loop.
+//!
+//! KVPR's scheduler derives an analytic execution plan every step — split
+//! point, predicted step time, predicted idle-link slack — and the serving
+//! loop *acts* on those predictions (the migration grant **is** the plan's
+//! slack).  This module measures how good the predictions are at runtime
+//! and records what the loop was doing when they weren't:
+//!
+//! * [`Tracer`] — a cloneable, thread-safe event sink.  The serving loop,
+//!   the [`KvStore`](crate::kvstore::KvStore) /
+//!   [`MigrationEngine`](crate::kvstore::MigrationEngine) and the planner
+//!   path emit typed [`Event`]s: request lifecycle (arrive → admit →
+//!   first-token → retire), step phases (stage / migration-poll / plan /
+//!   compute, nested in a per-step span), per-group [`EventKind::Plan`]s,
+//!   the slack→grant derivation, and every migration lifecycle transition
+//!   (queued → staged → in-flight → landed, tagged with tier hop, class
+//!   and bytes).  Events are stamped with the decode-step virtual clock
+//!   ([`crate::util::clock::Clock`]), so traces are deterministic under
+//!   the interpreter runtime.  [`Tracer::disabled`] is a no-op sink:
+//!   `emit` takes a closure it never calls, so tracing off costs one
+//!   branch (gated ≤ 5 % in `perf_hotpath`'s `obs_overhead` section).
+//! * [`PlanVsActual`] / [`StepRecord`] — the plan-vs-actual ledger:
+//!   per-step predicted vs measured step time and predicted slack vs
+//!   launched link bytes, folded into residual summaries and a log₂-ratio
+//!   drift histogram (`util::stats`) — the profiler→scheduler feedback
+//!   signal.
+//! * [`FlightDump`] / [`AnomalyConfig`] — the flight recorder: a bounded
+//!   ring of recent events snapshotted to JSON when an anomaly trigger
+//!   fires (TTFT SLO violation, backpressure streak, zero-slack streak).
+//! * [`chrome_trace`] — Chrome `trace_event` export (Perfetto /
+//!   `chrome://tracing`), plus [`PlanVsActual::summary_table`] for the
+//!   text view.  `examples/trace_dump.rs` and `examples/workload_slo.rs`
+//!   wire both to files.
+//!
+//! # Tracer API
+//!
+//! ```
+//! use kvpr::obs::{EventKind, Tracer, TracerConfig};
+//!
+//! let t = Tracer::new(TracerConfig::default());
+//! t.set_step(3);
+//! t.emit(|| EventKind::ReqArrive { id: 41 });
+//! let events = t.events();
+//! assert_eq!(events.len(), 1);
+//! assert_eq!(events[0].step, 3);
+//!
+//! // the disabled sink never even constructs the payload
+//! let off = Tracer::disabled();
+//! off.emit(|| unreachable!("not called on the no-op sink"));
+//! assert!(off.events().is_empty());
+//! ```
+
+mod chrome;
+mod event;
+mod ledger;
+mod recorder;
+mod tracer;
+
+pub use chrome::chrome_trace;
+pub use event::{Event, EventKind, MigPhase, Phase};
+pub use ledger::{PlanVsActual, StepRecord};
+pub use recorder::{AnomalyConfig, FlightDump};
+pub use tracer::{Tracer, TracerConfig};

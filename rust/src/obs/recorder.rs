@@ -1,0 +1,120 @@
+//! Flight recorder: anomaly triggers and the JSON dump format.
+//!
+//! The tracer keeps a bounded ring of the most recent events (the *flight
+//! window*).  When an anomaly trigger fires — a retired request blowing
+//! through the TTFT SLO, a backpressure streak, or a zero-slack streak —
+//! the ring is snapshotted into a [`FlightDump`]: the postmortem record of
+//! exactly what the loop was doing in the steps leading up to the anomaly.
+//! Dump count is capped ([`AnomalyConfig::max_dumps`]) so a persistent
+//! pathology cannot grow memory without bound.
+
+use crate::obs::event::Event;
+use crate::util::json::Json;
+
+/// Flight-recorder trigger thresholds.  A threshold of `0` (or `None` for
+/// the SLO) disables that trigger; the [`Default`] config never fires.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AnomalyConfig {
+    /// Dump when a retired request's TTFT exceeds this many seconds.
+    pub ttft_slo_s: Option<f64>,
+    /// Dump after this many *consecutive* steps that saw backpressure.
+    pub backpressure_streak: usize,
+    /// Dump after this many consecutive steps whose plans predicted zero
+    /// link slack (the GPU-never-idles claim has no headroom left).
+    pub zero_slack_streak: usize,
+    /// Maximum dumps retained per run.
+    pub max_dumps: usize,
+}
+
+impl Default for AnomalyConfig {
+    fn default() -> Self {
+        AnomalyConfig {
+            ttft_slo_s: None,
+            backpressure_streak: 0,
+            zero_slack_streak: 0,
+            max_dumps: 4,
+        }
+    }
+}
+
+/// One snapshot of the flight window at trigger time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlightDump {
+    /// Which trigger fired: `"slo_violation"`, `"backpressure_streak"` or
+    /// `"zero_slack_streak"`.
+    pub reason: String,
+    /// Decode-step clock at trigger time.
+    pub step: u64,
+    /// The ring contents, oldest first (ends with the `Anomaly` marker).
+    pub events: Vec<Event>,
+}
+
+impl FlightDump {
+    /// Encode as JSON (the postmortem artifact).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("reason", self.reason.as_str().into()),
+            ("step", Json::from(self.step as f64)),
+            (
+                "events",
+                Json::Arr(self.events.iter().map(Event::to_json).collect()),
+            ),
+        ])
+    }
+
+    /// Decode a dump encoded by [`FlightDump::to_json`].
+    pub fn from_json(j: &Json) -> Option<FlightDump> {
+        let reason = j.get("reason")?.as_str()?.to_string();
+        let step = j.get("step")?.as_f64()? as u64;
+        let events = j
+            .get("events")?
+            .as_arr()?
+            .iter()
+            .map(Event::from_json)
+            .collect::<Option<Vec<_>>>()?;
+        Some(FlightDump {
+            reason,
+            step,
+            events,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::event::EventKind;
+
+    #[test]
+    fn dump_round_trips_through_json() {
+        let dump = FlightDump {
+            reason: "backpressure_streak".into(),
+            step: 12,
+            events: vec![
+                Event {
+                    step: 11,
+                    seq: 40,
+                    kind: EventKind::Backpressure,
+                },
+                Event {
+                    step: 12,
+                    seq: 41,
+                    kind: EventKind::Anomaly {
+                        reason: "backpressure_streak".into(),
+                    },
+                },
+            ],
+        };
+        let text = dump.to_json().to_string();
+        let back = FlightDump::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, dump);
+    }
+
+    #[test]
+    fn default_config_never_fires() {
+        let c = AnomalyConfig::default();
+        assert!(c.ttft_slo_s.is_none());
+        assert_eq!(c.backpressure_streak, 0);
+        assert_eq!(c.zero_slack_streak, 0);
+    }
+}

@@ -1,0 +1,375 @@
+//! The tracer handle: a cloneable, thread-safe event sink that costs
+//! nothing when disabled.
+//!
+//! [`Tracer::disabled`] carries no allocation at all — `emit` takes the
+//! event as a *closure* and never calls it on the no-op sink, so a traced
+//! hot path pays one branch on a `None` when tracing is off (the
+//! `perf_hotpath` `obs_overhead` section gates this at ≤ 5 %).  When
+//! enabled, the tracer owns the flight-recorder ring, the optional full
+//! event retention used by the exporters, the plan-vs-actual ledger, and
+//! the anomaly triggers (see [`crate::obs::recorder`]).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+use crate::obs::event::{Event, EventKind};
+use crate::obs::ledger::{Ledger, PlanVsActual, StepRecord};
+use crate::obs::recorder::{AnomalyConfig, FlightDump};
+
+/// Tracer construction knobs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TracerConfig {
+    /// Flight-recorder window: how many recent events a dump snapshots.
+    pub ring_capacity: usize,
+    /// Keep the *full* event stream for export (Chrome trace, e2e
+    /// assertions).  Turn off for long-running servers where only the
+    /// flight window and the ledger matter.
+    pub retain_all: bool,
+    /// How many step records the plan-vs-actual ledger retains.
+    pub ledger_capacity: usize,
+    /// Flight-recorder triggers.
+    pub anomaly: AnomalyConfig,
+}
+
+impl Default for TracerConfig {
+    fn default() -> Self {
+        TracerConfig {
+            ring_capacity: 512,
+            retain_all: true,
+            ledger_capacity: 4096,
+            anomaly: AnomalyConfig::default(),
+        }
+    }
+}
+
+struct Inner {
+    cfg: TracerConfig,
+    ring: VecDeque<Event>,
+    all: Vec<Event>,
+    seq: u64,
+    step: u64,
+    ledger: Ledger,
+    dumps: Vec<FlightDump>,
+    backpressure_this_step: bool,
+    backpressure_streak: usize,
+    zero_slack_streak: usize,
+}
+
+impl Inner {
+    fn push(&mut self, kind: EventKind) {
+        // trigger checks read the payload before it is moved into the ring
+        let slo_breach = match (&kind, self.cfg.anomaly.ttft_slo_s) {
+            (EventKind::ReqRetire { ttft_s, .. }, Some(slo)) => *ttft_s > slo,
+            _ => false,
+        };
+        if matches!(kind, EventKind::Backpressure) {
+            self.backpressure_this_step = true;
+        }
+        self.push_raw(kind);
+        if slo_breach {
+            self.dump("slo_violation");
+        }
+    }
+
+    fn push_raw(&mut self, kind: EventKind) {
+        let ev = Event {
+            step: self.step,
+            seq: self.seq,
+            kind,
+        };
+        self.seq += 1;
+        if self.ring.len() == self.cfg.ring_capacity.max(1) {
+            self.ring.pop_front();
+        }
+        self.ring.push_back(ev.clone());
+        if self.cfg.retain_all {
+            self.all.push(ev);
+        }
+    }
+
+    fn dump(&mut self, reason: &'static str) {
+        if self.dumps.len() >= self.cfg.anomaly.max_dumps {
+            return;
+        }
+        self.push_raw(EventKind::Anomaly {
+            reason: reason.to_string(),
+        });
+        self.dumps.push(FlightDump {
+            reason: reason.to_string(),
+            step: self.step,
+            events: self.ring.iter().cloned().collect(),
+        });
+    }
+
+    fn record_step(&mut self, rec: StepRecord) {
+        self.ledger.push(rec);
+        // streak triggers advance on step boundaries
+        if std::mem::take(&mut self.backpressure_this_step) {
+            self.backpressure_streak += 1;
+        } else {
+            self.backpressure_streak = 0;
+        }
+        if rec.slack_bytes == 0 {
+            self.zero_slack_streak += 1;
+        } else {
+            self.zero_slack_streak = 0;
+        }
+        let a = self.cfg.anomaly;
+        if a.backpressure_streak > 0 && self.backpressure_streak >= a.backpressure_streak {
+            self.backpressure_streak = 0;
+            self.dump("backpressure_streak");
+        }
+        if a.zero_slack_streak > 0 && self.zero_slack_streak >= a.zero_slack_streak {
+            self.zero_slack_streak = 0;
+            self.dump("zero_slack_streak");
+        }
+    }
+}
+
+/// Cloneable tracing handle (see the [module docs](self)).
+#[derive(Clone)]
+pub struct Tracer {
+    inner: Option<Arc<Mutex<Inner>>>,
+}
+
+impl Tracer {
+    /// The no-op sink: every operation is a branch on `None`.
+    pub fn disabled() -> Self {
+        Tracer { inner: None }
+    }
+
+    /// An enabled tracer with the given configuration.
+    pub fn new(cfg: TracerConfig) -> Self {
+        Tracer {
+            inner: Some(Arc::new(Mutex::new(Inner {
+                ring: VecDeque::with_capacity(cfg.ring_capacity.max(1)),
+                all: Vec::new(),
+                seq: 0,
+                step: 0,
+                ledger: Ledger::new(cfg.ledger_capacity),
+                dumps: Vec::new(),
+                backpressure_this_step: false,
+                backpressure_streak: 0,
+                zero_slack_streak: 0,
+                cfg,
+            }))),
+        }
+    }
+
+    /// `true` when events are being recorded.
+    pub fn enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Emit one event.  `build` is only invoked when the tracer is enabled,
+    /// so payload construction (strings, field reads) costs nothing on the
+    /// disabled path.
+    #[inline]
+    pub fn emit(&self, build: impl FnOnce() -> EventKind) {
+        if let Some(m) = &self.inner {
+            let mut g = m.lock().unwrap_or_else(|p| p.into_inner());
+            let kind = build();
+            g.push(kind);
+        }
+    }
+
+    /// Stamp subsequent events with this decode-step clock value.
+    pub fn set_step(&self, step: u64) {
+        if let Some(m) = &self.inner {
+            m.lock().unwrap_or_else(|p| p.into_inner()).step = step;
+        }
+    }
+
+    /// Append one step's plan-vs-actual record and advance the streak
+    /// triggers (called once per completed decode step).
+    pub fn record_step(&self, rec: StepRecord) {
+        if let Some(m) = &self.inner {
+            m.lock().unwrap_or_else(|p| p.into_inner()).record_step(rec);
+        }
+    }
+
+    /// The full retained event stream (empty when disabled or when
+    /// [`TracerConfig::retain_all`] is off).
+    pub fn events(&self) -> Vec<Event> {
+        match &self.inner {
+            Some(m) => m.lock().unwrap_or_else(|p| p.into_inner()).all.clone(),
+            None => Vec::new(),
+        }
+    }
+
+    /// The current flight-recorder window, oldest first.
+    pub fn ring_snapshot(&self) -> Vec<Event> {
+        match &self.inner {
+            Some(m) => m
+                .lock()
+                .unwrap_or_else(|p| p.into_inner())
+                .ring
+                .iter()
+                .cloned()
+                .collect(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Flight dumps captured so far.
+    pub fn dumps(&self) -> Vec<FlightDump> {
+        match &self.inner {
+            Some(m) => m.lock().unwrap_or_else(|p| p.into_inner()).dumps.clone(),
+            None => Vec::new(),
+        }
+    }
+
+    /// The retained plan-vs-actual step records, oldest first.
+    pub fn step_records(&self) -> Vec<StepRecord> {
+        match &self.inner {
+            Some(m) => m.lock().unwrap_or_else(|p| p.into_inner()).ledger.snapshot(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Fold the retained step records into a [`PlanVsActual`] report
+    /// (`None` when the tracer is disabled).
+    pub fn plan_vs_actual(&self) -> Option<PlanVsActual> {
+        self.inner
+            .as_ref()
+            .map(|m| PlanVsActual::from_records(&m.lock().unwrap_or_else(|p| p.into_inner()).ledger.snapshot()))
+    }
+}
+
+impl std::fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Tracer({})", if self.enabled() { "enabled" } else { "disabled" })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: u64, slack: u64) -> StepRecord {
+        StepRecord {
+            step,
+            predicted_s: 0.001,
+            slack_bytes: slack,
+            granted_bytes: slack.max(1),
+            measured_s: 0.001,
+            launched: 0,
+            launched_wire_bytes: 0,
+            landed: 0,
+        }
+    }
+
+    #[test]
+    fn disabled_sink_never_builds_the_event() {
+        let t = Tracer::disabled();
+        t.emit(|| unreachable!("no-op sink must not construct payloads"));
+        t.set_step(9);
+        t.record_step(rec(9, 0));
+        assert!(!t.enabled());
+        assert!(t.events().is_empty() && t.dumps().is_empty());
+        assert!(t.plan_vs_actual().is_none());
+    }
+
+    #[test]
+    fn ring_wraps_and_keeps_the_newest_window() {
+        let t = Tracer::new(TracerConfig {
+            ring_capacity: 4,
+            ..TracerConfig::default()
+        });
+        for i in 0..10u64 {
+            t.set_step(i);
+            t.emit(|| EventKind::ReqArrive { id: i });
+        }
+        let ring = t.ring_snapshot();
+        assert_eq!(ring.len(), 4);
+        assert!(matches!(ring[0].kind, EventKind::ReqArrive { id: 6 }));
+        assert!(matches!(ring[3].kind, EventKind::ReqArrive { id: 9 }));
+        // full retention still has all ten, with dense seq numbers
+        let all = t.events();
+        assert_eq!(all.len(), 10);
+        assert!(all.windows(2).all(|w| w[1].seq == w[0].seq + 1));
+    }
+
+    #[test]
+    fn slo_breach_dumps_immediately() {
+        let t = Tracer::new(TracerConfig {
+            anomaly: AnomalyConfig {
+                ttft_slo_s: Some(0.5),
+                ..AnomalyConfig::default()
+            },
+            ..TracerConfig::default()
+        });
+        t.emit(|| EventKind::ReqRetire {
+            id: 1,
+            tokens: 4,
+            ttft_s: 0.1,
+        });
+        assert!(t.dumps().is_empty());
+        t.emit(|| EventKind::ReqRetire {
+            id: 2,
+            tokens: 4,
+            ttft_s: 0.9,
+        });
+        let dumps = t.dumps();
+        assert_eq!(dumps.len(), 1);
+        assert_eq!(dumps[0].reason, "slo_violation");
+        // the dump window ends with the anomaly marker
+        assert!(matches!(
+            dumps[0].events.last().unwrap().kind,
+            EventKind::Anomaly { .. }
+        ));
+    }
+
+    #[test]
+    fn streak_triggers_fire_on_consecutive_steps_only() {
+        let t = Tracer::new(TracerConfig {
+            anomaly: AnomalyConfig {
+                backpressure_streak: 2,
+                zero_slack_streak: 3,
+                ..AnomalyConfig::default()
+            },
+            ..TracerConfig::default()
+        });
+        // backpressure on steps 0 and 2 — not consecutive, no dump
+        t.emit(|| EventKind::Backpressure);
+        t.record_step(rec(0, 1));
+        t.record_step(rec(1, 1));
+        t.emit(|| EventKind::Backpressure);
+        t.record_step(rec(2, 1));
+        assert!(t.dumps().is_empty());
+        // two in a row fires
+        t.emit(|| EventKind::Backpressure);
+        t.record_step(rec(3, 1));
+        t.emit(|| EventKind::Backpressure);
+        t.record_step(rec(4, 1));
+        assert_eq!(t.dumps().len(), 1);
+        assert_eq!(t.dumps()[0].reason, "backpressure_streak");
+        // zero-slack streak: three consecutive zero-slack steps
+        t.record_step(rec(5, 0));
+        t.record_step(rec(6, 0));
+        assert_eq!(t.dumps().len(), 1);
+        t.record_step(rec(7, 0));
+        assert_eq!(t.dumps().len(), 2);
+        assert_eq!(t.dumps()[1].reason, "zero_slack_streak");
+    }
+
+    #[test]
+    fn dump_count_is_capped() {
+        let t = Tracer::new(TracerConfig {
+            anomaly: AnomalyConfig {
+                ttft_slo_s: Some(0.0),
+                max_dumps: 2,
+                ..AnomalyConfig::default()
+            },
+            ..TracerConfig::default()
+        });
+        for i in 0..5 {
+            t.emit(|| EventKind::ReqRetire {
+                id: i,
+                tokens: 1,
+                ttft_s: 1.0,
+            });
+        }
+        assert_eq!(t.dumps().len(), 2);
+    }
+}

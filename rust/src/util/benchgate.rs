@@ -17,6 +17,15 @@
 //!   throughput metric.  The gate passes on structure alone and prints
 //!   the refresh recipe, so the first machine to run the bench can
 //!   promote its output to the real baseline.
+//!
+//! Orthogonally to both modes, a `"ratio_gates"` list in the baseline
+//! pins **machine-independent relative claims**: each
+//! `{"num": path, "den": path, "min_frac": f}` entry requires the fresh
+//! run's `num` throughput to be at least `min_frac` of its `den`
+//! throughput.  Both metrics come from the *same* fresh run, so the gate
+//! holds on any machine — it is how the tracing-overhead claim
+//! (`obs_overhead.enabled` within 5 % of `obs_overhead.disabled`) is
+//! enforced even while the absolute baseline is provisional.
 
 use super::json::Json;
 
@@ -51,6 +60,7 @@ impl GateReport {
 pub fn compare(baseline: &Json, fresh: &Json, max_drop_frac: f64) -> GateReport {
     let provisional = matches!(baseline.get("provisional"), Some(Json::Bool(true)));
     let mut report = GateReport { checked: 0, failures: Vec::new(), provisional };
+    ratio_gates(baseline, fresh, &mut report);
     if provisional {
         match baseline.get("expect").and_then(|e| e.as_arr()) {
             Some(paths) if !paths.is_empty() => {
@@ -89,6 +99,47 @@ pub fn compare(baseline: &Json, fresh: &Json, max_drop_frac: f64) -> GateReport 
         ));
     }
     report
+}
+
+/// Enforce the baseline's `ratio_gates` against the fresh run alone (both
+/// metrics from the same machine, so no trusted absolute numbers needed).
+fn ratio_gates(baseline: &Json, fresh: &Json, report: &mut GateReport) {
+    let Some(gates) = baseline.get("ratio_gates").and_then(|g| g.as_arr()) else {
+        return;
+    };
+    let lookup = |path: &str| {
+        let parts: Vec<&str> = path.split('.').collect();
+        let node = fresh.at(&parts);
+        METRICS
+            .iter()
+            .find_map(|m| node.get(m).and_then(|v| v.as_f64()).filter(|v| *v > 0.0))
+    };
+    for g in gates {
+        let (Some(num), Some(den), Some(min_frac)) = (
+            g.get("num").and_then(|v| v.as_str()),
+            g.get("den").and_then(|v| v.as_str()),
+            g.get("min_frac").and_then(|v| v.as_f64()),
+        ) else {
+            report
+                .failures
+                .push("malformed ratio_gates entry (need num/den/min_frac)".to_string());
+            continue;
+        };
+        match (lookup(num), lookup(den)) {
+            (Some(n), Some(d)) => {
+                report.checked += 1;
+                let frac = n / d;
+                if frac + 1e-12 < min_frac {
+                    report.failures.push(format!(
+                        "ratio {num}/{den} = {frac:.4} fell below the {min_frac:.2} floor"
+                    ));
+                }
+            }
+            _ => report.failures.push(format!(
+                "ratio gate {num}/{den}: missing or non-positive throughput in the fresh run"
+            )),
+        }
+    }
 }
 
 fn walk(base: &Json, fresh: &Json, path: &str, max_drop: f64, report: &mut GateReport) {
@@ -233,5 +284,73 @@ mod tests {
         let prov = j(r#"{"provisional": true, "expect": ["topology_plan.four_tier"]}"#);
         assert!(compare(&prov, &ok, 0.10).passed());
         assert!(!compare(&prov, &j("{}"), 0.10).passed());
+    }
+
+    #[test]
+    fn ratio_gate_holds_fresh_run_to_the_floor() {
+        let b = j(
+            r#"{"obs_overhead": {"disabled": {"steps_per_s": 100.0}},
+                "ratio_gates": [{"num": "obs_overhead.enabled",
+                                 "den": "obs_overhead.disabled",
+                                 "min_frac": 0.95}]}"#,
+        );
+        let ok = j(
+            r#"{"obs_overhead": {"disabled": {"steps_per_s": 100.0},
+                                 "enabled": {"steps_per_s": 96.0}}}"#,
+        );
+        let r = compare(&b, &ok, 0.10);
+        assert!(r.passed(), "{:?}", r.failures);
+        assert_eq!(r.checked, 2, "one absolute pin + one ratio gate");
+        let slow = j(
+            r#"{"obs_overhead": {"disabled": {"steps_per_s": 100.0},
+                                 "enabled": {"steps_per_s": 80.0}}}"#,
+        );
+        let r = compare(&b, &slow, 0.10);
+        assert!(!r.passed());
+        assert!(r.failures[0].contains("obs_overhead.enabled"), "{}", r.failures[0]);
+    }
+
+    #[test]
+    fn ratio_gate_applies_in_provisional_mode_too() {
+        // the overhead claim is machine-independent, so it must bite even
+        // while the absolute baseline is still provisional
+        let b = j(
+            r#"{"provisional": true,
+                "expect": ["obs_overhead.disabled"],
+                "ratio_gates": [{"num": "obs_overhead.enabled",
+                                 "den": "obs_overhead.disabled",
+                                 "min_frac": 0.95}]}"#,
+        );
+        let ok = j(
+            r#"{"obs_overhead": {"disabled": {"steps_per_s": 50.0},
+                                 "enabled": {"steps_per_s": 49.0}}}"#,
+        );
+        let r = compare(&b, &ok, 0.10);
+        assert!(r.passed(), "{:?}", r.failures);
+        assert_eq!(r.checked, 2);
+        let slow = j(
+            r#"{"obs_overhead": {"disabled": {"steps_per_s": 50.0},
+                                 "enabled": {"steps_per_s": 40.0}}}"#,
+        );
+        assert!(!compare(&b, &slow, 0.10).passed());
+    }
+
+    #[test]
+    fn ratio_gate_fails_on_missing_or_malformed_inputs() {
+        let b = j(
+            r#"{"provisional": true, "expect": ["a"],
+                "ratio_gates": [{"num": "a", "den": "missing", "min_frac": 0.9}]}"#,
+        );
+        let f = j(r#"{"a": {"steps_per_s": 10.0}}"#);
+        let r = compare(&b, &f, 0.10);
+        assert!(!r.passed());
+        assert!(r.failures[0].contains("missing"), "{}", r.failures[0]);
+        let malformed = j(
+            r#"{"provisional": true, "expect": ["a"],
+                "ratio_gates": [{"num": "a"}]}"#,
+        );
+        let r = compare(&malformed, &f, 0.10);
+        assert!(!r.passed());
+        assert!(r.failures[0].contains("malformed"), "{}", r.failures[0]);
     }
 }

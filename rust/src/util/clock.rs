@@ -1,0 +1,159 @@
+//! Serving-loop clock: wall time or a deterministic decode-step clock.
+//!
+//! The continuous-batching loop stamps every latency-bearing moment
+//! (arrival, admission, first token, retirement, step duration) through one
+//! shared [`Clock`].  In [`ClockMode::Wall`] those stamps are real elapsed
+//! seconds, exactly as before.  In [`ClockMode::Step`] the clock is
+//! *virtual*: time only moves when the serving loop finishes a decode step
+//! ([`Clock::advance`]), and each step contributes a fixed `step_s`
+//! seconds.  Under the deterministic interpreter runtime that makes every
+//! trace, TTFT/TPOT percentile and plan-vs-actual residual bit-reproducible
+//! across replays — no sleeps, no scheduler jitter — which is what the
+//! observability e2e tests and `examples/trace_dump.rs` rely on.
+//!
+//! The handle is cheap to clone (an `Arc` around an atomic step counter)
+//! and is shared between the submitting thread (arrival stamps) and the
+//! serving thread (everything else).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// How a [`Clock`] produces time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ClockMode {
+    /// Real wall time (seconds since the clock was created).
+    Wall,
+    /// Virtual step time: `now() = step * step_s`, advanced explicitly by
+    /// the serving loop once per decode step.
+    Step {
+        /// Seconds one decode step is defined to take.
+        step_s: f64,
+    },
+}
+
+struct Inner {
+    mode: ClockMode,
+    origin: Instant,
+    step: AtomicU64,
+}
+
+/// Shared wall/virtual clock (see the [module docs](self)).
+#[derive(Clone)]
+pub struct Clock {
+    inner: Arc<Inner>,
+}
+
+impl Clock {
+    /// A real-time clock; `now()` is seconds since this call.
+    pub fn wall() -> Self {
+        Self::new(ClockMode::Wall)
+    }
+
+    /// A deterministic step clock: `now()` is `step() * step_s`.
+    pub fn deterministic(step_s: f64) -> Self {
+        Self::new(ClockMode::Step { step_s })
+    }
+
+    /// Build a clock in the given mode.
+    pub fn new(mode: ClockMode) -> Self {
+        Clock {
+            inner: Arc::new(Inner {
+                mode,
+                origin: Instant::now(),
+                step: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Current time in seconds (wall-elapsed or virtual, per mode).
+    pub fn now(&self) -> f64 {
+        match self.inner.mode {
+            ClockMode::Wall => self.inner.origin.elapsed().as_secs_f64(),
+            ClockMode::Step { step_s } => self.inner.step.load(Ordering::Relaxed) as f64 * step_s,
+        }
+    }
+
+    /// The decode-step counter (advanced in both modes; only [`ClockMode::Step`]
+    /// derives `now()` from it).
+    pub fn step(&self) -> u64 {
+        self.inner.step.load(Ordering::Relaxed)
+    }
+
+    /// Advance the step counter by one (the serving loop calls this once
+    /// per completed decode step).
+    pub fn advance(&self) {
+        self.inner.step.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Jump the step counter forward (idle fast-forward to the next trace
+    /// arrival).  Never moves backwards.
+    pub fn set_step(&self, step: u64) {
+        self.inner.step.fetch_max(step, Ordering::Relaxed);
+    }
+
+    /// `true` when time is virtual ([`ClockMode::Step`]).
+    pub fn is_deterministic(&self) -> bool {
+        matches!(self.inner.mode, ClockMode::Step { .. })
+    }
+
+    /// The per-step duration in [`ClockMode::Step`]; `None` for wall time.
+    pub fn step_seconds(&self) -> Option<f64> {
+        match self.inner.mode {
+            ClockMode::Wall => None,
+            ClockMode::Step { step_s } => Some(step_s),
+        }
+    }
+}
+
+impl std::fmt::Debug for Clock {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Clock")
+            .field("mode", &self.inner.mode)
+            .field("step", &self.step())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wall_clock_moves_forward() {
+        let c = Clock::wall();
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a && a >= 0.0);
+        assert!(!c.is_deterministic());
+        assert_eq!(c.step_seconds(), None);
+        // the step counter still ticks in wall mode
+        c.advance();
+        assert_eq!(c.step(), 1);
+    }
+
+    #[test]
+    fn step_clock_is_virtual_and_exact() {
+        let c = Clock::deterministic(0.25);
+        assert!(c.is_deterministic());
+        assert_eq!(c.now(), 0.0);
+        c.advance();
+        c.advance();
+        assert_eq!(c.now(), 0.5);
+        assert_eq!(c.step(), 2);
+        assert_eq!(c.step_seconds(), Some(0.25));
+        // identical across clones (shared counter)
+        let d = c.clone();
+        d.advance();
+        assert_eq!(c.now(), 0.75);
+    }
+
+    #[test]
+    fn set_step_never_rewinds() {
+        let c = Clock::deterministic(1.0);
+        c.set_step(7);
+        assert_eq!(c.step(), 7);
+        c.set_step(3);
+        assert_eq!(c.step(), 7);
+    }
+}

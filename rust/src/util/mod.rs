@@ -1,9 +1,12 @@
 //! Small self-contained substrates: a mini JSON parser/writer (the vendored
 //! crate set has no serde facade), a deterministic PRNG (no `rand`), basic
-//! statistics, a fixed-width table printer used by the bench harnesses, and
-//! the bench-regression gate CI runs over their JSON output.
+//! statistics, a fixed-width table printer used by the bench harnesses, the
+//! bench-regression gate CI runs over their JSON output, and the wall /
+//! deterministic-step [`clock::Clock`] the serving loop stamps latencies
+//! through.
 
 pub mod benchgate;
+pub mod clock;
 pub mod json;
 pub mod prng;
 pub mod stats;

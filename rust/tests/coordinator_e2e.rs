@@ -17,7 +17,8 @@ use std::time::Duration;
 
 use kvpr::config::{HardwareConfig, ModelConfig, Objective, WorkloadConfig};
 use kvpr::coordinator::{
-    Batcher, ContinuousConfig, ContinuousServer, Router, Server, ServerConfig, TieredKvConfig,
+    Batcher, ContinuousConfig, ContinuousServer, DiskTotals, Router, Server, ServerConfig,
+    TieredKvConfig,
 };
 use kvpr::engine::{EngineConfig, EnginePolicy};
 use kvpr::scheduler::TierTopology;
@@ -279,7 +280,7 @@ fn tiered_kvstore_admits_more_than_hard_backpressure() {
         tiered_tokens.push(h.wait().unwrap().tokens);
     }
     let tiered_peak = server.metrics().peak_occupancy();
-    let (promoted, _demoted, _dropped) = server.metrics().tiering_totals();
+    let promoted = server.metrics().tiering_totals().promoted_tokens;
     server.shutdown().unwrap();
 
     assert!(
@@ -334,8 +335,10 @@ fn async_demotions_drain_a_full_gpu_tier_across_steps() {
         tiered_tokens.push(h.wait().unwrap().tokens);
     }
     let m = server.metrics();
-    let (launched, landed, _deferrals) = m.migration_totals();
-    let (dem_issued, dem_polled) = m.demotion_totals();
+    let mig = m.migration_totals();
+    let (launched, landed) = (mig.launched, mig.landed);
+    let dem = m.demotion_totals();
+    let (dem_issued, dem_polled) = (dem.issued, dem.polled);
     server.shutdown().unwrap();
 
     assert!(launched > 0, "migrations must have launched under the step budget");
@@ -426,11 +429,13 @@ fn disk_spill_admits_more_sequences_and_never_blocks_the_step_loop() {
     };
 
     let (tok3, peak3, disk3, bp3) = run(mk(0));
-    assert_eq!(disk3, (0, 0, 0, 0), "no disk tier, no disk traffic");
+    assert_eq!(disk3, DiskTotals::default(), "no disk tier, no disk traffic");
     assert!(bp3 > 0, "the dram budget must bind in the three-tier run");
     assert!(peak3 <= 1.0 + 1e-9, "three-tier must serialise the wave: peak {peak3}");
 
-    let (tok4, peak4, (sp_issued, sp_polled, hop_issued, hop_polled), _) = run(mk(64 << 20));
+    let (tok4, peak4, disk4, _) = run(mk(64 << 20));
+    let (sp_issued, sp_polled) = (disk4.spills_issued, disk4.spills_polled);
+    let (hop_issued, hop_polled) = (disk4.hops_issued, disk4.hops_polled);
     assert!(
         peak4 > peak3,
         "spill-enabled serving must admit strictly more concurrent sequences: \
@@ -498,7 +503,7 @@ fn adaptive_step_budget_tracks_planner_slack() {
             tokens.push(h.wait().unwrap().tokens);
         }
         let budget = server.metrics().budget_totals();
-        let (launched, _, _) = server.metrics().migration_totals();
+        let launched = server.metrics().migration_totals().launched;
         server.shutdown().unwrap();
         (tokens, budget, launched)
     };

@@ -1,0 +1,290 @@
+//! Observability e2e: replay a seeded workload trace through the
+//! continuous server with tracing enabled and hold the trace to account:
+//!
+//! * every admitted request shows the complete
+//!   arrive → admit → first-token → retire lifecycle, in order;
+//! * per-step launched wire bytes never exceed the recorded grant except
+//!   through the migration engine's single oversized-launch progress
+//!   override;
+//! * plan-vs-actual residuals are finite and the summary exports;
+//! * tracing changes nothing: tokens are bit-identical to an untraced
+//!   run (interpreter runtime);
+//! * the Chrome `trace_event` export is parseable and byte-identical
+//!   across two replays on the deterministic step clock.
+//!
+//! Like `coordinator_e2e.rs` these need **no artifacts** (interpreter
+//! fallback).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use kvpr::coordinator::{ContinuousConfig, ContinuousServer, TieredKvConfig};
+use kvpr::engine::{EngineConfig, EnginePolicy};
+use kvpr::obs::{chrome_trace, Event, EventKind, MigPhase, Phase, Tracer, TracerConfig};
+use kvpr::scheduler::TierTopology;
+use kvpr::transfer::LinkConfig;
+use kvpr::util::clock::ClockMode;
+use kvpr::util::json::Json;
+use kvpr::workload::{Arrival, LenDist, Trace, TrafficClass, WorkloadSpec};
+
+/// Serialise the heavy tests: each spins up engine + link worker threads.
+static HEAVY: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    HEAVY.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn engine_cfg() -> EngineConfig {
+    let mut e = EngineConfig::new(EnginePolicy::Kvpr);
+    e.weights_offloaded = true;
+    e.link = LinkConfig::with_bandwidth(100e6);
+    e.seed = 42;
+    e
+}
+
+fn continuous_cfg(max_group: usize, max_groups: usize) -> ContinuousConfig {
+    let mut c = ContinuousConfig::new("artifacts", engine_cfg());
+    c.max_group = max_group;
+    c.max_groups = max_groups;
+    c.prompt_bucket = 16;
+    c.admit_wait = Duration::from_millis(1);
+    c
+}
+
+/// Six requests in three bursts of two (arrival steps 0,0,3,3,6,6).
+fn spec(gen: LenDist) -> WorkloadSpec {
+    WorkloadSpec {
+        name: "obs_e2e".into(),
+        seed: 17,
+        requests: 6,
+        arrivals: Arrival::Bursty { burst: 2, gap: 3 },
+        classes: vec![TrafficClass {
+            name: "chat".into(),
+            weight: 1.0,
+            prompt: LenDist::Fixed { steps: 16 },
+            gen,
+            think: LenDist::Fixed { steps: 0 },
+        }],
+        slo: kvpr::workload::SloTargets { ttft_s: 30.0, tpot_s: 30.0 },
+    }
+}
+
+/// Tiered serving config exercising real migrations under a tight host
+/// tier (mirrors `workload_trace.rs`'s host-pressure scenario).
+fn tiered_cfg() -> ContinuousConfig {
+    let mut cfg = continuous_cfg(1, 6);
+    cfg.kv_budget_bytes = 200 << 10;
+    cfg.tiering = Some(TieredKvConfig {
+        topology: TierTopology::standard(0, 64 << 10, 2 << 20).with_disk(64 << 20, 0.5),
+        block_tokens: 16,
+        prefetch_blocks: 1,
+        max_inflight: 8,
+        promote_cooldown: 2,
+        step_budget_override: Some(4 << 20),
+        ..TieredKvConfig::default()
+    });
+    cfg
+}
+
+fn run(cfg: ContinuousConfig, trace: &Trace) -> (Vec<Vec<i32>>, Tracer) {
+    let server = ContinuousServer::start(cfg).unwrap();
+    let handles = server.submit_trace(trace);
+    let mut tokens = Vec::with_capacity(trace.requests.len());
+    for (h, r) in handles.into_iter().zip(&trace.requests) {
+        let resp = h.wait().unwrap();
+        assert_eq!(resp.tokens.len(), r.gen_tokens, "request {} length", r.id);
+        tokens.push(resp.tokens);
+    }
+    let tracer = server.tracer();
+    server.shutdown().unwrap();
+    (tokens, tracer)
+}
+
+fn interpreted() -> bool {
+    !std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json"))
+        .exists()
+}
+
+/// Per-request lifecycle milestones, in event order (sequence numbers).
+#[derive(Default)]
+struct Lifecycle {
+    arrive: Option<u64>,
+    admit: Option<u64>,
+    first_token: Option<u64>,
+    retire: Option<u64>,
+}
+
+fn lifecycles(events: &[Event]) -> HashMap<u64, Lifecycle> {
+    let mut map: HashMap<u64, Lifecycle> = HashMap::new();
+    for ev in events {
+        match ev.kind {
+            EventKind::ReqArrive { id } => map.entry(id).or_default().arrive = Some(ev.seq),
+            EventKind::ReqAdmit { id, .. } => map.entry(id).or_default().admit = Some(ev.seq),
+            EventKind::ReqFirstToken { id } => {
+                map.entry(id).or_default().first_token = Some(ev.seq)
+            }
+            EventKind::ReqRetire { id, .. } => map.entry(id).or_default().retire = Some(ev.seq),
+            _ => {}
+        }
+    }
+    map
+}
+
+#[test]
+fn traced_tiered_replay_audits_lifecycles_grants_and_residuals() {
+    let _g = lock();
+    let spec = spec(LenDist::Fixed { steps: 24 });
+    let trace = spec.generate();
+
+    let mut traced_cfg = tiered_cfg();
+    traced_cfg.trace = Some(TracerConfig::default());
+    let (traced_tokens, tracer) = run(traced_cfg, &trace);
+
+    // (d) observation changes nothing: the untraced twin produces the
+    // same tokens, bit for bit, on the deterministic interpreter
+    let (untraced_tokens, off) = run(tiered_cfg(), &trace);
+    if interpreted() {
+        assert_eq!(traced_tokens, untraced_tokens, "tracing must not perturb decoding");
+    }
+    assert!(!off.enabled(), "trace: None installs the no-op sink");
+    assert!(off.events().is_empty());
+    assert!(off.plan_vs_actual().is_none());
+
+    let events = tracer.events();
+    assert!(!events.is_empty());
+    // sequence numbers are the emission order, dense from 0
+    for (i, ev) in events.iter().enumerate() {
+        assert_eq!(ev.seq, i as u64, "dense emission order");
+    }
+
+    // (a) every admitted request carries the complete lifecycle chain,
+    // in order — and every submitted request was admitted (the trace
+    // retires fully)
+    let chains = lifecycles(&events);
+    assert_eq!(chains.len(), trace.requests.len(), "one lifecycle per request");
+    for (id, c) in &chains {
+        let arrive = c.arrive.unwrap_or_else(|| panic!("request {id}: no arrive event"));
+        let admit = c.admit.unwrap_or_else(|| panic!("request {id}: no admit event"));
+        let first = c.first_token.unwrap_or_else(|| panic!("request {id}: no first-token event"));
+        let retire = c.retire.unwrap_or_else(|| panic!("request {id}: no retire event"));
+        assert!(
+            arrive < admit && admit < first && first < retire,
+            "request {id}: lifecycle out of order ({arrive} {admit} {first} {retire})"
+        );
+    }
+
+    // phase spans stay balanced and properly nested through every early
+    // exit of the serving loop
+    let mut depth: Vec<Phase> = Vec::new();
+    for ev in &events {
+        match ev.kind {
+            EventKind::PhaseBegin { phase } => depth.push(phase),
+            EventKind::PhaseEnd { phase } => {
+                assert_eq!(depth.pop(), Some(phase), "mismatched phase end at seq {}", ev.seq);
+            }
+            _ => {}
+        }
+    }
+    assert!(depth.is_empty(), "unclosed phases: {depth:?}");
+
+    // migration lifecycle: anything that landed was launched first, with
+    // identical hop/class/byte tags
+    let mut launched: HashMap<u64, (String, String, String, u64)> = HashMap::new();
+    let mut landings = 0;
+    for ev in &events {
+        if let EventKind::Migration { id, phase, ref class, ref from, ref to, bytes } = ev.kind {
+            match phase {
+                MigPhase::InFlight => {
+                    launched.insert(id, (class.clone(), from.clone(), to.clone(), bytes));
+                }
+                MigPhase::Landed => {
+                    landings += 1;
+                    let tags = launched
+                        .get(&id)
+                        .unwrap_or_else(|| panic!("migration {id} landed without launching"));
+                    assert_eq!(
+                        tags,
+                        &(class.clone(), from.clone(), to.clone(), bytes),
+                        "migration {id}: tags changed between launch and landing"
+                    );
+                }
+                _ => {}
+            }
+        }
+    }
+    assert!(landings > 0, "the tiered host-pressure run must land migrations");
+
+    // (b) per-step grant audit: launched wire bytes stay within the
+    // recorded grant, except through the single oversized-launch override
+    let records = tracer.step_records();
+    assert!(!records.is_empty());
+    for r in &records {
+        assert!(
+            r.launched_wire_bytes <= r.granted_bytes || r.launched == 1,
+            "step {}: {} wire bytes launched over a {} grant with {} launches",
+            r.step,
+            r.launched_wire_bytes,
+            r.granted_bytes,
+            r.launched
+        );
+    }
+
+    // (c) plan-vs-actual: residuals finite, summary exported
+    for r in &records {
+        assert!(r.predicted_s.is_finite() && r.measured_s.is_finite());
+        assert!(r.measured_s >= 0.0);
+    }
+    let pva = tracer.plan_vs_actual().expect("enabled tracer summarises");
+    assert_eq!(pva.steps, records.len());
+    assert_eq!(pva.residual_s.count(), records.len());
+    assert!(pva.residual_s.mean().is_finite());
+    assert_eq!(pva.drift_hist.len(), pva.drift_labels().len());
+    assert!(!pva.summary_table().is_empty());
+    let exported = pva.to_json().to_string();
+    let parsed = Json::parse(&exported).expect("summary JSON parses");
+    assert!(parsed.get("residual_s").is_some());
+}
+
+#[test]
+fn chrome_export_is_byte_identical_across_deterministic_replays() {
+    let _g = lock();
+    if !interpreted() {
+        return; // byte-identity is an interpreter-runtime guarantee
+    }
+    let spec = spec(LenDist::Uniform { lo: 4, hi: 8 });
+    let trace = spec.generate();
+
+    let replay = || {
+        let mut cfg = continuous_cfg(2, 2);
+        cfg.clock = ClockMode::Step { step_s: 0.05 };
+        cfg.preload_requests = trace.requests.len();
+        cfg.trace = Some(TracerConfig::default());
+        let (tokens, tracer) = run(cfg, &trace);
+        (chrome_trace(&tracer.events()).to_string(), tokens)
+    };
+    let (json1, tokens1) = replay();
+    let (json2, tokens2) = replay();
+    assert_eq!(tokens1, tokens2, "same trace, same tokens, bit for bit");
+    assert_eq!(json1, json2, "Chrome export must be byte-identical across replays");
+
+    let parsed = Json::parse(&json1).expect("Chrome trace parses");
+    let evs = parsed.get("traceEvents").and_then(|t| t.as_arr()).expect("traceEvents array");
+    assert!(!evs.is_empty());
+    // the async request spans survive the export: one begin and one end
+    // per request, keyed by request id
+    for ph in ["b", "e"] {
+        let n = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some(ph))
+            .count();
+        assert_eq!(n, trace.requests.len(), "one {ph:?} event per request");
+    }
+    // timestamps are monotone within each thread track
+    let mut last_ts = f64::NEG_INFINITY;
+    for e in evs {
+        let ts = e.get("ts").and_then(|t| t.as_f64()).expect("ts");
+        assert!(ts >= last_ts, "timestamps must be monotone");
+        last_ts = ts;
+    }
+}

@@ -115,8 +115,8 @@ fn run_trace(cfg: ContinuousConfig, trace: &Trace, slo: SloTargets) -> ServedRun
         requests: m.requests(),
         peak_occupancy: m.peak_occupancy(),
         backpressure: m.backpressure_events(),
-        kv_dropped: m.tiering_totals().2,
-        spills_issued: m.disk_totals().0,
+        kv_dropped: m.tiering_totals().kv_dropped_tokens,
+        spills_issued: m.disk_totals().spills_issued,
         ttft_p99_s: m.ttft_stats().p99,
         slo_requests: m.slo_attainment().requests,
     };
