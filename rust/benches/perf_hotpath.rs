@@ -8,10 +8,13 @@
 //!   * int4 quant/dequant of a KV block
 //!   * mini-JSON manifest parse (startup path)
 //!   * simulator step throughput (bench harness speed itself)
+//!   * pipelined serving loop: serial vs overlapped steps/s
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use kvpr::config::{HardwareConfig, ModelConfig, WorkloadConfig};
+use kvpr::coordinator::{ContinuousConfig, ContinuousServer, PipelineMode, PipelineTotals};
+use kvpr::engine::{EngineConfig, EnginePolicy};
 use kvpr::kvcache::quant;
 use kvpr::kvstore::{simulate_eviction, EvictionSimConfig, EvictionSimReport, Lru, RecomputeAware};
 use kvpr::obs::{EventKind, Phase, StepRecord, Tracer, TracerConfig};
@@ -19,9 +22,10 @@ use kvpr::scheduler::{
     CostModel, LinkSpec, PlanInput, Planner, SchedulePolicy, SplitSolver, TierTopology,
 };
 use kvpr::sim::{simulate_decode, Policy, RunConfig};
+use kvpr::transfer::LinkConfig;
 use kvpr::util::stats::Summary;
 use kvpr::util::table::Table;
-use kvpr::workload::WorkloadSpec;
+use kvpr::workload::{Arrival, LenDist, SloTargets, TrafficClass, WorkloadSpec};
 
 fn time_per_iter<F: FnMut()>(iters: usize, mut f: F) -> f64 {
     // warmup
@@ -313,6 +317,74 @@ fn main() {
         format!("enabled/disabled throughput {:.3}", dt_off / dt_on),
     ]);
 
+    // pipelined step runtime: the identical bursty trace served end-to-end
+    // through the continuous loop in both pipeline modes.  Overlapped mode
+    // pre-solves the next step's plans, double-buffers group staging and
+    // pumps migrations inside the compute shadow, so its throughput must
+    // never fall below the serial loop's — BENCH_baseline.json's
+    // ratio_gates pins pipeline.overlapped ≥ 100 % of pipeline.serial
+    // (best-of-3 interleaved trials keep the claim machine-independent).
+    let pipe_spec = WorkloadSpec {
+        name: "pipeline_bench".into(),
+        seed: 7,
+        requests: 8,
+        arrivals: Arrival::Bursty { burst: 4, gap: 2 },
+        classes: vec![TrafficClass {
+            name: "chat".into(),
+            weight: 1.0,
+            prompt: LenDist::Fixed { steps: 16 },
+            gen: LenDist::Fixed { steps: 32 },
+            think: LenDist::Fixed { steps: 0 },
+        }],
+        slo: SloTargets { ttft_s: 30.0, tpot_s: 30.0 },
+    };
+    let pipe_trace = pipe_spec.generate();
+    let serve = |mode: PipelineMode| -> (f64, PipelineTotals) {
+        let mut e = EngineConfig::new(EnginePolicy::Kvpr);
+        e.weights_offloaded = true;
+        e.link = LinkConfig::with_bandwidth(100e6);
+        e.seed = 42;
+        let mut c = ContinuousConfig::new("artifacts", e);
+        c.max_group = 2;
+        c.max_groups = 4;
+        c.prompt_bucket = 16;
+        c.admit_wait = Duration::from_millis(1);
+        c.kv_budget_bytes = 64 << 20;
+        c.pipeline = mode;
+        let server = ContinuousServer::start(c).expect("start continuous server");
+        let t0 = Instant::now();
+        for h in server.submit_trace(&pipe_trace) {
+            h.wait().expect("request served");
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let steps = server.metrics().tokens() as f64;
+        let totals = server.metrics().pipeline_totals();
+        server.shutdown().expect("server shutdown");
+        (steps / dt, totals)
+    };
+    let mut serial_sps = 0.0f64;
+    let mut over_sps = 0.0f64;
+    let mut over_totals = PipelineTotals::default();
+    for _ in 0..3 {
+        serial_sps = serial_sps.max(serve(PipelineMode::Serial).0);
+        let (sps, totals) = serve(PipelineMode::Overlapped);
+        if sps > over_sps {
+            over_sps = sps;
+            over_totals = totals;
+        }
+    }
+    t.row(&[
+        "pipeline serve (8 reqs × 32 steps)".into(),
+        "3×2".into(),
+        kvpr::util::fmt_secs(1.0 / over_sps),
+        format!(
+            "overlapped/serial {:.3}, {} adopted / {} fallback",
+            over_sps / serial_sps,
+            over_totals.plans_adopted,
+            over_totals.fallback_resolves
+        ),
+    ]);
+
     // trace-driven workload mixes: each named generator lowered to a
     // trace and replayed through the analytic sim (the serving loop's
     // twin) — per-mix decode throughput plus the queueing-delay
@@ -353,7 +425,7 @@ fn main() {
     }
 
     let json = format!(
-        "{{\n  \"bench\": \"kvstore\",\n  \"policies\": {{\n    \"lru\": {},\n    \"recompute_aware\": {}\n  }},\n  \"tiered\": {{\n    \"lru\": {},\n    \"recompute_aware\": {}\n  }},\n  \"four_tier\": {{\n    \"lru\": {},\n    \"recompute_aware\": {}\n  }},\n  \"topology_plan\": {{\n    {},\n    {},\n    {}\n  }},\n  \"obs_overhead\": {{\n    \"disabled\": {{ \"steps_per_s\": {:.3} }},\n    \"enabled\": {{ \"steps_per_s\": {:.3} }}\n  }},\n  \"workload\": {{\n    {},\n    {},\n    {}\n  }}\n}}\n",
+        "{{\n  \"bench\": \"kvstore\",\n  \"policies\": {{\n    \"lru\": {},\n    \"recompute_aware\": {}\n  }},\n  \"tiered\": {{\n    \"lru\": {},\n    \"recompute_aware\": {}\n  }},\n  \"four_tier\": {{\n    \"lru\": {},\n    \"recompute_aware\": {}\n  }},\n  \"topology_plan\": {{\n    {},\n    {},\n    {}\n  }},\n  \"obs_overhead\": {{\n    \"disabled\": {{ \"steps_per_s\": {:.3} }},\n    \"enabled\": {{ \"steps_per_s\": {:.3} }}\n  }},\n  \"pipeline\": {{\n    \"serial\": {{ \"steps_per_s\": {:.3} }},\n    \"overlapped\": {{ \"steps_per_s\": {:.3}, \"prestaged_steps\": {}, \"plans_adopted\": {}, \"fallback_resolves\": {} }}\n  }},\n  \"workload\": {{\n    {},\n    {},\n    {}\n  }}\n}}\n",
         policy_json(&lru),
         policy_json(&ra),
         policy_json(&tlru),
@@ -365,6 +437,11 @@ fn main() {
         topo_json[2],
         1.0 / dt_off,
         1.0 / dt_on,
+        serial_sps,
+        over_sps,
+        over_totals.prestaged_steps,
+        over_totals.plans_adopted,
+        over_totals.fallback_resolves,
         wl_json[0],
         wl_json[1],
         wl_json[2]

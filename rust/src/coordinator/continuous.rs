@@ -66,10 +66,26 @@
 //! retires finished requests early — the property the KV-offloading serving
 //! papers in PAPERS.md show is required for the PCIe bottleneck to even be
 //! observable.
+//!
+//! **Pipelined step runtime** ([`ContinuousConfig::pipeline`]): in
+//! [`PipelineMode::Overlapped`] the loop hides its host-side work in the
+//! decode shadow twice over.  Across steps, a dedicated stage worker
+//! receives one job per step at compute start — pump the migration grant,
+//! then pre-solve every group's *next*-step plan against projected inputs
+//! — and is collected right after compute; pre-solved plans carry validity
+//! tokens ([`PlanHandoff`](crate::scheduler::PlanHandoff)), so any drift
+//! (admission, retirement, placement) forces a counted inline re-solve
+//! instead of executing a stale plan.  Within a step, the engine's build →
+//! stage → submit → collect split double-buffers group staging
+//! ([`StageSlots`](crate::engine::StageSlots)): group i+1's embed and
+//! first-layer transfers stream while group i computes.  Tokens are
+//! bit-identical to [`PipelineMode::Serial`] by construction — an adopted
+//! plan is the planner's own solution for the very input the serial path
+//! would have solved, and plans move bytes, never math.
 
 use std::collections::VecDeque;
 use std::path::PathBuf;
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
@@ -77,12 +93,14 @@ use anyhow::{Context, Result};
 use super::metrics::ServeMetrics;
 use super::request::{Pending, Request, RequestState, Response};
 use super::server::ResponseHandle;
-use crate::engine::{DecodeSession, Engine, EngineConfig};
+use crate::engine::{DecodeSession, Engine, EngineConfig, StageSlots, StepHandoff};
 use crate::kvstore::{EvictKind, KvStore, KvStoreConfig, Prefetcher};
 use crate::memory::{MemPool, PoolGuard};
 use crate::model::ByteTokenizer;
 use crate::obs::{EventKind, Phase, StepRecord, Tracer, TracerConfig};
-use crate::scheduler::{LinkSpec, PlanInput, SchedulePolicy, TierTopology};
+use crate::scheduler::{
+    LinkSpec, PlanHandoff, PlanInput, Planner, Redemption, SchedulePolicy, TierTopology,
+};
 use crate::util::clock::{Clock, ClockMode};
 
 /// Continuous-batching loop construction parameters.
@@ -126,6 +144,13 @@ pub struct ContinuousConfig {
     /// (0 disables).  Meant for step-clock trace replays; submitters must
     /// send at least this many requests or the loop never starts.
     pub preload_requests: usize,
+    /// Step-pipeline mode: [`PipelineMode::Overlapped`] overlaps the next
+    /// step's plan solve, group staging and the migration pump with this
+    /// step's decode compute; [`PipelineMode::Serial`] keeps the strictly
+    /// sequential loop as the A/B oracle.  Tokens are bit-identical either
+    /// way.  [`ContinuousConfig::new`] seeds this from the `KVPR_PIPELINE`
+    /// env var so whole test suites flip without code changes.
+    pub pipeline: PipelineMode,
 }
 
 impl ContinuousConfig {
@@ -142,6 +167,33 @@ impl ContinuousConfig {
             clock: ClockMode::Wall,
             trace: None,
             preload_requests: 0,
+            pipeline: PipelineMode::from_env(),
+        }
+    }
+}
+
+/// How the serving loop schedules one step's host-side work.  The two
+/// modes are an A/B oracle pair: identical tokens by construction,
+/// different wall-clock shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PipelineMode {
+    /// Plan, pump, stage and compute strictly in sequence on the serve
+    /// thread (the pre-pipeline loop).
+    #[default]
+    Serial,
+    /// Pipelined step runtime: a stage worker solves the next step's plans
+    /// and runs the migration pump while the engine computes, and the
+    /// engine's stage/submit split double-buffers group staging.
+    Overlapped,
+}
+
+impl PipelineMode {
+    /// Read `KVPR_PIPELINE` (`serial` | `overlapped`, case-insensitive);
+    /// anything else — including unset — is [`PipelineMode::Serial`].
+    pub fn from_env() -> Self {
+        match std::env::var("KVPR_PIPELINE") {
+            Ok(v) if v.eq_ignore_ascii_case("overlapped") => PipelineMode::Overlapped,
+            _ => PipelineMode::Serial,
         }
     }
 }
@@ -248,6 +300,9 @@ enum KvHold {
 
 /// One decode group: a session plus its members and KV reservation.
 struct Group {
+    /// Stable id keying this group's prestage plan tickets (lane indices
+    /// shift as groups retire; this never does).
+    gid: u64,
     sess: DecodeSession,
     members: Vec<Member>,
     kv: KvHold,
@@ -436,8 +491,13 @@ fn serve_loop(
         _ => crate::transfer::NVME_BANDWIDTH_FACTOR,
     };
     // tiered mode: the budget becomes the gpu tier; admission goes through
-    // the block-granular store and its reclaimable lower tiers instead
-    let mut store: Option<(KvStore, Prefetcher)> = match (cfg.tiering.as_ref(), topo.as_ref()) {
+    // the block-granular store and its reclaimable lower tiers instead.
+    // The store sits behind a mutex so the overlapped pipeline's stage
+    // worker can run the migration pump in the compute shadow; the serve
+    // thread and the worker never contend past a step boundary (the job
+    // channels are the barrier), so the lock is uncontended in practice.
+    type SharedStore = (Arc<Mutex<KvStore>>, Prefetcher);
+    let mut store: Option<SharedStore> = match (cfg.tiering.as_ref(), topo.as_ref()) {
         (Some(t), Some(topo)) => {
             let cost = engine.profile().cost_model(&engine.runtime().manifest().model);
             let mut scfg = KvStoreConfig::from_topology(topo, cfg.engine.link.chunk_bytes);
@@ -456,13 +516,14 @@ fn serve_loop(
             // migration lifecycle events (queued → staged → in-flight →
             // landed) flow into the same step-stamped trace
             s.set_tracer(tracer.clone());
-            Some((s, Prefetcher::new(t.max_inflight)))
+            Some((Arc::new(Mutex::new(s)), Prefetcher::new(t.max_inflight)))
         }
         _ => None,
     };
     let prefetch_blocks = cfg.tiering.as_ref().map_or(1, |t| t.prefetch_blocks);
     let seq_cap = engine.runtime().manifest().seq_cap;
     let mut next_seq: u64 = 1;
+    let mut next_gid: u64 = 1;
     let tok = ByteTokenizer::new();
     // per-lane planner (batch scaling happens in plan_batch); depends only
     // on the startup profile + the declared topology, so build it once,
@@ -476,6 +537,29 @@ fn serve_loop(
             None => p,
         }
     });
+
+    // pipelined step runtime: a dedicated stage worker pre-solves the next
+    // step's plans and runs the migration pump in this thread's compute
+    // shadow.  One job per step — sent at compute start, collected right
+    // after compute — so the channels double as the synchronization
+    // barrier: the worker never holds the store while this thread polls,
+    // admits or releases.
+    let overlapped = cfg.pipeline == PipelineMode::Overlapped;
+    let (stage_tx, stage_rx, stage_worker) = if overlapped {
+        let (job_tx, job_rx) = mpsc::channel::<StageJob>();
+        let (done_tx, done_rx) = mpsc::channel::<StageDone>();
+        let planner = lane_planner.clone();
+        let pump_store = store.as_ref().map(|(s, _)| Arc::clone(s));
+        let w = std::thread::Builder::new()
+            .name("kvpr-stage".into())
+            .spawn(move || stage_worker_loop(job_rx, done_tx, planner, pump_store))
+            .context("spawn pipeline stage worker thread")?;
+        (Some(job_tx), Some(done_rx), Some(w))
+    } else {
+        (None, None, None)
+    };
+    // the plans the worker pre-solved for *this* step, keyed by group id
+    let mut prestage: Option<PlanHandoff> = None;
 
     let mut queue: VecDeque<Pending> = VecDeque::new();
     let mut groups: Vec<Group> = Vec::new();
@@ -571,11 +655,12 @@ fn serve_loop(
             let mut hold = None;
             while n >= 1 {
                 let need = engine.session_kv_bytes(n)?;
-                let got = match store.as_mut() {
+                let got = match store.as_ref() {
                     Some((s, _)) => {
                         // tiered admission: place the session's blocks
                         // across the host tiers, reclaiming (drop KV,
                         // keep X) before backpressuring
+                        let mut s = s.lock().unwrap();
                         let blocks = seq_cap.div_ceil(s.block_tokens());
                         if s.admit(next_seq, need, blocks).is_ok() {
                             let seq = next_seq;
@@ -606,7 +691,8 @@ fn serve_loop(
                     // may still be vacating tier reservations (the drain
                     // is poll-driven and nothing is stepping to poll) —
                     // nap, poll, and retry instead of failing the request
-                    if let Some((s, _)) = store.as_mut() {
+                    if let Some((s, _)) = store.as_ref() {
+                        let mut s = s.lock().unwrap();
                         if s.draining_count() > 0 {
                             std::thread::sleep(Duration::from_millis(1));
                             s.poll_landed();
@@ -676,7 +762,8 @@ fn serve_loop(
                 m.state = RequestState::Decoding;
             }
             metrics.record_batch(n);
-            groups.push(Group { sess, members, kv: hold, last_l: 0 });
+            groups.push(Group { gid: next_gid, sess, members, kv: hold, last_l: 0 });
+            next_gid += 1;
         }
         tracer.emit(|| EventKind::PhaseEnd { phase: Phase::Stage });
 
@@ -690,6 +777,7 @@ fn serve_loop(
         tracer.emit(|| EventKind::PhaseBegin { phase: Phase::MigrationPoll });
         let mut mig_before = None;
         if let Some((s, pf)) = store.as_mut() {
+            let mut s = s.lock().unwrap();
             // surface reclamation drops performed during admission
             let drops = s.stats().kv_drops;
             if drops > seen_kv_drops {
@@ -699,7 +787,7 @@ fn serve_loop(
             }
             mig_before = Some((s.migration_stats(), s.stats()));
             // poll — never wait — the migrations previous steps launched
-            pf.poll(s);
+            pf.poll(&mut s);
             for g in groups.iter_mut() {
                 let KvHold::Tiered(seq) = &g.kv else { continue };
                 let seq = *seq;
@@ -708,7 +796,7 @@ fn serve_loop(
                 // gpu tier's accounting, then queue deeper blocks for
                 // promotion ahead of the step
                 s.sync_device_suffix(seq, g.sess.resident_tokens());
-                pf.pump(s, seq, prefetch_blocks);
+                pf.pump(&mut s, seq, prefetch_blocks);
             }
             // second pass, after *every* group's pump: a later group's
             // promotion may have evicted an earlier group's block, so the
@@ -751,6 +839,7 @@ fn serve_loop(
                 let lanes = vec![g.sess.kv_len(); g.sess.batch_bucket()];
                 let mut input = PlanInput::new(lanes).resident(g.sess.resident_tokens());
                 if let (KvHold::Tiered(seq), Some((s, _))) = (&g.kv, store.as_ref()) {
+                    let s = s.lock().unwrap();
                     input = input.dropped_floor(s.kv_dropped_tokens(*seq));
                     let disk = s.disk_resident_tokens(*seq);
                     if disk > 0 {
@@ -759,7 +848,19 @@ fn serve_loop(
                         input = input.prefix(tier, disk);
                     }
                 }
-                p.plan_batch(&input)
+                // pipelined mode: redeem the worker's pre-solved plan.  A
+                // ticket is adopted only when its projected input equals
+                // the one just built from live state — membership or
+                // placement drift forces a counted inline re-solve, never
+                // a stale plan
+                match prestage.as_mut().map(|h| h.redeem(g.gid, &input)) {
+                    Some(Redemption::Hit(pl)) => pl,
+                    Some(_) => {
+                        tracer.emit(|| EventKind::ReplanFallback { group: gi });
+                        p.plan_batch(&input)
+                    }
+                    None => p.plan_batch(&input),
+                }
             });
             if let Some(pl) = &plan {
                 g.last_l = pl.l();
@@ -774,6 +875,10 @@ fn serve_loop(
             }
             plans.push(plan.map(|pl| pl.l()));
         }
+        // every live group has redeemed by now: whatever the report counted
+        // (adoptions, forced re-solves) is this step's handoff tally; any
+        // ticket still unclaimed belonged to a group that retired
+        let handoff_report = prestage.take().map(PlanHandoff::into_report);
 
         // -- 3b. adaptive step budget: grant the migration engine exactly
         //        the idle-link bytes this step's plans predict (the static
@@ -782,62 +887,201 @@ fn serve_loop(
         //        can still ride the engine's oversized-block override —
         //        one launch, nothing more.  Launch order under the grant:
         //        demand promotions, demotion writebacks, prefetch, spill.
+        //        Overlapped mode skips the inline pump: the stage worker
+        //        runs it in the compute shadow and the launch/landing
+        //        deltas are booked at the handoff instead.
         let mut step_grant: u64 = 0;
         let mut step_launched: usize = 0;
         let mut step_landed: usize = 0;
         let mut step_launched_bytes: u64 = 0;
-        if let (Some((s, _)), Some(t)) = (store.as_mut(), cfg.tiering.as_ref()) {
-            let grant = t.step_budget_override.unwrap_or(slack_total.max(1));
-            let launched_before = s.migration_stats().launched;
-            s.pump_migrations(grant);
-            let launched = s.migration_stats().launched - launched_before;
-            metrics.record_step_budget(slack_total, grant, launched);
-            step_grant = grant;
-            step_launched = launched as usize;
-            step_launched_bytes = s.step_launched_wire_bytes();
-            tracer.emit(|| EventKind::StepBudget {
-                slack: slack_total,
-                granted: grant,
-                launched: launched as usize,
-                launched_bytes: step_launched_bytes,
-            });
-            if let Some((mig0, st0)) = mig_before {
-                let (mig1, st1) = (s.migration_stats(), s.stats());
-                step_landed = (mig1.landed - mig0.landed) as usize;
-                metrics.record_migrations(
-                    mig1.launched - mig0.launched,
-                    mig1.landed - mig0.landed,
-                    mig1.budget_deferrals - mig0.budget_deferrals,
-                    st1.demotions - st0.demotions,
-                    st1.demotions_landed - st0.demotions_landed,
-                );
-                let disk = (st1.spills, st1.spills_landed, st1.hops, st1.hops_landed);
-                metrics.record_disk(
-                    disk.0 - seen_disk.0,
-                    disk.1 - seen_disk.1,
-                    disk.2 - seen_disk.2,
-                    disk.3 - seen_disk.3,
-                );
-                seen_disk = disk;
+        if !overlapped {
+            if let (Some((s, _)), Some(t)) = (store.as_ref(), cfg.tiering.as_ref()) {
+                let mut s = s.lock().unwrap();
+                let grant = t.step_budget_override.unwrap_or(slack_total.max(1));
+                let launched_before = s.migration_stats().launched;
+                s.pump_migrations(grant);
+                let launched = s.migration_stats().launched - launched_before;
+                metrics.record_step_budget(slack_total, grant, launched);
+                step_grant = grant;
+                step_launched = launched as usize;
+                step_launched_bytes = s.step_launched_wire_bytes();
+                tracer.emit(|| EventKind::StepBudget {
+                    slack: slack_total,
+                    granted: grant,
+                    launched: launched as usize,
+                    launched_bytes: step_launched_bytes,
+                });
+                if let Some((mig0, st0)) = mig_before.take() {
+                    let (mig1, st1) = (s.migration_stats(), s.stats());
+                    step_landed = (mig1.landed - mig0.landed) as usize;
+                    metrics.record_migrations(
+                        mig1.launched - mig0.launched,
+                        mig1.landed - mig0.landed,
+                        mig1.budget_deferrals - mig0.budget_deferrals,
+                        st1.demotions - st0.demotions,
+                        st1.demotions_landed - st0.demotions_landed,
+                    );
+                    let disk = (st1.spills, st1.spills_landed, st1.hops, st1.hops_landed);
+                    metrics.record_disk(
+                        disk.0 - seen_disk.0,
+                        disk.1 - seen_disk.1,
+                        disk.2 - seen_disk.2,
+                        disk.3 - seen_disk.3,
+                    );
+                    seen_disk = disk;
+                }
             }
         }
         tracer.emit(|| EventKind::PhaseEnd { phase: Phase::Plan });
 
         // -- 4. step every group ---------------------------------------------
-        tracer.emit(|| EventKind::PhaseBegin { phase: Phase::Compute });
         let step_idx = clock.step();
         let t_step = clock.now();
         let mut step_tokens = 0usize;
+        let mut step_overlap_s = 0.0f64;
         let active: usize = groups.iter().map(|g| g.active()).sum();
-        for (g, plan_l) in groups.iter_mut().zip(plans) {
-            engine.decode_step_with_plan(&mut g.sess, plan_l)?;
-            step_tokens += g.active();
+        if overlapped {
+            // the Prestage span opens before compute: the stage worker
+            // solves step N+1's plans (and pumps this step's migration
+            // grant) in the compute shadow, and the span closes once this
+            // thread has the results — its tail past `compute` is the
+            // pipeline stall
+            tracer.emit(|| EventKind::PhaseBegin { phase: Phase::Prestage });
+            let grant = match (store.as_ref(), cfg.tiering.as_ref()) {
+                (Some(_), Some(t)) => Some(t.step_budget_override.unwrap_or(slack_total.max(1))),
+                _ => None,
+            };
+            let mut predictions = Vec::new();
+            if lane_planner.is_some() {
+                predictions.reserve(groups.len());
+                for g in groups.iter() {
+                    // project step N+1: every lane one token longer, the
+                    // residency window grown with it, tier placement as of
+                    // now — drift is caught (and counted) at redemption
+                    let lanes = vec![g.sess.kv_len() + 1; g.sess.batch_bucket()];
+                    let grown = g.sess.resident_tokens() + usize::from(g.sess.residency_enabled());
+                    let mut input = PlanInput::new(lanes).resident(grown);
+                    if let (KvHold::Tiered(seq), Some((s, _))) = (&g.kv, store.as_ref()) {
+                        let s = s.lock().unwrap();
+                        input = input.dropped_floor(s.kv_dropped_tokens(*seq));
+                        let disk = s.disk_resident_tokens(*seq);
+                        if disk > 0 {
+                            let tier = disk_tier
+                                .expect("disk-resident tokens without a disk rung in the topology");
+                            input = input.prefix(tier, disk);
+                        }
+                    }
+                    predictions.push((g.gid, input));
+                }
+            }
+            stage_tx
+                .as_ref()
+                .expect("overlapped mode spawns a stage worker")
+                .send(StageJob { grant, predictions })
+                .map_err(|_| anyhow::anyhow!("pipeline stage worker died"))?;
+        }
+        tracer.emit(|| EventKind::PhaseBegin { phase: Phase::Compute });
+        if overlapped {
+            // double-buffered group staging: stage(i+1) fills the free
+            // slot — its embed and first-layer transfers go out on the
+            // link workers — before submit(i) drains the other, so the
+            // next group's staging streams under this group's compute
+            let mut slots = StageSlots::new();
+            let mut handoffs: Vec<Option<StepHandoff>> = Vec::with_capacity(groups.len());
+            if let Some(g) = groups.first_mut() {
+                let mut h = engine.build_step(&mut g.sess, plans[0])?;
+                engine.stage_step(&mut g.sess, &mut h, &mut slots)?;
+                handoffs.push(Some(h));
+            }
+            for i in 0..groups.len() {
+                if i + 1 < groups.len() {
+                    let g = &mut groups[i + 1];
+                    let mut h = engine.build_step(&mut g.sess, plans[i + 1])?;
+                    engine.stage_step(&mut g.sess, &mut h, &mut slots)?;
+                    h.mark_overlapped();
+                    step_overlap_s += h.staged_s();
+                    handoffs.push(Some(h));
+                }
+                let g = &mut groups[i];
+                let mut h = handoffs[i].take().expect("group staged before submit");
+                let hidden = engine.submit_step(&mut g.sess, &mut h, &mut slots)?;
+                engine.collect_step(&mut g.sess, h, hidden)?;
+                step_tokens += g.active();
+            }
+        } else {
+            for (g, plan_l) in groups.iter_mut().zip(&plans) {
+                engine.decode_step_with_plan(&mut g.sess, *plan_l)?;
+                step_tokens += g.active();
+            }
         }
         // the completed decode advances the serving clock one step (under
         // the deterministic clock, exactly `step_s` seconds)
         clock.advance();
         let after_step = clock.now();
         tracer.emit(|| EventKind::PhaseEnd { phase: Phase::Compute });
+        if overlapped {
+            // collect the worker's results; time blocked here is pipeline
+            // stall — compute did not fully hide the prestage work
+            let t_stall = Instant::now();
+            let done = stage_rx
+                .as_ref()
+                .expect("overlapped mode spawns a stage worker")
+                .recv()
+                .map_err(|_| anyhow::anyhow!("pipeline stage worker died"))?;
+            let step_stall_s = t_stall.elapsed().as_secs_f64();
+            tracer.emit(|| EventKind::PhaseEnd { phase: Phase::Prestage });
+            tracer.emit(|| EventKind::PhaseBegin { phase: Phase::Handoff });
+            // book what the worker did in the shadow: the step budget it
+            // pumped under, the migration/disk deltas it caused, and the
+            // next step's plan tickets
+            if let Some((granted, launched, launched_bytes)) = done.pumped {
+                metrics.record_step_budget(slack_total, granted, launched);
+                step_grant = granted;
+                step_launched = launched as usize;
+                step_launched_bytes = launched_bytes;
+                tracer.emit(|| EventKind::StepBudget {
+                    slack: slack_total,
+                    granted,
+                    launched: launched as usize,
+                    launched_bytes,
+                });
+                if let (Some((mig0, st0)), Some((s, _))) = (mig_before.take(), store.as_ref()) {
+                    let s = s.lock().unwrap();
+                    let (mig1, st1) = (s.migration_stats(), s.stats());
+                    step_landed = (mig1.landed - mig0.landed) as usize;
+                    metrics.record_migrations(
+                        mig1.launched - mig0.launched,
+                        mig1.landed - mig0.landed,
+                        mig1.budget_deferrals - mig0.budget_deferrals,
+                        st1.demotions - st0.demotions,
+                        st1.demotions_landed - st0.demotions_landed,
+                    );
+                    let disk = (st1.spills, st1.spills_landed, st1.hops, st1.hops_landed);
+                    metrics.record_disk(
+                        disk.0 - seen_disk.0,
+                        disk.1 - seen_disk.1,
+                        disk.2 - seen_disk.2,
+                        disk.3 - seen_disk.3,
+                    );
+                    seen_disk = disk;
+                }
+            }
+            let rep = handoff_report.unwrap_or_default();
+            metrics.record_pipeline(
+                rep.fully_prestaged(),
+                rep.hits,
+                rep.fallbacks,
+                step_stall_s,
+                step_overlap_s,
+            );
+            // stall is serve-thread wall time (lands in Breakdown::total);
+            // overlap was already booked per group by collect_step
+            if let Some(g) = groups.first_mut() {
+                g.sess.note_pipeline(0.0, step_stall_s);
+            }
+            prestage = Some(done.handoff);
+            tracer.emit(|| EventKind::PhaseEnd { phase: Phase::Handoff });
+        }
         // every decoding member just produced a token: stamp first-token
         // times for the TTFT samples retirement reports
         for g in groups.iter_mut() {
@@ -901,8 +1145,8 @@ fn serve_loop(
         for g in groups.drain(..) {
             if g.active() > 0 {
                 live.push(g);
-            } else if let (KvHold::Tiered(seq), Some((s, _))) = (&g.kv, store.as_mut()) {
-                s.release(*seq);
+            } else if let (KvHold::Tiered(seq), Some((s, _))) = (&g.kv, store.as_ref()) {
+                s.lock().unwrap().release(*seq);
             }
         }
         groups = live;
@@ -922,7 +1166,65 @@ fn serve_loop(
             landed: step_landed,
         });
     }
+    // close the job channel and join the stage worker (it exits on the
+    // closed channel; no job is ever in flight between steps)
+    drop(stage_tx);
+    if let Some(w) = stage_worker {
+        let _ = w.join();
+    }
     Ok(())
+}
+
+/// One overlapped step's order to the stage worker, sent as compute opens:
+/// pump the migration grant, then pre-solve the next step's plans.
+struct StageJob {
+    /// `Some(bytes)` when a tiered store should be pumped under this grant.
+    grant: Option<u64>,
+    /// Projected next-step [`PlanInput`] per live group, keyed by group id.
+    predictions: Vec<(u64, PlanInput)>,
+}
+
+/// What the worker hands back at the step's handoff point.
+struct StageDone {
+    /// Pre-solved next-step plans with their validity tokens.
+    handoff: PlanHandoff,
+    /// `(granted, launched, launched_wire_bytes)` when the job pumped.
+    pumped: Option<(u64, u64, u64)>,
+}
+
+/// The stage worker: one job per serve-loop step, executed while the serve
+/// thread is inside decode compute.  The pump runs first so migrations
+/// ride the wire during compute rather than after the plan solves finish;
+/// the launched-wire-bytes reading is taken under the same lock hold, so
+/// the per-step grant audit sees exactly this pump's launches.
+fn stage_worker_loop(
+    jobs: mpsc::Receiver<StageJob>,
+    done: mpsc::Sender<StageDone>,
+    planner: Option<Planner>,
+    store: Option<Arc<Mutex<KvStore>>>,
+) {
+    while let Ok(job) = jobs.recv() {
+        let pumped = match (job.grant, store.as_ref()) {
+            (Some(grant), Some(s)) => {
+                let mut s = s.lock().unwrap();
+                let before = s.migration_stats().launched;
+                s.pump_migrations(grant);
+                let launched = s.migration_stats().launched - before;
+                Some((grant, launched, s.step_launched_wire_bytes()))
+            }
+            _ => None,
+        };
+        let mut handoff = PlanHandoff::new();
+        if let Some(p) = planner.as_ref() {
+            for (gid, input) in job.predictions {
+                let plan = p.plan_batch(&input);
+                handoff.push(gid, input, plan);
+            }
+        }
+        if done.send(StageDone { handoff, pumped }).is_err() {
+            break; // serve thread gone; nothing left to hand off
+        }
+    }
 }
 
 /// Whether a queued request may be admitted at the given decode-step clock

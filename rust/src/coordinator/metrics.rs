@@ -51,6 +51,8 @@ struct Inner {
     hops_polled: u64,
     // -- adaptive step-budget counters ---------------------------------------
     budget: StepBudgetTotals,
+    // -- pipelined-runtime counters -------------------------------------------
+    pipeline: PipelineTotals,
     // -- workload SLO samples -------------------------------------------------
     ttft: Summary,
     tpot: Summary,
@@ -170,6 +172,28 @@ pub struct StepBudgetTotals {
     /// the engine's progress-guarantee override fires when the plan
     /// predicts no idle link time.
     pub zero_slack_launch_max: u64,
+}
+
+/// Totals of the overlapped pipeline's prestage/handoff machinery (all
+/// zeros when the loop runs [`PipelineMode::Serial`](super::PipelineMode)).
+/// `f64` stall/overlap accumulators make this `PartialEq` but not `Eq`.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PipelineTotals {
+    /// Steps the overlapped loop completed.
+    pub steps: u64,
+    /// Steps whose every executed plan came prebuilt out of the handoff.
+    pub prestaged_steps: u64,
+    /// Prebuilt plans adopted unchanged (handoff hits).
+    pub plans_adopted: u64,
+    /// Inline re-solves forced by a stale or missing prestage ticket.
+    pub fallback_resolves: u64,
+    /// Wall seconds the serve thread spent blocked on the stage worker's
+    /// handoff after compute finished.
+    pub stall_s: f64,
+    /// Host seconds of staging work hidden under another group's compute
+    /// (shadow time — also folded into
+    /// [`Breakdown::overlap_s`](crate::engine::Breakdown)).
+    pub overlap_s: f64,
 }
 
 impl ServeMetrics {
@@ -321,6 +345,34 @@ impl ServeMetrics {
     /// Aggregates of the adaptive per-step migration grant.
     pub fn budget_totals(&self) -> StepBudgetTotals {
         self.inner.lock().unwrap().budget
+    }
+
+    /// One overlapped step's pipeline accounting: whether every executed
+    /// plan was prestaged, the handoff's hit/fallback tally, wall seconds
+    /// stalled on the worker, and staging seconds hidden under compute.
+    pub fn record_pipeline(
+        &self,
+        prestaged: bool,
+        adopted: u64,
+        fallbacks: u64,
+        stall_s: f64,
+        overlap_s: f64,
+    ) {
+        let mut m = self.inner.lock().unwrap();
+        let p = &mut m.pipeline;
+        p.steps += 1;
+        if prestaged {
+            p.prestaged_steps += 1;
+        }
+        p.plans_adopted += adopted;
+        p.fallback_resolves += fallbacks;
+        p.stall_s += stall_s;
+        p.overlap_s += overlap_s;
+    }
+
+    /// Totals of the overlapped pipeline (zeros in serial mode).
+    pub fn pipeline_totals(&self) -> PipelineTotals {
+        self.inner.lock().unwrap().pipeline
     }
 
     /// Arm SLO scoring: subsequent [`record_ttft_tpot`](Self::record_ttft_tpot)
@@ -667,6 +719,21 @@ mod tests {
         assert!((a.ttft_frac() - 0.75).abs() < 1e-12);
         assert!((a.tpot_frac() - 0.75).abs() < 1e-12);
         assert!(!m.ttft_stats().p99.is_nan());
+    }
+
+    #[test]
+    fn pipeline_counters_fold_per_step_reports() {
+        let m = ServeMetrics::new();
+        assert_eq!(m.pipeline_totals(), PipelineTotals::default());
+        m.record_pipeline(true, 2, 0, 0.001, 0.004);
+        m.record_pipeline(false, 1, 1, 0.002, 0.003);
+        let p = m.pipeline_totals();
+        assert_eq!(p.steps, 2);
+        assert_eq!(p.prestaged_steps, 1);
+        assert_eq!(p.plans_adopted, 3);
+        assert_eq!(p.fallback_resolves, 1);
+        assert!((p.stall_s - 0.003).abs() < 1e-12);
+        assert!((p.overlap_s - 0.007).abs() < 1e-12);
     }
 
     #[test]

@@ -21,6 +21,11 @@
 //!   term, and the migration engine's per-step link grant is derived
 //!   adaptively from the plans' predicted idle-link slack
 //!   ([`StepPlan::link_slack_bytes`](crate::scheduler::StepPlan::link_slack_bytes)).
+//!   In [`PipelineMode::Overlapped`] the loop runs as a pipelined step
+//!   runtime: a stage worker pre-solves the next step's plans and pumps
+//!   the migration grant inside the decode-compute shadow, with
+//!   validity-token handoff ([`PlanHandoff`](crate::scheduler::PlanHandoff))
+//!   guaranteeing tokens stay bit-identical to [`PipelineMode::Serial`].
 //!   This is the serving mode that exercises KVPR under concurrent load.
 //! * [`Server`] — the simpler whole-batch mode: the [`Batcher`] groups
 //!   queued requests, the engine decodes the batch to completion, then the
@@ -40,10 +45,10 @@ mod router;
 mod server;
 
 pub use batcher::Batcher;
-pub use continuous::{ContinuousConfig, ContinuousServer, TieredKvConfig};
+pub use continuous::{ContinuousConfig, ContinuousServer, PipelineMode, TieredKvConfig};
 pub use metrics::{
-    DemotionTotals, DiskTotals, LatencyPercentiles, MigrationTotals, ServeMetrics, SloAttainment,
-    StepBudgetTotals, TieringTotals,
+    DemotionTotals, DiskTotals, LatencyPercentiles, MigrationTotals, PipelineTotals, ServeMetrics,
+    SloAttainment, StepBudgetTotals, TieringTotals,
 };
 pub use request::{Request, RequestState, Response};
 pub use router::Router;

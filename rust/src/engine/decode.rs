@@ -6,6 +6,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use super::pipeline::{StageSlots, StagedInput, StepHandoff};
 use super::stage::{stage_padded, stage_padded2, Breakdown};
 use crate::kvcache::HostKvCache;
 use crate::memory::{MemPool, PoolGuard};
@@ -230,14 +231,29 @@ impl DecodeSession {
         self.resident.as_ref().map_or(0, |g| g.len)
     }
 
+    /// Whether the device-resident suffix is enabled (it may be enabled
+    /// yet momentarily empty under pool pressure) — the pipelined serve
+    /// loop uses this to project next step's residency for plan prestage.
+    pub fn residency_enabled(&self) -> bool {
+        self.resident.is_some()
+    }
+
     /// Timing and split-point accounting accumulated so far.
     pub fn metrics(&self) -> &GenMetrics {
         &self.metrics
     }
+
+    /// Fold pipeline accounting into the session's breakdown: `overlap_s`
+    /// host work hidden under compute, `stall_s` wall time blocked on a
+    /// stage handoff (the serving loop's worker recv).
+    pub(crate) fn note_pipeline(&mut self, overlap_s: f64, stall_s: f64) {
+        self.metrics.breakdown.overlap_s += overlap_s;
+        self.metrics.breakdown.stall_s += stall_s;
+    }
 }
 
 /// Per-layer in-flight transfers (issued ahead of compute).
-struct LayerTransfers {
+pub(super) struct LayerTransfers {
     plan_l: usize,
     act: Option<TransferHandle>,
     k: Option<TransferHandle>,
@@ -854,14 +870,42 @@ impl Engine {
     /// point (the coordinator re-solves Eq. 11 over the whole formed batch);
     /// `None` lets the session's planner decide.  Returns the tokens
     /// sampled this step (one per batch lane).
+    ///
+    /// The step is the serial composition of the four pipeline stages —
+    /// [`build_step`](Self::build_step) → [`stage_step`](Self::stage_step)
+    /// → [`submit_step`](Self::submit_step) →
+    /// [`collect_step`](Self::collect_step) (see
+    /// [`pipeline`](super::pipeline)); the pipelined serving loop drives
+    /// the same stages with a shared [`StageSlots`] double buffer so one
+    /// group's staging overlaps another's compute.
     pub fn decode_step_with_plan(
         &self,
         sess: &mut DecodeSession,
         plan_override: Option<usize>,
     ) -> Result<Vec<i32>> {
+        let mut slots = StageSlots::new();
+        let mut h = self.build_step(sess, plan_override)?;
+        self.stage_step(sess, &mut h, &mut slots)?;
+        let hidden = self.submit_step(sess, &mut h, &mut slots)?;
+        self.collect_step(sess, h, hidden)
+    }
+
+    // ---------------------------------------------------------------------
+    // pipeline stages (see `engine::pipeline` for the handoff contract)
+    // ---------------------------------------------------------------------
+
+    /// **build**: plan-driven input selection.  Resolve the split point
+    /// this step executes, charge the residency block the appended token
+    /// needs (sliding the window under gpu-pool pressure), and bound the
+    /// resident suffix against the recompute prefix.  Produces the
+    /// [`StepHandoff`] the remaining stages carry.
+    pub fn build_step(
+        &self,
+        sess: &mut DecodeSession,
+        plan_override: Option<usize>,
+    ) -> Result<StepHandoff> {
         let m = self.runtime.manifest();
         let model = &m.model;
-        let b = sess.b;
         let kv_len = sess.cache.seq_len();
         if kv_len >= m.seq_cap {
             bail!("kv cache full ({kv_len} rows): session must be retired");
@@ -886,7 +930,7 @@ impl Engine {
         // there): charge the crossing into a new residency block up front,
         // sliding the window when the gpu pool is contended so the resident
         // region stays a suffix
-        let row = b * model.hidden;
+        let row = sess.b * model.hidden;
         if let Some(g) = sess.resident.as_mut() {
             if g.guards.len() * g.block_tokens < g.len + 1 {
                 let bb = GpuResident::block_bytes(model.n_layers, g.block_tokens, row);
@@ -909,28 +953,66 @@ impl Engine {
             .is_some_and(|g| g.guards.len() * g.block_tokens >= g.len + 1);
         // the resident suffix yields to the recompute prefix when they meet
         let r_used = sess.resident_tokens().min(kv_len - plan_l);
+        Ok(StepHandoff::new(plan_l, r_used, kv_len, grow_resident))
+    }
 
-        let t_step = Instant::now();
-        let embed = self.runtime.artifact(&m.embed_decode_name(b))?;
-        let head = self.runtime.artifact(&m.lm_head_name(b))?;
+    /// **stage**: embed the last sampled tokens and issue layer 0's
+    /// transfers (activation prefix + KV remainder) into a free staging
+    /// slot.  Once staged, the transfers stream on the link's worker
+    /// threads — a pipelined caller stages the *next* step here while the
+    /// current one is still in [`submit_step`](Self::submit_step).
+    pub fn stage_step(
+        &self,
+        sess: &mut DecodeSession,
+        h: &mut StepHandoff,
+        slots: &mut StageSlots,
+    ) -> Result<()> {
+        let t_stage = Instant::now();
+        let m = self.runtime.manifest();
+        let embed = self.runtime.artifact(&m.embed_decode_name(sess.b))?;
 
         let t0 = Instant::now();
         let x0 = embed.call(&[
             ArgValue::I32Slice(&sess.last),
-            ArgValue::I32(kv_len as i32),
+            ArgValue::I32(h.kv_len() as i32),
             ArgValue::F32(&self.weights.tok_table),
             ArgValue::F32(&self.weights.pos_table),
         ])?;
         sess.metrics.breakdown.other_s += t0.elapsed().as_secs_f64();
-        let mut x = x0.into_iter().next().unwrap();
+        let x = x0.into_iter().next().unwrap();
 
-        // ALISA defers the remainder: issue only activations up front
+        // ALISA defers the remainder: issue only at the top of each layer
+        let alisa = matches!(self.cfg.policy, EnginePolicy::AlisaSequential);
+        let first = (!alisa).then(|| self.issue_layer(&sess.cache, 0, h.plan_l(), h.r_used()));
+        h.slot = Some(slots.store(StagedInput { x, first })?);
+        h.staged_s += t_stage.elapsed().as_secs_f64();
+        Ok(())
+    }
+
+    /// **submit**: drain the staged slot through every layer's planned
+    /// transfer/recompute schedule (Algorithm 1's compute half), appending
+    /// K/V as it goes.  Returns the final hidden state for
+    /// [`collect_step`](Self::collect_step).
+    pub fn submit_step(
+        &self,
+        sess: &mut DecodeSession,
+        h: &mut StepHandoff,
+        slots: &mut StageSlots,
+    ) -> Result<Vec<f32>> {
+        let t_submit = Instant::now();
+        let m = self.runtime.manifest();
+        let model = &m.model;
+        let b = sess.b;
+        let (plan_l, r_used, kv_len) = (h.plan_l(), h.r_used(), h.kv_len());
+        let slot = h
+            .slot
+            .take()
+            .context("submit_step needs a staged handoff (call stage_step first)")?;
+        let StagedInput { mut x, first } = slots.take(slot)?;
+        let row = b * model.hidden;
         let alisa = matches!(self.cfg.policy, EnginePolicy::AlisaSequential);
 
-        let mut pending: Option<LayerTransfers> = None;
-        if !alisa {
-            pending = Some(self.issue_layer(&sess.cache, 0, plan_l, r_used));
-        }
+        let mut pending: Option<LayerTransfers> = first;
         for layer in 0..model.n_layers {
             let t = if alisa {
                 // sequential: ALISA issues a layer's transfers only when
@@ -974,7 +1056,7 @@ impl Engine {
             // store streams (Algorithm 1 store_*): host append + D2H timing
             sess.store_handles
                 .push(self.d2h.submit_timing(3 * b * model.hidden, Priority::Normal));
-            if grow_resident {
+            if h.grow_resident {
                 if let Some(g) = sess.resident.as_mut() {
                     g.k[layer].extend_from_slice(&k_new);
                     g.v[layer].extend_from_slice(&v_new);
@@ -983,15 +1065,34 @@ impl Engine {
             sess.cache.layer_mut(layer).append(&k_new, &v_new, &x)?;
             x = y;
         }
-        if grow_resident {
+        h.submit_s += t_submit.elapsed().as_secs_f64();
+        Ok(x)
+    }
+
+    /// **collect**: token landing + residency sync.  Runs lm_head over the
+    /// submitted hidden state, samples one token per lane, grows the
+    /// device-resident window over the appended K/V, and books the step's
+    /// timing — staging time counts as decode wall time in serial mode but
+    /// as hidden [`Breakdown::overlap_s`](super::Breakdown) when the
+    /// handoff was [marked overlapped](StepHandoff::mark_overlapped).
+    pub fn collect_step(
+        &self,
+        sess: &mut DecodeSession,
+        h: StepHandoff,
+        hidden: Vec<f32>,
+    ) -> Result<Vec<i32>> {
+        let t_collect = Instant::now();
+        let m = self.runtime.manifest();
+        let model = &m.model;
+        if h.grow_resident {
             if let Some(g) = sess.resident.as_mut() {
                 g.len += 1;
             }
         }
-
+        let head = self.runtime.artifact(&m.lm_head_name(sess.b))?;
         let t0 = Instant::now();
         let logits = head.call(&[
-            ArgValue::F32(&x),
+            ArgValue::F32(&hidden),
             ArgValue::F32(&self.weights.tok_table),
             ArgValue::F32(&self.weights.lnf_g),
             ArgValue::F32(&self.weights.lnf_b),
@@ -1001,7 +1102,15 @@ impl Engine {
         for (i, tk) in sess.tokens.iter_mut().enumerate() {
             tk.push(sess.last[i]);
         }
-        sess.metrics.decode_s += t_step.elapsed().as_secs_f64();
+        // staging time is decode wall time unless the pipeline hid it
+        // under another step's compute, in which case it is shadow time
+        let exec_s = h.submit_s + t_collect.elapsed().as_secs_f64();
+        if h.overlapped() {
+            sess.metrics.decode_s += exec_s;
+            sess.metrics.breakdown.overlap_s += h.staged_s;
+        } else {
+            sess.metrics.decode_s += h.staged_s + exec_s;
+        }
 
         // opportunistically retire landed store timings so a long-running
         // session's handle list stays bounded

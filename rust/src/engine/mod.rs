@@ -22,11 +22,18 @@
 //!
 //! All policies produce **identical tokens** — the schedules move bytes and
 //! kernels around, never the math.
+//!
+//! The decode step itself is split into explicit **build → stage → submit →
+//! collect** stages with a typed [`StepHandoff`] and a [`StageSlots`]
+//! double buffer (see [`pipeline`]), so the continuous serving loop can
+//! overlap one step's staging with another's compute.
 
 mod decode;
+mod pipeline;
 mod stage;
 
 pub use decode::{DecodeSession, Engine, EngineConfig, EnginePolicy, GenMetrics, GenResult};
+pub use pipeline::{StageSlots, StepHandoff};
 pub use stage::Breakdown;
 
 #[doc(hidden)]

@@ -1,0 +1,214 @@
+//! The pipelined step runtime: one decode step split into explicit
+//! **build → stage → submit → collect** stages with a typed handoff.
+//!
+//! [`Engine::decode_step_with_plan`](super::Engine::decode_step_with_plan)
+//! is the serial composition of four stage methods (same bytes, same
+//! tokens — the split is pure structure):
+//!
+//! ```text
+//!   build    plan-driven input selection: resolve the split l, charge the
+//!            residency block, bound the resident suffix      → StepHandoff
+//!   stage    embed the last tokens and issue layer 0's KV-remainder /
+//!            activation transfers into a staging slot        → slot filled
+//!   submit   per-layer transfer/recompute/merge compute       → slot drained
+//!   collect  lm_head + token landing + residency growth + timings
+//! ```
+//!
+//! [`StageSlots`] is the double buffer between `stage` and `submit`: two
+//! slots, so **stage(N+1) fills slot B while submit(N) drains slot A** —
+//! the staged transfers stream on the link's worker threads underneath
+//! slot A's compute.  Sessions are engine-affine (the staging touches the
+//! engine's links and pinned pool), so the slots pipeline *groups* on the
+//! serving thread; the cross-step half of the overlap — next step's
+//! [`Planner::plan_batch`](crate::scheduler::Planner::plan_batch) solve
+//! and the migration pump — runs on the coordinator's stage worker thread
+//! (see `coordinator::continuous`), with
+//! [`PlanHandoff`](crate::scheduler::PlanHandoff) validity tokens
+//! guaranteeing every adopted plan equals the inline solve it replaced.
+//! Either way the stages move bytes earlier, never math: serial and
+//! overlapped execution produce bit-identical tokens.
+//!
+//! Driving the stages by hand:
+//!
+//! ```no_run
+//! use kvpr::engine::{Engine, EngineConfig, EnginePolicy, StageSlots};
+//!
+//! fn main() -> anyhow::Result<()> {
+//!     let cfg = EngineConfig::new(EnginePolicy::Kvpr);
+//!     let engine = Engine::new(std::path::Path::new("artifacts"), cfg)?;
+//!     let mut sess = engine.start_batch(&[vec![104, 105]])?;
+//!     let mut slots = StageSlots::new();
+//!
+//!     // one decode step, stages spelled out (== engine.decode_step(&mut sess))
+//!     let mut h = engine.build_step(&mut sess, None)?;
+//!     engine.stage_step(&mut sess, &mut h, &mut slots)?;
+//!     let hidden = engine.submit_step(&mut sess, &mut h, &mut slots)?;
+//!     let tokens = engine.collect_step(&mut sess, h, hidden)?;
+//!     assert_eq!(tokens.len(), sess.batch_bucket());
+//!     Ok(())
+//! }
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use super::decode::LayerTransfers;
+
+/// The typed handoff carried through one step's build → stage → submit →
+/// collect stages: the plan the step executes, the staging slot holding
+/// its in-flight inputs, and the per-stage timing that lets `collect`
+/// account hidden (overlapped) staging time separately from wall time.
+#[derive(Debug)]
+pub struct StepHandoff {
+    /// The split point this step executes (0 = full transfer).
+    plan_l: usize,
+    /// Device-resident suffix rows the step keeps off the link.
+    r_used: usize,
+    /// Cached tokens (the paper's s') at build time.
+    kv_len: usize,
+    /// Whether the appended token's K/V stays device-resident.
+    pub(super) grow_resident: bool,
+    /// Index of the staging slot holding this step's staged inputs
+    /// (`None` before `stage` and after `submit` consumed it).
+    pub(super) slot: Option<usize>,
+    /// Host seconds `stage` spent (embed + transfer issue).
+    pub(super) staged_s: f64,
+    /// Seconds `submit` spent in the per-layer loop.
+    pub(super) submit_s: f64,
+    /// Set by the pipelined caller when `stage` ran in another step's
+    /// compute shadow: `collect` then books `staged_s` as
+    /// [`Breakdown::overlap_s`](super::Breakdown) instead of decode wall
+    /// time.
+    overlapped: bool,
+}
+
+impl StepHandoff {
+    pub(super) fn new(plan_l: usize, r_used: usize, kv_len: usize, grow_resident: bool) -> Self {
+        StepHandoff {
+            plan_l,
+            r_used,
+            kv_len,
+            grow_resident,
+            slot: None,
+            staged_s: 0.0,
+            submit_s: 0.0,
+            overlapped: false,
+        }
+    }
+
+    /// The split point the step will execute (an artifact L bucket).
+    pub fn plan_l(&self) -> usize {
+        self.plan_l
+    }
+
+    /// Resident-suffix rows staged without link traffic.
+    pub fn r_used(&self) -> usize {
+        self.r_used
+    }
+
+    /// Cached tokens at build time (the s' the plan was solved for).
+    pub fn kv_len(&self) -> usize {
+        self.kv_len
+    }
+
+    /// Whether `stage` has filled a slot that `submit` has not drained.
+    pub fn is_staged(&self) -> bool {
+        self.slot.is_some()
+    }
+
+    /// Host seconds the stage phase spent (embed + transfer issue).
+    pub fn staged_s(&self) -> f64 {
+        self.staged_s
+    }
+
+    /// Mark this step's staging as pipelined — it ran while another step
+    /// computed, so its host time was hidden, not spent.
+    pub fn mark_overlapped(&mut self) {
+        self.overlapped = true;
+    }
+
+    pub(super) fn overlapped(&self) -> bool {
+        self.overlapped
+    }
+}
+
+/// One staged step's inputs, parked between `stage` and `submit`.
+pub(super) struct StagedInput {
+    /// Embedded input activations for every lane.
+    pub(super) x: Vec<f32>,
+    /// Layer 0's issued transfers (`None` under `AlisaSequential`, which
+    /// defers all issue to the layer loop).
+    pub(super) first: Option<LayerTransfers>,
+}
+
+/// The double buffer between `stage` and `submit`: two slots, so the next
+/// step's staging can fill one while the current step's compute drains the
+/// other.  A third in-flight stage is a caller bug and fails loudly.
+#[derive(Default)]
+pub struct StageSlots {
+    slots: [Option<StagedInput>; 2],
+}
+
+impl StageSlots {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Slots currently holding a staged step.
+    pub fn in_flight(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Park a staged input in a free slot, returning its index.
+    pub(super) fn store(&mut self, staged: StagedInput) -> Result<usize> {
+        for (i, s) in self.slots.iter_mut().enumerate() {
+            if s.is_none() {
+                *s = Some(staged);
+                return Ok(i);
+            }
+        }
+        bail!("both staging slots in flight: submit a staged step before staging a third")
+    }
+
+    /// Drain slot `i` for submission.
+    pub(super) fn take(&mut self, i: usize) -> Result<StagedInput> {
+        self.slots
+            .get_mut(i)
+            .and_then(Option::take)
+            .with_context(|| format!("staging slot {i} is empty"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn staged() -> StagedInput {
+        StagedInput { x: vec![0.0; 4], first: None }
+    }
+
+    #[test]
+    fn slots_double_buffer_and_reject_a_third() {
+        let mut s = StageSlots::new();
+        let a = s.store(staged()).unwrap();
+        let b = s.store(staged()).unwrap();
+        assert_ne!(a, b);
+        assert_eq!(s.in_flight(), 2);
+        assert!(s.store(staged()).is_err(), "two slots only");
+        s.take(a).unwrap();
+        assert_eq!(s.in_flight(), 1);
+        let c = s.store(staged()).unwrap();
+        assert_eq!(c, a, "freed slot is reused");
+        assert!(s.take(c).is_ok());
+        assert!(s.take(c).is_err(), "a slot drains once");
+    }
+
+    #[test]
+    fn handoff_carries_the_plan_and_overlap_marking() {
+        let mut h = StepHandoff::new(16, 4, 64, true);
+        assert_eq!((h.plan_l(), h.r_used(), h.kv_len()), (16, 4, 64));
+        assert!(!h.is_staged());
+        assert!(!h.overlapped());
+        h.mark_overlapped();
+        assert!(h.overlapped());
+    }
+}

@@ -62,9 +62,21 @@ pub struct Breakdown {
     pub attn_ffn_s: f64,
     /// Everything else (embed, lm_head, staging, stores).
     pub other_s: f64,
+    /// Host-side staging/plan time the pipelined step runtime hid under
+    /// another group's compute (see [`crate::engine::pipeline`]).  Shadow
+    /// time, not additional wall time: it is **excluded** from
+    /// [`Breakdown::total`] precisely because the same seconds are already
+    /// counted under whichever compute covered them.
+    pub overlap_s: f64,
+    /// Pipeline stall: wall time the step spent blocked on a stage handoff
+    /// that was not ready (serial mode never stalls — the stages run
+    /// back-to-back on one thread).
+    pub stall_s: f64,
 }
 
 impl Breakdown {
+    /// Wall-clock accounted to this step (the shadowed `overlap_s` is
+    /// excluded — those seconds already ran under someone else's compute).
     pub fn total(&self) -> f64 {
         self.wait_weights_s
             + self.wait_act_s
@@ -72,6 +84,7 @@ impl Breakdown {
             + self.recompute_s
             + self.attn_ffn_s
             + self.other_s
+            + self.stall_s
     }
 
     pub fn add(&mut self, other: &Breakdown) {
@@ -81,6 +94,8 @@ impl Breakdown {
         self.recompute_s += other.recompute_s;
         self.attn_ffn_s += other.attn_ffn_s;
         self.other_s += other.other_s;
+        self.overlap_s += other.overlap_s;
+        self.stall_s += other.stall_s;
     }
 
     /// Fraction of the step the "GPU" (compute thread) was doing useful
@@ -167,8 +182,29 @@ mod tests {
             recompute_s: 0.2,
             attn_ffn_s: 0.3,
             other_s: 0.1,
+            overlap_s: 0.0,
+            stall_s: 0.0,
         };
         assert!((b.total() - 1.0).abs() < 1e-12);
         assert!((b.compute_utilization() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn breakdown_overlap_is_shadow_time_stall_is_wall_time() {
+        // overlap_s is time hidden under another group's compute: it must
+        // not inflate total(); stall_s is real blocked wall time: it must.
+        let mut b = Breakdown { attn_ffn_s: 0.8, other_s: 0.2, ..Breakdown::default() };
+        assert!((b.total() - 1.0).abs() < 1e-12);
+        b.overlap_s = 0.5;
+        assert!((b.total() - 1.0).abs() < 1e-12, "overlap is already covered");
+        b.stall_s = 0.25;
+        assert!((b.total() - 1.25).abs() < 1e-12, "stalls extend the wall");
+        // utilization degrades with stalls, is untouched by overlap
+        assert!((b.compute_utilization() - 0.8).abs() < 1e-12);
+        let mut sum = Breakdown::default();
+        sum.add(&b);
+        sum.add(&b);
+        assert!((sum.overlap_s - 1.0).abs() < 1e-12);
+        assert!((sum.stall_s - 0.5).abs() < 1e-12);
     }
 }

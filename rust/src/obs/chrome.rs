@@ -4,23 +4,39 @@
 //! one step to 1 ms of trace time (`ts = step·1000 + ordinal` µs, the
 //! within-step emission ordinal breaking ties) — wall time never enters,
 //! which is what makes two seeded replays byte-identical.  Phases become
-//! synchronous `B`/`E` spans (the `step` span encloses the four sub-phase
+//! synchronous `B`/`E` spans (the `step` span encloses the sub-phase
 //! spans), requests become async `b`/`n`/`e` spans keyed by request id,
 //! migrations and plans are instants, and the per-step link budget is a
-//! counter track (`C`).
+//! counter track (`C`).  The pipelined loop's `prestage`/`handoff` spans
+//! render on their own thread track (`tid` 2), so the stage worker's
+//! overlap with the `compute` span on the serve track is directly visible
+//! in Perfetto.
 
-use crate::obs::event::{Event, EventKind};
+use crate::obs::event::{Event, EventKind, Phase};
 use crate::util::json::Json;
 
 fn base(ph: &str, name: &str, cat: &str, ts: u64) -> Vec<(&'static str, Json)> {
+    base_tid(ph, name, cat, ts, 1)
+}
+
+fn base_tid(ph: &str, name: &str, cat: &str, ts: u64, tid: usize) -> Vec<(&'static str, Json)> {
     vec![
         ("ph", ph.into()),
         ("name", name.into()),
         ("cat", cat.into()),
         ("ts", Json::from(ts as f64)),
         ("pid", Json::from(1usize)),
-        ("tid", Json::from(1usize)),
+        ("tid", Json::from(tid)),
     ]
+}
+
+/// Pipeline phases get their own thread track so their spans draw beside —
+/// not inside — the serve track's `compute` span.
+fn phase_tid(phase: &Phase) -> usize {
+    match phase {
+        Phase::Prestage | Phase::Handoff => 2,
+        _ => 1,
+    }
 }
 
 /// Convert an event stream (as produced by
@@ -37,8 +53,12 @@ pub fn chrome_trace(events: &[Event]) -> Json {
         let ts = ev.step * 1000 + ordinal.min(999);
         ordinal += 1;
         let mut kv = match &ev.kind {
-            EventKind::PhaseBegin { phase } => base("B", phase.name(), "step", ts),
-            EventKind::PhaseEnd { phase } => base("E", phase.name(), "step", ts),
+            EventKind::PhaseBegin { phase } => {
+                base_tid("B", phase.name(), "step", ts, phase_tid(phase))
+            }
+            EventKind::PhaseEnd { phase } => {
+                base_tid("E", phase.name(), "step", ts, phase_tid(phase))
+            }
             EventKind::ReqArrive { id } => {
                 let mut kv = base("b", "req", "request", ts);
                 kv.push(("id", Json::from(*id as f64)));
@@ -138,6 +158,12 @@ pub fn chrome_trace(events: &[Event]) -> Json {
                 kv.push(("s", "t".into()));
                 kv
             }
+            EventKind::ReplanFallback { group } => {
+                let mut kv = base_tid("i", "replan_fallback", "step", ts, 2);
+                kv.push(("s", "t".into()));
+                kv.push(("args", Json::obj(vec![("group", Json::from(*group))])));
+                kv
+            }
             EventKind::Anomaly { reason } => {
                 let mut kv = base("i", "anomaly", "anomaly", ts);
                 kv.push(("s", "g".into()));
@@ -232,6 +258,42 @@ mod tests {
         let phs: Vec<&str> = req.iter().map(|e| e.at(&["ph"]).as_str().unwrap()).collect();
         assert_eq!(phs, vec!["b", "n", "n", "e"]);
         assert!(req.iter().all(|e| e.at(&["id"]).as_f64() == Some(7.0)));
+    }
+
+    #[test]
+    fn pipeline_phases_render_on_their_own_thread_track() {
+        // the overlapped loop's emission order: prestage wraps compute,
+        // handoff follows — prestage/handoff on tid 2, the rest on tid 1
+        let evs = vec![
+            ev(0, 0, EventKind::PhaseBegin { phase: Phase::Step }),
+            ev(0, 1, EventKind::PhaseBegin { phase: Phase::Prestage }),
+            ev(0, 2, EventKind::PhaseBegin { phase: Phase::Compute }),
+            ev(0, 3, EventKind::PhaseEnd { phase: Phase::Compute }),
+            ev(0, 4, EventKind::PhaseEnd { phase: Phase::Prestage }),
+            ev(0, 5, EventKind::PhaseBegin { phase: Phase::Handoff }),
+            ev(0, 6, EventKind::ReplanFallback { group: 0 }),
+            ev(0, 7, EventKind::PhaseEnd { phase: Phase::Handoff }),
+            ev(0, 8, EventKind::PhaseEnd { phase: Phase::Step }),
+        ];
+        let doc = chrome_trace(&evs);
+        let out = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let tid = |i: usize| out[i].at(&["tid"]).as_f64().unwrap() as usize;
+        assert_eq!((tid(0), tid(2), tid(3), tid(8)), (1, 1, 1, 1), "serve track");
+        assert_eq!(
+            (tid(1), tid(4), tid(5), tid(6), tid(7)),
+            (2, 2, 2, 2, 2),
+            "worker track"
+        );
+        // one stack across both tracks still balances (strict nesting)
+        let mut stack: Vec<String> = Vec::new();
+        for e in out {
+            match e.at(&["ph"]).as_str().unwrap() {
+                "B" => stack.push(e.at(&["name"]).as_str().unwrap().to_string()),
+                "E" => assert_eq!(stack.pop().as_deref(), e.at(&["name"]).as_str()),
+                _ => {}
+            }
+        }
+        assert!(stack.is_empty());
     }
 
     #[test]

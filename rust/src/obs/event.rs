@@ -11,7 +11,10 @@
 use crate::util::json::Json;
 
 /// Serving-loop phase a span event brackets (one B/E pair per phase per
-/// step in the Chrome export; `Step` encloses the other four).
+/// step in the Chrome export; `Step` encloses the others).  The pipelined
+/// loop adds `Prestage` (the worker's plan-solve + pump window, wrapping
+/// `Compute` so the overlap is visible) and `Handoff` (adopting the
+/// worker's results); both render on their own Chrome-trace thread track.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Phase {
     /// The whole decode step (admission through retirement).
@@ -24,6 +27,14 @@ pub enum Phase {
     Plan,
     /// The engine decode step itself (§4).
     Compute,
+    /// Pipelined mode: the stage worker's overlap window — next step's
+    /// plan solve and the migration pump running under this step's
+    /// compute.  Encloses `Compute`; the tail past `Compute`'s end is the
+    /// serve thread stalled on the handoff.
+    Prestage,
+    /// Pipelined mode: adopting the worker's results on the serve thread
+    /// (step-budget accounting, migration deltas, next step's tickets).
+    Handoff,
 }
 
 impl Phase {
@@ -35,6 +46,8 @@ impl Phase {
             Phase::MigrationPoll => "migration_poll",
             Phase::Plan => "plan",
             Phase::Compute => "compute",
+            Phase::Prestage => "prestage",
+            Phase::Handoff => "handoff",
         }
     }
 
@@ -45,6 +58,8 @@ impl Phase {
             "migration_poll" => Phase::MigrationPoll,
             "plan" => Phase::Plan,
             "compute" => Phase::Compute,
+            "prestage" => Phase::Prestage,
+            "handoff" => Phase::Handoff,
             _ => return None,
         })
     }
@@ -130,6 +145,9 @@ pub enum EventKind {
     },
     /// Admission hit backpressure this step.
     Backpressure,
+    /// Pipelined mode: a group's prestaged plan went stale (or was never
+    /// solved) and the serve thread re-solved it inline.
+    ReplanFallback { group: usize },
     /// Flight-recorder trigger fired (`reason` matches the dump's).
     Anomaly { reason: String },
 }
@@ -221,6 +239,10 @@ impl Event {
                 kv.push(("bytes", Json::from(*bytes as f64)));
             }
             EventKind::Backpressure => kv.push(("kind", "backpressure".into())),
+            EventKind::ReplanFallback { group } => {
+                kv.push(("kind", "replan_fallback".into()));
+                kv.push(("group", Json::from(*group)));
+            }
             EventKind::Anomaly { reason } => {
                 kv.push(("kind", "anomaly".into()));
                 kv.push(("reason", reason.as_str().into()));
@@ -275,6 +297,7 @@ impl Event {
                 bytes: u("bytes")?,
             },
             "backpressure" => EventKind::Backpressure,
+            "replan_fallback" => EventKind::ReplanFallback { group: us("group")? },
             "anomaly" => EventKind::Anomaly { reason: s("reason")? },
             _ => return None,
         };
@@ -329,6 +352,13 @@ mod tests {
                 bytes: 65536,
             },
             EventKind::Backpressure,
+            EventKind::ReplanFallback { group: 1 },
+            EventKind::PhaseBegin {
+                phase: Phase::Prestage,
+            },
+            EventKind::PhaseEnd {
+                phase: Phase::Handoff,
+            },
             EventKind::Anomaly {
                 reason: "slo_violation".into(),
             },

@@ -12,7 +12,11 @@
 //!   [`MigrationEngine`](crate::kvstore::MigrationEngine) and the planner
 //!   path emit typed [`Event`]s: request lifecycle (arrive → admit →
 //!   first-token → retire), step phases (stage / migration-poll / plan /
-//!   compute, nested in a per-step span), per-group [`EventKind::Plan`]s,
+//!   compute, nested in a per-step span; the pipelined loop adds a
+//!   prestage span wrapping compute and a handoff span, exported on their
+//!   own Chrome-trace thread track so the overlap is visible, plus
+//!   [`EventKind::ReplanFallback`] instants for every stale-prestage
+//!   inline re-solve), per-group [`EventKind::Plan`]s,
 //!   the slack→grant derivation, and every migration lifecycle transition
 //!   (queued → staged → in-flight → landed, tagged with tier hop, class
 //!   and bytes).  Events are stamped with the decode-step virtual clock
@@ -27,7 +31,8 @@
 //!   signal.
 //! * [`FlightDump`] / [`AnomalyConfig`] — the flight recorder: a bounded
 //!   ring of recent events snapshotted to JSON when an anomaly trigger
-//!   fires (TTFT SLO violation, backpressure streak, zero-slack streak).
+//!   fires (TTFT SLO violation, backpressure streak, zero-slack streak,
+//!   replan-fallback streak).
 //! * [`chrome_trace`] — Chrome `trace_event` export (Perfetto /
 //!   `chrome://tracing`), plus [`PlanVsActual::summary_table`] for the
 //!   text view.  `examples/trace_dump.rs` and `examples/workload_slo.rs`

@@ -22,6 +22,10 @@ pub struct AnomalyConfig {
     /// Dump after this many consecutive steps whose plans predicted zero
     /// link slack (the GPU-never-idles claim has no headroom left).
     pub zero_slack_streak: usize,
+    /// Dump after this many consecutive steps that forced at least one
+    /// fallback re-solve in the pipelined loop (the prestage worker's
+    /// predictions are persistently stale — the overlap is buying nothing).
+    pub replan_streak: usize,
     /// Maximum dumps retained per run.
     pub max_dumps: usize,
 }
@@ -32,6 +36,7 @@ impl Default for AnomalyConfig {
             ttft_slo_s: None,
             backpressure_streak: 0,
             zero_slack_streak: 0,
+            replan_streak: 0,
             max_dumps: 4,
         }
     }
@@ -40,8 +45,8 @@ impl Default for AnomalyConfig {
 /// One snapshot of the flight window at trigger time.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FlightDump {
-    /// Which trigger fired: `"slo_violation"`, `"backpressure_streak"` or
-    /// `"zero_slack_streak"`.
+    /// Which trigger fired: `"slo_violation"`, `"backpressure_streak"`,
+    /// `"zero_slack_streak"` or `"replan_streak"`.
     pub reason: String,
     /// Decode-step clock at trigger time.
     pub step: u64,
@@ -116,5 +121,6 @@ mod tests {
         assert!(c.ttft_slo_s.is_none());
         assert_eq!(c.backpressure_streak, 0);
         assert_eq!(c.zero_slack_streak, 0);
+        assert_eq!(c.replan_streak, 0);
     }
 }

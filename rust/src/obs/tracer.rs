@@ -53,6 +53,8 @@ struct Inner {
     backpressure_this_step: bool,
     backpressure_streak: usize,
     zero_slack_streak: usize,
+    replan_this_step: bool,
+    replan_streak: usize,
 }
 
 impl Inner {
@@ -64,6 +66,9 @@ impl Inner {
         };
         if matches!(kind, EventKind::Backpressure) {
             self.backpressure_this_step = true;
+        }
+        if matches!(kind, EventKind::ReplanFallback { .. }) {
+            self.replan_this_step = true;
         }
         self.push_raw(kind);
         if slo_breach {
@@ -114,6 +119,11 @@ impl Inner {
         } else {
             self.zero_slack_streak = 0;
         }
+        if std::mem::take(&mut self.replan_this_step) {
+            self.replan_streak += 1;
+        } else {
+            self.replan_streak = 0;
+        }
         let a = self.cfg.anomaly;
         if a.backpressure_streak > 0 && self.backpressure_streak >= a.backpressure_streak {
             self.backpressure_streak = 0;
@@ -122,6 +132,10 @@ impl Inner {
         if a.zero_slack_streak > 0 && self.zero_slack_streak >= a.zero_slack_streak {
             self.zero_slack_streak = 0;
             self.dump("zero_slack_streak");
+        }
+        if a.replan_streak > 0 && self.replan_streak >= a.replan_streak {
+            self.replan_streak = 0;
+            self.dump("replan_streak");
         }
     }
 }
@@ -151,6 +165,8 @@ impl Tracer {
                 backpressure_this_step: false,
                 backpressure_streak: 0,
                 zero_slack_streak: 0,
+                replan_this_step: false,
+                replan_streak: 0,
                 cfg,
             }))),
         }
@@ -351,6 +367,32 @@ mod tests {
         t.record_step(rec(7, 0));
         assert_eq!(t.dumps().len(), 2);
         assert_eq!(t.dumps()[1].reason, "zero_slack_streak");
+    }
+
+    #[test]
+    fn replan_fallback_streak_trips_the_flight_recorder() {
+        let t = Tracer::new(TracerConfig {
+            anomaly: AnomalyConfig {
+                replan_streak: 2,
+                ..AnomalyConfig::default()
+            },
+            ..TracerConfig::default()
+        });
+        // fallbacks on steps 0 and 2 — not consecutive, no dump
+        t.emit(|| EventKind::ReplanFallback { group: 0 });
+        t.record_step(rec(0, 1));
+        t.record_step(rec(1, 1));
+        t.emit(|| EventKind::ReplanFallback { group: 0 });
+        t.record_step(rec(2, 1));
+        assert!(t.dumps().is_empty());
+        // two consecutive fallback steps fire (several in one step count once)
+        t.emit(|| EventKind::ReplanFallback { group: 0 });
+        t.emit(|| EventKind::ReplanFallback { group: 1 });
+        t.record_step(rec(3, 1));
+        t.emit(|| EventKind::ReplanFallback { group: 0 });
+        t.record_step(rec(4, 1));
+        assert_eq!(t.dumps().len(), 1);
+        assert_eq!(t.dumps()[0].reason, "replan_streak");
     }
 
     #[test]

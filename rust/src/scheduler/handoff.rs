@@ -1,0 +1,217 @@
+//! Plan handoff between pipeline stages: validity tokens for plans solved
+//! ahead of the step they execute in.
+//!
+//! The pipelined step runtime ([`crate::engine::pipeline`]) solves step
+//! N+1's [`StepPlan`]s on a worker thread *while* step N computes.  Those
+//! plans were solved against step-N state — but admissions, retirements,
+//! landed migrations or a slid residency window can change a group's true
+//! [`PlanInput`] before the plan is consumed.  The correctness seam is the
+//! **validity token**: a [`PlanTicket`] carries the exact `PlanInput` the
+//! plan was solved against, and redemption compares it (`PlanInput` is
+//! `PartialEq`, all plain data) with the input the serving loop would have
+//! solved inline.  Equal ⇒ the prebuilt plan *is* the plan a serial solve
+//! would produce, byte for byte — adopt it.  Anything else ⇒ fall back to
+//! an inline re-solve, and count it ([`HandoffReport`]).  Either way the
+//! executed plan is identical to serial mode's, which is why the pipelined
+//! loop can pin bit-identical tokens against the serial oracle.
+//!
+//! ```
+//! use kvpr::scheduler::{PlanHandoff, PlanInput, Redemption, StepPlan};
+//!
+//! // worker solved two groups' plans against step-N state
+//! let solved = |kv: usize| (PlanInput::new(vec![kv; 4]), StepPlan::full(1e-3, 0));
+//! let (in_a, plan_a) = solved(64);
+//! let (in_b, plan_b) = solved(96);
+//! let mut handoff = PlanHandoff::new();
+//! handoff.push(1, in_a.clone(), plan_a);
+//! handoff.push(2, in_b, plan_b);
+//!
+//! // group 1 is unchanged at handoff: its prebuilt plan is adopted
+//! assert!(matches!(handoff.redeem(1, &in_a), Redemption::Hit(_)));
+//! // group 2 retired and group 3 was admitted in its place: no ticket
+//! assert!(matches!(handoff.redeem(3, &PlanInput::new(vec![32; 4])), Redemption::Missing));
+//! let report = handoff.into_report();
+//! assert_eq!((report.hits, report.fallbacks), (1, 1));
+//! assert!(!report.fully_prestaged());
+//! ```
+
+use super::plan::{PlanInput, StepPlan};
+
+/// One pre-solved plan plus the exact input it was solved against — the
+/// validity token the serving loop checks at handoff.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanTicket {
+    /// Stable id of the decode group the plan was solved for.
+    pub group: u64,
+    /// The predicted [`PlanInput`] (step-N+1 state as projected at step N).
+    pub input: PlanInput,
+    /// The plan [`Planner::plan_batch`](super::Planner::plan_batch)
+    /// produced for that input.
+    pub plan: StepPlan,
+}
+
+/// Outcome of redeeming one group's ticket at handoff.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Redemption {
+    /// The predicted input matches the actual one: the prebuilt plan is
+    /// exactly what an inline solve would return — use it.
+    Hit(StepPlan),
+    /// A ticket existed but the group's state moved under it (landed
+    /// migration, slid residency window, dropped-KV floor change): the
+    /// caller must re-solve inline.
+    Stale,
+    /// No ticket for this group (admitted after the prestage round, or the
+    /// round's ticket was consumed): the caller must solve inline.
+    Missing,
+}
+
+/// What one prestage round's redemption added up to; feeds
+/// `ServeMetrics` pipeline totals and the flight-recorder replan streak.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct HandoffReport {
+    /// Prebuilt plans adopted unchanged.
+    pub hits: u64,
+    /// Inline re-solves forced by a stale or missing ticket.
+    pub fallbacks: u64,
+}
+
+impl HandoffReport {
+    /// A step counts as prestaged when every plan it executed came out of
+    /// the handoff — one mid-handoff admission/retirement/migration is
+    /// enough to break it.
+    pub fn fully_prestaged(&self) -> bool {
+        self.fallbacks == 0 && self.hits > 0
+    }
+}
+
+/// The batch of [`PlanTicket`]s one prestage round produced, with
+/// redemption accounting.  Built on the stage worker, redeemed (once per
+/// group) on the serving thread at the next step's plan phase.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PlanHandoff {
+    tickets: Vec<PlanTicket>,
+    report: HandoffReport,
+}
+
+impl PlanHandoff {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a group's pre-solved plan with its validity token.
+    pub fn push(&mut self, group: u64, input: PlanInput, plan: StepPlan) {
+        self.tickets.push(PlanTicket { group, input, plan });
+    }
+
+    /// Tickets not yet redeemed.
+    pub fn len(&self) -> usize {
+        self.tickets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tickets.is_empty()
+    }
+
+    /// Redeem `group`'s ticket against the input an inline solve would use
+    /// right now.  Consumes the ticket; every non-[`Redemption::Hit`]
+    /// outcome is counted as a fallback re-solve in the report.
+    pub fn redeem(&mut self, group: u64, actual: &PlanInput) -> Redemption {
+        match self.tickets.iter().position(|t| t.group == group) {
+            Some(i) => {
+                let t = self.tickets.swap_remove(i);
+                if t.input == *actual {
+                    self.report.hits += 1;
+                    Redemption::Hit(t.plan)
+                } else {
+                    self.report.fallbacks += 1;
+                    Redemption::Stale
+                }
+            }
+            None => {
+                self.report.fallbacks += 1;
+                Redemption::Missing
+            }
+        }
+    }
+
+    /// The running redemption tally (final once every live group planned).
+    pub fn report(&self) -> HandoffReport {
+        self.report
+    }
+
+    /// Consume the handoff, returning the tally.  Unredeemed tickets (a
+    /// group that retired wholesale before its plan was needed) are
+    /// dropped silently: nothing re-solved, nothing to count.
+    pub fn into_report(self) -> HandoffReport {
+        self.report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ticket_input(kv: usize, resident: usize) -> PlanInput {
+        PlanInput::new(vec![kv; 4]).resident(resident)
+    }
+
+    fn plan() -> StepPlan {
+        StepPlan::full(2.5e-3, 512)
+    }
+
+    #[test]
+    fn matching_input_redeems_the_prebuilt_plan() {
+        let mut h = PlanHandoff::new();
+        h.push(7, ticket_input(64, 8), plan());
+        match h.redeem(7, &ticket_input(64, 8)) {
+            Redemption::Hit(p) => assert_eq!(p, plan()),
+            other => panic!("expected hit, got {other:?}"),
+        }
+        assert_eq!(h.report(), HandoffReport { hits: 1, fallbacks: 0 });
+        assert!(h.report().fully_prestaged());
+    }
+
+    #[test]
+    fn a_landed_migration_between_solve_and_submit_goes_stale() {
+        // the worker predicted resident=8; a promotion landed at the next
+        // poll and grew the window — the ticket must not redeem
+        let mut h = PlanHandoff::new();
+        h.push(7, ticket_input(64, 8), plan());
+        assert_eq!(h.redeem(7, &ticket_input(64, 16)), Redemption::Stale);
+        assert_eq!(h.report(), HandoffReport { hits: 0, fallbacks: 1 });
+    }
+
+    #[test]
+    fn mid_handoff_retirement_forces_exactly_one_counted_fallback() {
+        // prestage round solved plans for groups 1 and 2 against step-N
+        // state; between solve and submit group 2 retired and group 3 was
+        // admitted in its place.  Group 1 redeems its prebuilt plan; group
+        // 3 has no ticket and must re-solve inline — exactly one counted
+        // fallback, and group 2's orphaned ticket costs nothing.
+        let mut h = PlanHandoff::new();
+        h.push(1, ticket_input(64, 0), plan());
+        h.push(2, ticket_input(96, 0), plan());
+        assert!(matches!(h.redeem(1, &ticket_input(64, 0)), Redemption::Hit(_)));
+        assert_eq!(h.redeem(3, &ticket_input(32, 0)), Redemption::Missing);
+        let report = h.into_report();
+        assert_eq!(report.fallbacks, 1, "exactly one fallback re-solve");
+        assert_eq!(report.hits, 1);
+        assert!(!report.fully_prestaged());
+    }
+
+    #[test]
+    fn tickets_are_single_use() {
+        let mut h = PlanHandoff::new();
+        h.push(1, ticket_input(64, 0), plan());
+        assert!(matches!(h.redeem(1, &ticket_input(64, 0)), Redemption::Hit(_)));
+        assert_eq!(h.redeem(1, &ticket_input(64, 0)), Redemption::Missing);
+        assert_eq!(h.report(), HandoffReport { hits: 1, fallbacks: 1 });
+    }
+
+    #[test]
+    fn empty_round_reports_nothing_prestaged() {
+        let h = PlanHandoff::new();
+        assert!(h.is_empty());
+        assert!(!h.report().fully_prestaged(), "no hits ⇒ not a prestaged step");
+    }
+}

@@ -23,14 +23,21 @@
 //!    [`StepPlan`] — the split `l` drives the decode step, and
 //!    [`StepPlan::link_slack_bytes`] becomes the migration engine's
 //!    per-step link-byte grant, so tier traffic soaks up exactly the idle
-//!    wire time the plan predicts.
+//!    wire time the plan predicts;
+//! 5. in the **overlapped pipeline** the next step's solve runs on a stage
+//!    worker while this step computes — [`PlanHandoff`] validity tokens
+//!    (the exact [`PlanInput`] each plan was solved against) guarantee an
+//!    adopted prebuilt plan is bit-identical to the inline solve it
+//!    replaced, and anything stale falls back to a counted re-solve.
 
 mod cost;
+mod handoff;
 mod plan;
 mod split;
 mod topology;
 
 pub use cost::CostModel;
+pub use handoff::{HandoffReport, PlanHandoff, PlanTicket, Redemption};
 pub use plan::{PathKind, PlanInput, Planner, StepPlan, TierPrefix};
 pub use split::{Split, SplitSolver};
 pub use topology::{LinkSpec, TierSpec, TierTopology};

@@ -54,6 +54,18 @@ impl StepPlan {
             PathKind::PartialRecompute { l } => l,
         }
     }
+
+    /// A degenerate full-transfer plan (`l = 0`, no predicted win over the
+    /// baseline) — the shape non-partial policies and handoff tests use.
+    pub fn full(predicted_s: f64, link_slack_bytes: u64) -> Self {
+        StepPlan {
+            path: PathKind::FullTransfer,
+            ideal_l: 0,
+            predicted_s,
+            baseline_s: predicted_s,
+            link_slack_bytes,
+        }
+    }
 }
 
 /// A contiguous run of tokens resident on one topology tier, stacked

@@ -1,0 +1,186 @@
+//! Pipelined-runtime oracle: [`PipelineMode::Overlapped`] must be a pure
+//! wall-clock transformation of [`PipelineMode::Serial`].
+//!
+//! The overlapped loop changes *where* work happens — the next step's
+//! plans are solved by a stage worker inside the compute shadow, group
+//! staging double-buffers through the engine's stage/submit split, and
+//! the migration pump rides the same shadow — but never *what* the engine
+//! computes: an adopted plan is the planner's own solution for the very
+//! input the serial path would have solved (validity-token handoff), and
+//! plans move bytes, never math.  So across an ample untiered regime and
+//! a tight tiered spill regime the two modes must produce bit-identical
+//! token streams and identical served-token totals; the only permitted
+//! difference is the pipeline telemetry itself.
+//!
+//! Like `workload_trace.rs` these need **no artifacts**: without
+//! `artifacts/manifest.json` the engine runs the bitwise-deterministic
+//! interpreter, which is what makes cross-mode token equality a hard
+//! assert rather than a statistical one.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use kvpr::coordinator::{
+    ContinuousConfig, ContinuousServer, PipelineMode, PipelineTotals, TieredKvConfig,
+};
+use kvpr::engine::{EngineConfig, EnginePolicy};
+use kvpr::scheduler::TierTopology;
+use kvpr::transfer::LinkConfig;
+use kvpr::workload::{Arrival, LenDist, SloTargets, Trace, TrafficClass, WorkloadSpec};
+
+/// Serialise the heavy tests: each spins up engine + link worker threads.
+static HEAVY: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    HEAVY.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn engine_cfg() -> EngineConfig {
+    let mut e = EngineConfig::new(EnginePolicy::Kvpr);
+    e.weights_offloaded = true;
+    e.link = LinkConfig::with_bandwidth(100e6);
+    e.seed = 42;
+    e
+}
+
+fn continuous_cfg(max_group: usize, max_groups: usize) -> ContinuousConfig {
+    let mut c = ContinuousConfig::new("artifacts", engine_cfg());
+    c.max_group = max_group;
+    c.max_groups = max_groups;
+    c.prompt_bucket = 16;
+    c.admit_wait = Duration::from_millis(1);
+    c
+}
+
+/// Six requests in three bursts of two (arrival steps 0,0,3,3,6,6).
+fn spec(gen: LenDist) -> WorkloadSpec {
+    WorkloadSpec {
+        name: "pipeline_e2e".into(),
+        seed: 17,
+        requests: 6,
+        arrivals: Arrival::Bursty { burst: 2, gap: 3 },
+        classes: vec![TrafficClass {
+            name: "chat".into(),
+            weight: 1.0,
+            prompt: LenDist::Fixed { steps: 16 },
+            gen,
+            think: LenDist::Fixed { steps: 0 },
+        }],
+        slo: SloTargets { ttft_s: 30.0, tpot_s: 30.0 },
+    }
+}
+
+/// The tight tiered regime from `workload_trace.rs`'s host-pressure
+/// scenario: a one-block gpu tier over a ~10-block dram tier, disk
+/// absorbing the overflow, real migrations and spills every few steps.
+fn tiered_cfg() -> ContinuousConfig {
+    let mut cfg = continuous_cfg(1, 6);
+    cfg.kv_budget_bytes = 200 << 10;
+    cfg.tiering = Some(TieredKvConfig {
+        topology: TierTopology::standard(0, 64 << 10, 2 << 20).with_disk(64 << 20, 0.5),
+        block_tokens: 16,
+        prefetch_blocks: 1,
+        max_inflight: 8,
+        promote_cooldown: 2,
+        step_budget_override: Some(4 << 20),
+        ..TieredKvConfig::default()
+    });
+    cfg
+}
+
+/// What one served replay produced, per mode.
+struct Run {
+    tokens: Vec<Vec<i32>>,
+    token_total: u64,
+    requests: u64,
+    pipeline: PipelineTotals,
+}
+
+fn run(mut cfg: ContinuousConfig, mode: PipelineMode, trace: &Trace) -> Run {
+    cfg.pipeline = mode;
+    let server = ContinuousServer::start(cfg).unwrap();
+    let handles = server.submit_trace(trace);
+    let mut tokens = Vec::with_capacity(trace.requests.len());
+    for (h, r) in handles.into_iter().zip(&trace.requests) {
+        let resp = h.wait().unwrap();
+        assert_eq!(resp.tokens.len(), r.gen_tokens, "request {} length", r.id);
+        tokens.push(resp.tokens);
+    }
+    let m = server.metrics();
+    let out = Run {
+        tokens,
+        token_total: m.tokens(),
+        requests: m.requests(),
+        pipeline: m.pipeline_totals(),
+    };
+    server.shutdown().unwrap();
+    out
+}
+
+fn interpreted() -> bool {
+    !std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json"))
+        .exists()
+}
+
+/// The cross-mode oracle shared by both regimes.
+fn assert_modes_agree(serial: &Run, over: &Run, regime: &str) {
+    assert_eq!(
+        serial.token_total, over.token_total,
+        "{regime}: served-token totals must match across pipeline modes"
+    );
+    assert_eq!(serial.requests, over.requests, "{regime}: request totals must match");
+    if interpreted() {
+        assert_eq!(
+            serial.tokens, over.tokens,
+            "{regime}: overlapped tokens must be bit-identical to serial"
+        );
+    }
+    assert_eq!(
+        serial.pipeline,
+        PipelineTotals::default(),
+        "{regime}: serial mode must never touch the pipeline counters"
+    );
+    assert!(over.pipeline.steps > 0, "{regime}: overlapped mode must count its steps");
+}
+
+#[test]
+fn overlapped_matches_serial_in_the_ample_regime() {
+    let _g = lock();
+    let spec = spec(LenDist::Fixed { steps: 24 });
+    let trace = spec.generate();
+    let mk = || {
+        let mut cfg = continuous_cfg(2, 2);
+        cfg.kv_budget_bytes = 64 << 20; // ample: admission never backpressures
+        cfg
+    };
+    let serial = run(mk(), PipelineMode::Serial, &trace);
+    let over = run(mk(), PipelineMode::Overlapped, &trace);
+    assert_modes_agree(&serial, &over, "ample");
+
+    // untiered steady decode is the best case for the prestage worker:
+    // between admissions and retirements every projected input matches,
+    // so whole steps run fully prestaged and plans are adopted unchanged
+    let p = over.pipeline;
+    assert!(p.plans_adopted > 0, "steady decode must redeem prestaged plans ({p:?})");
+    assert!(p.prestaged_steps > 0, "some steps must run fully prestaged ({p:?})");
+    assert!(p.prestaged_steps <= p.steps, "prestaged steps exceed pipeline steps ({p:?})");
+}
+
+#[test]
+fn overlapped_matches_serial_under_tiered_host_pressure() {
+    let _g = lock();
+    let spec = spec(LenDist::Fixed { steps: 24 });
+    let trace = spec.generate();
+    let serial = run(tiered_cfg(), PipelineMode::Serial, &trace);
+    let over = run(tiered_cfg(), PipelineMode::Overlapped, &trace);
+    assert_modes_agree(&serial, &over, "tiered");
+
+    // under migration churn the projected inputs go stale: placement
+    // moves between prestage and redemption, and every such step books a
+    // counted fallback re-solve instead of executing a stale plan
+    let p = over.pipeline;
+    assert!(
+        p.plans_adopted + p.fallback_resolves > 0,
+        "tiered steps must plan through the handoff ({p:?})"
+    );
+}
