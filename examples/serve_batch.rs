@@ -25,7 +25,7 @@
 
 use std::time::{Duration, Instant};
 
-use kvpr::coordinator::{Batcher, ContinuousConfig, ContinuousServer, Server, ServerConfig};
+use kvpr::coordinator::{Batcher, ContinuousConfig, ContinuousServer, Server, ServerConfig, Submit};
 use kvpr::engine::{EngineConfig, EnginePolicy};
 use kvpr::transfer::LinkConfig;
 
@@ -56,7 +56,10 @@ fn run_batch_policy(policy: EnginePolicy) -> anyhow::Result<(Vec<Vec<i32>>, f64,
     let server = Server::start(scfg)?;
 
     let t0 = Instant::now();
-    let handles: Vec<_> = trace().iter().map(|p| server.submit(p, GEN_LEN)).collect();
+    let handles: Vec<_> = trace()
+        .iter()
+        .map(|p| server.dispatch((p.as_str(), GEN_LEN)).pop().unwrap())
+        .collect();
     let mut tokens = Vec::with_capacity(N_REQUESTS);
     let mut decode_total = 0.0;
     for h in handles {
@@ -95,7 +98,10 @@ fn run_continuous(max_group: usize, label: &str) -> anyhow::Result<(Vec<Vec<i32>
     let server = ContinuousServer::start(cfg)?;
 
     let t0 = Instant::now();
-    let handles: Vec<_> = trace().iter().map(|p| server.submit(p, GEN_LEN)).collect();
+    let handles: Vec<_> = trace()
+        .iter()
+        .map(|p| server.dispatch((p.as_str(), GEN_LEN)).pop().unwrap())
+        .collect();
     let mut tokens = Vec::with_capacity(N_REQUESTS);
     for h in handles {
         tokens.push(h.wait()?.tokens);

@@ -1,0 +1,78 @@
+//! **Sharded serving trace**: replay one bursty workload trace through the
+//! sharded [`Router`] — N continuous-batching worker shards over shared
+//! host tiers, each shard's cross-shard hop declared as a remote rung in
+//! its tier topology — with tracing enabled on every shard, then merge the
+//! shards' serving loops into one Chrome `trace_event` document.  Each
+//! shard lands on its own named process track (`shard-0`, `shard-1`, ...),
+//! so Perfetto / `chrome://tracing` shows the loops' steps side by side.
+//! The export lands in `TRACE_shards.json` (the CI perfetto artifact).
+//!
+//! ```bash
+//! cargo run --release --example shard_trace -- [shards] [requests]
+//! ```
+//!
+//! Runs with or without `make artifacts` (interpreter fallback).
+
+use kvpr::coordinator::{ContinuousConfig, Router, RouterConfig, Submit};
+use kvpr::engine::{EngineConfig, EnginePolicy};
+use kvpr::obs::TracerConfig;
+use kvpr::transfer::LinkConfig;
+use kvpr::util::clock::ClockMode;
+use kvpr::workload::WorkloadSpec;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let shards: usize = match args.get(1) {
+        Some(n) => n.parse().map_err(|e| anyhow::anyhow!("bad shard count {n:?}: {e}"))?,
+        None => 2,
+    };
+    let requests: usize = match args.get(2) {
+        Some(n) => n.parse().map_err(|e| anyhow::anyhow!("bad request count {n:?}: {e}"))?,
+        None => 6,
+    };
+    let mut spec = WorkloadSpec::named("bursty_chat").expect("named mix exists");
+    spec.requests = requests;
+    let trace = spec.generate();
+
+    let mut ecfg = EngineConfig::new(EnginePolicy::Kvpr);
+    ecfg.weights_offloaded = true;
+    ecfg.link = LinkConfig::with_bandwidth(100e6);
+    ecfg.seed = 42;
+    let base = ContinuousConfig::builder("artifacts", ecfg)
+        .max_group(4)
+        .max_groups(2)
+        .clock(ClockMode::Step { step_s: 0.05 })
+        .trace(TracerConfig::default())
+        .build();
+    let router = Router::start(RouterConfig::new(shards, base))?;
+    println!(
+        "shard_trace: {} requests through {} shards (mix {})",
+        trace.requests.len(),
+        router.n_shards(),
+        trace.name
+    );
+
+    for h in router.dispatch(&trace) {
+        h.wait()?;
+    }
+    let t = router.totals();
+    println!(
+        "placement: {} fresh, {} affinity hits, {} steals | {} tokens over {} decode steps",
+        t.fresh,
+        t.affinity_hits,
+        t.steals,
+        router.total_tokens(),
+        router.total_steps()
+    );
+    for i in 0..router.n_shards() {
+        let m = router.shard(i).metrics();
+        println!("  shard-{i}: {} requests, {} steps", m.requests(), m.steps());
+    }
+
+    let json = router.export_chrome_trace().to_string();
+    router.shutdown()?;
+    anyhow::ensure!(json.contains("shard-0"), "export must name the shard process tracks");
+    std::fs::write("TRACE_shards.json", &json)?;
+    println!("wrote TRACE_shards.json ({} bytes) — one process track per shard", json.len());
+    Ok(())
+}

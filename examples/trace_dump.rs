@@ -18,7 +18,7 @@
 //!
 //! Runs with or without `make artifacts` (interpreter fallback).
 
-use kvpr::coordinator::{ContinuousConfig, ContinuousServer};
+use kvpr::coordinator::{ContinuousConfig, ContinuousServer, Submit};
 use kvpr::engine::{EngineConfig, EnginePolicy};
 use kvpr::obs::{chrome_trace, TracerConfig};
 use kvpr::transfer::LinkConfig;
@@ -39,7 +39,7 @@ fn replay(trace: &Trace) -> anyhow::Result<(String, Vec<Vec<i32>>)> {
     cfg.preload_requests = trace.requests.len();
     cfg.trace = Some(TracerConfig::default());
     let server = ContinuousServer::start(cfg)?;
-    let handles = server.submit_trace(trace);
+    let handles = server.dispatch(trace);
     let mut tokens = Vec::with_capacity(handles.len());
     for h in handles {
         tokens.push(h.wait()?.tokens);

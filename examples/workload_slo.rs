@@ -28,7 +28,7 @@
 use std::time::{Duration, Instant};
 
 use kvpr::config::{HardwareConfig, ModelConfig};
-use kvpr::coordinator::{ContinuousConfig, ContinuousServer};
+use kvpr::coordinator::{ContinuousConfig, ContinuousServer, Submit};
 use kvpr::engine::{EngineConfig, EnginePolicy};
 use kvpr::kvstore::{simulate_eviction, EvictionSimConfig, RecomputeAware};
 use kvpr::obs::{chrome_trace, AnomalyConfig, TracerConfig};
@@ -86,7 +86,7 @@ fn main() -> anyhow::Result<()> {
     let server = ContinuousServer::start(cfg)?;
     server.metrics().set_slo(spec.slo);
     let t0 = Instant::now();
-    let handles = server.submit_trace(&trace);
+    let handles = server.dispatch(&trace);
     for (h, r) in handles.into_iter().zip(&trace.requests) {
         let resp = h.wait()?;
         assert_eq!(resp.tokens.len(), r.gen_tokens, "request {} length", r.id);

@@ -9,11 +9,14 @@
 //!   * mini-JSON manifest parse (startup path)
 //!   * simulator step throughput (bench harness speed itself)
 //!   * pipelined serving loop: serial vs overlapped steps/s
+//!   * sharded Router serving: aggregate throughput at 1/2/4 shards
 
 use std::time::{Duration, Instant};
 
 use kvpr::config::{HardwareConfig, ModelConfig, WorkloadConfig};
-use kvpr::coordinator::{ContinuousConfig, ContinuousServer, PipelineMode, PipelineTotals};
+use kvpr::coordinator::{
+    ContinuousConfig, ContinuousServer, PipelineMode, PipelineTotals, Router, RouterConfig, Submit,
+};
 use kvpr::engine::{EngineConfig, EnginePolicy};
 use kvpr::kvcache::quant;
 use kvpr::kvstore::{simulate_eviction, EvictionSimConfig, EvictionSimReport, Lru, RecomputeAware};
@@ -353,7 +356,7 @@ fn main() {
         c.pipeline = mode;
         let server = ContinuousServer::start(c).expect("start continuous server");
         let t0 = Instant::now();
-        for h in server.submit_trace(&pipe_trace) {
+        for h in server.dispatch(&pipe_trace) {
             h.wait().expect("request served");
         }
         let dt = t0.elapsed().as_secs_f64();
@@ -382,6 +385,52 @@ fn main() {
             over_sps / serial_sps,
             over_totals.plans_adopted,
             over_totals.fallback_resolves
+        ),
+    ]);
+
+    // sharded serving: the identical bursty trace through the Router
+    // front-end at 1/2/4 worker shards.  Each shard owns a private gpu
+    // tier and its own engine thread over shared host tiers, so extra
+    // shards add decode lanes; placement is suffix-affine with
+    // load-spread for fresh sessions.  BENCH_baseline.json's ratio_gates
+    // pins sharding.two_shard ≥ 100 % of sharding.one_shard (best-of-3
+    // interleaved trials keep the claim machine-independent).
+    let serve_sharded = |shards: usize| -> f64 {
+        let mut e = EngineConfig::new(EnginePolicy::Kvpr);
+        e.weights_offloaded = true;
+        e.link = LinkConfig::with_bandwidth(100e6);
+        e.seed = 42;
+        let base = ContinuousConfig::builder("artifacts", e)
+            .max_group(2)
+            .max_groups(4)
+            .prompt_bucket(16)
+            .admit_wait(Duration::from_millis(1))
+            .kv_budget_bytes(64 << 20)
+            .build();
+        let router = Router::start(RouterConfig::new(shards, base)).expect("start router");
+        let t0 = Instant::now();
+        for h in router.dispatch(&pipe_trace) {
+            h.wait().expect("request served");
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let tokens = router.total_tokens() as f64;
+        router.shutdown().expect("router shutdown");
+        tokens / dt
+    };
+    let mut shard_sps = [0.0f64; 3];
+    for _ in 0..3 {
+        for (slot, n) in [1usize, 2, 4].into_iter().enumerate() {
+            shard_sps[slot] = shard_sps[slot].max(serve_sharded(n));
+        }
+    }
+    t.row(&[
+        "sharded serve (1/2/4 shards)".into(),
+        "3×3".into(),
+        kvpr::util::fmt_secs(1.0 / shard_sps[1]),
+        format!(
+            "two/one {:.3}, four/one {:.3}",
+            shard_sps[1] / shard_sps[0],
+            shard_sps[2] / shard_sps[0]
         ),
     ]);
 
@@ -425,7 +474,7 @@ fn main() {
     }
 
     let json = format!(
-        "{{\n  \"bench\": \"kvstore\",\n  \"policies\": {{\n    \"lru\": {},\n    \"recompute_aware\": {}\n  }},\n  \"tiered\": {{\n    \"lru\": {},\n    \"recompute_aware\": {}\n  }},\n  \"four_tier\": {{\n    \"lru\": {},\n    \"recompute_aware\": {}\n  }},\n  \"topology_plan\": {{\n    {},\n    {},\n    {}\n  }},\n  \"obs_overhead\": {{\n    \"disabled\": {{ \"steps_per_s\": {:.3} }},\n    \"enabled\": {{ \"steps_per_s\": {:.3} }}\n  }},\n  \"pipeline\": {{\n    \"serial\": {{ \"steps_per_s\": {:.3} }},\n    \"overlapped\": {{ \"steps_per_s\": {:.3}, \"prestaged_steps\": {}, \"plans_adopted\": {}, \"fallback_resolves\": {} }}\n  }},\n  \"workload\": {{\n    {},\n    {},\n    {}\n  }}\n}}\n",
+        "{{\n  \"bench\": \"kvstore\",\n  \"policies\": {{\n    \"lru\": {},\n    \"recompute_aware\": {}\n  }},\n  \"tiered\": {{\n    \"lru\": {},\n    \"recompute_aware\": {}\n  }},\n  \"four_tier\": {{\n    \"lru\": {},\n    \"recompute_aware\": {}\n  }},\n  \"topology_plan\": {{\n    {},\n    {},\n    {}\n  }},\n  \"obs_overhead\": {{\n    \"disabled\": {{ \"steps_per_s\": {:.3} }},\n    \"enabled\": {{ \"steps_per_s\": {:.3} }}\n  }},\n  \"pipeline\": {{\n    \"serial\": {{ \"steps_per_s\": {:.3} }},\n    \"overlapped\": {{ \"steps_per_s\": {:.3}, \"prestaged_steps\": {}, \"plans_adopted\": {}, \"fallback_resolves\": {} }}\n  }},\n  \"sharding\": {{\n    \"one_shard\": {{ \"steps_per_s\": {:.3} }},\n    \"two_shard\": {{ \"steps_per_s\": {:.3} }},\n    \"four_shard\": {{ \"steps_per_s\": {:.3} }}\n  }},\n  \"workload\": {{\n    {},\n    {},\n    {}\n  }}\n}}\n",
         policy_json(&lru),
         policy_json(&ra),
         policy_json(&tlru),
@@ -442,6 +491,9 @@ fn main() {
         over_totals.prestaged_steps,
         over_totals.plans_adopted,
         over_totals.fallback_resolves,
+        shard_sps[0],
+        shard_sps[1],
+        shard_sps[2],
         wl_json[0],
         wl_json[1],
         wl_json[2]

@@ -53,7 +53,8 @@
 //! [`ServeMetrics`], and retirement additionally records each request's
 //! TTFT/TPOT sample for the workload harness's SLO table.
 //!
-//! **Trace replay** ([`ContinuousServer::submit_trace`]): a request carrying
+//! **Trace replay** (a [`Trace`](crate::workload::Trace) through
+//! [`Submit::dispatch`](super::Submit::dispatch)): a request carrying
 //! [`Request::arrival_step`] is held in the queue until the loop's
 //! decode-step clock reaches that step — admission respects the trace's
 //! arrival schedule, not just queue order — and idle stretches fast-forward
@@ -93,8 +94,9 @@ use anyhow::{Context, Result};
 use super::metrics::ServeMetrics;
 use super::request::{Pending, Request, RequestState, Response};
 use super::server::ResponseHandle;
+use super::submit::Submit;
 use crate::engine::{DecodeSession, Engine, EngineConfig, StageSlots, StepHandoff};
-use crate::kvstore::{EvictKind, KvStore, KvStoreConfig, Prefetcher};
+use crate::kvstore::{EvictKind, KvStore, KvStoreConfig, Prefetcher, SharedHostTiers};
 use crate::memory::{MemPool, PoolGuard};
 use crate::model::ByteTokenizer;
 use crate::obs::{EventKind, Phase, StepRecord, Tracer, TracerConfig};
@@ -148,27 +150,140 @@ pub struct ContinuousConfig {
     /// step's plan solve, group staging and the migration pump with this
     /// step's decode compute; [`PipelineMode::Serial`] keeps the strictly
     /// sequential loop as the A/B oracle.  Tokens are bit-identical either
-    /// way.  [`ContinuousConfig::new`] seeds this from the `KVPR_PIPELINE`
-    /// env var so whole test suites flip without code changes.
+    /// way.  [`ContinuousConfig::builder`] seeds this from the
+    /// `KVPR_PIPELINE` env var so whole test suites flip without code
+    /// changes.
     pub pipeline: PipelineMode,
 }
 
 impl ContinuousConfig {
+    /// Shorthand for [`ContinuousConfig::builder`]`(..).build()` — the
+    /// all-defaults config.
     pub fn new(artifact_dir: &str, engine: EngineConfig) -> Self {
-        ContinuousConfig {
-            artifact_dir: PathBuf::from(artifact_dir),
-            engine,
-            max_group: 4,
-            max_groups: 2,
-            prompt_bucket: 32,
-            kv_budget_bytes: 256 << 20,
-            admit_wait: Duration::from_millis(20),
-            tiering: None,
-            clock: ClockMode::Wall,
-            trace: None,
-            preload_requests: 0,
-            pipeline: PipelineMode::from_env(),
+        Self::builder(artifact_dir, engine).build()
+    }
+
+    /// Start a [`ContinuousConfigBuilder`] seeded with the defaults.  This
+    /// is the documented construction path — every knob is a chainable
+    /// setter — and the one place environment toggles are read: the
+    /// builder seeds [`ContinuousConfig::pipeline`] from `KVPR_PIPELINE`
+    /// ([`PipelineMode::from_env`]), and [`ContinuousConfig::new`]
+    /// delegates here, so no second env-read site can drift.
+    ///
+    /// ```
+    /// use kvpr::coordinator::ContinuousConfig;
+    /// use kvpr::engine::{EngineConfig, EnginePolicy};
+    /// use kvpr::scheduler::TierTopology;
+    ///
+    /// let cfg = ContinuousConfig::builder("artifacts", EngineConfig::new(EnginePolicy::Kvpr))
+    ///     .topology(TierTopology::standard(0, 64 << 20, 256 << 20))
+    ///     .max_group(2)
+    ///     .kv_budget_bytes(64 << 20)
+    ///     .build();
+    /// assert_eq!(cfg.max_group, 2);
+    /// assert!(cfg.tiering.is_some(), "`.topology(..)` switches tiering on");
+    /// ```
+    pub fn builder(artifact_dir: &str, engine: EngineConfig) -> ContinuousConfigBuilder {
+        ContinuousConfigBuilder {
+            cfg: ContinuousConfig {
+                artifact_dir: PathBuf::from(artifact_dir),
+                engine,
+                max_group: 4,
+                max_groups: 2,
+                prompt_bucket: 32,
+                kv_budget_bytes: 256 << 20,
+                admit_wait: Duration::from_millis(20),
+                tiering: None,
+                clock: ClockMode::Wall,
+                trace: None,
+                preload_requests: 0,
+                pipeline: PipelineMode::from_env(),
+            },
         }
+    }
+}
+
+/// Fluent constructor for [`ContinuousConfig`]
+/// ([`ContinuousConfig::builder`]): chain setters, then [`build`](Self::build).
+#[derive(Debug, Clone)]
+pub struct ContinuousConfigBuilder {
+    cfg: ContinuousConfig,
+}
+
+impl ContinuousConfigBuilder {
+    /// Requests prefilled together into one decode group.
+    pub fn max_group(mut self, n: usize) -> Self {
+        self.cfg.max_group = n;
+        self
+    }
+
+    /// Decode groups stepped concurrently.
+    pub fn max_groups(mut self, n: usize) -> Self {
+        self.cfg.max_groups = n;
+        self
+    }
+
+    /// Prompt bucket used for padding (must exist in the manifest).
+    pub fn prompt_bucket(mut self, n: usize) -> Self {
+        self.cfg.prompt_bucket = n;
+        self
+    }
+
+    /// Host KV budget (untiered) / gpu-hbm tier budget (tiered).
+    pub fn kv_budget_bytes(mut self, bytes: u64) -> Self {
+        self.cfg.kv_budget_bytes = bytes;
+        self
+    }
+
+    /// Idle batching window before prefilling a partial group.
+    pub fn admit_wait(mut self, wait: Duration) -> Self {
+        self.cfg.admit_wait = wait;
+        self
+    }
+
+    /// Full tiered-KV configuration (topology plus runtime knobs).
+    pub fn tiering(mut self, t: TieredKvConfig) -> Self {
+        self.cfg.tiering = Some(t);
+        self
+    }
+
+    /// Declare the tier chain, switching tiered KV management on with
+    /// default runtime knobs (or re-rooting the chain of a tiering config
+    /// set earlier).
+    pub fn topology(mut self, topo: TierTopology) -> Self {
+        let mut t = self.cfg.tiering.take().unwrap_or_default();
+        t.topology = topo;
+        self.cfg.tiering = Some(t);
+        self
+    }
+
+    /// Serving clock mode (wall vs deterministic step clock).
+    pub fn clock(mut self, mode: ClockMode) -> Self {
+        self.cfg.clock = mode;
+        self
+    }
+
+    /// Arm structured tracing, plan-vs-actual telemetry and the flight
+    /// recorder.
+    pub fn trace(mut self, tc: TracerConfig) -> Self {
+        self.cfg.trace = Some(tc);
+        self
+    }
+
+    /// Block the first step until this many requests arrived (trace replay).
+    pub fn preload_requests(mut self, n: usize) -> Self {
+        self.cfg.preload_requests = n;
+        self
+    }
+
+    /// Step-pipeline mode, overriding the `KVPR_PIPELINE` seed.
+    pub fn pipeline(mut self, mode: PipelineMode) -> Self {
+        self.cfg.pipeline = mode;
+        self
+    }
+
+    pub fn build(self) -> ContinuousConfig {
+        self.cfg
     }
 }
 
@@ -256,6 +371,14 @@ pub struct TieredKvConfig {
     /// needs tier traffic to overcommit the wire the way the old static
     /// knob did.
     pub step_budget_override: Option<u64>,
+    /// Sharded serving: when set, the store's pinned/dram/deep-tier
+    /// reservations draw from these `Arc`-shared host pools instead of
+    /// private per-server ones, so N worker shards admitting concurrently
+    /// compete for one host budget (the gpu tier stays per-shard).  The
+    /// [`Router`](super::Router) builds one [`SharedHostTiers`] and clones
+    /// it into every shard's config; a standalone server leaves this
+    /// `None`.
+    pub shared_host: Option<SharedHostTiers>,
 }
 
 impl Default for TieredKvConfig {
@@ -271,6 +394,7 @@ impl Default for TieredKvConfig {
             spill_floor: 0.0,
             spill_max_per_step: 2,
             step_budget_override: None,
+            shared_host: None,
         }
     }
 }
@@ -375,46 +499,34 @@ impl ContinuousServer {
     }
 
     /// Submit a prompt; returns a waitable handle.
+    #[deprecated(
+        since = "0.9.0",
+        note = "use `Submit::dispatch` — one submission surface shared by servers and the Router"
+    )]
     pub fn submit(&self, prompt: &str, gen_len: usize) -> ResponseHandle {
-        let id = self
-            .next_id
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        self.submit_request(Request::new(id, prompt, gen_len))
+        let id = self.next_request_id();
+        self.enqueue(Request::new(id, prompt, gen_len))
     }
 
     /// Submit every request of a generated workload
-    /// [`Trace`](crate::workload::Trace), step-indexed: admission holds
-    /// each one until the loop's decode-step clock reaches its arrival
-    /// step, so the trace's arrival schedule — not channel delivery order
-    /// or wall time — decides when it can join a group.  Returns handles
-    /// in trace order.
+    /// [`Trace`](crate::workload::Trace); see
+    /// [`SubmitTarget::Trace`](super::SubmitTarget) for the arrival-step
+    /// semantics.  Returns handles in trace order.
+    #[deprecated(
+        since = "0.9.0",
+        note = "use `Submit::dispatch` — one submission surface shared by servers and the Router"
+    )]
     pub fn submit_trace(&self, trace: &crate::workload::Trace) -> Vec<ResponseHandle> {
-        trace
-            .requests
-            .iter()
-            .map(|r| {
-                let id = self
-                    .next_id
-                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                self.submit_request(Request::at_step(
-                    id,
-                    &r.prompt_text(),
-                    r.gen_tokens.max(1),
-                    r.step,
-                ))
-            })
-            .collect()
+        self.dispatch(trace)
     }
 
+    /// Submit a pre-built [`Request`] verbatim.
+    #[deprecated(
+        since = "0.9.0",
+        note = "use `Submit::dispatch` — one submission surface shared by servers and the Router"
+    )]
     pub fn submit_request(&self, req: Request) -> ResponseHandle {
-        let (done, rx) = mpsc::channel();
-        let pending = Pending { req, arrived: self.clock.now(), done };
-        self.tx
-            .as_ref()
-            .expect("server shut down")
-            .send(pending)
-            .expect("server thread gone");
-        ResponseHandle::new(rx)
+        self.enqueue(req)
     }
 
     /// Graceful shutdown: close the queue, let in-flight groups finish,
@@ -426,6 +538,24 @@ impl ContinuousServer {
                 .map_err(|_| anyhow::anyhow!("continuous server thread panicked"))??;
         }
         Ok(())
+    }
+}
+
+impl Submit for ContinuousServer {
+    fn next_request_id(&self) -> u64 {
+        self.next_id
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+    }
+
+    fn enqueue(&self, req: Request) -> ResponseHandle {
+        let (done, rx) = mpsc::channel();
+        let pending = Pending { req, arrived: self.clock.now(), done };
+        self.tx
+            .as_ref()
+            .expect("server shut down")
+            .send(pending)
+            .expect("server thread gone");
+        ResponseHandle::new(rx)
     }
 }
 
@@ -483,8 +613,10 @@ fn serve_loop(
         }
         topo
     });
-    let disk_tier = topo.as_ref().and_then(|t| t.tier_named("disk-nvme"));
-    // the disk rung's extra-hop surcharge feeds the spill policy's
+    // the deepest below-base rung — an NVMe disk, or a sharded worker's
+    // remote hop — maps to the store's deep-tier slot either way
+    let disk_tier = topo.as_ref().and_then(|t| t.deep_tier());
+    // the deep rung's extra-hop surcharge feeds the spill policy's
     // two-hop reload scoring (the planner reads it from the same chain)
     let nvme_factor = match (topo.as_ref(), disk_tier) {
         (Some(t), Some(i)) => t.hop_factor(i),
@@ -506,6 +638,7 @@ fn serve_loop(
             scfg.spill_cooldown = t.spill_cooldown;
             scfg.spill_floor = t.spill_floor;
             scfg.spill_max_per_step = t.spill_max_per_step;
+            scfg.shared_host = t.shared_host.clone();
             let mut s = KvStore::new(
                 scfg,
                 // the eviction/demotion/spill scores move bytes at the
@@ -762,6 +895,24 @@ fn serve_loop(
                 m.state = RequestState::Decoding;
             }
             metrics.record_batch(n);
+            // a stolen session's prefix KV lives on the shard it migrated
+            // away from: park that prefix on the deep (remote) rung, so the
+            // planner prices its re-fetch hops and the store's two-hop
+            // promotions pull it across the shared host tiers
+            let remote = members
+                .iter()
+                .map(|m| m.req.remote_prefix_tokens)
+                .max()
+                .unwrap_or(0);
+            if remote > 0 {
+                if let (KvHold::Tiered(seq), Some((s, _))) = (&hold, store.as_ref()) {
+                    let parked = s
+                        .lock()
+                        .unwrap()
+                        .park_prefix_deep(*seq, remote.min(cfg.prompt_bucket));
+                    metrics.record_remote_prefix(parked as u64);
+                }
+            }
             groups.push(Group { gid: next_gid, sess, members, kv: hold, last_l: 0 });
             next_gid += 1;
         }

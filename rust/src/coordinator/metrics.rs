@@ -49,6 +49,8 @@ struct Inner {
     spills_polled: u64,
     hops_issued: u64,
     hops_polled: u64,
+    // -- sharded-serving counters ---------------------------------------------
+    remote_parked_blocks: u64,
     // -- adaptive step-budget counters ---------------------------------------
     budget: StepBudgetTotals,
     // -- pipelined-runtime counters -------------------------------------------
@@ -150,6 +152,41 @@ pub struct DiskTotals {
     pub hops_issued: u64,
     /// Promotion hops landed.
     pub hops_polled: u64,
+}
+
+/// Placement totals of the sharded [`Router`](super::Router) front end.
+/// Written by the router's placement path (not the per-shard serve loops);
+/// read via [`Router::totals`](super::Router::totals).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RouterTotals {
+    /// Requests the router placed (one per dispatched request).
+    pub submitted: u64,
+    /// Placements that landed on the shard already holding the session's
+    /// resident suffix.
+    pub affinity_hits: u64,
+    /// First-seen sessions placed on the least-loaded shard.
+    pub fresh: u64,
+    /// Sessions moved off a saturated affinity shard (work stealing); the
+    /// destination shard re-fetches their prefix over its remote hop.
+    pub steals: u64,
+    /// Prompt-prefix tokens tagged for cross-shard re-fetch by those
+    /// steals.
+    pub remote_prefix_tokens: u64,
+}
+
+impl RouterTotals {
+    /// Fold one placement decision into the totals.
+    pub(crate) fn record(&mut self, hit: bool, stolen: bool, remote_tokens: usize) {
+        self.submitted += 1;
+        if stolen {
+            self.steals += 1;
+        } else if hit {
+            self.affinity_hits += 1;
+        } else {
+            self.fresh += 1;
+        }
+        self.remote_prefix_tokens += remote_tokens as u64;
+    }
 }
 
 /// Aggregates of the per-step adaptive migration grant (the planner-slack
@@ -311,6 +348,18 @@ impl ServeMetrics {
         m.spills_polled += spills_polled;
         m.hops_issued += hops_issued;
         m.hops_polled += hops_polled;
+    }
+
+    /// Sharded serving: blocks this serve loop parked on its deep (remote)
+    /// tier at admission because their KV lived on another shard.
+    pub fn record_remote_prefix(&self, blocks: u64) {
+        self.inner.lock().unwrap().remote_parked_blocks += blocks;
+    }
+
+    /// Blocks parked on the deep tier for cross-shard re-fetch (zero on an
+    /// unsharded server).
+    pub fn remote_parked_blocks(&self) -> u64 {
+        self.inner.lock().unwrap().remote_parked_blocks
     }
 
     /// Disk-tier traffic totals (see [`DiskTotals`]).
@@ -639,6 +688,27 @@ mod tests {
                 hops_polled: 1,
             }
         );
+    }
+
+    #[test]
+    fn router_totals_classify_each_placement_once() {
+        let mut t = RouterTotals::default();
+        t.record(false, false, 0); // fresh
+        t.record(true, false, 0); // affinity hit
+        t.record(false, true, 32); // steal, 32 prefix tokens go remote
+        t.record(true, true, 16); // a steal is a steal even off a hit shard
+        assert_eq!(t.submitted, 4);
+        assert_eq!((t.affinity_hits, t.fresh, t.steals), (1, 1, 2));
+        assert_eq!(t.remote_prefix_tokens, 48);
+    }
+
+    #[test]
+    fn remote_prefix_counter_accumulates() {
+        let m = ServeMetrics::new();
+        assert_eq!(m.remote_parked_blocks(), 0);
+        m.record_remote_prefix(2);
+        m.record_remote_prefix(1);
+        assert_eq!(m.remote_parked_blocks(), 3);
     }
 
     #[test]

@@ -33,9 +33,27 @@
 //!   continuous loop is measured against (`rust/tests/coordinator_e2e.rs`).
 //!
 //! The engine's runtime handles are thread-pinned, so each server spawns a
-//! worker thread that *builds* its own [`Engine`](crate::engine::Engine) and
-//! drains a request channel; the [`Router`] round-robins across several
-//! servers (data-parallel multi-GPU, paper Appendix A.7).
+//! worker thread that *builds* its own [`Engine`](crate::engine::Engine)
+//! and drains a request channel.
+//!
+//! Every front end shares one submission surface: the [`Submit`] trait's
+//! [`dispatch`](Submit::dispatch) accepts anything convertible into a
+//! [`SubmitTarget`] — a `(prompt, gen_len)` pair, a pre-built [`Request`],
+//! or a workload [`Trace`](crate::workload::Trace) — and the old
+//! `submit`/`submit_trace`/`submit_request` methods survive one PR as
+//! `#[deprecated]` shims over it.
+//!
+//! Above the single-worker servers sits the sharded [`Router`]
+//! (data-parallel multi-GPU, paper Appendix A.7): N [`ContinuousServer`]
+//! worker shards, each owning a private gpu tier, over host tiers shared
+//! through one [`SharedHostTiers`](crate::kvstore::SharedHostTiers), with
+//! each shard's cross-shard hop declared as a remote rung in its
+//! [`TierTopology`](crate::scheduler::TierTopology) chain.  Placement is
+//! suffix-affine (a session lands on the shard holding its resident
+//! suffix), saturated shards shed sessions by work stealing, and a stolen
+//! session's prefix KV is parked on the receiving shard's remote rung so
+//! the planner prices the cross-shard re-fetch — see the [`router`
+//! module](self::Router) docs.
 
 mod batcher;
 mod continuous;
@@ -43,13 +61,17 @@ mod metrics;
 mod request;
 mod router;
 mod server;
+mod submit;
 
 pub use batcher::Batcher;
-pub use continuous::{ContinuousConfig, ContinuousServer, PipelineMode, TieredKvConfig};
+pub use continuous::{
+    ContinuousConfig, ContinuousConfigBuilder, ContinuousServer, PipelineMode, TieredKvConfig,
+};
 pub use metrics::{
-    DemotionTotals, DiskTotals, LatencyPercentiles, MigrationTotals, PipelineTotals, ServeMetrics,
-    SloAttainment, StepBudgetTotals, TieringTotals,
+    DemotionTotals, DiskTotals, LatencyPercentiles, MigrationTotals, PipelineTotals, RouterTotals,
+    ServeMetrics, SloAttainment, StepBudgetTotals, TieringTotals,
 };
 pub use request::{Request, RequestState, Response};
-pub use router::Router;
+pub use router::{Router, RouterConfig};
 pub use server::{ResponseHandle, Server, ServerConfig};
+pub use submit::{Submit, SubmitTarget};

@@ -31,16 +31,42 @@ pub struct Request {
     /// schedule is honoured independent of wall time.  `None` (the
     /// wall-clock path) is eligible immediately.
     pub arrival_step: Option<usize>,
+    /// Sharded serving: prompt-prefix tokens whose KV lives on *another*
+    /// shard.  The [`Router`](super::Router) sets this when work-stealing
+    /// moves a session off its affinity shard; the receiving serve loop
+    /// parks that prefix on its deep (remote-hop) tier at admission, so
+    /// the planner prices the cross-shard re-fetch instead of assuming the
+    /// KV is local.  Zero everywhere else.
+    pub remote_prefix_tokens: usize,
 }
 
 impl Request {
     pub fn new(id: u64, prompt: &str, gen_len: usize) -> Self {
-        Request { id, prompt: prompt.to_string(), gen_len, arrival_step: None }
+        Request {
+            id,
+            prompt: prompt.to_string(),
+            gen_len,
+            arrival_step: None,
+            remote_prefix_tokens: 0,
+        }
     }
 
     /// A step-indexed request (trace replay).
     pub fn at_step(id: u64, prompt: &str, gen_len: usize, step: usize) -> Self {
-        Request { id, prompt: prompt.to_string(), gen_len, arrival_step: Some(step) }
+        Request {
+            id,
+            prompt: prompt.to_string(),
+            gen_len,
+            arrival_step: Some(step),
+            remote_prefix_tokens: 0,
+        }
+    }
+
+    /// Tag this request's first `tokens` prompt tokens as resident on a
+    /// remote shard (see [`Request::remote_prefix_tokens`]).
+    pub fn with_remote_prefix(mut self, tokens: usize) -> Self {
+        self.remote_prefix_tokens = tokens;
+        self
     }
 }
 

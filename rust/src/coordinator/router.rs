@@ -1,59 +1,390 @@
-//! Round-robin router over data-parallel servers.
+//! Sharded serving front end: N continuous-batching worker shards behind
+//! one [`Router`], with cross-shard traffic priced as topology rungs.
 //!
-//! Models the paper's Appendix A.7 setup: several GPU workers behind one
-//! entry point.  KVPR needs no shared CPU resource, so adding servers
-//! scales linearly — the property Fig 14 contrasts with FastDecode's
-//! CPU-bottleneck (reproduced in the simulator, `benches/fig14_multigpu`).
+//! Models the paper's Appendix A.7 setup — several GPU workers above one
+//! host — without forking any layer below the coordinator:
+//!
+//! * **Each shard owns a gpu-hbm tier and its own serving loop** (a
+//!   [`ContinuousServer`] with a private gpu pool), while pinned / dram /
+//!   deep reservations draw from one
+//!   [`SharedHostTiers`](crate::kvstore::SharedHostTiers) — N shards
+//!   admitting concurrently compete for one host budget, exactly as N
+//!   GPUs over one host do.
+//! * **The remote hop is a declared rung**: the router appends a
+//!   `"remote"` [`TierSpec`](crate::scheduler::TierSpec) below each
+//!   shard's chain
+//!   ([`TierTopology::with_remote_hop`](crate::scheduler::TierTopology::with_remote_hop)),
+//!   so the existing `plan_batch` transfer fold prices cross-shard
+//!   fetches via
+//!   [`hop_factor`](crate::scheduler::TierTopology::hop_factor) — no
+//!   planner fork, no second cost model.
+//! * **Suffix-affinity placement**: a session (keyed by its prompt, the
+//!   byte-tokenizer's session identity) lands on the shard already
+//!   holding its resident suffix; first-seen sessions go to the
+//!   least-loaded shard (lowest index breaking ties), so placement is a
+//!   pure function of the submission sequence — deterministic under the
+//!   seeded step clock.
+//! * **Work stealing**: when a session's affinity shard is saturated
+//!   ([`RouterConfig::shard_capacity`] outstanding requests) and a
+//!   strictly less-loaded shard exists, the session moves there; its
+//!   prefix KV is then remote, so the request is tagged
+//!   ([`Request::with_remote_prefix`]) and the receiving serve loop parks
+//!   that prefix on its deep (remote) rung — the planner prices the
+//!   re-fetch hops, and the store's two-hop promotions pull the blocks
+//!   back through the shared host tiers.
+//!
+//! Tokens are placement-invariant: the engine's decode is a deterministic
+//! function of (prompt, generation length), so an N-shard router serves a
+//! trace bit-identically to a 1-shard one — the multi-worker e2e pins
+//! this, and `benches/perf_hotpath.rs` gates aggregate steps/s at 1/2/4
+//! shards.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 use anyhow::Result;
 
-use super::server::{ResponseHandle, Server, ServerConfig};
+use super::continuous::{ContinuousConfig, ContinuousServer};
+use super::metrics::RouterTotals;
+use super::request::Request;
+use super::server::ResponseHandle;
+use super::submit::Submit;
+use crate::kvstore::SharedHostTiers;
+use crate::obs::chrome_trace_sharded;
+use crate::scheduler::LinkSpec;
+use crate::util::json::Json;
 
-/// Round-robin dispatcher.
+/// Sharded-serving construction parameters.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Worker shards (≥ 1); each runs its own serving loop over a private
+    /// gpu tier.
+    pub shards: usize,
+    /// Per-shard serving config.  Its tiering (or
+    /// [`TieredKvConfig::default`](super::TieredKvConfig) when unset — the
+    /// router always serves tiered) is cloned into every shard with the
+    /// topology extended by the remote rung and the host pools replaced by
+    /// the shared ones.
+    pub base: ContinuousConfig,
+    /// Capacity of the remote rung appended to each shard's chain — the
+    /// cross-shard KV the deep tier can hold.  Ignored when the base
+    /// topology already declares a below-base rung (that rung then doubles
+    /// as the remote hop).
+    pub remote_capacity_bytes: u64,
+    /// The declared interconnect of the remote hop (NVLink bridge, PCIe
+    /// switch, RDMA fabric, ...).  [`LinkSpec::unresolved`] calibrates it
+    /// against the engine wire like any other below-base rung.
+    pub remote_link: LinkSpec,
+    /// Outstanding-request threshold per shard beyond which placement
+    /// steals a session to a less-loaded shard; 0 (the default) never
+    /// steals.
+    pub shard_capacity: usize,
+}
+
+impl RouterConfig {
+    pub fn new(shards: usize, base: ContinuousConfig) -> Self {
+        RouterConfig {
+            shards,
+            base,
+            remote_capacity_bytes: 1 << 30,
+            remote_link: LinkSpec::unresolved(),
+            shard_capacity: 0,
+        }
+    }
+}
+
+/// How a placement decision was reached.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum PlacementKind {
+    /// The session's affinity shard had room.
+    AffinityHit,
+    /// First sight of this session: least-loaded shard.
+    Fresh,
+    /// Affinity shard saturated: stolen to a strictly less-loaded shard.
+    Steal,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Decision {
+    shard: usize,
+    kind: PlacementKind,
+}
+
+/// Suffix-affinity placement: a pure function of the submission sequence
+/// and the per-shard load vector — no clocks, no randomness — so a
+/// replayed trace places identically every run.
+struct Placement {
+    /// Session key (the prompt) → shard holding its resident suffix.
+    affinity: HashMap<String, usize>,
+    /// Outstanding threshold above which an affinity shard counts as
+    /// saturated (0 = never).
+    capacity: usize,
+}
+
+impl Placement {
+    fn new(capacity: usize) -> Self {
+        Placement { affinity: HashMap::new(), capacity }
+    }
+
+    fn least_loaded(loads: &[usize]) -> usize {
+        loads
+            .iter()
+            .enumerate()
+            .min_by_key(|&(i, &l)| (l, i))
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+
+    fn place(&mut self, key: &str, loads: &[usize]) -> Decision {
+        match self.affinity.get(key).copied() {
+            Some(s) if self.capacity == 0 || loads[s] < self.capacity => {
+                Decision { shard: s, kind: PlacementKind::AffinityHit }
+            }
+            Some(s) => {
+                let t = Self::least_loaded(loads);
+                if t == s || loads[t] >= loads[s] {
+                    // nowhere strictly better: stay home rather than
+                    // bounce the suffix between equally saturated shards
+                    Decision { shard: s, kind: PlacementKind::AffinityHit }
+                } else {
+                    self.affinity.insert(key.to_string(), t);
+                    Decision { shard: t, kind: PlacementKind::Steal }
+                }
+            }
+            None => {
+                let t = Self::least_loaded(loads);
+                self.affinity.insert(key.to_string(), t);
+                Decision { shard: t, kind: PlacementKind::Fresh }
+            }
+        }
+    }
+}
+
+/// The unified front end over [`ContinuousServer`] worker shards — see the
+/// module docs for the placement/stealing/remote-hop semantics.  Submit
+/// through the [`Submit`] trait, exactly as on a single server:
+///
+/// ```no_run
+/// use kvpr::coordinator::{ContinuousConfig, Router, RouterConfig, Submit};
+/// use kvpr::engine::{EngineConfig, EnginePolicy};
+/// use kvpr::scheduler::TierTopology;
+///
+/// let base = ContinuousConfig::builder("artifacts", EngineConfig::new(EnginePolicy::Kvpr))
+///     .topology(TierTopology::standard(0, 64 << 20, 256 << 20))
+///     .build();
+/// let router = Router::start(RouterConfig::new(2, base)).unwrap();
+/// let resp = router.dispatch(("hello shards", 8)).pop().unwrap().wait().unwrap();
+/// assert_eq!(resp.tokens.len(), 8);
+/// router.shutdown().unwrap();
+/// ```
 pub struct Router {
-    servers: Vec<Server>,
-    next: AtomicUsize,
+    shards: Vec<ContinuousServer>,
+    placement: Mutex<Placement>,
+    totals: Mutex<RouterTotals>,
+    /// Requests placed on each shard (outstanding = this − completed).
+    submitted: Vec<AtomicU64>,
+    next_id: AtomicU64,
 }
 
 impl Router {
-    /// Start `n` identical servers.
-    pub fn start(cfg: &ServerConfig, n: usize) -> Result<Router> {
-        let mut servers = Vec::with_capacity(n);
-        for _ in 0..n {
-            servers.push(Server::start(cfg.clone())?);
+    /// Start `cfg.shards` worker shards over one shared host: build the
+    /// per-shard chain (base topology + remote rung), size the shared host
+    /// pools off that chain, and clone both into every shard's serving
+    /// config.
+    pub fn start(cfg: RouterConfig) -> Result<Router> {
+        anyhow::ensure!(cfg.shards >= 1, "a router needs at least one shard");
+        let tiering = cfg.base.tiering.clone().unwrap_or_default();
+        let topo = match tiering.topology.deep_tier() {
+            // an already-declared below-base rung (e.g. a disk) doubles as
+            // the remote hop; otherwise append the declared remote rung
+            Some(_) => tiering.topology.clone(),
+            None => tiering
+                .topology
+                .clone()
+                .with_remote_hop(cfg.remote_capacity_bytes, cfg.remote_link),
+        };
+        let cap = |name: &str| topo.tier_named(name).map_or(0, |i| topo.tier(i).capacity_bytes);
+        let deep = topo.deep_tier().map_or(0, |i| topo.tier(i).capacity_bytes);
+        let shared = SharedHostTiers::new(cap("pinned"), cap("cpu-dram"), deep);
+        let mut shards = Vec::with_capacity(cfg.shards);
+        for _ in 0..cfg.shards {
+            let mut t = tiering.clone();
+            t.topology = topo.clone();
+            t.shared_host = Some(shared.clone());
+            let mut sc = cfg.base.clone();
+            sc.tiering = Some(t);
+            shards.push(ContinuousServer::start(sc)?);
         }
-        Ok(Router { servers, next: AtomicUsize::new(0) })
+        let submitted = (0..cfg.shards).map(|_| AtomicU64::new(0)).collect();
+        Ok(Router {
+            shards,
+            placement: Mutex::new(Placement::new(cfg.shard_capacity)),
+            totals: Mutex::new(RouterTotals::default()),
+            submitted,
+            next_id: AtomicU64::new(1),
+        })
     }
 
-    pub fn n_servers(&self) -> usize {
-        self.servers.len()
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
     }
 
-    /// Dispatch to the next server in rotation.
-    pub fn submit(&self, prompt: &str, gen_len: usize) -> ResponseHandle {
-        let i = self.next.fetch_add(1, Ordering::Relaxed) % self.servers.len();
-        self.servers[i].submit(prompt, gen_len)
+    /// Shard `i`'s server (its [`ServeMetrics`](super::ServeMetrics),
+    /// tracer, ...).
+    pub fn shard(&self, i: usize) -> &ContinuousServer {
+        &self.shards[i]
     }
 
-    /// Aggregate generated-token throughput across workers.
+    /// Requests placed on shard `i` whose responses have not completed.
+    fn outstanding(&self, i: usize) -> usize {
+        let placed = self.submitted[i].load(Ordering::Relaxed);
+        placed.saturating_sub(self.shards[i].metrics().requests()) as usize
+    }
+
+    /// Placement totals (hits / fresh / steals / remote-tagged tokens).
+    pub fn totals(&self) -> RouterTotals {
+        *self.totals.lock().unwrap()
+    }
+
+    /// Aggregate generated tokens across shards.
     pub fn total_tokens(&self) -> u64 {
-        self.servers.iter().map(|s| s.metrics().tokens()).sum()
+        self.shards.iter().map(|s| s.metrics().tokens()).sum()
     }
 
+    /// Aggregate completed requests across shards.
     pub fn total_requests(&self) -> u64 {
-        self.servers.iter().map(|s| s.metrics().requests()).sum()
+        self.shards.iter().map(|s| s.metrics().requests()).sum()
     }
 
-    pub fn server(&self, i: usize) -> &Server {
-        &self.servers[i]
+    /// Aggregate event-loop decode steps across shards.
+    pub fn total_steps(&self) -> u64 {
+        self.shards.iter().map(|s| s.metrics().steps()).sum()
     }
 
+    /// One Chrome trace document with every shard's serving loop as its
+    /// own process track (`pid` = shard + 1, named `shard-<i>`) — load the
+    /// export in Perfetto to see the shards' steps side by side.  Empty
+    /// tracks when tracing is off ([`ContinuousConfig::trace`] unset).
+    pub fn export_chrome_trace(&self) -> Json {
+        let per_shard: Vec<_> = self.shards.iter().map(|s| s.tracer().events()).collect();
+        chrome_trace_sharded(&per_shard)
+    }
+
+    /// Graceful shutdown of every shard (drains in shard order).
     pub fn shutdown(self) -> Result<()> {
-        for s in self.servers {
+        for s in self.shards {
             s.shutdown()?;
         }
         Ok(())
+    }
+}
+
+impl Submit for Router {
+    fn next_request_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    fn enqueue(&self, req: Request) -> ResponseHandle {
+        let loads: Vec<usize> = (0..self.shards.len()).map(|i| self.outstanding(i)).collect();
+        // one lock covers decide + count + forward, so two concurrent
+        // submitters of the same session cannot race the affinity map
+        let mut placement = self.placement.lock().unwrap();
+        let d = placement.place(&req.prompt, &loads);
+        let req = match d.kind {
+            // the byte tokenizer maps one prompt byte to one token, so the
+            // stolen session's remote prefix is the prompt itself (the
+            // serve loop clamps to its prompt bucket)
+            PlacementKind::Steal => {
+                let tokens = req.prompt.len();
+                req.with_remote_prefix(tokens)
+            }
+            _ => req,
+        };
+        self.totals.lock().unwrap().record(
+            d.kind == PlacementKind::AffinityHit,
+            d.kind == PlacementKind::Steal,
+            req.remote_prefix_tokens,
+        );
+        self.submitted[d.shard].fetch_add(1, Ordering::Relaxed);
+        let handle = self.shards[d.shard].enqueue(req);
+        drop(placement);
+        handle
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_sessions_spread_by_load_lowest_index_ties() {
+        let mut p = Placement::new(0);
+        let d = p.place("a", &[0, 0, 0]);
+        assert_eq!((d.shard, d.kind), (0, PlacementKind::Fresh), "tie → lowest index");
+        let d = p.place("b", &[1, 0, 0]);
+        assert_eq!((d.shard, d.kind), (1, PlacementKind::Fresh));
+        let d = p.place("c", &[1, 1, 0]);
+        assert_eq!((d.shard, d.kind), (2, PlacementKind::Fresh));
+    }
+
+    #[test]
+    fn affinity_hits_return_to_the_suffix_shard() {
+        let mut p = Placement::new(0);
+        assert_eq!(p.place("sess", &[3, 0]).shard, 1);
+        // load has shifted, but the suffix lives on shard 1
+        let d = p.place("sess", &[0, 9]);
+        assert_eq!((d.shard, d.kind), (1, PlacementKind::AffinityHit));
+    }
+
+    #[test]
+    fn saturation_steals_to_a_strictly_less_loaded_shard() {
+        let mut p = Placement::new(2);
+        assert_eq!(p.place("sess", &[0, 1]).shard, 0);
+        // shard 0 saturated (2 outstanding ≥ capacity 2), shard 1 idle
+        let d = p.place("sess", &[2, 0]);
+        assert_eq!((d.shard, d.kind), (1, PlacementKind::Steal));
+        // the affinity moved with the steal: the session now hits shard 1
+        let d = p.place("sess", &[0, 1]);
+        assert_eq!((d.shard, d.kind), (1, PlacementKind::AffinityHit));
+    }
+
+    #[test]
+    fn no_steal_when_every_shard_is_equally_saturated() {
+        let mut p = Placement::new(1);
+        assert_eq!(p.place("sess", &[0, 0]).shard, 0);
+        let d = p.place("sess", &[1, 1]);
+        assert_eq!(
+            (d.shard, d.kind),
+            (0, PlacementKind::AffinityHit),
+            "bouncing between equally saturated shards would thrash the suffix"
+        );
+    }
+
+    #[test]
+    fn zero_capacity_never_steals() {
+        let mut p = Placement::new(0);
+        assert_eq!(p.place("sess", &[0, 0]).shard, 0);
+        let d = p.place("sess", &[1_000_000, 0]);
+        assert_eq!((d.shard, d.kind), (0, PlacementKind::AffinityHit));
+    }
+
+    #[test]
+    fn placement_is_a_pure_function_of_the_submission_sequence() {
+        // the property the seeded step-clock e2e leans on: replaying the
+        // same keys against the same load vectors decides identically
+        let run = || {
+            let mut p = Placement::new(2);
+            let keys = ["a", "b", "a", "c", "b", "a"];
+            let loads = [[0, 0], [1, 0], [2, 1], [2, 2], [1, 2], [2, 0]];
+            keys.iter()
+                .zip(loads.iter())
+                .map(|(k, l)| {
+                    let d = p.place(k, l);
+                    (d.shard, d.kind)
+                })
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
     }
 }

@@ -9,6 +9,7 @@ use anyhow::{Context, Result};
 use super::batcher::Batcher;
 use super::metrics::ServeMetrics;
 use super::request::{Pending, Request, Response};
+use super::submit::Submit;
 use crate::engine::{Engine, EngineConfig};
 use crate::model::ByteTokenizer;
 use crate::util::clock::Clock;
@@ -90,22 +91,22 @@ impl Server {
     }
 
     /// Submit a prompt; returns a waitable handle.
+    #[deprecated(
+        since = "0.9.0",
+        note = "use `Submit::dispatch` — one submission surface shared by servers and the Router"
+    )]
     pub fn submit(&self, prompt: &str, gen_len: usize) -> ResponseHandle {
-        let id = self
-            .next_id
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        self.submit_request(Request::new(id, prompt, gen_len))
+        let id = self.next_request_id();
+        self.enqueue(Request::new(id, prompt, gen_len))
     }
 
+    /// Submit a pre-built [`Request`] verbatim.
+    #[deprecated(
+        since = "0.9.0",
+        note = "use `Submit::dispatch` — one submission surface shared by servers and the Router"
+    )]
     pub fn submit_request(&self, req: Request) -> ResponseHandle {
-        let (done, rx) = mpsc::channel();
-        let pending = Pending { req, arrived: self.clock.now(), done };
-        self.tx
-            .as_ref()
-            .expect("server shut down")
-            .send(pending)
-            .expect("server thread gone");
-        ResponseHandle { rx }
+        self.enqueue(req)
     }
 
     /// Graceful shutdown: close the queue, join the worker.
@@ -115,6 +116,24 @@ impl Server {
             w.join().map_err(|_| anyhow::anyhow!("server thread panicked"))??;
         }
         Ok(())
+    }
+}
+
+impl Submit for Server {
+    fn next_request_id(&self) -> u64 {
+        self.next_id
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+    }
+
+    fn enqueue(&self, req: Request) -> ResponseHandle {
+        let (done, rx) = mpsc::channel();
+        let pending = Pending { req, arrived: self.clock.now(), done };
+        self.tx
+            .as_ref()
+            .expect("server shut down")
+            .send(pending)
+            .expect("server thread gone");
+        ResponseHandle { rx }
     }
 }
 

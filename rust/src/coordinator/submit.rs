@@ -1,0 +1,111 @@
+//! One submission surface for every serving front end.
+//!
+//! The first serving PRs grew three entry points — `submit(prompt, n)`,
+//! `submit_request(Request)`, `submit_trace(&Trace)` — duplicated on each
+//! server type.  This module collapses them: anything submittable converts
+//! into a [`SubmitTarget`], and every front end ([`ContinuousServer`],
+//! the whole-batch [`Server`], the sharded [`Router`]) implements the
+//! [`Submit`] trait, whose [`dispatch`](Submit::dispatch) method is the
+//! single public path.  The old methods survive one PR as `#[deprecated]`
+//! shims over this trait.
+//!
+//! [`ContinuousServer`]: super::ContinuousServer
+//! [`Server`]: super::Server
+//! [`Router`]: super::Router
+
+use super::request::Request;
+use super::server::ResponseHandle;
+use crate::workload::Trace;
+
+/// Anything a serving front end accepts: built from a `(prompt, gen_len)`
+/// pair, a pre-built [`Request`], or a workload [`Trace`] via `From`/`Into`
+/// — callers normally pass those directly to [`Submit::dispatch`] and never
+/// name this type.
+#[derive(Debug, Clone)]
+pub enum SubmitTarget {
+    /// A single prompt; the front end assigns the request id.
+    Prompt { prompt: String, gen_len: usize },
+    /// A pre-built request, submitted verbatim (id, arrival step and
+    /// remote-prefix tag included).
+    Request(Request),
+    /// Every request of a generated workload trace, step-indexed:
+    /// admission holds each one until the serving loop's decode-step
+    /// clock reaches its arrival step, so the trace's arrival schedule —
+    /// not channel delivery order or wall time — decides when it can join
+    /// a group.
+    Trace(Trace),
+}
+
+impl From<(&str, usize)> for SubmitTarget {
+    fn from((prompt, gen_len): (&str, usize)) -> Self {
+        SubmitTarget::Prompt { prompt: prompt.to_string(), gen_len }
+    }
+}
+
+impl From<(String, usize)> for SubmitTarget {
+    fn from((prompt, gen_len): (String, usize)) -> Self {
+        SubmitTarget::Prompt { prompt, gen_len }
+    }
+}
+
+impl From<Request> for SubmitTarget {
+    fn from(req: Request) -> Self {
+        SubmitTarget::Request(req)
+    }
+}
+
+impl From<Trace> for SubmitTarget {
+    fn from(trace: Trace) -> Self {
+        SubmitTarget::Trace(trace)
+    }
+}
+
+impl From<&Trace> for SubmitTarget {
+    fn from(trace: &Trace) -> Self {
+        SubmitTarget::Trace(trace.clone())
+    }
+}
+
+/// The submission surface shared by every serving front end.
+///
+/// Implementors provide id allocation and the raw enqueue; the provided
+/// [`dispatch`](Submit::dispatch) method maps any [`SubmitTarget`] onto
+/// them, so prompt/request/trace submission behaves identically on a
+/// [`ContinuousServer`](super::ContinuousServer), the whole-batch
+/// [`Server`](super::Server) and the sharded [`Router`](super::Router).
+pub trait Submit {
+    /// Allocate the next request id (monotonic per front end).
+    fn next_request_id(&self) -> u64;
+
+    /// Enqueue one pre-built request; returns a waitable handle.
+    fn enqueue(&self, req: Request) -> ResponseHandle;
+
+    /// Submit anything convertible into a [`SubmitTarget`]; returns one
+    /// handle per request, in submission order (a prompt or request yields
+    /// exactly one, a trace yields one per trace request).
+    fn dispatch(&self, target: impl Into<SubmitTarget>) -> Vec<ResponseHandle>
+    where
+        Self: Sized,
+    {
+        match target.into() {
+            SubmitTarget::Prompt { prompt, gen_len } => {
+                let id = self.next_request_id();
+                vec![self.enqueue(Request::new(id, &prompt, gen_len))]
+            }
+            SubmitTarget::Request(req) => vec![self.enqueue(req)],
+            SubmitTarget::Trace(trace) => trace
+                .requests
+                .iter()
+                .map(|r| {
+                    let id = self.next_request_id();
+                    self.enqueue(Request::at_step(
+                        id,
+                        &r.prompt_text(),
+                        r.gen_tokens.max(1),
+                        r.step,
+                    ))
+                })
+                .collect(),
+        }
+    }
+}

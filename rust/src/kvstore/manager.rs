@@ -34,6 +34,49 @@ pub struct TierStats {
     pub migrated_bytes: u64,
 }
 
+/// Byte accounting for host tiers **shared across worker shards**: each
+/// shard's [`TierManager`] owns its private gpu pool but draws pinned,
+/// dram and disk reservations from these [`MemPool`]s, which clone by
+/// reference ([`MemPool`] is `Arc`-shared) — so N shards admitting
+/// concurrently compete for one host budget, exactly as N GPUs over one
+/// host do.  Build once (in the router), clone into every shard.
+#[derive(Clone)]
+pub struct SharedHostTiers {
+    pinned: MemPool,
+    dram: MemPool,
+    disk: MemPool,
+}
+
+impl SharedHostTiers {
+    pub fn new(pinned_bytes: u64, dram_bytes: u64, disk_bytes: u64) -> Self {
+        SharedHostTiers {
+            pinned: MemPool::new(Tier::Pinned.name(), pinned_bytes),
+            dram: MemPool::new(Tier::CpuDram.name(), dram_bytes),
+            disk: MemPool::new(Tier::DiskNvme.name(), disk_bytes),
+        }
+    }
+
+    /// The shared pool backing `tier`; `None` for the (per-shard) gpu tier.
+    pub fn pool(&self, tier: Tier) -> Option<&MemPool> {
+        match tier {
+            Tier::GpuHbm => None,
+            Tier::Pinned => Some(&self.pinned),
+            Tier::CpuDram => Some(&self.dram),
+            Tier::DiskNvme => Some(&self.disk),
+        }
+    }
+}
+
+impl std::fmt::Debug for SharedHostTiers {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SharedHostTiers")
+            .field("pinned_used", &self.pinned.used())
+            .field("dram_used", &self.dram.used())
+            .field("disk_used", &self.disk.used())
+            .finish()
+    }
+}
+
 /// Owns the four tier pools, the two migration links, and pinned staging.
 pub struct TierManager {
     gpu: BlockPool,
@@ -65,6 +108,26 @@ impl TierManager {
             link: Link::new(link),
             nvme: Link::new(nvme),
             staging: PinnedPool::with_accounting(pinned_mem),
+        }
+    }
+
+    /// A shard-local manager over **shared host tiers**: the gpu pool is
+    /// private to this shard, while pinned/dram/disk block reservations —
+    /// and pinned staging — charge the shared [`SharedHostTiers`] pools.
+    pub fn with_shared_host(
+        gpu_bytes: u64,
+        shared: &SharedHostTiers,
+        link: LinkConfig,
+        nvme: LinkConfig,
+    ) -> Self {
+        TierManager {
+            gpu: BlockPool::new(Tier::GpuHbm, gpu_bytes),
+            pinned: BlockPool::from_pool(Tier::Pinned, shared.pinned.clone()),
+            dram: BlockPool::from_pool(Tier::CpuDram, shared.dram.clone()),
+            disk: BlockPool::from_pool(Tier::DiskNvme, shared.disk.clone()),
+            link: Link::new(link),
+            nvme: Link::new(nvme),
+            staging: PinnedPool::with_accounting(shared.pinned.clone()),
         }
     }
 
@@ -157,6 +220,32 @@ mod tests {
         assert!(std::ptr::eq(m.link_for(Tier::DiskNvme, Tier::CpuDram), m.nvme()));
         assert!(std::ptr::eq(m.link_for(Tier::CpuDram, Tier::GpuHbm), m.link()));
         assert!(std::ptr::eq(m.link_for(Tier::GpuHbm, Tier::Pinned), m.link()));
+    }
+
+    #[test]
+    fn shared_host_tiers_account_across_managers() {
+        let shared = SharedHostTiers::new(1 << 20, 4 << 20, 16 << 20);
+        let a = TierManager::with_shared_host(
+            1 << 20,
+            &shared,
+            LinkConfig::unthrottled(),
+            LinkConfig::unthrottled(),
+        );
+        let b = TierManager::with_shared_host(
+            1 << 20,
+            &shared,
+            LinkConfig::unthrottled(),
+            LinkConfig::unthrottled(),
+        );
+        // a host-tier grab in shard A is visible to shard B's pool...
+        let g = a.grab(Tier::CpuDram, 4096).unwrap();
+        assert_eq!(b.pool(Tier::CpuDram).used(), 4096, "dram budget is shared");
+        assert_eq!(shared.pool(Tier::CpuDram).unwrap().used(), 4096);
+        // ...but gpu tiers stay private to each shard
+        let _h = a.grab(Tier::GpuHbm, 4096).unwrap();
+        assert_eq!(b.pool(Tier::GpuHbm).used(), 0, "gpu budget is per-shard");
+        drop(g);
+        assert_eq!(b.pool(Tier::CpuDram).used(), 0);
     }
 
     #[test]

@@ -205,9 +205,19 @@ impl MigrationEngine {
         nvme: LinkConfig,
         wire_elem_bytes: f64,
     ) -> Self {
+        Self::with_manager(
+            TierManager::new(gpu_bytes, pinned_bytes, dram_bytes, disk_bytes, link, nvme),
+            wire_elem_bytes,
+        )
+    }
+
+    /// An engine over a caller-built [`TierManager`] — the seam sharded
+    /// workers use: each shard's manager holds a private gpu pool over
+    /// [`SharedHostTiers`](super::SharedHostTiers)-backed host pools.
+    pub fn with_manager(mgr: TierManager, wire_elem_bytes: f64) -> Self {
         assert!(wire_elem_bytes > 0.0, "wire_elem_bytes must be positive");
         MigrationEngine {
-            mgr: TierManager::new(gpu_bytes, pinned_bytes, dram_bytes, disk_bytes, link, nvme),
+            mgr,
             queued: VecDeque::new(),
             inflight: Vec::new(),
             draining: Vec::new(),

@@ -85,7 +85,7 @@ pub mod store;
 mod suffix;
 
 pub use block::{BlockId, BlockPool, Tier};
-pub use manager::{TierManager, TierStats};
+pub use manager::{SharedHostTiers, TierManager, TierStats};
 pub use migrate::{MigrationClass, MigrationEngine, MigrationId, MigrationStats};
 pub use policy::{BlockView, EvictKind, EvictPolicy, Lru, RecomputeAware};
 pub use prefetch::{PrefetchStats, Prefetcher};

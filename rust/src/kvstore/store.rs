@@ -58,7 +58,7 @@ use crate::scheduler::TierTopology;
 use crate::transfer::LinkConfig;
 
 use super::block::{BlockId, Tier};
-use super::manager::TierStats;
+use super::manager::{SharedHostTiers, TierManager, TierStats};
 use super::migrate::{MigrationClass, MigrationEngine, MigrationStats};
 use super::policy::{BlockView, EvictPolicy};
 use super::suffix::{BlockClass, BlockState, PendingRef, SuffixRuns};
@@ -107,6 +107,12 @@ pub struct KvStoreConfig {
     /// Spills issued per serving step at most (bounds the queue the
     /// leftover budget has to drain).
     pub spill_max_per_step: usize,
+    /// Shard-shared host tiers: when set, pinned/dram/disk reservations
+    /// draw from these `Arc`-shared pools instead of private ones (the
+    /// `pinned_bytes`/`dram_bytes`/`disk_bytes` fields are ignored — the
+    /// shared pools carry the capacities), so N worker shards compete for
+    /// one host budget.  `None` keeps the single-worker private layout.
+    pub shared_host: Option<SharedHostTiers>,
 }
 
 impl KvStoreConfig {
@@ -127,6 +133,7 @@ impl KvStoreConfig {
             spill_floor: 0.0,
             spill_watermark: 0.9,
             spill_max_per_step: 2,
+            shared_host: None,
         }
     }
 
@@ -151,8 +158,12 @@ impl KvStoreConfig {
             .filter(|t| t.up.is_resolved())
             .map(|t| t.up.to_link_config(chunk_bytes))
             .unwrap_or_else(LinkConfig::unthrottled);
+        // whatever rung sits below the base — an NVMe disk or a sharded
+        // worker's remote hop — maps onto the store's deep-tier slot, its
+        // declared wire becoming the "nvme" link (same surcharge seam the
+        // planner's hop_factor prices)
         let nvme_link = topo
-            .tier_named(Tier::DiskNvme.name())
+            .deep_tier()
             .map(|i| topo.tier(i).up.to_link_config(chunk_bytes))
             .unwrap_or_else(|| LinkConfig::nvme_below(&link));
         let spill_watermark = topo
@@ -162,7 +173,7 @@ impl KvStoreConfig {
             gpu_bytes: cap(Tier::GpuHbm.name()),
             pinned_bytes: cap(Tier::Pinned.name()),
             dram_bytes: cap(Tier::CpuDram.name()),
-            disk_bytes: cap(Tier::DiskNvme.name()),
+            disk_bytes: topo.deep_tier().map_or(0, |i| topo.tier(i).capacity_bytes),
             link,
             nvme_link,
             wire_elem_bytes: topo.wire_elem_bytes(),
@@ -222,6 +233,10 @@ pub struct StoreStats {
     /// Blocks parked on the disk tier directly at admission (no KV moved —
     /// a brand-new block is reservation only).
     pub disk_admissions: u64,
+    /// Prefix blocks parked on the deep tier by
+    /// [`KvStore::park_prefix_deep`] — a migrated session's KV sitting
+    /// behind the shard's remote hop (or policy-placed on disk).
+    pub remote_parks: u64,
     /// Stranded resident blocks reclaimed by the per-step sweep: settled
     /// gpu blocks left *below* a non-resident block (the sequence grew but
     /// a full gpu tier kept its new top block cold), where the eviction
@@ -254,16 +269,23 @@ pub struct KvStore {
 impl KvStore {
     pub fn new(cfg: KvStoreConfig, policy: Box<dyn EvictPolicy>) -> Self {
         assert!(cfg.block_tokens > 0, "block_tokens must be positive");
-        KvStore {
-            mig: MigrationEngine::new(
+        let mgr = match &cfg.shared_host {
+            // a shard: private gpu pool, host reservations charge the
+            // shared cross-shard pools
+            Some(shared) => {
+                TierManager::with_shared_host(cfg.gpu_bytes, shared, cfg.link, cfg.nvme_link)
+            }
+            None => TierManager::new(
                 cfg.gpu_bytes,
                 cfg.pinned_bytes,
                 cfg.dram_bytes,
                 cfg.disk_bytes,
                 cfg.link,
                 cfg.nvme_link,
-                cfg.wire_elem_bytes,
             ),
+        };
+        KvStore {
+            mig: MigrationEngine::with_manager(mgr, cfg.wire_elem_bytes),
             policy,
             seqs: BTreeMap::new(),
             block_tokens: cfg.block_tokens,
@@ -405,6 +427,44 @@ impl KvStore {
         );
         self.stats.admitted += 1;
         Ok(())
+    }
+
+    /// Park the first `tokens` worth of `seq`'s prefix blocks on the deep
+    /// tier (disk, or a sharded worker's remote hop — whichever rung the
+    /// topology declared below the base).  This is how cross-shard session
+    /// migration is priced: the migrated session's prefix KV lives in host
+    /// tiers the new shard reaches only over its remote wire, so the
+    /// stealing shard admits the sequence and parks that prefix deep —
+    /// pure reservation accounting now (the freshly-admitted blocks hold
+    /// no KV), but once decode validates them they count into
+    /// [`KvStore::disk_resident_tokens`], the planner's hop-surcharge
+    /// term, and reload through the ordinary two-hop promotion path over
+    /// the declared remote link.  The walk stops at the first block it
+    /// must not move (gpu-resident, migrating, or dropped).  Returns
+    /// blocks parked (blocks already deep count as parked).
+    pub fn park_prefix_deep(&mut self, seq: u64, tokens: usize) -> usize {
+        let want = tokens / self.block_tokens;
+        let Some(block_bytes) = self.seqs.get(&seq).map(|e| e.block_bytes) else { return 0 };
+        let mut parked = 0;
+        for idx in 0..want {
+            let Some(b) = self.seqs.get(&seq).and_then(|e| e.blocks.get(idx)) else { break };
+            if b.tier == Tier::DiskNvme && b.pending.is_none() {
+                parked += 1;
+                continue;
+            }
+            if b.tier == Tier::GpuHbm || b.pending.is_some() || b.guard.is_none() || b.kv_dropped
+            {
+                break;
+            }
+            let Some(guard) = self.mig.tiers().grab(Tier::DiskNvme, block_bytes) else { break };
+            let e = self.seqs.get_mut(&seq).expect("seq checked above");
+            let b = &mut e.blocks[idx];
+            b.guard = Some(guard); // host-tier reservation released
+            b.tier = Tier::DiskNvme;
+            self.stats.remote_parks += 1;
+            parked += 1;
+        }
+        parked
     }
 
     /// Retire a sequence, releasing every reservation — without blocking:
@@ -1081,6 +1141,7 @@ mod tests {
             spill_floor: 0.0,
             spill_watermark: 0.0, // proactive spill off unless opted in
             spill_max_per_step: 2,
+            shared_host: None,
         };
         tweak(&mut cfg);
         KvStore::new(cfg, Box::new(Lru))
@@ -1099,6 +1160,32 @@ mod tests {
             std::thread::sleep(std::time::Duration::from_millis(1));
         }
         total
+    }
+
+    #[test]
+    fn park_prefix_deep_moves_fresh_host_blocks_to_the_deep_tier() {
+        let mut s = store_cfg(2, 2, 4, |c| c.disk_bytes = 8 * BB);
+        s.admit(1, 4 * BB, 4).unwrap();
+        // park the first two blocks' worth of tokens (block_tokens = 16)
+        assert_eq!(s.park_prefix_deep(1, 32), 2);
+        assert_eq!(s.tier_used(Tier::DiskNvme), 2 * BB);
+        assert_eq!(s.stats().remote_parks, 2);
+        // idempotent: already-deep blocks count without re-reserving
+        assert_eq!(s.park_prefix_deep(1, 32), 2);
+        assert_eq!(s.tier_used(Tier::DiskNvme), 2 * BB);
+        assert_eq!(s.stats().remote_parks, 2);
+        // once decode validates them, the parked prefix is the planner's
+        // deep (hop-surcharged) term
+        s.touch(1, 64, 0);
+        assert_eq!(s.disk_resident_tokens(1), 32);
+    }
+
+    #[test]
+    fn park_prefix_deep_stops_at_zero_capacity_deep_tier() {
+        let mut s = store(2, 2, 4); // disk_bytes = 0
+        s.admit(1, 2 * BB, 2).unwrap();
+        assert_eq!(s.park_prefix_deep(1, 32), 0, "no deep capacity, nothing moves");
+        assert_eq!(s.tier_used(Tier::DiskNvme), 0);
     }
 
     #[test]

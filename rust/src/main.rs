@@ -14,7 +14,7 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use kvpr::config::{HardwareConfig, ModelConfig, WorkloadConfig};
-use kvpr::coordinator::{Batcher, Server, ServerConfig};
+use kvpr::coordinator::{Batcher, Server, ServerConfig, Submit};
 use kvpr::engine::{Engine, EngineConfig, EnginePolicy};
 use kvpr::model::ByteTokenizer;
 use kvpr::profiler::SystemProfile;
@@ -134,7 +134,10 @@ fn run() -> Result<()> {
                 "overlap compute and transfer",
             ];
             let handles: Vec<_> = (0..n_req)
-                .map(|i| server.submit(prompts[i % prompts.len()], gen_len))
+                .map(|i| {
+                    let p = prompts[i % prompts.len()];
+                    server.dispatch((p, gen_len)).pop().unwrap()
+                })
                 .collect();
             for (i, h) in handles.into_iter().enumerate() {
                 let r = h.wait()?;

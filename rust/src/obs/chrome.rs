@@ -43,6 +43,38 @@ fn phase_tid(phase: &Phase) -> usize {
 /// [`Tracer::events`](crate::obs::Tracer::events)) into a Chrome
 /// `trace_event` JSON document.
 pub fn chrome_trace(events: &[Event]) -> Json {
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(convert(events, 1))),
+        ("displayTimeUnit", "ms".into()),
+    ])
+}
+
+/// Merge several serving loops' event streams — one per worker shard —
+/// into a single Chrome trace document, each shard on its own *process*
+/// track (`pid` = shard index + 1, named `shard-<i>` via `process_name`
+/// metadata), so Perfetto renders the shards' step spans side by side.
+/// The single-loop [`chrome_trace`] is the `pid` 1 special case.
+pub fn chrome_trace_sharded(shards: &[Vec<Event>]) -> Json {
+    let mut out: Vec<Json> = Vec::with_capacity(shards.iter().map(Vec::len).sum::<usize>() + shards.len());
+    for (i, events) in shards.iter().enumerate() {
+        let pid = i + 1;
+        let name = format!("shard-{i}");
+        out.push(Json::obj(vec![
+            ("ph", "M".into()),
+            ("name", "process_name".into()),
+            ("pid", Json::from(pid)),
+            ("tid", Json::from(0usize)),
+            ("args", Json::obj(vec![("name", name.as_str().into())])),
+        ]));
+        out.extend(convert(events, pid));
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(out)),
+        ("displayTimeUnit", "ms".into()),
+    ])
+}
+
+fn convert(events: &[Event], pid: usize) -> Vec<Json> {
     let mut out: Vec<Json> = Vec::with_capacity(events.len());
     let (mut cur_step, mut ordinal) = (u64::MAX, 0u64);
     for ev in events {
@@ -172,12 +204,16 @@ pub fn chrome_trace(events: &[Event]) -> Json {
             }
         };
         kv.push(("seq", Json::from(ev.seq as f64)));
+        if pid != 1 {
+            for slot in kv.iter_mut() {
+                if slot.0 == "pid" {
+                    slot.1 = Json::from(pid);
+                }
+            }
+        }
         out.push(Json::obj(kv));
     }
-    Json::obj(vec![
-        ("traceEvents", Json::Arr(out)),
-        ("displayTimeUnit", "ms".into()),
-    ])
+    out
 }
 
 #[cfg(test)]
@@ -302,5 +338,42 @@ mod tests {
         let b = chrome_trace(&sample()).to_string();
         assert_eq!(a, b);
         assert!(Json::parse(&a).is_ok());
+    }
+
+    #[test]
+    fn sharded_export_gives_each_shard_its_own_named_process_track() {
+        let shard0 = sample();
+        let shard1 = vec![ev(0, 0, EventKind::ReqArrive { id: 9 })];
+        let doc = chrome_trace_sharded(&[shard0.clone(), shard1]);
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        // one process_name metadata event per shard, pids 1 and 2
+        let meta: Vec<&Json> = evs
+            .iter()
+            .filter(|e| e.at(&["ph"]).as_str() == Some("M"))
+            .collect();
+        assert_eq!(meta.len(), 2);
+        assert_eq!(meta[0].at(&["pid"]).as_f64(), Some(1.0));
+        assert_eq!(meta[0].at(&["args", "name"]).as_str(), Some("shard-0"));
+        assert_eq!(meta[1].at(&["pid"]).as_f64(), Some(2.0));
+        assert_eq!(meta[1].at(&["args", "name"]).as_str(), Some("shard-1"));
+        // every non-metadata event carries its shard's pid
+        let pids: Vec<f64> = evs
+            .iter()
+            .filter(|e| e.at(&["ph"]).as_str() != Some("M"))
+            .map(|e| e.at(&["pid"]).as_f64().unwrap())
+            .collect();
+        assert_eq!(pids.len(), shard0.len() + 1);
+        assert!(pids[..shard0.len()].iter().all(|&p| p == 1.0));
+        assert_eq!(pids[shard0.len()], 2.0);
+        // shard 0 alone renders byte-identically to the single-loop export
+        // (modulo the wrapping metadata event)
+        let single = chrome_trace(&shard0);
+        let one = chrome_trace_sharded(&[shard0]);
+        let single_evs = single.get("traceEvents").unwrap().as_arr().unwrap();
+        let one_evs = one.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(one_evs.len(), single_evs.len() + 1);
+        for (a, b) in single_evs.iter().zip(one_evs.iter().skip(1)) {
+            assert_eq!(a.to_string(), b.to_string());
+        }
     }
 }

@@ -36,7 +36,10 @@
 //! * [`chrome_trace`] — Chrome `trace_event` export (Perfetto /
 //!   `chrome://tracing`), plus [`PlanVsActual::summary_table`] for the
 //!   text view.  `examples/trace_dump.rs` and `examples/workload_slo.rs`
-//!   wire both to files.
+//!   wire both to files.  [`chrome_trace_sharded`] merges several serving
+//!   loops — the [`Router`](crate::coordinator::Router)'s worker shards —
+//!   into one document, each shard on its own named process track
+//!   (`examples/shard_trace.rs`).
 //!
 //! # Tracer API
 //!
@@ -62,7 +65,7 @@ mod ledger;
 mod recorder;
 mod tracer;
 
-pub use chrome::chrome_trace;
+pub use chrome::{chrome_trace, chrome_trace_sharded};
 pub use event::{Event, EventKind, MigPhase, Phase};
 pub use ledger::{PlanVsActual, StepRecord};
 pub use recorder::{AnomalyConfig, FlightDump};

@@ -194,6 +194,33 @@ impl TierTopology {
         self
     }
 
+    /// Append a **remote** rung below the chain: a sharded worker's hop to
+    /// host tiers it does not own, declared with the interconnect the shard
+    /// actually crosses (NVLink bridge, PCIe switch, RDMA fabric, ...).
+    /// Structurally this is [`TierTopology::with_disk`] with a declared
+    /// wire instead of an NVMe-shaped derivation — the planner prices the
+    /// extra hop through the same [`TierTopology::hop_factor`] fold, so a
+    /// remote worker is a data change, not a planner fork.
+    ///
+    /// ```
+    /// use kvpr::scheduler::{LinkSpec, TierTopology};
+    /// let remote = LinkSpec { bytes_per_sec: 50e6, latency_s: 50e-6 };
+    /// let topo = TierTopology::standard(2 << 20, 64 << 20, 256 << 20)
+    ///     .with_remote_hop(1 << 30, remote)
+    ///     .calibrated_bps(100e6, 30e-6);
+    /// let rung = topo.deep_tier().unwrap();
+    /// assert_eq!(topo.tier(rung).name, "remote");
+    /// assert!((topo.hop_factor(rung) - 2.0).abs() < 1e-9, "100e6 / 50e6");
+    /// ```
+    pub fn with_remote_hop(mut self, capacity_bytes: u64, link: LinkSpec) -> Self {
+        let width = self.tiers.last().map_or(4.0, |t| t.wire_elem_bytes);
+        let mut remote = TierSpec::new("remote", capacity_bytes);
+        remote.up = link;
+        remote.wire_elem_bytes = width;
+        self.tiers.push(remote);
+        self
+    }
+
     /// Set every rung's migration wire width (4.0 plain f32, 0.625 under
     /// int4 wire quantization).
     pub fn with_wire_elem_bytes(mut self, wire_elem_bytes: f64) -> Self {
@@ -264,6 +291,13 @@ impl TierTopology {
     /// Index of the tier called `name`, if the chain has one.
     pub fn tier_named(&self, name: &str) -> Option<usize> {
         self.tiers.iter().position(|t| t.name == name)
+    }
+
+    /// Index of the chain's deepest below-base rung — the tier whose
+    /// fetches pay a hop surcharge (an NVMe disk, a sharded worker's
+    /// remote hop, ...) — or `None` when the chain ends at the base.
+    pub fn deep_tier(&self) -> Option<usize> {
+        (self.tiers.len() > self.base + 1).then(|| self.tiers.len() - 1)
     }
 
     /// The wire element width migrations across the device boundary charge
@@ -423,6 +457,30 @@ mod tests {
         assert_eq!(topo.slack_bytes(-1.0), 0);
         assert_eq!(topo.slack_bytes(f64::NAN), 0);
         assert_eq!(topo.slack_bytes(0.01), 1_000_000);
+    }
+
+    #[test]
+    fn remote_hop_is_a_declared_below_base_rung() {
+        let remote = LinkSpec { bytes_per_sec: 20e6, latency_s: 80e-6 };
+        let topo = TierTopology::standard(0, 1 << 20, 4 << 20)
+            .with_remote_hop(1 << 30, remote)
+            .calibrated(&pcie());
+        let rung = topo.deep_tier().expect("remote rung below the base");
+        assert_eq!(rung, 3);
+        assert_eq!(topo.tier(rung).name, "remote");
+        assert_eq!(topo.tier(rung).up, remote, "declared shard wire survives calibration");
+        // the planner surcharge is the declared bandwidth gap: 100e6/20e6
+        assert!((topo.hop_factor(rung) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deep_tier_names_the_deepest_below_base_rung() {
+        assert_eq!(TierTopology::standard(0, 1, 2).deep_tier(), None, "chain ends at the base");
+        let disk = TierTopology::standard(0, 1, 2).with_disk(3, 0.9);
+        assert_eq!(disk.deep_tier(), disk.tier_named("disk-nvme"));
+        let remote = TierTopology::standard(0, 1, 2)
+            .with_remote_hop(3, LinkSpec { bytes_per_sec: 1e6, latency_s: 0.0 });
+        assert_eq!(remote.deep_tier(), remote.tier_named("remote"));
     }
 
     #[test]

@@ -17,8 +17,8 @@ use std::time::Duration;
 
 use kvpr::config::{HardwareConfig, ModelConfig, Objective, WorkloadConfig};
 use kvpr::coordinator::{
-    Batcher, ContinuousConfig, ContinuousServer, DiskTotals, Router, Server, ServerConfig,
-    TieredKvConfig,
+    Batcher, ContinuousConfig, ContinuousServer, DiskTotals, Request, Router, RouterConfig, Server,
+    ServerConfig, Submit, TieredKvConfig,
 };
 use kvpr::engine::{EngineConfig, EnginePolicy};
 use kvpr::scheduler::TierTopology;
@@ -76,7 +76,7 @@ fn drive(cfg: ContinuousConfig, n: usize, gen_len: usize) -> (Vec<Vec<i32>>, f64
     let t0 = std::time::Instant::now();
     let handles: Vec<_> = prompts(n)
         .iter()
-        .map(|p| server.submit(p, gen_len))
+        .map(|p| server.dispatch((p.as_str(), gen_len)).pop().unwrap())
         .collect();
     let mut tokens = Vec::with_capacity(n);
     for h in handles {
@@ -168,7 +168,10 @@ fn continuous_loop_counts_steps_and_occupancy() {
     const N: usize = 8;
     const GEN: usize = 4;
     let server = ContinuousServer::start(continuous_cfg(N, 2)).unwrap();
-    let handles: Vec<_> = prompts(N).iter().map(|p| server.submit(p, GEN)).collect();
+    let handles: Vec<_> = prompts(N)
+        .iter()
+        .map(|p| server.dispatch((p.as_str(), GEN)).pop().unwrap())
+        .collect();
     for h in handles {
         h.wait().unwrap();
     }
@@ -195,8 +198,8 @@ fn continuous_loop_retires_members_independently() {
     // the short one must retire (and be answered) with exactly its budget,
     // while the long one keeps decoding
     let server = ContinuousServer::start(continuous_cfg(2, 1)).unwrap();
-    let h_short = server.submit("short request", 3);
-    let h_long = server.submit("long request please", 9);
+    let h_short = server.dispatch(("short request", 3)).pop().unwrap();
+    let h_long = server.dispatch(("long request please", 9)).pop().unwrap();
     let r_short = h_short.wait().unwrap();
     let r_long = h_long.wait().unwrap();
     assert_eq!(r_short.tokens.len(), 3);
@@ -218,7 +221,10 @@ fn kv_budget_backpressure_serialises_admission() {
     cfg.kv_budget_bytes = 2 << 20;
     cfg.admit_wait = Duration::from_millis(1);
     let server = ContinuousServer::start(cfg).unwrap();
-    let handles: Vec<_> = prompts(3).iter().map(|p| server.submit(p, 3)).collect();
+    let handles: Vec<_> = prompts(3)
+        .iter()
+        .map(|p| server.dispatch((p.as_str(), 3)).pop().unwrap())
+        .collect();
     for h in handles {
         let r = h.wait().unwrap();
         assert_eq!(r.tokens.len(), 3);
@@ -261,7 +267,10 @@ fn tiered_kvstore_admits_more_than_hard_backpressure() {
 
     // PR 1 baseline: the budget serialises admission
     let server = ContinuousServer::start(mk(false)).unwrap();
-    let handles: Vec<_> = prompts(N).iter().map(|p| server.submit(p, GEN)).collect();
+    let handles: Vec<_> = prompts(N)
+        .iter()
+        .map(|p| server.dispatch((p.as_str(), GEN)).pop().unwrap())
+        .collect();
     let mut base_tokens = Vec::new();
     for h in handles {
         base_tokens.push(h.wait().unwrap().tokens);
@@ -274,7 +283,10 @@ fn tiered_kvstore_admits_more_than_hard_backpressure() {
     // tiered: same gpu-hbm budget, admission against pinned+dram capacity,
     // async prefetch + device-resident suffix active
     let server = ContinuousServer::start(mk(true)).unwrap();
-    let handles: Vec<_> = prompts(N).iter().map(|p| server.submit(p, GEN)).collect();
+    let handles: Vec<_> = prompts(N)
+        .iter()
+        .map(|p| server.dispatch((p.as_str(), GEN)).pop().unwrap())
+        .collect();
     let mut tiered_tokens = Vec::new();
     for h in handles {
         tiered_tokens.push(h.wait().unwrap().tokens);
@@ -329,7 +341,10 @@ fn async_demotions_drain_a_full_gpu_tier_across_steps() {
     let (base_tokens, _) = drive(mk(false), N, GEN);
 
     let server = ContinuousServer::start(mk(true)).unwrap();
-    let handles: Vec<_> = prompts(N).iter().map(|p| server.submit(p, GEN)).collect();
+    let handles: Vec<_> = prompts(N)
+        .iter()
+        .map(|p| server.dispatch((p.as_str(), GEN)).pop().unwrap())
+        .collect();
     let mut tiered_tokens = Vec::new();
     for h in handles {
         tiered_tokens.push(h.wait().unwrap().tokens);
@@ -405,7 +420,7 @@ fn disk_spill_admits_more_sequences_and_never_blocks_the_step_loop() {
     };
     let run = |cfg: ContinuousConfig| {
         let server = ContinuousServer::start(cfg).unwrap();
-        let long = server.submit("the long running sequence", GEN_LONG);
+        let long = server.dispatch(("the long running sequence", GEN_LONG)).pop().unwrap();
         // wave 2 arrives once the long group's prefix blocks are mature
         // (kv ≥ 32 tokens ⇒ a fully-valid dram block exists)
         for _ in 0..2000 {
@@ -416,7 +431,7 @@ fn disk_spill_admits_more_sequences_and_never_blocks_the_step_loop() {
         }
         let wave: Vec<_> = ["wave two b", "wave two c", "wave two d"]
             .iter()
-            .map(|p| server.submit(p, GEN_SHORT))
+            .map(|p| server.dispatch((*p, GEN_SHORT)).pop().unwrap())
             .collect();
         let mut tokens = vec![long.wait().unwrap().tokens];
         for h in wave {
@@ -497,7 +512,10 @@ fn adaptive_step_budget_tracks_planner_slack() {
     };
     let run = |cfg: ContinuousConfig| {
         let server = ContinuousServer::start(cfg).unwrap();
-        let handles: Vec<_> = prompts(N).iter().map(|p| server.submit(p, GEN)).collect();
+        let handles: Vec<_> = prompts(N)
+            .iter()
+            .map(|p| server.dispatch((p.as_str(), GEN)).pop().unwrap())
+            .collect();
         let mut tokens = Vec::new();
         for h in handles {
             tokens.push(h.wait().unwrap().tokens);
@@ -564,7 +582,7 @@ fn batch_server_serves_batched_requests() {
     let _g = lock();
     let server = Server::start(scfg()).unwrap();
     let handles: Vec<_> = (0..4)
-        .map(|i| server.submit(&format!("request number {i}"), 6))
+        .map(|i| server.dispatch((format!("request number {i}"), 6)).pop().unwrap())
         .collect();
     for h in handles {
         let r = h.wait().unwrap();
@@ -583,15 +601,18 @@ fn same_prompt_same_tokens_across_serving_modes() {
     // batch server and continuous server must decode identically: the
     // serving loop moves bytes and schedules, never the math
     let server = Server::start(scfg()).unwrap();
-    let a = server.submit("determinism", 6).wait().unwrap();
-    let b = server.submit("determinism", 6).wait().unwrap();
+    let ha = server.dispatch(("determinism", 6)).pop().unwrap();
+    let a = ha.wait().unwrap();
+    let hb = server.dispatch(("determinism", 6)).pop().unwrap();
+    let b = hb.wait().unwrap();
     assert_eq!(a.tokens, b.tokens, "same prompt must decode identically");
     server.shutdown().unwrap();
 
     let mut ccfg = continuous_cfg(1, 1);
     ccfg.engine = scfg().engine;
     let cont = ContinuousServer::start(ccfg).unwrap();
-    let c = cont.submit("determinism", 6).wait().unwrap();
+    let hc = cont.dispatch(("determinism", 6)).pop().unwrap();
+    let c = hc.wait().unwrap();
     assert_eq!(a.tokens, c.tokens, "continuous loop diverged from batch server");
     cont.shutdown().unwrap();
 }
@@ -604,8 +625,8 @@ fn batch_server_truncates_to_requested_gen_len() {
     let server = Server::start(cfg).unwrap();
     // two requests with different gen lengths share a batch; the shorter
     // one is truncated on return
-    let h1 = server.submit("short one", 3);
-    let h2 = server.submit("long one", 8);
+    let h1 = server.dispatch(("short one", 3)).pop().unwrap();
+    let h2 = server.dispatch(("long one", 8)).pop().unwrap();
     let r1 = h1.wait().unwrap();
     let r2 = h2.wait().unwrap();
     assert_eq!(r1.tokens.len(), 3);
@@ -614,18 +635,47 @@ fn batch_server_truncates_to_requested_gen_len() {
 }
 
 #[test]
-fn router_round_robins_two_workers() {
+fn sharded_router_serves_across_two_shards() {
     let _g = lock();
-    let cfg = scfg();
-    let router = Router::start(&cfg, 2).unwrap();
-    assert_eq!(router.n_servers(), 2);
-    let handles: Vec<_> = (0..4).map(|i| router.submit(&format!("r{i}"), 4)).collect();
+    // the sharded Router spreads fresh sessions by outstanding load; four
+    // distinct prompts submitted back-to-back must touch both shards
+    let mut base = continuous_cfg(2, 2);
+    base.admit_wait = Duration::from_millis(5);
+    let router = Router::start(RouterConfig::new(2, base)).unwrap();
+    assert_eq!(router.n_shards(), 2);
+    let handles: Vec<_> = (0..4)
+        .map(|i| router.dispatch((format!("r{i}"), 4)).pop().unwrap())
+        .collect();
     for h in handles {
-        h.wait().unwrap();
+        let r = h.wait().unwrap();
+        assert_eq!(r.tokens.len(), 4);
     }
+    let t = router.totals();
+    assert_eq!(t.submitted, 4);
+    assert_eq!(t.fresh + t.affinity_hits + t.steals, 4);
     assert_eq!(router.total_requests(), 4);
-    // both workers must have seen traffic
-    assert!(router.server(0).metrics().requests() > 0);
-    assert!(router.server(1).metrics().requests() > 0);
+    // both shards must have seen traffic
+    assert!(router.shard(0).metrics().requests() > 0);
+    assert!(router.shard(1).metrics().requests() > 0);
     router.shutdown().unwrap();
+}
+
+#[test]
+fn deprecated_submit_shims_match_dispatch() {
+    let _g = lock();
+    // satellite: the old submit surface survives one PR as shims over
+    // `Submit::dispatch` — pin that every shim routes through the same path
+    let server = ContinuousServer::start(continuous_cfg(2, 1)).unwrap();
+    let via_dispatch = server.dispatch(("shim equivalence", 5)).pop().unwrap();
+    let via_dispatch = via_dispatch.wait().unwrap();
+    #[allow(deprecated)]
+    let via_submit = server.submit("shim equivalence", 5).wait().unwrap();
+    #[allow(deprecated)]
+    let via_request = server
+        .submit_request(Request::new(9001, "shim equivalence", 5))
+        .wait()
+        .unwrap();
+    assert_eq!(via_submit.tokens, via_dispatch.tokens, "submit shim diverged");
+    assert_eq!(via_request.tokens, via_dispatch.tokens, "submit_request shim diverged");
+    server.shutdown().unwrap();
 }

@@ -19,7 +19,7 @@ use std::collections::HashMap;
 use std::sync::Mutex;
 use std::time::Duration;
 
-use kvpr::coordinator::{ContinuousConfig, ContinuousServer, TieredKvConfig};
+use kvpr::coordinator::{ContinuousConfig, ContinuousServer, Submit, TieredKvConfig};
 use kvpr::engine::{EngineConfig, EnginePolicy};
 use kvpr::obs::{chrome_trace, Event, EventKind, MigPhase, Phase, Tracer, TracerConfig};
 use kvpr::scheduler::TierTopology;
@@ -89,7 +89,7 @@ fn tiered_cfg() -> ContinuousConfig {
 
 fn run(cfg: ContinuousConfig, trace: &Trace) -> (Vec<Vec<i32>>, Tracer) {
     let server = ContinuousServer::start(cfg).unwrap();
-    let handles = server.submit_trace(trace);
+    let handles = server.dispatch(trace);
     let mut tokens = Vec::with_capacity(trace.requests.len());
     for (h, r) in handles.into_iter().zip(&trace.requests) {
         let resp = h.wait().unwrap();

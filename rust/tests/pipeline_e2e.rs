@@ -21,7 +21,7 @@ use std::sync::Mutex;
 use std::time::Duration;
 
 use kvpr::coordinator::{
-    ContinuousConfig, ContinuousServer, PipelineMode, PipelineTotals, TieredKvConfig,
+    ContinuousConfig, ContinuousServer, PipelineMode, PipelineTotals, Submit, TieredKvConfig,
 };
 use kvpr::engine::{EngineConfig, EnginePolicy};
 use kvpr::scheduler::TierTopology;
@@ -99,7 +99,7 @@ struct Run {
 fn run(mut cfg: ContinuousConfig, mode: PipelineMode, trace: &Trace) -> Run {
     cfg.pipeline = mode;
     let server = ContinuousServer::start(cfg).unwrap();
-    let handles = server.submit_trace(trace);
+    let handles = server.dispatch(trace);
     let mut tokens = Vec::with_capacity(trace.requests.len());
     for (h, r) in handles.into_iter().zip(&trace.requests) {
         let resp = h.wait().unwrap();

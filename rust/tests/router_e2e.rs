@@ -1,0 +1,147 @@
+//! Multi-worker e2e: the sharded [`Router`] front-end over N
+//! continuous-batching worker shards.
+//!
+//! Two properties pin the tentpole claims:
+//!
+//! * **Placement invariance** — the engine's decode is a deterministic
+//!   function of (prompt, generation length), so the same workload trace
+//!   served by a 2-shard router must produce bit-identical tokens to a
+//!   1-shard run (interpreter runtime; compiled XLA may legally reorder
+//!   reductions per bucket, so the cross-shard comparison is pinned only
+//!   on the interpreter backend, like every other serving e2e).
+//! * **Work stealing is priced, not free** — when a session's affinity
+//!   shard saturates, placement steals it to a strictly less-loaded
+//!   shard, tags the request with its remote prefix, and the receiving
+//!   serve loop parks that prefix on the deep (remote) rung of its
+//!   topology chain, where the planner's hop surcharge applies.
+//!
+//! Like `coordinator_e2e.rs` these need **no artifacts**: without
+//! `artifacts/manifest.json` the engine runs the interpreter runtime.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use kvpr::coordinator::{ContinuousConfig, Router, RouterConfig, Submit, TieredKvConfig};
+use kvpr::engine::{EngineConfig, EnginePolicy};
+use kvpr::transfer::LinkConfig;
+use kvpr::workload::{Arrival, LenDist, SloTargets, Trace, TrafficClass, WorkloadSpec};
+
+/// Serialise the heavy tests: each spins up engine + link worker threads
+/// per shard.
+static HEAVY: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    HEAVY.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn interpreted() -> bool {
+    !std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json"))
+        .exists()
+}
+
+fn engine_cfg() -> EngineConfig {
+    let mut e = EngineConfig::new(EnginePolicy::Kvpr);
+    e.weights_offloaded = true;
+    e.link = LinkConfig::with_bandwidth(100e6);
+    e.seed = 42;
+    e
+}
+
+/// Per-shard serving config via the documented builder path; 16-token
+/// blocks against a 16-token prompt bucket so a stolen session's remote
+/// prefix covers exactly one parkable block.
+fn base_cfg() -> ContinuousConfig {
+    ContinuousConfig::builder("artifacts", engine_cfg())
+        .max_group(2)
+        .max_groups(2)
+        .prompt_bucket(16)
+        .admit_wait(Duration::from_millis(5))
+        .kv_budget_bytes(64 << 20)
+        .tiering(TieredKvConfig { block_tokens: 16, ..TieredKvConfig::default() })
+        .build()
+}
+
+/// Six requests in two bursts of three.
+fn spec() -> WorkloadSpec {
+    WorkloadSpec {
+        name: "router_e2e".into(),
+        seed: 11,
+        requests: 6,
+        arrivals: Arrival::Bursty { burst: 3, gap: 2 },
+        classes: vec![TrafficClass {
+            name: "chat".into(),
+            weight: 1.0,
+            prompt: LenDist::Fixed { steps: 16 },
+            gen: LenDist::Fixed { steps: 8 },
+            think: LenDist::Fixed { steps: 0 },
+        }],
+        slo: SloTargets { ttft_s: 30.0, tpot_s: 30.0 },
+    }
+}
+
+/// Serve the whole trace through an `shards`-wide router; returns each
+/// request's token stream in trace order.
+fn run_router(shards: usize, trace: &Trace) -> Vec<Vec<i32>> {
+    let router = Router::start(RouterConfig::new(shards, base_cfg())).unwrap();
+    assert_eq!(router.n_shards(), shards);
+    let handles = router.dispatch(trace);
+    let mut tokens = Vec::with_capacity(trace.requests.len());
+    for (h, r) in handles.into_iter().zip(&trace.requests) {
+        let resp = h.wait().unwrap();
+        assert_eq!(resp.tokens.len(), r.gen_tokens, "request {} length", r.id);
+        tokens.push(resp.tokens);
+    }
+    assert_eq!(router.total_requests(), trace.requests.len() as u64);
+    assert!(router.total_tokens() > 0);
+    router.shutdown().unwrap();
+    tokens
+}
+
+#[test]
+fn two_shard_router_serves_the_trace_bit_identical_to_one_shard() {
+    let _g = lock();
+    let trace = spec().generate();
+    let one = run_router(1, &trace);
+    let two = run_router(2, &trace);
+    if interpreted() {
+        assert_eq!(one, two, "sharded serving changed generated tokens");
+    }
+}
+
+#[test]
+fn saturated_shard_steals_the_session_and_parks_its_remote_prefix() {
+    let _g = lock();
+    let mut cfg = RouterConfig::new(2, base_cfg());
+    cfg.shard_capacity = 1;
+    let router = Router::start(cfg).unwrap();
+    // one session, submitted back-to-back: its affinity shard saturates at
+    // one outstanding request, so placement must shed it to the idle shard
+    let prompt = "the session that moves between shards";
+    let handles: Vec<_> = (0..6)
+        .map(|_| router.dispatch((prompt, 8)).pop().unwrap())
+        .collect();
+    let mut streams = Vec::new();
+    for h in handles {
+        streams.push(h.wait().unwrap().tokens);
+    }
+    let t = router.totals();
+    assert_eq!(t.submitted, 6);
+    assert_eq!(t.fresh + t.affinity_hits + t.steals, 6);
+    assert!(t.steals >= 1, "a saturated affinity shard must shed the session: {t:?}");
+    assert!(
+        t.remote_prefix_tokens > 0,
+        "stolen sessions must carry their remote-prefix tag: {t:?}"
+    );
+    // the receiving serve loop parked the migrated prefix on its deep
+    // (remote) rung — the planner's hop surcharge now prices the re-fetch
+    let parked: u64 = (0..router.n_shards())
+        .map(|i| router.shard(i).metrics().remote_parked_blocks())
+        .sum();
+    assert!(parked > 0, "the stolen prefix must be parked on the remote rung");
+    // placement moves sessions, never math: every replay of the same
+    // prompt decodes the same stream
+    for s in &streams[1..] {
+        assert_eq!(s, &streams[0], "a stolen session changed generated tokens");
+    }
+    router.shutdown().unwrap();
+}

@@ -1,6 +1,6 @@
 //! Trace-driven sim-vs-served validation: the same seeded workload trace
 //! replays through the continuous-batching server
-//! ([`ContinuousServer::submit_trace`]) and the analytic eviction sim
+//! ([`Submit::dispatch`]) and the analytic eviction sim
 //! ([`EvictionSimConfig::from_trace`]), and the two must agree on the
 //! KV traffic the trace implies — generated-token totals exactly, peak
 //! KV occupancy within **one request** (the stated tolerance: the sim
@@ -17,7 +17,7 @@
 use std::sync::Mutex;
 use std::time::Duration;
 
-use kvpr::coordinator::{ContinuousConfig, ContinuousServer, TieredKvConfig};
+use kvpr::coordinator::{ContinuousConfig, ContinuousServer, Submit, TieredKvConfig};
 use kvpr::engine::{EngineConfig, EnginePolicy};
 use kvpr::kvstore::{simulate_eviction, EvictionSimConfig, Lru, RecomputeAware};
 use kvpr::scheduler::{CostModel, TierTopology};
@@ -101,7 +101,7 @@ struct ServedRun {
 fn run_trace(cfg: ContinuousConfig, trace: &Trace, slo: SloTargets) -> ServedRun {
     let server = ContinuousServer::start(cfg).unwrap();
     server.metrics().set_slo(slo);
-    let handles = server.submit_trace(trace);
+    let handles = server.dispatch(trace);
     let mut tokens = Vec::with_capacity(trace.requests.len());
     for (h, r) in handles.into_iter().zip(&trace.requests) {
         let resp = h.wait().unwrap();
