@@ -1,0 +1,85 @@
+//! **Prefix-sharing trace**: replay the `shared_chat` workload mix — 80 %
+//! multi-turn assistant traffic over a class-wide system preamble, 20 %
+//! never-shared private traffic — through the continuous serving loop
+//! twice, once with cross-request prefix sharing enabled and once without.
+//! The sharing run adopts the registered preamble blocks at admission
+//! (`ShareTotals` hits, `share_hit` instants on the trace timeline); the
+//! private run registers nothing.  The sharing run's serving timeline
+//! lands in `TRACE_shared.json` (the CI perfetto artifact).
+//!
+//! ```bash
+//! cargo run --release --example shared_trace -- [requests]
+//! ```
+//!
+//! Runs with or without `make artifacts` (interpreter fallback).
+
+use kvpr::coordinator::{ContinuousConfig, ContinuousServer, ShareTotals, Submit};
+use kvpr::engine::{EngineConfig, EnginePolicy};
+use kvpr::obs::{chrome_trace, TracerConfig};
+use kvpr::transfer::LinkConfig;
+use kvpr::util::clock::ClockMode;
+use kvpr::workload::{Trace, WorkloadSpec};
+
+fn serve(trace: &Trace, sharing: bool) -> anyhow::Result<(ShareTotals, usize, String)> {
+    let mut ecfg = EngineConfig::new(EnginePolicy::Kvpr);
+    ecfg.weights_offloaded = true;
+    ecfg.link = LinkConfig::with_bandwidth(100e6);
+    ecfg.seed = 42;
+    let cfg = ContinuousConfig::builder("artifacts", ecfg)
+        .max_group(1) // one group per request: sharing happens across groups
+        .max_groups(4)
+        .clock(ClockMode::Step { step_s: 0.05 })
+        .trace(TracerConfig::default())
+        .prefix_sharing(sharing)
+        .build();
+    let server = ContinuousServer::start(cfg)?;
+    let mut tokens = 0usize;
+    for h in server.dispatch(trace) {
+        tokens += h.wait()?.tokens.len();
+    }
+    let share = server.metrics().share_totals();
+    let tracer = server.tracer();
+    server.shutdown()?;
+    let json = chrome_trace(&tracer.events()).to_string();
+    Ok((share, tokens, json))
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let requests: usize = match args.get(1) {
+        Some(n) => n.parse().map_err(|e| anyhow::anyhow!("bad request count {n:?}: {e}"))?,
+        None => 12,
+    };
+    let mut spec = WorkloadSpec::named("shared_chat").expect("named mix exists");
+    spec.requests = requests;
+    let trace = spec.generate();
+    let sharers =
+        trace.requests.iter().filter(|r| r.shared_prefix_tokens > 0).count();
+    println!(
+        "shared_trace: {} requests (mix {}), {} carry a shared preamble",
+        trace.requests.len(),
+        trace.name,
+        sharers
+    );
+
+    let (on, tokens_on, json) = serve(&trace, true)?;
+    let (off, tokens_off, _) = serve(&trace, false)?;
+    println!(
+        "sharing on:  {} hits, {} blocks / {} tokens adopted | {} tokens served",
+        on.hits, on.blocks, on.tokens, tokens_on
+    );
+    println!("sharing off: {} hits | {} tokens served", off.hits, tokens_off);
+
+    anyhow::ensure!(sharers >= 2, "shared_chat must generate adoptable preambles");
+    anyhow::ensure!(on.hits >= 1, "sharing run must adopt the registered preamble");
+    anyhow::ensure!(on.tokens >= on.blocks, "adopted blocks cover whole-block tokens");
+    anyhow::ensure!(off == ShareTotals::default(), "sharing-off run must record no hits");
+    anyhow::ensure!(tokens_on == tokens_off, "sharing must not change served token counts");
+    anyhow::ensure!(json.contains("share_hit"), "export must carry the share_hit instants");
+    std::fs::write("TRACE_shared.json", &json)?;
+    println!(
+        "wrote TRACE_shared.json ({} bytes) — share_hit instants on the step track",
+        json.len()
+    );
+    Ok(())
+}

@@ -10,6 +10,7 @@
 //!   * simulator step throughput (bench harness speed itself)
 //!   * pipelined serving loop: serial vs overlapped steps/s
 //!   * sharded Router serving: aggregate throughput at 1/2/4 shards
+//!   * prefix-sharing admission: admitted tokens/s, private vs shared
 
 use std::time::{Duration, Instant};
 
@@ -19,7 +20,10 @@ use kvpr::coordinator::{
 };
 use kvpr::engine::{EngineConfig, EnginePolicy};
 use kvpr::kvcache::quant;
-use kvpr::kvstore::{simulate_eviction, EvictionSimConfig, EvictionSimReport, Lru, RecomputeAware};
+use kvpr::kvstore::{
+    simulate_eviction, EvictionSimConfig, EvictionSimReport, KvStore, KvStoreConfig, Lru,
+    RecomputeAware,
+};
 use kvpr::obs::{EventKind, Phase, StepRecord, Tracer, TracerConfig};
 use kvpr::scheduler::{
     CostModel, LinkSpec, PlanInput, Planner, SchedulePolicy, SplitSolver, TierTopology,
@@ -338,6 +342,7 @@ fn main() {
             prompt: LenDist::Fixed { steps: 16 },
             gen: LenDist::Fixed { steps: 32 },
             think: LenDist::Fixed { steps: 0 },
+            shared_prefix: 0,
         }],
         slo: SloTargets { ttft_s: 30.0, tpot_s: 30.0 },
     };
@@ -473,8 +478,79 @@ fn main() {
         ));
     }
 
+    // cross-request prefix sharing: admission throughput at one fixed dram
+    // budget, private vs shared.  Every request wants 5 blocks over the
+    // same 4-block preamble; with the registry on, later requests adopt
+    // the registered head blocks in place (zero new bytes), so the same
+    // budget admits far more prompt tokens per second even though each
+    // shared admission also pays the content hash.  BENCH_baseline.json's
+    // ratio_gates pins prefix_share.shared ≥ 100 % of
+    // prefix_share.unshared (admitted tokens/s, same machine).
+    const SHARE_BT: usize = 16; // block tokens
+    const SHARE_BB: u64 = 4096; // block bytes
+    let share_store = |sharing: bool| -> KvStore {
+        let link = LinkConfig::with_bandwidth(500e6);
+        let mut s = KvStore::new(
+            KvStoreConfig {
+                gpu_bytes: 0,
+                pinned_bytes: 0,
+                dram_bytes: 64 * SHARE_BB,
+                disk_bytes: 0,
+                block_tokens: SHARE_BT,
+                nvme_link: LinkConfig::nvme_below(&link),
+                link,
+                wire_elem_bytes: 4.0,
+                promote_cooldown: 0,
+                spill_cooldown: 0,
+                spill_floor: 0.0,
+                spill_watermark: 0.0,
+                spill_max_per_step: 2,
+                shared_host: None,
+            },
+            Box::new(Lru),
+        );
+        if sharing {
+            s.enable_prefix_sharing();
+        }
+        s
+    };
+    let preamble: Vec<u8> =
+        b"sys: shared retrieval preamble ".iter().copied().cycle().take(4 * SHARE_BT).collect();
+    let admit_pass = |sharing: bool| -> (f64, usize) {
+        let mut admitted_tokens = 0usize;
+        let dt = time_per_iter(1_000, || {
+            let mut s = share_store(sharing);
+            admitted_tokens = 0;
+            for seq in 0..32u64 {
+                let ok = if sharing {
+                    s.admit_shared(seq, 5 * SHARE_BB, 5, &preamble).is_ok()
+                } else {
+                    s.admit(seq, 5 * SHARE_BB, 5).is_ok()
+                };
+                if ok {
+                    admitted_tokens += 5 * SHARE_BT;
+                }
+            }
+            std::hint::black_box(&s);
+        });
+        (admitted_tokens as f64 / dt, admitted_tokens)
+    };
+    let (unshared_tps, unshared_tokens) = admit_pass(false);
+    let (shared_tps, shared_tokens) = admit_pass(true);
+    t.row(&[
+        "prefix-share admission (32 reqs)".into(),
+        "1k".into(),
+        kvpr::util::fmt_secs(1.0 / shared_tps * shared_tokens as f64),
+        format!(
+            "shared/unshared {:.3}, {} vs {} tokens admitted",
+            shared_tps / unshared_tps,
+            shared_tokens,
+            unshared_tokens
+        ),
+    ]);
+
     let json = format!(
-        "{{\n  \"bench\": \"kvstore\",\n  \"policies\": {{\n    \"lru\": {},\n    \"recompute_aware\": {}\n  }},\n  \"tiered\": {{\n    \"lru\": {},\n    \"recompute_aware\": {}\n  }},\n  \"four_tier\": {{\n    \"lru\": {},\n    \"recompute_aware\": {}\n  }},\n  \"topology_plan\": {{\n    {},\n    {},\n    {}\n  }},\n  \"obs_overhead\": {{\n    \"disabled\": {{ \"steps_per_s\": {:.3} }},\n    \"enabled\": {{ \"steps_per_s\": {:.3} }}\n  }},\n  \"pipeline\": {{\n    \"serial\": {{ \"steps_per_s\": {:.3} }},\n    \"overlapped\": {{ \"steps_per_s\": {:.3}, \"prestaged_steps\": {}, \"plans_adopted\": {}, \"fallback_resolves\": {} }}\n  }},\n  \"sharding\": {{\n    \"one_shard\": {{ \"steps_per_s\": {:.3} }},\n    \"two_shard\": {{ \"steps_per_s\": {:.3} }},\n    \"four_shard\": {{ \"steps_per_s\": {:.3} }}\n  }},\n  \"workload\": {{\n    {},\n    {},\n    {}\n  }}\n}}\n",
+        "{{\n  \"bench\": \"kvstore\",\n  \"policies\": {{\n    \"lru\": {},\n    \"recompute_aware\": {}\n  }},\n  \"tiered\": {{\n    \"lru\": {},\n    \"recompute_aware\": {}\n  }},\n  \"four_tier\": {{\n    \"lru\": {},\n    \"recompute_aware\": {}\n  }},\n  \"topology_plan\": {{\n    {},\n    {},\n    {}\n  }},\n  \"obs_overhead\": {{\n    \"disabled\": {{ \"steps_per_s\": {:.3} }},\n    \"enabled\": {{ \"steps_per_s\": {:.3} }}\n  }},\n  \"pipeline\": {{\n    \"serial\": {{ \"steps_per_s\": {:.3} }},\n    \"overlapped\": {{ \"steps_per_s\": {:.3}, \"prestaged_steps\": {}, \"plans_adopted\": {}, \"fallback_resolves\": {} }}\n  }},\n  \"sharding\": {{\n    \"one_shard\": {{ \"steps_per_s\": {:.3} }},\n    \"two_shard\": {{ \"steps_per_s\": {:.3} }},\n    \"four_shard\": {{ \"steps_per_s\": {:.3} }}\n  }},\n  \"workload\": {{\n    {}\n  }},\n  \"prefix_share\": {{\n    \"unshared\": {{ \"admitted_tokens_per_s\": {:.3}, \"admitted_tokens\": {} }},\n    \"shared\": {{ \"admitted_tokens_per_s\": {:.3}, \"admitted_tokens\": {} }}\n  }}\n}}\n",
         policy_json(&lru),
         policy_json(&ra),
         policy_json(&tlru),
@@ -494,9 +570,11 @@ fn main() {
         shard_sps[0],
         shard_sps[1],
         shard_sps[2],
-        wl_json[0],
-        wl_json[1],
-        wl_json[2]
+        wl_json.join(",\n    "),
+        unshared_tps,
+        unshared_tokens,
+        shared_tps,
+        shared_tokens
     );
     if let Err(e) = std::fs::write("BENCH_kvstore.json", &json) {
         eprintln!("BENCH_kvstore.json not written: {e}");

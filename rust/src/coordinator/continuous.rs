@@ -96,7 +96,7 @@ use super::request::{Pending, Request, RequestState, Response};
 use super::server::ResponseHandle;
 use super::submit::Submit;
 use crate::engine::{DecodeSession, Engine, EngineConfig, StageSlots, StepHandoff};
-use crate::kvstore::{EvictKind, KvStore, KvStoreConfig, Prefetcher, SharedHostTiers};
+use crate::kvstore::{EvictKind, KvStore, KvStoreConfig, Prefetcher, SharedAdmit, SharedHostTiers};
 use crate::memory::{MemPool, PoolGuard};
 use crate::model::ByteTokenizer;
 use crate::obs::{EventKind, Phase, StepRecord, Tracer, TracerConfig};
@@ -257,6 +257,17 @@ impl ContinuousConfigBuilder {
         self
     }
 
+    /// Cross-request prefix sharing: admission adopts content-identical
+    /// prompt-prefix blocks an earlier request already registered (see
+    /// [`TieredKvConfig::prefix_sharing`]).  Creates a default tiering
+    /// config when none was set earlier.
+    pub fn prefix_sharing(mut self, on: bool) -> Self {
+        let mut t = self.cfg.tiering.take().unwrap_or_default();
+        t.prefix_sharing = on;
+        self.cfg.tiering = Some(t);
+        self
+    }
+
     /// Serving clock mode (wall vs deterministic step clock).
     pub fn clock(mut self, mode: ClockMode) -> Self {
         self.cfg.clock = mode;
@@ -379,6 +390,14 @@ pub struct TieredKvConfig {
     /// it into every shard's config; a standalone server leaves this
     /// `None`.
     pub shared_host: Option<SharedHostTiers>,
+    /// Cross-request prefix sharing
+    /// ([`KvStore::enable_prefix_sharing`](crate::kvstore::KvStore::enable_prefix_sharing)):
+    /// admission content-hashes each group's common prompt prefix and
+    /// adopts blocks an earlier request already registered — zero new
+    /// bytes, zero transfer, copy-on-write on divergence — and the
+    /// planner's [`PlanInput::shared_prefix`] span prices the adopted
+    /// tokens at zero wire.
+    pub prefix_sharing: bool,
 }
 
 impl Default for TieredKvConfig {
@@ -395,6 +414,7 @@ impl Default for TieredKvConfig {
             spill_max_per_step: 2,
             step_budget_override: None,
             shared_host: None,
+            prefix_sharing: false,
         }
     }
 }
@@ -496,37 +516,6 @@ impl ContinuousServer {
     /// sink and every read returns empty.
     pub fn tracer(&self) -> Tracer {
         self.tracer.clone()
-    }
-
-    /// Submit a prompt; returns a waitable handle.
-    #[deprecated(
-        since = "0.9.0",
-        note = "use `Submit::dispatch` — one submission surface shared by servers and the Router"
-    )]
-    pub fn submit(&self, prompt: &str, gen_len: usize) -> ResponseHandle {
-        let id = self.next_request_id();
-        self.enqueue(Request::new(id, prompt, gen_len))
-    }
-
-    /// Submit every request of a generated workload
-    /// [`Trace`](crate::workload::Trace); see
-    /// [`SubmitTarget::Trace`](super::SubmitTarget) for the arrival-step
-    /// semantics.  Returns handles in trace order.
-    #[deprecated(
-        since = "0.9.0",
-        note = "use `Submit::dispatch` — one submission surface shared by servers and the Router"
-    )]
-    pub fn submit_trace(&self, trace: &crate::workload::Trace) -> Vec<ResponseHandle> {
-        self.dispatch(trace)
-    }
-
-    /// Submit a pre-built [`Request`] verbatim.
-    #[deprecated(
-        since = "0.9.0",
-        note = "use `Submit::dispatch` — one submission surface shared by servers and the Router"
-    )]
-    pub fn submit_request(&self, req: Request) -> ResponseHandle {
-        self.enqueue(req)
     }
 
     /// Graceful shutdown: close the queue, let in-flight groups finish,
@@ -649,6 +638,9 @@ fn serve_loop(
             // migration lifecycle events (queued → staged → in-flight →
             // landed) flow into the same step-stamped trace
             s.set_tracer(tracer.clone());
+            if t.prefix_sharing {
+                s.enable_prefix_sharing();
+            }
             Some((Arc::new(Mutex::new(s)), Prefetcher::new(t.max_inflight)))
         }
         _ => None,
@@ -786,21 +778,27 @@ fn serve_loop(
             }
             let mut n = eligible.min(cfg.max_group.max(1));
             let mut hold = None;
+            let mut shared = SharedAdmit::default();
             while n >= 1 {
                 let need = engine.session_kv_bytes(n)?;
                 let got = match store.as_ref() {
                     Some((s, _)) => {
                         // tiered admission: place the session's blocks
                         // across the host tiers, reclaiming (drop KV,
-                        // keep X) before backpressuring
+                        // keep X) before backpressuring.  Sharing-enabled
+                        // stores first adopt whatever registered prefix the
+                        // group's common prompt bytes already hash to.
                         let mut s = s.lock().unwrap();
                         let blocks = seq_cap.div_ceil(s.block_tokens());
-                        if s.admit(next_seq, need, blocks).is_ok() {
-                            let seq = next_seq;
-                            next_seq += 1;
-                            Some(KvHold::Tiered(seq))
-                        } else {
-                            None
+                        let lcp = shared_prompt_prefix(&queue, step_now, n, cfg.prompt_bucket);
+                        match s.admit_shared(next_seq, need, blocks, &lcp) {
+                            Ok(sa) => {
+                                shared = sa;
+                                let seq = next_seq;
+                                next_seq += 1;
+                                Some(KvHold::Tiered(seq))
+                            }
+                            Err(_) => None,
                         }
                     }
                     None => kv_pool.alloc(need).ok().map(KvHold::Hard),
@@ -895,6 +893,14 @@ fn serve_loop(
                 m.state = RequestState::Decoding;
             }
             metrics.record_batch(n);
+            if shared.matched_blocks > 0 {
+                metrics.record_share(shared.matched_blocks as u64, shared.shared_tokens as u64);
+                if let Some(m0) = members.first() {
+                    let id = m0.req.id;
+                    let (blocks, tokens) = (shared.matched_blocks, shared.shared_tokens);
+                    tracer.emit(|| EventKind::ShareHit { id, blocks, tokens });
+                }
+            }
             // a stolen session's prefix KV lives on the shard it migrated
             // away from: park that prefix on the deep (remote) rung, so the
             // planner prices its re-fetch hops and the store's two-hop
@@ -943,6 +949,16 @@ fn serve_loop(
                 let KvHold::Tiered(seq) = &g.kv else { continue };
                 let seq = *seq;
                 s.touch(seq, g.sess.kv_len(), g.last_l);
+                // physically reclaim what the store's pressure valve
+                // dropped: truncate the host K/V arcs and make the
+                // recompute floor mandatory for every later plan
+                let dropped = s.kv_dropped_tokens(seq);
+                if dropped > 0 {
+                    let freed = engine.truncate_dropped_kv(&mut g.sess, dropped);
+                    if freed > 0 {
+                        metrics.record_reclaimed(freed);
+                    }
+                }
                 // mirror the engine's freely-grown device window into the
                 // gpu tier's accounting, then queue deeper blocks for
                 // promotion ahead of the step
@@ -992,6 +1008,7 @@ fn serve_loop(
                 if let (KvHold::Tiered(seq), Some((s, _))) = (&g.kv, store.as_ref()) {
                     let s = s.lock().unwrap();
                     input = input.dropped_floor(s.kv_dropped_tokens(*seq));
+                    input = input.shared_prefix(s.shared_prefix_tokens(*seq));
                     let disk = s.disk_resident_tokens(*seq);
                     if disk > 0 {
                         let tier = disk_tier
@@ -1115,6 +1132,7 @@ fn serve_loop(
                     if let (KvHold::Tiered(seq), Some((s, _))) = (&g.kv, store.as_ref()) {
                         let s = s.lock().unwrap();
                         input = input.dropped_floor(s.kv_dropped_tokens(*seq));
+                        input = input.shared_prefix(s.shared_prefix_tokens(*seq));
                         let disk = s.disk_resident_tokens(*seq);
                         if disk > 0 {
                             let tier = disk_tier
@@ -1385,4 +1403,30 @@ fn arrival_eligible(p: &Pending, step_clock: usize) -> bool {
         Some(s) => s <= step_clock,
         None => true,
     }
+}
+
+/// Byte-wise longest common prefix of the first `n` admission-eligible
+/// queued prompts, clamped to the prompt bucket (the cache holds exactly
+/// that many byte-tokens per lane) — the content
+/// [`KvStore::admit_shared`] hashes against the cross-request registry.
+fn shared_prompt_prefix(
+    queue: &VecDeque<Pending>,
+    step_clock: usize,
+    n: usize,
+    prompt_bucket: usize,
+) -> Vec<u8> {
+    let mut it = queue
+        .iter()
+        .filter(|p| arrival_eligible(p, step_clock))
+        .take(n)
+        .map(|p| p.req.prompt.as_bytes());
+    let Some(first) = it.next() else {
+        return Vec::new();
+    };
+    let mut len = first.len().min(prompt_bucket);
+    for other in it {
+        let m = len.min(other.len());
+        len = (0..m).take_while(|&i| first[i] == other[i]).count();
+    }
+    first[..len].to_vec()
 }

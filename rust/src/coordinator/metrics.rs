@@ -51,6 +51,10 @@ struct Inner {
     hops_polled: u64,
     // -- sharded-serving counters ---------------------------------------------
     remote_parked_blocks: u64,
+    // -- cross-request prefix sharing -----------------------------------------
+    share: ShareTotals,
+    // -- physical dropped-KV reclamation --------------------------------------
+    kv_reclaimed_bytes: u64,
     // -- adaptive step-budget counters ---------------------------------------
     budget: StepBudgetTotals,
     // -- pipelined-runtime counters -------------------------------------------
@@ -187,6 +191,21 @@ impl RouterTotals {
         }
         self.remote_prefix_tokens += remote_tokens as u64;
     }
+}
+
+/// Cross-request prefix-sharing totals: admissions whose content-hashed
+/// prompt prefix matched blocks an earlier request registered in the
+/// store's [`PrefixRegistry`](crate::kvstore::PrefixRegistry), and the
+/// blocks/tokens those hits adopted in place (zero new bytes, zero
+/// transfer).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ShareTotals {
+    /// Admissions that adopted at least one registered shared block.
+    pub hits: u64,
+    /// Shared blocks adopted across all hits.
+    pub blocks: u64,
+    /// Prompt-prefix tokens those blocks cover.
+    pub tokens: u64,
 }
 
 /// Aggregates of the per-step adaptive migration grant (the planner-slack
@@ -360,6 +379,31 @@ impl ServeMetrics {
     /// unsharded server).
     pub fn remote_parked_blocks(&self) -> u64 {
         self.inner.lock().unwrap().remote_parked_blocks
+    }
+
+    /// One admission's prefix-sharing hit: `blocks` registered blocks
+    /// adopted in place, covering `tokens` prompt-prefix tokens.
+    pub fn record_share(&self, blocks: u64, tokens: u64) {
+        let mut m = self.inner.lock().unwrap();
+        m.share.hits += 1;
+        m.share.blocks += blocks;
+        m.share.tokens += tokens;
+    }
+
+    /// Cross-request prefix-sharing totals (see [`ShareTotals`]).
+    pub fn share_totals(&self) -> ShareTotals {
+        self.inner.lock().unwrap().share
+    }
+
+    /// Host bytes physically freed by truncating a dropped-KV prefix out
+    /// of the cache's K/V buffers (the X feedstock stays for recompute).
+    pub fn record_reclaimed(&self, bytes: u64) {
+        self.inner.lock().unwrap().kv_reclaimed_bytes += bytes;
+    }
+
+    /// Total host bytes reclaimed by dropped-KV truncation.
+    pub fn kv_reclaimed_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().kv_reclaimed_bytes
     }
 
     /// Disk-tier traffic totals (see [`DiskTotals`]).
@@ -709,6 +753,20 @@ mod tests {
         m.record_remote_prefix(2);
         m.record_remote_prefix(1);
         assert_eq!(m.remote_parked_blocks(), 3);
+    }
+
+    #[test]
+    fn share_and_reclaim_counters_accumulate() {
+        let m = ServeMetrics::new();
+        assert_eq!(m.share_totals(), ShareTotals::default());
+        assert_eq!(m.kv_reclaimed_bytes(), 0);
+        m.record_share(4, 128);
+        m.record_share(1, 32);
+        let s = m.share_totals();
+        assert_eq!((s.hits, s.blocks, s.tokens), (2, 5, 160));
+        m.record_reclaimed(4096);
+        m.record_reclaimed(1024);
+        assert_eq!(m.kv_reclaimed_bytes(), 5120);
     }
 
     #[test]

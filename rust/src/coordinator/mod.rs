@@ -39,9 +39,9 @@
 //! Every front end shares one submission surface: the [`Submit`] trait's
 //! [`dispatch`](Submit::dispatch) accepts anything convertible into a
 //! [`SubmitTarget`] — a `(prompt, gen_len)` pair, a pre-built [`Request`],
-//! or a workload [`Trace`](crate::workload::Trace) — and the old
-//! `submit`/`submit_trace`/`submit_request` methods survive one PR as
-//! `#[deprecated]` shims over it.
+//! or a workload [`Trace`](crate::workload::Trace).  It is the *only*
+//! submission path: the pre-0.9 `submit`/`submit_trace`/`submit_request`
+//! methods rode one PR as `#[deprecated]` shims and are gone.
 //!
 //! Above the single-worker servers sits the sharded [`Router`]
 //! (data-parallel multi-GPU, paper Appendix A.7): N [`ContinuousServer`]
@@ -69,7 +69,7 @@ pub use continuous::{
 };
 pub use metrics::{
     DemotionTotals, DiskTotals, LatencyPercentiles, MigrationTotals, PipelineTotals, RouterTotals,
-    ServeMetrics, SloAttainment, StepBudgetTotals, TieringTotals,
+    ServeMetrics, ShareTotals, SloAttainment, StepBudgetTotals, TieringTotals,
 };
 pub use request::{Request, RequestState, Response};
 pub use router::{Router, RouterConfig};

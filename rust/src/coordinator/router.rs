@@ -50,7 +50,7 @@ use super::metrics::RouterTotals;
 use super::request::Request;
 use super::server::ResponseHandle;
 use super::submit::Submit;
-use crate::kvstore::SharedHostTiers;
+use crate::kvstore::{share_key, SharedHostTiers};
 use crate::obs::chrome_trace_sharded;
 use crate::scheduler::LinkSpec;
 use crate::util::json::Json;
@@ -80,6 +80,13 @@ pub struct RouterConfig {
     /// steals a session to a less-loaded shard; 0 (the default) never
     /// steals.
     pub shard_capacity: usize,
+    /// Prefix-affinity placement width: when > 0, the placement key is the
+    /// content hash ([`share_key`]) of the prompt's first this-many
+    /// byte-tokens instead of the whole prompt, so requests sharing a
+    /// prompt prefix land on the same shard — and its
+    /// [`PrefixRegistry`](crate::kvstore::PrefixRegistry) — maximising
+    /// cross-request adoption.  0 (the default) keys on the full prompt.
+    pub affinity_prefix_tokens: usize,
 }
 
 impl RouterConfig {
@@ -90,7 +97,20 @@ impl RouterConfig {
             remote_capacity_bytes: 1 << 30,
             remote_link: LinkSpec::unresolved(),
             shard_capacity: 0,
+            affinity_prefix_tokens: 0,
         }
+    }
+}
+
+/// The placement key a prompt maps to: the whole prompt when
+/// `prefix_tokens` is 0, else the hex content hash of its first
+/// `prefix_tokens` byte-tokens (so prefix-sharing siblings collide onto
+/// one shard's registry).
+fn affinity_key(prompt: &str, prefix_tokens: usize) -> String {
+    if prefix_tokens == 0 {
+        prompt.to_string()
+    } else {
+        format!("{:016x}", share_key(prompt.as_bytes(), prefix_tokens))
     }
 }
 
@@ -185,6 +205,8 @@ pub struct Router {
     /// Requests placed on each shard (outstanding = this − completed).
     submitted: Vec<AtomicU64>,
     next_id: AtomicU64,
+    /// See [`RouterConfig::affinity_prefix_tokens`].
+    affinity_prefix_tokens: usize,
 }
 
 impl Router {
@@ -223,6 +245,7 @@ impl Router {
             totals: Mutex::new(RouterTotals::default()),
             submitted,
             next_id: AtomicU64::new(1),
+            affinity_prefix_tokens: cfg.affinity_prefix_tokens,
         })
     }
 
@@ -287,10 +310,11 @@ impl Submit for Router {
 
     fn enqueue(&self, req: Request) -> ResponseHandle {
         let loads: Vec<usize> = (0..self.shards.len()).map(|i| self.outstanding(i)).collect();
+        let key = affinity_key(&req.prompt, self.affinity_prefix_tokens);
         // one lock covers decide + count + forward, so two concurrent
         // submitters of the same session cannot race the affinity map
         let mut placement = self.placement.lock().unwrap();
-        let d = placement.place(&req.prompt, &loads);
+        let d = placement.place(&key, &loads);
         let req = match d.kind {
             // the byte tokenizer maps one prompt byte to one token, so the
             // stolen session's remote prefix is the prompt itself (the
@@ -367,6 +391,18 @@ mod tests {
         assert_eq!(p.place("sess", &[0, 0]).shard, 0);
         let d = p.place("sess", &[1_000_000, 0]);
         assert_eq!((d.shard, d.kind), (0, PlacementKind::AffinityHit));
+    }
+
+    #[test]
+    fn prefix_affinity_key_collides_siblings_and_splits_strangers() {
+        // width 0 keys on the whole prompt: siblings separate
+        assert_ne!(affinity_key("sys-prompt A", 0), affinity_key("sys-prompt B", 0));
+        // width 10 hashes only "sys-prompt": siblings collide …
+        assert_eq!(affinity_key("sys-prompt A", 10), affinity_key("sys-prompt B", 10));
+        // … and a different prefix still lands elsewhere
+        assert_ne!(affinity_key("sys-prompt A", 10), affinity_key("other sys  A", 10));
+        // the hash clamps to the prompt, so short prompts stay stable
+        assert_eq!(affinity_key("abc", 64), affinity_key("abc", 64));
     }
 
     #[test]

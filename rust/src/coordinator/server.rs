@@ -90,25 +90,6 @@ impl Server {
         &self.metrics
     }
 
-    /// Submit a prompt; returns a waitable handle.
-    #[deprecated(
-        since = "0.9.0",
-        note = "use `Submit::dispatch` — one submission surface shared by servers and the Router"
-    )]
-    pub fn submit(&self, prompt: &str, gen_len: usize) -> ResponseHandle {
-        let id = self.next_request_id();
-        self.enqueue(Request::new(id, prompt, gen_len))
-    }
-
-    /// Submit a pre-built [`Request`] verbatim.
-    #[deprecated(
-        since = "0.9.0",
-        note = "use `Submit::dispatch` — one submission surface shared by servers and the Router"
-    )]
-    pub fn submit_request(&self, req: Request) -> ResponseHandle {
-        self.enqueue(req)
-    }
-
     /// Graceful shutdown: close the queue, join the worker.
     pub fn shutdown(mut self) -> Result<()> {
         self.tx.take();

@@ -6,8 +6,8 @@
 //! into a [`SubmitTarget`], and every front end ([`ContinuousServer`],
 //! the whole-batch [`Server`], the sharded [`Router`]) implements the
 //! [`Submit`] trait, whose [`dispatch`](Submit::dispatch) method is the
-//! single public path.  The old methods survive one PR as `#[deprecated]`
-//! shims over this trait.
+//! single public path — the old per-server methods rode one PR as
+//! `#[deprecated]` shims and have been deleted.
 //!
 //! [`ContinuousServer`]: super::ContinuousServer
 //! [`Server`]: super::Server

@@ -134,6 +134,10 @@ pub struct DecodeSession {
     store_handles: Vec<TransferHandle>,
     /// Device-resident KV suffix (tiered kvstore gpu tier); off by default.
     resident: Option<GpuResident>,
+    /// Mandatory recompute floor: rows `[0, kv_floor)` had their K/V host
+    /// storage physically reclaimed ([`Engine::truncate_dropped_kv`]), so
+    /// every later step must plan a split covering them.
+    kv_floor: usize,
 }
 
 /// Device-resident KV suffix of a session — the engine-side landing of the
@@ -229,6 +233,18 @@ impl DecodeSession {
     /// Tokens of the device-resident KV suffix (0 when residency is off).
     pub fn resident_tokens(&self) -> usize {
         self.resident.as_ref().map_or(0, |g| g.len)
+    }
+
+    /// Tokens of the mandatory recompute floor — the physically truncated
+    /// dropped-KV prefix ([`Engine::truncate_dropped_kv`]).
+    pub fn kv_floor(&self) -> usize {
+        self.kv_floor
+    }
+
+    /// Host bytes currently held by the session's cache (valid rows only;
+    /// a truncated dropped prefix has already left the K/V side).
+    pub fn host_bytes(&self) -> u64 {
+        self.cache.host_bytes()
     }
 
     /// Whether the device-resident suffix is enabled (it may be enabled
@@ -450,13 +466,15 @@ impl Engine {
         }
 
         if l > 0 {
-            // activations first, at high priority (the recompute feedstock)
+            // activations first, at high priority (the recompute feedstock);
+            // K/V views go through kv_rows — a truncated dropped prefix has
+            // physically left the k/v arcs, X keeps every row
             t.act = Some(self.h2d.submit(st.x_arc(), st.rows(0, l), Priority::High));
-            t.k = Some(self.h2d.submit(st.k_arc(), st.rows(l, kv_len), Priority::Normal));
-            t.v = Some(self.h2d.submit(st.v_arc(), st.rows(l, kv_len), Priority::Normal));
+            t.k = Some(self.h2d.submit(st.k_arc(), st.kv_rows(l, kv_len), Priority::Normal));
+            t.v = Some(self.h2d.submit(st.v_arc(), st.kv_rows(l, kv_len), Priority::Normal));
         } else {
-            t.k = Some(self.h2d.submit(st.k_arc(), st.rows(0, kv_len), Priority::Normal));
-            t.v = Some(self.h2d.submit(st.v_arc(), st.rows(0, kv_len), Priority::Normal));
+            t.k = Some(self.h2d.submit(st.k_arc(), st.kv_rows(0, kv_len), Priority::Normal));
+            t.v = Some(self.h2d.submit(st.v_arc(), st.kv_rows(0, kv_len), Priority::Normal));
         }
         t
     }
@@ -726,9 +744,12 @@ impl Engine {
         let m = self.runtime.manifest();
         let kv_len = sess.cache.seq_len();
         let row = sess.b * m.model.hidden;
+        // the window can never extend into a physically truncated prefix —
+        // those K/V rows no longer exist on the host to promote from
+        let kv_avail = kv_len - sess.cache.kv_trunc();
         let cache = &sess.cache;
         let Some(g) = sess.resident.as_mut() else { return (0, 0) };
-        let target = target_tokens.min(kv_len);
+        let target = target_tokens.min(kv_avail);
         if target < g.len {
             let demoted = g.len - target;
             g.drop_head(demoted, row);
@@ -753,7 +774,7 @@ impl Engine {
         let start = kv_len - new_len;
         for layer in 0..m.model.n_layers {
             let st = cache.layer(layer);
-            let range = st.rows(start, start + add);
+            let range = st.kv_rows(start, start + add);
             let mut nk: Vec<f32> = Vec::with_capacity(new_len * row);
             nk.extend_from_slice(&st.k_arc()[range.clone()]);
             nk.extend_from_slice(&g.k[layer]);
@@ -856,7 +877,51 @@ impl Engine {
             metrics,
             store_handles: Vec::new(),
             resident: None,
+            kv_floor: 0,
         })
+    }
+
+    /// Physically reclaim the K/V host storage of a session's dropped
+    /// prefix (the tiered store's `kv_dropped_tokens` decision): every
+    /// layer's K/V `Vec`s shrink while the X activations survive for
+    /// recompute, and the floor becomes **mandatory** — every later step
+    /// must plan `l` at or above it, which
+    /// [`build_step`](Self::build_step) enforces by raising an uncovering
+    /// split to the smallest artifact L bucket over the hole.  To keep
+    /// that raise always executable, the truncation itself never goes past
+    /// what an artifact bucket within the current length can cover.
+    /// No-op for full-transfer policies (they can never recompute over the
+    /// hole).  Returns the host bytes freed.
+    pub fn truncate_dropped_kv(&self, sess: &mut DecodeSession, tokens: usize) -> u64 {
+        if !self.cfg.policy.is_partial() || tokens <= sess.kv_floor {
+            return 0;
+        }
+        let m = self.runtime.manifest();
+        let kv_len = sess.cache.seq_len();
+        let covered = m
+            .l_buckets
+            .iter()
+            .copied()
+            .any(|lb| lb >= tokens && lb <= kv_len);
+        let target = if covered {
+            tokens
+        } else {
+            // no bucket covers the full request within the current length:
+            // truncate up to the largest bucket at or below it — the floor
+            // then covers itself
+            m.l_buckets
+                .iter()
+                .copied()
+                .filter(|&lb| lb <= tokens.min(kv_len))
+                .max()
+                .unwrap_or(0)
+        };
+        if target <= sess.kv_floor {
+            return 0;
+        }
+        let freed = sess.cache.drop_prefix_kv(target);
+        sess.kv_floor = sess.cache.kv_trunc();
+        freed
     }
 
     /// One decode step with the split chosen by the session's own planner.
@@ -922,6 +987,22 @@ impl Engine {
                 .as_ref()
                 .map(|p| p.plan_step(kv_len).l())
                 .unwrap_or(0),
+        };
+        // a physically truncated dropped prefix makes the floor mandatory:
+        // rows below it no longer exist to transfer, so an uncovering plan
+        // is raised to the smallest artifact bucket over the hole
+        // (truncate_dropped_kv guarantees one exists within kv_len)
+        let plan_l = if plan_l < sess.kv_floor {
+            m.l_buckets
+                .iter()
+                .copied()
+                .filter(|&lb| lb >= sess.kv_floor)
+                .min()
+                .with_context(|| {
+                    format!("no L bucket covers the dropped-KV floor {}", sess.kv_floor)
+                })?
+        } else {
+            plan_l
         };
         sess.metrics.splits.push(plan_l);
 

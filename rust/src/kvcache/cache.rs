@@ -24,12 +24,21 @@ pub const ELEM_BYTES_F32: f64 = 4.0;
 pub const ELEM_BYTES_INT4_G64: f64 = 0.625;
 
 /// K/V/X store for one layer of one running batch.
+///
+/// A dropped-KV prefix (the tiered store's last-resort pressure valve)
+/// physically truncates the K/V buffers: rows `[0, kv_trunc)` hold no
+/// stored KV — only the X activations survive there, and the planner's
+/// `l_floor` guarantees recompute always covers the hole.  K/V element
+/// views therefore go through [`LayerState::kv_rows`], which subtracts the
+/// truncation offset; X views keep using [`LayerState::rows`].
 #[derive(Debug, Clone)]
 pub struct LayerState {
     batch: usize,
     hidden: usize,
     cap: usize,
     len: usize,
+    /// Rows `[0, kv_trunc)` have been drained from the K/V buffers.
+    kv_trunc: usize,
     k: Arc<Vec<f32>>,
     v: Arc<Vec<f32>>,
     x: Arc<Vec<f32>>,
@@ -96,10 +105,53 @@ impl LayerState {
         self.x.clone()
     }
 
-    /// Element range (into the k/v arcs) covering rows [lo, hi).
+    /// Element range (into the x arc — and into k/v only while no prefix
+    /// has been dropped) covering rows [lo, hi).
     pub fn rows(&self, lo: usize, hi: usize) -> std::ops::Range<usize> {
         assert!(lo <= hi && hi <= self.len, "rows {lo}..{hi} of {}", self.len);
         lo * self.row()..hi * self.row()
+    }
+
+    /// Rows `[0, kv_trunc)` whose K/V storage has been reclaimed by
+    /// [`LayerState::drop_prefix_kv`]; their X activations remain.
+    pub fn kv_trunc(&self) -> usize {
+        self.kv_trunc
+    }
+
+    /// Element range *into the truncated k/v arcs* covering rows
+    /// [lo, hi).  Panics when `lo` reaches into the dropped prefix — the
+    /// planner's floor must keep every K/V read above the hole.
+    pub fn kv_rows(&self, lo: usize, hi: usize) -> std::ops::Range<usize> {
+        assert!(
+            lo >= self.kv_trunc,
+            "kv rows {lo}..{hi} reach into the dropped prefix [0, {})",
+            self.kv_trunc
+        );
+        assert!(lo <= hi && hi <= self.len, "rows {lo}..{hi} of {}", self.len);
+        let row = self.row();
+        (lo - self.kv_trunc) * row..(hi - self.kv_trunc) * row
+    }
+
+    /// Physically reclaim the K/V storage of rows `[0, tokens)`: the host
+    /// `Vec`s shrink by `2 × tokens × row` f32 elements (X is untouched —
+    /// recompute needs it).  Monotone: dropping fewer tokens than already
+    /// dropped is a no-op; `tokens` clamps to the valid length.  Returns
+    /// the host bytes freed.
+    pub fn drop_prefix_kv(&mut self, tokens: usize) -> u64 {
+        let target = tokens.min(self.len);
+        let delta = target.saturating_sub(self.kv_trunc);
+        if delta == 0 {
+            return 0;
+        }
+        let row = self.row();
+        let kd = Arc::make_mut(&mut self.k);
+        kd.drain(0..delta * row);
+        kd.shrink_to_fit();
+        let vd = Arc::make_mut(&mut self.v);
+        vd.drain(0..delta * row);
+        vd.shrink_to_fit();
+        self.kv_trunc = target;
+        (2 * delta * row * 4) as u64
     }
 
     /// Transpose seq-major rows `[rows, batch, hidden]` → `[batch, seq, hidden]`
@@ -127,10 +179,11 @@ impl LayerState {
         if self.len >= self.cap {
             bail!("layer cache full: len {} == cap {}", self.len, self.cap);
         }
-        let off = self.len * row;
-        Arc::make_mut(&mut self.k)[off..off + row].copy_from_slice(k_new);
-        Arc::make_mut(&mut self.v)[off..off + row].copy_from_slice(v_new);
-        Arc::make_mut(&mut self.x)[off..off + row].copy_from_slice(x_new);
+        let kv_off = (self.len - self.kv_trunc) * row;
+        Arc::make_mut(&mut self.k)[kv_off..kv_off + row].copy_from_slice(k_new);
+        Arc::make_mut(&mut self.v)[kv_off..kv_off + row].copy_from_slice(v_new);
+        let x_off = self.len * row;
+        Arc::make_mut(&mut self.x)[x_off..x_off + row].copy_from_slice(x_new);
         self.len += 1;
         Ok(())
     }
@@ -145,6 +198,7 @@ impl LayerState {
         if s_p > self.cap {
             bail!("prefill longer than capacity");
         }
+        debug_assert_eq!(self.kv_trunc, 0, "prefill into a truncated layer");
         let kd = Arc::make_mut(&mut self.k);
         let vd = Arc::make_mut(&mut self.v);
         let xd = Arc::make_mut(&mut self.x);
@@ -176,6 +230,7 @@ impl HostKvCache {
             hidden,
             cap,
             len: 0,
+            kv_trunc: 0,
             k: Arc::new(vec![0.0; cap * batch * hidden]),
             v: Arc::new(vec![0.0; cap * batch * hidden]),
             x: Arc::new(vec![0.0; cap * batch * hidden]),
@@ -220,11 +275,30 @@ impl HostKvCache {
     }
 
     /// Total host bytes held (K + V + X across layers, valid rows only).
+    /// A dropped-KV prefix shrinks the K/V side — those rows were
+    /// physically reclaimed by [`HostKvCache::drop_prefix_kv`] — while the
+    /// X side still spans every valid row.
     pub fn host_bytes(&self) -> u64 {
         self.layers
             .iter()
-            .map(|l| (3 * l.len() * l.batch * l.hidden * 4) as u64)
+            .map(|l| {
+                let row = l.batch * l.hidden;
+                ((2 * (l.len() - l.kv_trunc()) + l.len()) * row * 4) as u64
+            })
             .sum()
+    }
+
+    /// Rows whose K/V storage has been reclaimed (identical across layers
+    /// by construction).
+    pub fn kv_trunc(&self) -> usize {
+        self.layers.first().map_or(0, |l| l.kv_trunc())
+    }
+
+    /// Physically reclaim the K/V storage of rows `[0, tokens)` on every
+    /// layer.  Returns the total host bytes freed; monotone and clamped
+    /// like [`LayerState::drop_prefix_kv`].
+    pub fn drop_prefix_kv(&mut self, tokens: usize) -> u64 {
+        self.layers.iter_mut().map(|l| l.drop_prefix_kv(tokens)).sum()
     }
 }
 
@@ -350,5 +424,72 @@ mod tests {
         poke(&mut c, 1, 0.0);
         // 2 layers × 1 row × (3 tensors × 4 f32 × 4 bytes)
         assert_eq!(c.host_bytes(), 2 * 3 * 4 * 4);
+    }
+
+    #[test]
+    fn drop_prefix_kv_physically_reclaims_host_bytes() {
+        // the regression this pins: a dropped prefix must shrink the K/V
+        // host `Vec`s by exactly 2 × delta × row × 4 bytes per layer, not
+        // just mark rows stale
+        let (n_layers, batch, hidden, cap) = (3, 2, 4, 16);
+        let row = batch * hidden;
+        let mut c = HostKvCache::new(n_layers, batch, hidden, cap);
+        for layer in 0..n_layers {
+            for i in 0..10 {
+                poke(&mut c, layer, i as f32);
+            }
+        }
+        let before = c.host_bytes();
+        let delta = 4;
+        let freed = c.drop_prefix_kv(delta);
+        assert_eq!(freed, (2 * delta * row * 4 * n_layers) as u64);
+        assert_eq!(c.host_bytes(), before - freed);
+        assert_eq!(c.kv_trunc(), delta);
+        let l = c.layer(0);
+        // the buffers really shrank — capacity, not just a length marker
+        assert_eq!(l.k_arc().len(), (cap - delta) * row);
+        assert!(l.k_arc().capacity() < cap * row);
+        // X keeps every valid row; K/V views shift by the truncation
+        assert_eq!(l.rows(0, 10), 0..10 * row);
+        assert_eq!(l.kv_rows(4, 10), 0..6 * row);
+        assert_eq!(l.kv_rows(6, 8), 2 * row..4 * row);
+    }
+
+    #[test]
+    fn drop_prefix_kv_is_monotone_and_survives_appends() {
+        let mut c = HostKvCache::new(1, 1, 2, 8);
+        for i in 0..4 {
+            poke(&mut c, 0, 10.0 * i as f32);
+        }
+        assert_eq!(c.drop_prefix_kv(2), 2 * 2 * 2 * 4);
+        // re-dropping the same (or a smaller) prefix frees nothing more
+        assert_eq!(c.drop_prefix_kv(2), 0);
+        assert_eq!(c.drop_prefix_kv(1), 0);
+        assert_eq!(c.kv_trunc(), 2);
+        // surviving rows kept their contents across the drain
+        let l = c.layer(0);
+        assert_eq!(l.k_arc()[l.kv_rows(2, 3)][0], 20.0);
+        assert_eq!(l.k_arc()[l.kv_rows(3, 4)][0], 30.0);
+        // appends after truncation land in the right (shifted) slots
+        poke(&mut c, 0, 40.0);
+        let l = c.layer(0);
+        assert_eq!(l.len(), 5);
+        assert_eq!(l.k_arc()[l.kv_rows(4, 5)][0], 40.0);
+        assert_eq!(l.x_arc()[l.rows(4, 5)][0], 80.0);
+        // reaching into the hole panics via the kv_rows guard (checked in
+        // kv_view_into_dropped_prefix_panics); clamping past len is safe
+        assert_eq!(c.drop_prefix_kv(100), 3 * 2 * 2 * 4, "clamps to len 5");
+        assert_eq!(c.kv_trunc(), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "dropped prefix")]
+    fn kv_view_into_dropped_prefix_panics() {
+        let mut c = HostKvCache::new(1, 1, 2, 8);
+        for _ in 0..4 {
+            poke(&mut c, 0, 0.0);
+        }
+        c.drop_prefix_kv(2);
+        let _ = c.layer(0).kv_rows(1, 3);
     }
 }

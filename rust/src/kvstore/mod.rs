@@ -56,6 +56,12 @@
 //!   profiler's [`CostModel`](crate::scheduler::CostModel).  Under int4
 //!   wire quantization the migration traffic and every scoring lens use
 //!   the quantized element width.
+//! * [`PrefixRegistry`] — cross-request prefix sharing: content-hashed,
+//!   ref-counted chain entries over full prompt blocks.  Admission adopts
+//!   a new request's longest shared prefix in place at zero new bytes and
+//!   zero transfer ([`KvStore::admit_shared`]); retirement decrements
+//!   instead of freeing; a diverging writer takes a copy-on-write private
+//!   clone while the shared original keeps its other dependents.
 //! * [`sim`] — deterministic analytic comparison of eviction strategies on
 //!   skewed reuse workloads (`simulate_eviction`), including the async
 //!   demotion cost of a budgeted gpu tier and the four-tier spill model
@@ -80,6 +86,7 @@ pub mod manager;
 pub mod migrate;
 pub mod policy;
 pub mod prefetch;
+pub mod share;
 pub mod sim;
 pub mod store;
 mod suffix;
@@ -89,5 +96,6 @@ pub use manager::{SharedHostTiers, TierManager, TierStats};
 pub use migrate::{MigrationClass, MigrationEngine, MigrationId, MigrationStats};
 pub use policy::{BlockView, EvictKind, EvictPolicy, Lru, RecomputeAware};
 pub use prefetch::{PrefetchStats, Prefetcher};
+pub use share::{share_key, PrefixRegistry, ShareStats, SharedAdmit};
 pub use sim::{simulate_eviction, EvictionSimConfig, EvictionSimReport, SimSeq};
 pub use store::{KvStore, KvStoreConfig, StoreStats};

@@ -43,6 +43,12 @@ pub struct BlockView {
     /// The split point l* the planner currently chooses for the owning
     /// sequence: tokens below it are recomputed from X anyway.
     pub split_l: usize,
+    /// Live dependents when the block backs a shared-prefix registry
+    /// entry (0 for a private block).  Evicting a shared block strands
+    /// *every* dependent, so the recompute-aware lenses multiply the
+    /// refill side by `max(shared_refs, 1)` — the writeback still crosses
+    /// the wire once.
+    pub shared_refs: usize,
 }
 
 /// An eviction policy: pick the index of the block to give up.
@@ -116,12 +122,17 @@ impl RecomputeAware {
 
     /// Seconds to re-materialise this block's contribution if evicted:
     /// tokens inside `[0, split_l)` cost the recompute path (ship X, run
-    /// the KV projections), tokens beyond it cost a KV re-transfer.
+    /// the KV projections), tokens beyond it cost a KV re-transfer.  A
+    /// shared block is refilled once *per dependent* — every sequence
+    /// adopting the prefix loses the bytes — so the whole refill side
+    /// scales by `max(shared_refs, 1)`.
     pub fn refill_cost(&self, b: &BlockView) -> f64 {
         let rec = b.split_l.saturating_sub(b.start_token).min(b.tokens);
         let xfer = b.tokens - rec;
-        rec as f64 * (self.cost.recompute_per_token_s + self.cost.transfer_act_per_token_s)
-            + xfer as f64 * self.cost.transfer_kv_per_token_s
+        let per_dependent = rec as f64
+            * (self.cost.recompute_per_token_s + self.cost.transfer_act_per_token_s)
+            + xfer as f64 * self.cost.transfer_kv_per_token_s;
+        per_dependent * b.shared_refs.max(1) as f64
     }
 
     /// Full cost of demoting this block out of the gpu tier: the refill
@@ -141,9 +152,12 @@ impl RecomputeAware {
         let kv = self.cost.transfer_kv_per_token_s;
         let rec = b.split_l.saturating_sub(b.start_token).min(b.tokens);
         let xfer = b.tokens - rec;
-        b.tokens as f64 * kv * self.nvme_factor
-            + rec as f64 * (self.cost.recompute_per_token_s + self.cost.transfer_act_per_token_s)
-            + xfer as f64 * kv * (1.0 + self.nvme_factor)
+        // the writeback crosses the NVMe wire once; the reload side is
+        // paid per dependent of a shared block, like refill_cost
+        let reload = rec as f64
+            * (self.cost.recompute_per_token_s + self.cost.transfer_act_per_token_s)
+            + xfer as f64 * kv * (1.0 + self.nvme_factor);
+        b.tokens as f64 * kv * self.nvme_factor + reload * b.shared_refs.max(1) as f64
     }
 
     fn min_by_score(
@@ -259,6 +273,7 @@ mod tests {
             seq_len: 128,
             last_use,
             split_l,
+            shared_refs: 0,
         }
     }
 
@@ -447,6 +462,30 @@ mod tests {
         assert_eq!(plain.victim(&[beyond, inside]), 1, "full width: recompute is cheaper");
         let half = EvictKind::RecomputeAware.build_for_wire(cost, 2.0, 4.0);
         assert_eq!(half.victim(&[beyond, inside]), 0, "fp16 wire: transfer side wins");
+    }
+
+    #[test]
+    fn shared_refs_multiply_the_refill_side_only() {
+        let p = RecomputeAware::new(cheap_recompute());
+        let private = view(1, 2, 64, 0, 0); // pure transfer refill
+        let mut shared = private;
+        shared.shared_refs = 3;
+        // refill: the whole score is refill, so it scales exactly 3×
+        assert!((p.refill_cost(&shared) - 3.0 * p.refill_cost(&private)).abs() < 1e-15);
+        // demote: writeback is paid once, so the score grows by less
+        // than 3× but by exactly 2× the private refill
+        let delta = p.demote_cost(&shared) - p.demote_cost(&private);
+        assert!((delta - 2.0 * p.refill_cost(&private)).abs() < 1e-15);
+        // spill: the NVMe writeback term stays single too
+        let writeback = 32.0 * p.cost.transfer_kv_per_token_s * p.nvme_factor;
+        let reload_private = p.spill_cost(&private) - writeback;
+        assert!((p.spill_cost(&shared) - (writeback + 3.0 * reload_private)).abs() < 1e-12);
+        // and the ordering consequence: with many dependents, a shared
+        // block outscores (is kept over) an otherwise-identical private
+        // block of the same recency
+        assert_eq!(p.victim(&[shared, private]), 1, "evict the private twin");
+        assert_eq!(p.demote_victim(&[shared, private]), 1);
+        assert_eq!(p.spill_victim(&[shared, private]), 1);
     }
 
     #[test]

@@ -107,6 +107,7 @@ mod tests {
                 spill_floor: 0.0,
                 spill_watermark: 0.0,
                 spill_max_per_step: 2,
+                shared_host: None,
             },
             Box::new(Lru),
         )

@@ -1,0 +1,522 @@
+//! Cross-request prefix sharing: content-hashed, ref-counted,
+//! copy-on-write KV blocks.
+//!
+//! At production scale most traffic repeats system prompts and few-shot
+//! preambles, so the biggest lever left on the transfer-vs-recompute
+//! economics is to not materialize the same prefix KV per request at all.
+//! The [`PrefixRegistry`] is that lever's bookkeeping core:
+//!
+//! * **Content-hashed chain entries.**  A prompt is split into the store's
+//!   fixed `block_tokens`-sized blocks (the byte tokenizer makes one byte
+//!   one token) and each *full* block gets a chain hash
+//!   `h_i = fnv(h_{i-1}, block bytes)` — so a hash identifies not just a
+//!   block's content but its entire left context, and equal hashes mean
+//!   equal prefixes.  A partial trailing block is never shared.
+//! * **Longest-shared-prefix lookup.**  [`PrefixRegistry::match_prefix`]
+//!   walks `h_0, h_1, …` while entries exist; the walk's length is the
+//!   longest previously-registered prefix, by construction contiguous
+//!   from the start of the prompt.
+//! * **Ref-counted ownership.**  The first request to carry a prefix
+//!   *registers* its blocks — the registry takes over the host-tier
+//!   reservation ([`PoolGuard`]) and the request's own
+//!   `BlockState` becomes a guard-less *shared marker*.  Every later
+//!   request with the same prefix *adopts* the entries (`refs += 1`) and
+//!   pays **zero** new bytes and zero transfer for those tokens.
+//!   Retirement decrements; an entry whose refs reach 0 stays *parked* as
+//!   cross-request cache until capacity pressure trims it (LRU,
+//!   leaf-first so interior chain links never dangle).  An entry with
+//!   live dependents is never trimmed, never evicted.
+//! * **Copy-on-write divergence.**  A writer to a shared block (in the
+//!   serving loop: cross-shard session migration parking a prefix deep)
+//!   gets a private clone under its own reservation; the shared original
+//!   keeps its other dependents and its bytes, untouched
+//!   ([`PrefixRegistry::privatize`]).
+//!
+//! The registry is pure accounting — the actual K/V rows live in the
+//! engine's per-session host cache, which is exactly why store-level
+//! sharing cannot perturb decode math (bit-identical tokens come for
+//! free).  Integration lives in
+//! [`KvStore::admit_shared`](super::KvStore::admit_shared); the planner
+//! sees adopted prefixes as the zero-transfer `shared_prefix` span of
+//! [`PlanInput`](crate::scheduler::PlanInput), and the
+//! [`Router`](crate::coordinator::Router) hashes the same bytes
+//! ([`share_key`]) so same-prefix requests land on the shard already
+//! holding the blocks.
+//!
+//! ```
+//! use kvpr::kvstore::PrefixRegistry;
+//!
+//! let mut reg = PrefixRegistry::new(8); // 8 tokens (= bytes) per block
+//! let prompt = b"You are a helpful assistant. User: hi";
+//! assert!(reg.match_prefix(prompt).is_empty(), "nothing registered yet");
+//!
+//! // first request: register every full prompt block (4 of them; the
+//! // 5-byte tail block is partial and never shared)
+//! let chain = PrefixRegistry::chain(prompt, 8);
+//! assert_eq!(chain.len(), 4);
+//! let mut parent = None;
+//! for &h in &chain {
+//!     reg.register(h, parent, 1024, None);
+//!     parent = Some(h);
+//! }
+//!
+//! // second request, same system prompt, different question: the walk
+//! // finds the shared blocks and adoption costs zero new bytes
+//! let hit = reg.match_prefix(b"You are a helpful assistant. User: what is 2+2?");
+//! assert_eq!(hit.len(), 4);
+//! for &h in &hit {
+//!     reg.adopt(h);
+//! }
+//! assert_eq!(reg.refs(chain[3]), 2);
+//!
+//! // retirement decrements instead of freeing; the last release parks
+//! // the entries as reusable cross-request cache
+//! for &h in &hit {
+//!     reg.release(h);
+//! }
+//! assert_eq!(reg.refs(chain[3]), 1);
+//! ```
+
+use std::collections::BTreeMap;
+
+use crate::memory::PoolGuard;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x100_0000_01b3;
+
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Affinity key over the first `prefix_bytes` of a prompt — the hash the
+/// [`Router`](crate::coordinator::Router) uses to steer same-prefix
+/// requests to the shard whose registry already holds their blocks.
+/// Prompts shorter than the window hash whole, so the key degrades
+/// gracefully to full-prompt affinity.
+pub fn share_key(prompt: &[u8], prefix_bytes: usize) -> u64 {
+    let n = prefix_bytes.min(prompt.len());
+    fnv1a(FNV_OFFSET, &prompt[..n])
+}
+
+/// One shared-prefix chain entry.
+#[derive(Debug)]
+struct Entry {
+    /// Chain hash of the previous block's entry (`None` for block 0).
+    parent: Option<u64>,
+    /// Live dependents: sequences whose admission adopted this entry and
+    /// have not yet retired or diverged.  0 means *parked* — reusable
+    /// cache, trimmable under pressure, never while refs > 0.
+    refs: usize,
+    /// Bytes of the block this entry owns in its tier.
+    bytes: u64,
+    /// The real tier reservation (the adopting sequences' markers hold
+    /// `guard: None`).  `None` only in tests/doctests that exercise the
+    /// accounting without a pool.
+    guard: Option<PoolGuard>,
+    /// Recency clock value at the last adopt/register (LRU trim input).
+    last_use: u64,
+}
+
+/// Counters of registry activity, surfaced through
+/// [`KvStore::share_stats`](super::KvStore::share_stats) into the serving
+/// metrics' `ShareTotals`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ShareStats {
+    /// Chain entries created (first-writer registrations).
+    pub registered: u64,
+    /// Adoptions by later same-prefix requests (each is one block of KV
+    /// neither transferred nor recomputed).
+    pub adoptions: u64,
+    /// Dependent retirements (refcount decrements via [`PrefixRegistry::release`]).
+    pub releases: u64,
+    /// Copy-on-write divergences: a dependent privatized its marker and
+    /// left the shared original untouched.
+    pub cow_clones: u64,
+    /// Parked entries trimmed under capacity pressure.
+    pub trimmed: u64,
+}
+
+/// Content-hashed, ref-counted registry of shared KV prefix blocks.
+///
+/// See the [module docs](self) for the design; the runnable example there
+/// doubles as the registry's doctest.
+#[derive(Debug, Default)]
+pub struct PrefixRegistry {
+    block_tokens: usize,
+    entries: BTreeMap<u64, Entry>,
+    clock: u64,
+    stats: ShareStats,
+}
+
+impl PrefixRegistry {
+    pub fn new(block_tokens: usize) -> Self {
+        assert!(block_tokens > 0, "block_tokens must be positive");
+        PrefixRegistry { block_tokens, ..PrefixRegistry::default() }
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    /// The chain hashes of every *full* `block_tokens`-sized block of
+    /// `prompt`: `h_i = fnv(h_{i-1}, block_i bytes)`, so equal `h_i` means
+    /// the entire prefix through block `i` is byte-identical.  A partial
+    /// trailing block yields no hash — it is never shareable.
+    pub fn chain(prompt: &[u8], block_tokens: usize) -> Vec<u64> {
+        assert!(block_tokens > 0, "block_tokens must be positive");
+        let mut out = Vec::with_capacity(prompt.len() / block_tokens);
+        let mut parent = FNV_OFFSET;
+        for block in prompt.chunks_exact(block_tokens) {
+            let h = fnv1a(fnv1a(FNV_OFFSET, &parent.to_le_bytes()), block);
+            out.push(h);
+            parent = h;
+        }
+        out
+    }
+
+    /// Longest-shared-prefix lookup: the chain hashes of `prompt`'s
+    /// leading blocks that are all present in the registry, in block
+    /// order.  The result's length × `block_tokens` is the token span an
+    /// admission can adopt instead of transferring or recomputing.
+    pub fn match_prefix(&self, prompt: &[u8]) -> Vec<u64> {
+        let mut chain = Self::chain(prompt, self.block_tokens);
+        let matched = chain.iter().take_while(|h| self.entries.contains_key(*h)).count();
+        chain.truncate(matched);
+        chain
+    }
+
+    /// Whether an entry with chain hash `h` exists (parked or live).
+    pub fn contains(&self, h: u64) -> bool {
+        self.entries.contains_key(&h)
+    }
+
+    /// Live dependents of entry `h` (0 when parked or absent).
+    pub fn refs(&self, h: u64) -> usize {
+        self.entries.get(&h).map_or(0, |e| e.refs)
+    }
+
+    /// Entries currently in the registry (live + parked).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Parked entries (refs == 0) and the bytes their guards still hold —
+    /// the trimmable cross-request cache.
+    pub fn parked_bytes(&self) -> u64 {
+        self.entries.values().filter(|e| e.refs == 0).map(|e| e.bytes).sum()
+    }
+
+    pub fn stats(&self) -> ShareStats {
+        self.stats
+    }
+
+    /// Register a new chain entry: the first writer hands over its tier
+    /// reservation and becomes the entry's first dependent (refs = 1).
+    /// `parent` must be the previous block's chain hash (`None` for block
+    /// 0) so trimming can keep chains contiguous.
+    pub fn register(&mut self, h: u64, parent: Option<u64>, bytes: u64, guard: Option<PoolGuard>) {
+        debug_assert!(!self.entries.contains_key(&h), "duplicate registration");
+        self.clock += 1;
+        self.entries
+            .insert(h, Entry { parent, refs: 1, bytes, guard, last_use: self.clock });
+        self.stats.registered += 1;
+    }
+
+    /// Adopt entry `h` as a new dependent (`refs += 1`); returns `false`
+    /// when no such entry exists.  Adoption of a parked entry revives it —
+    /// that is the cross-request cache hit.
+    pub fn adopt(&mut self, h: u64) -> bool {
+        self.clock += 1;
+        let clock = self.clock;
+        match self.entries.get_mut(&h) {
+            Some(e) => {
+                e.refs += 1;
+                e.last_use = clock;
+                self.stats.adoptions += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Retire one dependent of `h`: decrements instead of freeing.  The
+    /// entry (and its bytes) stays parked as reusable cache once the last
+    /// dependent leaves.
+    pub fn release(&mut self, h: u64) {
+        if let Some(e) = self.entries.get_mut(&h) {
+            debug_assert!(e.refs > 0, "release without a live dependent");
+            e.refs = e.refs.saturating_sub(1);
+            self.stats.releases += 1;
+        }
+    }
+
+    /// Copy-on-write divergence: one dependent stops sharing `h` (it took
+    /// a private clone under its own reservation).  The shared original
+    /// keeps its bytes and its other dependents, bit-identical — the
+    /// registry only drops the diverging dependent's ref.
+    pub fn privatize(&mut self, h: u64) {
+        if let Some(e) = self.entries.get_mut(&h) {
+            debug_assert!(e.refs > 0, "privatize without a live dependent");
+            e.refs = e.refs.saturating_sub(1);
+            self.stats.cow_clones += 1;
+        }
+    }
+
+    /// Roll back a registration made earlier in a failed admission: the
+    /// entry is removed outright and its reservation drops.  Only valid
+    /// while the registering admission is the sole dependent and no later
+    /// block was chained onto it (rollbacks run child-first).
+    pub fn unregister(&mut self, h: u64) {
+        if let Some(e) = self.entries.remove(&h) {
+            debug_assert!(e.refs <= 1, "unregister with other live dependents");
+            debug_assert!(
+                !self.entries.values().any(|c| c.parent == Some(h)),
+                "unregister would orphan chained children"
+            );
+            self.stats.registered = self.stats.registered.saturating_sub(1);
+        }
+    }
+
+    /// Trim parked entries (refs == 0) under capacity pressure until at
+    /// least `need_bytes` of reservations have been dropped or nothing
+    /// parked remains.  Trimming is LRU-first and **leaf-first**: an
+    /// entry is only removable while no other entry chains onto it, so a
+    /// match walk never finds a chain with a missing interior link.
+    /// Entries with live dependents are never touched.  Returns bytes
+    /// freed.
+    pub fn trim(&mut self, need_bytes: u64) -> u64 {
+        let mut freed = 0u64;
+        while freed < need_bytes {
+            let parents: std::collections::BTreeSet<u64> =
+                self.entries.values().filter_map(|e| e.parent).collect();
+            let victim = self
+                .entries
+                .iter()
+                .filter(|(h, e)| e.refs == 0 && !parents.contains(*h))
+                .min_by_key(|(_, e)| e.last_use)
+                .map(|(&h, _)| h);
+            let Some(h) = victim else { break };
+            let e = self.entries.remove(&h).expect("victim exists");
+            freed += e.bytes; // guard drops here: the tier bytes free
+            self.stats.trimmed += 1;
+        }
+        freed
+    }
+}
+
+/// What [`KvStore::admit_shared`](super::KvStore::admit_shared) reused:
+/// the adopted span (zero bytes, zero transfer) plus how many new chain
+/// entries this admission contributed for later requests.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SharedAdmit {
+    /// Blocks adopted from the registry (the share *hit*).
+    pub matched_blocks: usize,
+    /// Tokens those blocks cover — the `shared_prefix` span handed to the
+    /// planner.
+    pub shared_tokens: usize,
+    /// New chain entries registered by this admission (the share *fill*).
+    pub registered_blocks: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::MemPool;
+    use crate::util::prng::{check_property, prop_cases};
+
+    #[test]
+    fn chain_hashes_identify_content_and_context() {
+        let a = PrefixRegistry::chain(b"aaaabbbbcccc", 4);
+        let b = PrefixRegistry::chain(b"aaaabbbbdddd", 4);
+        assert_eq!(a.len(), 3);
+        assert_eq!(a[0], b[0]);
+        assert_eq!(a[1], b[1]);
+        assert_ne!(a[2], b[2], "differing block, differing hash");
+        // same bytes, different left context: the chain seed differs
+        let c = PrefixRegistry::chain(b"xxxxbbbb", 4);
+        assert_ne!(a[1], c[1], "content equal but context differs");
+        // a partial tail block is never hashed
+        assert_eq!(PrefixRegistry::chain(b"aaaab", 4).len(), 1);
+        assert!(PrefixRegistry::chain(b"abc", 4).is_empty());
+    }
+
+    #[test]
+    fn share_key_windows_the_prompt() {
+        assert_eq!(share_key(b"same-prefix A", 11), share_key(b"same-prefix B", 11));
+        assert_ne!(share_key(b"same-prefix A", 13), share_key(b"same-prefix B", 13));
+        // shorter than the window: whole-prompt key, no panic
+        assert_eq!(share_key(b"ab", 64), share_key(b"ab", 2));
+    }
+
+    #[test]
+    fn match_prefix_finds_the_longest_registered_chain() {
+        let mut reg = PrefixRegistry::new(4);
+        let chain = PrefixRegistry::chain(b"aaaabbbbcccc", 4);
+        reg.register(chain[0], None, 100, None);
+        reg.register(chain[1], Some(chain[0]), 100, None);
+        assert_eq!(reg.match_prefix(b"aaaabbbbcccc"), &chain[..2]);
+        assert_eq!(reg.match_prefix(b"aaaabbbbzzzz"), &chain[..2]);
+        assert_eq!(reg.match_prefix(b"aaaazzzz").len(), 1);
+        assert!(reg.match_prefix(b"zzzzaaaa").is_empty());
+    }
+
+    #[test]
+    fn parked_entries_survive_as_cache_and_revive_on_adopt() {
+        let mut reg = PrefixRegistry::new(4);
+        let chain = PrefixRegistry::chain(b"aaaa", 4);
+        reg.register(chain[0], None, 100, None);
+        reg.release(chain[0]);
+        assert_eq!(reg.refs(chain[0]), 0);
+        assert_eq!(reg.parked_bytes(), 100);
+        // still matchable: the cross-request cache hit
+        assert_eq!(reg.match_prefix(b"aaaa").len(), 1);
+        assert!(reg.adopt(chain[0]));
+        assert_eq!(reg.refs(chain[0]), 1);
+        assert_eq!(reg.parked_bytes(), 0);
+    }
+
+    #[test]
+    fn trim_is_lru_leaf_first_and_never_touches_live_entries() {
+        let pool = MemPool::new("cpu-dram", 1000);
+        let mut reg = PrefixRegistry::new(4);
+        let chain = PrefixRegistry::chain(b"aaaabbbb", 4);
+        reg.register(chain[0], None, 100, Some(pool.alloc(100).unwrap()));
+        reg.register(chain[1], Some(chain[0]), 100, Some(pool.alloc(100).unwrap()));
+        let lone = PrefixRegistry::chain(b"zzzz", 4)[0];
+        reg.register(lone, None, 100, Some(pool.alloc(100).unwrap()));
+        assert_eq!(pool.used(), 300);
+
+        // chain[1] is live: neither it nor its parent may go
+        reg.release(chain[0]); // parent parked, but chained onto
+        reg.release(lone); // parked leaf, oldest registration order
+        let freed = reg.trim(u64::MAX);
+        assert_eq!(freed, 100, "only the parked leaf is trimmable");
+        assert!(!reg.contains(lone));
+        assert!(reg.contains(chain[0]), "interior link survives while its child lives");
+        assert_eq!(pool.used(), 200, "trimmed guard released its bytes");
+
+        // once the child parks too, the chain trims leaf-first
+        reg.release(chain[1]);
+        assert_eq!(reg.trim(u64::MAX), 200);
+        assert!(reg.is_empty());
+        assert_eq!(pool.used(), 0);
+    }
+
+    /// Refcount soundness under random interleavings of register / adopt /
+    /// release / privatize / trim: no entry with live dependents is ever
+    /// freed, every reservation is released once all dependents retire,
+    /// and copy-on-write divergence leaves the shared original
+    /// bit-identical.  `KVPR_PROPTEST_CASES` scales the case count (the
+    /// nightly CI job runs 10000).
+    #[test]
+    fn share_refcount_soundness_property() {
+        check_property("share_refcount_soundness", prop_cases(300), |rng| {
+            let pool = MemPool::new("cpu-dram", u64::MAX);
+            let mut reg = PrefixRegistry::new(4);
+            // model state alongside the registry: per-hash expected refs
+            // and the block "content" a real store would hold
+            let mut model: BTreeMap<u64, (usize, Vec<u8>)> = BTreeMap::new();
+            // a small prompt alphabet forces heavy hash collisions-by-design
+            // (identical prefixes), exercising adopt/park/revive paths
+            let prompts: Vec<Vec<u8>> = (0..4)
+                .map(|i| {
+                    let base = vec![b'a' + i as u8; 8];
+                    [base, vec![b'0' + i as u8; 4]].concat()
+                })
+                .collect();
+            // live sequences: which hashes each currently depends on
+            let mut live: Vec<Vec<u64>> = Vec::new();
+            for _ in 0..rng.range(10, 60) {
+                match rng.index(4) {
+                    // admit: adopt the matched chain, register the rest
+                    0 => {
+                        let p = &prompts[rng.index(prompts.len())];
+                        let chain = PrefixRegistry::chain(p, 4);
+                        let mut deps = Vec::new();
+                        let mut parent = None;
+                        for (i, &h) in chain.iter().enumerate() {
+                            if reg.adopt(h) {
+                                model.get_mut(&h).expect("model tracks registry").0 += 1;
+                            } else {
+                                let guard = pool.alloc(10).expect("unbounded pool");
+                                reg.register(h, parent, 10, Some(guard));
+                                model.insert(h, (1, p[i * 4..(i + 1) * 4].to_vec()));
+                            }
+                            deps.push(h);
+                            parent = Some(h);
+                        }
+                        live.push(deps);
+                    }
+                    // retire: release every dependency
+                    1 if !live.is_empty() => {
+                        let deps = live.swap_remove(rng.index(live.len()));
+                        for h in deps {
+                            reg.release(h);
+                            model.get_mut(&h).expect("model tracks registry").0 -= 1;
+                        }
+                    }
+                    // CoW divergence: one sequence privatizes its deepest
+                    // shared block; the original must stay bit-identical
+                    2 if !live.is_empty() => {
+                        let i = rng.index(live.len());
+                        if let Some(h) = live[i].pop() {
+                            let before = model.get(&h).expect("model tracks registry").1.clone();
+                            reg.privatize(h);
+                            model.get_mut(&h).expect("model tracks registry").0 -= 1;
+                            let mut clone = before.clone();
+                            clone[0] ^= 0xff; // the writer mutates its clone...
+                            let after = &model.get(&h).expect("model tracks registry").1;
+                            if *after != before || clone[0] == before[0] {
+                                return Err("CoW mutated the shared original".into());
+                            }
+                        }
+                    }
+                    // pressure: trim whatever is parked
+                    _ => {
+                        reg.trim(rng.range(1, 200));
+                        model.retain(|h, _| reg.contains(*h));
+                    }
+                }
+                // invariant: the registry's refs match the model exactly —
+                // in particular no entry with live dependents disappeared
+                for (h, (refs, _)) in &model {
+                    if reg.refs(*h) != *refs {
+                        return Err(format!(
+                            "refs diverged for {h:#x}: registry {} model {refs}",
+                            reg.refs(*h)
+                        ));
+                    }
+                }
+                for deps in &live {
+                    for h in deps {
+                        if !reg.contains(*h) {
+                            return Err(format!("entry {h:#x} freed with live dependents"));
+                        }
+                    }
+                }
+            }
+            // drain: retire everything, then trim — nothing may leak
+            for deps in live.drain(..) {
+                for h in deps {
+                    reg.release(h);
+                }
+            }
+            reg.trim(u64::MAX);
+            if !reg.is_empty() {
+                return Err(format!("{} entries leaked after all dependents retired", reg.len()));
+            }
+            if pool.used() != 0 {
+                return Err(format!("{} bytes leaked after trim", pool.used()));
+            }
+            Ok(())
+        });
+    }
+}

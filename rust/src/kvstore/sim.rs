@@ -90,6 +90,14 @@ pub struct EvictionSimConfig {
     /// offered to admission before round `arrivals[i]`.  Empty — the
     /// synthetic-workload default — offers everything at round 0.
     pub arrivals: Vec<usize>,
+    /// Adoptable shared-prefix tokens per sequence (cross-request prefix
+    /// sharing): the first admitted sharer materializes the preamble in
+    /// the registry, and every later sharer adopts its block-rounded span
+    /// for free — admission reserves that many fewer bytes, which is the
+    /// hit-rate-vs-capacity frontier the sharing e2e pins.  Adopted blocks
+    /// belong to the registry: reclamation never drops or spills them.
+    /// Empty disables sharing.
+    pub shared: Vec<usize>,
 }
 
 impl EvictionSimConfig {
@@ -117,17 +125,19 @@ impl EvictionSimConfig {
             nvme_factor: crate::transfer::NVME_BANDWIDTH_FACTOR,
             spill_serial_frac: 0.25,
             arrivals: Vec::new(),
+            shared: Vec::new(),
         }
     }
 
     /// Trace replay: one sim sequence per request of a generated workload
     /// [`Trace`](crate::workload::Trace), arrival-gated at its step and
     /// stepping every round (`period` 1) — the analytic twin of
-    /// [`ContinuousServer::submit_trace`](crate::coordinator::ContinuousServer::submit_trace),
+    /// [`Submit::dispatch`](crate::coordinator::Submit::dispatch) replay,
     /// sharing the serving loop's decode-step clock.  Capacities default
     /// to ample (everything fits); narrow them by hand or read a declared
     /// chain via [`with_topology`](EvictionSimConfig::with_topology) to
-    /// make reclamation observable.
+    /// make reclamation observable.  The trace's per-request shared-prefix
+    /// tokens flow into [`shared`](EvictionSimConfig::shared).
     pub fn from_trace(cost: CostModel, trace: &crate::workload::Trace) -> Self {
         let bytes_per_token: u64 = 3 * 4 * 256 * 4; // K/V/X × layers × hidden × f32
         let seqs: Vec<SimSeq> = trace
@@ -140,6 +150,7 @@ impl EvictionSimConfig {
             })
             .collect();
         let arrivals: Vec<usize> = trace.requests.iter().map(|r| r.step).collect();
+        let shared: Vec<usize> = trace.requests.iter().map(|r| r.shared_prefix_tokens).collect();
         let total: u64 = seqs
             .iter()
             .map(|s| (s.prompt + s.gen) as u64 * bytes_per_token)
@@ -159,6 +170,7 @@ impl EvictionSimConfig {
             nvme_factor: crate::transfer::NVME_BANDWIDTH_FACTOR,
             spill_serial_frac: 0.25,
             arrivals,
+            shared,
         }
     }
 
@@ -268,6 +280,10 @@ struct SeqState {
     /// Tokens spilled to the disk tier (contiguous above the dropped
     /// prefix; four-tier model).
     spilled: usize,
+    /// Shared-prefix tokens adopted from the registry at admission: held
+    /// for free (an earlier sharer's bytes back them) and never dropped or
+    /// spilled — the registry owns them.
+    adopted: usize,
 }
 
 /// Run the workload under `policy` and report throughput and reclamation.
@@ -288,6 +304,7 @@ pub fn simulate_eviction(cfg: &EvictionSimConfig, policy: &dyn EvictPolicy) -> E
             last_use: 0,
             resident: 0,
             spilled: 0,
+            adopted: 0,
         })
         .collect();
 
@@ -295,6 +312,10 @@ pub fn simulate_eviction(cfg: &EvictionSimConfig, policy: &dyn EvictPolicy) -> E
     // before round arrive(i); the synthetic workloads leave this empty
     let arrive = |i: usize| cfg.arrivals.get(i).copied().unwrap_or(0);
     let mut admit_round: Vec<Option<usize>> = vec![None; cfg.seqs.len()];
+    // prefix-sharing registry: the widest block-rounded preamble span a
+    // sharer has materialized so far (registered entries park at refs 0,
+    // so the span stays adoptable for the rest of the run)
+    let mut registered_tokens = 0usize;
 
     let mut clock = 0u64;
     let mut steps = 0u64;
@@ -319,7 +340,12 @@ pub fn simulate_eviction(cfg: &EvictionSimConfig, policy: &dyn EvictPolicy) -> E
             if st[i].admitted || st[i].done || round < arrive(i) {
                 continue;
             }
-            let need = (cfg.seqs[i].prompt + cfg.seqs[i].gen) as u64 * bpt;
+            // cross-request sharing: adopt whatever block-rounded span of
+            // this sequence's preamble an earlier sharer already
+            // registered — those tokens cost no new bytes
+            let shareable = cfg.shared.get(i).copied().unwrap_or(0).min(cfg.seqs[i].prompt);
+            let adopted = ((shareable / bt) * bt).min(registered_tokens);
+            let need = (cfg.seqs[i].prompt + cfg.seqs[i].gen - adopted) as u64 * bpt;
             while free < need {
                 let block_bytes = bt as u64 * bpt;
                 // four-tier: spill first — the policy's chosen prefix
@@ -339,7 +365,9 @@ pub fn simulate_eviction(cfg: &EvictionSimConfig, policy: &dyn EvictPolicy) -> E
                             if !s.admitted || s.done {
                                 continue;
                             }
-                            let start = s.dropped + s.spilled;
+                            // the adopted preamble is registry-owned —
+                            // spilling starts past it
+                            let start = s.adopted + s.dropped + s.spilled;
                             if start + bt > s.s {
                                 continue;
                             }
@@ -352,6 +380,7 @@ pub fn simulate_eviction(cfg: &EvictionSimConfig, policy: &dyn EvictPolicy) -> E
                                     seq_len: s.s,
                                     last_use: s.last_use,
                                     split_l: solver.solve(s.s, s.s).l,
+                                    shared_refs: 0,
                                 },
                             ));
                         }
@@ -360,9 +389,10 @@ pub fn simulate_eviction(cfg: &EvictionSimConfig, policy: &dyn EvictPolicy) -> E
                             let (j, _) = cands[policy.spill_victim(&views)];
                             st[j].spilled += bt;
                             st[j].held_bytes = st[j].held_bytes.saturating_sub(block_bytes);
-                            st[j].resident = st[j]
-                                .resident
-                                .min(st[j].s.saturating_sub(st[j].dropped + st[j].spilled));
+                            st[j].resident = st[j].resident.min(
+                                st[j].s
+                                    .saturating_sub(st[j].adopted + st[j].dropped + st[j].spilled),
+                            );
                             let wire = bt as f64
                                 * cfg.cost.transfer_kv_per_token_s
                                 * cfg.wire_ratio
@@ -384,19 +414,21 @@ pub fn simulate_eviction(cfg: &EvictionSimConfig, policy: &dyn EvictPolicy) -> E
                     if !s.admitted || s.done || s.spilled > 0 {
                         continue;
                     }
-                    let idx = s.dropped / bt;
-                    if s.dropped + bt > s.s {
+                    // dropping starts past the registry-owned adopted span
+                    let start = s.adopted + s.dropped;
+                    if start + bt > s.s {
                         continue;
                     }
                     cands.push((
                         j,
                         BlockView {
-                            id: BlockId { seq: j as u64, idx },
+                            id: BlockId { seq: j as u64, idx: start / bt },
                             tokens: bt,
-                            start_token: s.dropped,
+                            start_token: start,
                             seq_len: s.s,
                             last_use: s.last_use,
                             split_l: solver.solve(s.s, s.s).l,
+                            shared_refs: 0,
                         },
                     ));
                 }
@@ -410,7 +442,7 @@ pub fn simulate_eviction(cfg: &EvictionSimConfig, policy: &dyn EvictPolicy) -> E
                 st[j].held_bytes = st[j].held_bytes.saturating_sub(freed);
                 // a grown dropped prefix can meet the resident suffix;
                 // the dropped tokens' gpu residency (if any) is void
-                st[j].resident = st[j].resident.min(st[j].s - st[j].dropped);
+                st[j].resident = st[j].resident.min(st[j].s - (st[j].adopted + st[j].dropped));
                 free += freed;
                 drops += 1;
             }
@@ -419,7 +451,10 @@ pub fn simulate_eviction(cfg: &EvictionSimConfig, policy: &dyn EvictPolicy) -> E
                 st[i].admitted = true;
                 st[i].held_bytes = need;
                 st[i].s = cfg.seqs[i].prompt;
+                st[i].adopted = adopted;
                 admit_round[i] = Some(round);
+                // this sharer's own preamble span is registered from here on
+                registered_tokens = registered_tokens.max((shareable / bt) * bt);
             } else {
                 break; // head-of-line backpressure
             }
@@ -452,7 +487,7 @@ pub fn simulate_eviction(cfg: &EvictionSimConfig, policy: &dyn EvictPolicy) -> E
                     // residency can never waive either region's cost
                     let want = st[i]
                         .s
-                        .saturating_sub(st[i].dropped + st[i].spilled)
+                        .saturating_sub(st[i].adopted + st[i].dropped + st[i].spilled)
                         .saturating_sub(st[i].resident);
                     if want == 0 {
                         break;
@@ -483,6 +518,7 @@ pub fn simulate_eviction(cfg: &EvictionSimConfig, policy: &dyn EvictPolicy) -> E
                                 seq_len: s.s,
                                 last_use: s.last_use,
                                 split_l: round_split[j],
+                                shared_refs: 0,
                             },
                         ));
                     }
@@ -515,12 +551,23 @@ pub fn simulate_eviction(cfg: &EvictionSimConfig, policy: &dyn EvictPolicy) -> E
             let r = st[i].resident.min(s);
             let s_eff = s - r;
             let l_star = solver.solve(s_eff, s_eff).l;
-            let l_a = l_star.max(st[i].dropped.min(s_eff)).min(s_eff);
+            // a dropped region sits above the adopted preamble, so covering
+            // it by recompute means splitting past adopted + dropped
+            let drop_floor = if st[i].dropped > 0 {
+                (st[i].adopted + st[i].dropped).min(s_eff)
+            } else {
+                0
+            };
+            let l_a = l_star.max(drop_floor).min(s_eff);
             // four-tier: a spilled token the split does not cover re-reads
             // over the extra NVMe hop this step; covering the whole disk
             // prefix by recompute may be cheaper (the closed-form twin of
             // Planner::plan_batch's topology-fold candidate pair)
-            let disk_end = (st[i].dropped + st[i].spilled).min(s_eff);
+            let disk_end = if st[i].spilled > 0 {
+                (st[i].adopted + st[i].dropped + st[i].spilled).min(s_eff)
+            } else {
+                0
+            };
             let rt_per_tok =
                 cfg.cost.transfer_kv_per_token_s * cfg.wire_ratio * cfg.nvme_factor;
             let rt = |l: usize| disk_end.saturating_sub(l) as f64 * rt_per_tok;
@@ -618,6 +665,50 @@ mod tests {
         assert_eq!(r.evictions, 0);
         assert_eq!(r.completed, cfg.seqs.len());
         assert!(r.peak_concurrency >= cfg.seqs.len(), "everything runs at once");
+    }
+
+    #[test]
+    fn shared_prefixes_widen_the_admission_frontier() {
+        // Four identical chat turns over a 32-token shared preamble.  The
+        // budget fits one full sequence plus three adopters exactly
+        // (80 + 3 × 48 = 224 tokens), so with sharing on everything admits
+        // at round 0 with zero reclamation; clearing `shared` asks for
+        // 320 tokens and forces KV drops to squeeze in — the hit-rate-vs-
+        // capacity frontier in miniature.
+        let bpt = 3 * 4 * 256 * 4u64;
+        let mut cfg = EvictionSimConfig {
+            cost: cost(),
+            capacity_bytes: 224 * bpt,
+            block_tokens: 16,
+            bytes_per_token: bpt,
+            seqs: vec![SimSeq { prompt: 64, gen: 16, period: 1 }; 4],
+            max_rounds: 2000,
+            gpu_bytes: 0,
+            wire_ratio: 1.0,
+            demote_serial_frac: 0.25,
+            disk_bytes: 0,
+            nvme_factor: crate::transfer::NVME_BANDWIDTH_FACTOR,
+            spill_serial_frac: 0.25,
+            arrivals: Vec::new(),
+            shared: vec![32; 4],
+        };
+        let shared = simulate_eviction(&cfg, &Lru);
+        assert_eq!(shared.completed, 4);
+        assert_eq!(shared.peak_concurrency, 4, "adopters must all fit at once");
+        assert_eq!(shared.evictions, 0, "adoption covers the shortfall without drops");
+
+        cfg.shared.clear();
+        let unshared = simulate_eviction(&cfg, &Lru);
+        assert_eq!(unshared.completed, 4);
+        assert!(unshared.evictions > 0, "without sharing the budget must be short");
+        // drop floors surcharge the unshared run's decode steps
+        assert_eq!(shared.steps, unshared.steps);
+        assert!(
+            shared.wall_s <= unshared.wall_s + 1e-12,
+            "sharing must not slow the same workload: {} vs {}",
+            shared.wall_s,
+            unshared.wall_s
+        );
     }
 
     #[test]

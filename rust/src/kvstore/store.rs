@@ -61,6 +61,7 @@ use super::block::{BlockId, Tier};
 use super::manager::{SharedHostTiers, TierManager, TierStats};
 use super::migrate::{MigrationClass, MigrationEngine, MigrationStats};
 use super::policy::{BlockView, EvictPolicy};
+use super::share::{PrefixRegistry, ShareStats, SharedAdmit};
 use super::suffix::{BlockClass, BlockState, PendingRef, SuffixRuns};
 
 /// Construction parameters for a [`KvStore`].
@@ -263,6 +264,11 @@ pub struct KvStore {
     /// call — the cool-down timebase, so hysteresis spans the same number
     /// of event-loop steps regardless of how many groups are decoding.
     step: u64,
+    /// Cross-request prefix sharing, off unless
+    /// [`KvStore::enable_prefix_sharing`] opted in.  The registry owns the
+    /// host-tier reservations of shared blocks; the adopting sequences'
+    /// `BlockState`s are guard-less markers.
+    share: Option<PrefixRegistry>,
     stats: StoreStats,
 }
 
@@ -296,8 +302,30 @@ impl KvStore {
             spill_max_per_step: cfg.spill_max_per_step,
             clock: 0,
             step: 0,
+            share: None,
             stats: StoreStats::default(),
         }
+    }
+
+    /// Opt into cross-request prefix sharing: later
+    /// [`KvStore::admit_shared`] calls match, adopt and register
+    /// content-hashed prefix blocks through the embedded
+    /// [`PrefixRegistry`].  Idempotent; plain [`KvStore::admit`] is
+    /// unaffected either way.
+    pub fn enable_prefix_sharing(&mut self) {
+        if self.share.is_none() {
+            self.share = Some(PrefixRegistry::new(self.block_tokens));
+        }
+    }
+
+    /// Whether [`KvStore::enable_prefix_sharing`] was called.
+    pub fn prefix_sharing_enabled(&self) -> bool {
+        self.share.is_some()
+    }
+
+    /// Registry activity counters (all zero while sharing is off).
+    pub fn share_stats(&self) -> ShareStats {
+        self.share.as_ref().map(PrefixRegistry::stats).unwrap_or_default()
     }
 
     pub fn block_tokens(&self) -> usize {
@@ -368,9 +396,7 @@ impl KvStore {
         // would compound into planner floors for every running group).
         // Spill adds no *net* capacity (it moves bytes host→disk), so the
         // ceiling is host + disk free plus droppable KV.
-        let free = self.mig.tiers().pool(Tier::CpuDram).available()
-            + self.mig.tiers().pool(Tier::Pinned).available()
-            + self.mig.tiers().pool(Tier::DiskNvme).available();
+        let free = self.host_free_bytes();
         if free + self.reclaimable_bytes() < block_bytes * n_blocks as u64 {
             bail!(
                 "kvstore cannot fit sequence {seq}: {} bytes needed, {} free + reclaimable",
@@ -380,29 +406,7 @@ impl KvStore {
         }
         let mut blocks = Vec::with_capacity(n_blocks);
         for _ in 0..n_blocks {
-            let placed = loop {
-                if let Some(g) = self.mig.tiers().grab(Tier::CpuDram, block_bytes) {
-                    break Some((Tier::CpuDram, g));
-                }
-                if let Some(g) = self.mig.tiers().grab(Tier::Pinned, block_bytes) {
-                    break Some((Tier::Pinned, g));
-                }
-                // spill a cold valid block to disk: frees its full dram
-                // bytes and keeps its KV reachable (two-hop reload)
-                if self.spill_one().is_some() {
-                    continue;
-                }
-                // nothing spillable: this (empty) block parks on disk —
-                // pure reservation, no bytes cross any wire
-                if let Some(g) = self.mig.tiers().grab(Tier::DiskNvme, block_bytes) {
-                    self.stats.disk_admissions += 1;
-                    break Some((Tier::DiskNvme, g));
-                }
-                if self.reclaim_kv_one().is_none() {
-                    break None;
-                }
-            };
-            match placed {
+            match self.place_host_block(block_bytes) {
                 Some((tier, guard)) => blocks.push(BlockState {
                     tier,
                     guard: Some(guard),
@@ -410,6 +414,7 @@ impl KvStore {
                     pending: None,
                     demoted_at: None,
                     promoted_at: None,
+                    shared: None,
                 }),
                 None => {
                     // `blocks` drops here, rolling the reservations back
@@ -427,6 +432,195 @@ impl KvStore {
         );
         self.stats.admitted += 1;
         Ok(())
+    }
+
+    /// Free bytes across every non-gpu tier — the admission feasibility
+    /// ceiling (spill moves bytes between these pools, it adds none).
+    fn host_free_bytes(&self) -> u64 {
+        self.mig.tiers().pool(Tier::CpuDram).available()
+            + self.mig.tiers().pool(Tier::Pinned).available()
+            + self.mig.tiers().pool(Tier::DiskNvme).available()
+    }
+
+    /// One rung of the admission placement ladder — dram, then pinned,
+    /// then spill-to-make-room, then park-on-disk, then drop prefix KV —
+    /// shared by [`KvStore::admit`] and [`KvStore::admit_shared`].
+    fn place_host_block(&mut self, block_bytes: u64) -> Option<(Tier, crate::memory::PoolGuard)> {
+        loop {
+            if let Some(g) = self.mig.tiers().grab(Tier::CpuDram, block_bytes) {
+                break Some((Tier::CpuDram, g));
+            }
+            if let Some(g) = self.mig.tiers().grab(Tier::Pinned, block_bytes) {
+                break Some((Tier::Pinned, g));
+            }
+            // spill a cold valid block to disk: frees its full dram
+            // bytes and keeps its KV reachable (two-hop reload)
+            if self.spill_one().is_some() {
+                continue;
+            }
+            // nothing spillable: this (empty) block parks on disk —
+            // pure reservation, no bytes cross any wire
+            if let Some(g) = self.mig.tiers().grab(Tier::DiskNvme, block_bytes) {
+                self.stats.disk_admissions += 1;
+                break Some((Tier::DiskNvme, g));
+            }
+            if self.reclaim_kv_one().is_none() {
+                break None;
+            }
+        }
+    }
+
+    /// [`KvStore::admit`] with cross-request prefix sharing: the longest
+    /// registered prefix of `prompt` (full blocks only, and never the
+    /// whole sequence — decode always owns at least one private block to
+    /// grow into) is **adopted** in place at zero new bytes, the rest of
+    /// the full prompt blocks are **registered** for later requests, and
+    /// only the remainder goes through the ordinary placement ladder.
+    /// Sharing off (or no match) degrades to a plain admission.  The
+    /// returned [`SharedAdmit`] carries the adopted span — the planner's
+    /// zero-transfer `shared_prefix` — and under capacity pressure parked
+    /// (refs = 0) registry entries are trimmed LRU-first before the
+    /// admission is declared infeasible.  On failure every adoption,
+    /// registration and private reservation this call made rolls back.
+    pub fn admit_shared(
+        &mut self,
+        seq: u64,
+        total_bytes: u64,
+        n_blocks: usize,
+        prompt: &[u8],
+    ) -> Result<SharedAdmit> {
+        if self.share.is_none() {
+            self.admit(seq, total_bytes, n_blocks)?;
+            return Ok(SharedAdmit::default());
+        }
+        if self.seqs.contains_key(&seq) {
+            bail!("sequence {seq} already admitted");
+        }
+        if n_blocks == 0 {
+            bail!("admit with zero blocks");
+        }
+        let block_bytes = total_bytes.div_ceil(n_blocks as u64);
+        let bt = self.block_tokens;
+        let shareable = (prompt.len() / bt).min(n_blocks.saturating_sub(1));
+        let chain = PrefixRegistry::chain(&prompt[..shareable * bt], bt);
+        let mut matched = {
+            let reg = self.share.as_ref().expect("sharing checked on");
+            chain.iter().take_while(|h| reg.contains(**h)).count()
+        };
+        // feasibility, side-effect free: matched blocks cost nothing, so
+        // only the private remainder (and fresh registrations, which hold
+        // real bytes) count against free + reclaimable
+        let mut needed = block_bytes * (n_blocks - matched) as u64;
+        let avail = self.host_free_bytes() + self.reclaimable_bytes();
+        if avail < needed {
+            // parked (refs == 0) registry entries are reclaimable cache;
+            // the trim may drop part of the matched chain, so re-match
+            self.share.as_mut().expect("sharing checked on").trim(needed - avail);
+            let reg = self.share.as_ref().expect("sharing checked on");
+            matched = chain.iter().take_while(|h| reg.contains(**h)).count();
+            needed = block_bytes * (n_blocks - matched) as u64;
+            if self.host_free_bytes() + self.reclaimable_bytes() < needed {
+                bail!(
+                    "kvstore cannot fit sequence {seq}: {needed} private bytes needed after \
+                     a {matched}-block share hit"
+                );
+            }
+        }
+        let mut blocks: Vec<BlockState> = Vec::with_capacity(n_blocks);
+        let mut adopted: Vec<u64> = Vec::new();
+        let mut registered: Vec<u64> = Vec::new();
+        let marker = |h: u64| BlockState {
+            // the tier is nominal: the registry owns the real reservation
+            tier: Tier::CpuDram,
+            guard: None,
+            kv_dropped: false,
+            pending: None,
+            demoted_at: None,
+            promoted_at: None,
+            shared: Some(h),
+        };
+        for &h in chain.iter().take(matched) {
+            let hit = self.share.as_mut().expect("sharing checked on").adopt(h);
+            debug_assert!(hit, "matched entry vanished mid-admission");
+            adopted.push(h);
+            blocks.push(marker(h));
+        }
+        let mut failed = false;
+        // unmatched full prompt blocks: this request is the first writer —
+        // the registry takes the reservation, the sequence holds a marker
+        for i in matched..shareable {
+            match self.place_host_block(block_bytes) {
+                Some((_, guard)) => {
+                    let h = chain[i];
+                    let parent = if i == 0 { None } else { Some(chain[i - 1]) };
+                    self.share
+                        .as_mut()
+                        .expect("sharing checked on")
+                        .register(h, parent, block_bytes, Some(guard));
+                    registered.push(h);
+                    blocks.push(marker(h));
+                }
+                None => {
+                    failed = true;
+                    break;
+                }
+            }
+        }
+        if !failed {
+            for _ in blocks.len()..n_blocks {
+                match self.place_host_block(block_bytes) {
+                    Some((tier, guard)) => blocks.push(BlockState {
+                        tier,
+                        guard: Some(guard),
+                        kv_dropped: false,
+                        pending: None,
+                        demoted_at: None,
+                        promoted_at: None,
+                        shared: None,
+                    }),
+                    None => {
+                        failed = true;
+                        break;
+                    }
+                }
+            }
+        }
+        if failed {
+            let reg = self.share.as_mut().expect("sharing checked on");
+            // child-first so no unregistration orphans a chained entry
+            for &h in registered.iter().rev() {
+                reg.unregister(h);
+            }
+            for &h in &adopted {
+                reg.release(h);
+            }
+            // `blocks` drops here, rolling the private reservations back
+            bail!(
+                "kvstore exhausted admitting sequence {seq}: placed {} of {n_blocks} blocks \
+                 ({matched} shared)",
+                blocks.len()
+            );
+        }
+        self.clock += 1;
+        self.seqs.insert(
+            seq,
+            SeqEntry { blocks, block_bytes, tokens: 0, split_l: 0, last_use: self.clock },
+        );
+        self.stats.admitted += 1;
+        Ok(SharedAdmit {
+            matched_blocks: matched,
+            shared_tokens: matched * bt,
+            registered_blocks: registered.len(),
+        })
+    }
+
+    /// Tokens of `seq`'s leading shared-marker blocks that are already
+    /// valid — the zero-transfer `shared_prefix` span handed to the
+    /// planner's [`PlanInput`](crate::scheduler::PlanInput).
+    pub fn shared_prefix_tokens(&self, seq: u64) -> usize {
+        let Some(e) = self.seqs.get(&seq) else { return 0 };
+        let blocks = e.blocks.iter().take_while(|b| b.shared.is_some()).count();
+        (blocks * self.block_tokens).min(e.tokens)
     }
 
     /// Park the first `tokens` worth of `seq`'s prefix blocks on the deep
@@ -448,7 +642,30 @@ impl KvStore {
         let mut parked = 0;
         for idx in 0..want {
             let Some(b) = self.seqs.get(&seq).and_then(|e| e.blocks.get(idx)) else { break };
-            if b.tier == Tier::DiskNvme && b.pending.is_none() {
+            if b.tier == Tier::DiskNvme && b.pending.is_none() && b.shared.is_none() {
+                parked += 1;
+                continue;
+            }
+            // copy-on-write divergence: parking a *shared* block moves its
+            // bytes, which the other dependents must not see — this
+            // sequence takes a private clone under its own deep-tier
+            // reservation and stops depending on the registry entry; the
+            // shared original keeps its bytes and its other dependents,
+            // bit-identical
+            if let Some(h) = b.shared {
+                let Some(guard) = self.mig.tiers().grab(Tier::DiskNvme, block_bytes) else {
+                    break;
+                };
+                self.share
+                    .as_mut()
+                    .expect("shared marker implies sharing on")
+                    .privatize(h);
+                let e = self.seqs.get_mut(&seq).expect("seq checked above");
+                let b = &mut e.blocks[idx];
+                b.shared = None;
+                b.guard = Some(guard);
+                b.tier = Tier::DiskNvme;
+                self.stats.remote_parks += 1;
                 parked += 1;
                 continue;
             }
@@ -473,11 +690,20 @@ impl KvStore {
     /// reservations are reclaimed by a later [`KvStore::poll_landed`] once
     /// the bytes stop moving, so retirement never waits on the link and no
     /// phantom pinned charge is stranded.
+    ///
+    /// Retirement of a shared-prefix dependent *decrements* the registry
+    /// refs instead of freeing: the entries (and their bytes) stay parked
+    /// as cross-request cache for the next same-prefix admission.
     pub fn release(&mut self, seq: u64) {
         if let Some(e) = self.seqs.remove(&seq) {
             for b in e.blocks {
                 if let Some(p) = b.pending {
                     self.mig.finish(p.id);
+                }
+                if let Some(h) = b.shared {
+                    if let Some(reg) = self.share.as_mut() {
+                        reg.release(h);
+                    }
                 }
             }
         }
@@ -535,7 +761,9 @@ impl KvStore {
         let mut total = 0;
         for idx in 0..valid {
             match e.blocks[idx].class() {
-                BlockClass::Dropped => {}
+                // dropped and shared blocks cost the fetch term nothing;
+                // the disk-side scan continues above them
+                BlockClass::Dropped | BlockClass::Shared => {}
                 BlockClass::Disk | BlockClass::SpillInFlight | BlockClass::HopInFlight => {
                     total += SuffixRuns::tokens_at(e.tokens, bt, idx);
                 }
@@ -591,6 +819,9 @@ impl KvStore {
                     | BlockClass::DemotionInFlight
                     | BlockClass::HopInFlight
                     | BlockClass::SpillInFlight => break,
+                    // the registry owns a shared marker's bytes — the
+                    // device window never flips it
+                    BlockClass::Shared => break,
                     BlockClass::Host | BlockClass::Disk => todo.push(rb.idx),
                     BlockClass::Resident | BlockClass::Dropped => {}
                 }
@@ -650,11 +881,13 @@ impl KvStore {
                         hop_above = true;
                         continue;
                     }
-                    // a hole being written back, or nothing to promote
-                    // below a dropped prefix
+                    // a hole being written back, nothing to promote below
+                    // a dropped prefix, and shared markers never migrate
+                    // (the planner prices them at zero transfer instead)
                     BlockClass::DemotionInFlight
                     | BlockClass::SpillInFlight
-                    | BlockClass::Dropped => break,
+                    | BlockClass::Dropped
+                    | BlockClass::Shared => break,
                     BlockClass::Host | BlockClass::Disk => {
                         let is_hop = rb.class == BlockClass::Disk;
                         if !is_hop && hop_above {
@@ -849,6 +1082,9 @@ impl KvStore {
                     seq_len: e.tokens,
                     last_use: e.last_use,
                     split_l: e.split_l,
+                    // shared blocks never reach the gpu tier, so demotion
+                    // candidates are always private
+                    shared_refs: 0,
                 });
             }
         }
@@ -992,10 +1228,12 @@ impl KvStore {
                     break; // only fully-valid blocks carry spillable KV
                 }
                 match b.class() {
-                    // already below the line: the prefix continues above
-                    BlockClass::Dropped | BlockClass::Disk | BlockClass::SpillInFlight => {
-                        continue
-                    }
+                    // already below the line (or owned by the registry,
+                    // which never spills): the prefix continues above
+                    BlockClass::Dropped
+                    | BlockClass::Disk
+                    | BlockClass::SpillInFlight
+                    | BlockClass::Shared => continue,
                     // dram-settled: the one block that extends the prefix
                     BlockClass::Host if b.tier == Tier::CpuDram => {
                         if cooldown > 0 {
@@ -1015,6 +1253,7 @@ impl KvStore {
                             seq_len: e.tokens,
                             last_use: e.last_use,
                             split_l: e.split_l,
+                            shared_refs: 0,
                         });
                         break;
                     }
@@ -1055,7 +1294,13 @@ impl KvStore {
             let mut idx = e.blocks.iter().take_while(|b| b.kv_dropped).count();
             while idx < e.blocks.len() {
                 let b = &e.blocks[idx];
-                if (idx + 1) * bt > e.tokens || b.tier == Tier::GpuHbm || b.pending.is_some() {
+                // a shared marker ends the droppable chain: its KV belongs
+                // to the registry and other dependents still need it
+                if (idx + 1) * bt > e.tokens
+                    || b.tier == Tier::GpuHbm
+                    || b.pending.is_some()
+                    || b.shared.is_some()
+                {
                     break;
                 }
                 total += kv;
@@ -1077,7 +1322,11 @@ impl KvStore {
                 continue;
             }
             let b = &e.blocks[idx];
-            if (idx + 1) * bt > e.tokens || b.tier == Tier::GpuHbm || b.pending.is_some() {
+            if (idx + 1) * bt > e.tokens
+                || b.tier == Tier::GpuHbm
+                || b.pending.is_some()
+                || b.shared.is_some()
+            {
                 continue;
             }
             cands.push(BlockView {
@@ -1087,6 +1336,7 @@ impl KvStore {
                 seq_len: e.tokens,
                 last_use: e.last_use,
                 split_l: e.split_l,
+                shared_refs: 0,
             });
         }
         if cands.is_empty() {
@@ -1627,5 +1877,134 @@ mod tests {
         let cfg = KvStoreConfig::from_topology(&three, 64 << 10);
         assert_eq!(cfg.disk_bytes, 0);
         assert!(cfg.spill_watermark >= 1.0, "no disk rung: the watermark never binds");
+    }
+
+    // -- prefix sharing -----------------------------------------------------
+
+    #[test]
+    fn admit_shared_adopts_matched_prefix_at_zero_new_bytes() {
+        let mut s = store(0, 0, 8);
+        s.enable_prefix_sharing();
+        let prompt = vec![b'p'; 32]; // two full 16-token blocks
+        // the first request registers: bytes land like a private admission
+        let a = s.admit_shared(1, 4 * BB, 4, &prompt).unwrap();
+        assert_eq!(a.matched_blocks, 0);
+        assert_eq!(a.registered_blocks, 2);
+        assert_eq!(s.tier_used(Tier::CpuDram), 4 * BB);
+        // the second request with the same prompt adopts both prefix
+        // blocks: only its two private blocks cost new bytes
+        let b = s.admit_shared(2, 4 * BB, 4, &prompt).unwrap();
+        assert_eq!(b.matched_blocks, 2);
+        assert_eq!(b.shared_tokens, 32);
+        assert_eq!(b.registered_blocks, 0);
+        assert_eq!(s.tier_used(Tier::CpuDram), 6 * BB, "two private blocks only");
+        s.touch(2, 64, 0);
+        assert_eq!(s.shared_prefix_tokens(2), 32);
+        assert_eq!(s.share_stats().adoptions, 2);
+    }
+
+    #[test]
+    fn sharing_admits_more_sequences_at_the_same_budget() {
+        // eight dram blocks, 4-block sequences with a 3-block shareable
+        // prefix: privately two fit; shared, the prefix is paid once
+        let prompt = vec![b'p'; 48];
+        let mut private = store(0, 0, 8);
+        let fit_private =
+            (0..10).filter(|&seq| private.admit(seq, 4 * BB, 4).is_ok()).count();
+        assert_eq!(fit_private, 2);
+        let mut shared = store(0, 0, 8);
+        shared.enable_prefix_sharing();
+        let fit_shared = (0..10)
+            .filter(|&seq| shared.admit_shared(seq, 4 * BB, 4, &prompt).is_ok())
+            .count();
+        assert_eq!(fit_shared, 5, "3 registered + 5 × 1 private = 8 blocks");
+        assert!(fit_shared > fit_private);
+    }
+
+    #[test]
+    fn release_parks_entries_and_the_next_admission_revives_them() {
+        let mut s = store(0, 0, 4);
+        s.enable_prefix_sharing();
+        let prompt = vec![b'q'; 32];
+        s.admit_shared(1, 3 * BB, 3, &prompt).unwrap();
+        s.release(1);
+        // retirement decremented instead of freeing: the entries park
+        assert_eq!(s.tier_used(Tier::CpuDram), 2 * BB, "registry still holds the prefix");
+        assert_eq!(s.share_stats().releases, 2);
+        // the next same-prefix request hits the parked cache
+        let a = s.admit_shared(2, 3 * BB, 3, &prompt).unwrap();
+        assert_eq!(a.matched_blocks, 2);
+        assert_eq!(s.tier_used(Tier::CpuDram), 3 * BB);
+    }
+
+    #[test]
+    fn capacity_pressure_trims_parked_entries_before_backpressure() {
+        let mut s = store(0, 0, 4);
+        s.enable_prefix_sharing();
+        let prompt = vec![b'r'; 32];
+        s.admit_shared(1, 3 * BB, 3, &prompt).unwrap();
+        s.release(1); // two parked blocks keep 2×BB reserved as cache
+        // a different prompt needs the whole tier: the parked cache trims
+        // instead of backpressuring the admission
+        s.admit_shared(2, 4 * BB, 4, &[b'z'; 8]).unwrap();
+        assert!(s.share_stats().trimmed >= 2);
+        assert_eq!(s.tier_used(Tier::CpuDram), 4 * BB);
+    }
+
+    #[test]
+    fn park_prefix_deep_takes_a_private_clone_of_shared_blocks() {
+        let mut s = store_cfg(0, 0, 8, |c| c.disk_bytes = 8 * BB);
+        s.enable_prefix_sharing();
+        let prompt = vec![b'c'; 32];
+        s.admit_shared(1, 3 * BB, 3, &prompt).unwrap();
+        s.admit_shared(2, 3 * BB, 3, &prompt).unwrap();
+        assert_eq!(s.share_stats().adoptions, 2);
+        // seq 2 migrates across shards: its shared prefix parks deep as a
+        // copy-on-write private clone under its own reservation
+        assert_eq!(s.park_prefix_deep(2, 32), 2);
+        assert_eq!(s.share_stats().cow_clones, 2);
+        assert_eq!(s.tier_used(Tier::DiskNvme), 2 * BB, "the clone holds its own bytes");
+        assert_eq!(s.shared_prefix_tokens(2), 0, "diverged: no longer shared");
+        // the shared original keeps its other dependent untouched
+        s.touch(1, 48, 0);
+        assert_eq!(s.shared_prefix_tokens(1), 32);
+        s.release(1);
+        s.release(2);
+        assert_eq!(s.share_stats().releases, 2, "seq 2's refs left via CoW, not release");
+    }
+
+    #[test]
+    fn shared_markers_are_never_spilled_dropped_or_promoted() {
+        let mut s = store_cfg(0, 0, 4, |c| c.disk_bytes = 8 * BB);
+        s.enable_prefix_sharing();
+        let prompt = vec![b's'; 32];
+        s.admit_shared(1, 3 * BB, 3, &prompt).unwrap();
+        s.touch(1, 48, 48);
+        // the spill scan passes over the shared prefix and takes the
+        // private block above it
+        assert!(s.spill_one().is_some());
+        assert_eq!(s.stats().spills, 1);
+        assert_eq!(s.shared_prefix_tokens(1), 32, "markers untouched by spill");
+        // nothing droppable: the shared prefix ends the reclaim chain and
+        // the private block above it is mid-spill
+        assert!(s.reclaim_kv_one().is_none());
+        assert_eq!(s.kv_dropped_tokens(1), 0);
+    }
+
+    #[test]
+    fn promotion_walk_stops_at_the_shared_prefix() {
+        let mut s = store(2, 0, 4);
+        s.enable_prefix_sharing();
+        let prompt = vec![b's'; 32];
+        s.admit_shared(1, 3 * BB, 3, &prompt).unwrap();
+        s.touch(1, 48, 0);
+        // only the private top block is promotable; the walk breaks at the
+        // shared markers instead of issuing transfers for them
+        assert_eq!(s.begin_promotions(1, 4, MigrationClass::Promote), 1);
+        assert_eq!(s.stats().promotions_started, 1);
+        assert_eq!(s.stats().hops, 0);
+        pump_and_land(&mut s, 1);
+        assert_eq!(s.gpu_resident_tokens(1), 16);
+        assert_eq!(s.shared_prefix_tokens(1), 32);
     }
 }

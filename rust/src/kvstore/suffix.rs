@@ -72,6 +72,14 @@ pub struct BlockState {
     /// adversarial alternating reuse is bounded the same way
     /// promotion/demotion ping-pong already is.
     pub promoted_at: Option<u64>,
+    /// Chain hash of the [`PrefixRegistry`](super::PrefixRegistry) entry
+    /// this block adopts, when the block is a shared-prefix marker: the
+    /// registry owns the real tier reservation (this block's `guard` is
+    /// `None`) and the ref count.  Shared markers never migrate, are never
+    /// eviction victims, and cost the planner zero transfer — divergence
+    /// goes through the copy-on-write path, which privatizes the marker
+    /// (clears this field) and decrements the registry.
+    pub shared: Option<u64>,
 }
 
 /// What a suffix walker sees when it looks at one block.
@@ -102,11 +110,19 @@ pub enum BlockClass {
     Disk,
     /// KV dropped (X kept): only the recompute path can cover it.
     Dropped,
+    /// A shared-prefix marker adopting a
+    /// [`PrefixRegistry`](super::PrefixRegistry) entry: the
+    /// registry holds the bytes (host-tier side), other sequences may
+    /// depend on the same entry, and the planner prices the span at zero
+    /// transfer.  Never migrated, never an eviction victim.
+    Shared,
 }
 
 impl BlockState {
     pub fn class(&self) -> BlockClass {
-        if let Some(p) = &self.pending {
+        if self.shared.is_some() {
+            BlockClass::Shared
+        } else if let Some(p) = &self.pending {
             if p.to == Tier::GpuHbm {
                 BlockClass::PromotionInFlight
             } else if p.to < self.tier {
@@ -227,8 +243,19 @@ mod tests {
             BlockClass::Host => (Tier::CpuDram, false, None),
             BlockClass::Disk => (Tier::DiskNvme, false, None),
             BlockClass::Dropped => (Tier::Pinned, true, None),
+            // shared markers are built explicitly (shared field) in the
+            // tests that need them; the class-driven helper never does
+            BlockClass::Shared => unreachable!("build shared markers explicitly"),
         };
-        BlockState { tier, guard: None, kv_dropped, pending, demoted_at: None, promoted_at: None }
+        BlockState {
+            tier,
+            guard: None,
+            kv_dropped,
+            pending,
+            demoted_at: None,
+            promoted_at: None,
+            shared: None,
+        }
     }
 
     fn random_layout(rng: &mut Prng) -> (Vec<BlockState>, usize) {
@@ -382,7 +409,7 @@ mod tests {
                 | BlockClass::HopInFlight
                 | BlockClass::SpillInFlight => break,
                 BlockClass::Host | BlockClass::Disk => todo.push(rb.idx),
-                BlockClass::Resident | BlockClass::Dropped => {}
+                BlockClass::Resident | BlockClass::Dropped | BlockClass::Shared => {}
             }
         }
         todo
@@ -398,9 +425,10 @@ mod tests {
             match rb.class {
                 BlockClass::Resident | BlockClass::PromotionInFlight => continue,
                 BlockClass::HopInFlight => hop_above = true,
-                BlockClass::DemotionInFlight | BlockClass::SpillInFlight | BlockClass::Dropped => {
-                    break
-                }
+                BlockClass::DemotionInFlight
+                | BlockClass::SpillInFlight
+                | BlockClass::Dropped
+                | BlockClass::Shared => break,
                 BlockClass::Host => {
                     if !hop_above {
                         targets.push((rb.idx, false));
@@ -493,10 +521,34 @@ mod tests {
             pending: Some(PendingRef { id: MigrationId::test_id(9), to: Tier::DiskNvme }),
             demoted_at: None,
             promoted_at: None,
+            shared: None,
         };
         assert_eq!(b.class(), BlockClass::DemotionInFlight);
         // neither disk-side class is ever resident
         let blocks = vec![block(BlockClass::Disk), block(BlockClass::Resident)];
+        assert_eq!(SuffixRuns::new(&blocks, 32, BT).resident_tokens(), 16);
+    }
+
+    #[test]
+    fn shared_marker_class_wins_over_everything() {
+        // a shared-prefix marker is Shared no matter what else the state
+        // says: the registry owns the bytes, so tier/pending/kv_dropped
+        // are irrelevant until CoW privatizes it
+        let b = BlockState {
+            tier: Tier::CpuDram,
+            guard: None,
+            kv_dropped: true,
+            pending: Some(PendingRef { id: MigrationId::test_id(7), to: Tier::GpuHbm }),
+            demoted_at: None,
+            promoted_at: None,
+            shared: Some(0xfeed),
+        };
+        assert_eq!(b.class(), BlockClass::Shared);
+        // a shared block below a resident run terminates the run (it is
+        // host-side data; the planner prices it separately at zero cost)
+        let mut shared = block(BlockClass::Host);
+        shared.shared = Some(1);
+        let blocks = vec![shared, block(BlockClass::Resident)];
         assert_eq!(SuffixRuns::new(&blocks, 32, BT).resident_tokens(), 16);
     }
 

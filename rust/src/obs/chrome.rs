@@ -190,6 +190,19 @@ fn convert(events: &[Event], pid: usize) -> Vec<Json> {
                 kv.push(("s", "t".into()));
                 kv
             }
+            EventKind::ShareHit { id, blocks, tokens } => {
+                let mut kv = base("i", "share_hit", "step", ts);
+                kv.push(("s", "t".into()));
+                kv.push((
+                    "args",
+                    Json::obj(vec![
+                        ("id", Json::from(*id as f64)),
+                        ("blocks", Json::from(*blocks)),
+                        ("tokens", Json::from(*tokens)),
+                    ]),
+                ));
+                kv
+            }
             EventKind::ReplanFallback { group } => {
                 let mut kv = base_tid("i", "replan_fallback", "step", ts, 2);
                 kv.push(("s", "t".into()));

@@ -145,6 +145,10 @@ pub enum EventKind {
     },
     /// Admission hit backpressure this step.
     Backpressure,
+    /// Admission adopted `blocks` registered shared-prefix blocks covering
+    /// `tokens` prompt tokens (cross-request prefix sharing); `id` is the
+    /// first admitted request of the group.
+    ShareHit { id: u64, blocks: usize, tokens: usize },
     /// Pipelined mode: a group's prestaged plan went stale (or was never
     /// solved) and the serve thread re-solved it inline.
     ReplanFallback { group: usize },
@@ -239,6 +243,12 @@ impl Event {
                 kv.push(("bytes", Json::from(*bytes as f64)));
             }
             EventKind::Backpressure => kv.push(("kind", "backpressure".into())),
+            EventKind::ShareHit { id, blocks, tokens } => {
+                kv.push(("kind", "share_hit".into()));
+                kv.push(("id", Json::from(*id as f64)));
+                kv.push(("blocks", Json::from(*blocks)));
+                kv.push(("tokens", Json::from(*tokens)));
+            }
             EventKind::ReplanFallback { group } => {
                 kv.push(("kind", "replan_fallback".into()));
                 kv.push(("group", Json::from(*group)));
@@ -297,6 +307,11 @@ impl Event {
                 bytes: u("bytes")?,
             },
             "backpressure" => EventKind::Backpressure,
+            "share_hit" => EventKind::ShareHit {
+                id: u("id")?,
+                blocks: us("blocks")?,
+                tokens: us("tokens")?,
+            },
             "replan_fallback" => EventKind::ReplanFallback { group: us("group")? },
             "anomaly" => EventKind::Anomaly { reason: s("reason")? },
             _ => return None,
@@ -352,6 +367,11 @@ mod tests {
                 bytes: 65536,
             },
             EventKind::Backpressure,
+            EventKind::ShareHit {
+                id: 4,
+                blocks: 3,
+                tokens: 96,
+            },
             EventKind::ReplanFallback { group: 1 },
             EventKind::PhaseBegin {
                 phase: Phase::Prestage,

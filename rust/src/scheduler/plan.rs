@@ -82,11 +82,13 @@ pub struct TierPrefix {
 /// decode group — the planner-facing summary of the tiered store's state.
 ///
 /// Token layout, oldest first: `[0, l_floor)` dropped KV (recompute must
-/// cover it), then each [`TierPrefix`] span in order (tokens settled on
-/// deeper topology tiers, paying [`TierTopology::hop_factor`] extra wire
-/// per token fetched), then host-tier tokens (the base transfer term), and
-/// finally `resident` tokens already on the device (they leave the
-/// transfer term entirely).
+/// cover it), then `shared_prefix` tokens adopted from the prefix-sharing
+/// registry (zero transfer — another request already paid for them), then
+/// each [`TierPrefix`] span in order (tokens settled on deeper topology
+/// tiers, paying [`TierTopology::hop_factor`] extra wire per token
+/// fetched), then host-tier tokens (the base transfer term), and finally
+/// `resident` tokens already on the device (they leave the transfer term
+/// entirely).
 #[derive(Debug, Clone, PartialEq)]
 pub struct PlanInput {
     /// Cached-token count s'ᵢ of every lane in the decode bucket.
@@ -95,13 +97,26 @@ pub struct PlanInput {
     pub resident: usize,
     /// Tokens of the group's dropped-KV *prefix* (the recompute floor).
     pub l_floor: usize,
-    /// Per-tier resident prefix spans stacked directly above the floor.
+    /// Tokens of the group's adopted shared *prefix* — blocks the
+    /// cross-request registry holds, fetched for free.  The fold prices
+    /// them as a span of factor −1, cancelling the base transfer term
+    /// token for token, so the Eq. (11) split sees the reuse with no
+    /// planner fork.
+    pub shared_prefix: usize,
+    /// Per-tier resident prefix spans stacked directly above the floor
+    /// (and above the shared prefix, when there is one).
     pub tier_prefixes: Vec<TierPrefix>,
 }
 
 impl PlanInput {
     pub fn new(lane_s_primes: Vec<usize>) -> Self {
-        PlanInput { lane_s_primes, resident: 0, l_floor: 0, tier_prefixes: Vec::new() }
+        PlanInput {
+            lane_s_primes,
+            resident: 0,
+            l_floor: 0,
+            shared_prefix: 0,
+            tier_prefixes: Vec::new(),
+        }
     }
 
     /// Tokens of the settled device-resident suffix.  This must be the
@@ -125,6 +140,14 @@ impl PlanInput {
     /// directly above the previous span (or the floor).
     pub fn prefix(mut self, tier: usize, tokens: usize) -> Self {
         self.tier_prefixes.push(TierPrefix { tier, tokens });
+        self
+    }
+
+    /// Tokens adopted from the cross-request prefix-sharing registry:
+    /// they transfer for free, so the plan discounts them from the
+    /// baseline and from every uncovered split.
+    pub fn shared_prefix(mut self, tokens: usize) -> Self {
+        self.shared_prefix = tokens;
         self
     }
 }
@@ -227,7 +250,11 @@ impl Planner {
     /// wire whenever the chosen split does not cover them — the fold also
     /// tries raising the floor to each span boundary, so a prefix too cold
     /// for the host tiers becomes recompute work before it becomes a deep
-    /// read.
+    /// read.  A `shared_prefix` runs the same fold in reverse: its span
+    /// *refunds* the base transfer term for every uncovered token (the
+    /// registry already holds those blocks), so the split is steered away
+    /// from recomputing — or paying wire for — tokens another request
+    /// already settled.
     ///
     /// ```
     /// use kvpr::scheduler::{CostModel, PlanInput, Planner, SchedulePolicy};
@@ -253,17 +280,20 @@ impl Planner {
     /// way to price it without one.  (Also panics on an empty
     /// `lane_s_primes`, like every batch entry point before it.)
     pub fn plan_batch(&self, input: &PlanInput) -> StepPlan {
-        let spans: Vec<(f64, usize)> = input
-            .tier_prefixes
-            .iter()
-            .map(|p| {
-                let topo = self
-                    .topology
-                    .as_ref()
-                    .expect("PlanInput has tier prefixes but the Planner has no TierTopology");
-                (topo.hop_factor(p.tier), p.tokens)
-            })
-            .collect();
+        let mut spans: Vec<(f64, usize)> = Vec::with_capacity(input.tier_prefixes.len() + 1);
+        if input.shared_prefix > 0 {
+            // adopted shared-prefix tokens live in blocks another request
+            // already paid for: a factor of −1 cancels the base transfer
+            // term token for token, so fetching them is free.
+            spans.push((-1.0, input.shared_prefix));
+        }
+        for p in &input.tier_prefixes {
+            let topo = self
+                .topology
+                .as_ref()
+                .expect("PlanInput has tier prefixes but the Planner has no TierTopology");
+            spans.push((topo.hop_factor(p.tier).max(0.0), p.tokens));
+        }
         self.plan_spans(&input.lane_s_primes, input.resident, input.l_floor, &spans)
     }
 
@@ -302,7 +332,7 @@ impl Planner {
             let mut total = 0.0;
             for &(factor, tokens) in spans {
                 let end = start + tokens;
-                let extra = self.solver.cost.transfer_kv_per_token_s * factor.max(0.0) * n;
+                let extra = self.solver.cost.transfer_kv_per_token_s * factor * n;
                 total += end.saturating_sub(l.max(start)) as f64 * extra;
                 start = end;
             }
@@ -323,20 +353,31 @@ impl Planner {
         } else {
             let mut floors = vec![l_floor];
             let mut end = l_floor;
-            for &(_, tokens) in spans {
+            for &(factor, tokens) in spans {
                 end += tokens;
-                if tokens > 0 {
+                // raising the split to a span's end only pays off when
+                // fetching the span costs extra wire; a negative-factor
+                // (shared) span is free to fetch, so covering it with
+                // recompute is never a win.
+                if tokens > 0 && factor > 0.0 {
                     floors.push(end);
                 }
             }
             let mut best: Option<(usize, f64)> = None;
+            let mut consider = |l: usize, cost: f64| match best {
+                Some((_, c)) if cost >= c => {}
+                _ => best = Some((l, cost)),
+            };
             for &floor in &floors {
                 let l = quantize(floor);
-                let cost = solver.objective(l, s_prime) + surcharge(l);
-                match best {
-                    Some((_, c)) if cost >= c => {}
-                    _ => best = Some((l, cost)),
-                }
+                consider(l, solver.objective(l, s_prime) + surcharge(l));
+            }
+            // a shared span *discounts* uncovered tokens, which the
+            // objective-only bucket choice inside `quantize` cannot see:
+            // give l = 0 (the maximal discount) a seat whenever the floor
+            // allows it.
+            if l_floor == 0 && spans.iter().any(|&(factor, tokens)| factor < 0.0 && tokens > 0) {
+                consider(0, solver.objective(0, s_prime) + surcharge(0));
             }
             best.expect("at least the declared floor is a candidate")
         };
@@ -708,6 +749,79 @@ mod tests {
         let surcharge = 32.0 * 1e-9 * 8.0 * 2.0 + 32.0 * 1e-9 * 4.0 * 2.0;
         assert!((deep.predicted_s - (plain.predicted_s + surcharge)).abs() < 1e-15);
         assert!((deep.baseline_s - (plain.baseline_s + surcharge)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn shared_prefix_is_priced_at_zero_transfer() {
+        // recompute hopeless → full transfer either way, but every adopted
+        // shared-prefix token refunds the base transfer term: the plan and
+        // the baseline both drop by tokens × C × lanes.  No topology is
+        // needed — the shared span's factor is a constant, not a hop.
+        let cost = CostModel {
+            recompute_per_token_s: 1e-3,
+            transfer_kv_per_token_s: 1e-9,
+            transfer_act_per_token_s: 5e-10,
+            gpu_overhead_s: 0.0,
+            link_latency_s: 0.0,
+        };
+        let p = Planner::new(cost, SchedulePolicy::RowByRow, vec![32, 64, 96], usize::MAX);
+        let plain = p.plan_batch(&PlanInput::new(vec![128; 2]));
+        assert_eq!(plain.l(), 0);
+        let shared = p.plan_batch(&PlanInput::new(vec![128; 2]).shared_prefix(32));
+        assert_eq!(shared.l(), 0, "free tokens never justify recompute");
+        let discount = 32.0 * 1e-9 * 2.0; // tokens × C × lanes
+        assert!((shared.predicted_s - (plain.predicted_s - discount)).abs() < 1e-15);
+        assert!((shared.baseline_s - (plain.baseline_s - discount)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn shared_prefix_stacks_under_a_disk_span() {
+        // shared [0, 32) refunded, disk [32, 64) surcharged: the two spans
+        // fold independently around the same split
+        let cost = CostModel {
+            recompute_per_token_s: 1e-3,
+            transfer_kv_per_token_s: 1e-9,
+            transfer_act_per_token_s: 5e-10,
+            gpu_overhead_s: 0.0,
+            link_latency_s: 0.0,
+        };
+        let topo = four_tier_topology(4.0);
+        let disk = topo.tier_named("disk-nvme").unwrap();
+        let p = Planner::new(cost, SchedulePolicy::RowByRow, vec![32, 64, 96], usize::MAX)
+            .with_topology(topo);
+        let plain = p.plan_batch(&PlanInput::new(vec![128; 2]));
+        let mixed =
+            p.plan_batch(&PlanInput::new(vec![128; 2]).shared_prefix(32).prefix(disk, 32));
+        assert_eq!(mixed.l(), 0);
+        let delta = 32.0 * 1e-9 * 4.0 * 2.0 - 32.0 * 1e-9 * 2.0; // disk hop − shared refund
+        assert!((mixed.predicted_s - (plain.predicted_s + delta)).abs() < 1e-15);
+        assert!((mixed.baseline_s - (plain.baseline_s + delta)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn shared_prefix_never_costs_and_zero_reduces_to_spanless() {
+        // commensurate costs: the plain plan recomputes a prefix the shared
+        // span now makes free to fetch — the plan may keep or shrink the
+        // split, but sharing can never make the step slower.  And a zero
+        // shared prefix must reproduce the spanless plan bit for bit.
+        let cost = CostModel {
+            recompute_per_token_s: 2e-6,
+            transfer_kv_per_token_s: 1e-6,
+            transfer_act_per_token_s: 5e-7,
+            gpu_overhead_s: 0.0,
+            link_latency_s: 0.0,
+        };
+        let p = Planner::new(cost, SchedulePolicy::RowByRow, vec![32, 64, 96], usize::MAX);
+        let plain = p.plan_batch(&PlanInput::new(vec![128; 2]));
+        assert_eq!(plain.l(), 32, "commensurate costs pick the low bucket");
+        let shared = p.plan_batch(&PlanInput::new(vec![128; 2]).shared_prefix(64));
+        assert!(shared.l() <= plain.l(), "free tokens never push the split up");
+        assert!(shared.predicted_s <= plain.predicted_s);
+        assert!(shared.predicted_s <= shared.baseline_s, "l = 0 is always a candidate");
+        let zero = p.plan_batch(&PlanInput::new(vec![128; 2]).shared_prefix(0));
+        assert_eq!(zero.l(), plain.l());
+        assert!((zero.predicted_s - plain.predicted_s).abs() < 1e-15);
+        assert!((zero.baseline_s - plain.baseline_s).abs() < 1e-15);
     }
 
     #[test]

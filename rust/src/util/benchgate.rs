@@ -31,8 +31,10 @@ use super::json::Json;
 
 /// Throughput metrics the gate compares at every pinned path: eviction
 /// policies report `steps_per_s`, the planner's topology-fold section
-/// reports `plans_per_s`.  Higher is better for every listed metric.
-const METRICS: [&str; 2] = ["steps_per_s", "plans_per_s"];
+/// reports `plans_per_s`, and the prefix-sharing admission section
+/// reports `admitted_tokens_per_s`.  Higher is better for every listed
+/// metric.
+const METRICS: [&str; 3] = ["steps_per_s", "plans_per_s", "admitted_tokens_per_s"];
 
 /// Default allowed fractional drop before the gate fails (10 %).
 pub const DEFAULT_MAX_DROP: f64 = 0.10;
@@ -284,6 +286,32 @@ mod tests {
         let prov = j(r#"{"provisional": true, "expect": ["topology_plan.four_tier"]}"#);
         assert!(compare(&prov, &ok, 0.10).passed());
         assert!(!compare(&prov, &j("{}"), 0.10).passed());
+    }
+
+    #[test]
+    fn admitted_tokens_per_s_is_gated_like_steps_per_s() {
+        // the prefix-sharing admission section reports admitted_tokens_per_s;
+        // both the absolute pin and the shared/unshared ratio gate ride it
+        let b = j(
+            r#"{"prefix_share": {"unshared": {"admitted_tokens_per_s": 1000.0}},
+                "ratio_gates": [{"num": "prefix_share.shared",
+                                 "den": "prefix_share.unshared",
+                                 "min_frac": 1.0}]}"#,
+        );
+        let ok = j(
+            r#"{"prefix_share": {"unshared": {"admitted_tokens_per_s": 990.0},
+                                 "shared": {"admitted_tokens_per_s": 2500.0}}}"#,
+        );
+        let r = compare(&b, &ok, 0.10);
+        assert!(r.passed(), "{:?}", r.failures);
+        assert_eq!(r.checked, 2, "one absolute pin + one ratio gate");
+        let slow = j(
+            r#"{"prefix_share": {"unshared": {"admitted_tokens_per_s": 990.0},
+                                 "shared": {"admitted_tokens_per_s": 900.0}}}"#,
+        );
+        let r = compare(&b, &slow, 0.10);
+        assert!(!r.passed());
+        assert!(r.failures[0].contains("prefix_share.shared"), "{}", r.failures[0]);
     }
 
     #[test]

@@ -15,7 +15,7 @@
 //!
 //! The same trace drives both sides of the validation story:
 //!
-//! * **served** — [`ContinuousServer::submit_trace`](crate::coordinator::ContinuousServer::submit_trace)
+//! * **served** — [`Submit::dispatch`](crate::coordinator::Submit::dispatch)
 //!   replays it against the real engine (admission honours each request's
 //!   arrival step), and [`ServeMetrics`](crate::coordinator::ServeMetrics)
 //!   reports TTFT/TPOT percentiles and attainment against the spec's
@@ -44,6 +44,7 @@
 //!         prompt: LenDist::HeavyTail { floor: 16, alpha: 1.5, cap: 64 },
 //!         gen: LenDist::Uniform { lo: 4, hi: 8 },
 //!         think: LenDist::Fixed { steps: 0 },
+//!         shared_prefix: 0,
 //!     }],
 //!     slo: SloTargets::default(),
 //! };
@@ -122,6 +123,11 @@ pub struct TrafficClass {
     /// Think-time steps appended to the arrival cursor after a request of
     /// this class.
     pub think: LenDist,
+    /// Tokens of a class-wide shared preamble (system prompt / retrieval
+    /// template) at the head of every prompt this class samples — the
+    /// content cross-request prefix sharing deduplicates.  0 means fully
+    /// private prompts.  Clamped per request to its sampled prompt length.
+    pub shared_prefix: usize,
 }
 
 /// Per-mix service-level objectives the SLO table is scored against.
@@ -169,6 +175,7 @@ impl WorkloadSpec {
                     prompt: LenDist::HeavyTail { floor: 24, alpha: 1.5, cap: 96 },
                     gen: LenDist::Uniform { lo: 4, hi: 16 },
                     think: LenDist::Uniform { lo: 0, hi: 2 },
+                    shared_prefix: 0,
                 },
                 TrafficClass {
                     name: "rag".into(),
@@ -176,6 +183,7 @@ impl WorkloadSpec {
                     prompt: LenDist::HeavyTail { floor: 64, alpha: 1.1, cap: 120 },
                     gen: LenDist::Uniform { lo: 2, hi: 8 },
                     think: LenDist::Fixed { steps: 0 },
+                    shared_prefix: 0,
                 },
             ],
             slo: SloTargets { ttft_s: 0.5, tpot_s: 0.1 },
@@ -197,6 +205,7 @@ impl WorkloadSpec {
                     prompt: LenDist::HeavyTail { floor: 24, alpha: 1.4, cap: 96 },
                     gen: LenDist::Uniform { lo: 4, hi: 12 },
                     think: LenDist::Uniform { lo: 0, hi: 3 },
+                    shared_prefix: 0,
                 },
                 TrafficClass {
                     name: "rag".into(),
@@ -204,6 +213,7 @@ impl WorkloadSpec {
                     prompt: LenDist::HeavyTail { floor: 48, alpha: 1.2, cap: 120 },
                     gen: LenDist::Uniform { lo: 2, hi: 8 },
                     think: LenDist::Fixed { steps: 0 },
+                    shared_prefix: 0,
                 },
             ],
             slo: SloTargets { ttft_s: 0.8, tpot_s: 0.1 },
@@ -224,14 +234,48 @@ impl WorkloadSpec {
                 prompt: LenDist::HeavyTail { floor: 64, alpha: 1.05, cap: 480 },
                 gen: LenDist::Uniform { lo: 2, hi: 6 },
                 think: LenDist::Fixed { steps: 0 },
+                shared_prefix: 0,
             }],
             slo: SloTargets { ttft_s: 1.0, tpot_s: 0.15 },
         }
     }
 
+    /// Multi-turn assistant traffic over a handful of shared system
+    /// prompts: most requests open with the same class-wide preamble, so
+    /// cross-request prefix sharing can adopt the head blocks in place.
+    /// The `private` admixture never shares — it pins the hit-rate
+    /// frontier's floor.
+    pub fn shared_chat() -> Self {
+        WorkloadSpec {
+            name: "shared_chat".into(),
+            seed: 0x5a7e,
+            requests: 32,
+            arrivals: Arrival::Bursty { burst: 4, gap: 5 },
+            classes: vec![
+                TrafficClass {
+                    name: "assistant".into(),
+                    weight: 0.8,
+                    prompt: LenDist::HeavyTail { floor: 48, alpha: 1.4, cap: 120 },
+                    gen: LenDist::Uniform { lo: 4, hi: 12 },
+                    think: LenDist::Uniform { lo: 0, hi: 1 },
+                    shared_prefix: 64,
+                },
+                TrafficClass {
+                    name: "private".into(),
+                    weight: 0.2,
+                    prompt: LenDist::HeavyTail { floor: 24, alpha: 1.5, cap: 96 },
+                    gen: LenDist::Uniform { lo: 2, hi: 8 },
+                    think: LenDist::Fixed { steps: 0 },
+                    shared_prefix: 0,
+                },
+            ],
+            slo: SloTargets { ttft_s: 0.5, tpot_s: 0.1 },
+        }
+    }
+
     /// The named mixes the bench and example binaries iterate over.
     pub fn mix_names() -> &'static [&'static str] {
-        &["bursty_chat", "diurnal_mixed", "rag_long_context"]
+        &["bursty_chat", "diurnal_mixed", "rag_long_context", "shared_chat"]
     }
 
     /// Look up a named mix ([`mix_names`](WorkloadSpec::mix_names)).
@@ -240,6 +284,7 @@ impl WorkloadSpec {
             "bursty_chat" => Some(Self::bursty_chat()),
             "diurnal_mixed" => Some(Self::diurnal_mixed()),
             "rag_long_context" => Some(Self::rag_long_context()),
+            "shared_chat" => Some(Self::shared_chat()),
             _ => None,
         }
     }
@@ -267,12 +312,14 @@ impl WorkloadSpec {
                 }
             }
             let c = &self.classes[ci];
+            let prompt_tokens = c.prompt.sample(&mut rng).max(1);
             requests.push(TraceRequest {
                 id: id as u64,
                 step,
                 class: c.name.clone(),
-                prompt_tokens: c.prompt.sample(&mut rng).max(1),
+                prompt_tokens,
                 gen_tokens: c.gen.sample(&mut rng).max(1),
+                shared_prefix_tokens: c.shared_prefix.min(prompt_tokens),
             });
             // advance the arrival cursor for the next request
             let gap = match self.arrivals {
@@ -311,18 +358,29 @@ pub struct TraceRequest {
     pub class: String,
     pub prompt_tokens: usize,
     pub gen_tokens: usize,
+    /// Leading prompt tokens drawn from the class-wide shared preamble
+    /// ([`TrafficClass::shared_prefix`], clamped to the sampled length);
+    /// the rest of the prompt mixes the id in and stays private.
+    pub shared_prefix_tokens: usize,
 }
 
 impl TraceRequest {
     /// Deterministic synthetic prompt of exactly `prompt_tokens` bytes
     /// (the serving tokenizer is byte-level, so bytes are tokens).  The
-    /// id is mixed in so lanes don't share identical prompts.
+    /// first [`shared_prefix_tokens`](Self::shared_prefix_tokens) bytes
+    /// cycle a class-deterministic preamble — byte-identical across every
+    /// request of the class, the content prefix sharing content-hashes —
+    /// and the remainder mixes the id in so lanes diverge past it.
     pub fn prompt_text(&self) -> String {
+        let total = self.prompt_tokens.max(1);
+        let shared = self.shared_prefix_tokens.min(total);
+        let preamble = format!("sys[{}] shared retrieval preamble ", self.class);
         let seedling = format!("req{} kv partial recompute trace ", self.id);
-        seedling
+        preamble
             .bytes()
             .cycle()
-            .take(self.prompt_tokens.max(1))
+            .take(shared)
+            .chain(seedling.bytes().cycle().take(total - shared))
             .map(|b| b as char)
             .collect()
     }
@@ -368,6 +426,7 @@ impl Trace {
                                 ("class", Json::from(r.class.as_str())),
                                 ("prompt", Json::from(r.prompt_tokens)),
                                 ("gen", Json::from(r.gen_tokens)),
+                                ("shared", Json::from(r.shared_prefix_tokens)),
                             ])
                         })
                         .collect(),
@@ -403,6 +462,11 @@ impl Trace {
                     .to_string(),
                 prompt_tokens: field("prompt")? as usize,
                 gen_tokens: field("gen")? as usize,
+                // absent in pre-sharing traces — decode as fully private
+                shared_prefix_tokens: r
+                    .at(&["shared"])
+                    .as_f64()
+                    .map_or(0, |v| v as usize),
             });
         }
         Ok(Trace { name, seed, requests })
@@ -432,6 +496,7 @@ mod tests {
                     prompt: LenDist::HeavyTail { floor: 8, alpha: 1.3, cap: 64 },
                     gen: LenDist::Uniform { lo: 2, hi: 6 },
                     think: LenDist::Uniform { lo: 0, hi: 1 },
+                    shared_prefix: 0,
                 },
                 TrafficClass {
                     name: "rag".into(),
@@ -439,6 +504,7 @@ mod tests {
                     prompt: LenDist::Fixed { steps: 48 },
                     gen: LenDist::Fixed { steps: 3 },
                     think: LenDist::Fixed { steps: 0 },
+                    shared_prefix: 0,
                 },
             ],
             slo: SloTargets::default(),
@@ -517,6 +583,7 @@ mod tests {
                 prompt: LenDist::Fixed { steps: 8 },
                 gen: LenDist::Fixed { steps: 2 },
                 think: LenDist::Fixed { steps: 0 },
+                shared_prefix: 0,
             }],
             requests: 24,
             name: "d".into(),
@@ -552,10 +619,60 @@ mod tests {
             class: "chat".into(),
             prompt_tokens: 37,
             gen_tokens: 4,
+            shared_prefix_tokens: 0,
         };
         assert_eq!(r.prompt_text().len(), 37);
         assert_eq!(r.prompt_text(), r.prompt_text());
         let other = TraceRequest { id: 4, ..r.clone() };
         assert_ne!(other.prompt_text(), r.prompt_text());
+    }
+
+    #[test]
+    fn shared_prefix_prompts_share_exactly_the_preamble() {
+        let mk = |id: u64, total: usize, shared: usize| TraceRequest {
+            id,
+            step: 0,
+            class: "assistant".into(),
+            prompt_tokens: total,
+            gen_tokens: 2,
+            shared_prefix_tokens: shared,
+        };
+        let a = mk(1, 96, 64).prompt_text();
+        let b = mk(2, 96, 64).prompt_text();
+        // byte-identical through the preamble, divergent right after it
+        assert_eq!(a.as_bytes()[..64], b.as_bytes()[..64]);
+        assert_ne!(a.as_bytes()[64], b.as_bytes()[64]);
+        // a different class cycles a different preamble
+        let mut c = mk(3, 96, 64);
+        c.class = "other".into();
+        assert_ne!(c.prompt_text().as_bytes()[..64], a.as_bytes()[..64]);
+        // shared clamps to the prompt: an all-shared prompt is pure preamble
+        let d = mk(4, 32, 64).prompt_text();
+        assert_eq!(d.as_bytes(), &a.as_bytes()[..32]);
+    }
+
+    #[test]
+    fn shared_chat_mix_generates_and_round_trips_shared_tokens() {
+        let spec = WorkloadSpec::shared_chat();
+        let t = spec.generate();
+        assert_eq!(t.requests.len(), spec.requests);
+        // the assistant class actually shares; the private class never does
+        assert!(t
+            .requests
+            .iter()
+            .any(|r| r.class == "assistant" && r.shared_prefix_tokens > 0));
+        assert!(t
+            .requests
+            .iter()
+            .all(|r| r.class != "private" || r.shared_prefix_tokens == 0));
+        assert!(t.requests.iter().all(|r| r.shared_prefix_tokens <= r.prompt_tokens));
+        // shared tokens survive the JSON round trip…
+        let back = Trace::from_json_str(&t.to_json().to_string()).unwrap();
+        assert_eq!(back, t);
+        // …and a pre-sharing trace (no "shared" key) decodes as private
+        let legacy = r#"{"name":"x","seed":1,"requests":[
+            {"id":0,"step":0,"class":"chat","prompt":8,"gen":2}]}"#;
+        let old = Trace::from_json_str(legacy).unwrap();
+        assert_eq!(old.requests[0].shared_prefix_tokens, 0);
     }
 }

@@ -661,21 +661,21 @@ fn sharded_router_serves_across_two_shards() {
 }
 
 #[test]
-fn deprecated_submit_shims_match_dispatch() {
+fn dispatch_accepts_every_retired_shim_shape() {
     let _g = lock();
-    // satellite: the old submit surface survives one PR as shims over
-    // `Submit::dispatch` — pin that every shim routes through the same path
+    // satellite: the deprecated submit/submit_request shims are deleted —
+    // `Submit::dispatch` is the one front door, and every input shape the
+    // shims used to accept (prompt + gen, an explicit Request) must route
+    // through it to identical tokens
     let server = ContinuousServer::start(continuous_cfg(2, 1)).unwrap();
-    let via_dispatch = server.dispatch(("shim equivalence", 5)).pop().unwrap();
-    let via_dispatch = via_dispatch.wait().unwrap();
-    #[allow(deprecated)]
-    let via_submit = server.submit("shim equivalence", 5).wait().unwrap();
-    #[allow(deprecated)]
+    let via_pair = server.dispatch(("shim equivalence", 5)).pop().unwrap();
+    let via_pair = via_pair.wait().unwrap();
     let via_request = server
-        .submit_request(Request::new(9001, "shim equivalence", 5))
+        .dispatch(Request::new(9001, "shim equivalence", 5))
+        .pop()
+        .unwrap()
         .wait()
         .unwrap();
-    assert_eq!(via_submit.tokens, via_dispatch.tokens, "submit shim diverged");
-    assert_eq!(via_request.tokens, via_dispatch.tokens, "submit_request shim diverged");
+    assert_eq!(via_request.tokens, via_pair.tokens, "Request dispatch diverged");
     server.shutdown().unwrap();
 }

@@ -65,6 +65,7 @@ fn spec(gen: LenDist) -> WorkloadSpec {
             prompt: LenDist::Fixed { steps: 16 },
             gen,
             think: LenDist::Fixed { steps: 0 },
+            shared_prefix: 0,
         }],
         slo: SloTargets { ttft_s: 30.0, tpot_s: 30.0 },
     }

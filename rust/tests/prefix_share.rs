@@ -1,0 +1,222 @@
+//! Cross-request prefix sharing end-to-end: at the same tier budgets,
+//! sharing-enabled admission fits strictly more concurrent sequences and
+//! launches strictly fewer migration wire bytes than private admission —
+//! while generated tokens stay bit-identical, because the registry is an
+//! accounting layer (it moves reservations, never math).  Also pins the
+//! physical dropped-KV reclamation satellite: truncating a dropped prefix
+//! frees real host bytes and the mandatory recompute floor keeps decode
+//! exact.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use kvpr::coordinator::{ContinuousConfig, ContinuousServer, Submit};
+use kvpr::engine::{Engine, EngineConfig, EnginePolicy};
+use kvpr::kvstore::{KvStore, KvStoreConfig, Lru, MigrationClass};
+use kvpr::transfer::LinkConfig;
+
+const BT: usize = 16; // block tokens
+const BB: u64 = 4096; // block bytes
+
+/// A store with block-denominated tier budgets and no disk or watermark
+/// machinery — admission outcomes are pure arithmetic.  Pinned capacity
+/// doubles as migration staging, so tests that move bytes grant some.
+fn store(gpu_blocks: u64, pinned_blocks: u64, dram_blocks: u64) -> KvStore {
+    let link = LinkConfig::with_bandwidth(500e6);
+    KvStore::new(
+        KvStoreConfig {
+            gpu_bytes: gpu_blocks * BB,
+            pinned_bytes: pinned_blocks * BB,
+            dram_bytes: dram_blocks * BB,
+            disk_bytes: 0,
+            block_tokens: BT,
+            nvme_link: LinkConfig::nvme_below(&link),
+            link,
+            wire_elem_bytes: 4.0,
+            promote_cooldown: 0,
+            spill_cooldown: 0,
+            spill_floor: 0.0,
+            spill_watermark: 0.0,
+            spill_max_per_step: 2,
+            shared_host: None,
+        },
+        Box::new(Lru),
+    )
+}
+
+/// 4 prompt blocks' worth of identical bytes (the shared preamble).
+fn preamble() -> Vec<u8> {
+    b"sys: shared retrieval preamble ".iter().copied().cycle().take(4 * BT).collect()
+}
+
+#[test]
+fn sharing_admits_strictly_more_sequences_at_the_same_budget() {
+    // 12 dram blocks; every request wants 5 blocks over the same 4-block
+    // preamble.  Private: ⌊12 / 5⌋ = 2 fit.  Shared: the first request
+    // pays 5 (4 registered + 1 private), each later one adopts 4 and pays
+    // 1 — so 1 + (12 − 5) = 8 fit.
+    let prompt = preamble();
+    let mut private = store(0, 0, 12);
+    let fit_private =
+        (0..10).filter(|&seq| private.admit(seq, 5 * BB, 5).is_ok()).count();
+    assert_eq!(fit_private, 2);
+
+    let mut shared = store(0, 0, 12);
+    shared.enable_prefix_sharing();
+    let fit_shared =
+        (0..10).filter(|&seq| shared.admit_shared(seq, 5 * BB, 5, &prompt).is_ok()).count();
+    assert_eq!(fit_shared, 8, "1 × 5 + 7 × 1 = 12 blocks");
+    assert!(
+        fit_shared > fit_private,
+        "sharing must admit strictly more: {fit_shared} vs {fit_private}"
+    );
+    let st = shared.share_stats();
+    assert_eq!(st.registered, 4, "the first sharer registers the preamble chain");
+    assert_eq!(st.adoptions, 7 * 4, "every later sharer adopts all 4 blocks");
+}
+
+#[test]
+fn sharing_launches_strictly_fewer_wire_bytes_at_the_same_budget() {
+    // Two sequences over the same preamble, fully decoded, then promoted
+    // into an ample gpu tier.  Private: all 5 blocks of each sequence ride
+    // the wire.  Shared: registry-owned marker blocks never migrate — the
+    // planner already prices them at zero transfer — so only the private
+    // tail block of each sequence does.
+    let prompt = preamble();
+    let drive = |s: &mut KvStore| {
+        for seq in 0..2u64 {
+            s.touch(seq, 5 * BT, 0);
+            s.begin_promotions(seq, 5, MigrationClass::Promote);
+        }
+        s.pump_migrations(u64::MAX);
+        s.migration_stats().wire_bytes
+    };
+
+    let mut private = store(16, 32, 16);
+    for seq in 0..2 {
+        private.admit(seq, 5 * BB, 5).unwrap();
+    }
+    let wire_private = drive(&mut private);
+
+    let mut shared = store(16, 32, 16);
+    shared.enable_prefix_sharing();
+    for seq in 0..2 {
+        shared.admit_shared(seq, 5 * BB, 5, &prompt).unwrap();
+    }
+    let wire_shared = drive(&mut shared);
+
+    assert!(wire_shared > 0, "private tail blocks must still promote");
+    assert!(
+        wire_shared < wire_private,
+        "sharing must launch strictly fewer wire bytes: {wire_shared} vs {wire_private}"
+    );
+}
+
+fn artifacts() -> PathBuf {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        dir
+    } else {
+        PathBuf::from("artifacts") // synthetic-manifest interpreter fallback
+    }
+}
+
+fn interpreted() -> bool {
+    !PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json").exists()
+}
+
+#[test]
+fn dropped_kv_truncation_reclaims_host_bytes_and_keeps_decode_exact() {
+    // Satellite regression: physically truncating a dropped prefix must
+    // free exactly the host bytes it reports, raise the mandatory floor,
+    // and — because build_step covers the hole with a real recompute
+    // bucket — never change a generated token.
+    let mut cfg = EngineConfig::new(EnginePolicy::Kvpr);
+    cfg.link = LinkConfig::with_bandwidth(500e6);
+    cfg.seed = 77;
+    let engine = Engine::new(&artifacts(), cfg).unwrap();
+    let tok = kvpr::model::ByteTokenizer::new();
+    let prompts = vec![tok.encode("shared preamble reclamation", 16)];
+    const GEN: usize = 30;
+
+    let mut base = engine.start_batch(&prompts).unwrap();
+    for _ in 1..GEN {
+        engine.decode_step(&mut base).unwrap();
+    }
+    let base = engine.finish_batch(base);
+
+    let mut sess = engine.start_batch(&prompts).unwrap();
+    for step in 1..GEN {
+        if step == 20 {
+            // kv_len ≥ 35 by now: the 32-token L bucket covers the request
+            let before = sess.host_bytes();
+            let freed = engine.truncate_dropped_kv(&mut sess, 32);
+            assert!(freed > 0, "truncation must free host K/V bytes");
+            assert_eq!(
+                sess.host_bytes(),
+                before - freed,
+                "reported bytes must match the physical shrink"
+            );
+            assert_eq!(sess.kv_floor(), 32, "the floor becomes mandatory");
+            // re-truncating below the floor is a no-op
+            assert_eq!(engine.truncate_dropped_kv(&mut sess, 16), 0);
+        }
+        engine.decode_step(&mut sess).unwrap();
+    }
+    let truncated = engine.finish_batch(sess);
+    assert_eq!(
+        base.tokens, truncated.tokens,
+        "dropped-KV truncation changed generated tokens"
+    );
+}
+
+#[test]
+fn serving_with_sharing_adopts_prefixes_and_decodes_bit_identical() {
+    // Four requests over one 32-byte-plus common prompt, one group each:
+    // the first admission registers the preamble block, the next three
+    // adopt it (ShareTotals hits), and flipping sharing off replays the
+    // same workload to bit-identical tokens — the registry moves
+    // reservations, never math.
+    let mk = |sharing: bool| {
+        let mut e = EngineConfig::new(EnginePolicy::Kvpr);
+        e.weights_offloaded = true;
+        e.link = LinkConfig::with_bandwidth(100e6);
+        e.seed = 42;
+        ContinuousConfig::builder("artifacts", e)
+            .max_group(1)
+            .max_groups(4)
+            .admit_wait(Duration::from_millis(150))
+            .prefix_sharing(sharing)
+            .build()
+    };
+    let prompt = "the shared retrieval preamble anchors cross-request adoption";
+    let run = |sharing: bool| {
+        let server = ContinuousServer::start(mk(sharing)).unwrap();
+        let handles: Vec<_> =
+            (0..4).map(|_| server.dispatch((prompt, 6)).pop().unwrap()).collect();
+        let mut tokens = Vec::new();
+        for h in handles {
+            let r = h.wait().unwrap();
+            assert_eq!(r.tokens.len(), 6);
+            tokens.push(r.tokens);
+        }
+        let share = server.metrics().share_totals();
+        server.shutdown().unwrap();
+        (tokens, share)
+    };
+
+    let (tok_on, share_on) = run(true);
+    assert!(share_on.hits >= 1, "later admissions must adopt the registered prefix");
+    assert!(share_on.tokens >= 32, "a full prompt block must be adopted");
+    assert_eq!(share_on.blocks * 32, share_on.tokens, "blocks and tokens must agree");
+    // every request decodes the same prompt: identical output per request
+    for t in &tok_on[1..] {
+        assert_eq!(t, &tok_on[0], "same prompt must decode identically");
+    }
+
+    let (tok_off, share_off) = run(false);
+    assert_eq!(share_off, Default::default(), "sharing off records no hits");
+    if interpreted() {
+        assert_eq!(tok_on, tok_off, "prefix sharing changed generated tokens");
+    }
+}

@@ -74,6 +74,7 @@ fn spec() -> WorkloadSpec {
             prompt: LenDist::Fixed { steps: 16 },
             gen: LenDist::Fixed { steps: 8 },
             think: LenDist::Fixed { steps: 0 },
+            shared_prefix: 0,
         }],
         slo: SloTargets { ttft_s: 30.0, tpot_s: 30.0 },
     }

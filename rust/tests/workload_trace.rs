@@ -78,6 +78,7 @@ fn e2e_spec(gen: LenDist) -> WorkloadSpec {
             prompt: LenDist::Fixed { steps: 16 },
             gen,
             think: LenDist::Fixed { steps: 0 },
+            shared_prefix: 0,
         }],
         // generous targets: the debug interpreter's absolute latencies are
         // machine noise; the SLO *counters* are what the test pins
